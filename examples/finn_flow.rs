@@ -1,0 +1,88 @@
+//! The FINN ingestion flow on CNV-w2a2 — reproduces the paper's Figures
+//! 1–3 (raw export → cleaned → channels-last) and §VI-D (QONNX →
+//! FINN-ONNX MultiThreshold conversion), verifying numerical equivalence
+//! at every step.
+//!
+//! Run: `cargo run --release --example finn_flow`
+
+use qonnx::exec;
+use qonnx::tensor::{nchw_to_nhwc, Tensor};
+use qonnx::transforms;
+use qonnx::zoo::cnv;
+use std::collections::BTreeMap;
+
+fn conv_fc_transition(g: &qonnx::ir::ModelGraph) -> String {
+    // print the node window around the conv->FC transition (the region the
+    // paper's figures show)
+    let names: Vec<String> = g
+        .nodes
+        .iter()
+        .map(|n| format!("  {:<16} {}", n.op_type, n.name))
+        .collect();
+    let pos = g
+        .nodes
+        .iter()
+        .position(|n| n.op_type == "Reshape" || n.op_type == "Shape")
+        .unwrap_or(0)
+        .saturating_sub(3);
+    names[pos..(pos + 9).min(names.len())].join("\n")
+}
+
+fn main() -> anyhow::Result<()> {
+    let x = Tensor::new(vec![1, 3, 32, 32], (0..3072).map(|i| (i % 251) as f32 / 251.0).collect());
+
+    // ---- Fig. 1: raw export ------------------------------------------
+    let g_raw = cnv(2, 2, 42, true)?;
+    println!("Fig. 1 (raw export): {} nodes; conv->FC transition:", g_raw.nodes.len());
+    println!("{}", conv_fc_transition(&g_raw));
+    let y_raw = exec::execute_simple(&g_raw, &x)?;
+
+    // ---- Fig. 2: after cleanup ---------------------------------------
+    let mut g_clean = g_raw.clone();
+    transforms::cleanup(&mut g_clean)?;
+    println!("\nFig. 2 (cleaned): {} nodes; transition now:", g_clean.nodes.len());
+    println!("{}", conv_fc_transition(&g_clean));
+    println!(
+        "  intermediate shapes known: conv5 act = {:?}",
+        g_clean.tensor_shape("conv5_act")
+    );
+    let y_clean = exec::execute_simple(&g_clean, &x)?;
+    assert_eq!(y_raw, y_clean);
+    println!("  equivalence vs raw export: bit-exact ✓");
+
+    // ---- Fig. 3: channels-last ---------------------------------------
+    let mut g_cl = g_clean.clone();
+    transforms::to_channels_last(&mut g_cl)?;
+    println!("\nFig. 3 (channels-last): input {:?}", g_cl.inputs[0].shape);
+    println!(
+        "  conv5 act is now NHWC: {:?} (channels moved last)",
+        g_cl.tensor_shape("conv5_act")
+    );
+    let mut inputs = BTreeMap::new();
+    inputs.insert("x".to_string(), nchw_to_nhwc(&x)?);
+    let y_cl = exec::execute(&g_cl, &inputs)?.outputs.into_values().next().unwrap();
+    assert_eq!(y_clean, y_cl);
+    println!("  equivalence vs NCHW: bit-exact ✓");
+
+    // ---- §VI-D: FINN ingestion ---------------------------------------
+    let mut g_finn = g_clean.clone();
+    transforms::convert_to_finn(&mut g_finn)?;
+    let h = g_finn.op_histogram();
+    println!("\nFINN-ONNX dialect: {} MultiThreshold nodes, Quant left: {}",
+        h.get("MultiThreshold").copied().unwrap_or(0),
+        h.get("Quant").copied().unwrap_or(0) + h.get("BipolarQuant").copied().unwrap_or(0),
+    );
+    transforms::infer_shapes(&mut g_finn)?;
+    transforms::infer_datatypes(&mut g_finn)?;
+    let y_finn = exec::execute_simple(&g_finn, &x)?;
+    let max_err = y_clean
+        .as_f32()?
+        .iter()
+        .zip(y_finn.as_f32()?)
+        .fold(0f32, |m, (a, b)| m.max((a - b).abs()));
+    println!("  FINN-form equivalence: max abs err {max_err:.2e}");
+    anyhow::ensure!(max_err < 1e-4);
+
+    println!("\nfinn_flow complete ✓");
+    Ok(())
+}

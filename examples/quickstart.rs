@@ -1,0 +1,54 @@
+//! Quickstart: build a quantized model with the public API, clean it,
+//! execute it, lower it to the backward-compatible QCDQ format, and prove
+//! the lowered graph runs on a backend that knows nothing about QONNX.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use qonnx::exec::{self, ExecOptions};
+use qonnx::ir::GraphBuilder;
+use qonnx::tensor::Tensor;
+use qonnx::transforms;
+use qonnx::zoo::{keras_to_qonnx, KerasModel};
+use std::collections::BTreeMap;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. build a small quantized MLP with the graph builder ---------
+    let mut b = GraphBuilder::new("quickstart");
+    b.input("x", vec![1, 16]);
+    b.quant("x", "x_q", 1.0 / 16.0, 0.0, 8.0, false, false, "ROUND");
+    b.initializer("w", Tensor::new(vec![16, 4], (0..64).map(|i| ((i % 13) as f32 - 6.0) * 0.1).collect()));
+    b.quant("w", "w_q", 0.05, 0.0, 4.0, true, true, "ROUND");
+    b.node("MatMul", &["x_q", "w_q"], &["h"], &[]);
+    b.node("Relu", &["h"], &["r"], &[]);
+    b.quant("r", "y", 0.25, 0.0, 4.0, false, false, "ROUND");
+    b.output("y", vec![1, 4]);
+    let mut g = b.finish()?;
+    println!("built graph:\n{}", g.summary());
+
+    // --- 2. clean + annotate datatypes ---------------------------------
+    transforms::cleanup(&mut g)?;
+    transforms::infer_datatypes(&mut g)?;
+    println!("after cleanup, output datatype: {}", g.tensor_datatype("y"));
+
+    // --- 3. execute with the reference executor ------------------------
+    let x = Tensor::new(vec![1, 16], (0..16).map(|i| i as f32 / 16.0).collect());
+    let y = exec::execute_simple(&g, &x)?;
+    println!("QONNX execution: {:?}", y.as_f32()?);
+
+    // --- 4. lower to QCDQ (paper §IV) and re-run on a *standard* backend
+    let mut qcdq = g.clone();
+    transforms::lower_to_qcdq(&mut qcdq)?;
+    println!("\nQCDQ graph ops: {:?}", qcdq.op_histogram());
+    let mut inputs = BTreeMap::new();
+    inputs.insert("x".to_string(), x.clone());
+    let opts = ExecOptions { standard_onnx_only: true, ..Default::default() };
+    let y_qcdq = exec::execute_with(&qcdq, &inputs, &opts)?;
+    assert_eq!(&y, y_qcdq.outputs.values().next().unwrap());
+    println!("QCDQ execution on standard-ONNX-only backend: bit-exact match ✓");
+
+    // --- 5. the QKeras-style ingestion path (paper §VI-A, Fig. 4) ------
+    let mut keras = keras_to_qonnx(&KerasModel::fig4_example(), 1)?;
+    transforms::cleanup(&mut keras)?;
+    println!("\nconverted keras-like model:\n{}", keras.summary());
+    Ok(())
+}

@@ -1,0 +1,37 @@
+//! Model-zoo report: regenerate the Table III metric columns and the
+//! Fig. 5 series quickly (metrics only; `cargo bench` / `qonnx table3`
+//! adds trained accuracy).
+//!
+//! Run: `cargo run --release --example zoo_report [-- --full-res]`
+
+use qonnx::{metrics, transforms, zoo};
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::args().any(|a| a == "--full-res");
+    let mobilenet_res = if full { 224 } else { 64 };
+    println!(
+        "{:<18} {:<9} {:>10} {:>14} {:>16} {:>16} {:>11} {:>14}",
+        "Model", "Dataset", "Acc(paper)", "MACs", "BOPs(Eq.5)", "MAC-BOPs", "Weights", "WeightBits"
+    );
+    for name in zoo::ZOO_NAMES {
+        let res = if name.starts_with("MobileNet") { mobilenet_res } else { 32 };
+        let mut g = zoo::build(name, 1, res)?;
+        transforms::cleanup(&mut g)?;
+        let r = metrics::analyze(&g)?;
+        println!(
+            "{:<18} {:<9} {:>10.2} {:>14} {:>16.4e} {:>16.4e} {:>11} {:>14}",
+            name,
+            zoo::dataset_of(name),
+            zoo::paper_accuracy(name).unwrap_or(0.0),
+            r.macs(),
+            r.bops(),
+            r.mac_bops(),
+            r.weights(),
+            r.total_weight_bits()
+        );
+    }
+    if !full {
+        println!("\n(MobileNet at reduced {mobilenet_res}x{mobilenet_res} input; pass --full-res for the paper's 224x224)");
+    }
+    Ok(())
+}

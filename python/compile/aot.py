@@ -1,0 +1,105 @@
+"""AOT compile path: lower the L2 JAX models (with L1 Pallas kernels) to
+HLO *text* artifacts for the Rust PJRT runtime, plus matching QONNX JSON
+graphs for cross-checking.
+
+HLO text -- NOT serialized HloModuleProto -- is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids that xla_extension
+0.5.1 rejects; the text parser reassigns ids (see /opt/xla-example).
+
+Usage: python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, qonnx_export
+from .kernels import quant_pallas as k
+
+BATCH = 8
+VARIANTS = [(1, 1), (1, 2), (2, 2)]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # plain as_hlo_text() ELIDES large constants ("constant({...})"), which
+    # silently zeroes baked weights after the text round-trip -- print with
+    # full constant payloads instead.
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # xla_extension 0.5.1's text parser predates source_end_line/column
+    # metadata fields -- strip metadata entirely.
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
+
+
+def export_tfc(out_dir: str, w_bits: int, a_bits: int) -> dict:
+    params = model.make_tfc_params(w_bits, a_bits)
+    fn = functools.partial(model.tfc_forward, params)
+    spec = jax.ShapeDtypeStruct((BATCH, 784), np.float32)
+    lowered = jax.jit(fn).lower(spec)
+    tag = f"tfc_w{w_bits}a{a_bits}"
+    hlo_path = os.path.join(out_dir, f"{tag}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    with open(os.path.join(out_dir, f"{tag}.qonnx.json"), "w") as f:
+        f.write(qonnx_export.tfc_to_qonnx_json(params, BATCH))
+    # probe vector for runtime self-checks: input + expected output
+    rng = np.random.default_rng(99)
+    x = rng.uniform(0.0, 1.0, size=(BATCH, 784)).astype(np.float32)
+    (y,) = model.tfc_forward_ref(params, x)
+    meta = {
+        "name": tag,
+        "batch": BATCH,
+        "input_shape": [BATCH, 784],
+        "output_shape": [BATCH, 10],
+        "probe_input": x.reshape(-1).tolist(),
+        "probe_output": np.asarray(y).reshape(-1).tolist(),
+    }
+    with open(os.path.join(out_dir, f"{tag}.meta.json"), "w") as f:
+        json.dump(meta, f)
+    return meta
+
+
+def export_quant_op(out_dir: str, bits: int, rows: int = 256, cols: int = 256):
+    """Standalone Quant kernel artifact for runtime microbenches."""
+    fn = lambda x: (k.quant(x, 0.125, 0.0, bits, signed=True),)  # noqa: E731
+    spec = jax.ShapeDtypeStruct((rows, cols), np.float32)
+    lowered = jax.jit(fn).lower(spec)
+    path = os.path.join(out_dir, f"quant_b{bits}_{rows}x{cols}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory (or a single .hlo.txt "
+                         "path, in which case its directory is used)")
+    args = ap.parse_args()
+    out_dir = args.out
+    if out_dir.endswith(".hlo.txt"):
+        out_dir = os.path.dirname(out_dir) or "."
+    os.makedirs(out_dir, exist_ok=True)
+    for (w, a) in VARIANTS:
+        meta = export_tfc(out_dir, w, a)
+        print(f"exported {meta['name']} (batch {meta['batch']})")
+    for bits in (2, 4, 8):
+        export_quant_op(out_dir, bits)
+        print(f"exported quant_b{bits} kernel")
+    # the Makefile's sentinel artifact: default model = TFC-w2a2
+    import shutil
+    shutil.copyfile(os.path.join(out_dir, "tfc_w2a2.hlo.txt"),
+                    os.path.join(out_dir, "model.hlo.txt"))
+    print("wrote model.hlo.txt (default: tfc_w2a2)")
+
+
+if __name__ == "__main__":
+    main()

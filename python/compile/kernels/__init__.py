@@ -1,0 +1,3 @@
+"""QONNX Pallas kernels (L1) and their pure-jnp oracle."""
+
+from . import quant_pallas, ref  # noqa: F401

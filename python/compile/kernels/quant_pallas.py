@@ -1,0 +1,213 @@
+"""L1: Pallas kernels for the QONNX quantization operators.
+
+All kernels are built with ``interpret=True`` -- the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so interpret mode is the correctness path and
+real-TPU lowering is a compile-only target (see DESIGN.md Hardware
+Adaptation).
+
+TPU mapping notes (structure over wallclock -- interpret mode gives
+CPU-numpy timings only):
+
+* ``quant``/``bipolar_quant``/``trunc`` are elementwise VPU work. Rows are
+  tiled with a 1-D grid and ``BlockSpec`` so each block's working set
+  (one ``block_rows x cols`` f32 tile in and out) stays well inside the
+  ~16 MiB VMEM budget; quantization parameters are compile-time constants
+  folded into the kernel, costing no VMEM bandwidth.
+* ``quant_linear`` tiles M x N output blocks with the full K panel per
+  block: ``jnp.dot(..., preferred_element_type=jnp.float32)`` targets the
+  MXU with an f32 accumulator (the "high-precision output" column of
+  Table I), and the activation quantizer is fused into the same block so
+  the accumulator never round-trips through HBM.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def quant_bounds_py(signed: bool, narrow: bool, bit_width: float):
+    """Pure-Python Eq. 2-3 bounds (jnp constants become tracers inside
+    jit as of jax 0.8, so static params must never touch jnp)."""
+    if signed:
+        lo = -(2.0 ** (bit_width - 1.0)) + (1.0 if narrow else 0.0)
+        hi = 2.0 ** (bit_width - 1.0) - 1.0
+    else:
+        lo = 0.0
+        hi = 2.0 ** bit_width - 1.0 - (1.0 if narrow else 0.0)
+    return lo, hi
+
+
+def _round_expr(v, mode: str):
+    if mode == "ROUND":
+        return jnp.round(v)
+    if mode == "ROUND_TO_ZERO":
+        return jnp.trunc(v)
+    if mode == "CEIL":
+        return jnp.ceil(v)
+    if mode == "FLOOR":
+        return jnp.floor(v)
+    raise ValueError(f"unknown rounding_mode {mode!r}")
+
+
+def _row_blocks(shape, block_rows):
+    """Split the leading axis into grid blocks (elementwise kernels)."""
+    rows = shape[0] if len(shape) > 1 else shape[0]
+    block_rows = min(block_rows, rows)
+    if rows % block_rows != 0:
+        block_rows = 1  # ragged: fall back to row-at-a-time
+    return block_rows
+
+
+def quant(x, scale, zero_point, bit_width, *, signed=True, narrow=False,
+          rounding_mode="ROUND", block_rows=128):
+    """Pallas ``Quant``: fused quantize->dequantize (Eq. 1 + Eq. 4).
+
+    ``scale``/``zero_point``/``bit_width`` are static Python floats folded
+    into the kernel (the weight/static-activation case the AOT path needs).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    orig_shape = x.shape
+    if x.ndim == 1:
+        x = x[None, :]
+    lo, hi = quant_bounds_py(signed, narrow, float(bit_width))
+    s, z = float(scale), float(zero_point)
+
+    def kernel(x_ref, o_ref):
+        v = x_ref[...]
+        q = jnp.clip(_round_expr(v / s + z, rounding_mode), lo, hi)
+        o_ref[...] = ((q - z) * s).astype(jnp.float32)
+
+    rows, cols = x.shape[0], int(math.prod(x.shape[1:]))
+    x2 = x.reshape(rows, cols)
+    br = _row_blocks(x2.shape, block_rows)
+    out = pl.pallas_call(
+        kernel,
+        grid=(rows // br,),
+        in_specs=[pl.BlockSpec((br, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=True,
+    )(x2)
+    return out.reshape(orig_shape)
+
+
+def bipolar_quant(x, scale, *, block_rows=128):
+    """Pallas ``BipolarQuant``: y = scale * sign_{>=0}(x)."""
+    x = jnp.asarray(x, jnp.float32)
+    orig_shape = x.shape
+    if x.ndim == 1:
+        x = x[None, :]
+    s = float(scale)
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = jnp.where(x_ref[...] >= 0, s, -s).astype(jnp.float32)
+
+    rows, cols = x.shape[0], int(math.prod(x.shape[1:]))
+    x2 = x.reshape(rows, cols)
+    br = _row_blocks(x2.shape, block_rows)
+    out = pl.pallas_call(
+        kernel,
+        grid=(rows // br,),
+        in_specs=[pl.BlockSpec((br, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=True,
+    )(x2)
+    return out.reshape(orig_shape)
+
+
+def trunc(x, scale, zero_point, in_bit_width, out_bit_width,
+          *, rounding_mode="FLOOR", block_rows=128):
+    """Pallas ``Trunc``: right-shift LSBs away, scale/zero preserved."""
+    x = jnp.asarray(x, jnp.float32)
+    orig_shape = x.shape
+    if x.ndim == 1:
+        x = x[None, :]
+    s, z = float(scale), float(zero_point)
+    shift = 2.0 ** (float(in_bit_width) - float(out_bit_width))
+
+    def kernel(x_ref, o_ref):
+        q = jnp.round(x_ref[...] / s + z)
+        q = _round_expr(q / shift, rounding_mode)
+        o_ref[...] = ((q - z) * s).astype(jnp.float32)
+
+    rows, cols = x.shape[0], int(math.prod(x.shape[1:]))
+    x2 = x.reshape(rows, cols)
+    br = _row_blocks(x2.shape, block_rows)
+    out = pl.pallas_call(
+        kernel,
+        grid=(rows // br,),
+        in_specs=[pl.BlockSpec((br, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=True,
+    )(x2)
+    return out.reshape(orig_shape)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "w_bits", "a_bits", "narrow_w", "block_m", "block_n"))
+def _noop(*a, **k):  # pragma: no cover - placeholder for jit cache symmetry
+    return None
+
+
+def quant_linear(x, w, w_scale, a_scale, w_bits, a_bits, *, narrow_w=True,
+                 bias=None, block_m=8, block_n=128):
+    """Fused quantized dense layer as one Pallas kernel.
+
+    Weight qdq + ``x @ wq`` (MXU, f32 accumulator) + bias + activation qdq,
+    all inside one M x N output tile so the wide accumulator never leaves
+    VMEM. Reference: ``ref.quant_linear``.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    w = jnp.asarray(w, jnp.float32)
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    w_lo, w_hi = quant_bounds_py(True, narrow_w, float(w_bits))
+    a_lo, a_hi = quant_bounds_py(True, False, float(a_bits))
+    ws, as_ = float(w_scale), float(a_scale)
+    has_bias = bias is not None
+    bm = m if m % block_m != 0 else block_m
+    bn = n if n % block_n != 0 else block_n
+
+    def kernel(*refs):
+        if has_bias:
+            x_ref, w_ref, b_ref, o_ref = refs
+        else:
+            x_ref, w_ref, o_ref = refs
+        wq = jnp.clip(jnp.round(w_ref[...] / ws), w_lo, w_hi) * ws
+        z = jnp.dot(x_ref[...], wq, preferred_element_type=jnp.float32)
+        if has_bias:
+            z = z + b_ref[...]
+        q = jnp.clip(jnp.round(z / as_), a_lo, a_hi)
+        o_ref[...] = (q * as_).astype(jnp.float32)
+
+    in_specs = [
+        pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+        pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+    ]
+    args = [x, w]
+    if has_bias:
+        in_specs.append(pl.BlockSpec((bn,), lambda i, j: (j,)))
+        args.append(jnp.asarray(bias, jnp.float32))
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(*args)
+
+
+def vmem_estimate_bytes(block_m, block_n, k, has_bias=False):
+    """Static VMEM footprint estimate for a quant_linear tile (f32)."""
+    tile_in = block_m * k          # x panel
+    tile_w = k * block_n           # weight panel
+    tile_out = block_m * block_n   # accumulator/output
+    tile_b = block_n if has_bias else 0
+    return 4 * (tile_in + tile_w + tile_out + tile_b)

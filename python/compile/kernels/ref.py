@@ -1,0 +1,72 @@
+"""Pure-jnp oracle for the QONNX operator semantics (paper Table II).
+
+This is the correctness reference the Pallas kernels (and, transitively,
+the Rust executor -- see rust/tests/pjrt_parity.rs) are checked against.
+Semantics mirror Eq. 1-4 of the paper and rust/src/ops/quant.rs exactly.
+"""
+
+import jax.numpy as jnp
+
+ROUNDING_MODES = ("ROUND", "ROUND_TO_ZERO", "CEIL", "FLOOR")
+
+
+def apply_rounding(v, mode: str):
+    """QONNX rounding_mode semantics. ROUND is round-half-to-even."""
+    if mode == "ROUND":
+        return jnp.round(v)  # numpy rounds half to even
+    if mode == "ROUND_TO_ZERO":
+        return jnp.trunc(v)
+    if mode == "CEIL":
+        return jnp.ceil(v)
+    if mode == "FLOOR":
+        return jnp.floor(v)
+    raise ValueError(f"unknown rounding_mode {mode!r}")
+
+
+def quant_bounds(signed: bool, narrow: bool, bit_width: float):
+    """Integer clamp bounds per Eqs. 2-3 + QONNX narrow/fractional widths."""
+    bit_width = jnp.asarray(bit_width, jnp.float32)
+    if signed:
+        lo = -(2.0 ** (bit_width - 1.0)) + (1.0 if narrow else 0.0)
+        hi = 2.0 ** (bit_width - 1.0) - 1.0
+    else:
+        lo = jnp.zeros_like(bit_width)
+        hi = 2.0**bit_width - 1.0 - (1.0 if narrow else 0.0)
+    return lo, hi
+
+
+def quant(x, scale, zero_point, bit_width, *, signed=True, narrow=False,
+          rounding_mode="ROUND"):
+    """QONNX ``Quant``: fused quantize(Eq. 1) -> dequantize(Eq. 4)."""
+    lo, hi = quant_bounds(signed, narrow, bit_width)
+    q = apply_rounding(x / scale + zero_point, rounding_mode)
+    q = jnp.clip(q, lo, hi)
+    return ((q - zero_point) * scale).astype(jnp.float32)
+
+
+def bipolar_quant(x, scale):
+    """QONNX ``BipolarQuant``: scale * (+1 if x >= 0 else -1)."""
+    return jnp.where(x >= 0, scale, -scale).astype(jnp.float32)
+
+
+def trunc(x, scale, zero_point, in_bit_width, out_bit_width,
+          *, rounding_mode="FLOOR"):
+    """QONNX ``Trunc``: drop LSBs; input scale/zero_point preserved."""
+    q = jnp.round(x / scale + zero_point)
+    shift = 2.0 ** (jnp.asarray(in_bit_width, jnp.float32)
+                    - jnp.asarray(out_bit_width, jnp.float32))
+    q = apply_rounding(q / shift, rounding_mode)
+    return ((q - zero_point) * scale).astype(jnp.float32)
+
+
+def quant_linear(x, w, w_scale, a_scale, w_bits, a_bits,
+                 *, narrow_w=True, bias=None):
+    """Quantized dense layer: qdq weights, matmul, qdq activations.
+
+    The reference for the fused Pallas ``quant_linear`` kernel.
+    """
+    wq = quant(w, w_scale, 0.0, w_bits, signed=True, narrow=narrow_w)
+    z = jnp.dot(x, wq, preferred_element_type=jnp.float32)
+    if bias is not None:
+        z = z + bias
+    return quant(z, a_scale, 0.0, a_bits, signed=True, narrow=False)

@@ -1,0 +1,88 @@
+"""L2: the quantized TFC model forward pass in JAX, calling the L1 Pallas
+kernels. Lowered once by aot.py; never imported at runtime.
+
+Weights are generated deterministically (seeded) and exported BOTH as the
+HLO artifact (weights baked as constants) and as a `.qonnx.json` QONNX
+graph, so the Rust side can cross-check the PJRT executable against its
+own reference executor on the *same* model -- the Brevitas-style export
+path of paper §VI-B.
+"""
+
+import numpy as np
+
+from .kernels import quant_pallas as k
+from .kernels import ref
+
+TFC_DIMS = [784, 64, 64, 64, 10]
+INPUT_SCALE = 1.0 / 255.0
+
+
+def make_tfc_params(w_bits: int, a_bits: int, seed: int = 7):
+    """Deterministic He-initialized TFC parameters + quant scales."""
+    rng = np.random.default_rng(seed)
+    layers = []
+    for i in range(len(TFC_DIMS) - 1):
+        fin, fout = TFC_DIMS[i], TFC_DIMS[i + 1]
+        w = rng.normal(0.0, np.sqrt(2.0 / fin), size=(fin, fout)).astype(np.float32)
+        bias = rng.normal(0.0, 0.05, size=(fout,)).astype(np.float32)
+        qmax = 2.0 ** (w_bits - 1) - 1 if w_bits > 1 else 1.0
+        w_scale = float(np.abs(w).max() / qmax) if w_bits > 1 else float(np.abs(w).mean())
+        a_scale = 1.0 / (2.0 ** (a_bits - 1) - 1) if a_bits > 1 else 1.0
+        layers.append({
+            "w": w,
+            "bias": bias,
+            "w_scale": w_scale,
+            "a_scale": a_scale if i + 2 < len(TFC_DIMS) else None,
+        })
+    return {"layers": layers, "w_bits": w_bits, "a_bits": a_bits}
+
+
+def tfc_forward(params, x):
+    """Quantized forward pass. ``x``: [batch, 784] float32 in [0, 1]."""
+    w_bits = params["w_bits"]
+    a_bits = params["a_bits"]
+    h = k.quant(x, INPUT_SCALE, 0.0, 8, signed=False)
+    for layer in params["layers"]:
+        w, bias = layer["w"], layer["bias"]
+        if layer["a_scale"] is not None and w_bits > 1 and a_bits > 1:
+            # hot path: fused Pallas quant-linear kernel
+            h = k.quant_linear(h, w, layer["w_scale"], layer["a_scale"],
+                               w_bits, a_bits, bias=bias)
+        else:
+            # bipolar / output layers: composed kernels
+            if w_bits == 1:
+                wq = k.bipolar_quant(w, layer["w_scale"])
+            else:
+                wq = k.quant(w, layer["w_scale"], 0.0, w_bits,
+                             signed=True, narrow=True)
+            import jax.numpy as jnp
+            z = jnp.dot(h, wq, preferred_element_type=jnp.float32) + bias
+            if layer["a_scale"] is None:
+                h = z  # logits stay float
+            elif a_bits == 1:
+                h = k.bipolar_quant(z, layer["a_scale"])
+            else:
+                h = k.quant(z, layer["a_scale"], 0.0, a_bits, signed=True)
+    return (h,)
+
+
+def tfc_forward_ref(params, x):
+    """Same forward pass through the pure-jnp oracle (no Pallas)."""
+    import jax.numpy as jnp
+    w_bits = params["w_bits"]
+    a_bits = params["a_bits"]
+    h = ref.quant(x, INPUT_SCALE, 0.0, 8, signed=False)
+    for layer in params["layers"]:
+        w, bias = layer["w"], layer["bias"]
+        if w_bits == 1:
+            wq = ref.bipolar_quant(w, layer["w_scale"])
+        else:
+            wq = ref.quant(w, layer["w_scale"], 0.0, w_bits, signed=True, narrow=True)
+        z = jnp.dot(h, wq, preferred_element_type=jnp.float32) + bias
+        if layer["a_scale"] is None:
+            h = z
+        elif a_bits == 1:
+            h = ref.bipolar_quant(z, layer["a_scale"])
+        else:
+            h = ref.quant(z, layer["a_scale"], 0.0, a_bits, signed=True)
+    return (h,)

@@ -1,0 +1,92 @@
+"""Export the JAX TFC model as a `.qonnx.json` QONNX graph.
+
+This is the Brevitas-style exporter of paper §VI-B: training-framework
+quantizer configuration is partially evaluated into constants and emitted
+as QONNX ``Quant``/``BipolarQuant`` nodes. The JSON schema mirrors
+rust/src/ir/json.rs (`format: qonnx.json/v1`).
+"""
+
+import json
+
+DOMAIN_QONNX = "qonnx.custom_op.general"
+
+
+def _tensor(arr):
+    import numpy as np
+    a = np.asarray(arr, dtype=np.float32)
+    return {"shape": [int(d) for d in a.shape],
+            "dtype": "f32",
+            "data": [float(v) for v in a.reshape(-1)]}
+
+
+def _scalar(v):
+    return {"shape": [], "dtype": "f32", "data": [float(v)]}
+
+
+def _node(op, inputs, outputs, name, domain="", attrs=None):
+    return {"name": name, "op_type": op, "domain": domain,
+            "inputs": inputs, "outputs": outputs, "attrs": attrs or {}}
+
+
+def _quant_node(builder, x, y, scale, zero_point, bit_width, signed, narrow,
+                name):
+    builder["initializers"][f"{y}_scale"] = _scalar(scale)
+    builder["initializers"][f"{y}_zeropt"] = _scalar(zero_point)
+    builder["initializers"][f"{y}_bitwidth"] = _scalar(bit_width)
+    builder["nodes"].append(_node(
+        "Quant", [x, f"{y}_scale", f"{y}_zeropt", f"{y}_bitwidth"], [y],
+        name, DOMAIN_QONNX,
+        {"signed": {"i": 1 if signed else 0},
+         "narrow": {"i": 1 if narrow else 0},
+         "rounding_mode": {"s": "ROUND"}}))
+
+
+def _bipolar_node(builder, x, y, scale, name):
+    builder["initializers"][f"{y}_scale"] = _scalar(scale)
+    builder["nodes"].append(_node(
+        "BipolarQuant", [x, f"{y}_scale"], [y], name, DOMAIN_QONNX))
+
+
+def tfc_to_qonnx_json(params, batch: int) -> str:
+    """Serialize the model of compile.model.make_tfc_params as QONNX."""
+    w_bits = params["w_bits"]
+    a_bits = params["a_bits"]
+    g = {
+        "format": "qonnx.json/v1",
+        "name": f"TFC-w{w_bits}a{a_bits}",
+        "doc": "exported from python/compile (Brevitas-style QONNX export)",
+        "opset": {"": 16, DOMAIN_QONNX: 1},
+        "inputs": [{"name": "x", "shape": [batch, 784]}],
+        "outputs": [{"name": "logits", "shape": [batch, 10]}],
+        "nodes": [],
+        "initializers": {},
+        "value_info": {},
+    }
+    _quant_node(g, "x", "x_q", 1.0 / 255.0, 0.0, 8.0, False, False, "inq")
+    cur = "x_q"
+    n_layers = len(params["layers"])
+    for i, layer in enumerate(params["layers"]):
+        w_name, wq_name = f"fc{i}_w", f"fc{i}_wq"
+        g["initializers"][w_name] = _tensor(layer["w"])
+        if w_bits == 1:
+            _bipolar_node(g, w_name, wq_name, layer["w_scale"], f"wq{i}")
+        else:
+            _quant_node(g, w_name, wq_name, layer["w_scale"], 0.0,
+                        float(w_bits), True, True, f"wq{i}")
+        mm = f"fc{i}_out"
+        g["nodes"].append(_node("MatMul", [cur, wq_name], [mm], f"mm{i}"))
+        b_name, biased = f"fc{i}_bias", f"fc{i}_biased"
+        g["initializers"][b_name] = _tensor(layer["bias"])
+        g["nodes"].append(_node("Add", [mm, b_name], [biased], f"add{i}"))
+        cur = biased
+        if layer["a_scale"] is not None:
+            aq = f"act{i}_q"
+            if a_bits == 1:
+                _bipolar_node(g, cur, aq, layer["a_scale"], f"aq{i}")
+            else:
+                _quant_node(g, cur, aq, layer["a_scale"], 0.0, float(a_bits),
+                            True, False, f"aq{i}")
+            cur = aq
+        elif i == n_layers - 1:
+            g["nodes"].append(_node("Identity", [cur], ["logits"], "out"))
+    return json.dumps(g)

@@ -1,0 +1,64 @@
+"""AOT artifact checks: HLO text structure + QONNX JSON well-formedness."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, model, qonnx_export
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_qonnx_json_schema():
+    params = model.make_tfc_params(2, 2)
+    doc = json.loads(qonnx_export.tfc_to_qonnx_json(params, 8))
+    assert doc["format"] == "qonnx.json/v1"
+    for field in ("name", "doc", "opset", "inputs", "outputs", "nodes",
+                  "initializers", "value_info"):
+        assert field in doc
+    ops = [n["op_type"] for n in doc["nodes"]]
+    assert ops.count("MatMul") == 4
+    assert ops.count("Quant") == 5 + 3  # input + 4 weights + 3 act (w2a2)
+    # every node input resolves
+    produced = set(doc["initializers"]) | {i["name"] for i in doc["inputs"]}
+    for n in doc["nodes"]:
+        for t in n["inputs"]:
+            assert t in produced, f"dangling input {t}"
+        produced.update(n["outputs"])
+    assert "logits" in produced
+
+
+def test_bipolar_export_uses_bipolar_nodes():
+    params = model.make_tfc_params(1, 1)
+    doc = json.loads(qonnx_export.tfc_to_qonnx_json(params, 8))
+    ops = [n["op_type"] for n in doc["nodes"]]
+    assert ops.count("BipolarQuant") == 4 + 3
+    assert ops.count("Quant") == 1  # input only
+
+
+def test_hlo_text_lowering():
+    params = model.make_tfc_params(2, 2)
+    import functools
+    import jax
+    fn = functools.partial(model.tfc_forward, params)
+    spec = jax.ShapeDtypeStruct((8, 784), np.float32)
+    text = aot.to_hlo_text(jax.jit(fn).lower(spec))
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    assert "f32[8,784]" in text
+    assert "f32[8,10]" in text
+
+
+@pytest.mark.skipif(not os.path.isdir(ART), reason="artifacts not built")
+def test_artifact_probe_vectors_exist():
+    for tag in ("tfc_w1a1", "tfc_w1a2", "tfc_w2a2"):
+        meta_path = os.path.join(ART, f"{tag}.meta.json")
+        if not os.path.exists(meta_path):
+            pytest.skip("artifacts incomplete")
+        meta = json.load(open(meta_path))
+        assert len(meta["probe_input"]) == meta["batch"] * 784
+        assert len(meta["probe_output"]) == meta["batch"] * 10
+        assert os.path.exists(os.path.join(ART, f"{tag}.hlo.txt"))
+        assert os.path.exists(os.path.join(ART, f"{tag}.qonnx.json"))

@@ -1,0 +1,135 @@
+"""Pallas kernels vs the pure-jnp oracle -- the core L1 correctness signal.
+
+Sweeps shapes, bit widths, signedness, narrow-range, and rounding modes
+(the hypothesis-style parameter grid for this environment).
+"""
+
+import numpy as np
+import pytest
+
+from compile.kernels import quant_pallas as qp
+from compile.kernels import ref
+
+SHAPES = [(1, 8), (3, 5), (64,), (128, 32), (2, 3, 4)]
+BITS = [2, 3, 4, 5, 8]
+
+
+def _data(shape, seed=0, scale=4.0):
+    rng = np.random.default_rng(seed)
+    return (rng.normal(0.0, scale, size=shape)).astype(np.float32)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("bits", BITS)
+def test_quant_matches_ref_shapes_bits(shape, bits):
+    x = _data(shape, seed=bits)
+    got = qp.quant(x, 0.25, 0.0, bits, signed=True)
+    want = ref.quant(x, 0.25, 0.0, bits, signed=True)
+    np.testing.assert_allclose(got, want)
+
+
+@pytest.mark.parametrize("signed", [True, False])
+@pytest.mark.parametrize("narrow", [True, False])
+def test_quant_signedness_narrow(signed, narrow):
+    x = _data((16, 16), seed=3)
+    got = qp.quant(x, 0.5, 0.0, 4, signed=signed, narrow=narrow)
+    want = ref.quant(x, 0.5, 0.0, 4, signed=signed, narrow=narrow)
+    np.testing.assert_allclose(got, want)
+
+
+@pytest.mark.parametrize("mode", ref.ROUNDING_MODES)
+def test_quant_rounding_modes(mode):
+    # include exact .5 grid points to pin tie behavior
+    x = np.array([[-1.5, -0.5, 0.5, 1.5, 2.5, 0.26, -0.74]], np.float32)
+    got = qp.quant(x, 1.0, 0.0, 8, rounding_mode=mode)
+    want = ref.quant(x, 1.0, 0.0, 8, rounding_mode=mode)
+    np.testing.assert_allclose(got, want)
+
+
+def test_quant_zero_point():
+    x = _data((8, 8), seed=5)
+    got = qp.quant(x, 0.25, 3.0, 4, signed=False)
+    want = ref.quant(x, 0.25, 3.0, 4, signed=False)
+    np.testing.assert_allclose(got, want)
+
+
+def test_quant_fractional_bit_width():
+    # paper §V: non-power-of-two integer intervals via float bit_width
+    x = _data((8, 8), seed=6, scale=200.0)
+    got = qp.quant(x, 1.0, 0.0, 7.5, signed=True)
+    want = ref.quant(x, 1.0, 0.0, 7.5, signed=True)
+    np.testing.assert_allclose(got, want)
+
+
+def test_quant_saturates():
+    x = np.array([[1e6, -1e6]], np.float32)
+    y = np.asarray(qp.quant(x, 1.0, 0.0, 4, signed=True))
+    assert y[0, 0] == 7.0 and y[0, 1] == -8.0
+
+
+def test_quant_output_on_grid():
+    x = _data((32, 32), seed=7)
+    y = np.asarray(qp.quant(x, 0.125, 0.0, 6, signed=True))
+    q = y / 0.125
+    np.testing.assert_allclose(q, np.round(q), atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_bipolar_matches_ref(shape):
+    x = _data(shape, seed=11)
+    np.testing.assert_allclose(qp.bipolar_quant(x, 0.5), ref.bipolar_quant(x, 0.5))
+
+
+def test_bipolar_zero_maps_positive():
+    x = np.zeros((4, 4), np.float32)
+    assert np.all(np.asarray(qp.bipolar_quant(x, 1.0)) == 1.0)
+
+
+@pytest.mark.parametrize("mode", ["FLOOR", "CEIL", "ROUND"])
+def test_trunc_matches_ref(mode):
+    x = np.arange(0, 256, dtype=np.float32).reshape(16, 16)
+    got = qp.trunc(x, 1.0, 0.0, 10, 8, rounding_mode=mode)
+    want = ref.trunc(x, 1.0, 0.0, 10, 8, rounding_mode=mode)
+    np.testing.assert_allclose(got, want)
+
+
+def test_trunc_avgpool_shift():
+    # 10-bit sum truncated to 8 bits = floor(x / 4)
+    x = np.array([[100.0, 203.0, 1023.0]], np.float32)
+    y = np.asarray(qp.trunc(x, 1.0, 0.0, 10, 8))
+    np.testing.assert_allclose(y, [[25.0, 50.0, 255.0]])
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 16, 32), (8, 784, 64), (1, 7, 3), (5, 11, 13)])
+def test_quant_linear_matches_ref(m, k, n):
+    rng = np.random.default_rng(m * 100 + n)
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    w = rng.normal(size=(k, n)).astype(np.float32)
+    got = qp.quant_linear(x, w, 0.125, 0.25, 4, 4)
+    want = ref.quant_linear(x, w, 0.125, 0.25, 4, 4)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_quant_linear_with_bias():
+    rng = np.random.default_rng(9)
+    x = rng.normal(size=(8, 16)).astype(np.float32)
+    w = rng.normal(size=(16, 128)).astype(np.float32)
+    b = rng.normal(size=(128,)).astype(np.float32)
+    got = qp.quant_linear(x, w, 0.125, 0.25, 2, 2, bias=b)
+    want = ref.quant_linear(x, w, 0.125, 0.25, 2, 2, bias=b)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_quant_linear_block_shapes_dont_change_result():
+    rng = np.random.default_rng(10)
+    x = rng.normal(size=(16, 64)).astype(np.float32)
+    w = rng.normal(size=(64, 256)).astype(np.float32)
+    a = qp.quant_linear(x, w, 0.1, 0.2, 4, 4, block_m=8, block_n=128)
+    b = qp.quant_linear(x, w, 0.1, 0.2, 4, 4, block_m=16, block_n=64)
+    np.testing.assert_allclose(a, b)
+
+
+def test_vmem_estimate_within_budget():
+    # the TFC hot layer: 8x784 @ 784x64 tile fits VMEM easily
+    bytes_ = qp.vmem_estimate_bytes(8, 64, 784, has_bias=True)
+    assert bytes_ < 16 * 1024 * 1024

@@ -1,0 +1,50 @@
+"""L2 model checks: Pallas-kernel forward vs oracle forward, shapes,
+determinism, grid properties."""
+
+import numpy as np
+import pytest
+
+from compile import model
+
+
+@pytest.mark.parametrize("w,a", [(1, 1), (1, 2), (2, 2)])
+def test_forward_matches_ref(w, a):
+    params = model.make_tfc_params(w, a)
+    rng = np.random.default_rng(1)
+    x = rng.uniform(0, 1, size=(8, 784)).astype(np.float32)
+    (y_pallas,) = model.tfc_forward(params, x)
+    (y_ref,) = model.tfc_forward_ref(params, x)
+    np.testing.assert_allclose(np.asarray(y_pallas), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_forward_shape_and_determinism():
+    params = model.make_tfc_params(2, 2)
+    x = np.full((8, 784), 0.5, np.float32)
+    (a,) = model.tfc_forward(params, x)
+    (b,) = model.tfc_forward(params, x)
+    assert a.shape == (8, 10)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_params_deterministic():
+    p1 = model.make_tfc_params(2, 2, seed=7)
+    p2 = model.make_tfc_params(2, 2, seed=7)
+    for l1, l2 in zip(p1["layers"], p2["layers"]):
+        np.testing.assert_array_equal(l1["w"], l2["w"])
+
+
+def test_hidden_activations_quantized():
+    # run 2 layers manually and check the intermediate lands on the a-grid
+    params = model.make_tfc_params(2, 2)
+    from compile.kernels import ref
+    x = np.random.default_rng(3).uniform(0, 1, (4, 784)).astype(np.float32)
+    h = ref.quant(x, model.INPUT_SCALE, 0.0, 8, signed=False)
+    layer = params["layers"][0]
+    wq = ref.quant(layer["w"], layer["w_scale"], 0.0, 2, signed=True, narrow=True)
+    import jax.numpy as jnp
+    z = jnp.dot(h, wq) + layer["bias"]
+    aq = ref.quant(z, layer["a_scale"], 0.0, 2, signed=True)
+    grid = np.asarray(aq) / layer["a_scale"]
+    np.testing.assert_allclose(grid, np.round(grid), atol=1e-4)
+    assert grid.min() >= -2.0 and grid.max() <= 1.0

@@ -1,0 +1,123 @@
+//! End-to-end execution performance: reference executor vs PJRT artifact
+//! engine, Quant-kernel microbenches (Rust op vs Pallas-compiled HLO), and
+//! the serving batcher's throughput/latency trade-off. This is the §Perf
+//! measurement harness of EXPERIMENTS.md.
+
+use qonnx::bench_support::{bench, bench_for, section};
+use qonnx::coordinator::{Batcher, BatcherConfig, InferenceEngine, PjrtEngine, ReferenceEngine};
+use qonnx::ir::Node;
+use qonnx::runtime::{artifacts_dir, PjrtRuntime};
+use qonnx::tensor::Tensor;
+use qonnx::zoo::{cnv, tfc_batch, TfcParams};
+use qonnx::{exec, ops, transforms};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    section("Quant operator microbench (256x256 tensor)");
+    let x = Tensor::new(vec![256, 256], (0..65536).map(|i| (i % 509) as f32 * 0.01 - 2.5).collect());
+    let quant_node = Node::new("Quant", &["x", "s", "z", "b"], &["y"])
+        .with_attr("signed", 1i64)
+        .with_attr("rounding_mode", "ROUND");
+    let s = Tensor::scalar(0.125);
+    let z = Tensor::scalar(0.0);
+    let b4 = Tensor::scalar(4.0);
+    let st = bench("rust Quant op (int4, 64k elems)", 3, 50, || {
+        ops::quant::quant_op(&quant_node, &[&x, &s, &z, &b4]).unwrap()
+    });
+    println!("{}", st.report());
+    println!(
+        "  -> {:.1} Melem/s",
+        65536.0 / st.mean.as_secs_f64() / 1e6
+    );
+
+    let quant_artifact = artifacts_dir().join("quant_b4_256x256.hlo.txt");
+    if quant_artifact.exists() {
+        let rt = PjrtRuntime::cpu()?;
+        let m = rt.load_hlo_text(&quant_artifact, vec![256, 256], vec![256, 256])?;
+        let st = bench("PJRT Pallas-quant artifact (int4, 64k elems)", 3, 50, || m.execute(&x).unwrap());
+        println!("{}", st.report());
+        println!("  -> {:.1} Melem/s", 65536.0 / st.mean.as_secs_f64() / 1e6);
+    } else {
+        println!("(PJRT quant artifact missing — run `make artifacts`)");
+    }
+
+    section("TFC inference latency (batch 8)");
+    let g = tfc_batch(&TfcParams::random(2, 2, 5), 8)?;
+    let mut ref_engine = ReferenceEngine::new(g)?;
+    let xb = Tensor::full(vec![8, 784], 0.5);
+    let st = bench("reference executor TFC-w2a2 b8", 3, 30, || ref_engine.infer_batch(&xb).unwrap());
+    println!("{}", st.report());
+    let tfc_stem = artifacts_dir().join("tfc_w2a2");
+    if tfc_stem.with_extension("hlo.txt").exists() {
+        let rt = PjrtRuntime::cpu()?;
+        let mut pjrt_engine = PjrtEngine::load(&rt, &tfc_stem)?;
+        let st_p = bench("PJRT artifact TFC-w2a2 b8", 3, 100, || pjrt_engine.infer_batch(&xb).unwrap());
+        println!("{}", st_p.report());
+        println!(
+            "  -> PJRT speedup over reference executor: {:.1}x",
+            st.mean.as_secs_f64() / st_p.mean.as_secs_f64()
+        );
+    }
+
+    section("CNV-w2a2 single-image inference (reference executor)");
+    let mut cg = cnv(2, 2, 3, false)?;
+    transforms::cleanup(&mut cg)?;
+    let xc = Tensor::full(vec![1, 3, 32, 32], 0.4);
+    let st = bench_for("reference executor CNV-w2a2 (59M MACs)", Duration::from_secs(3), || {
+        exec::execute_simple(&cg, &xc).unwrap()
+    });
+    println!("{}", st.report());
+    println!(
+        "  -> effective {:.2} GMAC/s",
+        59.46e6 / st.mean.as_secs_f64() / 1e9
+    );
+
+    section("serving throughput vs batching window (PJRT engine, 8 clients)");
+    if tfc_stem.with_extension("hlo.txt").exists() {
+        for wait_us in [0u64, 200, 1000, 5000] {
+            let stem = tfc_stem.clone();
+            let batcher = Arc::new(Batcher::start(
+                move || {
+                    let rt = PjrtRuntime::cpu()?;
+                    Ok(Box::new(PjrtEngine::load(&rt, &stem)?) as Box<dyn InferenceEngine>)
+                },
+                BatcherConfig { max_wait: Duration::from_micros(wait_us) },
+            )?);
+            let t0 = std::time::Instant::now();
+            let mut handles = Vec::new();
+            for c in 0..8 {
+                let b = batcher.clone();
+                handles.push(std::thread::spawn(move || {
+                    for i in 0..64 {
+                        let v = (c * 64 + i) as f32 / 512.0;
+                        b.infer(vec![v; 784]).unwrap();
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+            let el = t0.elapsed();
+            let stats = batcher.stats();
+            println!(
+                "max_wait {:>6}us: {:>7.0} req/s, mean latency {:>7.0}us, mean batch {:>5.2}",
+                wait_us,
+                stats.requests as f64 / el.as_secs_f64(),
+                stats.mean_latency_us(),
+                stats.mean_batch_occupancy()
+            );
+        }
+    }
+
+    section("GEMM substrate");
+    let a = Tensor::new(vec![256, 256], (0..65536).map(|i| (i % 13) as f32 - 6.0).collect());
+    let bm = Tensor::new(vec![256, 256], (0..65536).map(|i| (i % 7) as f32 - 3.0).collect());
+    let st = bench("gemm 256x256x256", 3, 20, || a.matmul2d(&bm).unwrap());
+    println!("{}", st.report());
+    println!(
+        "  -> {:.2} GFLOP/s",
+        2.0 * 256f64.powi(3) / st.mean.as_secs_f64() / 1e9
+    );
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! Regenerates Figure 4: the QKeras-style model and its QONNX conversion
+//! side by side, plus conversion timing.
+
+use qonnx::bench_support::{bench_for, section};
+use qonnx::transforms;
+use qonnx::zoo::{keras_to_qonnx, KerasLayer, KerasModel};
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let model = KerasModel::fig4_example();
+    section("Fig. 4 (left) — QKeras-style model description");
+    println!("input_dim = {}", model.input_dim);
+    for l in &model.layers {
+        match l {
+            KerasLayer::QDense { units, kernel_quantizer, bias_quantizer } => println!(
+                "  QDense(units={units}, kernel_quantizer=quantized_bits({},{}), bias_quantizer={})",
+                kernel_quantizer.bits,
+                kernel_quantizer.integer,
+                bias_quantizer
+                    .map(|q| format!("quantized_bits({},{})", q.bits, q.integer))
+                    .unwrap_or_else(|| "None".into()),
+            ),
+            KerasLayer::QActivationRelu { bits } => println!("  QActivation(quantized_relu({bits}))"),
+            KerasLayer::Relu => println!("  Activation(relu)"),
+            KerasLayer::Softmax => println!("  Activation(softmax)"),
+        }
+    }
+
+    section("Fig. 4 (right) — converted QONNX graph");
+    let mut g = keras_to_qonnx(&model, 1)?;
+    transforms::cleanup(&mut g)?;
+    transforms::infer_datatypes(&mut g)?;
+    println!("{}", g.summary());
+
+    section("conversion timing");
+    let s = bench_for("keras-like -> QONNX conversion + cleanup", Duration::from_millis(300), || {
+        let mut g = keras_to_qonnx(&model, 1).unwrap();
+        transforms::cleanup(&mut g).unwrap();
+        g.nodes.len()
+    });
+    println!("{}", s.report());
+    Ok(())
+}

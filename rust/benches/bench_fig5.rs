@@ -1,0 +1,86 @@
+//! Regenerates Figure 5: accuracy as a function of BOPs across the zoo,
+//! grouped by dataset tier, marker size = total weight bits.
+//!
+//! The accuracy axis is measured by QAT on the synthetic substitutes
+//! (DESIGN.md §3) with enough noise that precision differences show; the
+//! BOPs/weight-bit axes come from the actual zoo graphs. The shape to
+//! reproduce: within a tier, more BOPs (higher precision) → higher
+//! accuracy; tiers order MNIST > CIFAR in absolute accuracy on comparable
+//! task difficulty. Set QONNX_BENCH_FAST=1 for a quick pass.
+
+use qonnx::bench_support::section;
+use qonnx::{metrics, training, transforms, zoo};
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("QONNX_BENCH_FAST").is_ok();
+    let epochs = if fast { 6 } else { 30 };
+    section("Fig. 5 series — accuracy vs BOPs (marker = total weight bits)");
+    println!(
+        "{:<18} {:<9} {:>16} {:>14} {:>10} {:>10}",
+        "model", "dataset", "BOPs(Eq.5)", "weight_bits", "acc paper", "acc ours"
+    );
+    let mut series: Vec<(String, f64, f64)> = Vec::new();
+    for name in zoo::ZOO_NAMES {
+        let res = if name.starts_with("MobileNet") { if fast { 64 } else { 224 } } else { 32 };
+        let mut g = zoo::build(name, 1, res)?;
+        transforms::cleanup(&mut g)?;
+        let r = metrics::analyze(&g)?;
+        let acc = accuracy_for(name, epochs, fast)?;
+        println!(
+            "{:<18} {:<9} {:>16.4e} {:>14} {:>10.2} {:>10}",
+            name,
+            zoo::dataset_of(name),
+            r.bops(),
+            r.total_weight_bits(),
+            zoo::paper_accuracy(name).unwrap_or(0.0),
+            acc.map(|a| format!("{a:.2}")).unwrap_or_else(|| "cited".into()),
+        );
+        if let Some(a) = acc {
+            series.push((name.to_string(), r.bops(), f64::from(a)));
+        }
+    }
+
+    section("shape check (the paper's monotone trend within each tier)");
+    for tier in ["TFC", "CNV"] {
+        let pts: Vec<&(String, f64, f64)> = series.iter().filter(|(n, _, _)| n.starts_with(tier)).collect();
+        let mut ok = true;
+        for w in pts.windows(2) {
+            // zoo order is ascending precision: BOPs and accuracy should rise
+            if w[1].1 < w[0].1 || w[1].2 + 3.0 < w[0].2 {
+                ok = false;
+            }
+        }
+        println!(
+            "{tier}: BOPs ascending with precision: {} | accuracy non-degrading: {}",
+            pts.windows(2).all(|w| w[1].1 > w[0].1),
+            ok
+        );
+    }
+    Ok(())
+}
+
+fn accuracy_for(name: &str, epochs: usize, fast: bool) -> anyhow::Result<Option<f32>> {
+    let wa = name.rsplit('-').next().unwrap();
+    let a_pos = wa.find('a').unwrap();
+    let (w, a): (u32, u32) = (wa[1..a_pos].parse().unwrap(), wa[a_pos + 1..].parse().unwrap());
+    Ok(match zoo::dataset_of(name) {
+        "MNIST" => {
+            let train = zoo::synth_digits_noisy(if fast { 400 } else { 2000 }, 100, 0.3);
+            let test = zoo::synth_digits_noisy(500, 101, 0.3);
+            let mut cfg = training::QatConfig::tfc(w, a);
+            cfg.epochs = epochs;
+            let mut m = training::train_mlp(&train, &cfg)?;
+            Some(m.accuracy(&test))
+        }
+        "CIFAR-10" => {
+            let train = zoo::synth_cifar(if fast { 300 } else { 1500 }, 200);
+            let test = zoo::synth_cifar(500, 201);
+            let mut cfg = training::QatConfig::tfc(w, a);
+            cfg.hidden = vec![128, 64];
+            cfg.epochs = epochs;
+            let mut m = training::train_mlp(&train, &cfg)?;
+            Some(m.accuracy(&test))
+        }
+        _ => None,
+    })
+}

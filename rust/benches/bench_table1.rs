@@ -1,0 +1,23 @@
+//! Regenerates paper Table I: the format-capability matrix, with each
+//! cell backed by a live representability probe, plus probe timings.
+
+use qonnx::bench_support::{bench_for, section};
+use qonnx::formats;
+use std::time::Duration;
+
+fn main() {
+    section("Table I — ONNX-based QNN IR comparison (probe-backed)");
+    print!("{}", formats::render_table());
+
+    section("evidence per cell");
+    for row in formats::probe_all() {
+        println!("{}", row.format);
+        for (c, yes, ev) in &row.verdicts {
+            println!("  {:<28} {:<4} {}", c.title(), if *yes { "yes" } else { "no" }, ev);
+        }
+    }
+
+    section("probe timing");
+    let s = bench_for("full Table I probe suite", Duration::from_millis(500), formats::probe_all);
+    println!("{}", s.report());
+}

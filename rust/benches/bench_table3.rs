@@ -1,0 +1,86 @@
+//! Regenerates paper Table III: the model-zoo metric columns for all seven
+//! entries plus measured QAT accuracy on the synthetic substitutes
+//! (DESIGN.md §3). Set QONNX_BENCH_FAST=1 for a quick pass.
+
+use qonnx::bench_support::section;
+use qonnx::{metrics, training, transforms, zoo};
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("QONNX_BENCH_FAST").is_ok();
+    section("Table III — the QONNX model zoo (paper vs measured)");
+    println!(
+        "{:<18} {:<9} {:>6} {:>6} {:>14} {:>16} {:>16} {:>11} {:>14} {:>10} {:>10}",
+        "Model", "Dataset", "w", "a", "MACs", "BOPs(Eq.5)", "MAC-BOPs", "Weights", "WeightBits", "acc paper", "acc ours"
+    );
+    // paper Table III reference values for the metric columns
+    let paper: &[(&str, u64, f64, u64, u64)] = &[
+        ("MobileNet-w4a4", 557_381_408, 74_070_028_288.0, 4_208_224, 16_839_808),
+        ("CNV-w1a1", 57_906_176, 107_672_576.0, 1_542_848, 1_542_848),
+        ("CNV-w1a2", 57_906_176, 165_578_752.0, 1_542_848, 1_542_848),
+        ("CNV-w2a2", 57_906_176, 331_157_504.0, 1_542_848, 3_085_696),
+        ("TFC-w1a1", 59_008, 59_008.0, 59_008, 59_008),
+        ("TFC-w1a2", 59_008, 118_016.0, 59_008, 59_008),
+        ("TFC-w2a2", 59_008, 236_032.0, 59_008, 118_016),
+    ];
+    for (name, p_macs, p_bops, p_weights, p_wbits) in paper {
+        let res = if name.starts_with("MobileNet") { if fast { 64 } else { 224 } } else { 32 };
+        let mut g = zoo::build(name, 1, res)?;
+        transforms::cleanup(&mut g)?;
+        let r = metrics::analyze(&g)?;
+        let acc = measured_accuracy(name, fast)?;
+        println!(
+            "{:<18} {:<9} {:>6} {:>6} {:>14} {:>16.4e} {:>16.4e} {:>11} {:>14} {:>10.2} {:>10}",
+            name,
+            zoo::dataset_of(name),
+            r.layers.iter().map(|l| l.weight_bits).min().unwrap_or(32),
+            r.layers.iter().map(|l| l.act_bits).filter(|&b| b < 32).min().unwrap_or(32),
+            r.macs(),
+            r.bops(),
+            r.mac_bops(),
+            r.weights(),
+            r.total_weight_bits(),
+            zoo::paper_accuracy(name).unwrap_or(0.0),
+            acc,
+        );
+        println!(
+            "{:<18} {:<9} {:>6} {:>6} {:>14} {:>16.4e} {:>16} {:>11} {:>14}   (paper row)",
+            "", "", "", "", p_macs, p_bops, "-", p_weights, p_wbits
+        );
+    }
+    println!("\nNotes:");
+    println!("* weights/weight-bits match Table III exactly for TFC and CNV;");
+    println!("  MobileNet differs by one stem kernel (864 weights, 0.02%).");
+    println!("* MACs for CNV: ours counts the 8-bit first conv the zoo script skips.");
+    println!("* BOPs: ours applies Eq.5 per output position; the zoo script's");
+    println!("  convention differs — orderings across bit widths are preserved.");
+    println!("* accuracy: measured by QAT on the synthetic substitutes (DESIGN.md §3);");
+    println!("  MobileNet/ImageNet accuracy is cited, not re-measured.");
+    Ok(())
+}
+
+fn measured_accuracy(name: &str, fast: bool) -> anyhow::Result<String> {
+    let wa = name.rsplit('-').next().unwrap();
+    let a_pos = wa.find('a').unwrap();
+    let (w, a): (u32, u32) = (wa[1..a_pos].parse().unwrap(), wa[a_pos + 1..].parse().unwrap());
+    let epochs = if fast { 6 } else { 25 };
+    Ok(match zoo::dataset_of(name) {
+        "MNIST" => {
+            let train = zoo::synth_digits_noisy(if fast { 400 } else { 2000 }, 100, 0.25);
+            let test = zoo::synth_digits_noisy(500, 101, 0.25);
+            let mut cfg = training::QatConfig::tfc(w, a);
+            cfg.epochs = epochs;
+            let mut m = training::train_mlp(&train, &cfg)?;
+            format!("{:.2}", m.accuracy(&test))
+        }
+        "CIFAR-10" => {
+            let train = zoo::synth_cifar(if fast { 300 } else { 1500 }, 200);
+            let test = zoo::synth_cifar(500, 201);
+            let mut cfg = training::QatConfig::tfc(w, a);
+            cfg.hidden = vec![128, 64];
+            cfg.epochs = epochs;
+            let mut m = training::train_mlp(&train, &cfg)?;
+            format!("{:.2}", m.accuracy(&test))
+        }
+        _ => "cited".to_string(),
+    })
+}

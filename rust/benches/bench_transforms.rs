@@ -1,0 +1,66 @@
+//! Per-pass transform timings (ablation over the cleanup pipeline and the
+//! format lowerings) on CNV-w2a2 and the MobileNet graph.
+
+use qonnx::bench_support::{bench, section};
+use qonnx::transforms;
+use qonnx::zoo::{cnv, mobilenet, tfc, TfcParams};
+
+fn main() -> anyhow::Result<()> {
+    let raw = cnv(2, 2, 42, true)?;
+    let mut cleaned = raw.clone();
+    transforms::cleanup(&mut cleaned)?;
+
+    section("cleanup pipeline ablation (CNV-w2a2 raw export)");
+    println!("{}", bench("infer_shapes", 1, 10, || {
+        let mut g = raw.clone();
+        g.sort_topologically().unwrap();
+        transforms::infer_shapes(&mut g).unwrap()
+    }).report());
+    println!("{}", bench("fold_constants (after shapes)", 1, 10, || {
+        let mut g = raw.clone();
+        g.sort_topologically().unwrap();
+        transforms::infer_shapes(&mut g).unwrap();
+        transforms::fold_constants(&mut g).unwrap()
+    }).report());
+    println!("{}", bench("full cleanup", 1, 10, || {
+        let mut g = raw.clone();
+        transforms::cleanup(&mut g).unwrap()
+    }).report());
+    println!("{}", bench("infer_datatypes", 1, 10, || {
+        let mut g = cleaned.clone();
+        transforms::infer_datatypes(&mut g).unwrap()
+    }).report());
+
+    section("format lowerings (TFC-w2a2)");
+    let tfc_g = tfc(&TfcParams::random(2, 2, 5))?;
+    println!("{}", bench("lower_to_qcdq", 1, 50, || {
+        let mut g = tfc_g.clone();
+        transforms::lower_to_qcdq(&mut g).unwrap()
+    }).report());
+    println!("{}", bench("convert_to_finn (MultiThreshold)", 1, 50, || {
+        let mut g = tfc_g.clone();
+        transforms::convert_to_finn(&mut g).unwrap()
+    }).report());
+    println!("{}", bench("hls4ml_ingest", 1, 50, || {
+        let mut g = tfc_g.clone();
+        transforms::hls4ml_ingest(&mut g).unwrap()
+    }).report());
+    println!("{}", bench("roundtrip qcdq -> qonnx", 1, 50, || {
+        let mut g = tfc_g.clone();
+        transforms::lower_to_qcdq(&mut g).unwrap();
+        transforms::raise_qcdq_to_qonnx(&mut g).unwrap()
+    }).report());
+
+    section("large-graph scaling (MobileNet, 86 nodes, 4.2M params)");
+    let mn = mobilenet(4, 4, 64, 1)?;
+    println!("{}", bench("cleanup (MobileNet @64px)", 1, 3, || {
+        let mut g = mn.clone();
+        transforms::cleanup(&mut g).unwrap()
+    }).report());
+    println!("{}", bench("channels-last (MobileNet @64px)", 1, 3, || {
+        let mut g = mn.clone();
+        transforms::cleanup(&mut g).unwrap();
+        transforms::to_channels_last(&mut g).unwrap()
+    }).report());
+    Ok(())
+}

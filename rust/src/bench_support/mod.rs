@@ -1,0 +1,102 @@
+//! Minimal benchmark harness (criterion is not in the vendored crate set).
+//!
+//! Warmup + timed iterations with mean/min/p50/p95 reporting, and a small
+//! table printer shared by the `benches/bench_*` binaries that regenerate
+//! the paper's tables and figures.
+
+use std::time::{Duration, Instant};
+
+/// Timing statistics over the measured iterations.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub min: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+impl Stats {
+    pub fn mean_us(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e6
+    }
+
+    /// One-line report.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10.1} us/iter  (min {:>8.1}, p50 {:>8.1}, p95 {:>8.1}, n={})",
+            self.name,
+            self.mean.as_secs_f64() * 1e6,
+            self.min.as_secs_f64() * 1e6,
+            self.p50.as_secs_f64() * 1e6,
+            self.p95.as_secs_f64() * 1e6,
+            self.iters
+        )
+    }
+}
+
+/// Benchmark a closure: `warmup` untimed runs, then `iters` timed runs.
+/// The closure's return value is black-boxed to keep the optimizer honest.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Stats {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed());
+    }
+    samples.sort_unstable();
+    let total: Duration = samples.iter().sum();
+    Stats {
+        name: name.to_string(),
+        iters,
+        mean: total / iters as u32,
+        min: samples[0],
+        p50: samples[iters / 2],
+        p95: samples[(iters * 95 / 100).min(iters - 1)],
+    }
+}
+
+/// Auto-calibrated variant: picks an iteration count that takes roughly
+/// `budget` and runs it.
+pub fn bench_for<T>(name: &str, budget: Duration, mut f: impl FnMut() -> T) -> Stats {
+    let t0 = Instant::now();
+    black_box(f());
+    let one = t0.elapsed().max(Duration::from_nanos(100));
+    let iters = (budget.as_secs_f64() / one.as_secs_f64()).clamp(3.0, 10_000.0) as usize;
+    bench(name, (iters / 10).max(1), iters, f)
+}
+
+/// Optimizer barrier (std::hint::black_box wrapper for older call sites).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Print a section header in bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_sane() {
+        let s = bench("noop", 2, 50, || 1 + 1);
+        assert_eq!(s.iters, 50);
+        assert!(s.min <= s.mean);
+        assert!(s.p50 <= s.p95);
+    }
+
+    #[test]
+    fn bench_for_calibrates() {
+        let s = bench_for("sleepless", Duration::from_millis(5), || {
+            std::hint::black_box((0..100).sum::<u64>())
+        });
+        assert!(s.iters >= 3);
+    }
+}

@@ -1,0 +1,278 @@
+//! Dynamic micro-batching request loop.
+//!
+//! Requests enter an mpsc queue; the worker drains up to
+//! `engine.max_batch()` of them or waits at most `max_wait` for stragglers
+//! (size-or-deadline triggering, the standard serving-batcher policy),
+//! executes one fused inference, and scatters the rows back to per-request
+//! channels. Latency and batch-occupancy stats are recorded for the bench
+//! harness.
+
+use super::engine::InferenceEngine;
+use crate::tensor::Tensor;
+use anyhow::Result;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Batcher tuning.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// max time the first request of a batch waits for company
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_wait: Duration::from_millis(2) }
+    }
+}
+
+struct Request {
+    input: Vec<f32>,
+    enqueued: Instant,
+    resp: mpsc::Sender<Result<Vec<f32>>>,
+}
+
+/// Aggregated serving statistics.
+#[derive(Debug, Default, Clone)]
+pub struct ServerStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub total_latency_us: u64,
+    pub max_latency_us: u64,
+}
+
+impl ServerStats {
+    pub fn mean_latency_us(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.total_latency_us as f64 / self.requests as f64
+        }
+    }
+
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+}
+
+/// A running batching server around an [`InferenceEngine`].
+pub struct Batcher {
+    tx: mpsc::Sender<Request>,
+    in_dim: usize,
+    stats: Arc<Stats>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    shutdown: Arc<AtomicBool>,
+}
+
+#[derive(Default)]
+struct Stats {
+    requests: AtomicU64,
+    batches: AtomicU64,
+    total_latency_us: AtomicU64,
+    max_latency_us: AtomicU64,
+}
+
+impl Batcher {
+    /// Start the worker thread. The engine is built *inside* the worker by
+    /// `factory` (PJRT handles are thread-affine and `!Send`).
+    pub fn start<F>(factory: F, cfg: BatcherConfig) -> Result<Batcher>
+    where
+        F: FnOnce() -> Result<Box<dyn InferenceEngine>> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let rx = Mutex::new(rx);
+        let stats: Arc<Stats> = Arc::default();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize)>>();
+        let worker_stats = stats.clone();
+        let worker_shutdown = shutdown.clone();
+        let worker = std::thread::spawn(move || {
+            let mut engine = match factory() {
+                Ok(e) => {
+                    let _ = ready_tx.send(Ok((e.input_dim(), e.output_dim())));
+                    e
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            let in_dim = engine.input_dim();
+            let out_dim = engine.output_dim();
+            let rx = rx.lock().unwrap();
+            let max_batch = engine.max_batch().min(1024);
+            loop {
+                // block for the first request (with a poll so shutdown works)
+                let first = match rx.recv_timeout(Duration::from_millis(50)) {
+                    Ok(r) => r,
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        if worker_shutdown.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        continue;
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => return,
+                };
+                let mut batch = vec![first];
+                let deadline = Instant::now() + cfg.max_wait;
+                while batch.len() < max_batch {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(r) => batch.push(r),
+                        Err(_) => break,
+                    }
+                }
+                // fuse, execute, scatter
+                let n = batch.len();
+                let mut data = Vec::with_capacity(n * in_dim);
+                for r in &batch {
+                    data.extend_from_slice(&r.input);
+                }
+                let result = engine.infer_batch(&Tensor::new(vec![n, in_dim], data));
+                worker_stats.batches.fetch_add(1, Ordering::Relaxed);
+                match result {
+                    Ok(y) => {
+                        let rows = y.as_f32().expect("engine output must be f32");
+                        for (i, req) in batch.into_iter().enumerate() {
+                            let lat = req.enqueued.elapsed().as_micros() as u64;
+                            worker_stats.requests.fetch_add(1, Ordering::Relaxed);
+                            worker_stats.total_latency_us.fetch_add(lat, Ordering::Relaxed);
+                            worker_stats.max_latency_us.fetch_max(lat, Ordering::Relaxed);
+                            let row = rows[i * out_dim..(i + 1) * out_dim].to_vec();
+                            let _ = req.resp.send(Ok(row));
+                        }
+                    }
+                    Err(e) => {
+                        let msg = format!("{e:#}");
+                        for req in batch {
+                            worker_stats.requests.fetch_add(1, Ordering::Relaxed);
+                            let _ = req.resp.send(Err(anyhow::anyhow!("{msg}")));
+                        }
+                    }
+                }
+            }
+        });
+        let (in_dim, _out_dim) = ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("engine factory thread died"))??;
+        Ok(Batcher { tx, in_dim, stats, worker: Some(worker), shutdown })
+    }
+
+    /// Submit one input row; returns a receiver for the output row.
+    pub fn submit(&self, input: Vec<f32>) -> Result<mpsc::Receiver<Result<Vec<f32>>>> {
+        anyhow::ensure!(input.len() == self.in_dim, "input length {} != {}", input.len(), self.in_dim);
+        let (resp_tx, resp_rx) = mpsc::channel();
+        self.tx
+            .send(Request { input, enqueued: Instant::now(), resp: resp_tx })
+            .map_err(|_| anyhow::anyhow!("server is shut down"))?;
+        Ok(resp_rx)
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn infer(&self, input: Vec<f32>) -> Result<Vec<f32>> {
+        self.submit(input)?.recv()?
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        ServerStats {
+            requests: self.stats.requests.load(Ordering::Relaxed),
+            batches: self.stats.batches.load(Ordering::Relaxed),
+            total_latency_us: self.stats.total_latency_us.load(Ordering::Relaxed),
+            max_latency_us: self.stats.max_latency_us.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Stop the worker and wait for it.
+    pub fn shutdown(mut self) -> ServerStats {
+        self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        self.stats()
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ReferenceEngine;
+    use crate::zoo::{tfc_batch, TfcParams};
+
+    fn ref_engine() -> Result<Box<dyn InferenceEngine>> {
+        let g = tfc_batch(&TfcParams::random(2, 2, 5), 1).unwrap();
+        Ok(Box::new(ReferenceEngine::new(g)?))
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let b = Batcher::start(ref_engine, BatcherConfig::default()).unwrap();
+        let y = b.infer(vec![0.5; 784]).unwrap();
+        assert_eq!(y.len(), 10);
+        let stats = b.shutdown();
+        assert_eq!(stats.requests, 1);
+    }
+
+    #[test]
+    fn failing_factory_reported() {
+        let r = Batcher::start(
+            || anyhow::bail!("no such artifact"),
+            BatcherConfig::default(),
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn concurrent_requests_get_batched() {
+        let b = Arc::new(
+            Batcher::start(ref_engine, BatcherConfig { max_wait: Duration::from_millis(20) })
+                .unwrap(),
+        );
+        let mut handles = Vec::new();
+        for i in 0..16 {
+            let b = b.clone();
+            handles.push(std::thread::spawn(move || {
+                b.infer(vec![i as f32 / 16.0; 784]).unwrap()
+            }));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap().len(), 10);
+        }
+        let stats = b.stats();
+        assert_eq!(stats.requests, 16);
+        assert!(stats.batches < 16, "no batching happened: {} batches", stats.batches);
+        assert!(stats.mean_batch_occupancy() > 1.0);
+    }
+
+    #[test]
+    fn batched_results_match_individual() {
+        let mut solo = ref_engine().unwrap();
+        let b = Batcher::start(ref_engine, BatcherConfig::default()).unwrap();
+        let input: Vec<f32> = (0..784).map(|i| (i % 7) as f32 / 7.0).collect();
+        let batched = b.infer(input.clone()).unwrap();
+        let direct = solo.infer_batch(&Tensor::new(vec![1, 784], input)).unwrap();
+        assert_eq!(batched, direct.as_f32().unwrap());
+    }
+
+    #[test]
+    fn wrong_input_len_rejected() {
+        let b = Batcher::start(ref_engine, BatcherConfig::default()).unwrap();
+        assert!(b.submit(vec![0.0; 3]).is_err());
+    }
+}

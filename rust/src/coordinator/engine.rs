@@ -1,0 +1,173 @@
+//! Inference engines: the PJRT hot path and the reference-executor
+//! verification path behind one trait.
+
+use crate::exec;
+use crate::ir::ModelGraph;
+use crate::runtime::{ArtifactMeta, CompiledModel, PjrtRuntime};
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A model that maps a `[n, in_dim]` batch to `[n, out_dim]` outputs.
+///
+/// Not `Send`: PJRT executables hold thread-affine handles, so the
+/// [`super::Batcher`] constructs its engine *inside* the worker thread via
+/// a factory closure.
+pub trait InferenceEngine {
+    fn name(&self) -> String;
+    fn input_dim(&self) -> usize;
+    fn output_dim(&self) -> usize;
+    /// Largest batch the engine can take in one call (PJRT artifacts have
+    /// a fixed compiled batch; the batcher pads up to it).
+    fn max_batch(&self) -> usize;
+    fn infer_batch(&mut self, batch: &Tensor) -> Result<Tensor>;
+}
+
+/// PJRT-compiled artifact engine (fixed batch; pads internally).
+pub struct PjrtEngine {
+    model: CompiledModel,
+    meta: ArtifactMeta,
+}
+
+impl PjrtEngine {
+    /// Load `<stem>.hlo.txt` / `<stem>.meta.json`, compile, and self-check
+    /// against the build-time probe vector.
+    pub fn load(rt: &PjrtRuntime, stem: &Path) -> Result<PjrtEngine> {
+        let (model, meta) = rt.load_artifact(stem)?;
+        let err = model.self_check(&meta)?;
+        ensure!(err < 1e-3, "artifact {:?} failed its probe self-check ({err})", stem);
+        Ok(PjrtEngine { model, meta })
+    }
+}
+
+impl InferenceEngine for PjrtEngine {
+    fn name(&self) -> String {
+        format!("pjrt:{}", self.meta.name)
+    }
+
+    fn input_dim(&self) -> usize {
+        self.meta.input_shape[1]
+    }
+
+    fn output_dim(&self) -> usize {
+        self.meta.output_shape[1]
+    }
+
+    fn max_batch(&self) -> usize {
+        self.meta.batch
+    }
+
+    fn infer_batch(&mut self, batch: &Tensor) -> Result<Tensor> {
+        let n = batch.shape()[0];
+        ensure!(n <= self.meta.batch, "batch {n} exceeds compiled batch {}", self.meta.batch);
+        let dim = self.input_dim();
+        let out_dim = self.output_dim();
+        if n == self.meta.batch {
+            return self.model.execute(batch);
+        }
+        // pad to the compiled batch, slice the result back
+        let mut padded = vec![0f32; self.meta.batch * dim];
+        padded[..n * dim].copy_from_slice(batch.as_f32()?);
+        let y = self.model.execute(&Tensor::new(vec![self.meta.batch, dim], padded))?;
+        let data = y.as_f32()?[..n * out_dim].to_vec();
+        Ok(Tensor::new(vec![n, out_dim], data))
+    }
+}
+
+/// Reference-executor engine over a QONNX graph (any batch size).
+pub struct ReferenceEngine {
+    graph: ModelGraph,
+    input_name: String,
+    output_name: String,
+    in_dim: usize,
+    out_dim: usize,
+    /// re-shaped graph cache by batch size (§Perf: cloning the graph —
+    /// including all weight initializers — per request dominated latency)
+    by_batch: std::collections::BTreeMap<usize, ModelGraph>,
+}
+
+impl ReferenceEngine {
+    pub fn new(graph: ModelGraph) -> Result<ReferenceEngine> {
+        ensure!(graph.inputs.len() == 1 && graph.outputs.len() == 1, "single-input/output graphs only");
+        let in_shape = graph.inputs[0].shape.clone().unwrap_or_default();
+        let out_shape = graph.outputs[0].shape.clone().unwrap_or_default();
+        ensure!(in_shape.len() == 2 && out_shape.len() == 2, "[n, dim] graphs only");
+        Ok(ReferenceEngine {
+            input_name: graph.inputs[0].name.clone(),
+            output_name: graph.outputs[0].name.clone(),
+            in_dim: in_shape[1],
+            out_dim: out_shape[1],
+            graph,
+            by_batch: Default::default(),
+        })
+    }
+}
+
+impl InferenceEngine for ReferenceEngine {
+    fn name(&self) -> String {
+        format!("reference:{}", self.graph.name)
+    }
+
+    fn input_dim(&self) -> usize {
+        self.in_dim
+    }
+
+    fn output_dim(&self) -> usize {
+        self.out_dim
+    }
+
+    fn max_batch(&self) -> usize {
+        usize::MAX
+    }
+
+    fn infer_batch(&mut self, batch: &Tensor) -> Result<Tensor> {
+        let n = batch.shape()[0];
+        // the graph declares a fixed batch; re-declare to the live one
+        // (cached — cloning weights per request dominated latency)
+        let g = self.by_batch.entry(n).or_insert_with(|| {
+            let mut g = self.graph.clone();
+            g.inputs[0].shape = Some(vec![n, self.in_dim]);
+            g.outputs[0].shape = Some(vec![n, self.out_dim]);
+            g
+        });
+        let mut inputs = BTreeMap::new();
+        inputs.insert(self.input_name.clone(), batch.clone());
+        let r = exec::execute(g, &inputs)?;
+        Ok(r.outputs[&self.output_name].clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::zoo::{tfc_batch, TfcParams};
+
+    #[test]
+    fn reference_engine_any_batch() {
+        let g = tfc_batch(&TfcParams::random(2, 2, 5), 1).unwrap();
+        let mut e = ReferenceEngine::new(g).unwrap();
+        assert_eq!(e.input_dim(), 784);
+        for n in [1usize, 3, 8] {
+            let y = e.infer_batch(&Tensor::zeros(vec![n, 784])).unwrap();
+            assert_eq!(y.shape(), &[n, 10]);
+        }
+    }
+
+    #[test]
+    fn pjrt_engine_pads_partial_batches() {
+        let stem = crate::runtime::artifacts_dir().join("tfc_w2a2");
+        if !stem.with_extension("hlo.txt").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = PjrtRuntime::cpu().unwrap();
+        let mut e = PjrtEngine::load(&rt, &stem).unwrap();
+        assert_eq!(e.max_batch(), 8);
+        let full = e.infer_batch(&Tensor::full(vec![8, 784], 0.5)).unwrap();
+        let part = e.infer_batch(&Tensor::full(vec![3, 784], 0.5)).unwrap();
+        assert_eq!(part.shape(), &[3, 10]);
+        // padded execution must agree with full-batch rows
+        assert_eq!(&full.as_f32().unwrap()[..30], part.as_f32().unwrap());
+    }
+}

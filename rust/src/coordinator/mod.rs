@@ -1,0 +1,13 @@
+//! L3 coordinator: a batching inference server over the QONNX toolchain.
+//!
+//! The paper's contribution lives in the IR/compiler (L2/L1), so the
+//! coordinator is a thin-but-real serving loop: a request queue, a dynamic
+//! micro-batcher (size- or deadline-triggered), a worker running either
+//! the PJRT artifact engine (hot path) or the reference executor
+//! (verification path), and latency/throughput accounting.
+
+mod batcher;
+mod engine;
+
+pub use batcher::{Batcher, BatcherConfig, ServerStats};
+pub use engine::{InferenceEngine, PjrtEngine, ReferenceEngine};

@@ -1,0 +1,296 @@
+//! Arbitrary-precision datatype system.
+//!
+//! QONNX carries quantized values inside float32 tensors; what makes a tensor
+//! "INT4" or "BIPOLAR" is an *annotation* constraining the set of values the
+//! container may hold. This module is the Rust analog of
+//! `qonnx.core.datatype`: a closed vocabulary of container datatypes with
+//! range queries, membership tests, and canonical-name round-tripping.
+//!
+//! Supported kinds:
+//! * `FLOAT32` — unconstrained.
+//! * `BIPOLAR` — {-1, +1} (1 bit of information, FINN convention).
+//! * `BINARY`  — {0, 1}.
+//! * `TERNARY` — {-1, 0, +1}.
+//! * `INT<n>` / `UINT<n>` for 1 ≤ n ≤ 64 — signed two's-complement /
+//!   unsigned integer ranges.
+//! * `FIXED<i,f>` — signed fixed point with `i` total bits, `f` fractional
+//!   bits (classic `ap_fixed<i,i-f>` semantics: step `2^-f`).
+//! * `SCALEDINT<n>` — integer grid of unknown (float) scale; used by
+//!   datatype inference when a Quant scale is not unitary.
+
+use std::fmt;
+
+/// A per-tensor arbitrary-precision datatype annotation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DataType {
+    Float32,
+    Bipolar,
+    Binary,
+    Ternary,
+    Int(u8),
+    Uint(u8),
+    /// `Fixed(total_bits, frac_bits)`, signed.
+    Fixed(u8, u8),
+    /// Integer grid with an unknown floating scale attached downstream.
+    ScaledInt(u8),
+}
+
+impl DataType {
+    /// Smallest representable value (as f64 so INT64 is exact enough for
+    /// range checks; quantized NN practice stays far below 2^53).
+    pub fn min(&self) -> f64 {
+        match *self {
+            DataType::Float32 => f64::from(f32::MIN),
+            DataType::Bipolar | DataType::Ternary => -1.0,
+            DataType::Binary => 0.0,
+            DataType::Int(n) | DataType::ScaledInt(n) => -((1i128 << (n - 1)) as f64),
+            DataType::Uint(_) => 0.0,
+            DataType::Fixed(n, f) => -((1i128 << (n - 1)) as f64) / (1i128 << f) as f64,
+        }
+    }
+
+    /// Largest representable value.
+    pub fn max(&self) -> f64 {
+        match *self {
+            DataType::Float32 => f64::from(f32::MAX),
+            DataType::Bipolar | DataType::Ternary | DataType::Binary => 1.0,
+            DataType::Int(n) | DataType::ScaledInt(n) => ((1i128 << (n - 1)) - 1) as f64,
+            DataType::Uint(n) => ((1i128 << n) - 1) as f64,
+            DataType::Fixed(n, f) => ((1i128 << (n - 1)) - 1) as f64 / (1i128 << f) as f64,
+        }
+    }
+
+    /// Number of bits needed to store one element of this type.
+    pub fn bitwidth(&self) -> u32 {
+        match *self {
+            DataType::Float32 => 32,
+            DataType::Bipolar | DataType::Binary => 1,
+            DataType::Ternary => 2,
+            DataType::Int(n) | DataType::Uint(n) | DataType::ScaledInt(n) => u32::from(n),
+            DataType::Fixed(n, _) => u32::from(n),
+        }
+    }
+
+    /// Whether the type can represent negative numbers.
+    pub fn signed(&self) -> bool {
+        match *self {
+            DataType::Float32 | DataType::Bipolar | DataType::Ternary => true,
+            DataType::Binary | DataType::Uint(_) => false,
+            DataType::Int(_) | DataType::Fixed(_, _) | DataType::ScaledInt(_) => true,
+        }
+    }
+
+    /// Whether the type is an integer grid (step 1) — excludes FLOAT32 and
+    /// FIXED with fractional bits.
+    pub fn is_integer(&self) -> bool {
+        match *self {
+            DataType::Float32 => false,
+            DataType::Fixed(_, f) => f == 0,
+            _ => true,
+        }
+    }
+
+    /// Membership test: can `v` be stored in a tensor of this datatype?
+    pub fn allowed(&self, v: f64) -> bool {
+        match *self {
+            DataType::Float32 => v.is_finite(),
+            DataType::Bipolar => v == -1.0 || v == 1.0,
+            DataType::Binary => v == 0.0 || v == 1.0,
+            DataType::Ternary => v == -1.0 || v == 0.0 || v == 1.0,
+            DataType::Int(_) | DataType::Uint(_) | DataType::ScaledInt(_) => {
+                v.fract() == 0.0 && v >= self.min() && v <= self.max()
+            }
+            DataType::Fixed(_, f) => {
+                let scaled = v * (1i128 << f) as f64;
+                scaled.fract() == 0.0 && v >= self.min() && v <= self.max()
+            }
+        }
+    }
+
+    /// The smallest integer datatype covering the inclusive range
+    /// `[lo, hi]`; used by accumulator-width inference.
+    pub fn smallest_covering(lo: f64, hi: f64) -> DataType {
+        debug_assert!(lo <= hi);
+        if lo >= 0.0 {
+            for n in 1..=64u8 {
+                if hi <= DataType::Uint(n).max() {
+                    return DataType::Uint(n);
+                }
+            }
+            DataType::Uint(64)
+        } else {
+            for n in 2..=64u8 {
+                let d = DataType::Int(n);
+                if lo >= d.min() && hi <= d.max() {
+                    return d;
+                }
+            }
+            DataType::Int(64)
+        }
+    }
+
+    /// Canonical QONNX name, e.g. `INT4`, `UINT8`, `FIXED<8,4>`.
+    pub fn canonical_name(&self) -> String {
+        match *self {
+            DataType::Float32 => "FLOAT32".into(),
+            DataType::Bipolar => "BIPOLAR".into(),
+            DataType::Binary => "BINARY".into(),
+            DataType::Ternary => "TERNARY".into(),
+            DataType::Int(n) => format!("INT{n}"),
+            DataType::Uint(n) => format!("UINT{n}"),
+            DataType::Fixed(n, f) => format!("FIXED<{n},{f}>"),
+            DataType::ScaledInt(n) => format!("SCALEDINT<{n}>"),
+        }
+    }
+
+    /// Parse a canonical name back into a datatype.
+    pub fn from_name(name: &str) -> Option<DataType> {
+        match name {
+            "FLOAT32" => return Some(DataType::Float32),
+            "BIPOLAR" => return Some(DataType::Bipolar),
+            "BINARY" => return Some(DataType::Binary),
+            "TERNARY" => return Some(DataType::Ternary),
+            _ => {}
+        }
+        if let Some(rest) = name.strip_prefix("UINT") {
+            return rest.parse::<u8>().ok().filter(|&n| (1..=64).contains(&n)).map(DataType::Uint);
+        }
+        if let Some(rest) = name.strip_prefix("INT") {
+            return rest.parse::<u8>().ok().filter(|&n| (1..=64).contains(&n)).map(DataType::Int);
+        }
+        if let Some(rest) = name.strip_prefix("FIXED<") {
+            let inner = rest.strip_suffix('>')?;
+            let (a, b) = inner.split_once(',')?;
+            let n = a.trim().parse::<u8>().ok()?;
+            let f = b.trim().parse::<u8>().ok()?;
+            if n >= 1 && f <= n {
+                return Some(DataType::Fixed(n, f));
+            }
+            return None;
+        }
+        if let Some(rest) = name.strip_prefix("SCALEDINT<") {
+            let inner = rest.strip_suffix('>')?;
+            return inner.trim().parse::<u8>().ok().filter(|&n| (1..=64).contains(&n)).map(DataType::ScaledInt);
+        }
+        None
+    }
+
+    /// The datatype implied by a Quant node's (signed, narrow, bit_width)
+    /// attributes assuming unit scale and zero offset. Fractional bit widths
+    /// get a container of `ceil(bit_width)` bits.
+    pub fn from_quant_params(signed: bool, narrow: bool, bit_width: f64) -> DataType {
+        let nb = bit_width.ceil() as u8;
+        if signed {
+            if narrow && nb == 2 {
+                // [-1, 1]
+                DataType::Ternary
+            } else {
+                DataType::Int(nb.max(1))
+            }
+        } else if nb == 1 {
+            DataType::Binary
+        } else {
+            DataType::Uint(nb)
+        }
+    }
+}
+
+impl fmt::Display for DataType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.canonical_name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn int_ranges_match_paper_eqs_2_3() {
+        // Eq. 2/3 with nb=8 signed: [-128, 127]; unsigned: [0, 255].
+        assert_eq!(DataType::Int(8).min(), -128.0);
+        assert_eq!(DataType::Int(8).max(), 127.0);
+        assert_eq!(DataType::Uint(8).min(), 0.0);
+        assert_eq!(DataType::Uint(8).max(), 255.0);
+    }
+
+    #[test]
+    fn low_precision_ranges() {
+        assert_eq!(DataType::Int(2).min(), -2.0);
+        assert_eq!(DataType::Int(2).max(), 1.0);
+        assert_eq!(DataType::Uint(1).max(), 1.0);
+        assert_eq!(DataType::Uint(4).max(), 15.0);
+        assert_eq!(DataType::Int(3).min(), -4.0);
+    }
+
+    #[test]
+    fn special_types() {
+        assert!(DataType::Bipolar.allowed(-1.0));
+        assert!(DataType::Bipolar.allowed(1.0));
+        assert!(!DataType::Bipolar.allowed(0.0));
+        assert!(DataType::Ternary.allowed(0.0));
+        assert!(!DataType::Binary.allowed(-1.0));
+        assert_eq!(DataType::Bipolar.bitwidth(), 1);
+        assert_eq!(DataType::Ternary.bitwidth(), 2);
+    }
+
+    #[test]
+    fn fixed_point() {
+        let d = DataType::Fixed(8, 4);
+        assert_eq!(d.min(), -8.0);
+        assert!((d.max() - 7.9375).abs() < 1e-12);
+        assert!(d.allowed(0.0625));
+        assert!(!d.allowed(0.03));
+        assert!(d.is_integer() == false);
+    }
+
+    #[test]
+    fn membership_int() {
+        let d = DataType::Int(4);
+        assert!(d.allowed(-8.0));
+        assert!(d.allowed(7.0));
+        assert!(!d.allowed(8.0));
+        assert!(!d.allowed(0.5));
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for d in [
+            DataType::Float32,
+            DataType::Bipolar,
+            DataType::Binary,
+            DataType::Ternary,
+            DataType::Int(2),
+            DataType::Int(17),
+            DataType::Uint(1),
+            DataType::Uint(32),
+            DataType::Fixed(12, 5),
+            DataType::ScaledInt(9),
+        ] {
+            assert_eq!(DataType::from_name(&d.canonical_name()), Some(d), "{d}");
+        }
+        assert_eq!(DataType::from_name("INT0"), None);
+        assert_eq!(DataType::from_name("UINT65"), None);
+        assert_eq!(DataType::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn smallest_covering_ranges() {
+        assert_eq!(DataType::smallest_covering(0.0, 1.0), DataType::Uint(1));
+        assert_eq!(DataType::smallest_covering(0.0, 255.0), DataType::Uint(8));
+        assert_eq!(DataType::smallest_covering(-1.0, 1.0), DataType::Int(2));
+        assert_eq!(DataType::smallest_covering(-128.0, 127.0), DataType::Int(8));
+        assert_eq!(DataType::smallest_covering(-129.0, 0.0), DataType::Int(9));
+    }
+
+    #[test]
+    fn from_quant_params_matches_table_ii_example() {
+        // "at 8 bits if signed is true and narrow is false, the target is
+        // [-128, 127]" — INT8 covers that.
+        assert_eq!(DataType::from_quant_params(true, false, 8.0), DataType::Int(8));
+        assert_eq!(DataType::from_quant_params(false, false, 1.0), DataType::Binary);
+        assert_eq!(DataType::from_quant_params(true, true, 2.0), DataType::Ternary);
+        // fractional widths round the container up
+        assert_eq!(DataType::from_quant_params(true, false, 7.5), DataType::Int(8));
+    }
+}

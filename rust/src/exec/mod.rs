@@ -1,0 +1,182 @@
+//! Node-level reference graph executor.
+//!
+//! Like the paper's Python execution utility, this executor exists to
+//! *verify* model semantics, not to be fast (the fast path is the PJRT
+//! runtime). It walks the graph in topological order, materializing every
+//! intermediate tensor.
+//!
+//! [`ExecOptions::standard_onnx_only`] restricts execution to standard-ONNX
+//! operators — simulating an existing 8-bit backend that knows nothing
+//! about QONNX, which is how we demonstrate the paper's QCDQ
+//! backward-compatibility claim (§IV).
+
+use crate::ir::{ModelGraph, DOMAIN_FINN, DOMAIN_QONNX};
+use crate::ops;
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Executor configuration.
+#[derive(Debug, Clone, Default)]
+pub struct ExecOptions {
+    /// Reject QONNX/FINN-domain nodes — emulates a stock ONNX backend.
+    pub standard_onnx_only: bool,
+    /// Record every intermediate tensor (for shape inference / debugging).
+    pub keep_intermediates: bool,
+}
+
+/// Execution result: outputs plus (optionally) all intermediates.
+#[derive(Debug)]
+pub struct ExecResult {
+    pub outputs: BTreeMap<String, Tensor>,
+    pub intermediates: BTreeMap<String, Tensor>,
+}
+
+/// Execute `graph` on named inputs.
+pub fn execute(graph: &ModelGraph, inputs: &BTreeMap<String, Tensor>) -> Result<ExecResult> {
+    execute_with(graph, inputs, &ExecOptions::default())
+}
+
+/// Execute with explicit options.
+pub fn execute_with(
+    graph: &ModelGraph,
+    inputs: &BTreeMap<String, Tensor>,
+    opts: &ExecOptions,
+) -> Result<ExecResult> {
+    let mut ctx: BTreeMap<String, Tensor> = BTreeMap::new();
+    for (k, t) in &graph.initializers {
+        ctx.insert(k.clone(), t.clone());
+    }
+    for vi in &graph.inputs {
+        if graph.initializers.contains_key(&vi.name) {
+            continue;
+        }
+        let t = inputs
+            .get(&vi.name)
+            .with_context(|| format!("missing input tensor '{}'", vi.name))?;
+        if let Some(shape) = &vi.shape {
+            if t.shape() != shape.as_slice() {
+                bail!(
+                    "input '{}' shape {:?} does not match declared {:?}",
+                    vi.name,
+                    t.shape(),
+                    shape
+                );
+            }
+        }
+        ctx.insert(vi.name.clone(), t.clone());
+    }
+
+    let order = graph.topo_order()?;
+    for i in order {
+        let node = &graph.nodes[i];
+        if opts.standard_onnx_only && (node.domain == DOMAIN_QONNX || node.domain == DOMAIN_FINN) {
+            bail!(
+                "node '{}' ({}, domain '{}') is not a standard ONNX op — \
+                 this backend only executes the stock operator set",
+                node.name,
+                node.op_type,
+                node.domain
+            );
+        }
+        let mut ins: Vec<&Tensor> = Vec::with_capacity(node.inputs.len());
+        for name in node.present_inputs() {
+            ins.push(
+                ctx.get(name)
+                    .with_context(|| format!("node '{}' input '{name}' not computed", node.name))?,
+            );
+        }
+        let outs = ops::execute_node(node, &ins)
+            .with_context(|| format!("executing node '{}' ({})", node.name, node.op_type))?;
+        if outs.len() != node.outputs.len() {
+            bail!(
+                "node '{}' produced {} outputs, declared {}",
+                node.name,
+                outs.len(),
+                node.outputs.len()
+            );
+        }
+        for (name, t) in node.outputs.iter().zip(outs) {
+            ctx.insert(name.clone(), t);
+        }
+    }
+
+    let mut outputs = BTreeMap::new();
+    for vi in &graph.outputs {
+        let t = ctx
+            .get(&vi.name)
+            .with_context(|| format!("graph output '{}' was not produced", vi.name))?;
+        outputs.insert(vi.name.clone(), t.clone());
+    }
+    let intermediates = if opts.keep_intermediates { ctx } else { BTreeMap::new() };
+    Ok(ExecResult { outputs, intermediates })
+}
+
+/// Convenience: single-input single-output execution.
+pub fn execute_simple(graph: &ModelGraph, input: &Tensor) -> Result<Tensor> {
+    anyhow::ensure!(graph.inputs.len() == 1, "execute_simple wants exactly 1 graph input");
+    anyhow::ensure!(graph.outputs.len() == 1, "execute_simple wants exactly 1 graph output");
+    let mut m = BTreeMap::new();
+    m.insert(graph.inputs[0].name.clone(), input.clone());
+    let r = execute(graph, &m)?;
+    Ok(r.outputs.values().next().unwrap().clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::GraphBuilder;
+
+    fn quant_relu_graph() -> ModelGraph {
+        let mut b = GraphBuilder::new("qr");
+        b.input("x", vec![1, 4]);
+        b.node("Relu", &["x"], &["a"], &[]);
+        b.quant("a", "y", 0.5, 0.0, 4.0, false, false, "ROUND");
+        b.output("y", vec![1, 4]);
+        b.finish().unwrap()
+    }
+
+    #[test]
+    fn executes_quant_relu() {
+        let g = quant_relu_graph();
+        let x = Tensor::new(vec![1, 4], vec![-1.0, 0.3, 0.26, 99.0]);
+        let y = execute_simple(&g, &x).unwrap();
+        // relu then uint4 quant at scale .5: max 7.5
+        assert_eq!(y.as_f32().unwrap(), &[0.0, 0.5, 0.5, 7.5]);
+    }
+
+    #[test]
+    fn standard_only_rejects_qonnx_nodes() {
+        let g = quant_relu_graph();
+        let mut m = BTreeMap::new();
+        m.insert("x".to_string(), Tensor::zeros(vec![1, 4]));
+        let opts = ExecOptions { standard_onnx_only: true, ..Default::default() };
+        let err = execute_with(&g, &m, &opts).unwrap_err();
+        assert!(err.to_string().contains("not a standard ONNX op"));
+    }
+
+    #[test]
+    fn missing_input_reported() {
+        let g = quant_relu_graph();
+        let m = BTreeMap::new();
+        assert!(execute(&g, &m).is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_reported() {
+        let g = quant_relu_graph();
+        let mut m = BTreeMap::new();
+        m.insert("x".to_string(), Tensor::zeros(vec![2, 4]));
+        assert!(execute(&g, &m).is_err());
+    }
+
+    #[test]
+    fn intermediates_recorded() {
+        let g = quant_relu_graph();
+        let mut m = BTreeMap::new();
+        m.insert("x".to_string(), Tensor::new(vec![1, 4], vec![1.0; 4]));
+        let opts = ExecOptions { keep_intermediates: true, ..Default::default() };
+        let r = execute_with(&g, &m, &opts).unwrap();
+        assert!(r.intermediates.contains_key("a"));
+    }
+}

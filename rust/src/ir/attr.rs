@@ -1,0 +1,118 @@
+//! Node attribute values — the ONNX AttributeProto payloads we need.
+
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+/// An attribute value attached to a [`crate::ir::Node`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum AttrValue {
+    Int(i64),
+    Float(f32),
+    Str(String),
+    Ints(Vec<i64>),
+    Floats(Vec<f32>),
+    Tensor(Tensor),
+}
+
+impl AttrValue {
+    pub fn as_int(&self) -> Result<i64> {
+        match self {
+            AttrValue::Int(v) => Ok(*v),
+            other => bail!("attribute is not an int: {other:?}"),
+        }
+    }
+
+    pub fn as_float(&self) -> Result<f32> {
+        match self {
+            AttrValue::Float(v) => Ok(*v),
+            AttrValue::Int(v) => Ok(*v as f32),
+            other => bail!("attribute is not a float: {other:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            AttrValue::Str(v) => Ok(v),
+            other => bail!("attribute is not a string: {other:?}"),
+        }
+    }
+
+    pub fn as_ints(&self) -> Result<&[i64]> {
+        match self {
+            AttrValue::Ints(v) => Ok(v),
+            other => bail!("attribute is not an int list: {other:?}"),
+        }
+    }
+
+    pub fn as_floats(&self) -> Result<&[f32]> {
+        match self {
+            AttrValue::Floats(v) => Ok(v),
+            other => bail!("attribute is not a float list: {other:?}"),
+        }
+    }
+
+    pub fn as_tensor(&self) -> Result<&Tensor> {
+        match self {
+            AttrValue::Tensor(v) => Ok(v),
+            other => bail!("attribute is not a tensor: {other:?}"),
+        }
+    }
+}
+
+impl From<i64> for AttrValue {
+    fn from(v: i64) -> Self {
+        AttrValue::Int(v)
+    }
+}
+impl From<f32> for AttrValue {
+    fn from(v: f32) -> Self {
+        AttrValue::Float(v)
+    }
+}
+impl From<&str> for AttrValue {
+    fn from(v: &str) -> Self {
+        AttrValue::Str(v.to_string())
+    }
+}
+impl From<String> for AttrValue {
+    fn from(v: String) -> Self {
+        AttrValue::Str(v)
+    }
+}
+impl From<Vec<i64>> for AttrValue {
+    fn from(v: Vec<i64>) -> Self {
+        AttrValue::Ints(v)
+    }
+}
+impl From<Vec<f32>> for AttrValue {
+    fn from(v: Vec<f32>) -> Self {
+        AttrValue::Floats(v)
+    }
+}
+impl From<Tensor> for AttrValue {
+    fn from(v: Tensor) -> Self {
+        AttrValue::Tensor(v)
+    }
+}
+impl From<bool> for AttrValue {
+    fn from(v: bool) -> Self {
+        AttrValue::Int(i64::from(v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors() {
+        assert_eq!(AttrValue::from(3i64).as_int().unwrap(), 3);
+        assert_eq!(AttrValue::from(2.5f32).as_float().unwrap(), 2.5);
+        // int coerces to float (ONNX exporters are sloppy here)
+        assert_eq!(AttrValue::from(2i64).as_float().unwrap(), 2.0);
+        assert_eq!(AttrValue::from("ROUND").as_str().unwrap(), "ROUND");
+        assert_eq!(AttrValue::from(vec![1i64, 2]).as_ints().unwrap(), &[1, 2]);
+        assert!(AttrValue::from(1i64).as_str().is_err());
+        assert_eq!(AttrValue::from(true).as_int().unwrap(), 1);
+    }
+}

@@ -1,0 +1,212 @@
+//! Fluent graph construction API used by the model zoo and tests.
+
+use super::{AttrValue, ModelGraph, Node, ValueInfo, DOMAIN_QONNX};
+use crate::datatypes::DataType;
+use crate::tensor::Tensor;
+
+/// Builder for [`ModelGraph`]s.
+///
+/// ```no_run
+/// // (no_run: doctest binaries lack the xla rpath in this environment)
+/// use qonnx::ir::GraphBuilder;
+/// use qonnx::tensor::Tensor;
+/// let mut b = GraphBuilder::new("tiny");
+/// b.input("x", vec![1, 4]);
+/// b.initializer("w", Tensor::zeros(vec![4, 2]));
+/// b.node("MatMul", &["x", "w"], &["y"], &[]);
+/// b.output("y", vec![1, 2]);
+/// let g = b.finish().unwrap();
+/// assert_eq!(g.nodes.len(), 1);
+/// ```
+pub struct GraphBuilder {
+    graph: ModelGraph,
+    counter: usize,
+}
+
+impl GraphBuilder {
+    pub fn new(name: &str) -> GraphBuilder {
+        let mut graph = ModelGraph::new(name);
+        graph.opset.insert(String::new(), 16);
+        graph.opset.insert(DOMAIN_QONNX.to_string(), 1);
+        GraphBuilder { graph, counter: 0 }
+    }
+
+    /// Declare a graph input.
+    pub fn input(&mut self, name: &str, shape: Vec<usize>) -> &mut Self {
+        self.graph.inputs.push(ValueInfo::new(name, shape));
+        self
+    }
+
+    /// Declare a graph input with a datatype annotation.
+    pub fn input_dt(&mut self, name: &str, shape: Vec<usize>, dt: DataType) -> &mut Self {
+        self.graph.inputs.push(ValueInfo::new(name, shape).with_dtype(dt));
+        self
+    }
+
+    /// Declare a graph output.
+    pub fn output(&mut self, name: &str, shape: Vec<usize>) -> &mut Self {
+        self.graph.outputs.push(ValueInfo::new(name, shape));
+        self
+    }
+
+    /// Declare a graph output with unknown shape (filled by shape inference).
+    pub fn output_unknown(&mut self, name: &str) -> &mut Self {
+        self.graph.outputs.push(ValueInfo::unknown(name));
+        self
+    }
+
+    /// Bind a constant tensor.
+    pub fn initializer(&mut self, name: &str, t: Tensor) -> &mut Self {
+        self.graph.initializers.insert(name.to_string(), t);
+        self
+    }
+
+    /// Bind a scalar f32 constant.
+    pub fn scalar(&mut self, name: &str, v: f32) -> &mut Self {
+        self.initializer(name, Tensor::scalar(v))
+    }
+
+    /// Append a standard-domain node with attributes.
+    pub fn node(
+        &mut self,
+        op_type: &str,
+        inputs: &[&str],
+        outputs: &[&str],
+        attrs: &[(&str, AttrValue)],
+    ) -> &mut Self {
+        self.node_in_domain("", op_type, inputs, outputs, attrs)
+    }
+
+    /// Append a node in an explicit domain.
+    pub fn node_in_domain(
+        &mut self,
+        domain: &str,
+        op_type: &str,
+        inputs: &[&str],
+        outputs: &[&str],
+        attrs: &[(&str, AttrValue)],
+    ) -> &mut Self {
+        let mut n = Node::new(op_type, inputs, outputs)
+            .with_domain(domain)
+            .with_name(&format!("{}_{}", op_type, self.counter));
+        self.counter += 1;
+        for (k, v) in attrs {
+            n.attrs.insert((*k).to_string(), v.clone());
+        }
+        self.graph.nodes.push(n);
+        self
+    }
+
+    /// Append a QONNX `Quant` node with scalar scale/zero-point/bit-width
+    /// initializers; returns the output tensor name.
+    #[allow(clippy::too_many_arguments)]
+    pub fn quant(
+        &mut self,
+        x: &str,
+        y: &str,
+        scale: f32,
+        zero_point: f32,
+        bit_width: f32,
+        signed: bool,
+        narrow: bool,
+        rounding_mode: &str,
+    ) -> &mut Self {
+        let s = format!("{y}_scale");
+        let z = format!("{y}_zeropt");
+        let b = format!("{y}_bitwidth");
+        self.scalar(&s, scale);
+        self.scalar(&z, zero_point);
+        self.scalar(&b, bit_width);
+        self.node_in_domain(
+            DOMAIN_QONNX,
+            "Quant",
+            &[x, &s, &z, &b],
+            &[y],
+            &[
+                ("signed", AttrValue::from(signed)),
+                ("narrow", AttrValue::from(narrow)),
+                ("rounding_mode", AttrValue::from(rounding_mode)),
+            ],
+        )
+    }
+
+    /// Quant with a tensor-valued scale (channel-wise).
+    #[allow(clippy::too_many_arguments)]
+    pub fn quant_tensor_scale(
+        &mut self,
+        x: &str,
+        y: &str,
+        scale: Tensor,
+        zero_point: f32,
+        bit_width: f32,
+        signed: bool,
+        narrow: bool,
+    ) -> &mut Self {
+        let s = format!("{y}_scale");
+        let z = format!("{y}_zeropt");
+        let b = format!("{y}_bitwidth");
+        self.initializer(&s, scale);
+        self.scalar(&z, zero_point);
+        self.scalar(&b, bit_width);
+        self.node_in_domain(
+            DOMAIN_QONNX,
+            "Quant",
+            &[x, &s, &z, &b],
+            &[y],
+            &[
+                ("signed", AttrValue::from(signed)),
+                ("narrow", AttrValue::from(narrow)),
+                ("rounding_mode", AttrValue::from("ROUND")),
+            ],
+        )
+    }
+
+    /// Append a QONNX `BipolarQuant` node with scalar scale.
+    pub fn bipolar_quant(&mut self, x: &str, y: &str, scale: f32) -> &mut Self {
+        let s = format!("{y}_scale");
+        self.scalar(&s, scale);
+        self.node_in_domain(DOMAIN_QONNX, "BipolarQuant", &[x, &s], &[y], &[])
+    }
+
+    /// Validate and return the graph.
+    pub fn finish(mut self) -> anyhow::Result<ModelGraph> {
+        self.graph.sort_topologically()?;
+        self.graph.validate()?;
+        Ok(self.graph)
+    }
+
+    /// Return the graph without validation (for intentionally-odd test
+    /// graphs, e.g. raw-export shapes for Fig. 1).
+    pub fn finish_unchecked(self) -> ModelGraph {
+        self.graph
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_quant_chain() {
+        let mut b = GraphBuilder::new("t");
+        b.input("x", vec![1, 8]);
+        b.quant("x", "xq", 0.5, 0.0, 4.0, true, false, "ROUND");
+        b.output("xq", vec![1, 8]);
+        let g = b.finish().unwrap();
+        assert_eq!(g.nodes.len(), 1);
+        assert_eq!(g.nodes[0].domain, DOMAIN_QONNX);
+        assert!(g.initializers.contains_key("xq_scale"));
+        assert_eq!(g.initializers["xq_bitwidth"].scalar_value().unwrap(), 4.0);
+    }
+
+    #[test]
+    fn node_names_unique() {
+        let mut b = GraphBuilder::new("t");
+        b.input("x", vec![1]);
+        b.node("Relu", &["x"], &["a"], &[]);
+        b.node("Relu", &["a"], &["y"], &[]);
+        b.output("y", vec![1]);
+        let g = b.finish().unwrap();
+        assert_ne!(g.nodes[0].name, g.nodes[1].name);
+    }
+}

@@ -1,0 +1,434 @@
+//! `ModelGraph`: the ONNX ModelProto/GraphProto analog plus QONNX tensor
+//! datatype annotations, with the structural queries the transform passes
+//! need (producer/consumer maps, topological sort, rewiring helpers).
+
+use super::node::Node;
+use crate::datatypes::DataType;
+use crate::tensor::Tensor;
+use anyhow::{anyhow, bail, Result};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Shape/datatype annotation for a graph input, output, or internal tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ValueInfo {
+    pub name: String,
+    /// Known static shape, if inferred/declared.
+    pub shape: Option<Vec<usize>>,
+    /// QONNX arbitrary-precision annotation (container is always float32).
+    pub dtype: DataType,
+}
+
+impl ValueInfo {
+    pub fn new(name: &str, shape: Vec<usize>) -> ValueInfo {
+        ValueInfo { name: name.to_string(), shape: Some(shape), dtype: DataType::Float32 }
+    }
+
+    pub fn unknown(name: &str) -> ValueInfo {
+        ValueInfo { name: name.to_string(), shape: None, dtype: DataType::Float32 }
+    }
+
+    pub fn with_dtype(mut self, dt: DataType) -> ValueInfo {
+        self.dtype = dt;
+        self
+    }
+}
+
+/// A QONNX model: graph structure + initializers + annotations.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ModelGraph {
+    pub name: String,
+    /// Documentation / provenance string.
+    pub doc: String,
+    /// Graph inputs (excluding initializers).
+    pub inputs: Vec<ValueInfo>,
+    /// Graph outputs.
+    pub outputs: Vec<ValueInfo>,
+    /// Nodes in (not necessarily topological) order.
+    pub nodes: Vec<Node>,
+    /// Constant tensors bound to input names.
+    pub initializers: BTreeMap<String, Tensor>,
+    /// Shape/datatype annotations for intermediate tensors.
+    pub value_info: BTreeMap<String, ValueInfo>,
+    /// Opset-style metadata (domain -> version); informational.
+    pub opset: BTreeMap<String, i64>,
+}
+
+impl ModelGraph {
+    pub fn new(name: &str) -> ModelGraph {
+        ModelGraph { name: name.to_string(), ..Default::default() }
+    }
+
+    // ------------------------------------------------------------------
+    // Structural queries
+    // ------------------------------------------------------------------
+
+    /// Index of the node producing `tensor`, if any.
+    pub fn producer(&self, tensor: &str) -> Option<usize> {
+        self.nodes.iter().position(|n| n.outputs.iter().any(|o| o == tensor))
+    }
+
+    /// Indices of nodes consuming `tensor`.
+    pub fn consumers(&self, tensor: &str) -> Vec<usize> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.inputs.iter().any(|i| i == tensor))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Whether `tensor` is a graph output.
+    pub fn is_output(&self, tensor: &str) -> bool {
+        self.outputs.iter().any(|o| o.name == tensor)
+    }
+
+    /// Whether `tensor` is a graph input.
+    pub fn is_input(&self, tensor: &str) -> bool {
+        self.inputs.iter().any(|o| o.name == tensor)
+    }
+
+    /// Constant lookup: initializer bound to `name`.
+    pub fn initializer(&self, name: &str) -> Option<&Tensor> {
+        self.initializers.get(name)
+    }
+
+    /// Shape annotation for any tensor (inputs, outputs, value_info).
+    pub fn tensor_shape(&self, name: &str) -> Option<Vec<usize>> {
+        if let Some(t) = self.initializers.get(name) {
+            return Some(t.shape().to_vec());
+        }
+        for vi in self.inputs.iter().chain(self.outputs.iter()) {
+            if vi.name == name {
+                return vi.shape.clone();
+            }
+        }
+        self.value_info.get(name).and_then(|vi| vi.shape.clone())
+    }
+
+    /// QONNX datatype annotation for a tensor (defaults to FLOAT32).
+    pub fn tensor_datatype(&self, name: &str) -> DataType {
+        for vi in self.inputs.iter().chain(self.outputs.iter()) {
+            if vi.name == name {
+                return vi.dtype;
+            }
+        }
+        self.value_info.get(name).map(|vi| vi.dtype).unwrap_or(DataType::Float32)
+    }
+
+    /// Set the shape annotation for a tensor.
+    pub fn set_tensor_shape(&mut self, name: &str, shape: Vec<usize>) {
+        for vi in self.inputs.iter_mut().chain(self.outputs.iter_mut()) {
+            if vi.name == name {
+                vi.shape = Some(shape);
+                return;
+            }
+        }
+        self.value_info
+            .entry(name.to_string())
+            .or_insert_with(|| ValueInfo::unknown(name))
+            .shape = Some(shape);
+    }
+
+    /// Set the QONNX datatype annotation for a tensor.
+    pub fn set_tensor_datatype(&mut self, name: &str, dt: DataType) {
+        for vi in self.inputs.iter_mut().chain(self.outputs.iter_mut()) {
+            if vi.name == name {
+                vi.dtype = dt;
+                return;
+            }
+        }
+        self.value_info
+            .entry(name.to_string())
+            .or_insert_with(|| ValueInfo::unknown(name))
+            .dtype = dt;
+    }
+
+    /// All tensor names referenced anywhere in the graph.
+    pub fn all_tensor_names(&self) -> BTreeSet<String> {
+        let mut out = BTreeSet::new();
+        for n in &self.nodes {
+            for t in n.present_inputs() {
+                out.insert(t.to_string());
+            }
+            for t in &n.outputs {
+                out.insert(t.clone());
+            }
+        }
+        for vi in self.inputs.iter().chain(self.outputs.iter()) {
+            out.insert(vi.name.clone());
+        }
+        out.extend(self.initializers.keys().cloned());
+        out
+    }
+
+    /// A fresh tensor name with the given prefix, unique in this graph.
+    pub fn fresh_name(&self, prefix: &str) -> String {
+        let names = self.all_tensor_names();
+        let mut i = 0usize;
+        loop {
+            let cand = format!("{prefix}_{i}");
+            if !names.contains(&cand) && self.nodes.iter().all(|n| n.name != cand) {
+                return cand;
+            }
+            i += 1;
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Structural edits
+    // ------------------------------------------------------------------
+
+    /// Remove node at `idx`, rewiring its single input to its single output
+    /// consumers (identity-removal semantics).
+    pub fn remove_node_rewire(&mut self, idx: usize) -> Result<()> {
+        let node = self.nodes[idx].clone();
+        let src = node
+            .present_inputs()
+            .next()
+            .ok_or_else(|| anyhow!("cannot rewire node '{}' with no inputs", node.name))?
+            .to_string();
+        let dst = node.outputs.first().cloned().ok_or_else(|| anyhow!("node has no output"))?;
+        self.nodes.remove(idx);
+        if self.is_output(&dst) {
+            // keep graph output name stable: repoint the producer of src
+            if let Some(p) = self.producer(&src) {
+                for o in &mut self.nodes[p].outputs {
+                    if *o == src {
+                        *o = dst.clone();
+                    }
+                }
+                // anything else consuming src must follow the rename
+                for n in &mut self.nodes {
+                    for i in &mut n.inputs {
+                        if *i == src {
+                            *i = dst.clone();
+                        }
+                    }
+                }
+            } else if let Some(t) = self.initializers.remove(&src) {
+                self.initializers.insert(dst.clone(), t);
+            } else {
+                bail!("cannot rewire: output '{dst}' fed by graph input '{src}'");
+            }
+        } else {
+            for n in &mut self.nodes {
+                for i in &mut n.inputs {
+                    if *i == dst {
+                        *i = src.clone();
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Topologically sorted node indices. Errors on cycles.
+    pub fn topo_order(&self) -> Result<Vec<usize>> {
+        let n = self.nodes.len();
+        // tensor -> producing node
+        let mut producer_of: BTreeMap<&str, usize> = BTreeMap::new();
+        for (i, node) in self.nodes.iter().enumerate() {
+            for o in &node.outputs {
+                producer_of.insert(o.as_str(), i);
+            }
+        }
+        let mut indeg = vec![0usize; n];
+        let mut succ: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, node) in self.nodes.iter().enumerate() {
+            for inp in node.present_inputs() {
+                if let Some(&p) = producer_of.get(inp) {
+                    succ[p].push(i);
+                    indeg[i] += 1;
+                }
+            }
+        }
+        let mut queue: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(i) = queue.pop() {
+            order.push(i);
+            for &s in &succ[i] {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    queue.push(s);
+                }
+            }
+        }
+        if order.len() != n {
+            bail!("graph '{}' contains a cycle", self.name);
+        }
+        Ok(order)
+    }
+
+    /// Re-order `self.nodes` topologically in place.
+    pub fn sort_topologically(&mut self) -> Result<()> {
+        let order = self.topo_order()?;
+        let mut new_nodes = Vec::with_capacity(self.nodes.len());
+        for i in order {
+            new_nodes.push(self.nodes[i].clone());
+        }
+        self.nodes = new_nodes;
+        Ok(())
+    }
+
+    /// Basic well-formedness checks: unique outputs, inputs resolvable,
+    /// acyclic.
+    pub fn validate(&self) -> Result<()> {
+        let mut produced: BTreeSet<&str> = BTreeSet::new();
+        for node in &self.nodes {
+            for o in &node.outputs {
+                if !produced.insert(o.as_str()) {
+                    bail!("tensor '{o}' produced by more than one node");
+                }
+            }
+        }
+        let available: BTreeSet<&str> = self
+            .inputs
+            .iter()
+            .map(|vi| vi.name.as_str())
+            .chain(self.initializers.keys().map(|s| s.as_str()))
+            .chain(produced.iter().copied())
+            .collect();
+        for node in &self.nodes {
+            for inp in node.present_inputs() {
+                if !available.contains(inp) {
+                    bail!("node '{}' ({}) input '{inp}' is not produced anywhere", node.name, node.op_type);
+                }
+            }
+        }
+        for out in &self.outputs {
+            if !available.contains(out.name.as_str()) {
+                bail!("graph output '{}' is not produced", out.name);
+            }
+        }
+        self.topo_order()?;
+        Ok(())
+    }
+
+    /// Count of nodes by op_type — handy for Fig. 1/2/3 style comparisons.
+    pub fn op_histogram(&self) -> BTreeMap<String, usize> {
+        let mut h = BTreeMap::new();
+        for n in &self.nodes {
+            *h.entry(n.op_type.clone()).or_insert(0) += 1;
+        }
+        h
+    }
+
+    /// Human-readable node listing (op sequence), used by the figure
+    /// regeneration benches.
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("graph {} ({} nodes)\n", self.name, self.nodes.len()));
+        for n in &self.nodes {
+            let shapes: Vec<String> = n
+                .outputs
+                .iter()
+                .map(|o| match self.tensor_shape(o) {
+                    Some(sh) => format!("{o}:{sh:?}:{}", self.tensor_datatype(o)),
+                    None => format!("{o}:?"),
+                })
+                .collect();
+            s.push_str(&format!("  {:<18} {:<14} -> {}\n", n.op_type, n.name, shapes.join(", ")));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> ModelGraph {
+        // in -> A -> (b, c); b -> B -> d; c -> C -> e; (d,e) -> D -> out
+        let mut g = ModelGraph::new("diamond");
+        g.inputs.push(ValueInfo::new("in", vec![1]));
+        g.outputs.push(ValueInfo::new("out", vec![1]));
+        g.nodes.push(Node::new("Relu", &["b"], &["d"]).with_name("B"));
+        g.nodes.push(Node::new("Add", &["d", "e"], &["out"]).with_name("D"));
+        g.nodes.push(Node::new("Split2", &["in"], &["b", "c"]).with_name("A"));
+        g.nodes.push(Node::new("Relu", &["c"], &["e"]).with_name("C"));
+        g
+    }
+
+    #[test]
+    fn producer_consumer() {
+        let g = diamond();
+        assert_eq!(g.nodes[g.producer("d").unwrap()].name, "B");
+        assert_eq!(g.producer("in"), None);
+        let cons = g.consumers("d");
+        assert_eq!(cons.len(), 1);
+        assert_eq!(g.nodes[cons[0]].name, "D");
+    }
+
+    #[test]
+    fn topo_sort_fixes_order() {
+        let mut g = diamond();
+        g.sort_topologically().unwrap();
+        let pos = |name: &str| g.nodes.iter().position(|n| n.name == name).unwrap();
+        assert!(pos("A") < pos("B"));
+        assert!(pos("A") < pos("C"));
+        assert!(pos("B") < pos("D"));
+        assert!(pos("C") < pos("D"));
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut g = ModelGraph::new("cyc");
+        g.inputs.push(ValueInfo::new("in", vec![1]));
+        g.nodes.push(Node::new("Add", &["in", "b"], &["a"]).with_name("n0"));
+        g.nodes.push(Node::new("Relu", &["a"], &["b"]).with_name("n1"));
+        assert!(g.topo_order().is_err());
+    }
+
+    #[test]
+    fn validate_catches_dangling_input() {
+        let mut g = ModelGraph::new("bad");
+        g.inputs.push(ValueInfo::new("in", vec![1]));
+        g.nodes.push(Node::new("Relu", &["nonexistent"], &["y"]).with_name("r"));
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn remove_node_rewire_middle() {
+        let mut g = ModelGraph::new("chain");
+        g.inputs.push(ValueInfo::new("in", vec![1]));
+        g.outputs.push(ValueInfo::new("out", vec![1]));
+        g.nodes.push(Node::new("Relu", &["in"], &["a"]).with_name("r0"));
+        g.nodes.push(Node::new("Identity", &["a"], &["b"]).with_name("id"));
+        g.nodes.push(Node::new("Relu", &["b"], &["out"]).with_name("r1"));
+        g.remove_node_rewire(1).unwrap();
+        assert_eq!(g.nodes.len(), 2);
+        assert_eq!(g.nodes[1].inputs[0], "a");
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn remove_node_rewire_at_output() {
+        let mut g = ModelGraph::new("chain");
+        g.inputs.push(ValueInfo::new("in", vec![1]));
+        g.outputs.push(ValueInfo::new("out", vec![1]));
+        g.nodes.push(Node::new("Relu", &["in"], &["a"]).with_name("r0"));
+        g.nodes.push(Node::new("Identity", &["a"], &["out"]).with_name("id"));
+        g.remove_node_rewire(1).unwrap();
+        assert_eq!(g.nodes.len(), 1);
+        assert_eq!(g.nodes[0].outputs[0], "out");
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn annotations() {
+        let mut g = diamond();
+        g.set_tensor_datatype("d", crate::datatypes::DataType::Int(4));
+        assert_eq!(g.tensor_datatype("d"), crate::datatypes::DataType::Int(4));
+        assert_eq!(g.tensor_datatype("e"), crate::datatypes::DataType::Float32);
+        g.set_tensor_shape("d", vec![1, 2]);
+        assert_eq!(g.tensor_shape("d"), Some(vec![1, 2]));
+    }
+
+    #[test]
+    fn fresh_names_unique() {
+        let g = diamond();
+        let n1 = g.fresh_name("b");
+        assert!(!g.all_tensor_names().contains(&n1));
+    }
+}

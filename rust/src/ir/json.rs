@@ -1,0 +1,563 @@
+//! Hand-rolled JSON (de)serialization for model files (`.qonnx.json`).
+//!
+//! The vendored crate set has no serde, so this module provides a minimal
+//! but complete JSON value type, parser, and printer, plus the mapping
+//! between [`ModelGraph`] and JSON. Field names mirror ONNX protobuf.
+
+use super::{AttrValue, ModelGraph, Node, ValueInfo};
+use crate::datatypes::DataType;
+use crate::tensor::Tensor;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// A JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn obj(entries: Vec<(&str, Json)>) -> Json {
+        Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn req(&self, key: &str) -> Result<&Json> {
+        self.get(key).ok_or_else(|| anyhow!("missing field '{key}'"))
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            other => bail!("expected string, got {other:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Json::Num(n) => Ok(*n),
+            other => bail!("expected number, got {other:?}"),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        Ok(self.as_f64()? as i64)
+    }
+
+    pub fn as_arr(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(a) => Ok(a),
+            other => bail!("expected array, got {other:?}"),
+        }
+    }
+
+    pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Ok(m),
+            other => bail!("expected object, got {other:?}"),
+        }
+    }
+
+    /// Serialize to a compact JSON string.
+    pub fn to_string(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s);
+        s
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 1e15 {
+                    out.push_str(&format!("{}", *n as i64));
+                } else {
+                    // {:?} on f64 gives the shortest round-tripping repr
+                    out.push_str(&format!("{n:?}"));
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\r' => out.push_str("\\r"),
+                        '\t' => out.push_str("\\t"),
+                        c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).write(out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    /// Parse a JSON document.
+    pub fn parse(text: &str) -> Result<Json> {
+        let bytes = text.as_bytes();
+        let mut pos = 0usize;
+        let v = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            bail!("trailing characters at offset {pos}");
+        }
+        Ok(v)
+    }
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json> {
+    skip_ws(b, pos);
+    if *pos >= b.len() {
+        bail!("unexpected end of input");
+    }
+    match b[*pos] {
+        b'{' => parse_obj(b, pos),
+        b'[' => parse_arr(b, pos),
+        b'"' => Ok(Json::Str(parse_string(b, pos)?)),
+        b't' => {
+            expect(b, pos, "true")?;
+            Ok(Json::Bool(true))
+        }
+        b'f' => {
+            expect(b, pos, "false")?;
+            Ok(Json::Bool(false))
+        }
+        b'n' => {
+            expect(b, pos, "null")?;
+            Ok(Json::Null)
+        }
+        _ => parse_num(b, pos),
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, word: &str) -> Result<()> {
+    if b.len() - *pos >= word.len() && &b[*pos..*pos + word.len()] == word.as_bytes() {
+        *pos += word.len();
+        Ok(())
+    } else {
+        bail!("expected '{word}' at offset {}", *pos);
+    }
+}
+
+fn parse_num(b: &[u8], pos: &mut usize) -> Result<Json> {
+    let start = *pos;
+    while *pos < b.len()
+        && matches!(b[*pos], b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+    {
+        *pos += 1;
+    }
+    let s = std::str::from_utf8(&b[start..*pos])?;
+    let n: f64 = s.parse().with_context(|| format!("bad number '{s}' at offset {start}"))?;
+    Ok(Json::Num(n))
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
+    if *pos >= b.len() || b[*pos] != b'"' {
+        bail!("expected string at offset {}", *pos);
+    }
+    *pos += 1;
+    let mut out = String::new();
+    loop {
+        if *pos >= b.len() {
+            bail!("unterminated string");
+        }
+        match b[*pos] {
+            b'"' => {
+                *pos += 1;
+                return Ok(out);
+            }
+            b'\\' => {
+                *pos += 1;
+                if *pos >= b.len() {
+                    bail!("unterminated escape");
+                }
+                match b[*pos] {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'n' => out.push('\n'),
+                    b'r' => out.push('\r'),
+                    b't' => out.push('\t'),
+                    b'b' => out.push('\u{8}'),
+                    b'f' => out.push('\u{c}'),
+                    b'u' => {
+                        if *pos + 4 >= b.len() {
+                            bail!("bad unicode escape");
+                        }
+                        let hex = std::str::from_utf8(&b[*pos + 1..*pos + 5])?;
+                        let cp = u32::from_str_radix(hex, 16)?;
+                        out.push(char::from_u32(cp).ok_or_else(|| anyhow!("bad codepoint"))?);
+                        *pos += 4;
+                    }
+                    c => bail!("bad escape '\\{}'", c as char),
+                }
+                *pos += 1;
+            }
+            _ => {
+                // consume one UTF-8 scalar
+                let rest = std::str::from_utf8(&b[*pos..]).map_err(|_| anyhow!("bad utf8"))?;
+                let c = rest.chars().next().unwrap();
+                out.push(c);
+                *pos += c.len_utf8();
+            }
+        }
+    }
+}
+
+fn parse_arr(b: &[u8], pos: &mut usize) -> Result<Json> {
+    *pos += 1; // '['
+    let mut items = Vec::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b']' {
+        *pos += 1;
+        return Ok(Json::Arr(items));
+    }
+    loop {
+        items.push(parse_value(b, pos)?);
+        skip_ws(b, pos);
+        if *pos >= b.len() {
+            bail!("unterminated array");
+        }
+        match b[*pos] {
+            b',' => *pos += 1,
+            b']' => {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            c => bail!("expected ',' or ']', got '{}'", c as char),
+        }
+    }
+}
+
+fn parse_obj(b: &[u8], pos: &mut usize) -> Result<Json> {
+    *pos += 1; // '{'
+    let mut map = BTreeMap::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b'}' {
+        *pos += 1;
+        return Ok(Json::Obj(map));
+    }
+    loop {
+        skip_ws(b, pos);
+        let key = parse_string(b, pos)?;
+        skip_ws(b, pos);
+        if *pos >= b.len() || b[*pos] != b':' {
+            bail!("expected ':' after object key");
+        }
+        *pos += 1;
+        map.insert(key, parse_value(b, pos)?);
+        skip_ws(b, pos);
+        if *pos >= b.len() {
+            bail!("unterminated object");
+        }
+        match b[*pos] {
+            b',' => *pos += 1,
+            b'}' => {
+                *pos += 1;
+                return Ok(Json::Obj(map));
+            }
+            c => bail!("expected ',' or '}}', got '{}'", c as char),
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Model <-> Json
+// ----------------------------------------------------------------------
+
+fn tensor_to_json(t: &Tensor) -> Json {
+    let shape = Json::Arr(t.shape().iter().map(|&d| Json::Num(d as f64)).collect());
+    if t.is_i64() {
+        Json::obj(vec![
+            ("shape", shape),
+            ("dtype", Json::Str("i64".into())),
+            ("data", Json::Arr(t.as_i64().unwrap().iter().map(|&v| Json::Num(v as f64)).collect())),
+        ])
+    } else {
+        Json::obj(vec![
+            ("shape", shape),
+            ("dtype", Json::Str("f32".into())),
+            ("data", Json::Arr(t.as_f32().unwrap().iter().map(|&v| Json::Num(f64::from(v))).collect())),
+        ])
+    }
+}
+
+fn tensor_from_json(j: &Json) -> Result<Tensor> {
+    let shape: Vec<usize> = j
+        .req("shape")?
+        .as_arr()?
+        .iter()
+        .map(|v| v.as_i64().map(|x| x as usize))
+        .collect::<Result<_>>()?;
+    let data = j.req("data")?.as_arr()?;
+    match j.req("dtype")?.as_str()? {
+        "f32" => Ok(Tensor::new(shape, data.iter().map(|v| v.as_f64().map(|x| x as f32)).collect::<Result<_>>()?)),
+        "i64" => Ok(Tensor::new_i64(shape, data.iter().map(|v| v.as_i64()).collect::<Result<_>>()?)),
+        other => bail!("unknown tensor dtype '{other}'"),
+    }
+}
+
+fn attr_to_json(a: &AttrValue) -> Json {
+    match a {
+        AttrValue::Int(v) => Json::obj(vec![("i", Json::Num(*v as f64))]),
+        AttrValue::Float(v) => Json::obj(vec![("f", Json::Num(f64::from(*v)))]),
+        AttrValue::Str(v) => Json::obj(vec![("s", Json::Str(v.clone()))]),
+        AttrValue::Ints(v) => Json::obj(vec![("ints", Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect()))]),
+        AttrValue::Floats(v) => {
+            Json::obj(vec![("floats", Json::Arr(v.iter().map(|&x| Json::Num(f64::from(x))).collect()))])
+        }
+        AttrValue::Tensor(t) => Json::obj(vec![("t", tensor_to_json(t))]),
+    }
+}
+
+fn attr_from_json(j: &Json) -> Result<AttrValue> {
+    let obj = j.as_obj()?;
+    if let Some(v) = obj.get("i") {
+        return Ok(AttrValue::Int(v.as_i64()?));
+    }
+    if let Some(v) = obj.get("f") {
+        return Ok(AttrValue::Float(v.as_f64()? as f32));
+    }
+    if let Some(v) = obj.get("s") {
+        return Ok(AttrValue::Str(v.as_str()?.to_string()));
+    }
+    if let Some(v) = obj.get("ints") {
+        return Ok(AttrValue::Ints(v.as_arr()?.iter().map(|x| x.as_i64()).collect::<Result<_>>()?));
+    }
+    if let Some(v) = obj.get("floats") {
+        return Ok(AttrValue::Floats(
+            v.as_arr()?.iter().map(|x| x.as_f64().map(|f| f as f32)).collect::<Result<_>>()?,
+        ));
+    }
+    if let Some(v) = obj.get("t") {
+        return Ok(AttrValue::Tensor(tensor_from_json(v)?));
+    }
+    bail!("unrecognized attribute encoding: {j:?}")
+}
+
+fn vi_to_json(vi: &ValueInfo) -> Json {
+    let mut fields = vec![("name", Json::Str(vi.name.clone()))];
+    if let Some(shape) = &vi.shape {
+        fields.push(("shape", Json::Arr(shape.iter().map(|&d| Json::Num(d as f64)).collect())));
+    }
+    if vi.dtype != DataType::Float32 {
+        fields.push(("qonnx_datatype", Json::Str(vi.dtype.canonical_name())));
+    }
+    Json::obj(fields)
+}
+
+fn vi_from_json(j: &Json) -> Result<ValueInfo> {
+    let name = j.req("name")?.as_str()?.to_string();
+    let shape = match j.get("shape") {
+        Some(arr) => Some(
+            arr.as_arr()?
+                .iter()
+                .map(|v| v.as_i64().map(|x| x as usize))
+                .collect::<Result<Vec<usize>>>()?,
+        ),
+        None => None,
+    };
+    let dtype = match j.get("qonnx_datatype") {
+        Some(s) => {
+            let name = s.as_str()?;
+            DataType::from_name(name).ok_or_else(|| anyhow!("unknown datatype '{name}'"))?
+        }
+        None => DataType::Float32,
+    };
+    Ok(ValueInfo { name, shape, dtype })
+}
+
+fn node_to_json(n: &Node) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(n.name.clone())),
+        ("op_type", Json::Str(n.op_type.clone())),
+        ("domain", Json::Str(n.domain.clone())),
+        ("inputs", Json::Arr(n.inputs.iter().map(|s| Json::Str(s.clone())).collect())),
+        ("outputs", Json::Arr(n.outputs.iter().map(|s| Json::Str(s.clone())).collect())),
+        (
+            "attrs",
+            Json::Obj(n.attrs.iter().map(|(k, v)| (k.clone(), attr_to_json(v))).collect()),
+        ),
+    ])
+}
+
+fn node_from_json(j: &Json) -> Result<Node> {
+    let mut n = Node::new(j.req("op_type")?.as_str()?, &[], &[]);
+    n.name = j.req("name")?.as_str()?.to_string();
+    n.domain = j.req("domain")?.as_str()?.to_string();
+    n.inputs = j.req("inputs")?.as_arr()?.iter().map(|v| v.as_str().map(String::from)).collect::<Result<_>>()?;
+    n.outputs = j.req("outputs")?.as_arr()?.iter().map(|v| v.as_str().map(String::from)).collect::<Result<_>>()?;
+    for (k, v) in j.req("attrs")?.as_obj()? {
+        n.attrs.insert(k.clone(), attr_from_json(v)?);
+    }
+    Ok(n)
+}
+
+/// Serialize a model to its `.qonnx.json` representation.
+pub fn model_to_json(g: &ModelGraph) -> String {
+    Json::obj(vec![
+        ("format", Json::Str("qonnx.json/v1".into())),
+        ("name", Json::Str(g.name.clone())),
+        ("doc", Json::Str(g.doc.clone())),
+        (
+            "opset",
+            Json::Obj(g.opset.iter().map(|(k, v)| (k.clone(), Json::Num(*v as f64))).collect()),
+        ),
+        ("inputs", Json::Arr(g.inputs.iter().map(vi_to_json).collect())),
+        ("outputs", Json::Arr(g.outputs.iter().map(vi_to_json).collect())),
+        ("nodes", Json::Arr(g.nodes.iter().map(node_to_json).collect())),
+        (
+            "initializers",
+            Json::Obj(g.initializers.iter().map(|(k, t)| (k.clone(), tensor_to_json(t))).collect()),
+        ),
+        (
+            "value_info",
+            Json::Obj(g.value_info.iter().map(|(k, vi)| (k.clone(), vi_to_json(vi))).collect()),
+        ),
+    ])
+    .to_string()
+}
+
+/// Parse a `.qonnx.json` document back into a model.
+pub fn model_from_json(text: &str) -> Result<ModelGraph> {
+    let j = Json::parse(text)?;
+    let fmt = j.req("format")?.as_str()?;
+    if fmt != "qonnx.json/v1" {
+        bail!("unsupported model format '{fmt}'");
+    }
+    let mut g = ModelGraph::new(j.req("name")?.as_str()?);
+    g.doc = j.req("doc")?.as_str()?.to_string();
+    for (k, v) in j.req("opset")?.as_obj()? {
+        g.opset.insert(k.clone(), v.as_i64()?);
+    }
+    for vi in j.req("inputs")?.as_arr()? {
+        g.inputs.push(vi_from_json(vi)?);
+    }
+    for vi in j.req("outputs")?.as_arr()? {
+        g.outputs.push(vi_from_json(vi)?);
+    }
+    for n in j.req("nodes")?.as_arr()? {
+        g.nodes.push(node_from_json(n)?);
+    }
+    for (k, t) in j.req("initializers")?.as_obj()? {
+        g.initializers.insert(k.clone(), tensor_from_json(t)?);
+    }
+    for (k, vi) in j.req("value_info")?.as_obj()? {
+        g.value_info.insert(k.clone(), vi_from_json(vi)?);
+    }
+    Ok(g)
+}
+
+/// Write a model to disk.
+pub fn save_model(g: &ModelGraph, path: &str) -> Result<()> {
+    std::fs::write(path, model_to_json(g)).with_context(|| format!("writing {path}"))
+}
+
+/// Read a model from disk.
+pub fn load_model(path: &str) -> Result<ModelGraph> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    model_from_json(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::GraphBuilder;
+
+    #[test]
+    fn json_value_roundtrip() {
+        let src = r#"{"a": [1, 2.5, -3e2], "b": "hi\nthere", "c": {"d": true, "e": null}}"#;
+        let v = Json::parse(src).unwrap();
+        let re = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(v, re);
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap()[2].as_f64().unwrap(), -300.0);
+        assert_eq!(v.get("b").unwrap().as_str().unwrap(), "hi\nthere");
+    }
+
+    #[test]
+    fn json_rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("\"unterminated").is_err());
+        assert!(Json::parse("{}extra").is_err());
+    }
+
+    #[test]
+    fn float_precision_roundtrip() {
+        let t = Tensor::new(vec![3], vec![0.1, -1.0e-7, 3.4e38]);
+        let j = tensor_to_json(&t);
+        let back = tensor_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn model_roundtrip() {
+        let mut b = GraphBuilder::new("rt");
+        b.input("x", vec![1, 4]);
+        b.quant("x", "xq", 0.125, 0.0, 4.0, true, true, "ROUND");
+        b.node("Relu", &["xq"], &["y"], &[]);
+        b.output("y", vec![1, 4]);
+        let mut g = b.finish().unwrap();
+        g.set_tensor_datatype("xq", crate::datatypes::DataType::Int(4));
+        let text = model_to_json(&g);
+        let back = model_from_json(&text).unwrap();
+        assert_eq!(g, back);
+        assert_eq!(back.tensor_datatype("xq"), crate::datatypes::DataType::Int(4));
+    }
+
+    #[test]
+    fn model_roundtrip_via_disk() {
+        let mut b = GraphBuilder::new("disk");
+        b.input("x", vec![2, 2]);
+        b.initializer("w", Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]));
+        b.node("MatMul", &["x", "w"], &["y"], &[]);
+        b.output("y", vec![2, 2]);
+        let g = b.finish().unwrap();
+        let path = std::env::temp_dir().join("qonnx_rt_test.qonnx.json");
+        save_model(&g, path.to_str().unwrap()).unwrap();
+        let back = load_model(path.to_str().unwrap()).unwrap();
+        assert_eq!(g, back);
+    }
+}

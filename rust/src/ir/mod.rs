@@ -1,0 +1,25 @@
+//! The QONNX graph intermediate representation.
+//!
+//! An in-memory mirror of the ONNX GraphProto structure (nodes with named
+//! inputs/outputs, initializers, value infos) plus QONNX's per-tensor
+//! arbitrary-precision datatype annotations. Serialized as JSON
+//! (`.qonnx.json`) since protobuf is out of scope for this environment; the
+//! structure maps 1:1 onto ONNX protobuf fields.
+
+mod attr;
+mod builder;
+mod graph;
+pub mod json;
+mod node;
+
+pub use attr::AttrValue;
+pub use builder::GraphBuilder;
+pub use graph::{ModelGraph, ValueInfo};
+pub use node::Node;
+
+/// Operator domain for standard ONNX ops.
+pub const DOMAIN_ONNX: &str = "";
+/// Operator domain for QONNX dialect ops (Quant, BipolarQuant, Trunc).
+pub const DOMAIN_QONNX: &str = "qonnx.custom_op.general";
+/// Operator domain for FINN dialect ops (MultiThreshold, Im2Col).
+pub const DOMAIN_FINN: &str = "finn.custom_op.general";

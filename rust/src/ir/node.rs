@@ -1,0 +1,117 @@
+//! Graph node: the ONNX NodeProto analog.
+
+use super::attr::AttrValue;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+
+/// A single operator instance in the graph.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Node {
+    /// Unique node name within the graph (may be empty on import; the
+    /// cleanup pass assigns unique names).
+    pub name: String,
+    /// Operator type, e.g. `Conv`, `Quant`.
+    pub op_type: String,
+    /// Operator domain — `""` for standard ONNX, see [`crate::ir::DOMAIN_QONNX`].
+    pub domain: String,
+    /// Input tensor names; `""` marks an omitted optional input.
+    pub inputs: Vec<String>,
+    /// Output tensor names.
+    pub outputs: Vec<String>,
+    /// Attributes.
+    pub attrs: BTreeMap<String, AttrValue>,
+}
+
+impl Node {
+    pub fn new(op_type: &str, inputs: &[&str], outputs: &[&str]) -> Node {
+        Node {
+            name: String::new(),
+            op_type: op_type.to_string(),
+            domain: String::new(),
+            inputs: inputs.iter().map(|s| s.to_string()).collect(),
+            outputs: outputs.iter().map(|s| s.to_string()).collect(),
+            attrs: BTreeMap::new(),
+        }
+    }
+
+    pub fn with_domain(mut self, domain: &str) -> Node {
+        self.domain = domain.to_string();
+        self
+    }
+
+    pub fn with_name(mut self, name: &str) -> Node {
+        self.name = name.to_string();
+        self
+    }
+
+    pub fn with_attr(mut self, key: &str, value: impl Into<AttrValue>) -> Node {
+        self.attrs.insert(key.to_string(), value.into());
+        self
+    }
+
+    /// Required attribute lookup.
+    pub fn attr(&self, key: &str) -> Result<&AttrValue> {
+        self.attrs
+            .get(key)
+            .ok_or_else(|| anyhow!("node '{}' ({}) missing attribute '{key}'", self.name, self.op_type))
+    }
+
+    /// Integer attribute with default.
+    pub fn attr_int_or(&self, key: &str, default: i64) -> i64 {
+        self.attrs.get(key).and_then(|a| a.as_int().ok()).unwrap_or(default)
+    }
+
+    /// Float attribute with default.
+    pub fn attr_float_or(&self, key: &str, default: f32) -> f32 {
+        self.attrs.get(key).and_then(|a| a.as_float().ok()).unwrap_or(default)
+    }
+
+    /// String attribute with default.
+    pub fn attr_str_or(&self, key: &str, default: &str) -> String {
+        self.attrs
+            .get(key)
+            .and_then(|a| a.as_str().ok())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    /// Int-list attribute with default.
+    pub fn attr_ints_or(&self, key: &str, default: &[i64]) -> Vec<i64> {
+        self.attrs
+            .get(key)
+            .and_then(|a| a.as_ints().ok())
+            .map(|v| v.to_vec())
+            .unwrap_or_else(|| default.to_vec())
+    }
+
+    /// Non-empty (present) inputs.
+    pub fn present_inputs(&self) -> impl Iterator<Item = &str> {
+        self.inputs.iter().filter(|s| !s.is_empty()).map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_attrs() {
+        let n = Node::new("Quant", &["x", "s", "z", "bw"], &["y"])
+            .with_domain(crate::ir::DOMAIN_QONNX)
+            .with_name("q0")
+            .with_attr("signed", 1i64)
+            .with_attr("rounding_mode", "ROUND");
+        assert_eq!(n.op_type, "Quant");
+        assert_eq!(n.attr("signed").unwrap().as_int().unwrap(), 1);
+        assert_eq!(n.attr_str_or("rounding_mode", "FLOOR"), "ROUND");
+        assert_eq!(n.attr_int_or("narrow", 0), 0);
+        assert!(n.attr("missing").is_err());
+    }
+
+    #[test]
+    fn optional_inputs_skipped() {
+        let n = Node::new("Conv", &["x", "w", ""], &["y"]);
+        let present: Vec<&str> = n.present_inputs().collect();
+        assert_eq!(present, vec!["x", "w"]);
+    }
+}

@@ -1,0 +1,30 @@
+//! # qonnx — Arbitrary-Precision Quantized Neural Network toolkit
+//!
+//! A Rust implementation of the QONNX intermediate representation and
+//! compiler toolchain from *"QONNX: Representing Arbitrary-Precision
+//! Quantized Neural Networks"* (Pappalardo et al., 2022), plus a
+//! PJRT-backed inference runtime fed by JAX/Pallas AOT artifacts.
+//!
+//! Layer map (see DESIGN.md):
+//! * [`datatypes`], [`tensor`], [`ir`] — the IR substrate.
+//! * [`ops`], [`exec`] — operator semantics + reference executor.
+//! * [`transforms`] — graph passes (cleanup, shape inference, lowering).
+//! * [`metrics`], [`zoo`], [`training`] — model zoo, BOPs/MACs, QAT.
+//! * [`formats`] — the six ONNX-based QNN format descriptors (Table I).
+//! * [`runtime`], [`coordinator`] — PJRT artifact execution + serving.
+
+pub mod bench_support;
+pub mod cli;
+pub mod coordinator;
+pub mod datatypes;
+pub mod exec;
+pub mod formats;
+pub mod ir;
+pub mod metrics;
+pub mod ops;
+pub mod runtime;
+pub mod tensor;
+pub mod testutil;
+pub mod training;
+pub mod transforms;
+pub mod zoo;

@@ -1,0 +1,9 @@
+//! `qonnx` binary: CLI over the QONNX toolkit (see `qonnx help`).
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = qonnx::cli::run(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

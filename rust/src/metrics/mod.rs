@@ -1,0 +1,225 @@
+//! Model complexity metrics: MACs, BOPs (paper Eq. 5), weight counts and
+//! total weight bits — the columns of Table III and the axes of Fig. 5.
+//!
+//! BOPs for one convolutional layer with `b_w`-bit weights, `b_a`-bit
+//! activations, `n` input channels, `m` output channels and `k×k` filters
+//! (Eq. 5, from Baskin et al.):
+//!
+//! ```text
+//! BOPs ≈ m n k² (b_a b_w + b_a + b_w + log2(n k²))
+//! ```
+//!
+//! applied per output position (conv layers multiply by `oh·ow`; fully
+//! connected layers use `k = 1` and a single position). We also report the
+//! simpler MAC-weighted metric `Σ MACs·b_a·b_w` since published zoo
+//! numbers mix conventions; EXPERIMENTS.md compares both against Table III.
+
+use crate::datatypes::DataType;
+use crate::ir::ModelGraph;
+use anyhow::Result;
+
+/// Per-layer complexity report.
+#[derive(Debug, Clone)]
+pub struct LayerReport {
+    pub node_name: String,
+    pub op_type: String,
+    /// multiply-accumulates
+    pub macs: u64,
+    /// Eq. 5 bit operations
+    pub bops: f64,
+    /// MACs · b_a · b_w
+    pub mac_bops: f64,
+    pub weights: u64,
+    pub weight_bits: u32,
+    pub act_bits: u32,
+}
+
+/// Whole-model complexity report (Table III row).
+#[derive(Debug, Clone, Default)]
+pub struct ModelReport {
+    pub model_name: String,
+    pub layers: Vec<LayerReport>,
+}
+
+impl ModelReport {
+    pub fn macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs).sum()
+    }
+    pub fn bops(&self) -> f64 {
+        self.layers.iter().map(|l| l.bops).sum()
+    }
+    pub fn mac_bops(&self) -> f64 {
+        self.layers.iter().map(|l| l.mac_bops).sum()
+    }
+    pub fn weights(&self) -> u64 {
+        self.layers.iter().map(|l| l.weights).sum()
+    }
+    pub fn total_weight_bits(&self) -> u64 {
+        self.layers.iter().map(|l| l.weights * u64::from(l.weight_bits)).sum()
+    }
+}
+
+/// Eq. 5 for a single output position.
+pub fn bops_eq5(m: u64, n: u64, k: u64, b_a: u32, b_w: u32) -> f64 {
+    let nk2 = (n * k * k) as f64;
+    (m as f64) * nk2 * ((b_a * b_w) as f64 + b_a as f64 + b_w as f64 + nk2.log2())
+}
+
+/// Bit width of the quantization feeding tensor `name`: from a producing
+/// `Quant`/`BipolarQuant`/`MultiThreshold`, a datatype annotation, or 32.
+fn tensor_bits(graph: &ModelGraph, name: &str) -> u32 {
+    if let Some(p) = graph.producer(name) {
+        let node = &graph.nodes[p];
+        match node.op_type.as_str() {
+            "Quant" => {
+                if let Some(t) = graph.initializer(&node.inputs[3]) {
+                    if let Ok(v) = t.scalar_value() {
+                        return v.ceil() as u32;
+                    }
+                }
+            }
+            "BipolarQuant" => return 1,
+            "MultiThreshold" => {
+                if let Some(t) = graph.initializer(&node.inputs[1]) {
+                    let steps = t.shape()[1] as f64;
+                    return (steps + 1.0).log2().ceil().max(1.0) as u32;
+                }
+            }
+            // look through shape-preserving / normalization ops
+            "Reshape" | "Flatten" | "Transpose" | "MaxPool" | "Identity" | "Relu"
+            | "BatchNormalization" | "Squeeze" | "Unsqueeze" | "Pad" => {
+                return tensor_bits(graph, &node.inputs[0]);
+            }
+            _ => {}
+        }
+    }
+    match graph.tensor_datatype(name) {
+        DataType::Float32 => 32,
+        dt => dt.bitwidth(),
+    }
+}
+
+/// Analyze a model graph (shapes must be inferred for conv spatial dims).
+pub fn analyze(graph: &ModelGraph) -> Result<ModelReport> {
+    let mut report = ModelReport { model_name: graph.name.clone(), ..Default::default() };
+    for node in &graph.nodes {
+        let (m, n, k, positions, weights) = match node.op_type.as_str() {
+            "Conv" | "QLinearConv" | "ConvInteger" => {
+                let w_name = if node.op_type == "Conv" { &node.inputs[1] } else { &node.inputs[3] };
+                let Some(ws) = graph.tensor_shape(w_name) else { continue };
+                // weights [M, C/g, kh, kw]
+                let (m, cg, kh, kw) = (ws[0], ws[1], ws[2], ws[3]);
+                let Some(os) = graph.tensor_shape(&node.outputs[0]) else { continue };
+                let positions = if os.len() == 4 { os[2] * os[3] } else { 1 };
+                debug_assert!(kh == kw || kh != kw); // arbitrary kernels allowed
+                (m as u64, cg as u64, kh as u64, positions as u64, (m * cg * kh * kw) as u64)
+            }
+            "MatMul" | "Gemm" | "QLinearMatMul" | "MatMulInteger" => {
+                let w_name = if node.op_type == "QLinearMatMul" { &node.inputs[3] } else { &node.inputs[1] };
+                let Some(ws) = graph.tensor_shape(w_name) else { continue };
+                if ws.len() != 2 {
+                    continue;
+                }
+                let (kdim, m) = if node.op_type == "Gemm" && node.attr_int_or("transB", 0) != 0 {
+                    (ws[1], ws[0])
+                } else {
+                    (ws[0], ws[1])
+                };
+                (m as u64, kdim as u64, 1u64, 1u64, (kdim * m) as u64)
+            }
+            _ => continue,
+        };
+        let w_name = if matches!(node.op_type.as_str(), "QLinearConv" | "QLinearMatMul") {
+            &node.inputs[3]
+        } else {
+            &node.inputs[1]
+        };
+        let b_w = tensor_bits(graph, w_name);
+        let b_a = tensor_bits(graph, &node.inputs[0]);
+        let macs = m * n * k * k * positions;
+        report.layers.push(LayerReport {
+            node_name: node.name.clone(),
+            op_type: node.op_type.clone(),
+            macs,
+            bops: bops_eq5(m, n, k, b_a, b_w) * positions as f64,
+            mac_bops: macs as f64 * f64::from(b_a) * f64::from(b_w),
+            weights,
+            weight_bits: b_w,
+            act_bits: b_a,
+        });
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::GraphBuilder;
+    use crate::tensor::Tensor;
+    use crate::transforms::cleanup;
+
+    #[test]
+    fn bops_eq5_fc_layer() {
+        // FC: k=1, n=64, m=64, 1-bit/1-bit: 64·64·(1+1+1+6) = 36864
+        assert_eq!(bops_eq5(64, 64, 1, 1, 1), 36864.0);
+    }
+
+    #[test]
+    fn analyze_quantized_mlp() {
+        let mut b = GraphBuilder::new("mlp");
+        b.input("x", vec![1, 784]);
+        b.quant("x", "xq", 1.0, 0.0, 8.0, false, false, "ROUND");
+        b.initializer("w1", Tensor::zeros(vec![784, 64]));
+        b.quant("w1", "w1q", 1.0, 0.0, 2.0, true, false, "ROUND");
+        b.node("MatMul", &["xq", "w1q"], &["h"], &[]);
+        b.quant("h", "hq", 1.0, 0.0, 2.0, true, false, "ROUND");
+        b.initializer("w2", Tensor::zeros(vec![64, 10]));
+        b.quant("w2", "w2q", 1.0, 0.0, 2.0, true, false, "ROUND");
+        b.node("MatMul", &["hq", "w2q"], &["y"], &[]);
+        b.output("y", vec![1, 10]);
+        let mut g = b.finish().unwrap();
+        cleanup(&mut g).unwrap();
+        let r = analyze(&g).unwrap();
+        assert_eq!(r.layers.len(), 2);
+        assert_eq!(r.macs(), 784 * 64 + 64 * 10);
+        assert_eq!(r.weights(), 784 * 64 + 64 * 10);
+        assert_eq!(r.total_weight_bits(), (784 * 64 + 64 * 10) * 2);
+        // first layer: 8-bit act, 2-bit weights
+        assert_eq!(r.layers[0].act_bits, 8);
+        assert_eq!(r.layers[0].weight_bits, 2);
+        assert_eq!(r.layers[1].act_bits, 2);
+        assert_eq!(r.layers[0].mac_bops, (784.0 * 64.0) * 16.0);
+    }
+
+    #[test]
+    fn analyze_conv_counts_spatial_positions() {
+        let mut b = GraphBuilder::new("c");
+        b.input("x", vec![1, 3, 32, 32]);
+        b.initializer("w", Tensor::zeros(vec![64, 3, 3, 3]));
+        b.node("Conv", &["x", "w"], &["y"], &[("kernel_shape", vec![3i64, 3].into())]);
+        b.output_unknown("y");
+        let mut g = b.finish().unwrap();
+        cleanup(&mut g).unwrap();
+        let r = analyze(&g).unwrap();
+        // out 30x30: 64·3·9·900
+        assert_eq!(r.macs(), 64 * 3 * 9 * 900);
+        assert_eq!(r.weights(), 1728);
+        // float weights: 32-bit
+        assert_eq!(r.total_weight_bits(), 1728 * 32);
+    }
+
+    #[test]
+    fn bits_seen_through_batchnorm_and_pool() {
+        let mut b = GraphBuilder::new("bn");
+        b.input("x", vec![1, 4, 4, 4]);
+        b.quant("x", "xq", 1.0, 0.0, 3.0, true, false, "ROUND");
+        b.node("MaxPool", &["xq"], &["p"], &[("kernel_shape", vec![2i64, 2].into())]);
+        b.initializer("w", Tensor::zeros(vec![8, 4, 1, 1]));
+        b.node("Conv", &["p", "w"], &["y"], &[("kernel_shape", vec![1i64, 1].into())]);
+        b.output_unknown("y");
+        let mut g = b.finish().unwrap();
+        cleanup(&mut g).unwrap();
+        let r = analyze(&g).unwrap();
+        assert_eq!(r.layers[0].act_bits, 3);
+    }
+}

@@ -1,0 +1,164 @@
+//! Elementwise operators: activations, broadcast arithmetic, batch norm.
+
+use crate::ir::Node;
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+
+pub fn relu(_node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    Ok(vec![inputs[0].map(|v| v.max(0.0))?])
+}
+
+pub fn sign(_node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    Ok(vec![inputs[0].map(|v| {
+        if v > 0.0 {
+            1.0
+        } else if v < 0.0 {
+            -1.0
+        } else {
+            0.0
+        }
+    })?])
+}
+
+pub fn sigmoid(_node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    Ok(vec![inputs[0].map(|v| 1.0 / (1.0 + (-v).exp()))?])
+}
+
+pub fn tanh(_node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    Ok(vec![inputs[0].map(f32::tanh)?])
+}
+
+/// `Softmax` along `axis` (default -1), numerically stabilized.
+pub fn softmax(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    let x = inputs[0];
+    let rank = x.rank() as i64;
+    let mut axis = node.attr_int_or("axis", -1);
+    if axis < 0 {
+        axis += rank;
+    }
+    ensure!(axis == rank - 1, "Softmax only supported along the last axis");
+    let inner = *x.shape().last().unwrap();
+    let outer = x.numel() / inner;
+    let src = x.as_f32()?;
+    let mut out = vec![0f32; x.numel()];
+    for r in 0..outer {
+        let row = &src[r * inner..(r + 1) * inner];
+        let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0f32;
+        for (i, &v) in row.iter().enumerate() {
+            let e = (v - m).exp();
+            out[r * inner + i] = e;
+            denom += e;
+        }
+        for v in &mut out[r * inner..(r + 1) * inner] {
+            *v /= denom;
+        }
+    }
+    Ok(vec![Tensor::new(x.shape().to_vec(), out)])
+}
+
+pub fn add(_node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    Ok(vec![inputs[0].binary_op(inputs[1], |a, b| a + b)?])
+}
+
+pub fn sub(_node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    Ok(vec![inputs[0].binary_op(inputs[1], |a, b| a - b)?])
+}
+
+pub fn mul(_node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    Ok(vec![inputs[0].binary_op(inputs[1], |a, b| a * b)?])
+}
+
+pub fn div(_node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    Ok(vec![inputs[0].binary_op(inputs[1], |a, b| a / b)?])
+}
+
+/// Inference-mode `BatchNormalization(x, scale, bias, mean, var)`.
+pub fn batch_norm(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    ensure!(inputs.len() == 5, "BatchNormalization wants 5 inputs");
+    let (x, scale, bias, mean, var) = (inputs[0], inputs[1], inputs[2], inputs[3], inputs[4]);
+    let eps = node.attr_float_or("epsilon", 1e-5);
+    let c = scale.numel();
+    // reshape channel params to broadcast over NCHW (or [N, C] for dense);
+    // the channels-last wrapper (`data_layout = "NHWC"`) broadcasts over
+    // the trailing channel axis instead.
+    let nhwc = node.attr_str_or("data_layout", "NCHW") == "NHWC";
+    let bshape = if x.rank() == 4 && !nhwc { vec![1, c, 1, 1] } else { vec![c] };
+    let scale_b = scale.reshape(bshape.clone())?;
+    let bias_b = bias.reshape(bshape.clone())?;
+    let mean_b = mean.reshape(bshape.clone())?;
+    let var_b = var.reshape(bshape)?;
+    let centered = x.binary_op(&mean_b, |a, m| a - m)?;
+    let denom = var_b.map(|v| (v + eps).sqrt())?;
+    let normed = centered.binary_op(&denom, |a, d| a / d)?;
+    let scaled = normed.binary_op(&scale_b, |a, s| a * s)?;
+    Ok(vec![scaled.binary_op(&bias_b, |a, b| a + b)?])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: Vec<f32>) -> Tensor {
+        let n = v.len();
+        Tensor::new(vec![n], v)
+    }
+
+    #[test]
+    fn activations() {
+        let x = t(vec![-1.0, 0.0, 2.0]);
+        let n = Node::new("Relu", &["x"], &["y"]);
+        assert_eq!(relu(&n, &[&x]).unwrap()[0].as_f32().unwrap(), &[0.0, 0.0, 2.0]);
+        assert_eq!(sign(&n, &[&x]).unwrap()[0].as_f32().unwrap(), &[-1.0, 0.0, 1.0]);
+        let s = sigmoid(&n, &[&t(vec![0.0])]).unwrap();
+        assert!((s[0].as_f32().unwrap()[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let n = Node::new("Softmax", &["x"], &["y"]);
+        let x = Tensor::new(vec![2, 3], vec![1., 2., 3., 1000., 1000., 1000.]);
+        let y = softmax(&n, &[&x]).unwrap();
+        let v = y[0].as_f32().unwrap();
+        assert!((v[0..3].iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        // large values don't overflow (stabilized)
+        assert!((v[3] - 1.0 / 3.0).abs() < 1e-5);
+        assert!(v[2] > v[1] && v[1] > v[0]);
+    }
+
+    #[test]
+    fn arithmetic_broadcast() {
+        let n = Node::new("Add", &["a", "b"], &["y"]);
+        let a = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::scalar(10.0);
+        assert_eq!(add(&n, &[&a, &b]).unwrap()[0].as_f32().unwrap(), &[11., 12., 13., 14.]);
+        assert_eq!(sub(&n, &[&a, &b]).unwrap()[0].as_f32().unwrap(), &[-9., -8., -7., -6.]);
+        assert_eq!(mul(&n, &[&a, &b]).unwrap()[0].as_f32().unwrap(), &[10., 20., 30., 40.]);
+        assert_eq!(div(&n, &[&a, &b]).unwrap()[0].as_f32().unwrap(), &[0.1, 0.2, 0.3, 0.4]);
+    }
+
+    #[test]
+    fn batch_norm_normalizes() {
+        let n = Node::new("BatchNormalization", &["x", "s", "b", "m", "v"], &["y"]);
+        let x = Tensor::new(vec![1, 2, 1, 1], vec![4.0, 10.0]);
+        let scale = t(vec![1.0, 2.0]);
+        let bias = t(vec![0.0, 1.0]);
+        let mean = t(vec![4.0, 8.0]);
+        let var = t(vec![1.0, 4.0]);
+        let y = batch_norm(&n, &[&x, &scale, &bias, &mean, &var]).unwrap();
+        let v = y[0].as_f32().unwrap();
+        assert!((v[0] - 0.0).abs() < 1e-3);
+        assert!((v[1] - 3.0).abs() < 1e-3); // (10-8)/2 * 2 + 1
+    }
+
+    #[test]
+    fn batch_norm_dense_rank2() {
+        let n = Node::new("BatchNormalization", &["x", "s", "b", "m", "v"], &["y"]);
+        let x = Tensor::new(vec![1, 2], vec![1.0, 2.0]);
+        let one = t(vec![1.0, 1.0]);
+        let zero = t(vec![0.0, 0.0]);
+        let y = batch_norm(&n, &[&x, &one, &zero, &zero, &one]).unwrap();
+        let v = y[0].as_f32().unwrap();
+        assert!((v[0] - 1.0).abs() < 1e-3 && (v[1] - 2.0).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,236 @@
+//! Linear-algebra operators: `Conv` (im2col + GEMM, with groups for
+//! depthwise-separable MobileNet), `Gemm`, `MatMul`.
+
+use crate::ir::Node;
+use crate::tensor::{conv_out_dim, gemm, im2col_nchw, Tensor};
+use anyhow::{ensure, Result};
+
+/// Resolve conv hyper-parameters from attributes.
+struct ConvParams {
+    kh: usize,
+    kw: usize,
+    stride_h: usize,
+    stride_w: usize,
+    pads: [usize; 4], // top, left, bottom, right
+    group: usize,
+}
+
+fn conv_params(node: &Node, w_shape: &[usize]) -> Result<ConvParams> {
+    let ks = node.attr_ints_or("kernel_shape", &[w_shape[2] as i64, w_shape[3] as i64]);
+    ensure!(ks.len() == 2, "only 2-D conv supported, kernel_shape {ks:?}");
+    let strides = node.attr_ints_or("strides", &[1, 1]);
+    let pads = node.attr_ints_or("pads", &[0, 0, 0, 0]);
+    ensure!(pads.len() == 4, "pads must be [t,l,b,r]");
+    let dil = node.attr_ints_or("dilations", &[1, 1]);
+    ensure!(dil.iter().all(|&d| d == 1), "dilations != 1 unsupported");
+    Ok(ConvParams {
+        kh: ks[0] as usize,
+        kw: ks[1] as usize,
+        stride_h: strides[0] as usize,
+        stride_w: strides[1] as usize,
+        pads: [pads[0] as usize, pads[1] as usize, pads[2] as usize, pads[3] as usize],
+        group: node.attr_int_or("group", 1) as usize,
+    })
+}
+
+/// Shared conv implementation (also used by `QLinearConv`/`ConvInteger`).
+/// `x` NCHW, `w` [M, C/group, kh, kw], optional bias `[M]`.
+pub fn conv_impl(node: &Node, x: &Tensor, w: &Tensor, bias: Option<&Tensor>) -> Result<Tensor> {
+    ensure!(x.rank() == 4, "Conv input must be NCHW, got {:?}", x.shape());
+    ensure!(w.rank() == 4, "Conv weight must be [M,C/g,kh,kw], got {:?}", w.shape());
+    let p = conv_params(node, w.shape())?;
+    let (n, c, h, width) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let m = w.shape()[0];
+    let cg = w.shape()[1];
+    ensure!(c == cg * p.group, "channel mismatch: x has {c}, w wants {} x group {}", cg, p.group);
+    ensure!(m % p.group == 0, "output channels {m} not divisible by group {}", p.group);
+    let oh = conv_out_dim(h, p.kh, p.stride_h, p.pads[0], p.pads[2]);
+    let ow = conv_out_dim(width, p.kw, p.stride_w, p.pads[1], p.pads[3]);
+    let mg = m / p.group;
+
+    let mut out = vec![0f32; n * m * oh * ow];
+    let ws = w.as_f32()?;
+    let xs = x.as_f32()?;
+    for g in 0..p.group {
+        // slice input channels for this group into a temp NCHW tensor
+        let x_g = if p.group == 1 {
+            x.clone()
+        } else {
+            let mut data = Vec::with_capacity(n * cg * h * width);
+            for b in 0..n {
+                let base = (b * c + g * cg) * h * width;
+                data.extend_from_slice(&xs[base..base + cg * h * width]);
+            }
+            Tensor::new(vec![n, cg, h, width], data)
+        };
+        let cols = im2col_nchw(&x_g, p.kh, p.kw, p.stride_h, p.stride_w, p.pads[0], p.pads[1], p.pads[2], p.pads[3])?;
+        // weights for this group as [mg, cg*kh*kw], transposed to [k, mg]
+        let k = cg * p.kh * p.kw;
+        let mut wt = vec![0f32; k * mg];
+        for mi in 0..mg {
+            let wrow = &ws[(g * mg + mi) * k..(g * mg + mi + 1) * k];
+            for (ki, &wv) in wrow.iter().enumerate() {
+                wt[ki * mg + mi] = wv;
+            }
+        }
+        // cols [n*oh*ow, k] x wt [k, mg] -> [n*oh*ow, mg]
+        let rows = n * oh * ow;
+        let mut prod = vec![0f32; rows * mg];
+        gemm(rows, k, mg, cols.as_f32()?, &wt, &mut prod);
+        // scatter into NCHW out
+        for b in 0..n {
+            for mi in 0..mg {
+                let oc = g * mg + mi;
+                let dst_base = (b * m + oc) * oh * ow;
+                for pix in 0..oh * ow {
+                    out[dst_base + pix] = prod[(b * oh * ow + pix) * mg + mi];
+                }
+            }
+        }
+    }
+    let mut result = Tensor::new(vec![n, m, oh, ow], out);
+    if let Some(b) = bias {
+        ensure!(b.numel() == m, "bias length {} != output channels {m}", b.numel());
+        let b4 = b.reshape(vec![1, m, 1, 1])?;
+        result = result.binary_op(&b4, |a, c| a + c)?;
+    }
+    Ok(result)
+}
+
+/// ONNX `Conv`, plus the QONNX channels-last wrapper: with
+/// `data_layout = "NHWC"` the node consumes/produces NHWC tensors (weights
+/// stay OIHW) — the paper's Fig. 3 wrapper-node mechanism.
+pub fn conv(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    ensure!(inputs.len() >= 2, "Conv wants >= 2 inputs");
+    let bias = inputs.get(2).copied();
+    if node.attr_str_or("data_layout", "NCHW") == "NHWC" {
+        let x = crate::tensor::nhwc_to_nchw(inputs[0])?;
+        let y = conv_impl(node, &x, inputs[1], bias)?;
+        return Ok(vec![crate::tensor::nchw_to_nhwc(&y)?]);
+    }
+    Ok(vec![conv_impl(node, inputs[0], inputs[1], bias)?])
+}
+
+/// ONNX `Gemm`: `alpha * A' B' + beta * C`.
+pub fn gemm_op(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    ensure!(inputs.len() >= 2, "Gemm wants >= 2 inputs");
+    let alpha = node.attr_float_or("alpha", 1.0);
+    let beta = node.attr_float_or("beta", 1.0);
+    let a = if node.attr_int_or("transA", 0) != 0 { inputs[0].transpose(&[1, 0])? } else { inputs[0].clone() };
+    let b = if node.attr_int_or("transB", 0) != 0 { inputs[1].transpose(&[1, 0])? } else { inputs[1].clone() };
+    let mut y = a.matmul2d(&b)?;
+    if alpha != 1.0 {
+        y = y.map(|v| v * alpha)?;
+    }
+    if let Some(c) = inputs.get(2) {
+        let scaled_c = if beta != 1.0 { c.map(|v| v * beta)? } else { (*c).clone() };
+        y = y.binary_op(&scaled_c, |p, q| p + q)?;
+    }
+    Ok(vec![y])
+}
+
+/// ONNX `MatMul` (2-D, plus batched 3-D lhs over shared 2-D rhs).
+pub fn matmul(_node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    ensure!(inputs.len() == 2, "MatMul wants 2 inputs");
+    let (a, b) = (inputs[0], inputs[1]);
+    if a.rank() == 2 && b.rank() == 2 {
+        return Ok(vec![a.matmul2d(b)?]);
+    }
+    // batched lhs [batch.., m, k] x rhs [k, n]
+    ensure!(b.rank() == 2 && a.rank() > 2, "unsupported MatMul ranks {:?} x {:?}", a.shape(), b.shape());
+    let k = *a.shape().last().unwrap();
+    let rows: usize = a.numel() / k;
+    let flat = a.reshape(vec![rows, k])?;
+    let y = flat.matmul2d(b)?;
+    let mut out_shape = a.shape().to_vec();
+    *out_shape.last_mut().unwrap() = b.shape()[1];
+    Ok(vec![y.reshape(out_shape)?])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_3x3_identity_kernel() {
+        let n = Node::new("Conv", &["x", "w"], &["y"])
+            .with_attr("kernel_shape", vec![3i64, 3])
+            .with_attr("pads", vec![1i64, 1, 1, 1]);
+        let x = Tensor::new(vec![1, 1, 3, 3], (1..=9).map(|v| v as f32).collect());
+        // delta kernel: passes input through
+        let mut wdata = vec![0f32; 9];
+        wdata[4] = 1.0;
+        let w = Tensor::new(vec![1, 1, 3, 3], wdata);
+        let y = conv(&n, &[&x, &w]).unwrap();
+        assert_eq!(y[0].shape(), &[1, 1, 3, 3]);
+        assert_eq!(y[0].as_f32().unwrap(), x.as_f32().unwrap());
+    }
+
+    #[test]
+    fn conv_sum_kernel_no_pad() {
+        let n = Node::new("Conv", &["x", "w"], &["y"]).with_attr("kernel_shape", vec![2i64, 2]);
+        let x = Tensor::new(vec![1, 1, 2, 2], vec![1., 2., 3., 4.]);
+        let w = Tensor::new(vec![1, 1, 2, 2], vec![1., 1., 1., 1.]);
+        let y = conv(&n, &[&x, &w]).unwrap();
+        assert_eq!(y[0].shape(), &[1, 1, 1, 1]);
+        assert_eq!(y[0].as_f32().unwrap(), &[10.0]);
+    }
+
+    #[test]
+    fn conv_bias_and_multichannel() {
+        let n = Node::new("Conv", &["x", "w", "b"], &["y"]).with_attr("kernel_shape", vec![1i64, 1]);
+        let x = Tensor::new(vec![1, 2, 1, 1], vec![3.0, 5.0]);
+        let w = Tensor::new(vec![2, 2, 1, 1], vec![1.0, 1.0, 2.0, 0.0]);
+        let b = Tensor::new(vec![2], vec![10.0, 20.0]);
+        let y = conv(&n, &[&x, &w, &b]).unwrap();
+        assert_eq!(y[0].as_f32().unwrap(), &[18.0, 26.0]);
+    }
+
+    #[test]
+    fn depthwise_conv_groups() {
+        // group = channels: each channel convolved independently (MobileNet)
+        let n = Node::new("Conv", &["x", "w"], &["y"])
+            .with_attr("kernel_shape", vec![1i64, 1])
+            .with_attr("group", 2i64);
+        let x = Tensor::new(vec![1, 2, 1, 2], vec![1., 2., 3., 4.]);
+        let w = Tensor::new(vec![2, 1, 1, 1], vec![10.0, 100.0]);
+        let y = conv(&n, &[&x, &w]).unwrap();
+        assert_eq!(y[0].as_f32().unwrap(), &[10., 20., 300., 400.]);
+    }
+
+    #[test]
+    fn conv_stride_output_shape() {
+        let n = Node::new("Conv", &["x", "w"], &["y"])
+            .with_attr("kernel_shape", vec![3i64, 3])
+            .with_attr("strides", vec![2i64, 2])
+            .with_attr("pads", vec![1i64, 1, 1, 1]);
+        let x = Tensor::zeros(vec![1, 3, 32, 32]);
+        let w = Tensor::zeros(vec![8, 3, 3, 3]);
+        let y = conv(&n, &[&x, &w]).unwrap();
+        assert_eq!(y[0].shape(), &[1, 8, 16, 16]);
+    }
+
+    #[test]
+    fn gemm_full() {
+        let n = Node::new("Gemm", &["a", "b", "c"], &["y"])
+            .with_attr("alpha", 2.0f32)
+            .with_attr("beta", 3.0f32)
+            .with_attr("transB", 1i64);
+        let a = Tensor::new(vec![1, 2], vec![1.0, 2.0]);
+        let b = Tensor::new(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]); // transB: same
+        let c = Tensor::new(vec![1, 2], vec![1.0, 1.0]);
+        let y = gemm_op(&n, &[&a, &b, &c]).unwrap();
+        // 2*[1,2] + 3*[1,1] = [5,7]
+        assert_eq!(y[0].as_f32().unwrap(), &[5.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_batched() {
+        let n = Node::new("MatMul", &["a", "b"], &["y"]);
+        let a = Tensor::new(vec![2, 1, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::new(vec![2, 1], vec![1., 1.]);
+        let y = matmul(&n, &[&a, &b]).unwrap();
+        assert_eq!(y[0].shape(), &[2, 1, 1]);
+        assert_eq!(y[0].as_f32().unwrap(), &[3.0, 7.0]);
+    }
+}

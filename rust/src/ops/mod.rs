@@ -1,0 +1,108 @@
+//! Operator semantics.
+//!
+//! Each operator is a pure function `(node, inputs) -> outputs` over
+//! [`Tensor`]s. The registry dispatches on `op_type`; domains are used by
+//! the executor to optionally *restrict* the available op set (e.g. to
+//! prove the paper's claim that QCDQ graphs run on a standard-ONNX-only
+//! backend).
+//!
+//! Families:
+//! * [`quant`] — the QONNX dialect: `Quant`, `BipolarQuant`, `Trunc` (Table II).
+//! * [`qlinear`] — ONNX quantization ops: `QuantizeLinear`,
+//!   `DequantizeLinear`, `Clip`, `QLinearConv`, `QLinearMatMul`,
+//!   `ConvInteger`, `MatMulInteger`.
+//! * [`linalg`] — `Conv`, `Gemm`, `MatMul`.
+//! * [`pool`] — `MaxPool`, `AveragePool`, `GlobalAveragePool`.
+//! * [`eltwise`] — activations, broadcast arithmetic, `BatchNormalization`.
+//! * [`shape_ops`] — structural ops (`Reshape`, `Transpose`, `Shape`, ...).
+//! * [`multithreshold`] — FINN dialect `MultiThreshold`.
+
+pub mod eltwise;
+pub mod linalg;
+pub mod multithreshold;
+pub mod pool;
+pub mod qlinear;
+pub mod quant;
+pub mod shape_ops;
+
+use crate::ir::Node;
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+/// Operator implementation signature.
+pub type OpFn = fn(&Node, &[&Tensor]) -> Result<Vec<Tensor>>;
+
+/// Look up the implementation for an op type. Returns `None` for unknown
+/// ops (the executor reports these with node context).
+pub fn lookup(op_type: &str) -> Option<OpFn> {
+    Some(match op_type {
+        // QONNX dialect
+        "Quant" => quant::quant_op,
+        "BipolarQuant" => quant::bipolar_quant_op,
+        "Trunc" => quant::trunc_op,
+        // ONNX quantization
+        "QuantizeLinear" => qlinear::quantize_linear,
+        "DequantizeLinear" => qlinear::dequantize_linear,
+        "Clip" => qlinear::clip,
+        "QLinearConv" => qlinear::qlinear_conv,
+        "QLinearMatMul" => qlinear::qlinear_matmul,
+        "ConvInteger" => qlinear::conv_integer,
+        "MatMulInteger" => qlinear::matmul_integer,
+        // linear algebra
+        "Conv" => linalg::conv,
+        "Gemm" => linalg::gemm_op,
+        "MatMul" => linalg::matmul,
+        // pooling
+        "MaxPool" => pool::max_pool,
+        "AveragePool" => pool::average_pool,
+        "GlobalAveragePool" => pool::global_average_pool,
+        // elementwise
+        "Relu" => eltwise::relu,
+        "Sign" => eltwise::sign,
+        "Sigmoid" => eltwise::sigmoid,
+        "Tanh" => eltwise::tanh,
+        "Softmax" => eltwise::softmax,
+        "Add" => eltwise::add,
+        "Sub" => eltwise::sub,
+        "Mul" => eltwise::mul,
+        "Div" => eltwise::div,
+        "BatchNormalization" => eltwise::batch_norm,
+        // structural
+        "Reshape" => shape_ops::reshape,
+        "Transpose" => shape_ops::transpose,
+        "Flatten" => shape_ops::flatten,
+        "Pad" => shape_ops::pad,
+        "Concat" => shape_ops::concat,
+        "Shape" => shape_ops::shape_op,
+        "Gather" => shape_ops::gather,
+        "Unsqueeze" => shape_ops::unsqueeze,
+        "Squeeze" => shape_ops::squeeze,
+        "Identity" => shape_ops::identity,
+        "Constant" => shape_ops::constant,
+        "ArgMax" => shape_ops::argmax,
+        // FINN dialect
+        "MultiThreshold" => multithreshold::multi_threshold,
+        _ => return None,
+    })
+}
+
+/// Execute one node against resolved input tensors.
+pub fn execute_node(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    match lookup(&node.op_type) {
+        Some(f) => f(node, inputs),
+        None => bail!("no implementation for op '{}' (node '{}')", node.op_type, node.name),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_dialects() {
+        for op in ["Quant", "BipolarQuant", "Trunc", "MultiThreshold", "Conv", "QLinearConv"] {
+            assert!(lookup(op).is_some(), "{op} missing");
+        }
+        assert!(lookup("NotAnOp").is_none());
+    }
+}

@@ -1,0 +1,146 @@
+//! FINN dialect `MultiThreshold` (paper §VI-D).
+//!
+//! FINN expresses an arbitrarily-quantized activation as a multi-step
+//! function: `y = out_scale * count(x >= T[c, i]) + out_bias`, with one row
+//! of sorted thresholds per channel. Converting `Quant` activations into
+//! `MultiThreshold` is how QONNX enters the FINN compiler.
+
+use crate::ir::Node;
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+
+/// Count thresholds `<= x` via binary search over a sorted row.
+#[inline]
+pub fn threshold_count(row: &[f32], x: f32) -> usize {
+    // partition point: number of t with x >= t
+    let mut lo = 0usize;
+    let mut hi = row.len();
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if x >= row[mid] {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// `MultiThreshold(x, thresholds) -> y`.
+///
+/// * `x`: `[N, C, ...]` (channels-first) or `[N, ..., C]` with
+///   `data_layout = "NHWC"`, or `[N, C]` dense.
+/// * `thresholds`: `[C, T]` or `[1, T]` (shared across channels), rows
+///   sorted ascending.
+/// * attrs: `out_scale` (default 1.0), `out_bias` (default 0.0).
+pub fn multi_threshold(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    ensure!(inputs.len() == 2, "MultiThreshold wants 2 inputs");
+    let (x, th) = (inputs[0], inputs[1]);
+    ensure!(th.rank() == 2, "thresholds must be [C, T], got {:?}", th.shape());
+    let out_scale = node.attr_float_or("out_scale", 1.0);
+    let out_bias = node.attr_float_or("out_bias", 0.0);
+    let layout = node.attr_str_or("data_layout", "NCHW");
+
+    let (tc, tt) = (th.shape()[0], th.shape()[1]);
+    let ths = th.as_f32()?;
+    for c in 0..tc {
+        let row = &ths[c * tt..(c + 1) * tt];
+        ensure!(
+            row.windows(2).all(|w| w[0] <= w[1]),
+            "threshold row {c} is not sorted ascending"
+        );
+    }
+
+    let channels = match (x.rank(), layout.as_str()) {
+        (2, _) => x.shape()[1],
+        (4, "NCHW") => x.shape()[1],
+        (4, "NHWC") => x.shape()[3],
+        (r, l) => anyhow::bail!("unsupported MultiThreshold input rank {r} / layout {l}"),
+    };
+    ensure!(tc == channels || tc == 1, "threshold channels {tc} != input channels {channels}");
+
+    let src = x.as_f32()?;
+    let mut out = vec![0f32; x.numel()];
+    // channel index for a flat position
+    let chan_of = |flat: usize| -> usize {
+        match (x.rank(), layout.as_str()) {
+            (2, _) => flat % x.shape()[1],
+            (4, "NCHW") => (flat / (x.shape()[2] * x.shape()[3])) % x.shape()[1],
+            (4, "NHWC") => flat % x.shape()[3],
+            _ => unreachable!(),
+        }
+    };
+    for (flat, (&v, o)) in src.iter().zip(out.iter_mut()).enumerate() {
+        let c = if tc == 1 { 0 } else { chan_of(flat) };
+        let row = &ths[c * tt..(c + 1) * tt];
+        *o = out_scale * threshold_count(row, v) as f32 + out_bias;
+    }
+    Ok(vec![Tensor::new(x.shape().to_vec(), out)])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::DOMAIN_FINN;
+
+    #[test]
+    fn threshold_count_boundaries() {
+        let row = [0.5f32, 1.5, 2.5];
+        assert_eq!(threshold_count(&row, 0.0), 0);
+        assert_eq!(threshold_count(&row, 0.5), 1); // inclusive
+        assert_eq!(threshold_count(&row, 2.0), 2);
+        assert_eq!(threshold_count(&row, 99.0), 3);
+    }
+
+    #[test]
+    fn mimics_uint2_relu_quant() {
+        // uint2 ReLU quant with scale 1: thresholds at 0.5, 1.5, 2.5
+        let n = Node::new("MultiThreshold", &["x", "t"], &["y"]).with_domain(DOMAIN_FINN);
+        let x = Tensor::new(vec![1, 1], vec![1.7]);
+        let t = Tensor::new(vec![1, 3], vec![0.5, 1.5, 2.5]);
+        let y = multi_threshold(&n, &[&x, &t]).unwrap();
+        assert_eq!(y[0].as_f32().unwrap(), &[2.0]);
+    }
+
+    #[test]
+    fn out_scale_bias_bipolar() {
+        // sign() as MultiThreshold: 1 threshold at 0, out = 2*count - 1
+        let n = Node::new("MultiThreshold", &["x", "t"], &["y"])
+            .with_domain(DOMAIN_FINN)
+            .with_attr("out_scale", 2.0f32)
+            .with_attr("out_bias", -1.0f32);
+        let x = Tensor::new(vec![1, 4], vec![-3.0, -0.1, 0.0, 2.0]);
+        let t = Tensor::new(vec![1, 1], vec![0.0]);
+        let y = multi_threshold(&n, &[&x, &t]).unwrap();
+        assert_eq!(y[0].as_f32().unwrap(), &[-1.0, -1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn per_channel_thresholds_nchw() {
+        let n = Node::new("MultiThreshold", &["x", "t"], &["y"]).with_domain(DOMAIN_FINN);
+        let x = Tensor::new(vec![1, 2, 1, 2], vec![1.0, 5.0, 1.0, 5.0]);
+        // channel 0 thresholds {2,4}; channel 1 thresholds {0,1}
+        let t = Tensor::new(vec![2, 2], vec![2.0, 4.0, 0.0, 1.0]);
+        let y = multi_threshold(&n, &[&x, &t]).unwrap();
+        assert_eq!(y[0].as_f32().unwrap(), &[0.0, 2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn nhwc_layout() {
+        let n = Node::new("MultiThreshold", &["x", "t"], &["y"])
+            .with_domain(DOMAIN_FINN)
+            .with_attr("data_layout", "NHWC");
+        let x = Tensor::new(vec![1, 1, 1, 2], vec![1.0, 1.0]);
+        let t = Tensor::new(vec![2, 1], vec![0.5, 2.0]);
+        let y = multi_threshold(&n, &[&x, &t]).unwrap();
+        assert_eq!(y[0].as_f32().unwrap(), &[1.0, 0.0]);
+    }
+
+    #[test]
+    fn rejects_unsorted() {
+        let n = Node::new("MultiThreshold", &["x", "t"], &["y"]).with_domain(DOMAIN_FINN);
+        let x = Tensor::new(vec![1, 1], vec![1.0]);
+        let t = Tensor::new(vec![1, 2], vec![2.0, 1.0]);
+        assert!(multi_threshold(&n, &[&x, &t]).is_err());
+    }
+}

@@ -1,0 +1,169 @@
+//! Pooling operators over NCHW tensors.
+
+use crate::ir::Node;
+use crate::tensor::{conv_out_dim, Tensor};
+use anyhow::{ensure, Result};
+
+struct PoolParams {
+    kh: usize,
+    kw: usize,
+    stride_h: usize,
+    stride_w: usize,
+    pads: [usize; 4],
+}
+
+fn pool_params(node: &Node) -> Result<PoolParams> {
+    let ks = node.attr("kernel_shape")?.as_ints()?.to_vec();
+    ensure!(ks.len() == 2, "only 2-D pooling supported");
+    let strides = node.attr_ints_or("strides", &ks);
+    let pads = node.attr_ints_or("pads", &[0, 0, 0, 0]);
+    Ok(PoolParams {
+        kh: ks[0] as usize,
+        kw: ks[1] as usize,
+        stride_h: strides[0] as usize,
+        stride_w: strides[1] as usize,
+        pads: [pads[0] as usize, pads[1] as usize, pads[2] as usize, pads[3] as usize],
+    })
+}
+
+fn pool_generic(
+    x: &Tensor,
+    p: &PoolParams,
+    init: f32,
+    acc: impl Fn(f32, f32) -> f32,
+    finish: impl Fn(f32, usize) -> f32,
+    count_pad: bool,
+) -> Result<Tensor> {
+    ensure!(x.rank() == 4, "pooling wants NCHW, got {:?}", x.shape());
+    let (n, c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let oh = conv_out_dim(h, p.kh, p.stride_h, p.pads[0], p.pads[2]);
+    let ow = conv_out_dim(w, p.kw, p.stride_w, p.pads[1], p.pads[3]);
+    let src = x.as_f32()?;
+    let mut out = vec![0f32; n * c * oh * ow];
+    for b in 0..n {
+        for ch in 0..c {
+            let src_base = (b * c + ch) * h * w;
+            let dst_base = (b * c + ch) * oh * ow;
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut v = init;
+                    let mut cnt = 0usize;
+                    for ky in 0..p.kh {
+                        let iy = oy * p.stride_h + ky;
+                        if iy < p.pads[0] || iy - p.pads[0] >= h {
+                            continue;
+                        }
+                        for kx in 0..p.kw {
+                            let ix = ox * p.stride_w + kx;
+                            if ix < p.pads[1] || ix - p.pads[1] >= w {
+                                continue;
+                            }
+                            v = acc(v, src[src_base + (iy - p.pads[0]) * w + (ix - p.pads[1])]);
+                            cnt += 1;
+                        }
+                    }
+                    let denom = if count_pad { p.kh * p.kw } else { cnt };
+                    out[dst_base + oy * ow + ox] = finish(v, denom);
+                }
+            }
+        }
+    }
+    Ok(Tensor::new(vec![n, c, oh, ow], out))
+}
+
+/// Run a NCHW pooling body under the channels-last wrapper convention:
+/// with `data_layout = "NHWC"` inputs/outputs are NHWC (Fig. 3 wrappers).
+fn with_layout(
+    node: &Node,
+    x: &Tensor,
+    body: impl Fn(&Tensor) -> Result<Tensor>,
+) -> Result<Vec<Tensor>> {
+    if node.attr_str_or("data_layout", "NCHW") == "NHWC" {
+        let nchw = crate::tensor::nhwc_to_nchw(x)?;
+        return Ok(vec![crate::tensor::nchw_to_nhwc(&body(&nchw)?)?]);
+    }
+    Ok(vec![body(x)?])
+}
+
+/// ONNX `MaxPool`.
+pub fn max_pool(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    ensure!(inputs.len() == 1, "MaxPool wants 1 input");
+    let p = pool_params(node)?;
+    with_layout(node, inputs[0], |x| {
+        pool_generic(x, &p, f32::NEG_INFINITY, f32::max, |v, _| v, false)
+    })
+}
+
+/// ONNX `AveragePool` (`count_include_pad` honored).
+pub fn average_pool(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    ensure!(inputs.len() == 1, "AveragePool wants 1 input");
+    let p = pool_params(node)?;
+    let count_pad = node.attr_int_or("count_include_pad", 0) != 0;
+    with_layout(node, inputs[0], |x| {
+        pool_generic(x, &p, 0.0, |a, b| a + b, |v, n| v / n as f32, count_pad)
+    })
+}
+
+/// ONNX `GlobalAveragePool`: mean over all spatial positions per channel.
+pub fn global_average_pool(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    ensure!(inputs.len() == 1, "GlobalAveragePool wants 1 input");
+    if node.attr_str_or("data_layout", "NCHW") == "NHWC" {
+        let x = crate::tensor::nhwc_to_nchw(inputs[0])?;
+        let y = global_average_pool(&Node::new("GlobalAveragePool", &[], &[]), &[&x])?;
+        return Ok(vec![crate::tensor::nchw_to_nhwc(&y[0])?]);
+    }
+    let x = inputs[0];
+    ensure!(x.rank() == 4, "GlobalAveragePool wants NCHW");
+    let (n, c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let src = x.as_f32()?;
+    let mut out = vec![0f32; n * c];
+    let area = (h * w) as f32;
+    for i in 0..n * c {
+        let s: f32 = src[i * h * w..(i + 1) * h * w].iter().sum();
+        out[i] = s / area;
+    }
+    Ok(vec![Tensor::new(vec![n, c, 1, 1], out)])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_pool_2x2() {
+        let n = Node::new("MaxPool", &["x"], &["y"]).with_attr("kernel_shape", vec![2i64, 2]);
+        let x = Tensor::new(vec![1, 1, 4, 4], (0..16).map(|v| v as f32).collect());
+        let y = max_pool(&n, &[&x]).unwrap();
+        assert_eq!(y[0].shape(), &[1, 1, 2, 2]);
+        assert_eq!(y[0].as_f32().unwrap(), &[5., 7., 13., 15.]);
+    }
+
+    #[test]
+    fn avg_pool_2x2() {
+        let n = Node::new("AveragePool", &["x"], &["y"]).with_attr("kernel_shape", vec![2i64, 2]);
+        let x = Tensor::new(vec![1, 1, 2, 2], vec![1., 2., 3., 4.]);
+        let y = average_pool(&n, &[&x]).unwrap();
+        assert_eq!(y[0].as_f32().unwrap(), &[2.5]);
+    }
+
+    #[test]
+    fn avg_pool_pad_exclusion() {
+        let n = Node::new("AveragePool", &["x"], &["y"])
+            .with_attr("kernel_shape", vec![2i64, 2])
+            .with_attr("pads", vec![1i64, 1, 0, 0])
+            .with_attr("strides", vec![1i64, 1]);
+        let x = Tensor::new(vec![1, 1, 2, 2], vec![4., 4., 4., 4.]);
+        let y = average_pool(&n, &[&x]).unwrap();
+        // corner window sees only one real element; avg excludes padding
+        assert_eq!(y[0].as_f32().unwrap()[0], 4.0);
+    }
+
+    #[test]
+    fn global_avg_pool() {
+        let n = Node::new("GlobalAveragePool", &["x"], &["y"]);
+        let x = Tensor::new(vec![1, 2, 2, 2], vec![1., 2., 3., 4., 10., 20., 30., 40.]);
+        let y = global_average_pool(&n, &[&x]).unwrap();
+        assert_eq!(y[0].shape(), &[1, 2, 1, 1]);
+        assert_eq!(y[0].as_f32().unwrap(), &[2.5, 25.0]);
+    }
+}

@@ -1,0 +1,308 @@
+//! Standard-ONNX quantization operators: the substrate for the QDQ / QCDQ /
+//! quantized-operator formats the paper compares against and lowers into
+//! (paper §III–IV).
+//!
+//! `QuantizeLinear` is restricted to 8-bit output just like real ONNX —
+//! that restriction is load-bearing for the paper's argument, so we keep it
+//! and model sub-8-bit precision with an explicit `Clip` (the QCDQ trick).
+
+use super::linalg;
+use super::quant::round_half_even;
+use crate::ir::Node;
+use crate::tensor::{broadcast_shapes, BroadcastIter, Tensor};
+use anyhow::{ensure, Result};
+
+/// Saturation range for an 8-bit quantized tensor. ONNX picks the type from
+/// the zero-point tensor dtype; our float-container IR carries it as the
+/// node attribute `signed` (0 = uint8, the ONNX default).
+fn q8_range(node: &Node) -> (f64, f64) {
+    if node.attr_int_or("signed", 0) != 0 {
+        (-128.0, 127.0)
+    } else {
+        (0.0, 255.0)
+    }
+}
+
+/// `QuantizeLinear(x, y_scale, y_zero_point?) -> y` — Eq. 1 with fixed
+/// 8-bit saturation; output is the *integer* value in a float container.
+pub fn quantize_linear(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    ensure!(inputs.len() >= 2, "QuantizeLinear wants >= 2 inputs");
+    let x = inputs[0];
+    let scale = inputs[1];
+    let zeropt = inputs.get(2).copied();
+    let (lo, hi) = q8_range(node);
+    let mut out_shape = broadcast_shapes(x.shape(), scale.shape())?;
+    if let Some(z) = zeropt {
+        out_shape = broadcast_shapes(&out_shape, z.shape())?;
+    }
+    let xs = x.as_f32()?;
+    let ss = scale.to_f64_vec();
+    let zs = zeropt.map(|z| z.to_f64_vec()).unwrap_or_else(|| vec![0.0]);
+    let z_shape: &[usize] = zeropt.map(|z| z.shape()).unwrap_or(&[]);
+    let ix = BroadcastIter::new(x.shape(), &out_shape);
+    let is = BroadcastIter::new(scale.shape(), &out_shape);
+    let iz = BroadcastIter::new(z_shape, &out_shape);
+    let mut out = Vec::with_capacity(out_shape.iter().product());
+    for ((ox, os), oz) in ix.zip(is).zip(iz) {
+        let q = round_half_even(f64::from(xs[ox]) / ss[os]) + zs[oz];
+        out.push(q.clamp(lo, hi) as f32);
+    }
+    Ok(vec![Tensor::new(out_shape, out)])
+}
+
+/// `DequantizeLinear(x, x_scale, x_zero_point?) -> y` — Eq. 4.
+pub fn dequantize_linear(_node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    ensure!(inputs.len() >= 2, "DequantizeLinear wants >= 2 inputs");
+    let x = inputs[0];
+    let scale = inputs[1];
+    let zeropt = inputs.get(2).copied();
+    let mut out_shape = broadcast_shapes(x.shape(), scale.shape())?;
+    if let Some(z) = zeropt {
+        out_shape = broadcast_shapes(&out_shape, z.shape())?;
+    }
+    let xs = x.as_f32()?;
+    let ss = scale.to_f64_vec();
+    let zs = zeropt.map(|z| z.to_f64_vec()).unwrap_or_else(|| vec![0.0]);
+    let z_shape: &[usize] = zeropt.map(|z| z.shape()).unwrap_or(&[]);
+    let ix = BroadcastIter::new(x.shape(), &out_shape);
+    let is = BroadcastIter::new(scale.shape(), &out_shape);
+    let iz = BroadcastIter::new(z_shape, &out_shape);
+    let mut out = Vec::with_capacity(out_shape.iter().product());
+    for ((ox, os), oz) in ix.zip(is).zip(iz) {
+        out.push(((f64::from(xs[ox]) - zs[oz]) * ss[os]) as f32);
+    }
+    Ok(vec![Tensor::new(out_shape, out)])
+}
+
+/// `Clip(x, min?, max?) -> y` (opset 11+ input form; also accepts the
+/// opset-6 `min`/`max` attributes). The QCDQ format's integer-clipping op.
+pub fn clip(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    ensure!(!inputs.is_empty(), "Clip wants >= 1 input");
+    let x = inputs[0];
+    let lo = match inputs.get(1) {
+        Some(t) if t.numel() > 0 => t.scalar_value()?,
+        _ => node.attr_float_or("min", f32::NEG_INFINITY),
+    };
+    let hi = match inputs.get(2) {
+        Some(t) if t.numel() > 0 => t.scalar_value()?,
+        _ => node.attr_float_or("max", f32::INFINITY),
+    };
+    Ok(vec![x.map(|v| v.clamp(lo, hi))?])
+}
+
+/// Shared requantization: `y = sat(round(acc * m) + y_zp)` with
+/// `m = x_scale * w_scale / y_scale` — the fused output requantization the
+/// quantized-operator format hardwires.
+fn requantize(acc: &Tensor, multiplier: f64, y_zp: f64, lo: f64, hi: f64) -> Result<Tensor> {
+    acc.map(|v| {
+        let q = round_half_even(f64::from(v) * multiplier) + y_zp;
+        q.clamp(lo, hi) as f32
+    })
+}
+
+/// `QLinearConv` — quantized-operator-format convolution: int8 in/weights,
+/// fused requantization to int8 out, int32 bias.
+pub fn qlinear_conv(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    ensure!(inputs.len() >= 8, "QLinearConv wants >= 8 inputs");
+    let (x, x_scale, x_zp) = (inputs[0], inputs[1], inputs[2]);
+    let (w, w_scale, w_zp) = (inputs[3], inputs[4], inputs[5]);
+    let (y_scale, y_zp) = (inputs[6], inputs[7]);
+    let bias = inputs.get(8).copied();
+    ensure!(
+        x_scale.numel() == 1 && x_zp.numel() == 1,
+        "QLinearConv input quantization is restricted to per-tensor scale/zero-point (paper §III)"
+    );
+    ensure!(w_zp.numel() == 1, "per-tensor weight zero point only");
+
+    // integer-domain conv over (x - x_zp), (w - w_zp)
+    let xz = x_zp.scalar_value()?;
+    let wz = w_zp.scalar_value()?;
+    let x_int = x.map(|v| v - xz)?;
+    let w_int = w.map(|v| v - wz)?;
+    let acc = linalg::conv_impl(node, &x_int, &w_int, None)?;
+    // bias is int32 with scale x_scale*w_scale (paper §II): added pre-requant
+    let acc = match bias {
+        Some(b) => {
+            let bshape = vec![1, b.numel(), 1, 1];
+            acc.binary_op(&b.reshape(bshape)?, |a, c| a + c)?
+        }
+        None => acc,
+    };
+    ensure!(w_scale.numel() == 1 || y_scale.numel() == 1, "channel-wise requant needs matching scales");
+    let m = f64::from(x_scale.scalar_value()?) * f64::from(w_scale.scalar_value()?)
+        / f64::from(y_scale.scalar_value()?);
+    let (lo, hi) = q8_range(node);
+    Ok(vec![requantize(&acc, m, f64::from(y_zp.scalar_value()?), lo, hi)?])
+}
+
+/// `QLinearMatMul` — quantized-operator-format matmul.
+pub fn qlinear_matmul(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    ensure!(inputs.len() == 8, "QLinearMatMul wants 8 inputs");
+    let (a, a_scale, a_zp) = (inputs[0], inputs[1], inputs[2]);
+    let (b, b_scale, b_zp) = (inputs[3], inputs[4], inputs[5]);
+    let (y_scale, y_zp) = (inputs[6], inputs[7]);
+    ensure!(a_scale.numel() == 1 && a_zp.numel() == 1 && b_zp.numel() == 1, "per-tensor only");
+    let az = a_zp.scalar_value()?;
+    let bz = b_zp.scalar_value()?;
+    let acc = a.map(|v| v - az)?.matmul2d(&b.map(|v| v - bz)?)?;
+    let m = f64::from(a_scale.scalar_value()?) * f64::from(b_scale.scalar_value()?)
+        / f64::from(y_scale.scalar_value()?);
+    let (lo, hi) = q8_range(node);
+    Ok(vec![requantize(&acc, m, f64::from(y_zp.scalar_value()?), lo, hi)?])
+}
+
+/// `ConvInteger(x, w, x_zp?, w_zp?) -> int32 acc` — the integer-operator
+/// format: no scales, wide output exposed (paper §III).
+pub fn conv_integer(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    ensure!(inputs.len() >= 2, "ConvInteger wants >= 2 inputs");
+    let xz = inputs.get(2).map(|t| t.scalar_value()).transpose()?.unwrap_or(0.0);
+    let wz = inputs.get(3).map(|t| t.scalar_value()).transpose()?.unwrap_or(0.0);
+    let x_int = inputs[0].map(|v| v - xz)?;
+    let w_int = inputs[1].map(|v| v - wz)?;
+    Ok(vec![linalg::conv_impl(node, &x_int, &w_int, None)?])
+}
+
+/// `MatMulInteger(a, b, a_zp?, b_zp?) -> int32 acc`.
+pub fn matmul_integer(_node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    ensure!(inputs.len() >= 2, "MatMulInteger wants >= 2 inputs");
+    let az = inputs.get(2).map(|t| t.scalar_value()).transpose()?.unwrap_or(0.0);
+    let bz = inputs.get(3).map(|t| t.scalar_value()).transpose()?.unwrap_or(0.0);
+    Ok(vec![inputs[0].map(|v| v - az)?.matmul2d(&inputs[1].map(|v| v - bz)?)?])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_linear_saturates_to_8bit() {
+        let node = Node::new("QuantizeLinear", &["x", "s", "z"], &["y"]);
+        let x = Tensor::new(vec![4], vec![-1000.0, -0.6, 0.6, 1000.0]);
+        let s = Tensor::scalar(1.0);
+        let z = Tensor::scalar(0.0);
+        let y = quantize_linear(&node, &[&x, &s, &z]).unwrap();
+        // default unsigned: [0, 255]
+        assert_eq!(y[0].as_f32().unwrap(), &[0.0, 0.0, 1.0, 255.0]);
+        let signed = node.clone().with_attr("signed", 1i64);
+        let y = quantize_linear(&signed, &[&x, &s, &z]).unwrap();
+        assert_eq!(y[0].as_f32().unwrap(), &[-128.0, -1.0, 1.0, 127.0]);
+    }
+
+    #[test]
+    fn quantize_dequantize_roundtrip() {
+        let qn = Node::new("QuantizeLinear", &["x", "s", "z"], &["q"]).with_attr("signed", 1i64);
+        let dn = Node::new("DequantizeLinear", &["q", "s", "z"], &["y"]);
+        let x = Tensor::new(vec![3], vec![0.49, -1.0, 2.26]);
+        let s = Tensor::scalar(0.5);
+        let z = Tensor::scalar(0.0);
+        let q = quantize_linear(&qn, &[&x, &s, &z]).unwrap();
+        let y = dequantize_linear(&dn, &[&q[0], &s, &z]).unwrap();
+        assert_eq!(y[0].as_f32().unwrap(), &[0.5, -1.0, 2.5]);
+    }
+
+    #[test]
+    fn clip_input_and_attr_forms() {
+        let x = Tensor::new(vec![3], vec![-5.0, 0.5, 5.0]);
+        // input form
+        let n = Node::new("Clip", &["x", "lo", "hi"], &["y"]);
+        let lo = Tensor::scalar(-1.0);
+        let hi = Tensor::scalar(1.0);
+        let y = clip(&n, &[&x, &lo, &hi]).unwrap();
+        assert_eq!(y[0].as_f32().unwrap(), &[-1.0, 0.5, 1.0]);
+        // attr form
+        let n = Node::new("Clip", &["x"], &["y"]).with_attr("min", -2.0f32).with_attr("max", 2.0f32);
+        let y = clip(&n, &[&x]).unwrap();
+        assert_eq!(y[0].as_f32().unwrap(), &[-2.0, 0.5, 2.0]);
+    }
+
+    #[test]
+    fn qcdq_models_int4_on_8bit_ops() {
+        // paper §IV: QuantizeLinear -> Clip(int4 bounds) -> DequantizeLinear
+        // equals direct 4-bit quantization.
+        let qn = Node::new("QuantizeLinear", &["x", "s", "z"], &["q"]).with_attr("signed", 1i64);
+        let cn = Node::new("Clip", &["q", "lo", "hi"], &["c"]);
+        let dn = Node::new("DequantizeLinear", &["c", "s", "z"], &["y"]);
+        let x = Tensor::new(vec![4], vec![-100.0, -3.2, 3.2, 100.0]);
+        let s = Tensor::scalar(1.0);
+        let z = Tensor::scalar(0.0);
+        let q = quantize_linear(&qn, &[&x, &s, &z]).unwrap();
+        let lo = Tensor::scalar(-8.0);
+        let hi = Tensor::scalar(7.0);
+        let c = clip(&cn, &[&q[0], &lo, &hi]).unwrap();
+        let y = dequantize_linear(&dn, &[&c[0], &s, &z]).unwrap();
+        assert_eq!(y[0].as_f32().unwrap(), &[-8.0, -3.0, 3.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_integer_wide_accumulator() {
+        let n = Node::new("MatMulInteger", &["a", "b"], &["y"]);
+        let a = Tensor::new(vec![1, 2], vec![127.0, 127.0]);
+        let b = Tensor::new(vec![2, 1], vec![127.0, 127.0]);
+        let y = matmul_integer(&n, &[&a, &b]).unwrap();
+        // 127*127*2 = 32258 — beyond int8, exposed as wide acc
+        assert_eq!(y[0].as_f32().unwrap(), &[32258.0]);
+    }
+
+    #[test]
+    fn matmul_integer_zero_points() {
+        let n = Node::new("MatMulInteger", &["a", "b", "az", "bz"], &["y"]);
+        let a = Tensor::new(vec![1, 2], vec![10.0, 10.0]);
+        let b = Tensor::new(vec![2, 1], vec![5.0, 5.0]);
+        let az = Tensor::scalar(10.0);
+        let bz = Tensor::scalar(5.0);
+        let y = matmul_integer(&n, &[&a, &b, &az, &bz]).unwrap();
+        assert_eq!(y[0].as_f32().unwrap(), &[0.0]);
+    }
+
+    #[test]
+    fn qlinear_matmul_requantizes() {
+        let n = Node::new("QLinearMatMul", &["a", "as", "az", "b", "bs", "bz", "ys", "yz"], &["y"])
+            .with_attr("signed", 1i64);
+        let a = Tensor::new(vec![1, 2], vec![4.0, 4.0]);
+        let b = Tensor::new(vec![2, 1], vec![4.0, 4.0]);
+        let s1 = Tensor::scalar(0.5);
+        let z0 = Tensor::scalar(0.0);
+        // acc = 32, m = 0.5*0.5/0.25 = 1 -> 32
+        let ys = Tensor::scalar(0.25);
+        let y = qlinear_matmul(&n, &[&a, &s1, &z0, &b, &s1, &z0, &ys, &z0]).unwrap();
+        assert_eq!(y[0].as_f32().unwrap(), &[32.0]);
+        // tighter output scale saturates at 127
+        let ys = Tensor::scalar(0.001);
+        let y = qlinear_matmul(&n, &[&a, &s1, &z0, &b, &s1, &z0, &ys, &z0]).unwrap();
+        assert_eq!(y[0].as_f32().unwrap(), &[127.0]);
+    }
+
+    #[test]
+    fn qlinear_conv_1x1() {
+        // 1x1 conv == per-pixel dot product
+        let n = Node::new(
+            "QLinearConv",
+            &["x", "xs", "xz", "w", "ws", "wz", "ys", "yz", "b"],
+            &["y"],
+        )
+        .with_attr("kernel_shape", vec![1i64, 1])
+        .with_attr("signed", 1i64);
+        let x = Tensor::new(vec![1, 1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let w = Tensor::new(vec![1, 1, 1, 1], vec![2.0]);
+        let one = Tensor::scalar(1.0);
+        let zero = Tensor::scalar(0.0);
+        let bias = Tensor::new(vec![1], vec![1.0]);
+        let y = qlinear_conv(&n, &[&x, &one, &zero, &w, &one, &zero, &one, &zero, &bias]).unwrap();
+        assert_eq!(y[0].shape(), &[1, 1, 2, 2]);
+        assert_eq!(y[0].as_f32().unwrap(), &[3.0, 5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn qlinear_conv_rejects_channelwise_input_scale() {
+        // paper §III: "QLinearConv ... restrict input quantization to
+        // per-tensor scale and zero point"
+        let n = Node::new("QLinearConv", &["x", "xs", "xz", "w", "ws", "wz", "ys", "yz"], &["y"])
+            .with_attr("kernel_shape", vec![1i64, 1]);
+        let x = Tensor::new(vec![1, 2, 1, 1], vec![1.0, 2.0]);
+        let xs = Tensor::new(vec![2], vec![1.0, 0.5]); // channel-wise: illegal
+        let z = Tensor::scalar(0.0);
+        let w = Tensor::new(vec![1, 2, 1, 1], vec![1.0, 1.0]);
+        let one = Tensor::scalar(1.0);
+        assert!(qlinear_conv(&n, &[&x, &xs, &z, &w, &one, &z, &one, &z]).is_err());
+    }
+}

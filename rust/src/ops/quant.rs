@@ -1,0 +1,376 @@
+//! The QONNX dialect: `Quant`, `BipolarQuant`, `Trunc` (paper Table II,
+//! Eqs. 1–4).
+//!
+//! All three fuse dequantization at the output: float32 in, float32 out,
+//! with the quantized integer grid living *inside* the float container.
+
+use crate::ir::Node;
+use crate::tensor::{broadcast_shapes, BroadcastIter, Tensor};
+use anyhow::{bail, ensure, Result};
+
+/// Rounding modes accepted by `Quant`/`Trunc` (`rounding_mode` attribute).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoundingMode {
+    /// Round half to even (banker's rounding) — QONNX `ROUND`.
+    Round,
+    /// Truncate toward zero — QONNX `ROUND_TO_ZERO`.
+    RoundToZero,
+    Ceil,
+    Floor,
+}
+
+impl RoundingMode {
+    pub fn from_str(s: &str) -> Result<RoundingMode> {
+        Ok(match s {
+            "ROUND" => RoundingMode::Round,
+            "ROUND_TO_ZERO" => RoundingMode::RoundToZero,
+            "CEIL" => RoundingMode::Ceil,
+            "FLOOR" => RoundingMode::Floor,
+            other => bail!("unknown rounding_mode '{other}'"),
+        })
+    }
+
+    /// Apply the rounding function.
+    pub fn apply(self, v: f64) -> f64 {
+        match self {
+            RoundingMode::Round => round_half_even(v),
+            RoundingMode::RoundToZero => v.trunc(),
+            RoundingMode::Ceil => v.ceil(),
+            RoundingMode::Floor => v.floor(),
+        }
+    }
+}
+
+/// Round half to even, matching numpy's `np.round` / IEEE roundTiesToEven.
+pub fn round_half_even(v: f64) -> f64 {
+    let r = v.round(); // half away from zero
+    if (v - v.trunc()).abs() == 0.5 {
+        // tie: pick the even neighbor
+        let floor = v.floor();
+        if (floor % 2.0) == 0.0 {
+            floor
+        } else {
+            floor + 1.0
+        }
+    } else {
+        r
+    }
+}
+
+/// Integer clamp bounds per Eqs. 2–3, extended with QONNX `narrow` and
+/// float (fractional) bit widths (paper §V).
+pub fn quant_bounds(signed: bool, narrow: bool, bit_width: f64) -> (f64, f64) {
+    if signed {
+        let min = -(2f64.powf(bit_width - 1.0)) + if narrow { 1.0 } else { 0.0 };
+        let max = 2f64.powf(bit_width - 1.0) - 1.0;
+        (min, max)
+    } else {
+        let min = 0.0;
+        let max = 2f64.powf(bit_width) - 1.0 - if narrow { 1.0 } else { 0.0 };
+        (min, max)
+    }
+}
+
+/// Scalar quantize→dequantize per Eq. 1 + Eq. 4.
+pub fn quantize_dequantize(
+    x: f64,
+    scale: f64,
+    zero_point: f64,
+    bit_width: f64,
+    signed: bool,
+    narrow: bool,
+    mode: RoundingMode,
+) -> f64 {
+    let (qmin, qmax) = quant_bounds(signed, narrow, bit_width);
+    let q = mode.apply(x / scale + zero_point).clamp(qmin, qmax);
+    (q - zero_point) * scale
+}
+
+/// `Quant(x, scale, zero_point, bit_width) -> y` with broadcasting across
+/// all four inputs (the paper's mechanism for channel-wise quantization —
+/// including exotic cases like channel-wise *bit width*).
+pub fn quant_op(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    ensure!(inputs.len() == 4, "Quant wants 4 inputs, got {}", inputs.len());
+    let (x, scale, zeropt, bitwidth) = (inputs[0], inputs[1], inputs[2], inputs[3]);
+    let signed = node.attr_int_or("signed", 1) != 0;
+    let narrow = node.attr_int_or("narrow", 0) != 0;
+    let mode = RoundingMode::from_str(&node.attr_str_or("rounding_mode", "ROUND"))?;
+
+    // output shape = broadcast of all inputs (normally == x.shape)
+    let mut out_shape = x.shape().to_vec();
+    for t in [scale, zeropt, bitwidth] {
+        out_shape = broadcast_shapes(&out_shape, t.shape())?;
+    }
+    let xs = x.as_f32()?;
+    let ss = scale.to_f64_vec();
+    let zs = zeropt.to_f64_vec();
+    let bs = bitwidth.to_f64_vec();
+    for &b in &bs {
+        ensure!(b >= 2.0 || (!signed && b >= 1.0), "Quant bit_width must be >= 2 (or 1 unsigned), got {b}");
+    }
+    for &s in &ss {
+        ensure!(s > 0.0, "Quant scale must be positive, got {s}");
+    }
+    // §Perf fast path: scalar parameters (the overwhelmingly common case)
+    // avoid the 4-way broadcast iterator and hoist all param math out of
+    // the loop (~5x on the elementwise hot path).
+    if ss.len() == 1 && zs.len() == 1 && bs.len() == 1 && out_shape == x.shape() {
+        let (qmin, qmax) = quant_bounds(signed, narrow, bs[0]);
+        let (s, z) = (ss[0], zs[0]);
+        let inv_s = 1.0 / s;
+        let out: Vec<f32> = xs
+            .iter()
+            .map(|&v| {
+                let q = mode.apply(f64::from(v) * inv_s + z).clamp(qmin, qmax);
+                ((q - z) * s) as f32
+            })
+            .collect();
+        return Ok(vec![Tensor::new(out_shape, out)]);
+    }
+    let n: usize = out_shape.iter().product();
+    let mut out = Vec::with_capacity(n);
+    let ix = BroadcastIter::new(x.shape(), &out_shape);
+    let is = BroadcastIter::new(scale.shape(), &out_shape);
+    let iz = BroadcastIter::new(zeropt.shape(), &out_shape);
+    let ib = BroadcastIter::new(bitwidth.shape(), &out_shape);
+    for (((ox, os), oz), ob) in ix.zip(is).zip(iz).zip(ib) {
+        out.push(quantize_dequantize(f64::from(xs[ox]), ss[os], zs[oz], bs[ob], signed, narrow, mode) as f32);
+    }
+    Ok(vec![Tensor::new(out_shape, out)])
+}
+
+/// `BipolarQuant(x, scale) -> y`: y = scale * (+1 if x >= 0 else -1).
+pub fn bipolar_quant_op(_node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    ensure!(inputs.len() == 2, "BipolarQuant wants 2 inputs, got {}", inputs.len());
+    let (x, scale) = (inputs[0], inputs[1]);
+    let out_shape = broadcast_shapes(x.shape(), scale.shape())?;
+    let xs = x.as_f32()?;
+    let ss = scale.to_f64_vec();
+    for &s in &ss {
+        ensure!(s > 0.0, "BipolarQuant scale must be positive, got {s}");
+    }
+    let ix = BroadcastIter::new(x.shape(), &out_shape);
+    let is = BroadcastIter::new(scale.shape(), &out_shape);
+    let mut out = Vec::with_capacity(out_shape.iter().product());
+    for (ox, os) in ix.zip(is) {
+        let q = if xs[ox] >= 0.0 { 1.0 } else { -1.0 };
+        out.push((q * ss[os]) as f32);
+    }
+    Ok(vec![Tensor::new(out_shape, out)])
+}
+
+/// `Trunc(x, scale, zero_point, in_bit_width, out_bit_width) -> y`.
+///
+/// Truncates `in_bit_width - out_bit_width` LSBs of the quantized value.
+/// With the input's scale/zero-point preserved on the output (paper §V),
+/// the dequantized magnitude shrinks by `2^(in-out)` — exactly the
+/// right-shift in a quantized average pool.
+pub fn trunc_op(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    ensure!(inputs.len() == 5, "Trunc wants 5 inputs, got {}", inputs.len());
+    let (x, scale, zeropt, in_bw, out_bw) = (inputs[0], inputs[1], inputs[2], inputs[3], inputs[4]);
+    let mode = RoundingMode::from_str(&node.attr_str_or("rounding_mode", "FLOOR"))?;
+    let mut out_shape = x.shape().to_vec();
+    for t in [scale, zeropt, in_bw, out_bw] {
+        out_shape = broadcast_shapes(&out_shape, t.shape())?;
+    }
+    let xs = x.as_f32()?;
+    let ss = scale.to_f64_vec();
+    let zs = zeropt.to_f64_vec();
+    let ibw = in_bw.to_f64_vec();
+    let obw = out_bw.to_f64_vec();
+    for &b in ibw.iter().chain(obw.iter()) {
+        ensure!(b >= 2.0, "Trunc bit widths must be >= 2, got {b}");
+    }
+    let ix = BroadcastIter::new(x.shape(), &out_shape);
+    let is = BroadcastIter::new(scale.shape(), &out_shape);
+    let iz = BroadcastIter::new(zeropt.shape(), &out_shape);
+    let ii = BroadcastIter::new(in_bw.shape(), &out_shape);
+    let io = BroadcastIter::new(out_bw.shape(), &out_shape);
+    let mut out = Vec::with_capacity(out_shape.iter().product());
+    for ((((ox, os), oz), oi), oo) in ix.zip(is).zip(iz).zip(ii).zip(io) {
+        let s = ss[os];
+        let z = zs[oz];
+        // recover the integer value under the declared input quantization
+        let q = round_half_even(f64::from(xs[ox]) / s + z);
+        let shift = 2f64.powf(ibw[oi] - obw[oo]);
+        let q_trunc = mode.apply(q / shift);
+        out.push(((q_trunc - z) * s) as f32);
+    }
+    Ok(vec![Tensor::new(out_shape, out)])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::DOMAIN_QONNX;
+
+    fn quant_node(signed: bool, narrow: bool, mode: &str) -> Node {
+        Node::new("Quant", &["x", "s", "z", "b"], &["y"])
+            .with_domain(DOMAIN_QONNX)
+            .with_attr("signed", signed)
+            .with_attr("narrow", narrow)
+            .with_attr("rounding_mode", mode)
+    }
+
+    fn run_quant(
+        xs: &[f32],
+        scale: f32,
+        zp: f32,
+        bw: f32,
+        signed: bool,
+        narrow: bool,
+        mode: &str,
+    ) -> Vec<f32> {
+        let x = Tensor::new(vec![xs.len()], xs.to_vec());
+        let s = Tensor::scalar(scale);
+        let z = Tensor::scalar(zp);
+        let b = Tensor::scalar(bw);
+        let node = quant_node(signed, narrow, mode);
+        quant_op(&node, &[&x, &s, &z, &b]).unwrap()[0].as_f32().unwrap().to_vec()
+    }
+
+    #[test]
+    fn round_half_even_matches_numpy() {
+        assert_eq!(round_half_even(0.5), 0.0);
+        assert_eq!(round_half_even(1.5), 2.0);
+        assert_eq!(round_half_even(2.5), 2.0);
+        assert_eq!(round_half_even(-0.5), -0.0);
+        assert_eq!(round_half_even(-1.5), -2.0);
+        assert_eq!(round_half_even(1.4), 1.0);
+        assert_eq!(round_half_even(-1.6), -2.0);
+    }
+
+    #[test]
+    fn bounds_table_ii_example() {
+        // "at 8 bits if signed is true and narrow is false, the target is
+        // [-128, 127]; if narrow is true, [-127, 127]"
+        assert_eq!(quant_bounds(true, false, 8.0), (-128.0, 127.0));
+        assert_eq!(quant_bounds(true, true, 8.0), (-127.0, 127.0));
+        assert_eq!(quant_bounds(false, false, 8.0), (0.0, 255.0));
+        assert_eq!(quant_bounds(false, true, 8.0), (0.0, 254.0));
+    }
+
+    #[test]
+    fn fractional_bit_width_bounds() {
+        // paper §V: nb = 7.5 gives a non-power-of-two interval
+        let (lo, hi) = quant_bounds(true, false, 7.5);
+        assert!(lo < -90.0 && lo > -91.0); // -2^6.5 = -90.50
+        assert!(hi > 89.0 && hi < 90.0);
+    }
+
+    #[test]
+    fn quant_int4_symmetric() {
+        let y = run_quant(&[-2.0, -0.3, 0.0, 0.24, 0.26, 3.0], 0.5, 0.0, 4.0, true, false, "ROUND");
+        // grid step 0.5, range q in [-8,7] -> y in [-4, 3.5]
+        assert_eq!(y, vec![-2.0, -0.5, 0.0, 0.0, 0.5, 3.0]);
+        let y = run_quant(&[-100.0, 100.0], 0.5, 0.0, 4.0, true, false, "ROUND");
+        assert_eq!(y, vec![-4.0, 3.5]); // saturation
+    }
+
+    #[test]
+    fn quant_unsigned_asymmetric() {
+        // uint4, zero point 8: representable reals = (q-8)*s for q in [0,15]
+        let y = run_quant(&[-10.0, 0.0, 10.0], 1.0, 8.0, 4.0, false, false, "ROUND");
+        assert_eq!(y, vec![-8.0, 0.0, 7.0]);
+    }
+
+    #[test]
+    fn quant_narrow_binary_weightlike() {
+        // signed narrow 2-bit = {-1, 0, 1} ternary
+        let y = run_quant(&[-5.0, -0.2, 0.7, 5.0], 1.0, 0.0, 2.0, true, true, "ROUND");
+        assert_eq!(y, vec![-1.0, -0.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn rounding_modes_differ() {
+        let x = [1.5f32, -1.5, 1.2, -1.2];
+        assert_eq!(run_quant(&x, 1.0, 0.0, 8.0, true, false, "ROUND"), vec![2.0, -2.0, 1.0, -1.0]);
+        assert_eq!(run_quant(&x, 1.0, 0.0, 8.0, true, false, "ROUND_TO_ZERO"), vec![1.0, -1.0, 1.0, -1.0]);
+        assert_eq!(run_quant(&x, 1.0, 0.0, 8.0, true, false, "CEIL"), vec![2.0, -1.0, 2.0, -1.0]);
+        assert_eq!(run_quant(&x, 1.0, 0.0, 8.0, true, false, "FLOOR"), vec![1.0, -2.0, 1.0, -2.0]);
+    }
+
+    #[test]
+    fn channelwise_scale_broadcast() {
+        // x [2,2], per-channel scale [2,1]
+        let x = Tensor::new(vec![2, 2], vec![1.0, 2.0, 1.0, 2.0]);
+        let s = Tensor::new(vec![2, 1], vec![1.0, 0.5]);
+        let z = Tensor::scalar(0.0);
+        let b = Tensor::scalar(8.0);
+        let node = quant_node(true, false, "ROUND");
+        let y = quant_op(&node, &[&x, &s, &z, &b]).unwrap();
+        assert_eq!(y[0].as_f32().unwrap(), &[1.0, 2.0, 1.0, 2.0]);
+        // row 1 snapped to 0.5 grid (values already on it)
+        assert_eq!(y[0].shape(), &[2, 2]);
+    }
+
+    #[test]
+    fn channelwise_bit_width_broadcast() {
+        // the paper's "tensor-wise scale with channel-wise bit width"
+        let x = Tensor::new(vec![2, 1], vec![100.0, 100.0]);
+        let s = Tensor::scalar(1.0);
+        let z = Tensor::scalar(0.0);
+        let b = Tensor::new(vec![2, 1], vec![4.0, 8.0]);
+        let node = quant_node(true, false, "ROUND");
+        let y = quant_op(&node, &[&x, &s, &z, &b]).unwrap();
+        assert_eq!(y[0].as_f32().unwrap(), &[7.0, 100.0]);
+    }
+
+    #[test]
+    fn quant_rejects_bad_params() {
+        let x = Tensor::scalar(1.0);
+        let node = quant_node(true, false, "ROUND");
+        // negative scale
+        assert!(quant_op(&node, &[&x, &Tensor::scalar(-1.0), &Tensor::scalar(0.0), &Tensor::scalar(4.0)]).is_err());
+        // bit width < 2
+        assert!(quant_op(&node, &[&x, &Tensor::scalar(1.0), &Tensor::scalar(0.0), &Tensor::scalar(1.0)]).is_err());
+        // bad rounding mode
+        let bad = quant_node(true, false, "NEAREST");
+        assert!(quant_op(&bad, &[&x, &Tensor::scalar(1.0), &Tensor::scalar(0.0), &Tensor::scalar(4.0)]).is_err());
+    }
+
+    #[test]
+    fn bipolar_quant_signs() {
+        let x = Tensor::new(vec![4], vec![-3.0, -0.0, 0.0, 2.0]);
+        let s = Tensor::scalar(0.25);
+        let node = Node::new("BipolarQuant", &["x", "s"], &["y"]).with_domain(DOMAIN_QONNX);
+        let y = bipolar_quant_op(&node, &[&x, &s]).unwrap();
+        assert_eq!(y[0].as_f32().unwrap(), &[-0.25, 0.25, 0.25, 0.25]);
+    }
+
+    #[test]
+    fn trunc_right_shift_avg_pool_usecase() {
+        // sum of four uint8 values = 10 bits; truncate back to 8 bits = /4
+        let node = Node::new("Trunc", &["x", "s", "z", "i", "o"], &["y"]).with_domain(DOMAIN_QONNX);
+        let x = Tensor::new(vec![2], vec![100.0, 203.0]);
+        let (s, z) = (Tensor::scalar(1.0), Tensor::scalar(0.0));
+        let (i, o) = (Tensor::scalar(10.0), Tensor::scalar(8.0));
+        let y = trunc_op(&node, &[&x, &s, &z, &i, &o]).unwrap();
+        // FLOOR(100/4)=25, FLOOR(203/4)=50
+        assert_eq!(y[0].as_f32().unwrap(), &[25.0, 50.0]);
+    }
+
+    #[test]
+    fn trunc_rounding_mode_round() {
+        let node = Node::new("Trunc", &["x", "s", "z", "i", "o"], &["y"])
+            .with_domain(DOMAIN_QONNX)
+            .with_attr("rounding_mode", "ROUND");
+        let x = Tensor::new(vec![1], vec![203.0]);
+        let (s, z) = (Tensor::scalar(1.0), Tensor::scalar(0.0));
+        let (i, o) = (Tensor::scalar(10.0), Tensor::scalar(8.0));
+        let y = trunc_op(&node, &[&x, &s, &z, &i, &o]).unwrap();
+        // 203/4 = 50.75 -> 51
+        assert_eq!(y[0].as_f32().unwrap(), &[51.0]);
+    }
+
+    #[test]
+    fn trunc_respects_scale() {
+        // scale 0.5: x=12.5 -> q=25; shift 2 bits -> floor(25/4)=6 -> y=3.0
+        let node = Node::new("Trunc", &["x", "s", "z", "i", "o"], &["y"]).with_domain(DOMAIN_QONNX);
+        let x = Tensor::new(vec![1], vec![12.5]);
+        let (s, z) = (Tensor::scalar(0.5), Tensor::scalar(0.0));
+        let (i, o) = (Tensor::scalar(8.0), Tensor::scalar(6.0));
+        let y = trunc_op(&node, &[&x, &s, &z, &i, &o]).unwrap();
+        assert_eq!(y[0].as_f32().unwrap(), &[3.0]);
+    }
+}

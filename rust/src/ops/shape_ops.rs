@@ -1,0 +1,390 @@
+//! Structural operators: reshapes, transposes, shape queries, etc.
+//!
+//! These include the `Shape`/`Gather`/`Unsqueeze`/`Concat` chain that
+//! PyTorch exporters emit for flatten operations — the structure the
+//! paper's Fig. 2 cleanup collapses into a single `Reshape`.
+
+use crate::ir::Node;
+use crate::tensor::Tensor;
+use anyhow::{bail, ensure, Result};
+
+/// ONNX `Reshape(x, shape)` — supports `-1` (infer) and `0` (copy dim).
+pub fn reshape(_node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    ensure!(inputs.len() == 2, "Reshape wants 2 inputs");
+    let x = inputs[0];
+    let target = inputs[1].to_i64_vec();
+    Ok(vec![x.reshape(resolve_reshape(x.shape(), &target)?)?])
+}
+
+/// Resolve an ONNX reshape target against an input shape.
+pub fn resolve_reshape(in_shape: &[usize], target: &[i64]) -> Result<Vec<usize>> {
+    let numel: usize = in_shape.iter().product();
+    let mut out = Vec::with_capacity(target.len());
+    let mut infer_at = None;
+    for (i, &d) in target.iter().enumerate() {
+        match d {
+            -1 => {
+                ensure!(infer_at.is_none(), "multiple -1 in reshape target");
+                infer_at = Some(i);
+                out.push(1);
+            }
+            0 => {
+                ensure!(i < in_shape.len(), "0-dim copy out of range");
+                out.push(in_shape[i]);
+            }
+            d if d > 0 => out.push(d as usize),
+            d => bail!("bad reshape dim {d}"),
+        }
+    }
+    if let Some(i) = infer_at {
+        let known: usize = out.iter().product();
+        ensure!(known > 0 && numel % known == 0, "cannot infer -1: {numel} / {known}");
+        out[i] = numel / known;
+    }
+    ensure!(out.iter().product::<usize>() == numel, "reshape {in_shape:?} -> {target:?} loses elements");
+    Ok(out)
+}
+
+/// ONNX `Transpose` with `perm` attribute (default reverse).
+pub fn transpose(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    let x = inputs[0];
+    let perm: Vec<usize> = match node.attrs.get("perm") {
+        Some(a) => a.as_ints()?.iter().map(|&v| v as usize).collect(),
+        None => (0..x.rank()).rev().collect(),
+    };
+    Ok(vec![x.transpose(&perm)?])
+}
+
+/// ONNX `Flatten` around `axis` (default 1).
+pub fn flatten(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    let x = inputs[0];
+    let mut axis = node.attr_int_or("axis", 1);
+    if axis < 0 {
+        axis += x.rank() as i64;
+    }
+    let axis = axis as usize;
+    let outer: usize = x.shape()[..axis].iter().product();
+    let inner: usize = x.shape()[axis..].iter().product();
+    Ok(vec![x.reshape(vec![outer, inner])?])
+}
+
+/// ONNX `Pad` (constant mode): pads from input[1] or `pads` attribute.
+pub fn pad(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    let x = inputs[0];
+    let pads: Vec<i64> = match inputs.get(1) {
+        Some(t) => t.to_i64_vec(),
+        None => node.attr("pads")?.as_ints()?.to_vec(),
+    };
+    let value = match inputs.get(2) {
+        Some(t) => t.scalar_value()?,
+        None => node.attr_float_or("value", 0.0),
+    };
+    let mode = node.attr_str_or("mode", "constant");
+    ensure!(mode == "constant", "only constant-mode Pad supported");
+    let rank = x.rank();
+    ensure!(pads.len() == 2 * rank, "pads length {} != 2*rank {rank}", pads.len());
+    let mut out_shape = Vec::with_capacity(rank);
+    for d in 0..rank {
+        let total = x.shape()[d] as i64 + pads[d] + pads[rank + d];
+        ensure!(total >= 0, "negative padded dim");
+        out_shape.push(total as usize);
+    }
+    let src = x.as_f32()?;
+    let mut out = vec![value; out_shape.iter().product()];
+    let in_strides = x.strides();
+    let out_strides = crate::tensor::strides_for(&out_shape);
+    let mut idx = vec![0usize; rank];
+    'outer: loop {
+        let mut src_off = 0;
+        let mut dst_off = 0;
+        for d in 0..rank {
+            src_off += idx[d] * in_strides[d];
+            dst_off += (idx[d] as i64 + pads[d]) as usize * out_strides[d];
+        }
+        out[dst_off] = src[src_off];
+        // advance
+        for d in (0..rank).rev() {
+            idx[d] += 1;
+            if idx[d] < x.shape()[d] {
+                continue 'outer;
+            }
+            idx[d] = 0;
+        }
+        break;
+    }
+    Ok(vec![Tensor::new(out_shape, out)])
+}
+
+/// ONNX `Concat` along `axis`.
+pub fn concat(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    ensure!(!inputs.is_empty(), "Concat wants >= 1 input");
+    let mut axis = node.attr("axis")?.as_int()?;
+    let rank = inputs[0].rank() as i64;
+    if axis < 0 {
+        axis += rank;
+    }
+    let axis = axis as usize;
+    // i64 concat (shape chains) vs f32 concat
+    if inputs[0].is_i64() {
+        ensure!(inputs[0].rank() == 1, "i64 Concat supports rank-1 only");
+        let mut data = Vec::new();
+        for t in inputs {
+            data.extend_from_slice(t.as_i64()?);
+        }
+        let n = data.len();
+        return Ok(vec![Tensor::new_i64(vec![n], data)]);
+    }
+    let mut out_shape = inputs[0].shape().to_vec();
+    let mut axis_total = 0usize;
+    for t in inputs {
+        ensure!(t.rank() == out_shape.len(), "Concat rank mismatch");
+        for d in 0..out_shape.len() {
+            if d != axis {
+                ensure!(t.shape()[d] == out_shape[d], "Concat non-axis dim mismatch");
+            }
+        }
+        axis_total += t.shape()[axis];
+    }
+    out_shape[axis] = axis_total;
+    let outer: usize = out_shape[..axis].iter().product();
+    let inner: usize = out_shape[axis + 1..].iter().product();
+    let mut out = Vec::with_capacity(out_shape.iter().product());
+    for o in 0..outer {
+        for t in inputs {
+            let ta = t.shape()[axis];
+            let src = t.as_f32()?;
+            out.extend_from_slice(&src[o * ta * inner..(o + 1) * ta * inner]);
+        }
+    }
+    Ok(vec![Tensor::new(out_shape, out)])
+}
+
+/// ONNX `Shape` — emits the input's shape as a rank-1 i64 tensor.
+pub fn shape_op(_node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    let s: Vec<i64> = inputs[0].shape().iter().map(|&d| d as i64).collect();
+    let n = s.len();
+    Ok(vec![Tensor::new_i64(vec![n], s)])
+}
+
+/// ONNX `Gather` along `axis` with i64 indices (rank-1 data fast path for
+/// the exporter shape chains, general f32 gather otherwise).
+pub fn gather(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    ensure!(inputs.len() == 2, "Gather wants 2 inputs");
+    let (data, indices) = (inputs[0], inputs[1]);
+    let axis = node.attr_int_or("axis", 0);
+    let idx = indices.to_i64_vec();
+    if data.is_i64() {
+        ensure!(data.rank() == 1 && axis == 0, "i64 Gather supports rank-1 axis-0");
+        let src = data.as_i64()?;
+        let mut out = Vec::with_capacity(idx.len());
+        for &i in &idx {
+            let i = if i < 0 { i + src.len() as i64 } else { i } as usize;
+            ensure!(i < src.len(), "Gather index {i} out of range");
+            out.push(src[i]);
+        }
+        // scalar indices produce rank-0 output
+        return Ok(vec![if indices.rank() == 0 {
+            Tensor::new_i64(vec![], out)
+        } else {
+            let n = out.len();
+            Tensor::new_i64(vec![n], out)
+        }]);
+    }
+    ensure!(axis == 0, "f32 Gather supports axis 0 only");
+    let src = data.as_f32()?;
+    let row: usize = data.shape()[1..].iter().product();
+    let mut out = Vec::with_capacity(idx.len() * row);
+    for &i in &idx {
+        let i = if i < 0 { i + data.shape()[0] as i64 } else { i } as usize;
+        ensure!(i < data.shape()[0], "Gather index {i} out of range");
+        out.extend_from_slice(&src[i * row..(i + 1) * row]);
+    }
+    let mut out_shape: Vec<usize> = indices.shape().to_vec();
+    out_shape.extend_from_slice(&data.shape()[1..]);
+    Ok(vec![Tensor::new(out_shape, out)])
+}
+
+fn resolve_axes(node: &Node, inputs: &[&Tensor], rank: i64) -> Result<Vec<i64>> {
+    let mut axes = match inputs.get(1) {
+        Some(t) => t.to_i64_vec(),
+        None => node.attr_ints_or("axes", &[]),
+    };
+    for a in &mut axes {
+        if *a < 0 {
+            *a += rank;
+        }
+    }
+    axes.sort_unstable();
+    Ok(axes)
+}
+
+/// ONNX `Unsqueeze` (axes from attr or input).
+pub fn unsqueeze(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    let x = inputs[0];
+    let out_rank = x.rank() as i64 + resolve_axes(node, inputs, x.rank() as i64 + 1)?.len() as i64;
+    let axes = resolve_axes(node, inputs, out_rank)?;
+    let mut shape: Vec<usize> = x.shape().to_vec();
+    for &a in &axes {
+        shape.insert(a as usize, 1);
+    }
+    if x.is_i64() {
+        let data = x.as_i64()?.to_vec();
+        return Ok(vec![Tensor::new_i64(shape, data)]);
+    }
+    Ok(vec![x.reshape(shape)?])
+}
+
+/// ONNX `Squeeze` (axes from attr or input; empty = all unit dims).
+pub fn squeeze(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    let x = inputs[0];
+    let axes = resolve_axes(node, inputs, x.rank() as i64)?;
+    let shape: Vec<usize> = if axes.is_empty() {
+        x.shape().iter().copied().filter(|&d| d != 1).collect()
+    } else {
+        x.shape()
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !axes.contains(&(*i as i64)))
+            .map(|(_, &d)| d)
+            .collect()
+    };
+    if x.is_i64() {
+        let data = x.as_i64()?.to_vec();
+        return Ok(vec![Tensor::new_i64(shape, data)]);
+    }
+    Ok(vec![x.reshape(shape)?])
+}
+
+/// ONNX `Identity`.
+pub fn identity(_node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    Ok(vec![inputs[0].clone()])
+}
+
+/// ONNX `Constant` — value from the `value` tensor attribute.
+pub fn constant(node: &Node, _inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    Ok(vec![node.attr("value")?.as_tensor()?.clone()])
+}
+
+/// ONNX `ArgMax` along `axis` (used for classification accuracy).
+pub fn argmax(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    let x = inputs[0];
+    let rank = x.rank() as i64;
+    let mut axis = node.attr_int_or("axis", 0);
+    if axis < 0 {
+        axis += rank;
+    }
+    ensure!(axis == rank - 1, "ArgMax only along last axis");
+    let keepdims = node.attr_int_or("keepdims", 1) != 0;
+    let inner = *x.shape().last().unwrap();
+    let outer = x.numel() / inner;
+    let src = x.as_f32()?;
+    let mut out = Vec::with_capacity(outer);
+    for r in 0..outer {
+        let row = &src[r * inner..(r + 1) * inner];
+        let mut best = 0usize;
+        for (i, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = i;
+            }
+        }
+        out.push(best as i64);
+    }
+    let mut shape: Vec<usize> = x.shape()[..x.rank() - 1].to_vec();
+    if keepdims {
+        shape.push(1);
+    }
+    Ok(vec![Tensor::new_i64(shape, out)])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reshape_infer_and_copy() {
+        assert_eq!(resolve_reshape(&[2, 3, 4], &[-1, 4]).unwrap(), vec![6, 4]);
+        assert_eq!(resolve_reshape(&[2, 3, 4], &[0, -1]).unwrap(), vec![2, 12]);
+        assert!(resolve_reshape(&[2, 3], &[-1, -1]).is_err());
+        assert!(resolve_reshape(&[2, 3], &[4, 2]).is_err());
+    }
+
+    #[test]
+    fn exporter_shape_chain_collapses_to_flatten() {
+        // Shape -> Gather(0) -> Unsqueeze -> Concat([-1]) -> Reshape:
+        // the PyTorch flatten idiom from Fig. 1, executed node by node.
+        let x = Tensor::new(vec![2, 3, 2, 2], (0..24).map(|v| v as f32).collect());
+        let s = shape_op(&Node::new("Shape", &["x"], &["s"]), &[&x]).unwrap();
+        let g = gather(
+            &Node::new("Gather", &["s", "i"], &["g"]).with_attr("axis", 0i64),
+            &[&s[0], &Tensor::new_i64(vec![], vec![0])],
+        )
+        .unwrap();
+        assert_eq!(g[0].rank(), 0);
+        let u = unsqueeze(
+            &Node::new("Unsqueeze", &["g"], &["u"]).with_attr("axes", vec![0i64]),
+            &[&g[0]],
+        )
+        .unwrap();
+        assert_eq!(u[0].shape(), &[1]);
+        let c = concat(
+            &Node::new("Concat", &["u", "m"], &["c"]).with_attr("axis", 0i64),
+            &[&u[0], &Tensor::new_i64(vec![1], vec![-1])],
+        )
+        .unwrap();
+        assert_eq!(c[0].as_i64().unwrap(), &[2, -1]);
+        let r = reshape(&Node::new("Reshape", &["x", "c"], &["y"]), &[&x, &c[0]]).unwrap();
+        assert_eq!(r[0].shape(), &[2, 12]);
+    }
+
+    #[test]
+    fn pad_2d() {
+        let n = Node::new("Pad", &["x"], &["y"]).with_attr("pads", vec![0i64, 1, 0, 1]);
+        let x = Tensor::new(vec![1, 2], vec![5.0, 6.0]);
+        let y = pad(&n, &[&x]).unwrap();
+        assert_eq!(y[0].shape(), &[1, 4]);
+        assert_eq!(y[0].as_f32().unwrap(), &[0.0, 5.0, 6.0, 0.0]);
+    }
+
+    #[test]
+    fn concat_f32_axis1() {
+        let n = Node::new("Concat", &["a", "b"], &["y"]).with_attr("axis", 1i64);
+        let a = Tensor::new(vec![2, 1], vec![1., 2.]);
+        let b = Tensor::new(vec![2, 2], vec![3., 4., 5., 6.]);
+        let y = concat(&n, &[&a, &b]).unwrap();
+        assert_eq!(y[0].shape(), &[2, 3]);
+        assert_eq!(y[0].as_f32().unwrap(), &[1., 3., 4., 2., 5., 6.]);
+    }
+
+    #[test]
+    fn flatten_axis_variants() {
+        let x = Tensor::new(vec![2, 3, 4], (0..24).map(|v| v as f32).collect());
+        let y = flatten(&Node::new("Flatten", &["x"], &["y"]), &[&x]).unwrap();
+        assert_eq!(y[0].shape(), &[2, 12]);
+        let y = flatten(&Node::new("Flatten", &["x"], &["y"]).with_attr("axis", 0i64), &[&x]).unwrap();
+        assert_eq!(y[0].shape(), &[1, 24]);
+    }
+
+    #[test]
+    fn squeeze_unsqueeze_roundtrip() {
+        let x = Tensor::new(vec![2, 3], (0..6).map(|v| v as f32).collect());
+        let u = unsqueeze(&Node::new("Unsqueeze", &["x"], &["y"]).with_attr("axes", vec![0i64, 3]), &[&x]).unwrap();
+        assert_eq!(u[0].shape(), &[1, 2, 3, 1]);
+        let s = squeeze(&Node::new("Squeeze", &["y"], &["z"]), &[&u[0]]).unwrap();
+        assert_eq!(s[0].shape(), &[2, 3]);
+    }
+
+    #[test]
+    fn argmax_last_axis() {
+        let n = Node::new("ArgMax", &["x"], &["y"]).with_attr("axis", -1i64).with_attr("keepdims", 0i64);
+        let x = Tensor::new(vec![2, 3], vec![1., 5., 2., 9., 0., 3.]);
+        let y = argmax(&n, &[&x]).unwrap();
+        assert_eq!(y[0].as_i64().unwrap(), &[1, 0]);
+    }
+
+    #[test]
+    fn constant_emits_attr_tensor() {
+        let t = Tensor::new(vec![2], vec![1.5, 2.5]);
+        let n = Node::new("Constant", &[], &["y"]).with_attr("value", t.clone());
+        assert_eq!(constant(&n, &[]).unwrap()[0], t);
+    }
+}

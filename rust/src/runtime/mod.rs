@@ -1,0 +1,207 @@
+//! PJRT artifact runtime — the serving hot path.
+//!
+//! Loads the HLO-text artifacts produced by `python/compile/aot.py` (via
+//! `make artifacts`), compiles them once on the PJRT CPU client, and
+//! executes them with zero Python involvement. See /opt/xla-example for
+//! the interchange-format rationale (HLO text, not serialized protos).
+
+use crate::tensor::Tensor;
+use anyhow::{ensure, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Artifact metadata sidecar (`<tag>.meta.json`) written by aot.py:
+/// shapes plus a probe input/output vector for end-to-end self-checks.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub batch: usize,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    pub probe_input: Vec<f32>,
+    pub probe_output: Vec<f32>,
+}
+
+impl ArtifactMeta {
+    pub fn load(path: &Path) -> Result<ArtifactMeta> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+        let j = crate::ir::json::Json::parse(&text)?;
+        let shape = |key: &str| -> Result<Vec<usize>> {
+            j.req(key)?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_i64().map(|x| x as usize))
+                .collect()
+        };
+        let floats = |key: &str| -> Result<Vec<f32>> {
+            j.req(key)?.as_arr()?.iter().map(|v| v.as_f64().map(|x| x as f32)).collect()
+        };
+        Ok(ArtifactMeta {
+            name: j.req("name")?.as_str()?.to_string(),
+            batch: j.req("batch")?.as_i64()? as usize,
+            input_shape: shape("input_shape")?,
+            output_shape: shape("output_shape")?,
+            probe_input: floats("probe_input")?,
+            probe_output: floats("probe_output")?,
+        })
+    }
+}
+
+/// A compiled PJRT executable with fixed input/output shapes.
+pub struct CompiledModel {
+    exe: xla::PjRtLoadedExecutable,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+}
+
+/// PJRT CPU runtime wrapper. One client, many compiled models.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT client: {e:?}"))?;
+        Ok(PjrtRuntime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact with declared shapes.
+    pub fn load_hlo_text(
+        &self,
+        path: &Path,
+        input_shape: Vec<usize>,
+        output_shape: Vec<usize>,
+    ) -> Result<CompiledModel> {
+        ensure!(path.exists(), "artifact {path:?} not found — run `make artifacts`");
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+            .map_err(|e| anyhow::anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {path:?}: {e:?}"))?;
+        Ok(CompiledModel { exe, input_shape, output_shape })
+    }
+
+    /// Load a model artifact pair (`<stem>.hlo.txt` + `<stem>.meta.json`).
+    pub fn load_artifact(&self, stem: &Path) -> Result<(CompiledModel, ArtifactMeta)> {
+        let meta = ArtifactMeta::load(&stem.with_extension("meta.json"))?;
+        let model = self.load_hlo_text(
+            &stem.with_extension("hlo.txt"),
+            meta.input_shape.clone(),
+            meta.output_shape.clone(),
+        )?;
+        Ok((model, meta))
+    }
+}
+
+impl CompiledModel {
+    /// Execute on one input tensor (shape must match the artifact).
+    pub fn execute(&self, x: &Tensor) -> Result<Tensor> {
+        ensure!(
+            x.shape() == self.input_shape.as_slice(),
+            "input shape {:?} != artifact shape {:?}",
+            x.shape(),
+            self.input_shape
+        );
+        let dims: Vec<i64> = x.shape().iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(x.as_f32()?)
+            .reshape(&dims)
+            .map_err(|e| anyhow::anyhow!("literal reshape: {e:?}"))?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True
+        let out = result.to_tuple1().map_err(|e| anyhow::anyhow!("to_tuple1: {e:?}"))?;
+        let values = out.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
+        Ok(Tensor::new(self.output_shape.clone(), values))
+    }
+
+    /// Run the artifact's probe vector and compare against the recorded
+    /// expected output (build-time oracle). Returns max abs error.
+    pub fn self_check(&self, meta: &ArtifactMeta) -> Result<f32> {
+        let x = Tensor::new(meta.input_shape.clone(), meta.probe_input.clone());
+        let y = self.execute(&x)?;
+        let got = y.as_f32()?;
+        ensure!(got.len() == meta.probe_output.len(), "probe length mismatch");
+        let mut max_err = 0f32;
+        for (a, b) in got.iter().zip(&meta.probe_output) {
+            max_err = max_err.max((a - b).abs());
+        }
+        Ok(max_err)
+    }
+}
+
+/// Default artifact directory (repo-rooted, overridable via QONNX_ARTIFACTS).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("QONNX_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact(stem: &str) -> Option<PathBuf> {
+        let p = artifacts_dir().join(stem);
+        p.with_extension("hlo.txt").exists().then_some(p)
+    }
+
+    #[test]
+    fn meta_roundtrip() {
+        let Some(stem) = artifact("tfc_w2a2") else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let meta = ArtifactMeta::load(&stem.with_extension("meta.json")).unwrap();
+        assert_eq!(meta.input_shape, vec![8, 784]);
+        assert_eq!(meta.output_shape, vec![8, 10]);
+        assert_eq!(meta.probe_input.len(), 8 * 784);
+    }
+
+    #[test]
+    fn pjrt_executes_tfc_artifact() {
+        let Some(stem) = artifact("tfc_w2a2") else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = PjrtRuntime::cpu().unwrap();
+        let (model, meta) = rt.load_artifact(&stem).unwrap();
+        let err = model.self_check(&meta).unwrap();
+        assert!(err < 1e-4, "probe mismatch: max abs err {err}");
+    }
+
+    #[test]
+    fn pjrt_quant_kernel_artifact() {
+        let p = artifacts_dir().join("quant_b4_256x256.hlo.txt");
+        if !p.exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = PjrtRuntime::cpu().unwrap();
+        let model = rt.load_hlo_text(&p, vec![256, 256], vec![256, 256]).unwrap();
+        let x = Tensor::full(vec![256, 256], 0.3);
+        let y = model.execute(&x).unwrap();
+        // quant(0.3, scale 0.125, int4) = round(2.4)*0.125 = 0.25
+        assert!((y.as_f32().unwrap()[0] - 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let Some(stem) = artifact("tfc_w2a2") else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = PjrtRuntime::cpu().unwrap();
+        let (model, _) = rt.load_artifact(&stem).unwrap();
+        assert!(model.execute(&Tensor::zeros(vec![4, 784])).is_err());
+    }
+}

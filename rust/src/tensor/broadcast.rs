@@ -1,0 +1,140 @@
+//! Numpy/ONNX-style broadcasting: shape unification and flat-offset
+//! iteration of a tensor as if broadcast to a larger shape.
+
+use anyhow::{bail, Result};
+
+/// Unify two shapes under numpy broadcasting rules.
+pub fn broadcast_shapes(a: &[usize], b: &[usize]) -> Result<Vec<usize>> {
+    let rank = a.len().max(b.len());
+    let mut out = vec![0usize; rank];
+    for d in 0..rank {
+        let da = if d < rank - a.len() { 1 } else { a[d - (rank - a.len())] };
+        let db = if d < rank - b.len() { 1 } else { b[d - (rank - b.len())] };
+        out[d] = if da == db {
+            da
+        } else if da == 1 {
+            db
+        } else if db == 1 {
+            da
+        } else {
+            bail!("shapes {a:?} and {b:?} are not broadcastable (dim {d}: {da} vs {db})");
+        };
+    }
+    Ok(out)
+}
+
+/// True if `small` broadcasts to `big` (one-directional, ONNX attr style).
+pub fn broadcastable_to(small: &[usize], big: &[usize]) -> bool {
+    match broadcast_shapes(small, big) {
+        Ok(s) => s == big,
+        Err(_) => false,
+    }
+}
+
+/// Iterates flat offsets into a tensor of shape `src` as if it were
+/// broadcast to `dst`, in row-major order of `dst`.
+pub struct BroadcastIter {
+    /// stride to apply per dst dim (0 where src is broadcast)
+    strides: Vec<usize>,
+    shape: Vec<usize>,
+    idx: Vec<usize>,
+    offset: usize,
+    remaining: usize,
+}
+
+impl BroadcastIter {
+    pub fn new(src: &[usize], dst: &[usize]) -> BroadcastIter {
+        let rank = dst.len();
+        let pad = rank - src.len();
+        // row-major strides of src, padded to dst rank
+        let mut src_strides = vec![0usize; rank];
+        let mut acc = 1usize;
+        for d in (0..src.len()).rev() {
+            src_strides[pad + d] = if src[d] == 1 { 0 } else { acc };
+            acc *= src[d];
+        }
+        BroadcastIter {
+            strides: src_strides,
+            shape: dst.to_vec(),
+            idx: vec![0; rank],
+            offset: 0,
+            remaining: dst.iter().product(),
+        }
+    }
+}
+
+impl Iterator for BroadcastIter {
+    type Item = usize;
+
+    fn next(&mut self) -> Option<usize> {
+        if self.remaining == 0 {
+            return None;
+        }
+        let cur = self.offset;
+        self.remaining -= 1;
+        // increment multi-index (row-major, last dim fastest)
+        for d in (0..self.shape.len()).rev() {
+            self.idx[d] += 1;
+            self.offset += self.strides[d];
+            if self.idx[d] < self.shape[d] {
+                break;
+            }
+            self.offset -= self.strides[d] * self.shape[d];
+            self.idx[d] = 0;
+        }
+        Some(cur)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unify_basic() {
+        assert_eq!(broadcast_shapes(&[2, 3], &[3]).unwrap(), vec![2, 3]);
+        assert_eq!(broadcast_shapes(&[2, 1], &[1, 3]).unwrap(), vec![2, 3]);
+        assert_eq!(broadcast_shapes(&[], &[4]).unwrap(), vec![4]);
+        assert!(broadcast_shapes(&[2], &[3]).is_err());
+    }
+
+    #[test]
+    fn unify_channelwise() {
+        // channel-wise scale [64,1,1] against activation [1,64,8,8]
+        assert_eq!(
+            broadcast_shapes(&[64, 1, 1], &[1, 64, 8, 8]).unwrap(),
+            vec![1, 64, 8, 8]
+        );
+    }
+
+    #[test]
+    fn one_directional() {
+        assert!(broadcastable_to(&[3], &[2, 3]));
+        assert!(broadcastable_to(&[], &[2, 3]));
+        assert!(!broadcastable_to(&[2, 3], &[3]));
+    }
+
+    #[test]
+    fn iter_scalar() {
+        let offs: Vec<usize> = BroadcastIter::new(&[], &[2, 2]).collect();
+        assert_eq!(offs, vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn iter_row() {
+        let offs: Vec<usize> = BroadcastIter::new(&[3], &[2, 3]).collect();
+        assert_eq!(offs, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn iter_col() {
+        let offs: Vec<usize> = BroadcastIter::new(&[2, 1], &[2, 3]).collect();
+        assert_eq!(offs, vec![0, 0, 0, 1, 1, 1]);
+    }
+
+    #[test]
+    fn iter_identity() {
+        let offs: Vec<usize> = BroadcastIter::new(&[2, 2], &[2, 2]).collect();
+        assert_eq!(offs, vec![0, 1, 2, 3]);
+    }
+}

@@ -1,0 +1,122 @@
+//! im2col lowering for convolution: turns NCHW conv into GEMM, the same
+//! strategy FINN uses (Im2Col + MatMul) and the executor's conv hot path.
+
+use super::Tensor;
+use anyhow::{ensure, Result};
+
+/// Output spatial dim for a conv/pool window.
+pub fn conv_out_dim(in_dim: usize, k: usize, stride: usize, pad_begin: usize, pad_end: usize) -> usize {
+    (in_dim + pad_begin + pad_end - k) / stride + 1
+}
+
+/// im2col over an NCHW input.
+///
+/// Returns a `[n * oh * ow, c * kh * kw]` matrix whose rows are flattened
+/// receptive fields, so conv = im2col(x) × W^T with W `[m, c*kh*kw]`.
+/// Padding is zero-fill (compatible with integer zero-points merged into
+/// bias, per paper §II).
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_nchw(
+    x: &Tensor,
+    kh: usize,
+    kw: usize,
+    stride_h: usize,
+    stride_w: usize,
+    pad_top: usize,
+    pad_left: usize,
+    pad_bottom: usize,
+    pad_right: usize,
+) -> Result<Tensor> {
+    ensure!(x.rank() == 4, "im2col wants NCHW rank-4, got {:?}", x.shape());
+    let (n, c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let oh = conv_out_dim(h, kh, stride_h, pad_top, pad_bottom);
+    let ow = conv_out_dim(w, kw, stride_w, pad_left, pad_right);
+    let src = x.as_f32()?;
+    let row_len = c * kh * kw;
+    let mut out = vec![0f32; n * oh * ow * row_len];
+    for b in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = ((b * oh + oy) * ow + ox) * row_len;
+                for ch in 0..c {
+                    for ky in 0..kh {
+                        let iy = oy * stride_h + ky;
+                        if iy < pad_top || iy - pad_top >= h {
+                            continue; // zero padding
+                        }
+                        let iy = iy - pad_top;
+                        let src_base = ((b * c + ch) * h + iy) * w;
+                        let dst_base = row + (ch * kh + ky) * kw;
+                        for kx in 0..kw {
+                            let ix = ox * stride_w + kx;
+                            if ix < pad_left || ix - pad_left >= w {
+                                continue;
+                            }
+                            out[dst_base + kx] = src[src_base + (ix - pad_left)];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(Tensor::new(vec![n * oh * ow, row_len], out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn out_dims() {
+        assert_eq!(conv_out_dim(32, 3, 1, 0, 0), 30);
+        assert_eq!(conv_out_dim(32, 3, 1, 1, 1), 32);
+        assert_eq!(conv_out_dim(28, 2, 2, 0, 0), 14);
+    }
+
+    #[test]
+    fn identity_kernel_1x1() {
+        let x = Tensor::new(vec![1, 1, 2, 2], vec![1., 2., 3., 4.]);
+        let m = im2col_nchw(&x, 1, 1, 1, 1, 0, 0, 0, 0).unwrap();
+        assert_eq!(m.shape(), &[4, 1]);
+        assert_eq!(m.as_f32().unwrap(), &[1., 2., 3., 4.]);
+    }
+
+    #[test]
+    fn k2_no_pad() {
+        let x = Tensor::new(vec![1, 1, 3, 3], (1..=9).map(|v| v as f32).collect());
+        let m = im2col_nchw(&x, 2, 2, 1, 1, 0, 0, 0, 0).unwrap();
+        assert_eq!(m.shape(), &[4, 4]);
+        // first receptive field: [1,2,4,5]
+        assert_eq!(&m.as_f32().unwrap()[0..4], &[1., 2., 4., 5.]);
+        // last: [5,6,8,9]
+        assert_eq!(&m.as_f32().unwrap()[12..16], &[5., 6., 8., 9.]);
+    }
+
+    #[test]
+    fn padding_zero_fill() {
+        let x = Tensor::new(vec![1, 1, 2, 2], vec![1., 2., 3., 4.]);
+        let m = im2col_nchw(&x, 3, 3, 1, 1, 1, 1, 1, 1).unwrap();
+        assert_eq!(m.shape(), &[4, 9]);
+        // top-left output: window centered at (0,0) — corners padded
+        let row0 = &m.as_f32().unwrap()[0..9];
+        assert_eq!(row0, &[0., 0., 0., 0., 1., 2., 0., 3., 4.]);
+    }
+
+    #[test]
+    fn multichannel_layout() {
+        // 2 channels, row layout must be [c0 window | c1 window]
+        let x = Tensor::new(vec![1, 2, 2, 2], vec![1., 2., 3., 4., 10., 20., 30., 40.]);
+        let m = im2col_nchw(&x, 2, 2, 1, 1, 0, 0, 0, 0).unwrap();
+        assert_eq!(m.shape(), &[1, 8]);
+        assert_eq!(m.as_f32().unwrap(), &[1., 2., 3., 4., 10., 20., 30., 40.]);
+    }
+
+    #[test]
+    fn stride_two() {
+        let x = Tensor::new(vec![1, 1, 4, 4], (0..16).map(|v| v as f32).collect());
+        let m = im2col_nchw(&x, 2, 2, 2, 2, 0, 0, 0, 0).unwrap();
+        assert_eq!(m.shape(), &[4, 4]);
+        assert_eq!(&m.as_f32().unwrap()[0..4], &[0., 1., 4., 5.]);
+        assert_eq!(&m.as_f32().unwrap()[4..8], &[2., 3., 6., 7.]);
+    }
+}

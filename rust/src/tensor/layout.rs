@@ -1,0 +1,46 @@
+//! Data-layout conversions between channels-first (NCHW, ONNX default) and
+//! channels-last (NHWC, what FINN / hls4ml FPGA backends expect) — the
+//! tensor-level primitive behind the paper's Fig. 3 transformation.
+
+use super::Tensor;
+use anyhow::{ensure, Result};
+
+/// NCHW → NHWC.
+pub fn nchw_to_nhwc(x: &Tensor) -> Result<Tensor> {
+    ensure!(x.rank() == 4, "nchw_to_nhwc wants rank-4, got {:?}", x.shape());
+    x.transpose(&[0, 2, 3, 1])
+}
+
+/// NHWC → NCHW.
+pub fn nhwc_to_nchw(x: &Tensor) -> Result<Tensor> {
+    ensure!(x.rank() == 4, "nhwc_to_nchw wants rank-4, got {:?}", x.shape());
+    x.transpose(&[0, 3, 1, 2])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let x = Tensor::new(vec![2, 3, 4, 5], (0..120).map(|v| v as f32).collect());
+        let y = nchw_to_nhwc(&x).unwrap();
+        assert_eq!(y.shape(), &[2, 4, 5, 3]);
+        let z = nhwc_to_nchw(&y).unwrap();
+        assert_eq!(z, x);
+    }
+
+    #[test]
+    fn channels_move_last() {
+        // shape [1, 256, 1, 1] -> [1, 1, 1, 256], the Fig. 3 example shape
+        let x = Tensor::new(vec![1, 256, 1, 1], (0..256).map(|v| v as f32).collect());
+        let y = nchw_to_nhwc(&x).unwrap();
+        assert_eq!(y.shape(), &[1, 1, 1, 256]);
+        assert_eq!(y.as_f32().unwrap()[7], 7.0);
+    }
+
+    #[test]
+    fn rejects_non_4d() {
+        assert!(nchw_to_nhwc(&Tensor::zeros(vec![2, 3])).is_err());
+    }
+}

@@ -1,0 +1,66 @@
+//! Test utilities: deterministic random tensors and a lightweight
+//! property-testing loop (proptest is not in the vendored crate set).
+
+use crate::tensor::Tensor;
+use crate::zoo::rng::Rng;
+
+/// Random f32 tensor with values in `[lo, hi)`.
+pub fn random_tensor(rng: &mut Rng, shape: Vec<usize>, lo: f32, hi: f32) -> Tensor {
+    let n = shape.iter().product();
+    Tensor::new(shape, (0..n).map(|_| rng.range(lo, hi)).collect())
+}
+
+/// Assert two tensors are elementwise close.
+#[track_caller]
+pub fn assert_close(a: &Tensor, b: &Tensor, tol: f32) {
+    assert_eq!(a.shape(), b.shape(), "shape mismatch");
+    let (av, bv) = (a.as_f32().unwrap(), b.as_f32().unwrap());
+    for (i, (x, y)) in av.iter().zip(bv).enumerate() {
+        assert!(
+            (x - y).abs() <= tol,
+            "element {i}: {x} vs {y} (tol {tol}, shapes {:?})",
+            a.shape()
+        );
+    }
+}
+
+/// Poor-man's property test: run `f` over `cases` seeded inputs; panics
+/// with the failing seed for reproduction.
+pub fn for_all_seeds(cases: u64, f: impl Fn(&mut Rng)) {
+    for seed in 1..=cases {
+        let mut rng = Rng::new(seed.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property failed at seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_tensor_in_range() {
+        let mut rng = Rng::new(1);
+        let t = random_tensor(&mut rng, vec![4, 4], -2.0, 2.0);
+        assert!(t.as_f32().unwrap().iter().all(|v| (-2.0..2.0).contains(v)));
+    }
+
+    #[test]
+    #[should_panic]
+    fn assert_close_catches_mismatch() {
+        assert_close(&Tensor::scalar(1.0), &Tensor::scalar(2.0), 0.1);
+    }
+
+    #[test]
+    fn for_all_seeds_runs() {
+        let mut count = 0u64;
+        // not capturing &mut across unwind boundary: use a cell
+        let counter = std::cell::Cell::new(0u64);
+        for_all_seeds(5, |_| counter.set(counter.get() + 1));
+        count += counter.get();
+        assert_eq!(count, 5);
+    }
+}

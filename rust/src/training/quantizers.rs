@@ -1,0 +1,118 @@
+//! Training-time quantizers (the forward halves of the STE pairs).
+
+/// A quantized weight tensor: values on the `scale`-spaced grid.
+pub struct QuantizedWeights {
+    pub values: Vec<f32>,
+    pub scale: f32,
+}
+
+/// Quantize latent float weights for the forward pass.
+///
+/// * 1 bit — XNOR-Net style bipolar: `scale · sign(w)` with
+///   `scale = mean |w|`.
+/// * N bits — narrow symmetric: `scale = max |w| / (2^(N-1) - 1)`,
+///   `q = clamp(round(w / scale))`.
+pub fn quantize_weights(w: &[f32], bits: u32) -> QuantizedWeights {
+    if bits == 1 {
+        let scale = (w.iter().map(|v| v.abs()).sum::<f32>() / w.len() as f32).max(1e-8);
+        QuantizedWeights {
+            values: w.iter().map(|&v| if v >= 0.0 { scale } else { -scale }).collect(),
+            scale,
+        }
+    } else if bits == 2 {
+        // Ternary Weight Networks (Li & Liu): threshold Δ = 0.7·mean|w|,
+        // scale = mean |w| over the supra-threshold weights. Max-scaled
+        // ternary is unstable once any latent weight saturates.
+        let mean_abs = w.iter().map(|v| v.abs()).sum::<f32>() / w.len() as f32;
+        let delta = 0.7 * mean_abs;
+        let (mut sum, mut cnt) = (0f32, 0usize);
+        for &v in w {
+            if v.abs() > delta {
+                sum += v.abs();
+                cnt += 1;
+            }
+        }
+        let scale = if cnt > 0 { sum / cnt as f32 } else { mean_abs.max(1e-8) };
+        QuantizedWeights {
+            values: w
+                .iter()
+                .map(|&v| if v > delta { scale } else if v < -delta { -scale } else { 0.0 })
+                .collect(),
+            scale,
+        }
+    } else {
+        let qmax = 2f32.powi(bits as i32 - 1) - 1.0;
+        let maxabs = w.iter().fold(0f32, |m, v| m.max(v.abs())).max(1e-8);
+        let scale = maxabs / qmax;
+        QuantizedWeights {
+            values: w
+                .iter()
+                .map(|&v| (v / scale).round().clamp(-qmax, qmax) * scale)
+                .collect(),
+            scale,
+        }
+    }
+}
+
+/// Activation scale from a calibrated max magnitude.
+pub fn act_scale_from_max(act_max: f32, bits: u32) -> f32 {
+    if bits == 1 {
+        return 1.0; // bipolar: scale fixed at 1
+    }
+    let qmax = 2f32.powi(bits as i32 - 1) - 1.0;
+    (act_max / qmax).max(1e-8)
+}
+
+/// Quantize pre-activations: sign for 1 bit, symmetric int-N otherwise.
+pub fn quantize_act(z: &[f32], scale: f32, bits: u32) -> Vec<f32> {
+    if bits == 1 {
+        return z.iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }).collect();
+    }
+    let qmax = 2f32.powi(bits as i32 - 1) - 1.0;
+    let qmin = -qmax - 1.0;
+    z.iter()
+        .map(|&v| (v / scale).round().clamp(qmin, qmax) * scale)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bipolar_weights() {
+        let q = quantize_weights(&[0.5, -0.1, 0.3, -0.9], 1);
+        let alpha = (0.5 + 0.1 + 0.3 + 0.9) / 4.0;
+        assert_eq!(q.scale, alpha);
+        assert_eq!(q.values, vec![alpha, -alpha, alpha, -alpha]);
+    }
+
+    #[test]
+    fn int2_weights_twn_grid() {
+        // TWN: Δ = 0.7·mean|w| = 0.49; scale = mean of |w| > Δ = 0.8667
+        let q = quantize_weights(&[1.0, -1.0, 0.2, 0.6], 2);
+        let s = (1.0 + 1.0 + 0.6) / 3.0;
+        assert!((q.scale - s).abs() < 1e-6);
+        assert_eq!(q.values, vec![s, -s, 0.0, s]);
+        // grid is ternary
+        for v in &q.values {
+            assert!(*v == 0.0 || v.abs() == s);
+        }
+    }
+
+    #[test]
+    fn int4_weights_on_grid() {
+        let q = quantize_weights(&[0.7, -0.35, 0.05], 4);
+        for v in &q.values {
+            assert!((v / q.scale).fract().abs() < 1e-5);
+        }
+        assert_eq!(q.values[0], 0.7); // max maps exactly to qmax·s
+    }
+
+    #[test]
+    fn act_quant_sign_and_grid() {
+        assert_eq!(quantize_act(&[2.0, -0.5], 1.0, 1), vec![1.0, -1.0]);
+        let out = quantize_act(&[0.9, -3.0], 0.25, 4);
+        assert_eq!(out, vec![1.0, -2.0]); // clamped at -8·0.25
+    }
+}

@@ -1,0 +1,227 @@
+//! Channels-first → channels-last conversion (paper §V, Fig. 3).
+//!
+//! FINN and hls4ml FPGA backends stream pixels with channels innermost, so
+//! QONNX provides a transformation from ONNX's default NCHW to NHWC. The
+//! strategy mirrors qonnx's:
+//!
+//! * every 4-D activation tensor becomes NHWC;
+//! * shape-dependent ops (`Conv`, pools, `BatchNormalization`) get the
+//!   `data_layout = "NHWC"` wrapper attribute so the graph remains
+//!   executable for verification (weights stay OIHW);
+//! * channel-broadcast parameter initializers of elementwise ops (shape
+//!   `[C,1,1]`) are reshaped to `[C]` so they broadcast over the trailing
+//!   channel axis;
+//! * a `Transpose` back to NCHW is inserted in front of `Reshape`/
+//!   `Flatten` so the flattened element order (and therefore downstream
+//!   dense weights) is preserved;
+//! * graph inputs/outputs with 4-D shapes are re-declared as NHWC.
+
+use super::infer_shapes;
+use crate::ir::{ModelGraph, Node};
+use anyhow::{ensure, Result};
+use std::collections::BTreeSet;
+
+const LAYOUT_OPS: &[&str] = &[
+    "Conv",
+    "MaxPool",
+    "AveragePool",
+    "GlobalAveragePool",
+    "BatchNormalization",
+];
+
+/// Elementwise ops that are layout-agnostic provided their secondary
+/// inputs broadcast correctly.
+const ELTWISE_OPS: &[&str] = &[
+    "Relu", "Sign", "Sigmoid", "Tanh", "Add", "Sub", "Mul", "Div", "Quant", "BipolarQuant",
+    "Trunc", "Clip", "QuantizeLinear", "DequantizeLinear", "MultiThreshold", "Identity", "Pad",
+];
+
+/// Convert a cleaned NCHW graph to channels-last. Requires shapes to be
+/// inferred (run [`super::cleanup`] first).
+pub fn to_channels_last(graph: &mut ModelGraph) -> Result<bool> {
+    graph.sort_topologically()?;
+
+    // set of tensors that are 4-D activations (to be relaid out)
+    let mut nhwc: BTreeSet<String> = BTreeSet::new();
+    for vi in &mut graph.inputs {
+        if let Some(shape) = &vi.shape {
+            if shape.len() == 4 {
+                let (n, c, h, w) = (shape[0], shape[1], shape[2], shape[3]);
+                vi.shape = Some(vec![n, h, w, c]);
+                nhwc.insert(vi.name.clone());
+            }
+        }
+    }
+    if nhwc.is_empty() {
+        return Ok(false); // nothing 4-D: dense-only model
+    }
+
+    let mut new_nodes: Vec<Node> = Vec::with_capacity(graph.nodes.len());
+    let mut transpose_count = 0usize;
+    for node in graph.nodes.clone() {
+        let mut node = node;
+        let op: &str = &node.op_type;
+        if LAYOUT_OPS.contains(&op) {
+            // data input 0 must be NHWC; params (weights etc.) untouched
+            if nhwc.contains(&node.inputs[0]) {
+                node.attrs.insert("data_layout".into(), "NHWC".into());
+                for o in &node.outputs {
+                    nhwc.insert(o.clone());
+                }
+            }
+            new_nodes.push(node);
+        } else if ELTWISE_OPS.contains(&op) {
+            let data_is_nhwc = nhwc.contains(&node.inputs[0]);
+            if data_is_nhwc {
+                // fix channel-broadcast parameter initializers [C,1,1] -> [C]
+                for inp in node.inputs.iter().skip(1) {
+                    if let Some(t) = graph.initializers.get(inp) {
+                        let s = t.shape().to_vec();
+                        if s.len() == 3 && s[1] == 1 && s[2] == 1 && s[0] > 1 {
+                            let flat = t.reshape(vec![s[0]])?;
+                            graph.initializers.insert(inp.clone(), flat);
+                        }
+                    }
+                }
+                if op == "MultiThreshold" {
+                    node.attrs.insert("data_layout".into(), "NHWC".into());
+                }
+                for o in &node.outputs {
+                    nhwc.insert(o.clone());
+                }
+            }
+            new_nodes.push(node);
+        } else if matches!(op, "Reshape" | "Flatten") && nhwc.contains(&node.inputs[0]) {
+            // preserve element order: transpose back to NCHW first
+            let tname = graph.fresh_name(&format!("{}_nchw", node.inputs[0]));
+            let tnode = Node::new("Transpose", &[&node.inputs[0]], &[&tname])
+                .with_name(&format!("Transpose_cl_{transpose_count}"))
+                .with_attr("perm", vec![0i64, 3, 1, 2]);
+            transpose_count += 1;
+            new_nodes.push(tnode);
+            node.inputs[0] = tname;
+            new_nodes.push(node);
+        } else {
+            ensure!(
+                !node.present_inputs().any(|i| nhwc.contains(i)),
+                "channels-last: op '{}' ({}) consumes an NHWC tensor but has no layout rule",
+                node.name,
+                node.op_type
+            );
+            new_nodes.push(node);
+        }
+    }
+    graph.nodes = new_nodes;
+
+    // re-declare 4-D outputs as NHWC
+    for vi in &mut graph.outputs {
+        if nhwc.contains(&vi.name) {
+            if let Some(shape) = &vi.shape {
+                if shape.len() == 4 {
+                    let (n, c, h, w) = (shape[0], shape[1], shape[2], shape[3]);
+                    vi.shape = Some(vec![n, h, w, c]);
+                }
+            }
+        }
+    }
+    // stale intermediate shape annotations: drop and re-infer
+    graph.value_info.clear();
+    graph.sort_topologically()?;
+    infer_shapes(graph)?;
+    graph.validate()?;
+    Ok(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec;
+    use crate::ir::GraphBuilder;
+    use crate::tensor::{nchw_to_nhwc, Tensor};
+    use crate::transforms::cleanup;
+    use std::collections::BTreeMap;
+
+    /// conv -> relu -> quant -> maxpool -> flatten -> matmul
+    fn small_cnn() -> ModelGraph {
+        let mut b = GraphBuilder::new("cnn");
+        b.input("x", vec![1, 3, 8, 8]);
+        b.initializer("w", Tensor::new(vec![4, 3, 3, 3], (0..108).map(|v| (v % 7) as f32 - 3.0).collect()));
+        b.node(
+            "Conv",
+            &["x", "w"],
+            &["c"],
+            &[("kernel_shape", vec![3i64, 3].into()), ("pads", vec![1i64, 1, 1, 1].into())],
+        );
+        b.node("Relu", &["c"], &["r"], &[]);
+        b.quant("r", "q", 0.5, 0.0, 4.0, false, false, "ROUND");
+        b.node("MaxPool", &["q"], &["p"], &[("kernel_shape", vec![2i64, 2].into())]);
+        b.node("Flatten", &["p"], &["f"], &[]);
+        b.initializer("w2", Tensor::new(vec![64, 2], (0..128).map(|v| (v % 5) as f32 - 2.0).collect()));
+        b.node("MatMul", &["f", "w2"], &["y"], &[]);
+        b.output_unknown("y");
+        let mut g = b.finish().unwrap();
+        cleanup(&mut g).unwrap();
+        g
+    }
+
+    #[test]
+    fn converts_and_preserves_semantics() {
+        let g0 = small_cnn();
+        let mut g1 = g0.clone();
+        assert!(to_channels_last(&mut g1).unwrap());
+
+        // input is now NHWC
+        assert_eq!(g1.inputs[0].shape, Some(vec![1, 8, 8, 3]));
+        // conv got the wrapper attribute
+        let conv = g1.nodes.iter().find(|n| n.op_type == "Conv").unwrap();
+        assert_eq!(conv.attr_str_or("data_layout", ""), "NHWC");
+        // a transpose guards the flatten
+        assert!(g1.nodes.iter().any(|n| n.op_type == "Transpose"));
+
+        let x = Tensor::new(vec![1, 3, 8, 8], (0..192).map(|v| (v % 11) as f32 * 0.2 - 1.0).collect());
+        let y0 = exec::execute_simple(&g0, &x).unwrap();
+        let mut m = BTreeMap::new();
+        m.insert("x".to_string(), nchw_to_nhwc(&x).unwrap());
+        let y1 = exec::execute(&g1, &m).unwrap().outputs.into_values().next().unwrap();
+        assert_eq!(y0, y1);
+    }
+
+    #[test]
+    fn intermediate_shapes_are_nhwc() {
+        // Fig. 3: "the 256 channels ... have now moved to the last position"
+        let mut g = small_cnn();
+        to_channels_last(&mut g).unwrap();
+        assert_eq!(g.tensor_shape("c"), Some(vec![1, 8, 8, 4]));
+        assert_eq!(g.tensor_shape("p"), Some(vec![1, 4, 4, 4]));
+    }
+
+    #[test]
+    fn dense_only_model_untouched() {
+        let mut b = GraphBuilder::new("dense");
+        b.input("x", vec![1, 4]);
+        b.node("Relu", &["x"], &["y"], &[]);
+        b.output("y", vec![1, 4]);
+        let mut g = b.finish().unwrap();
+        assert!(!to_channels_last(&mut g).unwrap());
+    }
+
+    #[test]
+    fn channelwise_scale_initializer_reshaped() {
+        let mut b = GraphBuilder::new("cw");
+        b.input("x", vec![1, 2, 2, 2]);
+        b.quant_tensor_scale("x", "q", Tensor::new(vec![2, 1, 1], vec![0.5, 0.25]), 0.0, 4.0, true, false);
+        b.output_unknown("q");
+        let mut g = b.finish().unwrap();
+        cleanup(&mut g).unwrap();
+        let g0 = g.clone();
+        to_channels_last(&mut g).unwrap();
+        assert_eq!(g.initializers["q_scale"].shape(), &[2]);
+
+        let x = Tensor::new(vec![1, 2, 2, 2], vec![0.9, -0.6, 0.3, 0.1, 0.9, -0.6, 0.3, 0.1]);
+        let y0 = exec::execute_simple(&g0, &x).unwrap();
+        let mut m = BTreeMap::new();
+        m.insert("x".to_string(), nchw_to_nhwc(&x).unwrap());
+        let y1 = exec::execute(&g, &m).unwrap().outputs.into_values().next().unwrap();
+        assert_eq!(nchw_to_nhwc(&y0).unwrap(), y1);
+    }
+}

@@ -1,0 +1,170 @@
+//! Cleanup pipeline: the paper's Fig. 1 → Fig. 2 step.
+//!
+//! `cleanup` = shape inference → constant folding → identity removal →
+//! dead-node/dead-initializer elimination → unique node names →
+//! topological order.
+
+use super::{fold_constants, infer_shapes};
+use crate::ir::ModelGraph;
+use anyhow::Result;
+use std::collections::BTreeSet;
+
+/// Remove `Identity` and no-op `Dropout` nodes.
+pub fn remove_identity(graph: &mut ModelGraph) -> Result<bool> {
+    let mut changed = false;
+    loop {
+        let idx = graph
+            .nodes
+            .iter()
+            .position(|n| matches!(n.op_type.as_str(), "Identity" | "Dropout"));
+        match idx {
+            Some(i) => {
+                graph.remove_node_rewire(i)?;
+                changed = true;
+            }
+            None => return Ok(changed),
+        }
+    }
+}
+
+/// Remove nodes whose outputs are never consumed, and initializers that
+/// nothing references.
+pub fn remove_dead_nodes(graph: &mut ModelGraph) -> Result<bool> {
+    let mut changed = false;
+    loop {
+        let mut live: BTreeSet<String> = graph.outputs.iter().map(|o| o.name.clone()).collect();
+        for n in &graph.nodes {
+            for i in n.present_inputs() {
+                live.insert(i.to_string());
+            }
+        }
+        let dead = graph
+            .nodes
+            .iter()
+            .position(|n| n.outputs.iter().all(|o| !live.contains(o)));
+        match dead {
+            Some(i) => {
+                graph.nodes.remove(i);
+                changed = true;
+            }
+            None => break,
+        }
+    }
+    // dead initializers
+    let mut referenced: BTreeSet<&str> = graph.outputs.iter().map(|o| o.name.as_str()).collect();
+    for n in &graph.nodes {
+        referenced.extend(n.present_inputs());
+    }
+    let before = graph.initializers.len();
+    graph.initializers.retain(|k, _| referenced.contains(k.as_str()));
+    changed |= graph.initializers.len() != before;
+    // drop stale value_info entries
+    let names = graph.all_tensor_names();
+    graph.value_info.retain(|k, _| names.contains(k));
+    Ok(changed)
+}
+
+/// Assign a unique, human-readable name to every node (`<OpType>_<i>`).
+pub fn give_unique_names(graph: &mut ModelGraph) -> Result<bool> {
+    let mut seen = BTreeSet::new();
+    let mut changed = false;
+    let mut counter = 0usize;
+    for n in &mut graph.nodes {
+        if n.name.is_empty() || !seen.insert(n.name.clone()) {
+            loop {
+                let cand = format!("{}_{counter}", n.op_type);
+                counter += 1;
+                if seen.insert(cand.clone()) {
+                    n.name = cand;
+                    changed = true;
+                    break;
+                }
+            }
+        }
+    }
+    Ok(changed)
+}
+
+/// The full cleaning pipeline (paper §V). Returns the cleaned node count.
+pub fn cleanup(graph: &mut ModelGraph) -> Result<usize> {
+    graph.sort_topologically()?;
+    infer_shapes(graph)?;
+    fold_constants(graph)?;
+    remove_identity(graph)?;
+    remove_dead_nodes(graph)?;
+    give_unique_names(graph)?;
+    graph.sort_topologically()?;
+    // re-infer in case folding exposed new static shapes
+    infer_shapes(graph)?;
+    graph.validate()?;
+    Ok(graph.nodes.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{GraphBuilder, Node};
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn removes_identity_chain() {
+        let mut b = GraphBuilder::new("idc");
+        b.input("x", vec![2]);
+        b.node("Identity", &["x"], &["a"], &[]);
+        b.node("Identity", &["a"], &["c"], &[]);
+        b.node("Relu", &["c"], &["y"], &[]);
+        b.output("y", vec![2]);
+        let mut g = b.finish().unwrap();
+        cleanup(&mut g).unwrap();
+        assert_eq!(g.nodes.len(), 1);
+        assert_eq!(g.nodes[0].op_type, "Relu");
+    }
+
+    #[test]
+    fn removes_dead_branches_and_inits() {
+        let mut b = GraphBuilder::new("dead");
+        b.input("x", vec![2]);
+        b.initializer("unused", Tensor::zeros(vec![9]));
+        b.node("Relu", &["x"], &["y"], &[]);
+        b.node("Sigmoid", &["x"], &["never_used"], &[]);
+        b.output("y", vec![2]);
+        let mut g = b.finish().unwrap();
+        cleanup(&mut g).unwrap();
+        assert_eq!(g.nodes.len(), 1);
+        assert!(!g.initializers.contains_key("unused"));
+    }
+
+    #[test]
+    fn names_made_unique() {
+        let mut g = ModelGraph::new("nm");
+        g.inputs.push(crate::ir::ValueInfo::new("x", vec![1]));
+        g.outputs.push(crate::ir::ValueInfo::new("y", vec![1]));
+        g.nodes.push(Node::new("Relu", &["x"], &["a"])); // empty name
+        g.nodes.push(Node::new("Relu", &["a"], &["y"])); // empty name
+        give_unique_names(&mut g).unwrap();
+        assert_ne!(g.nodes[0].name, g.nodes[1].name);
+        assert!(!g.nodes[0].name.is_empty());
+    }
+
+    #[test]
+    fn cleanup_preserves_semantics() {
+        use crate::exec::execute_simple;
+        let mut b = GraphBuilder::new("sem");
+        b.input("x", vec![1, 4]);
+        b.scalar("two", 2.0);
+        b.scalar("three", 3.0);
+        b.node("Mul", &["two", "three"], &["six"], &[]);
+        b.node("Identity", &["x"], &["xi"], &[]);
+        b.node("Mul", &["xi", "six"], &["y"], &[]);
+        b.output("y", vec![1, 4]);
+        let g0 = b.finish().unwrap();
+        let mut g1 = g0.clone();
+        cleanup(&mut g1).unwrap();
+        let x = Tensor::new(vec![1, 4], vec![1.0, -2.0, 0.5, 3.0]);
+        assert_eq!(
+            execute_simple(&g0, &x).unwrap(),
+            execute_simple(&g1, &x).unwrap()
+        );
+        assert!(g1.nodes.len() < g0.nodes.len());
+    }
+}

@@ -1,0 +1,368 @@
+//! FINN ingestion (paper §VI-D): QONNX → FINN-ONNX dialect.
+//!
+//! The four steps from the paper:
+//! 1. cleanup (caller runs [`super::cleanup`]);
+//! 2. weight `Quant` nodes are *applied* to the float initializers and the
+//!    quantization datatype stored as a tensor annotation;
+//! 3. activation-path `Quant`/`BipolarQuant` nodes become FINN
+//!    `MultiThreshold` nodes (absorbing a preceding `Relu`);
+//! 4. special cases (e.g. average pooling via `Trunc`) are left intact —
+//!    FINN handles them last; incompatible activations raise an error.
+
+use super::quant_params_static;
+use crate::datatypes::DataType;
+use crate::ir::{ModelGraph, Node, DOMAIN_FINN};
+use crate::ops::quant::quant_bounds;
+use crate::tensor::Tensor;
+use anyhow::{bail, ensure, Result};
+
+/// Step 2: fold `Quant`/`BipolarQuant` over initializers (weights/biases)
+/// into quantized initializers with datatype annotations.
+pub fn fold_weight_quants(graph: &mut ModelGraph) -> Result<bool> {
+    let mut changed = false;
+    loop {
+        let Some(i) = graph.nodes.iter().position(|n| {
+            matches!(n.op_type.as_str(), "Quant" | "BipolarQuant")
+                && graph.initializers.contains_key(&n.inputs[0])
+        }) else {
+            if changed {
+                super::remove_dead_nodes(graph)?;
+                graph.sort_topologically()?;
+            }
+            return Ok(changed);
+        };
+        let node = graph.nodes[i].clone();
+        let ins: Vec<&Tensor> = node
+            .present_inputs()
+            .map(|t| graph.initializers.get(t).expect("quant params must be static"))
+            .collect();
+        let out = crate::ops::execute_node(&node, &ins)?.remove(0);
+        let dt = if node.op_type == "BipolarQuant" {
+            DataType::Bipolar
+        } else {
+            let p = quant_params_static(graph, &node)?;
+            DataType::from_quant_params(p.signed, p.narrow, p.bit_width)
+        };
+        let out_name = node.outputs[0].clone();
+        graph.initializers.insert(out_name.clone(), out);
+        graph.set_tensor_datatype(&out_name, dt);
+        graph.nodes.remove(i);
+        changed = true;
+    }
+}
+
+/// Smallest f32 strictly greater than `x` (for exact tie handling).
+fn next_up(x: f32) -> f32 {
+    if !x.is_finite() {
+        return x;
+    }
+    if x == 0.0 {
+        return f32::from_bits(1);
+    }
+    if x > 0.0 {
+        f32::from_bits(x.to_bits() + 1)
+    } else {
+        f32::from_bits(x.to_bits() - 1)
+    }
+}
+
+/// Compute the `MultiThreshold` equivalent of a static `Quant`:
+/// thresholds `t_i = s (q_min - z + i - 1/2)` (ROUND) or
+/// `t_i = s (q_min - z + i)` (FLOOR), `out_scale = s`,
+/// `out_bias = s (q_min - z)`.
+///
+/// ROUND is round-half-to-even while `MultiThreshold` counts with `>=`; at
+/// the boundary into level `m = q_min + i`, a tie (`x/s + z = m - 1/2`)
+/// rounds *up* only when `m` is odd. For even `m` the threshold is nudged
+/// one ULP upward so the exact tie stays below it — making the conversion
+/// bit-exact, not approximate.
+pub fn quant_to_thresholds(
+    scale: &[f64],
+    zero_point: f64,
+    bit_width: f64,
+    signed: bool,
+    narrow: bool,
+    rounding_mode: &str,
+) -> Result<(Tensor, f32, f32)> {
+    let (qmin, qmax) = quant_bounds(signed, narrow, bit_width);
+    let steps = (qmax - qmin) as usize;
+    ensure!(steps >= 1, "degenerate quantizer with no thresholds");
+    let offset = match rounding_mode {
+        "ROUND" => 0.5,
+        "FLOOR" => 0.0,
+        other => bail!("FINN ingestion supports ROUND/FLOOR rounding, got '{other}'"),
+    };
+    let channels = scale.len();
+    let mut th = Vec::with_capacity(channels * steps);
+    for &s in scale {
+        for i in 1..=steps {
+            let mut t = (s * (qmin - zero_point + i as f64 - offset)) as f32;
+            if rounding_mode == "ROUND" {
+                // At the tie x/s + z = m - 1/2, half-even picks the even of
+                // {m-1, m}: even m enters the level (tie included), odd m
+                // stays below (tie excluded -> nudge threshold up one ULP).
+                let m = qmin - zero_point + i as f64; // level entered at t
+                if m.rem_euclid(2.0) != 0.0 {
+                    t = next_up(t);
+                }
+            }
+            th.push(t);
+        }
+    }
+    ensure!(
+        (scale.windows(2).all(|w| w[0] == w[1])),
+        "per-channel out_scale requires uniform scale; use channel thresholds with shared scale"
+    );
+    let s0 = scale[0];
+    Ok((
+        Tensor::new(vec![channels, steps], th),
+        s0 as f32,
+        (s0 * (qmin - zero_point)) as f32,
+    ))
+}
+
+/// Step 3: convert activation-path `Quant`/`BipolarQuant` nodes into
+/// `MultiThreshold`, absorbing a preceding `Relu` when its effect is
+/// subsumed by the thresholds.
+pub fn quant_to_multithreshold(graph: &mut ModelGraph) -> Result<bool> {
+    // FINN supports ReLU / hardtanh (Clip) / identity activations only.
+    for n in &graph.nodes {
+        if matches!(n.op_type.as_str(), "Sigmoid" | "Tanh" | "Softmax") {
+            let feeds_quant = graph
+                .consumers(&n.outputs[0])
+                .iter()
+                .any(|&c| matches!(graph.nodes[c].op_type.as_str(), "Quant" | "BipolarQuant"));
+            if feeds_quant {
+                bail!(
+                    "FINN ingestion: unsupported activation '{}' ({}) in the quantized \
+                     activation path (FINN supports relu, hardtanh, identity)",
+                    n.name,
+                    n.op_type
+                );
+            }
+        }
+    }
+    let mut changed = false;
+    'outer: loop {
+        graph.sort_topologically()?;
+        for i in 0..graph.nodes.len() {
+            let node = graph.nodes[i].clone();
+            let (th, out_scale, out_bias) = match node.op_type.as_str() {
+                "Quant" => {
+                    let scale_t = graph
+                        .initializer(&node.inputs[1])
+                        .ok_or_else(|| anyhow::anyhow!("dynamic scale unsupported by FINN ingest"))?;
+                    let zp = graph.initializer(&node.inputs[2]).unwrap().scalar_value()?;
+                    let bw = graph.initializer(&node.inputs[3]).unwrap().scalar_value()?;
+                    let signed = node.attr_int_or("signed", 1) != 0;
+                    let narrow = node.attr_int_or("narrow", 0) != 0;
+                    let mode = node.attr_str_or("rounding_mode", "ROUND");
+                    quant_to_thresholds(&scale_t.to_f64_vec(), f64::from(zp), f64::from(bw), signed, narrow, &mode)?
+                }
+                "BipolarQuant" => {
+                    let s = graph.initializer(&node.inputs[1]).unwrap().scalar_value()?;
+                    // y = s * sign(x) = 2s * count(x >= 0) - s
+                    (Tensor::new(vec![1, 1], vec![0.0]), 2.0 * s, -s)
+                }
+                _ => continue,
+            };
+            // absorb preceding Relu when thresholds are all positive
+            let mut src = node.inputs[0].clone();
+            if let Some(p) = graph.producer(&src) {
+                if graph.nodes[p].op_type == "Relu"
+                    && graph.consumers(&graph.nodes[p].outputs[0]).len() == 1
+                    && th.min_value()? >= 0.0
+                    && out_bias >= 0.0
+                {
+                    src = graph.nodes[p].inputs[0].clone();
+                    let pi = p;
+                    graph.nodes.remove(pi);
+                }
+            }
+            // re-locate the quant node (indices shifted if relu removed)
+            let qi = graph.nodes.iter().position(|n| n.name == node.name).unwrap();
+            let th_name = graph.fresh_name(&format!("{}_thresh", node.outputs[0]));
+            graph.initializers.insert(th_name.clone(), th);
+            let dt = if node.op_type == "BipolarQuant" {
+                DataType::Bipolar
+            } else {
+                let p = quant_params_static(graph, &node).ok();
+                p.map(|p| DataType::from_quant_params(p.signed, p.narrow, p.bit_width))
+                    .unwrap_or(DataType::Float32)
+            };
+            let mt = Node::new("MultiThreshold", &[&src, &th_name], &[&node.outputs[0]])
+                .with_domain(DOMAIN_FINN)
+                .with_name(&format!("{}_mt", node.name))
+                .with_attr("out_scale", out_scale)
+                .with_attr("out_bias", out_bias);
+            graph.set_tensor_datatype(&node.outputs[0], dt);
+            graph.nodes[qi] = mt;
+            super::remove_dead_nodes(graph)?;
+            changed = true;
+            continue 'outer;
+        }
+        if changed {
+            graph.sort_topologically()?;
+            graph.validate()?;
+        }
+        return Ok(changed);
+    }
+}
+
+/// The full FINN ingestion flow (steps 2–3; step 1 is [`super::cleanup`],
+/// step 4 — avg-pool special cases — keeps `Trunc` nodes as-is).
+pub fn convert_to_finn(graph: &mut ModelGraph) -> Result<bool> {
+    let a = fold_weight_quants(graph)?;
+    let b = quant_to_multithreshold(graph)?;
+    Ok(a || b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::execute_simple;
+    use crate::ir::GraphBuilder;
+    use crate::transforms::cleanup;
+
+    fn close(a: &[f32], b: &[f32]) {
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn thresholds_uint2_relu() {
+        let (th, os, ob) = quant_to_thresholds(&[1.0], 0.0, 2.0, false, false, "ROUND").unwrap();
+        assert_eq!(th.shape(), &[1, 3]);
+        // odd levels (1, 3) carry a one-ULP tie nudge
+        close(th.as_f32().unwrap(), &[0.5, 1.5, 2.5]);
+        assert!(th.as_f32().unwrap()[0] > 0.5 && th.as_f32().unwrap()[1] == 1.5);
+        assert_eq!((os, ob), (1.0, 0.0));
+    }
+
+    #[test]
+    fn thresholds_int3_symmetric() {
+        let (th, os, ob) = quant_to_thresholds(&[0.5], 0.0, 3.0, true, false, "ROUND").unwrap();
+        assert_eq!(th.shape(), &[1, 7]);
+        close(th.as_f32().unwrap(), &[-1.75, -1.25, -0.75, -0.25, 0.25, 0.75, 1.25]);
+        assert_eq!((os, ob), (0.5, -2.0));
+    }
+
+    #[test]
+    fn thresholds_exact_at_ties() {
+        // bit-exact tie behavior: half-even rounds 0.5 -> 0 (stays below
+        // level 1) but 1.5 -> 2 (enters level 2)
+        use crate::ops::multithreshold::multi_threshold;
+        let (th, os, ob) = quant_to_thresholds(&[1.0], 0.0, 4.0, false, false, "ROUND").unwrap();
+        let node = crate::ir::Node::new("MultiThreshold", &["x", "t"], &["y"])
+            .with_attr("out_scale", os)
+            .with_attr("out_bias", ob);
+        let x = Tensor::new(vec![1, 4], vec![0.5, 1.5, 2.5, 3.5]);
+        let y = multi_threshold(&node, &[&x, &th]).unwrap();
+        assert_eq!(y[0].as_f32().unwrap(), &[0.0, 2.0, 2.0, 4.0]);
+    }
+
+    fn relu_quant_graph(signed: bool) -> ModelGraph {
+        let mut b = GraphBuilder::new("rq");
+        b.input("x", vec![1, 8]);
+        b.node("Relu", &["x"], &["r"], &[]);
+        b.quant("r", "y", 0.5, 0.0, 3.0, signed, false, "ROUND");
+        b.output("y", vec![1, 8]);
+        b.finish().unwrap()
+    }
+
+    #[test]
+    fn relu_quant_becomes_single_multithreshold() {
+        let g0 = relu_quant_graph(false);
+        let mut g1 = g0.clone();
+        assert!(quant_to_multithreshold(&mut g1).unwrap());
+        let h = g1.op_histogram();
+        assert_eq!(h.get("MultiThreshold"), Some(&1));
+        assert!(!h.contains_key("Relu"), "Relu should be absorbed");
+        assert!(!h.contains_key("Quant"));
+
+        // integer-grid inputs (like real accumulators): exact equivalence
+        let x = Tensor::new(vec![1, 8], vec![-3.0, -1.0, 0.0, 0.2, 0.3, 1.0, 2.0, 99.0]);
+        assert_eq!(execute_simple(&g0, &x).unwrap(), execute_simple(&g1, &x).unwrap());
+        assert_eq!(g1.tensor_datatype("y"), DataType::Uint(3));
+    }
+
+    #[test]
+    fn signed_identity_quant_keeps_negative_range() {
+        let mut b = GraphBuilder::new("sq");
+        b.input("x", vec![1, 6]);
+        b.quant("x", "y", 1.0, 0.0, 3.0, true, false, "ROUND");
+        b.output("y", vec![1, 6]);
+        let g0 = b.finish().unwrap();
+        let mut g1 = g0.clone();
+        quant_to_multithreshold(&mut g1).unwrap();
+        let x = Tensor::new(vec![1, 6], vec![-99.0, -2.2, -0.8, 0.3, 2.2, 99.0]);
+        assert_eq!(execute_simple(&g0, &x).unwrap(), execute_simple(&g1, &x).unwrap());
+    }
+
+    #[test]
+    fn bipolar_becomes_sign_threshold() {
+        let mut b = GraphBuilder::new("bp");
+        b.input("x", vec![1, 4]);
+        b.bipolar_quant("x", "y", 0.5);
+        b.output("y", vec![1, 4]);
+        let g0 = b.finish().unwrap();
+        let mut g1 = g0.clone();
+        quant_to_multithreshold(&mut g1).unwrap();
+        let x = Tensor::new(vec![1, 4], vec![-7.0, -0.1, 0.1, 7.0]);
+        assert_eq!(execute_simple(&g0, &x).unwrap(), execute_simple(&g1, &x).unwrap());
+        assert_eq!(g1.tensor_datatype("y"), DataType::Bipolar);
+    }
+
+    #[test]
+    fn weight_quants_folded_with_annotation() {
+        let mut b = GraphBuilder::new("w");
+        b.input("x", vec![1, 2]);
+        b.initializer("w", Tensor::new(vec![2, 2], vec![0.6, -0.4, 1.9, 0.04]));
+        b.quant("w", "wq", 0.5, 0.0, 4.0, true, false, "ROUND");
+        b.node("MatMul", &["x", "wq"], &["y"], &[]);
+        b.output("y", vec![1, 2]);
+        let g0 = b.finish().unwrap();
+        let mut g1 = g0.clone();
+        assert!(fold_weight_quants(&mut g1).unwrap());
+        assert!(!g1.op_histogram().contains_key("Quant"));
+        assert_eq!(g1.initializers["wq"].as_f32().unwrap(), &[0.5, -0.5, 2.0, 0.0]);
+        assert_eq!(g1.tensor_datatype("wq"), DataType::Int(4));
+        let x = Tensor::new(vec![1, 2], vec![1.0, 2.0]);
+        assert_eq!(execute_simple(&g0, &x).unwrap(), execute_simple(&g1, &x).unwrap());
+    }
+
+    #[test]
+    fn rejects_sigmoid_activation_path() {
+        let mut b = GraphBuilder::new("sig");
+        b.input("x", vec![1, 4]);
+        b.node("Sigmoid", &["x"], &["s"], &[]);
+        b.quant("s", "y", 0.5, 0.0, 4.0, false, false, "ROUND");
+        b.output("y", vec![1, 4]);
+        let mut g = b.finish().unwrap();
+        let err = quant_to_multithreshold(&mut g).unwrap_err();
+        assert!(err.to_string().contains("unsupported activation"));
+    }
+
+    #[test]
+    fn full_flow_on_mixed_graph() {
+        let mut b = GraphBuilder::new("full");
+        b.input("x", vec![1, 4]);
+        b.quant("x", "xq", 1.0, 0.0, 4.0, true, false, "ROUND");
+        b.initializer("w", Tensor::new(vec![4, 3], (0..12).map(|v| (v as f32 - 6.0) * 0.3).collect()));
+        b.quant("w", "wq", 0.25, 0.0, 3.0, true, true, "ROUND");
+        b.node("MatMul", &["xq", "wq"], &["mm"], &[]);
+        b.node("Relu", &["mm"], &["r"], &[]);
+        b.quant("r", "y", 1.0, 0.0, 4.0, false, false, "ROUND");
+        b.output("y", vec![1, 3]);
+        let g0 = b.finish().unwrap();
+        let mut g1 = g0.clone();
+        cleanup(&mut g1).unwrap();
+        convert_to_finn(&mut g1).unwrap();
+        let h = g1.op_histogram();
+        assert_eq!(h.get("MultiThreshold"), Some(&2));
+        assert!(!h.contains_key("Quant"));
+        let x = Tensor::new(vec![1, 4], vec![2.0, -1.0, 3.0, 0.0]);
+        assert_eq!(execute_simple(&g0, &x).unwrap(), execute_simple(&g1, &x).unwrap());
+    }
+}

@@ -1,0 +1,123 @@
+//! Constant folding (paper §V: "basic graph optimizations, such as
+//! constant folding").
+//!
+//! A node folds when every input is a constant (initializer or previously
+//! folded). `Shape` additionally folds whenever its input's *shape* is
+//! statically known — that is what collapses the exporter's
+//! `Shape→Gather→Unsqueeze→Concat→Reshape` chain (Fig. 1 → Fig. 2).
+
+use crate::ir::ModelGraph;
+use crate::ops;
+use crate::tensor::Tensor;
+use anyhow::{Context, Result};
+
+/// Fold all constant subgraphs into initializers. Returns true if the
+/// graph changed. Run [`super::infer_shapes`] first so `Shape` nodes fold.
+///
+/// `Quant`/`BipolarQuant`/`Trunc` nodes are *excluded* even when their
+/// inputs are constant — same as qonnx's `FoldConstants`: weight
+/// quantizers carry the precision information the backends and metrics
+/// need, and only dedicated ingestion passes may fold them
+/// ([`super::convert_to_finn`], [`super::hls4ml_ingest`]).
+pub fn fold_constants(graph: &mut ModelGraph) -> Result<bool> {
+    let mut changed_any = false;
+    loop {
+        let mut folded = None;
+        for (i, node) in graph.nodes.iter().enumerate() {
+            let foldable = match node.op_type.as_str() {
+                // quantizers are never folded (see docs above)
+                "Quant" | "BipolarQuant" | "Trunc" => false,
+                // Constant is always foldable
+                "Constant" => true,
+                // Shape folds off static shape info even for runtime tensors
+                "Shape" => graph.tensor_shape(&node.inputs[0]).is_some(),
+                _ => node.present_inputs().all(|t| graph.initializers.contains_key(t)),
+            };
+            if !foldable || node.outputs.iter().any(|o| graph.is_output(o)) {
+                continue;
+            }
+            folded = Some(i);
+            break;
+        }
+        let Some(i) = folded else {
+            return Ok(changed_any);
+        };
+        let node = graph.nodes[i].clone();
+        let outs = if node.op_type == "Shape" {
+            let shape = graph.tensor_shape(&node.inputs[0]).unwrap();
+            let s: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let n = s.len();
+            vec![Tensor::new_i64(vec![n], s)]
+        } else {
+            let ins: Vec<&Tensor> = node
+                .present_inputs()
+                .map(|t| graph.initializers.get(t).unwrap())
+                .collect();
+            ops::execute_node(&node, &ins)
+                .with_context(|| format!("folding node '{}' ({})", node.name, node.op_type))?
+        };
+        for (name, t) in node.outputs.iter().zip(outs) {
+            graph.initializers.insert(name.clone(), t);
+        }
+        graph.nodes.remove(i);
+        changed_any = true;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{AttrValue, GraphBuilder, Node};
+    use crate::transforms::infer_shapes;
+
+    #[test]
+    fn folds_constant_arithmetic() {
+        let mut b = GraphBuilder::new("f");
+        b.input("x", vec![2]);
+        b.scalar("a", 2.0);
+        b.scalar("c", 3.0);
+        b.node("Mul", &["a", "c"], &["ac"], &[]);
+        b.node("Add", &["x", "ac"], &["y"], &[]);
+        b.output("y", vec![2]);
+        let mut g = b.finish().unwrap();
+        assert!(fold_constants(&mut g).unwrap());
+        assert_eq!(g.nodes.len(), 1);
+        assert_eq!(g.initializers["ac"].scalar_value().unwrap(), 6.0);
+    }
+
+    #[test]
+    fn folds_exporter_flatten_chain() {
+        // the Fig. 1 Shape/Gather/Unsqueeze/Concat/Reshape structure
+        let mut b = GraphBuilder::new("chain");
+        b.input("x", vec![2, 3, 2, 2]);
+        b.initializer("idx", Tensor::new_i64(vec![], vec![0]));
+        b.initializer("minus1", Tensor::new_i64(vec![1], vec![-1]));
+        b.node("Shape", &["x"], &["s"], &[]);
+        b.node("Gather", &["s", "idx"], &["g"], &[("axis", AttrValue::Int(0))]);
+        b.node("Unsqueeze", &["g"], &["u"], &[("axes", AttrValue::Ints(vec![0]))]);
+        b.node("Concat", &["u", "minus1"], &["target"], &[("axis", AttrValue::Int(0))]);
+        b.node("Reshape", &["x", "target"], &["y"], &[]);
+        b.output_unknown("y");
+        let mut g = b.finish().unwrap();
+        infer_shapes(&mut g).unwrap();
+        assert!(fold_constants(&mut g).unwrap());
+        // only the Reshape survives, with a constant target
+        assert_eq!(g.nodes.len(), 1);
+        assert_eq!(g.nodes[0].op_type, "Reshape");
+        assert_eq!(g.initializers["target"].as_i64().unwrap(), &[2, -1]);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn does_not_fold_graph_outputs() {
+        let mut g = ModelGraph::new("o");
+        g.outputs.push(crate::ir::ValueInfo::new("y", vec![1]));
+        g.nodes.push(
+            Node::new("Constant", &[], &["y"])
+                .with_name("c")
+                .with_attr("value", Tensor::scalar(1.0)),
+        );
+        assert!(!fold_constants(&mut g).unwrap());
+        assert_eq!(g.nodes.len(), 1);
+    }
+}

@@ -1,0 +1,302 @@
+//! hls4ml-style ingestion (paper §VI-C).
+//!
+//! hls4ml distinguishes quantization of *constants* (weights/biases — apply
+//! in place, keep integer values, append a dequantize node when the scale
+//! is non-unitary) from quantization of the *data flow* (kept as explicit
+//! quantize ops). The dequantize (scale) nodes are then propagated down
+//! across linear operators so the expensive math runs on integers, and
+//! adjacent scale multiplications are merged. Scales may not cross
+//! nonlinear activations or quantized nodes.
+
+use super::quant_params_static;
+use crate::datatypes::DataType;
+use crate::ir::{ModelGraph, Node};
+use crate::ops::quant::{quant_bounds, round_half_even, RoundingMode};
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+
+/// Quantize constant paths: `Quant(W_init)` becomes an integer-valued
+/// initializer plus a `Mul(scale)` dequantize node (skipped when the scale
+/// is unitary).
+pub fn quantize_constant_paths(graph: &mut ModelGraph) -> Result<bool> {
+    let mut changed = false;
+    loop {
+        let Some(i) = graph.nodes.iter().position(|n| {
+            n.op_type == "Quant" && graph.initializers.contains_key(&n.inputs[0])
+        }) else {
+            if changed {
+                super::remove_dead_nodes(graph)?;
+                graph.sort_topologically()?;
+            }
+            return Ok(changed);
+        };
+        let node = graph.nodes[i].clone();
+        let p = quant_params_static(graph, &node)?;
+        ensure!(
+            p.zero_point == 0.0,
+            "hls4ml constant quantization with nonzero offset not supported (node '{}')",
+            node.name
+        );
+        let mode = RoundingMode::from_str(&p.rounding_mode)?;
+        let (lo, hi) = quant_bounds(p.signed, p.narrow, p.bit_width);
+        let w = graph.initializers[&node.inputs[0]].clone();
+        // integer-grid constant (NOT dequantized — hls4ml keeps integers)
+        let w_int = w.map(|v| mode.apply(f64::from(v) / f64::from(p.scale)).clamp(lo, hi) as f32)?;
+        let _ = round_half_even; // (RoundingMode::Round uses it internally)
+
+        let out = node.outputs[0].clone();
+        graph.nodes.remove(i);
+        if p.scale == 1.0 {
+            graph.initializers.insert(out.clone(), w_int);
+            graph.set_tensor_datatype(&out, DataType::from_quant_params(p.signed, p.narrow, p.bit_width));
+        } else {
+            let int_name = graph.fresh_name(&format!("{out}_int"));
+            let scale_name = graph.fresh_name(&format!("{out}_descale"));
+            graph.initializers.insert(int_name.clone(), w_int);
+            graph.initializers.insert(scale_name.clone(), Tensor::scalar(p.scale));
+            graph.set_tensor_datatype(&int_name, DataType::from_quant_params(p.signed, p.narrow, p.bit_width));
+            let mul = Node::new("Mul", &[&int_name, &scale_name], &[&out])
+                .with_name(&format!("{}_dequant", node.name));
+            graph.nodes.push(mul);
+        }
+        changed = true;
+    }
+}
+
+/// True if `node` is a `Mul` by a constant scale tensor; returns the scale
+/// input index.
+fn const_scale_input(graph: &ModelGraph, node: &Node) -> Option<usize> {
+    if node.op_type != "Mul" {
+        return None;
+    }
+    // prefer a scalar constant (both inputs can be initializers when the
+    // dequantized constant is an integer weight tensor times a scale)
+    for (i, inp) in node.inputs.iter().enumerate() {
+        if graph.initializers.get(inp).is_some_and(|t| t.numel() == 1) {
+            return Some(i);
+        }
+    }
+    for (i, inp) in node.inputs.iter().enumerate() {
+        if graph.initializers.contains_key(inp) {
+            return Some(i);
+        }
+    }
+    None
+}
+
+/// Propagate dequantize `Mul(scale)` nodes downward across `MatMul`/`Conv`
+/// (linear, so the scale commutes) and merge chained scale `Mul`s. Scales
+/// do not cross nonlinear activations or `Quant`/`MultiThreshold` nodes.
+pub fn propagate_dequant(graph: &mut ModelGraph) -> Result<bool> {
+    let mut changed = false;
+    'outer: loop {
+        graph.sort_topologically()?;
+        for mi in 0..graph.nodes.len() {
+            let mul = graph.nodes[mi].clone();
+            let Some(scale_idx) = const_scale_input(graph, &mul) else { continue };
+            let scale_name = mul.inputs[scale_idx].clone();
+            let data_name = mul.inputs[1 - scale_idx].clone();
+            let out = mul.outputs[0].clone();
+            if graph.is_output(&out) {
+                continue;
+            }
+            let consumers = graph.consumers(&out);
+            if consumers.len() != 1 {
+                continue;
+            }
+            let ci = consumers[0];
+            let cons = graph.nodes[ci].clone();
+            let scale_t = graph.initializers[&scale_name].clone();
+            match cons.op_type.as_str() {
+                // linear ops: move the scale below (scalar scales always
+                // commute; per-channel handled for the weight operand)
+                "MatMul" | "Conv" | "Gemm" if scale_t.numel() == 1 => {
+                    let new_out = graph.fresh_name(&format!("{}_noscale", cons.outputs[0]));
+                    let cons_out = cons.outputs[0].clone();
+                    // bias does not commute with a scale on an input
+                    if cons.op_type != "MatMul" && cons.inputs.len() > 2 && !cons.inputs[2].is_empty() {
+                        continue;
+                    }
+                    let which = cons.inputs.iter().position(|x| *x == out).unwrap();
+                    let mut new_cons = cons.clone();
+                    new_cons.inputs[which] = data_name.clone();
+                    new_cons.outputs[0] = new_out.clone();
+                    let new_mul = Node::new("Mul", &[&new_out, &scale_name], &[&cons_out])
+                        .with_name(&format!("{}_pushed", mul.name));
+                    // remove old mul + old consumer, add new pair
+                    let mut rm = vec![mi, ci];
+                    rm.sort_unstable();
+                    for i in rm.into_iter().rev() {
+                        graph.nodes.remove(i);
+                    }
+                    graph.nodes.push(new_cons);
+                    graph.nodes.push(new_mul);
+                    changed = true;
+                    continue 'outer;
+                }
+                // merge Mul(Mul(x, a), b) -> Mul(x, a*b)
+                "Mul" => {
+                    if let Some(s2_idx) = const_scale_input(graph, &cons) {
+                        let s2_name = cons.inputs[s2_idx].clone();
+                        let s2 = graph.initializers[&s2_name].clone();
+                        let merged = scale_t.binary_op(&s2, |a, b| a * b)?;
+                        let merged_name = graph.fresh_name(&format!("{}_merged_scale", cons.name));
+                        graph.initializers.insert(merged_name.clone(), merged);
+                        let cons_out = cons.outputs[0].clone();
+                        let new_mul = Node::new("Mul", &[&data_name, &merged_name], &[&cons_out])
+                            .with_name(&format!("{}_merged", cons.name));
+                        let mut rm = vec![mi, ci];
+                        rm.sort_unstable();
+                        for i in rm.into_iter().rev() {
+                            graph.nodes.remove(i);
+                        }
+                        graph.nodes.push(new_mul);
+                        changed = true;
+                        continue 'outer;
+                    }
+                }
+                _ => {}
+            }
+        }
+        if changed {
+            super::remove_dead_nodes(graph)?;
+            graph.sort_topologically()?;
+            graph.validate()?;
+        }
+        return Ok(changed);
+    }
+}
+
+/// Full hls4ml-style ingestion: constant quantization then dequant
+/// propagation to fixpoint.
+pub fn hls4ml_ingest(graph: &mut ModelGraph) -> Result<bool> {
+    let a = quantize_constant_paths(graph)?;
+    let b = propagate_dequant(graph)?;
+    Ok(a || b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::execute_simple;
+    use crate::ir::GraphBuilder;
+
+    fn wq_matmul() -> ModelGraph {
+        let mut b = GraphBuilder::new("wq");
+        b.input("x", vec![1, 4]);
+        b.initializer("w", Tensor::new(vec![4, 2], vec![0.6, -0.4, 0.3, 0.1, -0.2, 0.5, 0.05, -0.7]));
+        b.quant("w", "wq", 0.25, 0.0, 4.0, true, false, "ROUND");
+        b.node("MatMul", &["x", "wq"], &["y"], &[]);
+        b.output("y", vec![1, 2]);
+        b.finish().unwrap()
+    }
+
+    #[test]
+    fn constants_become_integers_with_descale() {
+        let g0 = wq_matmul();
+        let mut g1 = g0.clone();
+        assert!(quantize_constant_paths(&mut g1).unwrap());
+        // integer weights
+        let int_name = g1
+            .initializers
+            .keys()
+            .find(|k| k.contains("_int"))
+            .expect("integer weight initializer")
+            .clone();
+        assert!(g1.initializers[&int_name].as_f32().unwrap().iter().all(|v| v.fract() == 0.0));
+        assert_eq!(g1.tensor_datatype(&int_name), DataType::Int(4));
+        // semantics preserved (Mul(scale) reassociation is exact here)
+        let x = Tensor::new(vec![1, 4], vec![1.0, 2.0, -1.0, 0.5]);
+        let y0 = execute_simple(&g0, &x).unwrap();
+        let y1 = execute_simple(&g1, &x).unwrap();
+        for (a, b) in y0.as_f32().unwrap().iter().zip(y1.as_f32().unwrap()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn unit_scale_needs_no_descale_node() {
+        let mut b = GraphBuilder::new("u");
+        b.input("x", vec![1, 2]);
+        b.initializer("w", Tensor::new(vec![2, 2], vec![1.2, -0.7, 3.9, 0.4]));
+        b.quant("w", "wq", 1.0, 0.0, 4.0, true, false, "ROUND");
+        b.node("MatMul", &["x", "wq"], &["y"], &[]);
+        b.output("y", vec![1, 2]);
+        let mut g = b.finish().unwrap();
+        quantize_constant_paths(&mut g).unwrap();
+        assert!(!g.op_histogram().contains_key("Mul"));
+        assert_eq!(g.initializers["wq"].as_f32().unwrap(), &[1.0, -1.0, 4.0, 0.0]);
+    }
+
+    #[test]
+    fn dequant_propagates_below_matmul() {
+        let g0 = wq_matmul();
+        let mut g1 = g0.clone();
+        hls4ml_ingest(&mut g1).unwrap();
+        // graph order must now be MatMul(int) -> Mul(scale)
+        let order: Vec<&str> = g1.nodes.iter().map(|n| n.op_type.as_str()).collect();
+        assert_eq!(order, vec!["MatMul", "Mul"]);
+        let x = Tensor::new(vec![1, 4], vec![1.0, 2.0, -1.0, 0.5]);
+        let y0 = execute_simple(&g0, &x).unwrap();
+        let y1 = execute_simple(&g1, &x).unwrap();
+        for (a, b) in y0.as_f32().unwrap().iter().zip(y1.as_f32().unwrap()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn chained_scales_merge() {
+        let mut b = GraphBuilder::new("m");
+        b.input("x", vec![1, 2]);
+        b.scalar("s1", 2.0);
+        b.scalar("s2", 3.0);
+        b.node("Mul", &["x", "s1"], &["a"], &[]);
+        b.node("Mul", &["a", "s2"], &["y"], &[]);
+        b.output("y", vec![1, 2]);
+        let mut g = b.finish().unwrap();
+        assert!(propagate_dequant(&mut g).unwrap());
+        assert_eq!(g.nodes.len(), 1);
+        let x = Tensor::new(vec![1, 2], vec![1.0, -2.0]);
+        assert_eq!(execute_simple(&g, &x).unwrap().as_f32().unwrap(), &[6.0, -12.0]);
+    }
+
+    #[test]
+    fn scale_stops_at_nonlinearity() {
+        let mut b = GraphBuilder::new("nl");
+        b.input("x", vec![1, 2]);
+        b.scalar("s", 2.0);
+        b.node("Mul", &["x", "s"], &["a"], &[]);
+        b.node("Sigmoid", &["a"], &["y"], &[]);
+        b.output("y", vec![1, 2]);
+        let mut g = b.finish().unwrap();
+        assert!(!propagate_dequant(&mut g).unwrap());
+        assert_eq!(g.nodes.len(), 2);
+    }
+
+    #[test]
+    fn two_layer_stack_scales_end_up_last() {
+        // W-quantized 2-layer MLP with ReLU between: scales propagate to
+        // just after each matmul but not across the relu
+        let mut b = GraphBuilder::new("two");
+        b.input("x", vec![1, 4]);
+        b.initializer("w1", Tensor::new(vec![4, 4], (0..16).map(|v| (v as f32 - 8.0) * 0.1).collect()));
+        b.quant("w1", "w1q", 0.125, 0.0, 4.0, true, false, "ROUND");
+        b.node("MatMul", &["x", "w1q"], &["h"], &[]);
+        b.node("Relu", &["h"], &["hr"], &[]);
+        b.initializer("w2", Tensor::new(vec![4, 2], (0..8).map(|v| (v as f32 - 4.0) * 0.2).collect()));
+        b.quant("w2", "w2q", 0.125, 0.0, 4.0, true, false, "ROUND");
+        b.node("MatMul", &["hr", "w2q"], &["y"], &[]);
+        b.output("y", vec![1, 2]);
+        let g0 = b.finish().unwrap();
+        let mut g1 = g0.clone();
+        hls4ml_ingest(&mut g1).unwrap();
+        let order: Vec<&str> = g1.nodes.iter().map(|n| n.op_type.as_str()).collect();
+        assert_eq!(order, vec!["MatMul", "Mul", "Relu", "MatMul", "Mul"]);
+        let x = Tensor::new(vec![1, 4], vec![0.5, -1.0, 2.0, 1.0]);
+        let y0 = execute_simple(&g0, &x).unwrap();
+        let y1 = execute_simple(&g1, &x).unwrap();
+        for (a, b) in y0.as_f32().unwrap().iter().zip(y1.as_f32().unwrap()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+}

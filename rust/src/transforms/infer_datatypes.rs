@@ -1,0 +1,285 @@
+//! Per-tensor arbitrary-precision datatype inference.
+//!
+//! Walks the graph in topological order propagating integer value ranges
+//! — including accumulator growth through `MatMul`/`Conv` — and annotates
+//! every tensor with the smallest covering [`DataType`]. This implements
+//! the paper's §V observation that fine-grained magnitude bounds let one
+//! "assess whether the operation might overflow given a certain number of
+//! output accumulation bits".
+
+use super::quant_params_static;
+use crate::datatypes::DataType;
+use crate::ir::ModelGraph;
+use crate::tensor::Tensor;
+use anyhow::Result;
+
+/// Closed value interval tracked per tensor.
+#[derive(Debug, Clone, Copy)]
+struct Range {
+    lo: f64,
+    hi: f64,
+    /// all values on the integer grid?
+    integral: bool,
+}
+
+impl Range {
+    fn dt(&self) -> DataType {
+        if self.integral {
+            DataType::smallest_covering(self.lo, self.hi)
+        } else {
+            DataType::Float32
+        }
+    }
+}
+
+fn range_of_tensor(t: &Tensor) -> Range {
+    let vals = t.to_f64_vec();
+    let lo = vals.iter().copied().fold(f64::INFINITY, f64::min);
+    let hi = vals.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let integral = vals.iter().all(|v| v.fract() == 0.0);
+    Range { lo: lo.min(hi), hi: hi.max(lo), integral }
+}
+
+fn range_of_dt(dt: DataType) -> Option<Range> {
+    match dt {
+        DataType::Float32 => None,
+        d => Some(Range { lo: d.min(), hi: d.max(), integral: d.is_integer() }),
+    }
+}
+
+/// Infer and annotate datatypes for all tensors. Returns true if any
+/// annotation changed. Run after shapes are known.
+pub fn infer_datatypes(graph: &mut ModelGraph) -> Result<bool> {
+    graph.sort_topologically()?;
+    let mut ranges: std::collections::BTreeMap<String, Range> = Default::default();
+    // seeds: initializers (from values, refined by explicit annotations)
+    for (name, t) in &graph.initializers {
+        let r = match range_of_dt(graph.tensor_datatype(name)) {
+            Some(r) => r,
+            None => range_of_tensor(t),
+        };
+        ranges.insert(name.clone(), r);
+    }
+    for vi in &graph.inputs {
+        if let Some(r) = range_of_dt(vi.dtype) {
+            ranges.insert(vi.name.clone(), r);
+        }
+    }
+
+    let nodes = graph.nodes.clone();
+    for node in &nodes {
+        let get = |i: usize| -> Option<Range> { node.inputs.get(i).and_then(|n| ranges.get(n)).copied() };
+        let out_range: Option<Range> = match node.op_type.as_str() {
+            "Quant" => {
+                // static params: exact output grid
+                quant_params_static(graph, node).ok().map(|p| {
+                    let (qlo, qhi) = crate::ops::quant::quant_bounds(p.signed, p.narrow, p.bit_width);
+                    let s = f64::from(p.scale);
+                    let z = f64::from(p.zero_point);
+                    Range {
+                        lo: (qlo - z) * s,
+                        hi: (qhi - z) * s,
+                        integral: s == 1.0 && z.fract() == 0.0,
+                    }
+                })
+            }
+            "BipolarQuant" => {
+                let s = graph.initializer(&node.inputs[1]).and_then(|t| t.scalar_value().ok());
+                s.map(|s| Range { lo: -f64::from(s), hi: f64::from(s), integral: s == 1.0 })
+            }
+            "MultiThreshold" => {
+                let t = graph.initializer(&node.inputs[1]);
+                t.map(|t| {
+                    let steps = t.shape()[1] as f64;
+                    let os = f64::from(node.attr_float_or("out_scale", 1.0));
+                    let ob = f64::from(node.attr_float_or("out_bias", 0.0));
+                    let (a, b) = (ob, os * steps + ob);
+                    Range {
+                        lo: a.min(b),
+                        hi: a.max(b),
+                        integral: os.fract() == 0.0 && ob.fract() == 0.0,
+                    }
+                })
+            }
+            "Relu" => get(0).map(|r| Range { lo: r.lo.max(0.0), hi: r.hi.max(0.0), integral: r.integral }),
+            "MaxPool" | "Reshape" | "Transpose" | "Flatten" | "Identity" | "Squeeze" | "Unsqueeze"
+            | "Pad" | "Gather" => get(0),
+            "Concat" => {
+                let mut acc: Option<Range> = None;
+                for i in 0..node.inputs.len() {
+                    match (acc, get(i)) {
+                        (None, r) => acc = r,
+                        (Some(a), Some(b)) => {
+                            acc = Some(Range {
+                                lo: a.lo.min(b.lo),
+                                hi: a.hi.max(b.hi),
+                                integral: a.integral && b.integral,
+                            })
+                        }
+                        (Some(_), None) => acc = None,
+                    }
+                    if acc.is_none() {
+                        break;
+                    }
+                }
+                acc
+            }
+            "Add" | "Sub" => match (get(0), get(1)) {
+                (Some(a), Some(b)) => {
+                    let (blo, bhi) = if node.op_type == "Sub" { (-b.hi, -b.lo) } else { (b.lo, b.hi) };
+                    Some(Range { lo: a.lo + blo, hi: a.hi + bhi, integral: a.integral && b.integral })
+                }
+                _ => None,
+            },
+            "Mul" => match (get(0), get(1)) {
+                (Some(a), Some(b)) => {
+                    let cands = [a.lo * b.lo, a.lo * b.hi, a.hi * b.lo, a.hi * b.hi];
+                    Some(Range {
+                        lo: cands.iter().copied().fold(f64::INFINITY, f64::min),
+                        hi: cands.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+                        integral: a.integral && b.integral,
+                    })
+                }
+                _ => None,
+            },
+            "MatMul" | "Conv" | "MatMulInteger" | "ConvInteger" => {
+                // accumulator growth: k products summed
+                match (get(0), get(1)) {
+                    (Some(a), Some(b)) => {
+                        let k = dot_length(graph, node);
+                        k.map(|k| {
+                            let cands = [a.lo * b.lo, a.lo * b.hi, a.hi * b.lo, a.hi * b.hi];
+                            let plo = cands.iter().copied().fold(f64::INFINITY, f64::min);
+                            let phi = cands.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+                            Range {
+                                lo: plo * k as f64,
+                                hi: phi * k as f64,
+                                integral: a.integral && b.integral,
+                            }
+                        })
+                    }
+                    _ => None,
+                }
+            }
+            _ => None,
+        };
+        if let Some(r) = out_range {
+            for o in &node.outputs {
+                ranges.insert(o.clone(), r);
+            }
+        }
+    }
+
+    let mut changed = false;
+    for (name, r) in &ranges {
+        if graph.is_input(name) || graph.initializers.contains_key(name) {
+            continue;
+        }
+        let dt = r.dt();
+        if graph.tensor_datatype(name) != dt {
+            graph.set_tensor_datatype(name, dt);
+            changed = true;
+        }
+    }
+    Ok(changed)
+}
+
+/// Reduction length of a MatMul/Conv: inner dim (times kernel area and
+/// divided by groups for Conv).
+fn dot_length(graph: &ModelGraph, node: &crate::ir::Node) -> Option<usize> {
+    let w_shape = graph.tensor_shape(&node.inputs[1])?;
+    match node.op_type.as_str() {
+        "MatMul" | "MatMulInteger" => Some(w_shape[0]),
+        _ => {
+            // Conv weights [M, C/g, kh, kw]
+            if w_shape.len() == 4 {
+                Some(w_shape[1] * w_shape[2] * w_shape[3])
+            } else {
+                None
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::GraphBuilder;
+    use crate::transforms::cleanup;
+
+    #[test]
+    fn quant_output_annotated() {
+        let mut b = GraphBuilder::new("q");
+        b.input("x", vec![1, 4]);
+        b.quant("x", "y", 1.0, 0.0, 4.0, true, false, "ROUND");
+        b.output("y", vec![1, 4]);
+        let mut g = b.finish().unwrap();
+        infer_datatypes(&mut g).unwrap();
+        assert_eq!(g.tensor_datatype("y"), DataType::Int(4));
+    }
+
+    #[test]
+    fn accumulator_width_through_matmul() {
+        // int4 activations x int4 weights over k=64: |acc| <= 64*8*8 = 4096
+        let mut b = GraphBuilder::new("acc");
+        b.input("x", vec![1, 64]);
+        b.quant("x", "xq", 1.0, 0.0, 4.0, true, false, "ROUND");
+        b.initializer("w", Tensor::full(vec![64, 8], 3.0));
+        b.node("MatMul", &["xq", "w"], &["y"], &[]);
+        b.output("y", vec![1, 8]);
+        let mut g = b.finish().unwrap();
+        cleanup(&mut g).unwrap();
+        infer_datatypes(&mut g).unwrap();
+        // w in [3,3] integral; xq in [-8,7] -> acc in [-1536, 1344] -> INT12
+        assert_eq!(g.tensor_datatype("y"), DataType::Int(12));
+    }
+
+    #[test]
+    fn relu_makes_unsigned() {
+        let mut b = GraphBuilder::new("r");
+        b.input("x", vec![1, 4]);
+        b.quant("x", "xq", 1.0, 0.0, 8.0, true, false, "ROUND");
+        b.node("Relu", &["xq"], &["y"], &[]);
+        b.output("y", vec![1, 4]);
+        let mut g = b.finish().unwrap();
+        infer_datatypes(&mut g).unwrap();
+        assert_eq!(g.tensor_datatype("y"), DataType::Uint(7));
+    }
+
+    #[test]
+    fn scaled_quant_not_integral() {
+        let mut b = GraphBuilder::new("s");
+        b.input("x", vec![1, 4]);
+        b.quant("x", "y", 0.5, 0.0, 4.0, true, false, "ROUND");
+        b.output("y", vec![1, 4]);
+        let mut g = b.finish().unwrap();
+        infer_datatypes(&mut g).unwrap();
+        assert_eq!(g.tensor_datatype("y"), DataType::Float32);
+    }
+
+    #[test]
+    fn multithreshold_range() {
+        let mut b = GraphBuilder::new("mt");
+        b.input("x", vec![1, 2]);
+        b.initializer("t", Tensor::new(vec![1, 3], vec![0.5, 1.5, 2.5]));
+        b.node_in_domain(crate::ir::DOMAIN_FINN, "MultiThreshold", &["x", "t"], &["y"], &[]);
+        b.output("y", vec![1, 2]);
+        let mut g = b.finish().unwrap();
+        infer_datatypes(&mut g).unwrap();
+        assert_eq!(g.tensor_datatype("y"), DataType::Uint(2));
+    }
+
+    #[test]
+    fn bipolar_weights_detected_from_values() {
+        let mut b = GraphBuilder::new("bw");
+        b.input("x", vec![1, 2]);
+        b.initializer("w", Tensor::new(vec![2, 2], vec![1.0, -1.0, -1.0, 1.0]));
+        b.node("MatMul", &["x", "w"], &["y"], &[]);
+        b.output("y", vec![1, 2]);
+        let mut g = b.finish().unwrap();
+        b"";
+        infer_datatypes(&mut g).unwrap();
+        // x unknown float -> y stays float; but w's range seeds exist
+        assert_eq!(g.tensor_datatype("y"), DataType::Float32);
+    }
+}

@@ -1,0 +1,78 @@
+//! Execution-based shape inference.
+//!
+//! Rather than maintaining a second per-op shape function that can drift
+//! from the executor, we infer shapes by executing the graph on zero-filled
+//! inputs and recording every intermediate's shape — exact by construction,
+//! which is what a *verification-oriented* toolkit wants (the paper's own
+//! execution engine makes the same trade).
+
+use crate::exec::{execute_with, ExecOptions};
+use crate::ir::ModelGraph;
+use crate::tensor::Tensor;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+
+/// Annotate every intermediate and output tensor with its static shape.
+/// Requires all graph inputs to have declared shapes.
+pub fn infer_shapes(graph: &mut ModelGraph) -> Result<bool> {
+    let mut inputs = BTreeMap::new();
+    for vi in &graph.inputs {
+        if graph.initializers.contains_key(&vi.name) {
+            continue;
+        }
+        let shape = vi
+            .shape
+            .clone()
+            .with_context(|| format!("input '{}' has no declared shape", vi.name))?;
+        inputs.insert(vi.name.clone(), Tensor::zeros(shape));
+    }
+    let opts = ExecOptions { keep_intermediates: true, ..Default::default() };
+    let result = execute_with(graph, &inputs, &opts).context("shape inference execution")?;
+    let mut changed = false;
+    for (name, t) in &result.intermediates {
+        if graph.is_input(name) || graph.initializers.contains_key(name) {
+            continue;
+        }
+        let shape = t.shape().to_vec();
+        if graph.tensor_shape(name).as_deref() != Some(&shape[..]) {
+            graph.set_tensor_shape(name, shape);
+            changed = true;
+        }
+    }
+    Ok(changed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::GraphBuilder;
+
+    #[test]
+    fn infers_conv_chain_shapes() {
+        let mut b = GraphBuilder::new("s");
+        b.input("x", vec![1, 3, 8, 8]);
+        b.initializer("w", Tensor::zeros(vec![16, 3, 3, 3]));
+        b.node(
+            "Conv",
+            &["x", "w"],
+            &["c"],
+            &[("kernel_shape", vec![3i64, 3].into()), ("pads", vec![1i64, 1, 1, 1].into())],
+        );
+        b.node("MaxPool", &["c"], &["p"], &[("kernel_shape", vec![2i64, 2].into())]);
+        b.output_unknown("p");
+        let mut g = b.finish().unwrap();
+        assert_eq!(g.tensor_shape("c"), None);
+        assert!(infer_shapes(&mut g).unwrap());
+        assert_eq!(g.tensor_shape("c"), Some(vec![1, 16, 8, 8]));
+        assert_eq!(g.tensor_shape("p"), Some(vec![1, 16, 4, 4]));
+        // idempotent
+        assert!(!infer_shapes(&mut g).unwrap());
+    }
+
+    #[test]
+    fn requires_declared_input_shape() {
+        let mut g = ModelGraph::new("noshape");
+        g.inputs.push(crate::ir::ValueInfo::unknown("x"));
+        assert!(infer_shapes(&mut g).is_err());
+    }
+}

@@ -1,0 +1,192 @@
+//! QONNX → QCDQ lowering (paper §IV).
+//!
+//! Each `Quant` node becomes `QuantizeLinear → Clip → DequantizeLinear`,
+//! with the `Clip` carrying the sub-8-bit integer bounds of Eqs. 2–3. The
+//! resulting graph uses only standard ONNX operators and therefore runs on
+//! stock 8-bit backends — the paper's backward-compatibility claim, which
+//! `rust/tests/lowering.rs` demonstrates by executing the lowered graph
+//! with `ExecOptions::standard_onnx_only`.
+//!
+//! The QCDQ restrictions from Table I are *enforced* here, and each
+//! refusal is one of the ✗ cells:
+//! * bit widths above 8 → unrepresentable (no arbitrary precision);
+//! * non-`ROUND` rounding modes → unrepresentable (QuantizeLinear rounds
+//!   half-to-even, period);
+//! * channel-wise bit width → unrepresentable (`Clip` bounds are scalars);
+//! * `BipolarQuant` / `Trunc` → unrepresentable.
+
+use super::quant_params_static;
+use crate::ir::{ModelGraph, Node};
+use anyhow::{bail, ensure, Result};
+
+/// Lower all QONNX-dialect nodes to QCDQ. Fails loudly on anything QCDQ
+/// cannot express (see module docs).
+pub fn lower_to_qcdq(graph: &mut ModelGraph) -> Result<bool> {
+    let mut changed = false;
+    loop {
+        let Some(i) = graph
+            .nodes
+            .iter()
+            .position(|n| matches!(n.op_type.as_str(), "Quant" | "BipolarQuant" | "Trunc"))
+        else {
+            graph.sort_topologically()?;
+            if changed {
+                graph.validate()?;
+            }
+            return Ok(changed);
+        };
+        let node = graph.nodes[i].clone();
+        match node.op_type.as_str() {
+            "Quant" => lower_quant(graph, i, &node)?,
+            other => bail!(
+                "QCDQ cannot represent '{other}' (node '{}'): \
+                 no standard-ONNX equivalent exists",
+                node.name
+            ),
+        }
+        changed = true;
+    }
+}
+
+fn lower_quant(graph: &mut ModelGraph, idx: usize, node: &Node) -> Result<()> {
+    let p = quant_params_static(graph, node)?;
+    ensure!(
+        p.bit_width <= 8.0,
+        "QCDQ cannot represent {}-bit quantization (node '{}'): \
+         QuantizeLinear is limited to 8-bit outputs",
+        p.bit_width,
+        node.name
+    );
+    ensure!(
+        p.rounding_mode == "ROUND",
+        "QCDQ cannot represent rounding mode '{}' (node '{}')",
+        p.rounding_mode,
+        node.name
+    );
+    ensure!(
+        p.zero_point.fract() == 0.0,
+        "QCDQ needs an integer zero point, got {} (node '{}')",
+        p.zero_point,
+        node.name
+    );
+    let (lo, hi) = crate::ops::quant::quant_bounds(p.signed, p.narrow, p.bit_width);
+
+    let x = node.inputs[0].clone();
+    let scale = node.inputs[1].clone();
+    let zeropt = node.inputs[2].clone();
+    let y = node.outputs[0].clone();
+    let q_name = graph.fresh_name(&format!("{y}_q"));
+    let base = &node.name;
+
+    let qnode = Node::new("QuantizeLinear", &[&x, &scale, &zeropt], &[&q_name])
+        .with_name(&format!("{base}_quantize"))
+        .with_attr("signed", p.signed);
+
+    // full-range 8-bit with no narrowing needs no Clip (plain QDQ)
+    let needs_clip = p.bit_width < 8.0 || p.narrow;
+    let dq_input = if needs_clip {
+        let c_name = graph.fresh_name(&format!("{y}_clip"));
+        let lo_name = graph.fresh_name(&format!("{y}_clip_lo"));
+        let hi_name = graph.fresh_name(&format!("{y}_clip_hi"));
+        graph.initializers.insert(lo_name.clone(), crate::tensor::Tensor::scalar(lo as f32));
+        graph.initializers.insert(hi_name.clone(), crate::tensor::Tensor::scalar(hi as f32));
+        let cnode = Node::new("Clip", &[&q_name, &lo_name, &hi_name], &[&c_name])
+            .with_name(&format!("{base}_clip"));
+        graph.nodes.push(cnode);
+        c_name
+    } else {
+        q_name.clone()
+    };
+    let dnode = Node::new("DequantizeLinear", &[&dq_input, &scale, &zeropt], &[&y])
+        .with_name(&format!("{base}_dequantize"));
+
+    graph.nodes.remove(idx);
+    graph.nodes.push(qnode);
+    graph.nodes.push(dnode);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{execute_simple, execute_with, ExecOptions};
+    use crate::ir::GraphBuilder;
+    use crate::tensor::Tensor;
+    use std::collections::BTreeMap;
+
+    fn quant_graph(bw: f32, signed: bool, narrow: bool, mode: &str) -> ModelGraph {
+        let mut b = GraphBuilder::new("q");
+        b.input("x", vec![1, 16]);
+        b.quant("x", "y", 0.25, 0.0, bw, signed, narrow, mode);
+        b.output("y", vec![1, 16]);
+        b.finish().unwrap()
+    }
+
+    fn ramp() -> Tensor {
+        Tensor::new(vec![1, 16], (0..16).map(|v| (v as f32 - 8.0) * 0.4).collect())
+    }
+
+    #[test]
+    fn qcdq_matches_quant_int4() {
+        let g0 = quant_graph(4.0, true, false, "ROUND");
+        let mut g1 = g0.clone();
+        assert!(lower_to_qcdq(&mut g1).unwrap());
+        assert_eq!(g1.op_histogram()["QuantizeLinear"], 1);
+        assert_eq!(g1.op_histogram()["Clip"], 1);
+        assert_eq!(g1.op_histogram()["DequantizeLinear"], 1);
+        let x = ramp();
+        assert_eq!(execute_simple(&g0, &x).unwrap(), execute_simple(&g1, &x).unwrap());
+    }
+
+    #[test]
+    fn qcdq_narrow_uses_clip_at_8bit() {
+        let mut g = quant_graph(8.0, true, true, "ROUND");
+        lower_to_qcdq(&mut g).unwrap();
+        assert!(g.op_histogram().contains_key("Clip"));
+        assert_eq!(g.initializers.values().filter(|t| t.numel() == 1).count() >= 2, true);
+    }
+
+    #[test]
+    fn qcdq_8bit_full_range_is_plain_qdq() {
+        let g0 = quant_graph(8.0, true, false, "ROUND");
+        let mut g1 = g0.clone();
+        lower_to_qcdq(&mut g1).unwrap();
+        assert!(!g1.op_histogram().contains_key("Clip"));
+        let x = ramp();
+        assert_eq!(execute_simple(&g0, &x).unwrap(), execute_simple(&g1, &x).unwrap());
+    }
+
+    #[test]
+    fn lowered_graph_runs_on_standard_backend() {
+        // the paper's §IV claim, end to end
+        let mut g = quant_graph(3.0, false, false, "ROUND");
+        lower_to_qcdq(&mut g).unwrap();
+        let mut m = BTreeMap::new();
+        m.insert("x".to_string(), ramp());
+        let opts = ExecOptions { standard_onnx_only: true, ..Default::default() };
+        execute_with(&g, &m, &opts).unwrap();
+    }
+
+    #[test]
+    fn rejects_above_8_bits() {
+        let mut g = quant_graph(9.0, true, false, "ROUND");
+        let err = lower_to_qcdq(&mut g).unwrap_err();
+        assert!(err.to_string().contains("8-bit"));
+    }
+
+    #[test]
+    fn rejects_rounding_variants() {
+        let mut g = quant_graph(4.0, true, false, "FLOOR");
+        assert!(lower_to_qcdq(&mut g).is_err());
+    }
+
+    #[test]
+    fn rejects_bipolar() {
+        let mut b = GraphBuilder::new("bp");
+        b.input("x", vec![1, 4]);
+        b.bipolar_quant("x", "y", 1.0);
+        b.output("y", vec![1, 4]);
+        let mut g = b.finish().unwrap();
+        assert!(lower_to_qcdq(&mut g).is_err());
+    }
+}

@@ -1,0 +1,264 @@
+//! QONNX → quantized-operator-format-with-clipping lowering (paper §IV).
+//!
+//! Pattern-matches the canonical quantized linear layer
+//!
+//! ```text
+//! Quant(act) ──► Conv/MatMul (weights = Quant(W init)) ──► Quant(out)
+//! ```
+//!
+//! and emits `QLinearConv`/`QLinearMatMul` followed by a `Clip` that
+//! narrows the fused 8-bit output requantization to the target bit width.
+//! The restrictions are exactly Table I's ✗ column for this format:
+//! weights-only quantization, high-precision outputs, rounding variants
+//! and >8-bit precision are all refused.
+
+use super::{quant_params_static, QuantParams};
+use crate::ir::{ModelGraph, Node};
+use crate::ops::quant::quant_bounds;
+use crate::tensor::Tensor;
+use anyhow::{bail, ensure, Context, Result};
+
+fn check_q8(p: &QuantParams, what: &str, node: &str) -> Result<()> {
+    ensure!(
+        p.bit_width <= 8.0,
+        "quantized-op format cannot represent {}-bit {what} (node '{node}')",
+        p.bit_width
+    );
+    ensure!(
+        p.rounding_mode == "ROUND",
+        "quantized-op format cannot represent rounding mode '{}' ({what}, node '{node}')",
+        p.rounding_mode
+    );
+    Ok(())
+}
+
+/// Lower matched patterns. Any remaining QONNX node afterwards is an
+/// error: this format cannot express weights-only or activation-only
+/// quantization, so the whole graph must match.
+pub fn lower_to_qop_clip(graph: &mut ModelGraph) -> Result<bool> {
+    let mut changed = false;
+    'outer: loop {
+        graph.sort_topologically()?;
+        for li in 0..graph.nodes.len() {
+            let lin = graph.nodes[li].clone();
+            if !matches!(lin.op_type.as_str(), "Conv" | "MatMul") {
+                continue;
+            }
+            // act input must come from a Quant
+            let Some(aq_idx) = graph.producer(&lin.inputs[0]) else { continue };
+            if graph.nodes[aq_idx].op_type != "Quant" {
+                continue;
+            }
+            // weight input must be a Quant over an initializer
+            let Some(wq_idx) = graph.producer(&lin.inputs[1]) else { continue };
+            if graph.nodes[wq_idx].op_type != "Quant" {
+                continue;
+            }
+            // output must feed exactly one Quant
+            let out_cons = graph.consumers(&lin.outputs[0]);
+            if out_cons.len() != 1 || graph.nodes[out_cons[0]].op_type != "Quant" {
+                continue;
+            }
+            let oq_idx = out_cons[0];
+
+            let aq = graph.nodes[aq_idx].clone();
+            let wq = graph.nodes[wq_idx].clone();
+            let oq = graph.nodes[oq_idx].clone();
+            let ap = quant_params_static(graph, &aq)?;
+            let wp = quant_params_static(graph, &wq)?;
+            let op = quant_params_static(graph, &oq)?;
+            check_q8(&ap, "activation quantization", &aq.name)?;
+            check_q8(&wp, "weight quantization", &wq.name)?;
+            check_q8(&op, "output quantization", &oq.name)?;
+            ensure!(
+                wp.zero_point == 0.0,
+                "quantized-op format expects symmetric weights (zero point 0), node '{}'",
+                wq.name
+            );
+            let w_init = graph
+                .initializer(&wq.inputs[0])
+                .with_context(|| format!("weight Quant '{}' input is not an initializer", wq.name))?
+                .clone();
+
+            // pre-quantized integer weight tensor: w_int = round(W/s) clamped
+            let (wlo, whi) = quant_bounds(wp.signed, wp.narrow, wp.bit_width);
+            let w_int = w_init.map(|v| {
+                crate::ops::quant::round_half_even(f64::from(v) / f64::from(wp.scale))
+                    .clamp(wlo, whi) as f32
+            })?;
+
+            // names
+    let y = oq.outputs[0].clone();
+            let x_src = aq.inputs[0].clone();
+            let pre = graph.fresh_name(&format!("{y}_xq8"));
+            let acc = graph.fresh_name(&format!("{y}_acc8"));
+            let base = lin.name.clone();
+            let mk_scalar = |graph: &mut ModelGraph, tag: &str, v: f32| -> String {
+                let n = graph.fresh_name(&format!("{base}_{tag}"));
+                graph.initializers.insert(n.clone(), Tensor::scalar(v));
+                n
+            };
+            // input is quantized by the *previous* layer in this format, so
+            // emit an explicit QuantizeLinear+Clip producing int8 activations
+            let xs = mk_scalar(graph, "x_scale", ap.scale);
+            let xz = mk_scalar(graph, "x_zp", ap.zero_point);
+            let ws_name = mk_scalar(graph, "w_scale", wp.scale);
+            let wz = mk_scalar(graph, "w_zp", 0.0);
+            let ys = mk_scalar(graph, "y_scale", op.scale);
+            let yz = mk_scalar(graph, "y_zp", op.zero_point);
+            let w_name = graph.fresh_name(&format!("{base}_w_int"));
+            graph.initializers.insert(w_name.clone(), w_int);
+
+            let mut new_nodes: Vec<Node> = Vec::new();
+            let qx = Node::new("QuantizeLinear", &[&x_src, &xs, &xz], &[&pre])
+                .with_name(format!("{base}_quantize_x").as_str())
+                .with_attr("signed", ap.signed);
+            new_nodes.push(qx);
+            // clip activation to its sub-8-bit range (operator format w/ clipping)
+            let (alo, ahi) = quant_bounds(ap.signed, ap.narrow, ap.bit_width);
+            let xq_in = if ap.bit_width < 8.0 || ap.narrow {
+                let lo = mk_scalar(graph, "x_lo", alo as f32);
+                let hi = mk_scalar(graph, "x_hi", ahi as f32);
+                let cn = graph.fresh_name(&format!("{y}_xq8c"));
+                new_nodes.push(
+                    Node::new("Clip", &[&pre, &lo, &hi], &[&cn]).with_name(format!("{base}_clip_x").as_str()),
+                );
+                cn
+            } else {
+                pre.clone()
+            };
+
+            let qlin_op = if lin.op_type == "Conv" { "QLinearConv" } else { "QLinearMatMul" };
+            let mut qlin = Node::new(
+                qlin_op,
+                &[&xq_in, &xs, &xz, &w_name, &ws_name, &wz, &ys, &yz],
+                &[&acc],
+            )
+            .with_name(format!("{base}_qlinear").as_str())
+            .with_attr("signed", op.signed);
+            if lin.op_type == "Conv" {
+                for key in ["kernel_shape", "strides", "pads", "group", "dilations"] {
+                    if let Some(a) = lin.attrs.get(key) {
+                        qlin.attrs.insert(key.to_string(), a.clone());
+                    }
+                }
+            }
+            new_nodes.push(qlin);
+            // clip fused 8-bit output down to the target precision
+            let (olo, ohi) = quant_bounds(op.signed, op.narrow, op.bit_width);
+            let qy = if op.bit_width < 8.0 || op.narrow {
+                let lo = mk_scalar(graph, "y_lo", olo as f32);
+                let hi = mk_scalar(graph, "y_hi", ohi as f32);
+                let cn = graph.fresh_name(&format!("{y}_acc8c"));
+                new_nodes.push(
+                    Node::new("Clip", &[&acc, &lo, &hi], &[&cn]).with_name(format!("{base}_clip_y").as_str()),
+                );
+                cn
+            } else {
+                acc.clone()
+            };
+            // final dequantize so downstream float consumers still work
+            new_nodes.push(
+                Node::new("DequantizeLinear", &[&qy, &ys, &yz], &[&y])
+                    .with_name(format!("{base}_dequantize_y").as_str()),
+            );
+
+            let mut to_remove = vec![li, aq_idx, wq_idx, oq_idx];
+            to_remove.sort_unstable();
+            for i in to_remove.into_iter().rev() {
+                graph.nodes.remove(i);
+            }
+            graph.nodes.extend(new_nodes);
+            super::remove_dead_nodes(graph)?;
+            changed = true;
+            continue 'outer;
+        }
+        // no more matches: any surviving QONNX node is unrepresentable
+        if let Some(n) = graph
+            .nodes
+            .iter()
+            .find(|n| matches!(n.op_type.as_str(), "Quant" | "BipolarQuant" | "Trunc"))
+        {
+            bail!(
+                "quantized-op format cannot represent node '{}' ({}): \
+                 only fully-quantized Conv/MatMul patterns are expressible \
+                 (weights-only or activation-only quantization is a Table I ✗)",
+                n.name,
+                n.op_type
+            );
+        }
+        graph.sort_topologically()?;
+        if changed {
+            graph.validate()?;
+        }
+        return Ok(changed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{execute_simple, execute_with, ExecOptions};
+    use crate::ir::GraphBuilder;
+    use std::collections::BTreeMap;
+
+    /// Quant(x) -> MatMul(Quant(W)) -> Quant(out)
+    fn qlinear_pattern() -> ModelGraph {
+        let mut b = GraphBuilder::new("p");
+        b.input("x", vec![1, 4]);
+        b.quant("x", "xq", 0.1, 0.0, 8.0, true, false, "ROUND");
+        b.initializer("w", Tensor::new(vec![4, 2], vec![0.5, -0.25, 0.75, 0.1, -0.6, 0.3, 0.2, -0.4]));
+        b.quant("w", "wq", 0.05, 0.0, 4.0, true, false, "ROUND");
+        b.node("MatMul", &["xq", "wq"], &["mm"], &[]);
+        b.quant("mm", "y", 0.2, 0.0, 8.0, true, false, "ROUND");
+        b.output("y", vec![1, 2]);
+        b.finish().unwrap()
+    }
+
+    #[test]
+    fn lowers_pattern_to_qlinear_matmul() {
+        let g0 = qlinear_pattern();
+        let mut g1 = g0.clone();
+        assert!(lower_to_qop_clip(&mut g1).unwrap());
+        let h = g1.op_histogram();
+        assert!(h.contains_key("QLinearMatMul"));
+        assert!(!h.contains_key("Quant"));
+        // weight initializer is now integer-valued
+        let qlin = g1.nodes.iter().find(|n| n.op_type == "QLinearMatMul").unwrap();
+        let w = &g1.initializers[&qlin.inputs[3]];
+        assert!(w.as_f32().unwrap().iter().all(|v| v.fract() == 0.0));
+
+        // runs on a standard-only backend
+        let mut m = BTreeMap::new();
+        m.insert("x".to_string(), Tensor::new(vec![1, 4], vec![0.3, -0.2, 0.5, 0.1]));
+        let opts = ExecOptions { standard_onnx_only: true, ..Default::default() };
+        execute_with(&g1, &m, &opts).unwrap();
+    }
+
+    #[test]
+    fn lowered_semantics_close_to_qonnx() {
+        // requantization reorders rounding, so allow one output ULP
+        let g0 = qlinear_pattern();
+        let mut g1 = g0.clone();
+        lower_to_qop_clip(&mut g1).unwrap();
+        let x = Tensor::new(vec![1, 4], vec![0.3, -0.2, 0.5, 0.1]);
+        let y0 = execute_simple(&g0, &x).unwrap();
+        let y1 = execute_simple(&g1, &x).unwrap();
+        for (a, b) in y0.as_f32().unwrap().iter().zip(y1.as_f32().unwrap()) {
+            assert!((a - b).abs() <= 0.2 + 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn rejects_weights_only_quantization() {
+        // weights-only quantization: a Table I ✗ for this format
+        let mut b = GraphBuilder::new("wo");
+        b.input("x", vec![1, 4]);
+        b.initializer("w", Tensor::zeros(vec![4, 2]));
+        b.quant("w", "wq", 0.05, 0.0, 4.0, true, false, "ROUND");
+        b.node("MatMul", &["x", "wq"], &["y"], &[]);
+        b.output("y", vec![1, 2]);
+        let mut g = b.finish().unwrap();
+        assert!(lower_to_qop_clip(&mut g).is_err());
+    }
+}

@@ -1,0 +1,79 @@
+//! Graph transformation passes — the Rust analog of the paper's "software
+//! utilities for working with QONNX" (§V) plus the backend ingestion flows
+//! (§VI).
+//!
+//! Every pass is a function `&mut ModelGraph -> Result<bool>` returning
+//! whether the graph changed; [`cleanup`] composes the standard pipeline
+//! (shape inference → constant folding → identity removal → dead-code
+//! elimination → unique names), reproducing the Fig. 1 → Fig. 2 step.
+
+mod channels_last;
+mod cleanup;
+mod finn_ingest;
+mod fold_constants;
+mod hls4ml_ingest;
+mod infer_datatypes;
+mod infer_shapes;
+mod lower_qcdq;
+mod lower_qop;
+mod raise_qcdq;
+
+pub use channels_last::to_channels_last;
+pub use cleanup::{cleanup, give_unique_names, remove_dead_nodes, remove_identity};
+pub use finn_ingest::{convert_to_finn, fold_weight_quants, quant_to_multithreshold, quant_to_thresholds};
+pub use fold_constants::fold_constants;
+pub use hls4ml_ingest::{hls4ml_ingest, propagate_dequant, quantize_constant_paths};
+pub use infer_datatypes::infer_datatypes;
+pub use infer_shapes::infer_shapes;
+pub use lower_qcdq::lower_to_qcdq;
+pub use lower_qop::lower_to_qop_clip;
+pub use raise_qcdq::raise_qcdq_to_qonnx;
+
+use crate::ir::{ModelGraph, Node};
+use anyhow::{Context, Result};
+
+/// Statically-resolved parameters of a `Quant` node whose scale /
+/// zero-point / bit-width inputs are scalar initializers. Most lowering
+/// passes require this form (dynamic quantization stays QONNX-only —
+/// another Table I ✗ for the low-level formats).
+#[derive(Debug, Clone)]
+pub struct QuantParams {
+    pub scale: f32,
+    pub zero_point: f32,
+    pub bit_width: f64,
+    pub signed: bool,
+    pub narrow: bool,
+    pub rounding_mode: String,
+}
+
+/// Extract static scalar quantization parameters from a `Quant` node.
+pub fn quant_params_static(graph: &ModelGraph, node: &Node) -> Result<QuantParams> {
+    anyhow::ensure!(node.op_type == "Quant", "not a Quant node: {}", node.op_type);
+    let get = |idx: usize, what: &str| -> Result<f32> {
+        let name = &node.inputs[idx];
+        let t = graph
+            .initializer(name)
+            .with_context(|| format!("Quant '{}' {what} '{name}' is not a static initializer", node.name))?;
+        anyhow::ensure!(t.numel() == 1, "Quant '{}' {what} is not scalar (shape {:?})", node.name, t.shape());
+        t.scalar_value()
+    };
+    Ok(QuantParams {
+        scale: get(1, "scale")?,
+        zero_point: get(2, "zero_point")?,
+        bit_width: f64::from(get(3, "bit_width")?),
+        signed: node.attr_int_or("signed", 1) != 0,
+        narrow: node.attr_int_or("narrow", 0) != 0,
+        rounding_mode: node.attr_str_or("rounding_mode", "ROUND"),
+    })
+}
+
+/// Run a pass to fixpoint (bounded to avoid ping-ponging passes looping
+/// forever on a bug).
+pub fn fixpoint(graph: &mut ModelGraph, pass: impl Fn(&mut ModelGraph) -> Result<bool>) -> Result<()> {
+    for _ in 0..100 {
+        if !pass(graph)? {
+            return Ok(());
+        }
+    }
+    anyhow::bail!("pass did not converge within 100 iterations on graph '{}'", graph.name)
+}

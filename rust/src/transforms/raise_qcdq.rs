@@ -1,0 +1,199 @@
+//! QCDQ → QONNX raising: fuse `QuantizeLinear [→ Clip] → DequantizeLinear`
+//! triples back into a single `Quant` node.
+//!
+//! This is the ingestion direction: models exported by QCDQ-producing
+//! tools (e.g. Brevitas' QCDQ export, §VI-B) become first-class QONNX, with
+//! the bit width recovered from the `Clip` bounds.
+
+use crate::ir::{ModelGraph, Node, DOMAIN_QONNX};
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+
+/// Recover (bit_width, signed, narrow) from integer clip bounds.
+///
+/// `[-2^(b-1), 2^(b-1)-1]` → signed b-bit; `[-2^(b-1)+1, 2^(b-1)-1]` →
+/// signed narrow; `[0, 2^b-1]` → unsigned; `[0, 2^b-2]` → unsigned narrow.
+pub fn bounds_to_quant_params(lo: f64, hi: f64) -> Option<(f64, bool, bool)> {
+    if lo == 0.0 {
+        // unsigned: hi = 2^b - 1 - narrow
+        for narrow in [false, true] {
+            let b = ((hi + 1.0 + if narrow { 1.0 } else { 0.0 }) as f64).log2();
+            if b.fract() == 0.0 && b >= 1.0 {
+                return Some((b, false, narrow));
+            }
+        }
+        None
+    } else if lo < 0.0 {
+        for narrow in [false, true] {
+            let b = (-lo + if narrow { 1.0 } else { 0.0 }).log2() + 1.0;
+            if b.fract() == 0.0 && b >= 2.0 && hi == 2f64.powf(b - 1.0) - 1.0 {
+                return Some((b, true, narrow));
+            }
+        }
+        None
+    } else {
+        None
+    }
+}
+
+/// Fuse all QCDQ patterns into `Quant` nodes. Returns true if changed.
+pub fn raise_qcdq_to_qonnx(graph: &mut ModelGraph) -> Result<bool> {
+    let mut changed = false;
+    'outer: loop {
+        graph.sort_topologically()?;
+        for qi in 0..graph.nodes.len() {
+            if graph.nodes[qi].op_type != "QuantizeLinear" {
+                continue;
+            }
+            let q = graph.nodes[qi].clone();
+            let q_out = q.outputs[0].clone();
+            let consumers = graph.consumers(&q_out);
+            if consumers.len() != 1 || graph.is_output(&q_out) {
+                continue;
+            }
+            // optional Clip
+            let (clip_idx, dq_idx, lo_hi) = match graph.nodes[consumers[0]].op_type.as_str() {
+                "Clip" => {
+                    let c = graph.nodes[consumers[0]].clone();
+                    let lo = c.inputs.get(1).and_then(|n| graph.initializer(n)).and_then(|t| t.scalar_value().ok());
+                    let hi = c.inputs.get(2).and_then(|n| graph.initializer(n)).and_then(|t| t.scalar_value().ok());
+                    let (Some(lo), Some(hi)) = (lo, hi) else { continue };
+                    let c_out = c.outputs[0].clone();
+                    let dqs = graph.consumers(&c_out);
+                    if dqs.len() != 1 || graph.is_output(&c_out) || graph.nodes[dqs[0]].op_type != "DequantizeLinear" {
+                        continue;
+                    }
+                    (Some(consumers[0]), dqs[0], Some((f64::from(lo), f64::from(hi))))
+                }
+                "DequantizeLinear" => (None, consumers[0], None),
+                _ => continue,
+            };
+            let dq = graph.nodes[dq_idx].clone();
+            // scale / zero point must match between Q and DQ
+            ensure!(
+                q.inputs[1] == dq.inputs[1]
+                    && q.inputs.get(2).map(|s| s.as_str()).unwrap_or("")
+                        == dq.inputs.get(2).map(|s| s.as_str()).unwrap_or(""),
+                "QCDQ fuse: Q/DQ scale or zero-point mismatch at '{}'",
+                q.name
+            );
+            let q_signed = q.attr_int_or("signed", 0) != 0;
+            let (bw, signed, narrow) = match lo_hi {
+                Some((lo, hi)) => match bounds_to_quant_params(lo, hi) {
+                    Some(p) => p,
+                    None => continue, // non-integer-power bounds: leave as-is
+                },
+                None => (8.0, q_signed, false),
+            };
+            ensure!(
+                signed == q_signed || lo_hi.is_none(),
+                "QCDQ fuse: clip bounds signedness disagrees with QuantizeLinear at '{}'",
+                q.name
+            );
+
+            // build the Quant node
+            let y = dq.outputs[0].clone();
+            let bw_name = graph.fresh_name(&format!("{y}_bitwidth"));
+            graph.initializers.insert(bw_name.clone(), Tensor::scalar(bw as f32));
+            let zeropt = if q.inputs.len() > 2 {
+                q.inputs[2].clone()
+            } else {
+                let z = graph.fresh_name(&format!("{y}_zeropt"));
+                graph.initializers.insert(z.clone(), Tensor::scalar(0.0));
+                z
+            };
+            let quant = Node::new("Quant", &[&q.inputs[0], &q.inputs[1], &zeropt, &bw_name], &[&y])
+                .with_domain(DOMAIN_QONNX)
+                .with_name(&format!("{}_raised", q.name))
+                .with_attr("signed", signed)
+                .with_attr("narrow", narrow)
+                .with_attr("rounding_mode", "ROUND");
+
+            // remove DQ, Clip, Q (descending index order)
+            let mut to_remove = vec![qi, dq_idx];
+            if let Some(ci) = clip_idx {
+                to_remove.push(ci);
+            }
+            to_remove.sort_unstable();
+            for i in to_remove.into_iter().rev() {
+                graph.nodes.remove(i);
+            }
+            graph.nodes.push(quant);
+            changed = true;
+            continue 'outer;
+        }
+        if changed {
+            super::remove_dead_nodes(graph)?;
+            graph.sort_topologically()?;
+            graph.validate()?;
+        }
+        return Ok(changed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::execute_simple;
+    use crate::ir::GraphBuilder;
+    use crate::transforms::lower_to_qcdq;
+
+    #[test]
+    fn bounds_recovery() {
+        assert_eq!(bounds_to_quant_params(-8.0, 7.0), Some((4.0, true, false)));
+        assert_eq!(bounds_to_quant_params(-7.0, 7.0), Some((4.0, true, true)));
+        assert_eq!(bounds_to_quant_params(0.0, 15.0), Some((4.0, false, false)));
+        assert_eq!(bounds_to_quant_params(0.0, 14.0), Some((4.0, false, true)));
+        assert_eq!(bounds_to_quant_params(-128.0, 127.0), Some((8.0, true, false)));
+        assert_eq!(bounds_to_quant_params(-5.0, 5.0), None);
+    }
+
+    #[test]
+    fn roundtrip_quant_to_qcdq_and_back() {
+        let mut b = GraphBuilder::new("rt");
+        b.input("x", vec![1, 8]);
+        b.quant("x", "y", 0.25, 0.0, 5.0, true, false, "ROUND");
+        b.output("y", vec![1, 8]);
+        let g0 = b.finish().unwrap();
+        let mut g1 = g0.clone();
+        lower_to_qcdq(&mut g1).unwrap();
+        assert!(!g1.op_histogram().contains_key("Quant"));
+        assert!(raise_qcdq_to_qonnx(&mut g1).unwrap());
+        assert_eq!(g1.op_histogram()["Quant"], 1);
+        let q = g1.nodes.iter().find(|n| n.op_type == "Quant").unwrap();
+        assert_eq!(q.attr_int_or("signed", -1), 1);
+        assert_eq!(q.attr_int_or("narrow", -1), 0);
+
+        let x = crate::tensor::Tensor::new(vec![1, 8], (0..8).map(|v| v as f32 * 0.9 - 3.0).collect());
+        assert_eq!(execute_simple(&g0, &x).unwrap(), execute_simple(&g1, &x).unwrap());
+    }
+
+    #[test]
+    fn raises_plain_qdq_as_8bit() {
+        let mut b = GraphBuilder::new("qdq");
+        b.input("x", vec![1, 4]);
+        b.scalar("s", 0.5);
+        b.scalar("z", 0.0);
+        b.node("QuantizeLinear", &["x", "s", "z"], &["q"], &[("signed", 1i64.into())]);
+        b.node("DequantizeLinear", &["q", "s", "z"], &["y"], &[]);
+        b.output("y", vec![1, 4]);
+        let mut g = b.finish().unwrap();
+        assert!(raise_qcdq_to_qonnx(&mut g).unwrap());
+        let q = g.nodes.iter().find(|n| n.op_type == "Quant").unwrap();
+        assert_eq!(g.initializers[&q.inputs[3]].scalar_value().unwrap(), 8.0);
+    }
+
+    #[test]
+    fn leaves_mismatched_scales_alone() {
+        let mut b = GraphBuilder::new("mm");
+        b.input("x", vec![1, 4]);
+        b.scalar("s1", 0.5);
+        b.scalar("s2", 0.25);
+        b.scalar("z", 0.0);
+        b.node("QuantizeLinear", &["x", "s1", "z"], &["q"], &[]);
+        b.node("DequantizeLinear", &["q", "s2", "z"], &["y"], &[]);
+        b.output("y", vec![1, 4]);
+        let mut g = b.finish().unwrap();
+        assert!(raise_qcdq_to_qonnx(&mut g).is_err());
+    }
+}

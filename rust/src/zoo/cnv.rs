@@ -1,0 +1,210 @@
+//! CNV: the VGG-like CIFAR-10 models of Table III (from the FINN paper),
+//! with the raw-export variant whose conv→FC transition appears in Fig. 1.
+
+use super::rng::Rng;
+use crate::ir::{AttrValue, GraphBuilder, ModelGraph};
+use crate::tensor::Tensor;
+use anyhow::Result;
+
+/// Conv channel plan: 3→64→64 →pool→ 128→128 →pool→ 256→256, then FC
+/// 256→512→512→10 (Table III: 1,542,848 weights).
+const CONV_PLAN: &[(usize, usize, bool)] = &[
+    (3, 64, false),
+    (64, 64, true),
+    (64, 128, false),
+    (128, 128, true),
+    (128, 256, false),
+    (256, 256, false),
+];
+const FC_PLAN: &[(usize, usize)] = &[(256, 512), (512, 512), (512, 10)];
+
+/// Build CNV-wXaY. `raw_export = true` reproduces the uncleaned
+/// Brevitas/PyTorch export: `Identity` nodes after weight constants and the
+/// `Shape→Gather→Unsqueeze→Concat→Reshape` flatten chain of Fig. 1.
+pub fn cnv(weight_bits: u32, act_bits: u32, seed: u64, raw_export: bool) -> Result<ModelGraph> {
+    let name = format!("CNV-w{weight_bits}a{act_bits}");
+    let mut b = GraphBuilder::new(&name);
+    let mut rng = Rng::new(seed);
+    b.input("x", vec![1, 3, 32, 32]);
+    b.quant("x", "x_q", 1.0 / 255.0, 0.0, 8.0, false, false, "ROUND");
+    let mut cur = "x_q".to_string();
+
+    let quant_weight = |b: &mut GraphBuilder, tag: &str, w: Tensor, wbits: u32| -> String {
+        let w_name = format!("{tag}_w");
+        let wq_name = format!("{tag}_wq");
+        b.initializer(&w_name, w);
+        let src = if raw_export {
+            // exporters leave an Identity between the constant and the quant
+            let id_name = format!("{tag}_w_id");
+            b.node("Identity", &[&w_name], &[&id_name], &[]);
+            id_name
+        } else {
+            w_name
+        };
+        if wbits == 1 {
+            b.bipolar_quant(&src, &wq_name, 0.25);
+        } else {
+            b.quant(&src, &wq_name, 0.25, 0.0, wbits as f32, true, true, "ROUND");
+        }
+        wq_name
+    };
+
+    for (i, &(cin, cout, pool)) in CONV_PLAN.iter().enumerate() {
+        let tag = format!("conv{i}");
+        let w = Tensor::new(vec![cout, cin, 3, 3], rng.he_weights(cout * cin * 9, cin * 9));
+        let wq = quant_weight(&mut b, &tag, w, weight_bits);
+        let conv_out = format!("{tag}_out");
+        b.node(
+            "Conv",
+            &[&cur, &wq],
+            &[&conv_out],
+            &[("kernel_shape", AttrValue::Ints(vec![3, 3]))],
+        );
+        // batch norm (identity-initialized; training would set real params)
+        let bn_out = format!("{tag}_bn");
+        for (suffix, v) in [("scale", 1.0f32), ("bias", 0.0), ("mean", 0.0), ("var", 1.0)] {
+            b.initializer(&format!("{tag}_bn_{suffix}"), Tensor::full(vec![cout], v));
+        }
+        b.node(
+            "BatchNormalization",
+            &[
+                &conv_out,
+                &format!("{tag}_bn_scale"),
+                &format!("{tag}_bn_bias"),
+                &format!("{tag}_bn_mean"),
+                &format!("{tag}_bn_var"),
+            ],
+            &[&bn_out],
+            &[],
+        );
+        let act_out = format!("{tag}_act");
+        if act_bits == 1 {
+            b.bipolar_quant(&bn_out, &act_out, 1.0);
+        } else {
+            b.quant(&bn_out, &act_out, 0.25, 0.0, act_bits as f32, true, false, "ROUND");
+        }
+        cur = act_out;
+        if pool {
+            let pool_out = format!("{tag}_pool");
+            b.node(
+                "MaxPool",
+                &[&cur],
+                &[&pool_out],
+                &[("kernel_shape", AttrValue::Ints(vec![2, 2]))],
+            );
+            cur = pool_out;
+        }
+    }
+
+    // conv→FC transition (the Fig. 1/2/3 region)
+    if raw_export {
+        b.initializer("flat_idx", Tensor::new_i64(vec![], vec![0]));
+        b.initializer("flat_rest", Tensor::new_i64(vec![1], vec![-1]));
+        b.node("Shape", &[&cur], &["flat_shape"], &[]);
+        b.node("Gather", &["flat_shape", "flat_idx"], &["flat_b"], &[("axis", AttrValue::Int(0))]);
+        b.node("Unsqueeze", &["flat_b"], &["flat_bu"], &[("axes", AttrValue::Ints(vec![0]))]);
+        b.node("Concat", &["flat_bu", "flat_rest"], &["flat_target"], &[("axis", AttrValue::Int(0))]);
+        b.node("Reshape", &[&cur, "flat_target"], &["flat"], &[]);
+    } else {
+        b.initializer("flat_target", Tensor::new_i64(vec![2], vec![1, 256]));
+        b.node("Reshape", &[&cur, "flat_target"], &["flat"], &[]);
+    }
+    cur = "flat".to_string();
+
+    for (i, &(fin, fout)) in FC_PLAN.iter().enumerate() {
+        let tag = format!("fc{i}");
+        let w = Tensor::new(vec![fin, fout], rng.he_weights(fin * fout, fin));
+        let wq = quant_weight(&mut b, &tag, w, weight_bits);
+        let out = format!("{tag}_out");
+        b.node("MatMul", &[&cur, &wq], &[&out], &[]);
+        cur = out;
+        if i + 1 < FC_PLAN.len() {
+            let act_out = format!("{tag}_act");
+            if act_bits == 1 {
+                b.bipolar_quant(&cur, &act_out, 1.0);
+            } else {
+                b.quant(&cur, &act_out, 0.25, 0.0, act_bits as f32, true, false, "ROUND");
+            }
+            cur = act_out;
+        }
+    }
+    b.node("Identity", &[&cur], &["logits"], &[]);
+    if raw_export {
+        b.output_unknown("logits");
+    } else {
+        b.output("logits", vec![1, 10]);
+    }
+    let mut g = b.finish()?;
+    g.doc = format!("CNV VGG-like CIFAR-10 model, {weight_bits}-bit weights / {act_bits}-bit activations");
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::execute_simple;
+    use crate::metrics::analyze;
+    use crate::transforms::cleanup;
+
+    #[test]
+    fn weights_match_table_iii() {
+        let mut g = cnv(2, 2, 1, false).unwrap();
+        cleanup(&mut g).unwrap();
+        let r = analyze(&g).unwrap();
+        // Table III: 1,542,848 weights; w2 -> 3,085,696 total weight bits
+        assert_eq!(r.weights(), 1_542_848);
+        assert_eq!(r.total_weight_bits(), 3_085_696);
+        assert_eq!(r.layers.len(), 9);
+    }
+
+    #[test]
+    fn macs_close_to_table_iii() {
+        // Table III reports 57,906,176 (zoo counting script); our full count
+        // including the 8-bit first conv is 59,461,376. Same ballpark, and
+        // identical across bit-width variants as in the paper.
+        let mut g = cnv(1, 1, 1, false).unwrap();
+        cleanup(&mut g).unwrap();
+        let r = analyze(&g).unwrap();
+        assert_eq!(r.macs(), 59_461_376);
+    }
+
+    #[test]
+    fn raw_export_has_fig1_structure() {
+        let g = cnv(2, 2, 1, true).unwrap();
+        let h = g.op_histogram();
+        for op in ["Shape", "Gather", "Unsqueeze", "Concat", "Reshape", "Identity"] {
+            assert!(h.contains_key(op), "raw export missing {op}");
+        }
+    }
+
+    #[test]
+    fn cleanup_collapses_fig1_to_fig2() {
+        // Fig. 2: "the Shape, Gather, Unsqueeze, Concat, and Reshape
+        // structure was collapsed into a single Reshape operation"
+        let mut g = cnv(2, 2, 1, true).unwrap();
+        let before = g.nodes.len();
+        cleanup(&mut g).unwrap();
+        let h = g.op_histogram();
+        assert!(!h.contains_key("Shape"));
+        assert!(!h.contains_key("Gather"));
+        assert!(!h.contains_key("Unsqueeze"));
+        assert!(!h.contains_key("Concat"));
+        assert!(!h.contains_key("Identity"));
+        assert_eq!(h["Reshape"], 1);
+        assert!(g.nodes.len() < before);
+        // intermediate tensors now have shapes (Fig. 2 caption)
+        assert_eq!(g.tensor_shape("conv0_out"), Some(vec![1, 64, 30, 30]));
+    }
+
+    #[test]
+    fn executes_and_matches_after_cleanup() {
+        let g0 = cnv(2, 2, 3, true).unwrap();
+        let mut g1 = g0.clone();
+        cleanup(&mut g1).unwrap();
+        let x = Tensor::new(vec![1, 3, 32, 32], (0..3072).map(|i| (i % 253) as f32 / 253.0).collect());
+        let y0 = execute_simple(&g0, &x).unwrap();
+        let y1 = execute_simple(&g1, &x).unwrap();
+        assert_eq!(y0, y1);
+        assert_eq!(y0.shape(), &[1, 10]);
+    }
+}

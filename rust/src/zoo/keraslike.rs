@@ -1,0 +1,186 @@
+//! QKeras-style ingestion (paper §VI-A, Fig. 4).
+//!
+//! A minimal "keras-like" layer-config model description (the analog of a
+//! stripped QKeras model) converted into a QONNX graph: quantizer
+//! attributes on `QDense` layers become explicit `Quant` nodes on the
+//! weight/bias tensors, and `QActivation` layers become a standard
+//! activation followed by a `Quant` node — exactly the paper's conversion
+//! recipe.
+
+use super::rng::Rng;
+use crate::ir::{GraphBuilder, ModelGraph};
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+/// `quantized_bits(bits, integer)`-style quantizer config.
+#[derive(Debug, Clone, Copy)]
+pub struct QuantizedBits {
+    pub bits: u32,
+    /// integer bits — sets the scale to `2^(integer - bits + 1)`
+    pub integer: u32,
+}
+
+impl QuantizedBits {
+    pub fn scale(&self) -> f32 {
+        2f32.powi(self.integer as i32 - self.bits as i32 + 1)
+    }
+}
+
+/// A keras-like layer.
+#[derive(Debug, Clone)]
+pub enum KerasLayer {
+    /// QDense(units, kernel_quantizer, bias_quantizer)
+    QDense {
+        units: usize,
+        kernel_quantizer: QuantizedBits,
+        bias_quantizer: Option<QuantizedBits>,
+    },
+    /// QActivation("quantized_relu(bits)")
+    QActivationRelu { bits: u32 },
+    /// plain activations
+    Relu,
+    Softmax,
+}
+
+/// A keras-like sequential model description.
+#[derive(Debug, Clone)]
+pub struct KerasModel {
+    pub name: String,
+    pub input_dim: usize,
+    pub layers: Vec<KerasLayer>,
+}
+
+impl KerasModel {
+    /// The Fig. 4 example: one quantized Dense (weights+bias) followed by a
+    /// quantized ReLU.
+    pub fn fig4_example() -> KerasModel {
+        KerasModel {
+            name: "qkeras_fig4".into(),
+            input_dim: 16,
+            layers: vec![
+                KerasLayer::QDense {
+                    units: 64,
+                    kernel_quantizer: QuantizedBits { bits: 6, integer: 0 },
+                    bias_quantizer: Some(QuantizedBits { bits: 6, integer: 0 }),
+                },
+                KerasLayer::QActivationRelu { bits: 4 },
+            ],
+        }
+    }
+}
+
+/// Convert a keras-like model into QONNX (the tf2onnx + Quant-node-handler
+/// pipeline of §VI-A, steps 1–3, collapsed).
+pub fn keras_to_qonnx(model: &KerasModel, seed: u64) -> Result<ModelGraph> {
+    let mut b = GraphBuilder::new(&model.name);
+    let mut rng = Rng::new(seed);
+    b.input("x", vec![1, model.input_dim]);
+    let mut cur = "x".to_string();
+    let mut cur_dim = model.input_dim;
+    for (i, layer) in model.layers.iter().enumerate() {
+        match layer {
+            KerasLayer::QDense { units, kernel_quantizer, bias_quantizer } => {
+                let w_name = format!("dense{i}_kernel");
+                let wq_name = format!("dense{i}_kernel_q");
+                b.initializer(
+                    &w_name,
+                    Tensor::new(vec![cur_dim, *units], rng.he_weights(cur_dim * units, cur_dim)),
+                );
+                b.quant(
+                    &w_name,
+                    &wq_name,
+                    kernel_quantizer.scale(),
+                    0.0,
+                    kernel_quantizer.bits as f32,
+                    true,
+                    false,
+                    "ROUND",
+                );
+                let mm = format!("dense{i}_matmul");
+                b.node("MatMul", &[&cur, &wq_name], &[&mm], &[]);
+                cur = mm;
+                if let Some(bq) = bias_quantizer {
+                    let b_name = format!("dense{i}_bias");
+                    let bq_name = format!("dense{i}_bias_q");
+                    b.initializer(&b_name, Tensor::new(vec![*units], rng.he_weights(*units, cur_dim)));
+                    b.quant(&b_name, &bq_name, bq.scale(), 0.0, bq.bits as f32, true, false, "ROUND");
+                    let add = format!("dense{i}_biasadd");
+                    b.node("Add", &[&cur, &bq_name], &[&add], &[]);
+                    cur = add;
+                }
+                cur_dim = *units;
+            }
+            KerasLayer::QActivationRelu { bits } => {
+                // "A QActivation layer is transformed into a standard
+                // activation layer followed by a Quant node."
+                let relu = format!("act{i}_relu");
+                b.node("Relu", &[&cur], &[&relu], &[]);
+                let q = format!("act{i}_q");
+                b.quant(&relu, &q, 1.0 / 8.0, 0.0, *bits as f32, false, false, "ROUND");
+                cur = q;
+            }
+            KerasLayer::Relu => {
+                let relu = format!("act{i}_relu");
+                b.node("Relu", &[&cur], &[&relu], &[]);
+                cur = relu;
+            }
+            KerasLayer::Softmax => {
+                let sm = format!("act{i}_softmax");
+                b.node("Softmax", &[&cur], &[&sm], &[]);
+                cur = sm;
+            }
+        }
+    }
+    if cur_dim == 0 {
+        bail!("empty model");
+    }
+    b.node("Identity", &[&cur], &["y"], &[]);
+    b.output("y", vec![1, cur_dim]);
+    let mut g = b.finish()?;
+    g.doc = format!("converted from keras-like config '{}' (QKeras-style ingestion)", model.name);
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::execute_simple;
+    use crate::transforms::cleanup;
+
+    #[test]
+    fn quantized_bits_scale() {
+        // quantized_bits(6, 0): scale 2^(0-6+1) = 1/32
+        assert_eq!(QuantizedBits { bits: 6, integer: 0 }.scale(), 1.0 / 32.0);
+        assert_eq!(QuantizedBits { bits: 8, integer: 7 }.scale(), 1.0);
+    }
+
+    #[test]
+    fn fig4_structure() {
+        // Fig. 4 right side: MatMul with Quant'd kernel, Add with Quant'd
+        // bias, Relu followed by Quant
+        let g = keras_to_qonnx(&KerasModel::fig4_example(), 1).unwrap();
+        let h = g.op_histogram();
+        assert_eq!(h["Quant"], 3); // kernel, bias, activation
+        assert_eq!(h["MatMul"], 1);
+        assert_eq!(h["Add"], 1);
+        assert_eq!(h["Relu"], 1);
+        // ordering: Relu immediately feeds the activation Quant
+        let relu_out = &g.nodes.iter().find(|n| n.op_type == "Relu").unwrap().outputs[0];
+        let cons = g.consumers(relu_out);
+        assert_eq!(g.nodes[cons[0]].op_type, "Quant");
+    }
+
+    #[test]
+    fn converted_model_executes() {
+        let mut g = keras_to_qonnx(&KerasModel::fig4_example(), 2).unwrap();
+        cleanup(&mut g).unwrap();
+        let x = Tensor::new(vec![1, 16], (0..16).map(|v| v as f32 * 0.1 - 0.8).collect());
+        let y = execute_simple(&g, &x).unwrap();
+        assert_eq!(y.shape(), &[1, 64]);
+        // quantized relu output: non-negative, on the 1/8 grid
+        for &v in y.as_f32().unwrap() {
+            assert!(v >= 0.0);
+            assert!((v * 8.0).fract().abs() < 1e-5);
+        }
+    }
+}

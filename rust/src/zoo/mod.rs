@@ -1,0 +1,101 @@
+//! The QONNX model zoo (paper §VI-E, Table III) plus synthetic datasets
+//! and deterministic model construction.
+
+mod cnv;
+mod keraslike;
+mod mobilenet;
+pub mod rng;
+pub mod synth_data;
+mod tfc;
+
+pub use cnv::cnv;
+pub use keraslike::{keras_to_qonnx, KerasLayer, KerasModel, QuantizedBits};
+pub use mobilenet::mobilenet;
+pub use synth_data::{synth_cifar, synth_digits, synth_digits_noisy, Dataset};
+pub use tfc::{tfc, tfc_batch, DenseParams, TfcParams};
+
+use crate::ir::ModelGraph;
+use anyhow::Result;
+
+/// All seven Table III zoo entries, by name.
+pub const ZOO_NAMES: &[&str] = &[
+    "MobileNet-w4a4",
+    "CNV-w1a1",
+    "CNV-w1a2",
+    "CNV-w2a2",
+    "TFC-w1a1",
+    "TFC-w1a2",
+    "TFC-w2a2",
+];
+
+/// Paper-reported accuracy per zoo model (Table III), for EXPERIMENTS.md
+/// side-by-side reporting.
+pub fn paper_accuracy(name: &str) -> Option<f64> {
+    Some(match name {
+        "MobileNet-w4a4" => 71.14,
+        "CNV-w1a1" => 84.22,
+        "CNV-w1a2" => 87.80,
+        "CNV-w2a2" => 89.03,
+        "TFC-w1a1" => 93.17,
+        "TFC-w1a2" => 94.79,
+        "TFC-w2a2" => 96.60,
+        _ => return None,
+    })
+}
+
+/// Dataset tier of a zoo model (Fig. 5's three bands).
+pub fn dataset_of(name: &str) -> &'static str {
+    if name.starts_with("MobileNet") {
+        "ImageNet"
+    } else if name.starts_with("CNV") {
+        "CIFAR-10"
+    } else {
+        "MNIST"
+    }
+}
+
+/// Build a zoo model by Table III name. `mobilenet_resolution` lets
+/// benches trade fidelity for speed (224 = paper).
+pub fn build(name: &str, seed: u64, mobilenet_resolution: usize) -> Result<ModelGraph> {
+    let parse = |s: &str| -> (u32, u32) {
+        let wa = s.rsplit('-').next().unwrap(); // "w1a2"
+        let a_pos = wa.find('a').unwrap();
+        (wa[1..a_pos].parse().unwrap(), wa[a_pos + 1..].parse().unwrap())
+    };
+    match name {
+        n if n.starts_with("TFC") => {
+            let (w, a) = parse(n);
+            tfc(&TfcParams::random(w, a, seed))
+        }
+        n if n.starts_with("CNV") => {
+            let (w, a) = parse(n);
+            cnv(w, a, seed, false)
+        }
+        n if n.starts_with("MobileNet") => {
+            let (w, a) = parse(n);
+            mobilenet(w, a, mobilenet_resolution, seed)
+        }
+        other => anyhow::bail!("unknown zoo model '{other}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_every_zoo_entry() {
+        for name in ZOO_NAMES {
+            let g = build(name, 1, 32).unwrap();
+            g.validate().unwrap();
+            assert!(paper_accuracy(name).is_some());
+        }
+    }
+
+    #[test]
+    fn dataset_tiers() {
+        assert_eq!(dataset_of("TFC-w1a1"), "MNIST");
+        assert_eq!(dataset_of("CNV-w2a2"), "CIFAR-10");
+        assert_eq!(dataset_of("MobileNet-w4a4"), "ImageNet");
+    }
+}

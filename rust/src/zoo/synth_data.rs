@@ -1,0 +1,220 @@
+//! Synthetic datasets (DESIGN.md §3 substitution for MNIST / CIFAR-10).
+//!
+//! * `synth_digits` — 28×28 grayscale "MNIST-like": one of 10 glyph
+//!   bitmaps rendered at a random offset/scale with additive noise.
+//! * `synth_cifar` — 3×32×32 "CIFAR-like": class = (dominant color hue ×
+//!   stripe orientation) combinations, with noise. Harder than digits.
+//!
+//! Both generate deterministic labelled datasets from a seed; what the
+//! Fig. 5 / Table III reproduction needs is *one fixed task* on which
+//! accuracy responds to weight/activation precision the way the paper's
+//! does.
+
+use super::rng::Rng;
+
+/// 7×5 digit glyph font (rows of 5 bits, 0..9).
+const GLYPHS: [[u8; 7]; 10] = [
+    [0b01110, 0b10001, 0b10011, 0b10101, 0b11001, 0b10001, 0b01110], // 0
+    [0b00100, 0b01100, 0b00100, 0b00100, 0b00100, 0b00100, 0b01110], // 1
+    [0b01110, 0b10001, 0b00001, 0b00010, 0b00100, 0b01000, 0b11111], // 2
+    [0b11111, 0b00010, 0b00100, 0b00010, 0b00001, 0b10001, 0b01110], // 3
+    [0b00010, 0b00110, 0b01010, 0b10010, 0b11111, 0b00010, 0b00010], // 4
+    [0b11111, 0b10000, 0b11110, 0b00001, 0b00001, 0b10001, 0b01110], // 5
+    [0b00110, 0b01000, 0b10000, 0b11110, 0b10001, 0b10001, 0b01110], // 6
+    [0b11111, 0b00001, 0b00010, 0b00100, 0b01000, 0b01000, 0b01000], // 7
+    [0b01110, 0b10001, 0b10001, 0b01110, 0b10001, 0b10001, 0b01110], // 8
+    [0b01110, 0b10001, 0b10001, 0b01111, 0b00001, 0b00010, 0b01100], // 9
+];
+
+/// A labelled dataset of flattened images in [0, 1].
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// `[n, dim]` row-major
+    pub images: Vec<f32>,
+    pub labels: Vec<usize>,
+    pub dim: usize,
+    pub classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn image(&self, i: usize) -> &[f32] {
+        &self.images[i * self.dim..(i + 1) * self.dim]
+    }
+}
+
+/// Render one 28×28 digit: glyph scaled 3×, random offset, noise.
+fn render_digit(rng: &mut Rng, class: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), 28 * 28);
+    out.fill(0.0);
+    let glyph = &GLYPHS[class];
+    let scale = 3; // 15 wide, 21 tall
+    let gw = 5 * scale;
+    let _gh = 7 * scale; // glyph height (offset range uses fixed bounds)
+    // modest jitter keeps classes learnable by a small MLP
+    let ox = 4 + rng.below(6).min(28 - gw - 4);
+    let oy = 1 + rng.below(5);
+    let intensity = rng.range(0.75, 1.0);
+    for (gy, row) in glyph.iter().enumerate() {
+        for gx in 0..5 {
+            if row & (1 << (4 - gx)) != 0 {
+                for sy in 0..scale {
+                    for sx in 0..scale {
+                        let y = oy + gy * scale + sy;
+                        let x = ox + gx * scale + sx;
+                        out[y * 28 + x] = intensity;
+                    }
+                }
+            }
+        }
+    }
+    // noise + clamp
+    for v in out.iter_mut() {
+        *v = (*v + rng.gaussian() * 0.12).clamp(0.0, 1.0);
+    }
+}
+
+/// Generate `n` MNIST-like samples (dim 784, 10 classes).
+pub fn synth_digits(n: usize, seed: u64) -> Dataset {
+    synth_digits_noisy(n, seed, 0.0)
+}
+
+/// `synth_digits` with extra additive noise of std `sigma` — used by the
+/// Fig. 5 bench to de-saturate accuracy so precision differences show.
+pub fn synth_digits_noisy(n: usize, seed: u64, sigma: f32) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut images = vec![0f32; n * 784];
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let class = i % 10;
+        let img = &mut images[i * 784..(i + 1) * 784];
+        render_digit(&mut rng, class, img);
+        if sigma > 0.0 {
+            for v in img.iter_mut() {
+                *v = (*v + rng.gaussian() * sigma).clamp(0.0, 1.0);
+            }
+        }
+        labels.push(class);
+    }
+    Dataset { images, labels, dim: 784, classes: 10 }
+}
+
+/// Render one 3×32×32 CIFAR-like sample: class = hue (5) × orientation (2).
+fn render_cifar(rng: &mut Rng, class: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), 3 * 32 * 32);
+    let hue = class % 5;
+    let vertical = class >= 5;
+    let period = 4 + rng.below(3);
+    let phase = rng.below(period);
+    // hue -> rgb weights
+    let rgb: [f32; 3] = match hue {
+        0 => [1.0, 0.1, 0.1],
+        1 => [0.1, 1.0, 0.1],
+        2 => [0.1, 0.1, 1.0],
+        3 => [1.0, 1.0, 0.1],
+        _ => [1.0, 0.1, 1.0],
+    };
+    for c in 0..3 {
+        for y in 0..32 {
+            for x in 0..32 {
+                let coord = if vertical { x } else { y };
+                let stripe = ((coord + phase) / period) % 2 == 0;
+                let base = if stripe { rgb[c] } else { rgb[c] * 0.25 };
+                out[(c * 32 + y) * 32 + x] = (base + rng.gaussian() * 0.15).clamp(0.0, 1.0);
+            }
+        }
+    }
+}
+
+/// Generate `n` CIFAR-like samples (dim 3072, 10 classes, NCHW layout).
+pub fn synth_cifar(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let dim = 3 * 32 * 32;
+    let mut images = vec![0f32; n * dim];
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let class = i % 10;
+        render_cifar(&mut rng, class, &mut images[i * dim..(i + 1) * dim]);
+        labels.push(class);
+    }
+    Dataset { images, labels, dim, classes: 10 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digits_shape_and_determinism() {
+        let a = synth_digits(20, 1);
+        let b = synth_digits(20, 1);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.len(), 20);
+        assert_eq!(a.dim, 784);
+        // all classes present
+        for c in 0..10 {
+            assert!(a.labels.contains(&c));
+        }
+    }
+
+    #[test]
+    fn digits_values_in_unit_range() {
+        let d = synth_digits(10, 2);
+        assert!(d.images.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        // images are not blank
+        for i in 0..10 {
+            let s: f32 = d.image(i).iter().sum();
+            assert!(s > 10.0, "image {i} nearly blank: sum {s}");
+        }
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // nearest-centroid classification on clean-ish data must beat chance
+        let train = synth_digits(500, 3);
+        let test = synth_digits(100, 4);
+        let mut centroids = vec![vec![0f32; 784]; 10];
+        let mut counts = [0usize; 10];
+        for i in 0..train.len() {
+            let c = train.labels[i];
+            counts[c] += 1;
+            for (j, &v) in train.image(i).iter().enumerate() {
+                centroids[c][j] += v;
+            }
+        }
+        for c in 0..10 {
+            for v in centroids[c].iter_mut() {
+                *v /= counts[c] as f32;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..test.len() {
+            let img = test.image(i);
+            let mut best = (f32::INFINITY, 0usize);
+            for (c, cent) in centroids.iter().enumerate() {
+                let d: f32 = img.iter().zip(cent).map(|(a, b)| (a - b).powi(2)).sum();
+                if d < best.0 {
+                    best = (d, c);
+                }
+            }
+            if best.1 == test.labels[i] {
+                correct += 1;
+            }
+        }
+        assert!(correct >= 50, "nearest-centroid got {correct}/100");
+    }
+
+    #[test]
+    fn cifar_shape() {
+        let d = synth_cifar(10, 5);
+        assert_eq!(d.dim, 3072);
+        assert!(d.images.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+}

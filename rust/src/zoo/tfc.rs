@@ -1,0 +1,167 @@
+//! TFC: the tiny fully-connected MNIST models of Table III
+//! (three hidden layers of 64 neurons, quantized weights/activations).
+
+use super::rng::Rng;
+use crate::ir::{AttrValue, GraphBuilder, ModelGraph};
+use crate::tensor::Tensor;
+use anyhow::Result;
+
+/// Dense layer parameters destined for a QONNX graph.
+#[derive(Debug, Clone)]
+pub struct DenseParams {
+    /// `[in, out]` row-major weight matrix (float, pre-quantization).
+    pub w: Tensor,
+    /// optional `[out]` float bias added before the activation quantizer
+    pub bias: Option<Tensor>,
+    /// weight quantization scale
+    pub w_scale: f32,
+    /// activation quantization scale (None on the output layer)
+    pub a_scale: Option<f32>,
+}
+
+/// Full TFC parameter set (4 dense layers: 784→64→64→64→10).
+#[derive(Debug, Clone)]
+pub struct TfcParams {
+    pub layers: Vec<DenseParams>,
+    pub weight_bits: u32,
+    pub act_bits: u32,
+}
+
+impl TfcParams {
+    /// Deterministic random initialization (untrained model).
+    pub fn random(weight_bits: u32, act_bits: u32, seed: u64) -> TfcParams {
+        let dims = [784usize, 64, 64, 64, 10];
+        let mut rng = Rng::new(seed);
+        let mut layers = Vec::new();
+        for i in 0..4 {
+            let (fi, fo) = (dims[i], dims[i + 1]);
+            let w = Tensor::new(vec![fi, fo], rng.he_weights(fi * fo, fi));
+            layers.push(DenseParams {
+                w,
+                bias: None,
+                w_scale: 0.25,
+                a_scale: if i < 3 { Some(0.25) } else { None },
+            });
+        }
+        TfcParams { layers, weight_bits, act_bits }
+    }
+}
+
+/// Build the TFC-wXaY QONNX graph.
+///
+/// Topology (Brevitas-export style): 8-bit input `Quant` → 4 × (`Quant`
+/// weights → `MatMul`) with an activation `Quant`/`BipolarQuant` after the
+/// first three. 1-bit weights/activations use `BipolarQuant` (the FINN
+/// w1a1 convention).
+pub fn tfc(params: &TfcParams) -> Result<ModelGraph> {
+    let name = format!("TFC-w{}a{}", params.weight_bits, params.act_bits);
+    let mut b = GraphBuilder::new(&name);
+    b.input("x", vec![1, 784]);
+    b.quant("x", "x_q", 1.0 / 255.0, 0.0, 8.0, false, false, "ROUND");
+    let mut cur = "x_q".to_string();
+    for (i, layer) in params.layers.iter().enumerate() {
+        let w_name = format!("fc{i}_w");
+        let wq_name = format!("fc{i}_wq");
+        b.initializer(&w_name, layer.w.clone());
+        if params.weight_bits == 1 {
+            b.bipolar_quant(&w_name, &wq_name, layer.w_scale);
+        } else {
+            b.quant(&w_name, &wq_name, layer.w_scale, 0.0, params.weight_bits as f32, true, true, "ROUND");
+        }
+        let mm_name = format!("fc{i}_out");
+        b.node("MatMul", &[&cur, &wq_name], &[&mm_name], &[]);
+        cur = mm_name;
+        if let Some(bias) = &layer.bias {
+            let b_name = format!("fc{i}_bias");
+            let add_name = format!("fc{i}_biased");
+            b.initializer(&b_name, bias.clone());
+            b.node("Add", &[&cur, &b_name], &[&add_name], &[]);
+            cur = add_name;
+        }
+        if let Some(a_scale) = layer.a_scale {
+            let aq_name = format!("act{i}_q");
+            if params.act_bits == 1 {
+                b.bipolar_quant(&cur, &aq_name, a_scale);
+            } else {
+                b.quant(&cur, &aq_name, a_scale, 0.0, params.act_bits as f32, true, false, "ROUND");
+            }
+            cur = aq_name;
+        }
+    }
+    // stable output name
+    b.node("Identity", &[&cur], &["logits"], &[]);
+    b.output("logits", vec![1, 10]);
+    let mut g = b.finish()?;
+    g.doc = format!(
+        "TFC {}-bit weight / {}-bit activation MLP (784-64-64-64-10), QONNX model zoo style",
+        params.weight_bits, params.act_bits
+    );
+    // batch-friendly: the builder fixed batch 1; callers reshape
+    let _ = AttrValue::Int(0);
+    Ok(g)
+}
+
+/// Build TFC with a flexible batch dimension.
+pub fn tfc_batch(params: &TfcParams, batch: usize) -> Result<ModelGraph> {
+    let mut g = tfc(params)?;
+    g.inputs[0].shape = Some(vec![batch, 784]);
+    g.outputs[0].shape = Some(vec![batch, 10]);
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::execute_simple;
+    use crate::metrics::analyze;
+    use crate::transforms::cleanup;
+
+    #[test]
+    fn builds_all_table_iii_variants() {
+        for (w, a) in [(1u32, 1u32), (1, 2), (2, 2)] {
+            let g = tfc(&TfcParams::random(w, a, 1)).unwrap();
+            g.validate().unwrap();
+            let hist = g.op_histogram();
+            assert_eq!(hist["MatMul"], 4, "TFC-w{w}a{a}");
+            if w == 1 {
+                assert!(hist["BipolarQuant"] >= 4);
+            } else {
+                assert!(hist["Quant"] >= 5); // input + 4 weights (+ acts)
+            }
+        }
+    }
+
+    #[test]
+    fn table_iii_fc_metrics() {
+        // Table III: TFC weights = MACs = 59008
+        let mut g = tfc(&TfcParams::random(2, 2, 1)).unwrap();
+        cleanup(&mut g).unwrap();
+        let r = analyze(&g).unwrap();
+        assert_eq!(r.macs(), 59_008);
+        assert_eq!(r.weights(), 59_008);
+        assert_eq!(r.total_weight_bits(), 118_016); // w2: Table III last col
+        let g1 = {
+            let mut g = tfc(&TfcParams::random(1, 1, 1)).unwrap();
+            cleanup(&mut g).unwrap();
+            g
+        };
+        assert_eq!(analyze(&g1).unwrap().total_weight_bits(), 59_008);
+    }
+
+    #[test]
+    fn executes_end_to_end() {
+        let g = tfc(&TfcParams::random(2, 2, 7)).unwrap();
+        let x = Tensor::new(vec![1, 784], (0..784).map(|i| (i % 255) as f32 / 255.0).collect());
+        let y = execute_simple(&g, &x).unwrap();
+        assert_eq!(y.shape(), &[1, 10]);
+        assert!(y.as_f32().unwrap().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn batch_variant() {
+        let g = tfc_batch(&TfcParams::random(1, 2, 7), 8).unwrap();
+        let x = Tensor::zeros(vec![8, 784]);
+        let y = execute_simple(&g, &x).unwrap();
+        assert_eq!(y.shape(), &[8, 10]);
+    }
+}

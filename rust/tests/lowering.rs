@@ -1,0 +1,173 @@
+//! Integration tests: format lowering equivalences across whole zoo
+//! models — the executable version of the paper's §IV/§VI claims.
+
+use qonnx::exec::{self, ExecOptions};
+use qonnx::tensor::Tensor;
+use qonnx::testutil::{assert_close, for_all_seeds, random_tensor};
+use qonnx::transforms;
+use qonnx::zoo::{cnv, tfc, TfcParams};
+use std::collections::BTreeMap;
+
+fn run(g: &qonnx::ir::ModelGraph, x: &Tensor) -> Tensor {
+    exec::execute_simple(g, x).unwrap()
+}
+
+fn run_standard_only(g: &qonnx::ir::ModelGraph, x: &Tensor) -> Tensor {
+    let mut m = BTreeMap::new();
+    m.insert(g.inputs[0].name.clone(), x.clone());
+    let opts = ExecOptions { standard_onnx_only: true, ..Default::default() };
+    exec::execute_with(g, &m, &opts)
+        .unwrap()
+        .outputs
+        .into_values()
+        .next()
+        .unwrap()
+}
+
+/// TFC-w2a2 and -w1a2* lower to QCDQ and run bit-exact on a backend with
+/// no QONNX support (§IV). (*w1 weights are BipolarQuant → not QCDQ-able,
+/// so only multi-bit variants lower.)
+#[test]
+fn tfc_qcdq_standard_backend_equivalence() {
+    for (w, a) in [(2u32, 2u32), (4, 4), (2, 4)] {
+        let g = tfc(&TfcParams::random(w, a, 7)).unwrap();
+        let mut qcdq = g.clone();
+        transforms::lower_to_qcdq(&mut qcdq).unwrap();
+        for_all_seeds(5, |rng| {
+            let x = random_tensor(rng, vec![1, 784], 0.0, 1.0);
+            let y0 = run(&g, &x);
+            let y1 = run_standard_only(&qcdq, &x);
+            assert_eq!(y0, y1, "w{w}a{a}");
+        });
+    }
+}
+
+/// QCDQ raising is the exact inverse of lowering on TFC.
+#[test]
+fn tfc_qcdq_roundtrip_preserves_semantics() {
+    let g = tfc(&TfcParams::random(3, 3, 9)).unwrap();
+    let mut rt = g.clone();
+    transforms::lower_to_qcdq(&mut rt).unwrap();
+    transforms::raise_qcdq_to_qonnx(&mut rt).unwrap();
+    assert!(!rt.op_histogram().contains_key("QuantizeLinear"));
+    for_all_seeds(5, |rng| {
+        let x = random_tensor(rng, vec![1, 784], 0.0, 1.0);
+        assert_eq!(run(&g, &x), run(&rt, &x));
+    });
+}
+
+/// FINN conversion (weights folded + MultiThreshold) is bit-exact on every
+/// TFC variant including the bipolar one.
+#[test]
+fn tfc_finn_conversion_equivalence() {
+    for (w, a) in [(1u32, 1u32), (1, 2), (2, 2)] {
+        let g = tfc(&TfcParams::random(w, a, 11)).unwrap();
+        let mut finn = g.clone();
+        transforms::cleanup(&mut finn).unwrap();
+        transforms::convert_to_finn(&mut finn).unwrap();
+        let h = finn.op_histogram();
+        assert!(h.contains_key("MultiThreshold"), "w{w}a{a}");
+        assert!(!h.contains_key("Quant") && !h.contains_key("BipolarQuant"), "w{w}a{a}");
+        for_all_seeds(3, |rng| {
+            let x = random_tensor(rng, vec![1, 784], 0.0, 1.0);
+            assert_eq!(run(&g, &x), run(&finn, &x), "w{w}a{a}");
+        });
+    }
+}
+
+/// FINN conversion on the full CNV conv net.
+#[test]
+fn cnv_finn_conversion_equivalence() {
+    let mut g = cnv(2, 2, 13, false).unwrap();
+    transforms::cleanup(&mut g).unwrap();
+    let mut finn = g.clone();
+    transforms::convert_to_finn(&mut finn).unwrap();
+    let mut rng = qonnx::zoo::rng::Rng::new(99);
+    let x = random_tensor(&mut rng, vec![1, 3, 32, 32], 0.0, 1.0);
+    assert_close(&run(&g, &x), &run(&finn, &x), 1e-4);
+}
+
+/// hls4ml ingestion on TFC: integers + propagated scales, numerically close.
+#[test]
+fn tfc_hls4ml_equivalence() {
+    let g = tfc(&TfcParams::random(4, 4, 17)).unwrap();
+    let mut h = g.clone();
+    transforms::cleanup(&mut h).unwrap();
+    transforms::hls4ml_ingest(&mut h).unwrap();
+    // constant-path Quants are gone; data-flow (activation) Quants remain
+    // explicit, exactly as hls4ml keeps them (paper §VI-C)
+    for n in h.nodes.iter().filter(|n| n.op_type == "Quant") {
+        assert!(
+            !h.initializers.contains_key(&n.inputs[0]),
+            "weight Quant '{}' survived ingestion",
+            n.name
+        );
+    }
+    for_all_seeds(3, |rng| {
+        let x = random_tensor(rng, vec![1, 784], 0.0, 1.0);
+        assert_close(&run(&g, &x), &run(&h, &x), 1e-3);
+    });
+}
+
+/// Channels-last conversion on CNV preserves outputs exactly (Fig. 3).
+#[test]
+fn cnv_channels_last_equivalence() {
+    let mut g = cnv(1, 2, 21, false).unwrap();
+    transforms::cleanup(&mut g).unwrap();
+    let mut cl = g.clone();
+    transforms::to_channels_last(&mut cl).unwrap();
+    let mut rng = qonnx::zoo::rng::Rng::new(5);
+    let x = random_tensor(&mut rng, vec![1, 3, 32, 32], 0.0, 1.0);
+    let y0 = run(&g, &x);
+    let mut m = BTreeMap::new();
+    m.insert("x".to_string(), qonnx::tensor::nchw_to_nhwc(&x).unwrap());
+    let y1 = exec::execute(&cl, &m).unwrap().outputs.into_values().next().unwrap();
+    assert_eq!(y0, y1);
+}
+
+/// The full chain: raw export -> cleanup -> channels-last -> FINN, all
+/// equivalent (the complete Fig. 1-3 + §VI-D pipeline on one model).
+#[test]
+fn cnv_full_pipeline_chain() {
+    let raw = cnv(2, 2, 31, true).unwrap();
+    let mut rng = qonnx::zoo::rng::Rng::new(77);
+    let x = random_tensor(&mut rng, vec![1, 3, 32, 32], 0.0, 1.0);
+    let y_raw = run(&raw, &x);
+
+    let mut g = raw.clone();
+    transforms::cleanup(&mut g).unwrap();
+    assert_eq!(y_raw, run(&g, &x));
+
+    let mut finn = g.clone();
+    transforms::convert_to_finn(&mut finn).unwrap();
+    assert_close(&y_raw, &run(&finn, &x), 1e-4);
+
+    let mut cl = finn.clone();
+    transforms::to_channels_last(&mut cl).unwrap();
+    let mut m = BTreeMap::new();
+    m.insert("x".to_string(), qonnx::tensor::nchw_to_nhwc(&x).unwrap());
+    let y_cl = exec::execute(&cl, &m).unwrap().outputs.into_values().next().unwrap();
+    assert_close(&y_raw, &y_cl, 1e-4);
+}
+
+/// Serialization round-trip through disk preserves lowering results.
+#[test]
+fn lowered_graphs_serialize() {
+    let g = tfc(&TfcParams::random(2, 2, 41)).unwrap();
+    for (tag, f) in [
+        ("qcdq", transforms::lower_to_qcdq as fn(&mut qonnx::ir::ModelGraph) -> anyhow::Result<bool>),
+        ("finn", transforms::convert_to_finn),
+        ("hls4ml", transforms::hls4ml_ingest),
+    ] {
+        let mut lowered = g.clone();
+        transforms::cleanup(&mut lowered).unwrap();
+        f(&mut lowered).unwrap();
+        let path = std::env::temp_dir().join(format!("qonnx_lowering_{tag}.qonnx.json"));
+        qonnx::ir::json::save_model(&lowered, path.to_str().unwrap()).unwrap();
+        let back = qonnx::ir::json::load_model(path.to_str().unwrap()).unwrap();
+        assert_eq!(lowered, back, "{tag}");
+        let mut rng = qonnx::zoo::rng::Rng::new(1);
+        let x = random_tensor(&mut rng, vec![1, 784], 0.0, 1.0);
+        assert_eq!(run(&lowered, &x), run(&back, &x), "{tag}");
+    }
+}

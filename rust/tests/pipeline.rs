@@ -1,0 +1,114 @@
+//! End-to-end pipeline integration: QAT training → QONNX export → cleanup
+//! → accuracy through the executor → lowering — the automated version of
+//! examples/e2e_tfc_pipeline.rs (smaller budget so `cargo test` stays
+//! fast), plus PJRT parity when artifacts are present.
+
+use qonnx::coordinator::{Batcher, BatcherConfig, InferenceEngine, PjrtEngine, ReferenceEngine};
+use qonnx::exec;
+use qonnx::ir::json::load_model;
+use qonnx::runtime::{artifacts_dir, PjrtRuntime};
+use qonnx::tensor::Tensor;
+use qonnx::training::{train_mlp, QatConfig};
+use qonnx::transforms;
+use qonnx::zoo::synth_digits;
+use std::collections::BTreeMap;
+
+#[test]
+fn train_export_execute_accuracy() {
+    let train = synth_digits(600, 300);
+    let test = synth_digits(200, 301);
+    let mut cfg = QatConfig::tfc(2, 2);
+    cfg.epochs = 10;
+    let mut model = train_mlp(&train, &cfg).unwrap();
+    let internal = model.accuracy(&test);
+    assert!(internal > 80.0, "internal accuracy {internal}");
+
+    let mut g = model.to_qonnx(test.len()).unwrap();
+    transforms::cleanup(&mut g).unwrap();
+    let mut inputs = BTreeMap::new();
+    inputs.insert("x".to_string(), Tensor::new(vec![test.len(), 784], test.images.clone()));
+    let out = exec::execute(&g, &inputs).unwrap();
+    let logits = out.outputs.values().next().unwrap().as_f32().unwrap().to_vec();
+    let mut correct = 0;
+    for i in 0..test.len() {
+        let row = &logits[i * 10..(i + 1) * 10];
+        let pred = row.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        if pred == test.labels[i] {
+            correct += 1;
+        }
+    }
+    let graph_acc = 100.0 * correct as f32 / test.len() as f32;
+    assert!(
+        (graph_acc - internal).abs() < 8.0,
+        "graph accuracy {graph_acc} vs internal {internal}"
+    );
+}
+
+/// Python-exported QONNX JSON (shared weights with the PJRT artifact)
+/// executes identically in the Rust reference executor and through PJRT —
+/// the cross-language, cross-engine parity check.
+#[test]
+fn pjrt_vs_reference_executor_parity() {
+    let stem = artifacts_dir().join("tfc_w2a2");
+    if !stem.with_extension("hlo.txt").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let rt = PjrtRuntime::cpu().unwrap();
+    let (compiled, meta) = rt.load_artifact(&stem).unwrap();
+    let mut py_graph = load_model(artifacts_dir().join("tfc_w2a2.qonnx.json").to_str().unwrap()).unwrap();
+    transforms::cleanup(&mut py_graph).unwrap();
+    let mut engine = ReferenceEngine::new(py_graph).unwrap();
+    let x = Tensor::new(vec![8, 784], meta.probe_input.clone());
+    let y_ref = engine.infer_batch(&x).unwrap();
+    let y_pjrt = compiled.execute(&x).unwrap();
+    for (a, b) in y_ref.as_f32().unwrap().iter().zip(y_pjrt.as_f32().unwrap()) {
+        assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+    }
+}
+
+/// All three exported artifact variants pass their build-time probes.
+#[test]
+fn all_artifacts_self_check() {
+    let dir = artifacts_dir();
+    if !dir.join("tfc_w1a1.hlo.txt").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let rt = PjrtRuntime::cpu().unwrap();
+    for tag in ["tfc_w1a1", "tfc_w1a2", "tfc_w2a2"] {
+        let (model, meta) = rt.load_artifact(&dir.join(tag)).unwrap();
+        let err = model.self_check(&meta).unwrap();
+        assert!(err < 1e-3, "{tag}: probe err {err}");
+    }
+}
+
+/// Serving through the batcher returns the same answers as direct PJRT
+/// execution, under concurrency.
+#[test]
+fn batcher_pjrt_consistency() {
+    let stem = artifacts_dir().join("tfc_w2a2");
+    if !stem.with_extension("hlo.txt").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let stem2 = stem.clone();
+    let batcher = Batcher::start(
+        move || {
+            let rt = PjrtRuntime::cpu()?;
+            Ok(Box::new(PjrtEngine::load(&rt, &stem2)?) as Box<dyn InferenceEngine>)
+        },
+        BatcherConfig::default(),
+    )
+    .unwrap();
+    let rt = PjrtRuntime::cpu().unwrap();
+    let (compiled, _) = rt.load_artifact(&stem).unwrap();
+    let input: Vec<f32> = (0..784).map(|i| (i % 9) as f32 / 9.0).collect();
+    let served = batcher.infer(input.clone()).unwrap();
+    let mut batch = vec![0f32; 8 * 784];
+    batch[..784].copy_from_slice(&input);
+    let direct = compiled.execute(&Tensor::new(vec![8, 784], batch)).unwrap();
+    for (a, b) in served.iter().zip(&direct.as_f32().unwrap()[..10]) {
+        assert!((a - b).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,180 @@
+//! Property-based invariants of the quantization operators and passes
+//! (lightweight proptest substitute: seeded random sweeps with
+//! reproduction seeds on failure).
+
+use qonnx::ir::Node;
+use qonnx::ops::quant::{quant_bounds, quant_op, round_half_even, RoundingMode};
+use qonnx::tensor::Tensor;
+use qonnx::testutil::{for_all_seeds, random_tensor};
+
+fn quant(x: &Tensor, s: f32, z: f32, bw: f32, signed: bool, narrow: bool, mode: &str) -> Tensor {
+    let n = Node::new("Quant", &["x", "s", "z", "b"], &["y"])
+        .with_attr("signed", signed)
+        .with_attr("narrow", narrow)
+        .with_attr("rounding_mode", mode);
+    quant_op(&n, &[x, &Tensor::scalar(s), &Tensor::scalar(z), &Tensor::scalar(bw)]).unwrap().remove(0)
+}
+
+/// quantize(quantize(x)) == quantize(x): idempotence.
+#[test]
+fn prop_quant_idempotent() {
+    for_all_seeds(25, |rng| {
+        let bw = [2.0f32, 3.0, 4.0, 6.0, 8.0][rng.below(5)];
+        let s = [0.05f32, 0.125, 0.5, 1.0, 3.0][rng.below(5)];
+        let signed = rng.below(2) == 0;
+        let narrow = rng.below(2) == 0;
+        let x = random_tensor(rng, vec![3, 17], -20.0, 20.0);
+        let y1 = quant(&x, s, 0.0, bw, signed, narrow, "ROUND");
+        let y2 = quant(&y1, s, 0.0, bw, signed, narrow, "ROUND");
+        assert_eq!(y1, y2, "bw={bw} s={s} signed={signed} narrow={narrow}");
+    });
+}
+
+/// Quantized outputs land on the scale grid within the Eq. 2-3 bounds.
+#[test]
+fn prop_quant_output_on_grid_within_bounds() {
+    for_all_seeds(25, |rng| {
+        let bw = 2.0 + rng.below(7) as f32;
+        let s = 0.05 + rng.uniform();
+        let z = rng.below(3) as f32;
+        let signed = rng.below(2) == 0;
+        let x = random_tensor(rng, vec![64], -50.0, 50.0);
+        let y = quant(&x, s, z, bw, signed, false, "ROUND");
+        let (lo, hi) = quant_bounds(signed, false, f64::from(bw));
+        for &v in y.as_f32().unwrap() {
+            let q = f64::from(v) / f64::from(s) + f64::from(z);
+            assert!(q.round() - q < 1e-3, "off grid: q={q}");
+            assert!(q >= lo - 1e-3 && q <= hi + 1e-3, "out of bounds: q={q} in [{lo},{hi}]");
+        }
+    });
+}
+
+/// Quantization is monotone: x1 <= x2 implies Q(x1) <= Q(x2).
+#[test]
+fn prop_quant_monotone() {
+    for_all_seeds(25, |rng| {
+        let bw = 2.0 + rng.below(7) as f32;
+        let s = 0.1 + rng.uniform();
+        let mut vals: Vec<f32> = (0..32).map(|_| rng.range(-10.0, 10.0)).collect();
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let x = Tensor::new(vec![32], vals);
+        let y = quant(&x, s, 0.0, bw, true, false, "ROUND");
+        let out = y.as_f32().unwrap();
+        for w in out.windows(2) {
+            assert!(w[0] <= w[1], "not monotone: {:?}", out);
+        }
+    });
+}
+
+/// Quantization error is bounded by s/2 inside the clip range.
+#[test]
+fn prop_quant_error_bounded() {
+    for_all_seeds(25, |rng| {
+        let s = 0.1 + rng.uniform() * 0.5;
+        let x = random_tensor(rng, vec![64], -3.0, 3.0);
+        let y = quant(&x, s, 0.0, 8.0, true, false, "ROUND");
+        for (a, b) in x.as_f32().unwrap().iter().zip(y.as_f32().unwrap()) {
+            assert!((a - b).abs() <= s / 2.0 + 1e-5, "err {} > s/2 {}", (a - b).abs(), s / 2.0);
+        }
+    });
+}
+
+/// All four rounding modes agree off tie points and differ as documented
+/// on exact .5 points.
+#[test]
+fn prop_rounding_mode_relations() {
+    for_all_seeds(25, |rng| {
+        let v = f64::from(rng.range(-100.0, 100.0));
+        let r = round_half_even(v);
+        assert!(RoundingMode::Floor.apply(v) <= r + 1e-9);
+        assert!(RoundingMode::Ceil.apply(v) >= r - 1e-9);
+        assert!(RoundingMode::Ceil.apply(v) - RoundingMode::Floor.apply(v) <= 1.0);
+        assert!(RoundingMode::RoundToZero.apply(v).abs() <= v.abs());
+    });
+}
+
+/// Narrow range loses exactly one level on the appropriate side.
+#[test]
+fn prop_narrow_range_one_level() {
+    for bw in 2..=8 {
+        let bw = f64::from(bw);
+        let (lo, hi) = quant_bounds(true, false, bw);
+        let (nlo, nhi) = quant_bounds(true, true, bw);
+        assert_eq!(nlo, lo + 1.0);
+        assert_eq!(nhi, hi);
+        let (ulo, uhi) = quant_bounds(false, false, bw);
+        let (unlo, unhi) = quant_bounds(false, true, bw);
+        assert_eq!(unlo, ulo);
+        assert_eq!(unhi, uhi - 1.0);
+    }
+}
+
+/// Cleanup never changes observable behavior on random DAGs of supported
+/// ops (a mini graph-fuzzer).
+#[test]
+fn prop_cleanup_preserves_random_graphs() {
+    use qonnx::ir::GraphBuilder;
+    for_all_seeds(15, |rng| {
+        let mut b = GraphBuilder::new("fuzz");
+        b.input("x", vec![2, 8]);
+        let mut cur = "x".to_string();
+        let depth = 2 + rng.below(4);
+        for i in 0..depth {
+            let next = format!("t{i}");
+            match rng.below(5) {
+                0 => {
+                    b.node("Relu", &[&cur], &[&next], &[]);
+                }
+                1 => {
+                    let c = format!("c{i}");
+                    b.scalar(&c, rng.range(0.5, 2.0));
+                    b.node("Mul", &[&cur, &c], &[&next], &[]);
+                }
+                2 => {
+                    b.quant(&cur, &next, 0.25, 0.0, 4.0, true, false, "ROUND");
+                }
+                3 => {
+                    b.node("Identity", &[&cur], &[&next], &[]);
+                }
+                _ => {
+                    let c = format!("c{i}");
+                    b.scalar(&c, rng.range(-1.0, 1.0));
+                    b.node("Add", &[&cur, &c], &[&next], &[]);
+                }
+            }
+            cur = next;
+        }
+        b.node("Identity", &[&cur], &["y"], &[]);
+        b.output("y", vec![2, 8]);
+        let g0 = b.finish().unwrap();
+        let mut g1 = g0.clone();
+        qonnx::transforms::cleanup(&mut g1).unwrap();
+        let x = random_tensor(rng, vec![2, 8], -4.0, 4.0);
+        assert_eq!(
+            qonnx::exec::execute_simple(&g0, &x).unwrap(),
+            qonnx::exec::execute_simple(&g1, &x).unwrap()
+        );
+    });
+}
+
+/// MultiThreshold conversion equals direct Quant on integer-grid inputs
+/// for random parameters (the FINN-equivalence property).
+#[test]
+fn prop_multithreshold_equals_quant_on_grid() {
+    use qonnx::transforms::quant_to_thresholds;
+    for_all_seeds(25, |rng| {
+        let bw = 2.0 + rng.below(5) as f64;
+        let signed = rng.below(2) == 0;
+        let s = [0.25f64, 0.5, 1.0, 2.0][rng.below(4)];
+        let (th, os, ob) = quant_to_thresholds(&[s], 0.0, bw, signed, false, "ROUND").unwrap();
+        let node = Node::new("MultiThreshold", &["x", "t"], &["y"])
+            .with_attr("out_scale", os)
+            .with_attr("out_bias", ob);
+        // integer-grid inputs (accumulator-like): x = s * k for integer k
+        let ks: Vec<f32> = (0..32).map(|_| (rng.below(41) as f32 - 20.0)).collect();
+        let x = Tensor::new(vec![1, 32], ks.iter().map(|k| k * s as f32).collect());
+        let y_mt = qonnx::ops::multithreshold::multi_threshold(&node, &[&x, &th]).unwrap().remove(0);
+        let y_q = quant(&x, s as f32, 0.0, bw as f32, signed, false, "ROUND");
+        assert_eq!(y_mt, y_q, "bw={bw} signed={signed} s={s}");
+    });
+}
