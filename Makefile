@@ -1,0 +1,25 @@
+# Repo-level tooling. `make check` is the CI gate: build, tests, format,
+# and lints over the rust crate.
+
+.PHONY: check build test fmt clippy bench
+
+check: build test fmt clippy
+
+build:
+	cd rust && cargo build --release
+
+# --release reuses the artifacts from `build` (no second debug
+# compile) and keeps the CNV-sized equivalence tests fast.
+test:
+	cd rust && cargo test -q --release
+
+fmt:
+	cd rust && cargo fmt --check
+
+clippy:
+	cd rust && cargo clippy --all-targets -- -D warnings
+
+# Interpreter-vs-plan throughput comparison (plus the PJRT sections when
+# artifacts are present).
+bench:
+	cd rust && cargo bench --bench bench_exec

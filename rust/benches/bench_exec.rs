@@ -4,12 +4,16 @@
 //! measurement harness of EXPERIMENTS.md.
 
 use qonnx::bench_support::{bench, bench_for, section};
-use qonnx::coordinator::{Batcher, BatcherConfig, InferenceEngine, PjrtEngine, ReferenceEngine};
+use qonnx::coordinator::{
+    Batcher, BatcherConfig, InferenceEngine, PjrtEngine, PlannedEngine, ReferenceEngine,
+};
 use qonnx::ir::Node;
+use qonnx::plan::ExecutionPlan;
 use qonnx::runtime::{artifacts_dir, PjrtRuntime};
 use qonnx::tensor::Tensor;
 use qonnx::zoo::{cnv, tfc_batch, TfcParams};
 use qonnx::{exec, ops, transforms};
+use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -42,12 +46,69 @@ fn main() -> anyhow::Result<()> {
         println!("(PJRT quant artifact missing — run `make artifacts`)");
     }
 
+    section("compiled ExecutionPlan vs name-keyed interpreter (zoo TFC-w2a2)");
+    // the tentpole comparison: one plan compiled up front (weight quants
+    // folded, weights Arc-resident, slot-indexed hot loop) vs the
+    // interpreter re-resolving names/topo/dispatch per request.
+    for batch in [1usize, 8] {
+        let gt = tfc_batch(&TfcParams::random(2, 2, 5), batch)?;
+        let plan = ExecutionPlan::compile(&gt)?;
+        let mut inputs = BTreeMap::new();
+        inputs.insert(
+            gt.inputs[0].name.clone(),
+            Tensor::new(
+                vec![batch, 784],
+                (0..batch * 784).map(|i| (i % 255) as f32 / 255.0).collect(),
+            ),
+        );
+        let st_i = bench(
+            &format!("name-keyed interpreter TFC-w2a2 b{batch}"),
+            3,
+            if batch == 1 { 300 } else { 100 },
+            || exec::interpret(&gt, &inputs).unwrap(),
+        );
+        println!("{}", st_i.report());
+        let st_p = bench(
+            &format!("compiled plan        TFC-w2a2 b{batch}"),
+            3,
+            if batch == 1 { 300 } else { 100 },
+            || plan.run(&inputs).unwrap(),
+        );
+        println!("{}", st_p.report());
+        println!(
+            "  -> plan speedup over interpreter (b{batch}): {:.2}x  ({:.0} vs {:.0} req/s)",
+            st_i.mean.as_secs_f64() / st_p.mean.as_secs_f64(),
+            1.0 / st_p.mean.as_secs_f64(),
+            1.0 / st_i.mean.as_secs_f64(),
+        );
+        if batch == 1 {
+            let st_c = bench("plan compile (one-time) TFC-w2a2", 3, 50, || {
+                ExecutionPlan::compile(&gt).unwrap()
+            });
+            println!("{}", st_c.report());
+            println!(
+                "  plan: {} steps / {} slots ({} nodes folded, {} elided)",
+                plan.step_count(),
+                plan.slot_count(),
+                plan.folded_count(),
+                plan.elided_count()
+            );
+        }
+    }
+
     section("TFC inference latency (batch 8)");
     let g = tfc_batch(&TfcParams::random(2, 2, 5), 8)?;
+    let mut plan_engine = PlannedEngine::new(&g)?;
     let mut ref_engine = ReferenceEngine::new(g)?;
     let xb = Tensor::full(vec![8, 784], 0.5);
     let st = bench("reference executor TFC-w2a2 b8", 3, 30, || ref_engine.infer_batch(&xb).unwrap());
     println!("{}", st.report());
+    let st_pe = bench("planned engine TFC-w2a2 b8", 3, 100, || plan_engine.infer_batch(&xb).unwrap());
+    println!("{}", st_pe.report());
+    println!(
+        "  -> planned engine speedup over reference engine: {:.1}x",
+        st.mean.as_secs_f64() / st_pe.mean.as_secs_f64()
+    );
     let tfc_stem = artifacts_dir().join("tfc_w2a2");
     if tfc_stem.with_extension("hlo.txt").exists() {
         let rt = PjrtRuntime::cpu()?;
@@ -60,17 +121,29 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    section("CNV-w2a2 single-image inference (reference executor)");
+    section("CNV-w2a2 single-image inference (interpreter vs plan)");
     let mut cg = cnv(2, 2, 3, false)?;
     transforms::cleanup(&mut cg)?;
     let xc = Tensor::full(vec![1, 3, 32, 32], 0.4);
-    let st = bench_for("reference executor CNV-w2a2 (59M MACs)", Duration::from_secs(3), || {
-        exec::execute_simple(&cg, &xc).unwrap()
+    let mut cin = BTreeMap::new();
+    cin.insert(cg.inputs[0].name.clone(), xc);
+    let st = bench_for("name-keyed interpreter CNV-w2a2 (59M MACs)", Duration::from_secs(3), || {
+        exec::interpret(&cg, &cin).unwrap()
     });
     println!("{}", st.report());
     println!(
         "  -> effective {:.2} GMAC/s",
         59.46e6 / st.mean.as_secs_f64() / 1e9
+    );
+    let cplan = ExecutionPlan::compile(&cg)?;
+    let st_cp = bench_for("compiled plan CNV-w2a2 (59M MACs)", Duration::from_secs(3), || {
+        cplan.run(&cin).unwrap()
+    });
+    println!("{}", st_cp.report());
+    println!(
+        "  -> effective {:.2} GMAC/s, {:.2}x over interpreter",
+        59.46e6 / st_cp.mean.as_secs_f64() / 1e9,
+        st.mean.as_secs_f64() / st_cp.mean.as_secs_f64()
     );
 
     section("serving throughput vs batching window (PJRT engine, 8 clients)");

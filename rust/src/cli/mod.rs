@@ -24,9 +24,12 @@ Model transformation:
 
 Inspection & execution:
   summary <model>            print the node listing with shapes/datatypes
+  plan <model>               compile and print the execution plan schedule
   stats <model>              MACs / BOPs / weight bits report
   datatypes <in> <out>       run arbitrary-precision datatype inference
-  exec <model> [--seed N]    execute on random input via the reference executor
+  exec <model> [--seed N] [--engine plan|interp]
+                             execute on random input (compiled plan by
+                             default; 'interp' = name-keyed interpreter)
   zoo <name> <out>           materialize a model-zoo entry (e.g. CNV-w2a2)
 
 Paper experiments:
@@ -37,7 +40,10 @@ Paper experiments:
 Training & serving:
   train --w N --a N [--epochs N] [--out <file>]   QAT on synth-digits
   infer <artifact-stem>      load + self-check a PJRT artifact
-  serve [--artifact <stem>] [--requests N] [--clients N]   batching server demo
+  serve [--artifact <stem>] [--zoo <name>] [--requests N] [--clients N]
+                             batching server demo; serves a zoo model via
+                             the compiled ExecutionPlan when no PJRT
+                             artifact is present (or --zoo is given)
 ";
 
 fn parse_flag(args: &[String], key: &str) -> Option<String> {
@@ -61,6 +67,12 @@ pub fn run(args: Vec<String>) -> Result<()> {
         "summary" => {
             let g = load_model(rest.first().context("usage: summary <model>")?)?;
             println!("{}", g.summary());
+            Ok(())
+        }
+        "plan" => {
+            let g = load_model(rest.first().context("usage: plan <model>")?)?;
+            let plan = crate::plan::ExecutionPlan::compile(&g)?;
+            println!("{}", plan.summary());
             Ok(())
         }
         "stats" => stats_cmd(rest),
@@ -154,6 +166,7 @@ fn stats_cmd(rest: &[String]) -> Result<()> {
 fn exec_cmd(rest: &[String]) -> Result<()> {
     let g = load_model(rest.first().context("usage: exec <model>")?)?;
     let seed: u64 = parse_flag(rest, "--seed").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let engine = parse_flag(rest, "--engine").unwrap_or_else(|| "plan".to_string());
     let mut rng = zoo::rng::Rng::new(seed);
     let mut inputs = BTreeMap::new();
     for vi in &g.inputs {
@@ -165,7 +178,11 @@ fn exec_cmd(rest: &[String]) -> Result<()> {
         let data: Vec<f32> = (0..n).map(|_| rng.uniform()).collect();
         inputs.insert(vi.name.clone(), Tensor::new(shape, data));
     }
-    let r = exec::execute(&g, &inputs)?;
+    let r = match engine.as_str() {
+        "plan" => exec::execute(&g, &inputs)?,
+        "interp" | "interpreter" => exec::interpret(&g, &inputs)?,
+        other => bail!("unknown engine '{other}' (expected 'plan' or 'interp')"),
+    };
     for (name, t) in &r.outputs {
         let v = t.as_f32()?;
         let show = &v[..v.len().min(16)];
@@ -311,13 +328,44 @@ fn serve_cmd(rest: &[String]) -> Result<()> {
         .unwrap_or_else(|| runtime::artifacts_dir().join("tfc_w2a2"));
     let requests: usize = parse_flag(rest, "--requests").map(|s| s.parse()).transpose()?.unwrap_or(256);
     let clients: usize = parse_flag(rest, "--clients").map(|s| s.parse()).transpose()?.unwrap_or(8);
-    let batcher = std::sync::Arc::new(coordinator::Batcher::start(
-        move || {
-            let rt = runtime::PjrtRuntime::cpu()?;
-            Ok(Box::new(coordinator::PjrtEngine::load(&rt, &stem)?) as Box<dyn coordinator::InferenceEngine>)
-        },
-        coordinator::BatcherConfig::default(),
-    )?);
+    let zoo_name = parse_flag(rest, "--zoo");
+    let artifact_requested = has_flag(rest, "--artifact");
+    let have_artifact = stem.with_extension("hlo.txt").exists();
+    if artifact_requested && zoo_name.is_some() {
+        bail!("--artifact and --zoo are mutually exclusive (pick one engine)");
+    }
+    if artifact_requested && !have_artifact {
+        bail!("artifact {stem:?} not found (missing {:?})", stem.with_extension("hlo.txt"));
+    }
+
+    let batcher = if zoo_name.is_none() && have_artifact {
+        coordinator::Batcher::start(
+            move || {
+                let rt = runtime::PjrtRuntime::cpu()?;
+                Ok(Box::new(coordinator::PjrtEngine::load(&rt, &stem)?)
+                    as Box<dyn coordinator::InferenceEngine>)
+            },
+            coordinator::BatcherConfig::default(),
+        )?
+    } else {
+        // no compiled artifact (or an explicit zoo request): serve the
+        // model natively through a compiled ExecutionPlan
+        let name = zoo_name.unwrap_or_else(|| "TFC-w2a2".to_string());
+        if !have_artifact {
+            println!("(no PJRT artifact at {stem:?} — serving '{name}' via the compiled ExecutionPlan)");
+        }
+        coordinator::Batcher::start(
+            move || {
+                Ok(Box::new(coordinator::PlannedEngine::from_zoo(&name)?)
+                    as Box<dyn coordinator::InferenceEngine>)
+            },
+            coordinator::BatcherConfig::default(),
+        )?
+    };
+    // row lengths come from the engine's startup handshake, so both
+    // branches serve correctly-sized requests for any model
+    let (in_dim, out_dim) = (batcher.input_dim(), batcher.output_dim());
+    let batcher = std::sync::Arc::new(batcher);
     println!("serving with {clients} clients x {} requests each...", requests / clients);
     let start = std::time::Instant::now();
     let mut handles = Vec::new();
@@ -327,9 +375,9 @@ fn serve_cmd(rest: &[String]) -> Result<()> {
         handles.push(std::thread::spawn(move || -> Result<()> {
             let mut rng = zoo::rng::Rng::new(c as u64 + 1);
             for _ in 0..per_client {
-                let input: Vec<f32> = (0..784).map(|_| rng.uniform()).collect();
+                let input: Vec<f32> = (0..in_dim).map(|_| rng.uniform()).collect();
                 let out = b.infer(input)?;
-                anyhow::ensure!(out.len() == 10);
+                anyhow::ensure!(out.len() == out_dim);
             }
             Ok(())
         }));

@@ -64,6 +64,7 @@ impl ServerStats {
 pub struct Batcher {
     tx: mpsc::Sender<Request>,
     in_dim: usize,
+    out_dim: usize,
     stats: Arc<Stats>,
     worker: Option<std::thread::JoinHandle<()>>,
     shutdown: Arc<AtomicBool>,
@@ -160,10 +161,20 @@ impl Batcher {
                 }
             }
         });
-        let (in_dim, _out_dim) = ready_rx
+        let (in_dim, out_dim) = ready_rx
             .recv()
             .map_err(|_| anyhow::anyhow!("engine factory thread died"))??;
-        Ok(Batcher { tx, in_dim, stats, worker: Some(worker), shutdown })
+        Ok(Batcher { tx, in_dim, out_dim, stats, worker: Some(worker), shutdown })
+    }
+
+    /// Input row length, as reported by the engine at startup.
+    pub fn input_dim(&self) -> usize {
+        self.in_dim
+    }
+
+    /// Output row length, as reported by the engine at startup.
+    pub fn output_dim(&self) -> usize {
+        self.out_dim
     }
 
     /// Submit one input row; returns a receiver for the output row.

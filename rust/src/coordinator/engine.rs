@@ -1,11 +1,13 @@
-//! Inference engines: the PJRT hot path and the reference-executor
-//! verification path behind one trait.
+//! Inference engines behind one trait: the PJRT hot path, the compiled
+//! [`crate::plan::ExecutionPlan`] native path, and the name-keyed
+//! interpreter verification path.
 
 use crate::exec;
 use crate::ir::ModelGraph;
+use crate::plan::{ExecutionPlan, RunConfig};
 use crate::runtime::{ArtifactMeta, CompiledModel, PjrtRuntime};
 use crate::tensor::Tensor;
-use anyhow::{ensure, Result};
+use anyhow::{ensure, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
 
@@ -75,7 +77,90 @@ impl InferenceEngine for PjrtEngine {
     }
 }
 
-/// Reference-executor engine over a QONNX graph (any batch size).
+/// Compiled-plan engine over a QONNX graph (any batch size).
+///
+/// Compiles the graph **once** into an owned [`ExecutionPlan`] — weights
+/// `Arc`-resident, weight-quant subgraphs folded at compile time, slot
+/// arena sized — then serves every request (any batch) against that plan
+/// with zero per-call graph work. This is the native serving path when no
+/// PJRT artifact is present.
+pub struct PlannedEngine {
+    plan: ExecutionPlan<'static>,
+    model_name: String,
+    input_name: String,
+    output_name: String,
+    in_dim: usize,
+    out_dim: usize,
+}
+
+impl PlannedEngine {
+    /// Compile a `[n, in_dim] -> [n, out_dim]` graph into a resident plan.
+    pub fn new(graph: &ModelGraph) -> Result<PlannedEngine> {
+        ensure!(graph.inputs.len() == 1 && graph.outputs.len() == 1, "single-input/output graphs only");
+        let in_shape = graph.inputs[0].shape.clone().unwrap_or_default();
+        let out_shape = graph.outputs[0].shape.clone().unwrap_or_default();
+        ensure!(in_shape.len() == 2 && out_shape.len() == 2, "[n, dim] graphs only");
+        let plan = ExecutionPlan::compile(graph)?.into_owned();
+        Ok(PlannedEngine {
+            plan,
+            model_name: graph.name.clone(),
+            input_name: graph.inputs[0].name.clone(),
+            output_name: graph.outputs[0].name.clone(),
+            in_dim: in_shape[1],
+            out_dim: out_shape[1],
+        })
+    }
+
+    /// Build and compile a model-zoo entry by Table III name
+    /// (e.g. `TFC-w2a2`).
+    pub fn from_zoo(name: &str) -> Result<PlannedEngine> {
+        let mut g = crate::zoo::build(name, 1, 32)?;
+        crate::transforms::cleanup(&mut g)?;
+        PlannedEngine::new(&g)
+    }
+
+    /// The compiled schedule (for logging / inspection).
+    pub fn plan_summary(&self) -> String {
+        self.plan.summary()
+    }
+}
+
+impl InferenceEngine for PlannedEngine {
+    fn name(&self) -> String {
+        format!("plan:{}", self.model_name)
+    }
+
+    fn input_dim(&self) -> usize {
+        self.in_dim
+    }
+
+    fn output_dim(&self) -> usize {
+        self.out_dim
+    }
+
+    fn max_batch(&self) -> usize {
+        usize::MAX
+    }
+
+    fn infer_batch(&mut self, batch: &Tensor) -> Result<Tensor> {
+        let shape = batch.shape();
+        ensure!(
+            shape.len() == 2 && shape[1] == self.in_dim,
+            "batch shape {shape:?} incompatible with [n, {}]",
+            self.in_dim
+        );
+        // The plan's kernels are batch-agnostic; skip the declared-shape
+        // check so one plan serves every batch size (no per-batch graph
+        // clones, unlike the reference engine).
+        let cfg = RunConfig { check_input_shapes: false, record_intermediates: false };
+        let mut r = self.plan.run_cfg(|n| (n == self.input_name).then_some(batch), &cfg)?;
+        r.outputs
+            .remove(&self.output_name)
+            .with_context(|| format!("plan did not produce output '{}'", self.output_name))
+    }
+}
+
+/// Reference-interpreter engine over a QONNX graph (any batch size).
 pub struct ReferenceEngine {
     graph: ModelGraph,
     input_name: String,
@@ -133,7 +218,9 @@ impl InferenceEngine for ReferenceEngine {
         });
         let mut inputs = BTreeMap::new();
         inputs.insert(self.input_name.clone(), batch.clone());
-        let r = exec::execute(g, &inputs)?;
+        // explicitly the name-keyed interpreter: this engine is the
+        // verification baseline for PlannedEngine
+        let r = exec::interpret(g, &inputs)?;
         Ok(r.outputs[&self.output_name].clone())
     }
 }
@@ -142,6 +229,32 @@ impl InferenceEngine for ReferenceEngine {
 mod tests {
     use super::*;
     use crate::zoo::{tfc_batch, TfcParams};
+
+    #[test]
+    fn planned_engine_matches_reference_engine() {
+        let g = tfc_batch(&TfcParams::random(2, 2, 5), 1).unwrap();
+        let mut planned = PlannedEngine::new(&g).unwrap();
+        let mut reference = ReferenceEngine::new(g).unwrap();
+        assert_eq!(planned.input_dim(), 784);
+        assert_eq!(planned.output_dim(), 10);
+        for n in [1usize, 3, 8] {
+            let x = Tensor::new(
+                vec![n, 784],
+                (0..n * 784).map(|i| (i % 13) as f32 / 13.0).collect(),
+            );
+            let yp = planned.infer_batch(&x).unwrap();
+            let yr = reference.infer_batch(&x).unwrap();
+            assert_eq!(yp, yr, "batch {n}");
+        }
+    }
+
+    #[test]
+    fn planned_engine_rejects_bad_batch_shape() {
+        let g = tfc_batch(&TfcParams::random(2, 2, 5), 1).unwrap();
+        let mut planned = PlannedEngine::new(&g).unwrap();
+        assert!(planned.infer_batch(&Tensor::zeros(vec![2, 783])).is_err());
+        assert!(planned.infer_batch(&Tensor::zeros(vec![784])).is_err());
+    }
 
     #[test]
     fn reference_engine_any_batch() {

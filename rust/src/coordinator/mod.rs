@@ -2,12 +2,14 @@
 //!
 //! The paper's contribution lives in the IR/compiler (L2/L1), so the
 //! coordinator is a thin-but-real serving loop: a request queue, a dynamic
-//! micro-batcher (size- or deadline-triggered), a worker running either
-//! the PJRT artifact engine (hot path) or the reference executor
-//! (verification path), and latency/throughput accounting.
+//! micro-batcher (size- or deadline-triggered), a worker running one of
+//! three engines — the PJRT artifact engine (hot path), the compiled
+//! [`PlannedEngine`] (native path: serves zoo models when no PJRT
+//! artifact is present), or the interpreter-backed [`ReferenceEngine`]
+//! (verification path) — and latency/throughput accounting.
 
 mod batcher;
 mod engine;
 
 pub use batcher::{Batcher, BatcherConfig, ServerStats};
-pub use engine::{InferenceEngine, PjrtEngine, ReferenceEngine};
+pub use engine::{InferenceEngine, PjrtEngine, PlannedEngine, ReferenceEngine};

@@ -1,17 +1,30 @@
-//! Node-level reference graph executor.
+//! Graph execution: compiled plans (default) and the name-keyed
+//! reference interpreter (verification baseline).
 //!
-//! Like the paper's Python execution utility, this executor exists to
-//! *verify* model semantics, not to be fast (the fast path is the PJRT
-//! runtime). It walks the graph in topological order, materializing every
-//! intermediate tensor.
+//! Like the paper's Python execution utility, execution exists first to
+//! *verify* model semantics; unlike it, the default path here is
+//! production-shaped: [`execute_with`] lowers the graph into a
+//! [`crate::plan::ExecutionPlan`] (names resolved to dense slots, topo
+//! order frozen, kernel dispatch pre-resolved, initializers borrowed
+//! rather than cloned) and runs that. Engines that serve repeated
+//! requests compile the plan once and reuse it
+//! ([`crate::coordinator::PlannedEngine`]).
 //!
-//! [`ExecOptions::standard_onnx_only`] restricts execution to standard-ONNX
-//! operators — simulating an existing 8-bit backend that knows nothing
-//! about QONNX, which is how we demonstrate the paper's QCDQ
-//! backward-compatibility claim (§IV).
+//! The original name-keyed interpreter survives as [`interpret_with`]:
+//! it walks the topo order per call and resolves tensors through a
+//! name-keyed map. It is the independent baseline the plan executor is
+//! equivalence-tested against (`tests/plan_equiv.rs`), and it no longer
+//! clones initializers per request either — the context borrows them.
+//!
+//! [`ExecOptions::standard_onnx_only`] restricts execution to
+//! standard-ONNX operators — simulating an existing 8-bit backend that
+//! knows nothing about QONNX, which is how we demonstrate the paper's
+//! QCDQ backward-compatibility claim (§IV). Both executors honor it with
+//! the same error surface.
 
 use crate::ir::{ModelGraph, DOMAIN_FINN, DOMAIN_QONNX};
 use crate::ops;
+use crate::plan::{ExecutionPlan, PlanOptions, RtVal, RunConfig};
 use crate::tensor::Tensor;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -32,20 +45,55 @@ pub struct ExecResult {
     pub intermediates: BTreeMap<String, Tensor>,
 }
 
-/// Execute `graph` on named inputs.
+/// Execute `graph` on named inputs (compiled-plan path).
 pub fn execute(graph: &ModelGraph, inputs: &BTreeMap<String, Tensor>) -> Result<ExecResult> {
     execute_with(graph, inputs, &ExecOptions::default())
 }
 
 /// Execute with explicit options.
+///
+/// Thin wrapper over the plan subsystem: compiles a *borrowed* plan (no
+/// tensor copies — callers running the same graph repeatedly should
+/// compile an [`ExecutionPlan`] once and call [`ExecutionPlan::run`]
+/// themselves, or use [`crate::coordinator::PlannedEngine`]).
 pub fn execute_with(
     graph: &ModelGraph,
     inputs: &BTreeMap<String, Tensor>,
     opts: &ExecOptions,
 ) -> Result<ExecResult> {
-    let mut ctx: BTreeMap<String, Tensor> = BTreeMap::new();
+    let popts = PlanOptions { standard_onnx_only: opts.standard_onnx_only };
+    let plan = ExecutionPlan::compile_with(graph, &popts)?;
+    let cfg = RunConfig { check_input_shapes: true, record_intermediates: opts.keep_intermediates };
+    let r = plan.run_cfg(|n| inputs.get(n), &cfg)?;
+    let mut intermediates = r.intermediates;
+    if opts.keep_intermediates {
+        // parity with the interpreter's context: initializers consumed
+        // only by compile-time-folded subgraphs (or unused) are not plan
+        // preloads, but callers still expect them by name
+        for (k, t) in &graph.initializers {
+            intermediates.entry(k.clone()).or_insert_with(|| t.clone());
+        }
+    }
+    Ok(ExecResult { outputs: r.outputs, intermediates })
+}
+
+/// Execute via the name-keyed reference interpreter.
+pub fn interpret(graph: &ModelGraph, inputs: &BTreeMap<String, Tensor>) -> Result<ExecResult> {
+    interpret_with(graph, inputs, &ExecOptions::default())
+}
+
+/// The legacy name-keyed interpreter: per-call topo sort, name-keyed
+/// context, string dispatch per node. Kept as the verification baseline
+/// for the compiled plan. Initializers and inputs are *borrowed* into
+/// the context (they used to be cloned per request).
+pub fn interpret_with<'a>(
+    graph: &'a ModelGraph,
+    inputs: &'a BTreeMap<String, Tensor>,
+    opts: &ExecOptions,
+) -> Result<ExecResult> {
+    let mut ctx: BTreeMap<&'a str, RtVal<'a>> = BTreeMap::new();
     for (k, t) in &graph.initializers {
-        ctx.insert(k.clone(), t.clone());
+        ctx.insert(k.as_str(), RtVal::Ref(t));
     }
     for vi in &graph.inputs {
         if graph.initializers.contains_key(&vi.name) {
@@ -64,7 +112,7 @@ pub fn execute_with(
                 );
             }
         }
-        ctx.insert(vi.name.clone(), t.clone());
+        ctx.insert(vi.name.as_str(), RtVal::Ref(t));
     }
 
     let order = graph.topo_order()?;
@@ -83,7 +131,8 @@ pub fn execute_with(
         for name in node.present_inputs() {
             ins.push(
                 ctx.get(name)
-                    .with_context(|| format!("node '{}' input '{name}' not computed", node.name))?,
+                    .with_context(|| format!("node '{}' input '{name}' not computed", node.name))?
+                    .tensor(),
             );
         }
         let outs = ops::execute_node(node, &ins)
@@ -96,30 +145,39 @@ pub fn execute_with(
                 node.outputs.len()
             );
         }
+        drop(ins);
         for (name, t) in node.outputs.iter().zip(outs) {
-            ctx.insert(name.clone(), t);
+            ctx.insert(name.as_str(), RtVal::Owned(t));
         }
     }
 
     let mut outputs = BTreeMap::new();
     for vi in &graph.outputs {
         let t = ctx
-            .get(&vi.name)
+            .get(vi.name.as_str())
             .with_context(|| format!("graph output '{}' was not produced", vi.name))?;
-        outputs.insert(vi.name.clone(), t.clone());
+        outputs.insert(vi.name.clone(), t.tensor().clone());
     }
-    let intermediates = if opts.keep_intermediates { ctx } else { BTreeMap::new() };
+    let intermediates = if opts.keep_intermediates {
+        ctx.into_iter().map(|(k, v)| (k.to_string(), v.into_tensor())).collect()
+    } else {
+        BTreeMap::new()
+    };
     Ok(ExecResult { outputs, intermediates })
 }
 
-/// Convenience: single-input single-output execution.
+/// Convenience: single-input single-output execution. Returns the
+/// graph's *declared* output (by name), independent of map ordering.
 pub fn execute_simple(graph: &ModelGraph, input: &Tensor) -> Result<Tensor> {
     anyhow::ensure!(graph.inputs.len() == 1, "execute_simple wants exactly 1 graph input");
     anyhow::ensure!(graph.outputs.len() == 1, "execute_simple wants exactly 1 graph output");
     let mut m = BTreeMap::new();
     m.insert(graph.inputs[0].name.clone(), input.clone());
-    let r = execute(graph, &m)?;
-    Ok(r.outputs.values().next().unwrap().clone())
+    let mut r = execute(graph, &m)?;
+    let name = &graph.outputs[0].name;
+    r.outputs
+        .remove(name)
+        .with_context(|| format!("graph output '{name}' missing from results"))
 }
 
 #[cfg(test)]
@@ -146,6 +204,16 @@ mod tests {
     }
 
     #[test]
+    fn plan_path_matches_interpreter() {
+        let g = quant_relu_graph();
+        let mut m = BTreeMap::new();
+        m.insert("x".to_string(), Tensor::new(vec![1, 4], vec![-1.0, 0.3, 0.26, 99.0]));
+        let a = execute(&g, &m).unwrap();
+        let b = interpret(&g, &m).unwrap();
+        assert_eq!(a.outputs, b.outputs);
+    }
+
+    #[test]
     fn standard_only_rejects_qonnx_nodes() {
         let g = quant_relu_graph();
         let mut m = BTreeMap::new();
@@ -153,13 +221,18 @@ mod tests {
         let opts = ExecOptions { standard_onnx_only: true, ..Default::default() };
         let err = execute_with(&g, &m, &opts).unwrap_err();
         assert!(err.to_string().contains("not a standard ONNX op"));
+        let err = interpret_with(&g, &m, &opts).unwrap_err();
+        assert!(err.to_string().contains("not a standard ONNX op"));
     }
 
     #[test]
     fn missing_input_reported() {
         let g = quant_relu_graph();
         let m = BTreeMap::new();
-        assert!(execute(&g, &m).is_err());
+        for r in [execute(&g, &m), interpret(&g, &m)] {
+            let err = r.unwrap_err().to_string();
+            assert!(err.contains("missing input tensor"), "{err}");
+        }
     }
 
     #[test]
@@ -167,7 +240,10 @@ mod tests {
         let g = quant_relu_graph();
         let mut m = BTreeMap::new();
         m.insert("x".to_string(), Tensor::zeros(vec![2, 4]));
-        assert!(execute(&g, &m).is_err());
+        for r in [execute(&g, &m), interpret(&g, &m)] {
+            let err = r.unwrap_err().to_string();
+            assert!(err.contains("does not match declared"), "{err}");
+        }
     }
 
     #[test]
@@ -178,5 +254,40 @@ mod tests {
         let opts = ExecOptions { keep_intermediates: true, ..Default::default() };
         let r = execute_with(&g, &m, &opts).unwrap();
         assert!(r.intermediates.contains_key("a"));
+        let r = interpret_with(&g, &m, &opts).unwrap();
+        assert!(r.intermediates.contains_key("a"));
+    }
+
+    #[test]
+    fn intermediates_include_fold_only_initializers() {
+        // `w` is consumed only by a compile-time-folded weight Quant; the
+        // plan path must still expose it by name like the interpreter does.
+        let mut b = GraphBuilder::new("foldw");
+        b.input("x", vec![1, 2]);
+        b.node("Relu", &["x"], &["r"], &[]);
+        b.initializer("w", Tensor::new(vec![2, 2], vec![0.3, -0.6, 0.9, 0.1]));
+        b.quant("w", "wq", 0.25, 0.0, 4.0, true, true, "ROUND");
+        b.node("MatMul", &["r", "wq"], &["y"], &[]);
+        b.output("y", vec![1, 2]);
+        let g = b.finish().unwrap();
+        let mut m = BTreeMap::new();
+        m.insert("x".to_string(), Tensor::new(vec![1, 2], vec![1.0, 2.0]));
+        let opts = ExecOptions { keep_intermediates: true, ..Default::default() };
+        let planned = execute_with(&g, &m, &opts).unwrap();
+        let interp = interpret_with(&g, &m, &opts).unwrap();
+        for key in interp.intermediates.keys() {
+            assert!(planned.intermediates.contains_key(key), "plan path missing '{key}'");
+        }
+    }
+
+    #[test]
+    fn execute_simple_returns_declared_output() {
+        let g = quant_relu_graph();
+        let x = Tensor::new(vec![1, 4], vec![1.0; 4]);
+        let y = execute_simple(&g, &x).unwrap();
+        let mut m = BTreeMap::new();
+        m.insert("x".to_string(), x);
+        let r = execute(&g, &m).unwrap();
+        assert_eq!(&y, &r.outputs[&g.outputs[0].name]);
     }
 }

@@ -7,11 +7,45 @@
 //!
 //! Layer map (see DESIGN.md):
 //! * [`datatypes`], [`tensor`], [`ir`] — the IR substrate.
-//! * [`ops`], [`exec`] — operator semantics + reference executor.
+//! * [`ops`], [`exec`], [`plan`] — operator semantics + executors.
 //! * [`transforms`] — graph passes (cleanup, shape inference, lowering).
 //! * [`metrics`], [`zoo`], [`training`] — model zoo, BOPs/MACs, QAT.
 //! * [`formats`] — the six ONNX-based QNN format descriptors (Table I).
 //! * [`runtime`], [`coordinator`] — PJRT artifact execution + serving.
+//!
+//! # Architecture
+//!
+//! Execution is split into a **compile step** and a **run step**, the way
+//! a serving system wants it, while keeping a naive interpreter around as
+//! the semantic baseline:
+//!
+//! ```text
+//!   ModelGraph ──(transforms)──► ModelGraph
+//!        │
+//!        ├─► exec::interpret*       name-keyed interpreter: per-call topo
+//!        │                          sort, BTreeMap<String, Tensor> context,
+//!        │                          string dispatch. Verification baseline.
+//!        │
+//!        ├─► plan::ExecutionPlan    compiled once: names → dense slots,
+//!        │      │                   frozen schedule, kernel fn-pointers,
+//!        │      │                   constant subgraphs (weight quantizers!)
+//!        │      │                   folded at compile time, initializers
+//!        │      │                   borrowed/Arc — never cloned per call,
+//!        │      │                   last-use pass + SlotArena slot reuse.
+//!        │      └─► plan.run(..)    slot-indexed hot loop.
+//!        │
+//!        └─► runtime (PJRT)         AOT Pallas/HLO artifacts.
+//!
+//!   coordinator::Batcher ──► InferenceEngine
+//!        ├─ PjrtEngine        compiled artifact (fixed batch, pads)
+//!        ├─ PlannedEngine     ExecutionPlan<'static>, any batch size
+//!        └─ ReferenceEngine   interpreter, verification
+//! ```
+//!
+//! `exec::execute*` is a thin wrapper that compiles a borrowed plan per
+//! call; engines compile once and reuse. The two executors are
+//! equivalence-tested against each other across the model zoo and the
+//! format-lowering round-trips (`tests/plan_equiv.rs`).
 
 pub mod bench_support;
 pub mod cli;
@@ -22,6 +56,7 @@ pub mod formats;
 pub mod ir;
 pub mod metrics;
 pub mod ops;
+pub mod plan;
 pub mod runtime;
 pub mod tensor;
 pub mod testutil;

@@ -27,7 +27,7 @@ pub mod shape_ops;
 
 use crate::ir::Node;
 use crate::tensor::Tensor;
-use anyhow::{bail, Result};
+use anyhow::{anyhow, Result};
 
 /// Operator implementation signature.
 pub type OpFn = fn(&Node, &[&Tensor]) -> Result<Vec<Tensor>>;
@@ -86,12 +86,21 @@ pub fn lookup(op_type: &str) -> Option<OpFn> {
     })
 }
 
-/// Execute one node against resolved input tensors.
+/// Resolve a node's kernel function once, with node context on failure.
+///
+/// This is the *resolved-dispatch* entry point: the plan compiler
+/// ([`crate::plan`]) calls it per node at compile time and stores the
+/// returned function pointer in the step table, so the per-request hot
+/// loop never string-matches `op_type`. The name-keyed interpreter calls
+/// it per node per request via [`execute_node`].
+pub fn kernel_for(node: &Node) -> Result<OpFn> {
+    lookup(&node.op_type)
+        .ok_or_else(|| anyhow!("no implementation for op '{}' (node '{}')", node.op_type, node.name))
+}
+
+/// Execute one node against resolved input tensors (string dispatch).
 pub fn execute_node(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
-    match lookup(&node.op_type) {
-        Some(f) => f(node, inputs),
-        None => bail!("no implementation for op '{}' (node '{}')", node.op_type, node.name),
-    }
+    kernel_for(node)?(node, inputs)
 }
 
 #[cfg(test)]
@@ -104,5 +113,12 @@ mod tests {
             assert!(lookup(op).is_some(), "{op} missing");
         }
         assert!(lookup("NotAnOp").is_none());
+    }
+
+    #[test]
+    fn kernel_for_reports_node_context() {
+        let n = crate::ir::Node::new("NotAnOp", &["x"], &["y"]).with_name("bad");
+        let err = kernel_for(&n).unwrap_err().to_string();
+        assert!(err.contains("NotAnOp") && err.contains("bad"), "{err}");
     }
 }

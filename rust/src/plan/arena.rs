@@ -1,0 +1,78 @@
+//! Physical tensor-slot arena.
+//!
+//! The plan compiler runs a register-allocation style linear scan over the
+//! frozen step schedule: every value (graph input, preloaded constant,
+//! node output) is assigned a *physical slot*, and slots whose value has
+//! passed its last use are recycled for later values. The arena is the
+//! compile-time allocator for that scan; at run time the plan materializes
+//! `capacity()` slots once and indexes them directly — no name-keyed map,
+//! and peak live tensors is bounded by the schedule's high-water mark
+//! rather than the total tensor count.
+
+/// Compile-time slot allocator with a free list.
+#[derive(Debug, Default, Clone)]
+pub struct SlotArena {
+    free: Vec<u32>,
+    next: u32,
+}
+
+impl SlotArena {
+    pub fn new() -> SlotArena {
+        SlotArena::default()
+    }
+
+    /// Allocate a slot, preferring a recycled one.
+    pub fn alloc(&mut self) -> u32 {
+        self.free.pop().unwrap_or_else(|| {
+            let s = self.next;
+            self.next += 1;
+            s
+        })
+    }
+
+    /// Return a slot to the free list (its value passed its last use).
+    pub fn release(&mut self, slot: u32) {
+        debug_assert!(slot < self.next, "released slot {slot} was never allocated");
+        self.free.push(slot);
+    }
+
+    /// Total distinct slots ever allocated — the run-time slot-vector size
+    /// and the schedule's high-water mark of live tensors.
+    pub fn capacity(&self) -> usize {
+        self.next as usize
+    }
+
+    /// Currently live (allocated, not released) slots.
+    pub fn live(&self) -> usize {
+        self.next as usize - self.free.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reuses_released_slots() {
+        let mut a = SlotArena::new();
+        let s0 = a.alloc();
+        let s1 = a.alloc();
+        assert_ne!(s0, s1);
+        a.release(s0);
+        assert_eq!(a.alloc(), s0, "freed slot is recycled");
+        assert_eq!(a.capacity(), 2);
+        assert_eq!(a.live(), 2);
+    }
+
+    #[test]
+    fn capacity_is_high_water_mark() {
+        let mut a = SlotArena::new();
+        // chain pattern: alloc, release, alloc, release ... stays at 1 slot
+        let mut s = a.alloc();
+        for _ in 0..10 {
+            a.release(s);
+            s = a.alloc();
+        }
+        assert_eq!(a.capacity(), 1);
+    }
+}

@@ -1,0 +1,355 @@
+//! Plan compilation: topo-freeze, constant folding, identity elision,
+//! last-use analysis, and linear-scan slot assignment.
+//!
+//! Compilation performs **no tensor copies**: initializers are borrowed
+//! from the source graph, and only compile-time-folded results (e.g.
+//! quantized weights) allocate new `Arc`-held tensors — once, not per run.
+
+use super::arena::SlotArena;
+use super::kernel::CompiledKernel;
+use super::{ExecutionPlan, PlanConst, PlanInput, PlanOptions, PlanOutput, Preload, Step};
+use crate::ir::{ModelGraph, DOMAIN_FINN, DOMAIN_QONNX};
+use crate::ops;
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::borrow::Cow;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+const UNASSIGNED: u32 = u32::MAX;
+
+/// Where a runtime value comes from.
+#[derive(Clone, Copy)]
+enum Def {
+    Preload(usize),
+    Input(usize),
+    Step,
+}
+
+/// Per-value lifetime record for the linear scan.
+struct VInfo {
+    def: Def,
+    /// Step index of the final read, if any.
+    last_use: Option<usize>,
+    /// Graph outputs are never released.
+    persist: bool,
+    slot: u32,
+}
+
+struct StepBuild {
+    node_idx: usize,
+    f: ops::OpFn,
+    in_vals: Vec<usize>,
+    out_vals: Vec<usize>,
+}
+
+/// Resolve an identity-elided name to its canonical runtime name.
+fn canon<'g>(alias: &BTreeMap<&'g str, &'g str>, name: &'g str) -> &'g str {
+    alias.get(name).copied().unwrap_or(name)
+}
+
+/// Materialize a constant as a runtime preload value on first use.
+fn intern_const<'g>(
+    name: &'g str,
+    cv: PlanConst<'g>,
+    persist: bool,
+    values: &mut Vec<VInfo>,
+    preloads: &mut Vec<(String, PlanConst<'g>)>,
+    by_name: &mut BTreeMap<&'g str, usize>,
+) -> usize {
+    let vid = values.len();
+    values.push(VInfo { def: Def::Preload(preloads.len()), last_use: None, persist, slot: UNASSIGNED });
+    preloads.push((name.to_string(), cv));
+    by_name.insert(name, vid);
+    vid
+}
+
+pub(super) fn compile<'g>(graph: &'g ModelGraph, opts: &PlanOptions) -> Result<ExecutionPlan<'g>> {
+    let order = graph.topo_order()?;
+
+    // ------------------------------------------------------------------
+    // Pass 1 — walk the frozen topo order: resolve each node's kernel
+    // once, evaluate constant subgraphs now, and elide identities.
+    // ------------------------------------------------------------------
+    let mut consts: BTreeMap<&'g str, PlanConst<'g>> = BTreeMap::new();
+    for (k, t) in &graph.initializers {
+        consts.insert(k.as_str(), PlanConst::Borrowed(t));
+    }
+    let mut alias: BTreeMap<&'g str, &'g str> = BTreeMap::new();
+    let mut folded_outputs: Vec<(String, Arc<Tensor>)> = Vec::new();
+    let mut alias_outputs: Vec<(String, String)> = Vec::new();
+    let mut kept: Vec<(usize, ops::OpFn)> = Vec::new();
+    let mut folded_count = 0usize;
+    let mut elided_count = 0usize;
+
+    for &i in &order {
+        let node = &graph.nodes[i];
+        // Same rejection (and precedence) as the interpreter's hot loop.
+        if opts.standard_onnx_only && (node.domain == DOMAIN_QONNX || node.domain == DOMAIN_FINN) {
+            bail!(
+                "node '{}' ({}, domain '{}') is not a standard ONNX op — \
+                 this backend only executes the stock operator set",
+                node.name,
+                node.op_type,
+                node.domain
+            );
+        }
+        let f = ops::kernel_for(node)?;
+        // Constant folding: every present input (through identity aliases)
+        // is a compile-time constant. Covers `Constant` nodes (no inputs)
+        // and whole weight-quantization subgraphs.
+        let all_const = node.present_inputs().all(|n| consts.contains_key(canon(&alias, n)));
+        if all_const {
+            let ins: Vec<&Tensor> =
+                node.present_inputs().map(|n| consts[canon(&alias, n)].as_tensor()).collect();
+            let outs = f(node, &ins)
+                .with_context(|| format!("executing node '{}' ({})", node.name, node.op_type))?;
+            if outs.len() != node.outputs.len() {
+                bail!(
+                    "node '{}' produced {} outputs, declared {}",
+                    node.name,
+                    outs.len(),
+                    node.outputs.len()
+                );
+            }
+            drop(ins);
+            for (name, t) in node.outputs.iter().zip(outs) {
+                let a = Arc::new(t);
+                folded_outputs.push((name.clone(), a.clone()));
+                consts.insert(name.as_str(), PlanConst::Shared(a));
+            }
+            folded_count += 1;
+            continue;
+        }
+        // Identity of a runtime value: pure slot alias, no runtime step.
+        if node.op_type == "Identity" && node.outputs.len() == 1 {
+            let mut present = node.present_inputs();
+            if let (Some(src), None) = (present.next(), present.next()) {
+                let c = canon(&alias, src);
+                alias.insert(node.outputs[0].as_str(), c);
+                alias_outputs.push((node.outputs[0].clone(), c.to_string()));
+                elided_count += 1;
+                continue;
+            }
+        }
+        kept.push((i, f));
+    }
+
+    // ------------------------------------------------------------------
+    // Pass 2 — build the runtime value graph: resolve every name to a
+    // dense value id, recording defs and last uses.
+    // ------------------------------------------------------------------
+    let mut values: Vec<VInfo> = Vec::new();
+    let mut by_name: BTreeMap<&'g str, usize> = BTreeMap::new();
+    let mut preload_build: Vec<(String, PlanConst<'g>)> = Vec::new();
+    let mut input_records: Vec<PlanInput> = Vec::new();
+
+    for vi in &graph.inputs {
+        if graph.initializers.contains_key(&vi.name) {
+            continue; // initializer-shadowed input: the constant wins
+        }
+        let vid = values.len();
+        values.push(VInfo {
+            def: Def::Input(input_records.len()),
+            last_use: None,
+            persist: false,
+            slot: UNASSIGNED,
+        });
+        by_name.insert(vi.name.as_str(), vid);
+        input_records.push(PlanInput { name: vi.name.clone(), shape: vi.shape.clone(), slot: None });
+    }
+
+    let mut steps_build: Vec<StepBuild> = Vec::with_capacity(kept.len());
+    for (node_idx, f) in kept {
+        let step_idx = steps_build.len();
+        let node = &graph.nodes[node_idx];
+        let mut in_vals = Vec::with_capacity(node.inputs.len());
+        for raw in node.present_inputs() {
+            let name = canon(&alias, raw);
+            let vid = match by_name.get(name) {
+                Some(&v) => v,
+                None => match consts.get(name).cloned() {
+                    Some(cv) => intern_const(
+                        name,
+                        cv,
+                        false,
+                        &mut values,
+                        &mut preload_build,
+                        &mut by_name,
+                    ),
+                    None => bail!("node '{}' input '{raw}' not computed", node.name),
+                },
+            };
+            values[vid].last_use = Some(step_idx);
+            in_vals.push(vid);
+        }
+        let mut out_vals = Vec::with_capacity(node.outputs.len());
+        for out in &node.outputs {
+            let vid = values.len();
+            values.push(VInfo { def: Def::Step, last_use: None, persist: false, slot: UNASSIGNED });
+            by_name.insert(out.as_str(), vid);
+            out_vals.push(vid);
+        }
+        steps_build.push(StepBuild { node_idx, f, in_vals, out_vals });
+    }
+
+    let mut output_build: Vec<(String, usize)> = Vec::with_capacity(graph.outputs.len());
+    for vi in &graph.outputs {
+        let name = canon(&alias, vi.name.as_str());
+        let vid = match by_name.get(name) {
+            Some(&v) => v,
+            None => match consts.get(name).cloned() {
+                // fully-folded output: resident constant, extracted per run
+                Some(cv) => {
+                    intern_const(name, cv, true, &mut values, &mut preload_build, &mut by_name)
+                }
+                None => bail!("graph output '{}' was not produced", vi.name),
+            },
+        };
+        values[vid].persist = true;
+        output_build.push((vi.name.clone(), vid));
+    }
+
+    // ------------------------------------------------------------------
+    // Pass 3 — linear-scan slot assignment over the step timeline.
+    // Values dying at step s are released (and recyclable) before step
+    // s's outputs are allocated; dead outputs get no slot at all.
+    // ------------------------------------------------------------------
+    let mut deaths: Vec<Vec<usize>> = vec![Vec::new(); steps_build.len()];
+    for (vid, v) in values.iter().enumerate() {
+        if v.persist {
+            continue;
+        }
+        if let Some(s) = v.last_use {
+            deaths[s].push(vid);
+        }
+    }
+    let mut arena = SlotArena::new();
+    for v in values.iter_mut() {
+        if matches!(v.def, Def::Step) {
+            continue;
+        }
+        if v.persist || v.last_use.is_some() {
+            v.slot = arena.alloc();
+        }
+    }
+    let mut release_at: Vec<Vec<u32>> = vec![Vec::new(); steps_build.len()];
+    for s in 0..steps_build.len() {
+        for &vid in &deaths[s] {
+            let slot = values[vid].slot;
+            if slot != UNASSIGNED {
+                arena.release(slot);
+                release_at[s].push(slot);
+            }
+        }
+        for &vid in &steps_build[s].out_vals {
+            let v = &mut values[vid];
+            if v.persist || v.last_use.is_some() {
+                v.slot = arena.alloc();
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Assemble.
+    // ------------------------------------------------------------------
+    let mut preload_slot = vec![UNASSIGNED; preload_build.len()];
+    let mut input_slot = vec![UNASSIGNED; input_records.len()];
+    for v in &values {
+        match v.def {
+            Def::Preload(i) => preload_slot[i] = v.slot,
+            Def::Input(i) => input_slot[i] = v.slot,
+            Def::Step => {}
+        }
+    }
+    for (rec, &sl) in input_records.iter_mut().zip(&input_slot) {
+        rec.slot = if sl == UNASSIGNED { None } else { Some(sl) };
+    }
+    let preloads: Vec<Preload<'g>> = preload_build
+        .into_iter()
+        .zip(preload_slot)
+        .map(|((name, value), slot)| Preload { name, slot, value })
+        .collect();
+
+    let mut steps: Vec<Step> = Vec::with_capacity(steps_build.len());
+    for (s, sb) in steps_build.into_iter().enumerate() {
+        steps.push(Step {
+            node_idx: sb.node_idx,
+            kernel: CompiledKernel::Op(sb.f),
+            inputs: sb.in_vals.iter().map(|&v| values[v].slot).collect(),
+            outputs: sb
+                .out_vals
+                .iter()
+                .map(|&v| {
+                    let sl = values[v].slot;
+                    if sl == UNASSIGNED {
+                        None
+                    } else {
+                        Some(sl)
+                    }
+                })
+                .collect(),
+            release: std::mem::take(&mut release_at[s]),
+        });
+    }
+
+    let outputs: Vec<PlanOutput> = output_build
+        .into_iter()
+        .map(|(name, vid)| PlanOutput { name, slot: values[vid].slot })
+        .collect();
+
+    Ok(ExecutionPlan {
+        name: graph.name.clone(),
+        nodes: Cow::Borrowed(graph.nodes.as_slice()),
+        steps,
+        preloads,
+        inputs: input_records,
+        outputs,
+        slot_count: arena.capacity(),
+        folded_outputs,
+        alias_outputs,
+        node_count: graph.nodes.len(),
+        folded_count,
+        elided_count,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ExecutionPlan;
+    use crate::ir::GraphBuilder;
+
+    #[test]
+    fn standard_only_rejects_at_compile_time() {
+        let mut b = GraphBuilder::new("q");
+        b.input("x", vec![1, 4]);
+        b.quant("x", "y", 0.5, 0.0, 4.0, false, false, "ROUND");
+        b.output("y", vec![1, 4]);
+        let g = b.finish().unwrap();
+        let opts = super::PlanOptions { standard_onnx_only: true };
+        let err = ExecutionPlan::compile_with(&g, &opts).unwrap_err();
+        assert!(err.to_string().contains("not a standard ONNX op"));
+    }
+
+    #[test]
+    fn unknown_op_rejected_with_node_context() {
+        let mut b = GraphBuilder::new("u");
+        b.input("x", vec![1]);
+        b.node("TotallyUnknown", &["x"], &["y"], &[]);
+        b.output("y", vec![1]);
+        let g = b.finish().unwrap();
+        let err = ExecutionPlan::compile(&g).unwrap_err().to_string();
+        assert!(err.contains("no implementation for op 'TotallyUnknown'"), "{err}");
+    }
+
+    #[test]
+    fn dangling_input_rejected() {
+        // bypass the builder's validate(): build the graph directly
+        let mut g = crate::ir::ModelGraph::new("dangle");
+        g.inputs.push(crate::ir::ValueInfo::new("x", vec![1]));
+        g.outputs.push(crate::ir::ValueInfo::new("y", vec![1]));
+        g.nodes.push(crate::ir::Node::new("Relu", &["nope"], &["y"]).with_name("r"));
+        let err = ExecutionPlan::compile(&g).unwrap_err().to_string();
+        assert!(err.contains("input 'nope' not computed"), "{err}");
+    }
+}

@@ -1,0 +1,47 @@
+//! Compiled per-step kernels.
+//!
+//! At plan-compile time every node's `op_type` is resolved exactly once
+//! through the op registry ([`crate::ops::kernel_for`]) and frozen into a
+//! [`CompiledKernel`], so the run-time loop dispatches through a stored
+//! function pointer instead of string-matching on every node of every
+//! request. Two node classes never reach a kernel at all: `Constant`
+//! nodes (and any node whose inputs are all compile-time constants) are
+//! folded into preloaded slots, and single-input `Identity` nodes are
+//! elided by slot aliasing.
+
+use crate::ir::Node;
+use crate::ops::OpFn;
+use crate::tensor::Tensor;
+use anyhow::Result;
+
+/// Resolved dispatch for one plan step.
+#[derive(Debug, Clone, Copy)]
+pub enum CompiledKernel {
+    /// Registry operator function, resolved at compile time.
+    Op(OpFn),
+}
+
+impl CompiledKernel {
+    /// Run the kernel against resolved input tensors.
+    #[inline]
+    pub fn invoke(&self, node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        match self {
+            CompiledKernel::Op(f) => f(node, inputs),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops;
+
+    #[test]
+    fn invokes_resolved_op() {
+        let node = Node::new("Relu", &["x"], &["y"]);
+        let k = CompiledKernel::Op(ops::kernel_for(&node).unwrap());
+        let x = Tensor::new(vec![3], vec![-1.0, 0.0, 2.0]);
+        let out = k.invoke(&node, &[&x]).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &[0.0, 0.0, 2.0]);
+    }
+}

@@ -1,0 +1,570 @@
+//! Compiled execution plans: the slot-indexed, arena-backed graph
+//! executor.
+//!
+//! The reference interpreter ([`crate::exec::interpret_with`]) re-derives
+//! everything per request: it clones/looks up tensors through a
+//! `BTreeMap<String, Tensor>`, recomputes the topological order, and
+//! string-matches `op_type` on every node. Following the compiler-approach
+//! literature (Jain et al. 2020; FINN-R's backend-agnostic schedules), this
+//! module lowers a [`ModelGraph`] *once* into an [`ExecutionPlan`]:
+//!
+//! * **names → slots** — every tensor is resolved at compile time to a
+//!   dense physical slot index; the hot loop indexes a flat vector.
+//! * **frozen schedule** — the topological order is computed once and
+//!   stored as a step table.
+//! * **resolved dispatch** — each node's kernel is looked up once and
+//!   stored as a [`CompiledKernel`] function pointer
+//!   (see [`crate::ops::kernel_for`]).
+//! * **constant preloads** — initializers are *borrowed* from the graph
+//!   (or held by `Arc` in an owned plan) instead of being cloned into the
+//!   context per call; whole constant subgraphs — including the weight
+//!   `Quant` nodes that [`crate::transforms::fold_constants`] deliberately
+//!   leaves in the graph representation — are evaluated at compile time,
+//!   so quantized weights are computed once, not per request.
+//! * **identity elision** — single-input `Identity` nodes become slot
+//!   aliases; no runtime step is emitted.
+//! * **buffer lifetimes** — a last-use pass releases each slot after its
+//!   final read and recycles it through a [`SlotArena`], so intermediate
+//!   tensors are freed mid-run and peak live memory is the schedule's
+//!   high-water mark, not the tensor count.
+//!
+//! The same plan serves every scenario (QONNX, QCDQ, quantized-op and
+//! FINN graphs alike): [`crate::exec::execute_with`] is a thin wrapper
+//! that compiles a borrowed plan per call, while
+//! [`crate::coordinator::PlannedEngine`] compiles once (owned, `'static`)
+//! and serves any batch size through the batcher.
+
+pub mod arena;
+mod compile;
+mod kernel;
+
+pub use arena::SlotArena;
+pub use kernel::CompiledKernel;
+
+use crate::ir::{ModelGraph, Node};
+use crate::tensor::Tensor;
+use anyhow::{anyhow, bail, Context, Result};
+use std::borrow::Cow;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::Arc;
+
+/// Plan compilation options.
+#[derive(Debug, Clone, Default)]
+pub struct PlanOptions {
+    /// Reject QONNX/FINN-domain nodes — emulates a stock ONNX backend
+    /// (same semantics as [`crate::exec::ExecOptions::standard_onnx_only`]).
+    pub standard_onnx_only: bool,
+}
+
+/// Per-run configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Check provided inputs against the graph's declared shapes.
+    /// Engines that re-batch a fixed-batch graph disable this (the kernels
+    /// themselves are batch-agnostic).
+    pub check_input_shapes: bool,
+    /// Record every loaded/computed tensor by name (shape inference and
+    /// debugging). Includes preloads, step outputs, compile-time-folded
+    /// constants and identity aliases. Initializers consumed *only* by
+    /// folded subgraphs are not part of the plan; callers that need full
+    /// interpreter-context parity overlay `graph.initializers` themselves
+    /// (as [`crate::exec::execute_with`] does).
+    pub record_intermediates: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> RunConfig {
+        RunConfig { check_input_shapes: true, record_intermediates: false }
+    }
+}
+
+/// A constant resident in the plan: borrowed from the source graph, or
+/// shared by `Arc` once the plan is made owning (see
+/// [`ExecutionPlan::into_owned`]). Either way it is *never* cloned per run.
+#[derive(Debug, Clone)]
+pub(crate) enum PlanConst<'g> {
+    Borrowed(&'g Tensor),
+    Shared(Arc<Tensor>),
+}
+
+impl PlanConst<'_> {
+    pub(crate) fn as_tensor(&self) -> &Tensor {
+        match self {
+            PlanConst::Borrowed(t) => t,
+            PlanConst::Shared(a) => a,
+        }
+    }
+
+    fn into_shared(self) -> PlanConst<'static> {
+        match self {
+            PlanConst::Borrowed(t) => PlanConst::Shared(Arc::new(t.clone())),
+            PlanConst::Shared(a) => PlanConst::Shared(a),
+        }
+    }
+}
+
+/// A run-time slot value: borrowed (preloaded constants, caller inputs)
+/// or owned (node outputs). Borrowing is what lets both executors avoid
+/// cloning weights per request.
+#[derive(Debug)]
+pub enum RtVal<'a> {
+    Ref(&'a Tensor),
+    Owned(Tensor),
+}
+
+impl RtVal<'_> {
+    #[inline]
+    pub fn tensor(&self) -> &Tensor {
+        match self {
+            RtVal::Ref(t) => t,
+            RtVal::Owned(t) => t,
+        }
+    }
+
+    pub fn into_tensor(self) -> Tensor {
+        match self {
+            RtVal::Ref(t) => t.clone(),
+            RtVal::Owned(t) => t,
+        }
+    }
+}
+
+/// One scheduled node execution.
+#[derive(Debug, Clone)]
+pub(crate) struct Step {
+    /// Index into the plan's node table.
+    pub(crate) node_idx: usize,
+    pub(crate) kernel: CompiledKernel,
+    /// Slot of each present input, in `present_inputs()` order.
+    pub(crate) inputs: Vec<u32>,
+    /// Slot per declared output; `None` for dead outputs (dropped at once).
+    pub(crate) outputs: Vec<Option<u32>>,
+    /// Slots whose last use is this step — cleared after the kernel runs,
+    /// before outputs are stored (an output may reuse a released slot).
+    pub(crate) release: Vec<u32>,
+}
+
+/// A constant bound to a slot at the start of every run.
+#[derive(Debug, Clone)]
+pub(crate) struct Preload<'g> {
+    pub(crate) name: String,
+    pub(crate) slot: u32,
+    pub(crate) value: PlanConst<'g>,
+}
+
+/// A graph input binding: checked (and stored, if used) at run start.
+#[derive(Debug, Clone)]
+pub(crate) struct PlanInput {
+    pub(crate) name: String,
+    pub(crate) shape: Option<Vec<usize>>,
+    /// `None` when no runtime step (or output) reads the input — it is
+    /// still required and shape-checked, but not stored.
+    pub(crate) slot: Option<u32>,
+}
+
+/// A graph output: extracted from its slot at the end of the run.
+#[derive(Debug, Clone)]
+pub(crate) struct PlanOutput {
+    pub(crate) name: String,
+    pub(crate) slot: u32,
+}
+
+/// A compiled, immutable execution schedule for one [`ModelGraph`].
+///
+/// Borrowed plans (`ExecutionPlan<'g>`) reference the graph's nodes and
+/// initializers directly — compiling one performs no tensor copies.
+/// [`ExecutionPlan::into_owned`] detaches the plan from the graph
+/// (`'static`), cloning each referenced constant exactly once into an
+/// `Arc` so engines can cache the plan and share it across calls.
+#[derive(Debug, Clone)]
+pub struct ExecutionPlan<'g> {
+    pub(crate) name: String,
+    pub(crate) nodes: Cow<'g, [Node]>,
+    pub(crate) steps: Vec<Step>,
+    pub(crate) preloads: Vec<Preload<'g>>,
+    pub(crate) inputs: Vec<PlanInput>,
+    pub(crate) outputs: Vec<PlanOutput>,
+    pub(crate) slot_count: usize,
+    /// All compile-time-folded node outputs by name (for intermediates
+    /// recording; `Arc`-shared with any preloads that use them).
+    pub(crate) folded_outputs: Vec<(String, Arc<Tensor>)>,
+    /// Elided `Identity` outputs: alias name → canonical runtime name.
+    pub(crate) alias_outputs: Vec<(String, String)>,
+    pub(crate) node_count: usize,
+    pub(crate) folded_count: usize,
+    pub(crate) elided_count: usize,
+}
+
+/// Result of a plan run.
+#[derive(Debug)]
+pub struct PlanRunResult {
+    pub outputs: BTreeMap<String, Tensor>,
+    pub intermediates: BTreeMap<String, Tensor>,
+}
+
+impl<'g> ExecutionPlan<'g> {
+    /// Compile `graph` with default options.
+    pub fn compile(graph: &'g ModelGraph) -> Result<ExecutionPlan<'g>> {
+        compile::compile(graph, &PlanOptions::default())
+    }
+
+    /// Compile `graph` with explicit options.
+    pub fn compile_with(graph: &'g ModelGraph, opts: &PlanOptions) -> Result<ExecutionPlan<'g>> {
+        compile::compile(graph, opts)
+    }
+
+    /// Detach the plan from its source graph: each borrowed constant is
+    /// cloned exactly once into an `Arc`. The result can be cached and
+    /// reused for the engine's lifetime with zero per-call weight copies.
+    pub fn into_owned(self) -> ExecutionPlan<'static> {
+        ExecutionPlan {
+            name: self.name,
+            nodes: Cow::Owned(self.nodes.into_owned()),
+            steps: self.steps,
+            preloads: self
+                .preloads
+                .into_iter()
+                .map(|p| Preload { name: p.name, slot: p.slot, value: p.value.into_shared() })
+                .collect(),
+            inputs: self.inputs,
+            outputs: self.outputs,
+            slot_count: self.slot_count,
+            folded_outputs: self.folded_outputs,
+            alias_outputs: self.alias_outputs,
+            node_count: self.node_count,
+            folded_count: self.folded_count,
+            elided_count: self.elided_count,
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Runtime steps (after folding and elision).
+    pub fn step_count(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Physical slots — the high-water mark of simultaneously-live tensors.
+    pub fn slot_count(&self) -> usize {
+        self.slot_count
+    }
+
+    /// Nodes evaluated at compile time (constant subgraphs).
+    pub fn folded_count(&self) -> usize {
+        self.folded_count
+    }
+
+    /// `Identity` nodes elided into slot aliases.
+    pub fn elided_count(&self) -> usize {
+        self.elided_count
+    }
+
+    /// Constants bound to slots at run start (no per-run copies).
+    pub fn preload_count(&self) -> usize {
+        self.preloads.len()
+    }
+
+    /// Execute on named inputs, returning the graph outputs.
+    pub fn run(&self, inputs: &BTreeMap<String, Tensor>) -> Result<BTreeMap<String, Tensor>> {
+        Ok(self.run_cfg(|n| inputs.get(n), &RunConfig::default())?.outputs)
+    }
+
+    /// Execute with explicit configuration and a caller-controlled input
+    /// binding (lets engines bind a batch tensor without cloning it into a
+    /// map).
+    pub fn run_cfg<'a>(
+        &'a self,
+        fetch: impl Fn(&str) -> Option<&'a Tensor>,
+        cfg: &RunConfig,
+    ) -> Result<PlanRunResult> {
+        let mut slots: Vec<Option<RtVal<'a>>> = Vec::with_capacity(self.slot_count);
+        slots.resize_with(self.slot_count, || None);
+        let mut intermediates: BTreeMap<String, Tensor> = BTreeMap::new();
+
+        // Bind resident constants (borrow — never cloned).
+        for p in &self.preloads {
+            slots[p.slot as usize] = Some(RtVal::Ref(p.value.as_tensor()));
+            if cfg.record_intermediates {
+                intermediates.insert(p.name.clone(), p.value.as_tensor().clone());
+            }
+        }
+        // Bind caller inputs (same error surface as the interpreter).
+        for pi in &self.inputs {
+            let t = fetch(&pi.name)
+                .with_context(|| format!("missing input tensor '{}'", pi.name))?;
+            if cfg.check_input_shapes {
+                if let Some(shape) = &pi.shape {
+                    if t.shape() != shape.as_slice() {
+                        bail!(
+                            "input '{}' shape {:?} does not match declared {:?}",
+                            pi.name,
+                            t.shape(),
+                            shape
+                        );
+                    }
+                }
+            }
+            if let Some(slot) = pi.slot {
+                slots[slot as usize] = Some(RtVal::Ref(t));
+            }
+            if cfg.record_intermediates {
+                intermediates.insert(pi.name.clone(), t.clone());
+            }
+        }
+
+        // The hot loop: slot-indexed, dispatch pre-resolved.
+        for step in &self.steps {
+            let node = &self.nodes[step.node_idx];
+            let mut ins: Vec<&Tensor> = Vec::with_capacity(step.inputs.len());
+            for &sl in &step.inputs {
+                ins.push(
+                    slots[sl as usize]
+                        .as_ref()
+                        .ok_or_else(|| {
+                            anyhow!("plan invariant violated: empty slot {sl} feeding node '{}'", node.name)
+                        })?
+                        .tensor(),
+                );
+            }
+            let outs = step
+                .kernel
+                .invoke(node, &ins)
+                .with_context(|| format!("executing node '{}' ({})", node.name, node.op_type))?;
+            if outs.len() != node.outputs.len() {
+                bail!(
+                    "node '{}' produced {} outputs, declared {}",
+                    node.name,
+                    outs.len(),
+                    node.outputs.len()
+                );
+            }
+            drop(ins);
+            // Free dead slots before storing: an output may reuse one.
+            for &sl in &step.release {
+                slots[sl as usize] = None;
+            }
+            for (j, t) in outs.into_iter().enumerate() {
+                if cfg.record_intermediates {
+                    intermediates.insert(node.outputs[j].clone(), t.clone());
+                }
+                if let Some(sl) = step.outputs[j] {
+                    slots[sl as usize] = Some(RtVal::Owned(t));
+                }
+            }
+        }
+
+        let mut outputs = BTreeMap::new();
+        for po in &self.outputs {
+            let v = slots[po.slot as usize]
+                .as_ref()
+                .ok_or_else(|| anyhow!("graph output '{}' was not produced", po.name))?;
+            outputs.insert(po.name.clone(), v.tensor().clone());
+        }
+        if cfg.record_intermediates {
+            for (name, t) in &self.folded_outputs {
+                intermediates.insert(name.clone(), (**t).clone());
+            }
+            for (alias, canon) in &self.alias_outputs {
+                if let Some(t) = intermediates.get(canon).cloned() {
+                    intermediates.insert(alias.clone(), t);
+                }
+            }
+        }
+        Ok(PlanRunResult { outputs, intermediates })
+    }
+
+    /// Human-readable schedule listing.
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "plan '{}': {} graph nodes -> {} steps ({} const-folded, {} identity-elided)\n",
+            self.name,
+            self.node_count,
+            self.steps.len(),
+            self.folded_count,
+            self.elided_count
+        );
+        let _ = writeln!(
+            s,
+            "  {} physical slots, {} preloaded constants, {} inputs, {} outputs",
+            self.slot_count,
+            self.preloads.len(),
+            self.inputs.len(),
+            self.outputs.len()
+        );
+        for (i, step) in self.steps.iter().enumerate() {
+            let node = &self.nodes[step.node_idx];
+            let outs: Vec<String> = step
+                .outputs
+                .iter()
+                .map(|o| o.map(|sl| sl.to_string()).unwrap_or_else(|| "-".to_string()))
+                .collect();
+            let _ = writeln!(
+                s,
+                "  s{i:<3} {:<18} slots {:?} -> [{}]  release {:?}",
+                node.op_type,
+                step.inputs,
+                outs.join(", "),
+                step.release
+            );
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::GraphBuilder;
+
+    fn run_map(plan: &ExecutionPlan, inputs: &BTreeMap<String, Tensor>) -> BTreeMap<String, Tensor> {
+        plan.run(inputs).unwrap()
+    }
+
+    #[test]
+    fn chain_reuses_one_slot() {
+        let mut b = GraphBuilder::new("chain");
+        b.input("x", vec![1, 4]);
+        b.node("Relu", &["x"], &["a"], &[]);
+        b.node("Relu", &["a"], &["c"], &[]);
+        b.node("Relu", &["c"], &["y"], &[]);
+        b.output("y", vec![1, 4]);
+        let g = b.finish().unwrap();
+        let plan = ExecutionPlan::compile(&g).unwrap();
+        assert_eq!(plan.step_count(), 3);
+        // x, a, c, y all share one recycled physical slot
+        assert_eq!(plan.slot_count(), 1, "{}", plan.summary());
+        let mut m = BTreeMap::new();
+        m.insert("x".to_string(), Tensor::new(vec![1, 4], vec![-2.0, -1.0, 0.5, 3.0]));
+        let out = run_map(&plan, &m);
+        assert_eq!(out["y"].as_f32().unwrap(), &[0.0, 0.0, 0.5, 3.0]);
+    }
+
+    #[test]
+    fn weight_quant_folds_at_compile_time() {
+        let mut b = GraphBuilder::new("fold");
+        b.input("x", vec![1, 2]);
+        b.node("Relu", &["x"], &["r"], &[]);
+        b.initializer("w", Tensor::new(vec![2, 2], vec![0.3, -0.6, 0.9, 0.1]));
+        b.quant("w", "wq", 0.25, 0.0, 4.0, true, true, "ROUND");
+        b.node("MatMul", &["r", "wq"], &["y"], &[]);
+        b.output("y", vec![1, 2]);
+        let g = b.finish().unwrap();
+        let plan = ExecutionPlan::compile(&g).unwrap();
+        // the weight Quant (inputs all constant) ran at compile time
+        assert_eq!(plan.folded_count(), 1, "{}", plan.summary());
+        assert_eq!(plan.step_count(), 2);
+        let mut m = BTreeMap::new();
+        m.insert("x".to_string(), Tensor::new(vec![1, 2], vec![1.0, 2.0]));
+        let got = run_map(&plan, &m);
+        let want = crate::exec::interpret(&g, &m).unwrap();
+        assert_eq!(want.outputs, got);
+    }
+
+    #[test]
+    fn identity_is_elided_to_an_alias() {
+        let mut b = GraphBuilder::new("ident");
+        b.input("x", vec![1, 3]);
+        b.node("Relu", &["x"], &["a"], &[]);
+        b.node("Identity", &["a"], &["y"], &[]);
+        b.output("y", vec![1, 3]);
+        let g = b.finish().unwrap();
+        let plan = ExecutionPlan::compile(&g).unwrap();
+        assert_eq!(plan.elided_count(), 1);
+        assert_eq!(plan.step_count(), 1);
+        let mut m = BTreeMap::new();
+        m.insert("x".to_string(), Tensor::new(vec![1, 3], vec![-1.0, 0.0, 5.0]));
+        let out = run_map(&plan, &m);
+        assert_eq!(out["y"].as_f32().unwrap(), &[0.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn fully_constant_graph_folds_to_preloaded_output() {
+        let mut b = GraphBuilder::new("allconst");
+        b.initializer("w", Tensor::new(vec![3], vec![-1.0, 0.0, 2.0]));
+        b.node("Relu", &["w"], &["y"], &[]);
+        b.output("y", vec![3]);
+        let g = b.finish().unwrap();
+        let plan = ExecutionPlan::compile(&g).unwrap();
+        assert_eq!(plan.step_count(), 0);
+        let out = run_map(&plan, &BTreeMap::new());
+        assert_eq!(out["y"].as_f32().unwrap(), &[0.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn plan_is_reusable_and_owned_plan_matches() {
+        let mut b = GraphBuilder::new("reuse");
+        b.input("x", vec![1, 4]);
+        b.quant("x", "y", 0.5, 0.0, 4.0, false, false, "ROUND");
+        b.output("y", vec![1, 4]);
+        let g = b.finish().unwrap();
+        let plan = ExecutionPlan::compile(&g).unwrap();
+        let owned = ExecutionPlan::compile(&g).unwrap().into_owned();
+        let mut m = BTreeMap::new();
+        m.insert("x".to_string(), Tensor::new(vec![1, 4], vec![-1.0, 0.3, 0.26, 99.0]));
+        let first = run_map(&plan, &m);
+        let second = run_map(&plan, &m);
+        assert_eq!(first, second, "slot state resets between runs");
+        assert_eq!(first, run_map(&owned, &m));
+    }
+
+    #[test]
+    fn unchecked_shapes_allow_rebatching() {
+        let mut b = GraphBuilder::new("rebatch");
+        b.input("x", vec![1, 4]);
+        b.node("Relu", &["x"], &["y"], &[]);
+        b.output("y", vec![1, 4]);
+        let g = b.finish().unwrap();
+        let plan = ExecutionPlan::compile(&g).unwrap();
+        let batch = Tensor::full(vec![5, 4], -1.0);
+        let cfg = RunConfig { check_input_shapes: false, record_intermediates: false };
+        let r = plan.run_cfg(|n| (n == "x").then_some(&batch), &cfg).unwrap();
+        assert_eq!(r.outputs["y"].shape(), &[5, 4]);
+        // and the checked path still rejects it
+        let mut m = BTreeMap::new();
+        m.insert("x".to_string(), batch);
+        assert!(plan.run(&m).is_err());
+    }
+
+    #[test]
+    fn intermediates_cover_folds_and_aliases() {
+        let mut b = GraphBuilder::new("record");
+        b.input("x", vec![1, 2]);
+        b.node("Relu", &["x"], &["r"], &[]);
+        b.initializer("w", Tensor::new(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]));
+        b.quant("w", "wq", 0.5, 0.0, 4.0, true, false, "ROUND");
+        b.node("MatMul", &["r", "wq"], &["mm"], &[]);
+        b.node("Identity", &["mm"], &["y"], &[]);
+        b.output("y", vec![1, 2]);
+        let g = b.finish().unwrap();
+        let plan = ExecutionPlan::compile(&g).unwrap();
+        let mut m = BTreeMap::new();
+        m.insert("x".to_string(), Tensor::new(vec![1, 2], vec![2.0, -1.0]));
+        let cfg = RunConfig { check_input_shapes: true, record_intermediates: true };
+        let r = plan.run_cfg(|n| m.get(n), &cfg).unwrap();
+        for name in ["x", "r", "wq", "mm", "y"] {
+            assert!(r.intermediates.contains_key(name), "missing '{name}'");
+        }
+    }
+
+    #[test]
+    fn dead_node_still_executes_but_output_is_dropped() {
+        // Sign's output is unused: the step still runs (error parity with
+        // the interpreter) but gets no slot.
+        let mut b = GraphBuilder::new("dead");
+        b.input("x", vec![1, 2]);
+        b.node("Sign", &["x"], &["unused"], &[]);
+        b.node("Relu", &["x"], &["y"], &[]);
+        b.output("y", vec![1, 2]);
+        let g = b.finish().unwrap();
+        let plan = ExecutionPlan::compile(&g).unwrap();
+        assert_eq!(plan.step_count(), 2);
+        let mut m = BTreeMap::new();
+        m.insert("x".to_string(), Tensor::new(vec![1, 2], vec![-3.0, 4.0]));
+        let out = run_map(&plan, &m);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out["y"].as_f32().unwrap(), &[0.0, 4.0]);
+    }
+}

@@ -1,0 +1,169 @@
+//! Plan-vs-interpreter equivalence: the compiled ExecutionPlan must be
+//! observationally identical to the name-keyed reference interpreter —
+//! across the model zoo (TFC, CNV, keraslike), the `standard_onnx_only`
+//! restriction, error reporting for missing/mis-shaped inputs, and the
+//! QCDQ lower→raise round-trip.
+
+use qonnx::coordinator::{Batcher, BatcherConfig, InferenceEngine, PlannedEngine};
+use qonnx::exec::{self, ExecOptions};
+use qonnx::ir::ModelGraph;
+use qonnx::plan::{ExecutionPlan, PlanOptions};
+use qonnx::tensor::Tensor;
+use qonnx::testutil::random_tensor;
+use qonnx::transforms;
+use qonnx::zoo::{self, keras_to_qonnx, rng::Rng, tfc, KerasModel, TfcParams};
+use std::collections::BTreeMap;
+
+fn random_inputs(g: &ModelGraph, seed: u64) -> BTreeMap<String, Tensor> {
+    let mut rng = Rng::new(seed);
+    let mut m = BTreeMap::new();
+    for vi in &g.inputs {
+        if g.initializers.contains_key(&vi.name) {
+            continue;
+        }
+        let shape = vi.shape.clone().expect("test graphs declare input shapes");
+        m.insert(vi.name.clone(), random_tensor(&mut rng, shape, 0.0, 1.0));
+    }
+    m
+}
+
+/// Interpreter, one-shot plan wrapper, and a reused compiled plan must
+/// produce byte-identical outputs.
+fn assert_equivalent(g: &ModelGraph, inputs: &BTreeMap<String, Tensor>) {
+    let interp = exec::interpret(g, inputs).unwrap();
+    let plan = ExecutionPlan::compile(g).unwrap();
+    let planned = plan.run(inputs).unwrap();
+    assert_eq!(interp.outputs, planned, "plan != interpreter on '{}'", g.name);
+    let wrapper = exec::execute(g, inputs).unwrap();
+    assert_eq!(interp.outputs, wrapper.outputs, "execute() wrapper diverged on '{}'", g.name);
+}
+
+#[test]
+fn tfc_variants_match_raw_and_cleaned() {
+    for name in ["TFC-w2a2", "TFC-w1a1", "TFC-w1a2"] {
+        let g = zoo::build(name, 1, 32).unwrap();
+        assert_equivalent(&g, &random_inputs(&g, 11));
+        let mut cleaned = g.clone();
+        transforms::cleanup(&mut cleaned).unwrap();
+        assert_equivalent(&cleaned, &random_inputs(&cleaned, 11));
+    }
+}
+
+#[test]
+fn cnv_matches() {
+    let mut g = zoo::build("CNV-w1a1", 1, 32).unwrap();
+    transforms::cleanup(&mut g).unwrap();
+    let inputs = random_inputs(&g, 5);
+    let interp = exec::interpret(&g, &inputs).unwrap();
+    let planned = ExecutionPlan::compile(&g).unwrap().run(&inputs).unwrap();
+    assert_eq!(interp.outputs, planned);
+}
+
+#[test]
+fn keraslike_matches() {
+    let g = keras_to_qonnx(&KerasModel::fig4_example(), 3).unwrap();
+    assert_equivalent(&g, &random_inputs(&g, 7));
+}
+
+#[test]
+fn standard_onnx_only_parity() {
+    let g = tfc(&TfcParams::random(2, 2, 7)).unwrap();
+    let inputs = random_inputs(&g, 3);
+    let opts = ExecOptions { standard_onnx_only: true, ..Default::default() };
+
+    // QONNX graph: both executors reject with the same diagnosis
+    let e1 = exec::interpret_with(&g, &inputs, &opts).unwrap_err().to_string();
+    let e2 = exec::execute_with(&g, &inputs, &opts).unwrap_err().to_string();
+    let popts = PlanOptions { standard_onnx_only: true };
+    let e3 = ExecutionPlan::compile_with(&g, &popts).unwrap_err().to_string();
+    for e in [&e1, &e2, &e3] {
+        assert!(e.contains("not a standard ONNX op"), "{e}");
+    }
+
+    // QCDQ-lowered graph: both run on the restricted backend, identically
+    let mut qcdq = g.clone();
+    transforms::lower_to_qcdq(&mut qcdq).unwrap();
+    let y_interp = exec::interpret_with(&qcdq, &inputs, &opts).unwrap();
+    let y_plan = exec::execute_with(&qcdq, &inputs, &opts).unwrap();
+    assert_eq!(y_interp.outputs, y_plan.outputs);
+    // and the restricted result matches the unrestricted QONNX original
+    let y_orig = exec::interpret(&g, &inputs).unwrap();
+    let (a, b) = (y_orig.outputs.values().next().unwrap(), y_plan.outputs.values().next().unwrap());
+    assert_eq!(a, b, "QCDQ-on-stock-backend must be bit-exact vs QONNX");
+}
+
+#[test]
+fn missing_input_and_shape_mismatch_error_parity() {
+    let g = tfc(&TfcParams::random(2, 2, 9)).unwrap();
+
+    let empty = BTreeMap::new();
+    let e_i = exec::interpret(&g, &empty).unwrap_err().to_string();
+    let e_p = exec::execute(&g, &empty).unwrap_err().to_string();
+    assert!(e_i.contains("missing input tensor"), "{e_i}");
+    assert!(e_p.contains("missing input tensor"), "{e_p}");
+
+    let mut bad = BTreeMap::new();
+    bad.insert(g.inputs[0].name.clone(), Tensor::zeros(vec![2, 784]));
+    let e_i = exec::interpret(&g, &bad).unwrap_err().to_string();
+    let e_p = exec::execute(&g, &bad).unwrap_err().to_string();
+    assert!(e_i.contains("does not match declared"), "{e_i}");
+    assert!(e_p.contains("does not match declared"), "{e_p}");
+}
+
+/// `lower_qcdq` → `raise_qcdq` round-trip runs identically through both
+/// executors and reproduces the original model bit-exactly.
+#[test]
+fn qcdq_roundtrip_through_both_executors() {
+    let g = tfc(&TfcParams::random(3, 3, 13)).unwrap();
+    let mut rt = g.clone();
+    transforms::lower_to_qcdq(&mut rt).unwrap();
+    transforms::raise_qcdq_to_qonnx(&mut rt).unwrap();
+    assert!(!rt.op_histogram().contains_key("QuantizeLinear"));
+    let inputs = random_inputs(&g, 21);
+    let y_orig = exec::interpret(&g, &inputs).unwrap().outputs;
+    let y_rt_interp = exec::interpret(&rt, &inputs).unwrap().outputs;
+    let plan = ExecutionPlan::compile(&rt).unwrap();
+    let y_rt_plan = plan.run(&inputs).unwrap();
+    // outputs keep their names through the round-trip, so compare values
+    let a: Vec<&Tensor> = y_orig.values().collect();
+    let b: Vec<&Tensor> = y_rt_interp.values().collect();
+    let c: Vec<&Tensor> = y_rt_plan.values().collect();
+    assert_eq!(a, b, "interpreter: round-trip changed semantics");
+    assert_eq!(b, c, "plan: round-trip changed semantics");
+}
+
+/// The batcher serves a zoo model natively through the PlannedEngine and
+/// returns the same answers as direct plan execution.
+#[test]
+fn batcher_serves_planned_engine() {
+    let batcher = Batcher::start(
+        || Ok(Box::new(PlannedEngine::from_zoo("TFC-w2a2")?) as Box<dyn InferenceEngine>),
+        BatcherConfig::default(),
+    )
+    .unwrap();
+    let input: Vec<f32> = (0..784).map(|i| (i % 9) as f32 / 9.0).collect();
+    let served = batcher.infer(input.clone()).unwrap();
+    assert_eq!(served.len(), 10);
+
+    let mut direct = PlannedEngine::from_zoo("TFC-w2a2").unwrap();
+    let y = direct.infer_batch(&Tensor::new(vec![1, 784], input)).unwrap();
+    assert_eq!(served, y.as_f32().unwrap());
+}
+
+/// One compiled plan serves every batch size: replicated rows give
+/// replicated (bit-identical) outputs.
+#[test]
+fn planned_engine_rebatches_without_recompiling() {
+    let mut engine = PlannedEngine::from_zoo("TFC-w2a2").unwrap();
+    let row: Vec<f32> = (0..784).map(|i| (i % 17) as f32 / 17.0).collect();
+    let y1 = engine.infer_batch(&Tensor::new(vec![1, 784], row.clone())).unwrap();
+    let mut four = Vec::new();
+    for _ in 0..4 {
+        four.extend_from_slice(&row);
+    }
+    let y4 = engine.infer_batch(&Tensor::new(vec![4, 784], four)).unwrap();
+    assert_eq!(y4.shape(), &[4, 10]);
+    for r in 0..4 {
+        assert_eq!(&y4.as_f32().unwrap()[r * 10..(r + 1) * 10], y1.as_f32().unwrap());
+    }
+}
