@@ -1,9 +1,9 @@
 # Repo-level tooling. `make check` is the CI gate: build, tests, format,
 # and lints over the rust crate.
 
-.PHONY: check build test fmt clippy bench
+.PHONY: check build test fmt clippy bench bench-build
 
-check: build test fmt clippy
+check: build test fmt clippy bench-build
 
 build:
 	cd rust && cargo build --release
@@ -20,6 +20,11 @@ clippy:
 	cd rust && cargo clippy --all-targets -- -D warnings
 
 # Interpreter-vs-plan throughput comparison (plus the PJRT sections when
-# artifacts are present).
+# artifacts are present). Writes machine-readable BENCH_PR2.json to the
+# repo root (Melem/s, GMAC/s, and b1/b8 plan-vs-interpreter speedups).
 bench:
 	cd rust && cargo bench --bench bench_exec
+
+# Compile-only check so benches can't rot (CI gate; no measurements run).
+bench-build:
+	cd rust && cargo build --release --benches

@@ -8,16 +8,44 @@ use qonnx::coordinator::{
     Batcher, BatcherConfig, InferenceEngine, PjrtEngine, PlannedEngine, ReferenceEngine,
 };
 use qonnx::ir::Node;
-use qonnx::plan::ExecutionPlan;
+use qonnx::plan::{ExecutionPlan, PlanOptions};
 use qonnx::runtime::{artifacts_dir, PjrtRuntime};
 use qonnx::tensor::Tensor;
 use qonnx::zoo::{cnv, tfc_batch, TfcParams};
 use qonnx::{exec, ops, transforms};
 use std::collections::BTreeMap;
+use std::fmt::Write as _;
 use std::sync::Arc;
 use std::time::Duration;
 
+/// Machine-readable results for CI trend tracking (`make bench` writes
+/// this to the repo root as BENCH_PR2.json).
+#[derive(Default)]
+struct BenchJson {
+    entries: Vec<(String, f64)>,
+}
+
+impl BenchJson {
+    fn record(&mut self, key: &str, value: f64) {
+        self.entries.push((key.to_string(), value));
+    }
+
+    fn write(&self, path: &str) {
+        let mut s = String::from("{\n");
+        for (i, (k, v)) in self.entries.iter().enumerate() {
+            let comma = if i + 1 == self.entries.len() { "" } else { "," };
+            let _ = writeln!(s, "  \"{k}\": {v:.4}{comma}");
+        }
+        s.push_str("}\n");
+        match std::fs::write(path, &s) {
+            Ok(()) => println!("\nwrote {path}"),
+            Err(e) => println!("\nfailed to write {path}: {e}"),
+        }
+    }
+}
+
 fn main() -> anyhow::Result<()> {
+    let mut json = BenchJson::default();
     section("Quant operator microbench (256x256 tensor)");
     let x = Tensor::new(vec![256, 256], (0..65536).map(|i| (i % 509) as f32 * 0.01 - 2.5).collect());
     let quant_node = Node::new("Quant", &["x", "s", "z", "b"], &["y"])
@@ -34,6 +62,7 @@ fn main() -> anyhow::Result<()> {
         "  -> {:.1} Melem/s",
         65536.0 / st.mean.as_secs_f64() / 1e6
     );
+    json.record("quant_int4_melem_per_s", 65536.0 / st.mean.as_secs_f64() / 1e6);
 
     let quant_artifact = artifacts_dir().join("quant_b4_256x256.hlo.txt");
     if quant_artifact.exists() {
@@ -81,6 +110,11 @@ fn main() -> anyhow::Result<()> {
             1.0 / st_p.mean.as_secs_f64(),
             1.0 / st_i.mean.as_secs_f64(),
         );
+        json.record(
+            &format!("tfc_b{batch}_plan_vs_interp_speedup"),
+            st_i.mean.as_secs_f64() / st_p.mean.as_secs_f64(),
+        );
+        json.record(&format!("tfc_b{batch}_plan_req_per_s"), 1.0 / st_p.mean.as_secs_f64());
         if batch == 1 {
             let st_c = bench("plan compile (one-time) TFC-w2a2", 3, 50, || {
                 ExecutionPlan::compile(&gt).unwrap()
@@ -121,7 +155,7 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    section("CNV-w2a2 single-image inference (interpreter vs plan)");
+    section("CNV-w2a2 single-image inference (interpreter vs generic plan vs packed plan)");
     let mut cg = cnv(2, 2, 3, false)?;
     transforms::cleanup(&mut cg)?;
     let xc = Tensor::full(vec![1, 3, 32, 32], 0.4);
@@ -135,15 +169,47 @@ fn main() -> anyhow::Result<()> {
         "  -> effective {:.2} GMAC/s",
         59.46e6 / st.mean.as_secs_f64() / 1e9
     );
+    // the PR 1 plan path: fn-pointer dispatch + slot arena, but generic
+    // kernels (per-request weight transpose, vec!-allocated scratch)
+    let generic_opts = PlanOptions { specialize: false, ..Default::default() };
+    let gplan = ExecutionPlan::compile_with(&cg, &generic_opts)?;
+    let st_gp = bench_for("generic plan (PR1 path) CNV-w2a2", Duration::from_secs(3), || {
+        gplan.run(&cin).unwrap()
+    });
+    println!("{}", st_gp.report());
+    println!(
+        "  -> effective {:.2} GMAC/s, {:.2}x over interpreter",
+        59.46e6 / st_gp.mean.as_secs_f64() / 1e9,
+        st.mean.as_secs_f64() / st_gp.mean.as_secs_f64()
+    );
+    // the PR 2 path: prepacked weights, fused epilogues, arena scratch
     let cplan = ExecutionPlan::compile(&cg)?;
-    let st_cp = bench_for("compiled plan CNV-w2a2 (59M MACs)", Duration::from_secs(3), || {
+    println!(
+        "  packed plan: {} steps, {} packed kernels, {} fused epilogues",
+        cplan.step_count(),
+        cplan.packed_count(),
+        cplan.fused_epilogue_count()
+    );
+    let st_cp = bench_for("packed plan CNV-w2a2 (59M MACs)", Duration::from_secs(3), || {
         cplan.run(&cin).unwrap()
     });
     println!("{}", st_cp.report());
     println!(
-        "  -> effective {:.2} GMAC/s, {:.2}x over interpreter",
+        "  -> effective {:.2} GMAC/s, {:.2}x over interpreter, {:.2}x over generic plan",
         59.46e6 / st_cp.mean.as_secs_f64() / 1e9,
-        st.mean.as_secs_f64() / st_cp.mean.as_secs_f64()
+        st.mean.as_secs_f64() / st_cp.mean.as_secs_f64(),
+        st_gp.mean.as_secs_f64() / st_cp.mean.as_secs_f64()
+    );
+    json.record("cnv_b1_interp_gmac_per_s", 59.46e6 / st.mean.as_secs_f64() / 1e9);
+    json.record("cnv_b1_generic_plan_gmac_per_s", 59.46e6 / st_gp.mean.as_secs_f64() / 1e9);
+    json.record("cnv_b1_packed_plan_gmac_per_s", 59.46e6 / st_cp.mean.as_secs_f64() / 1e9);
+    json.record(
+        "cnv_b1_plan_vs_interp_speedup",
+        st.mean.as_secs_f64() / st_cp.mean.as_secs_f64(),
+    );
+    json.record(
+        "cnv_b1_packed_vs_pr1_plan_speedup",
+        st_gp.mean.as_secs_f64() / st_cp.mean.as_secs_f64(),
     );
 
     section("serving throughput vs batching window (PJRT engine, 8 clients)");
@@ -183,14 +249,32 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    section("GEMM substrate");
+    section("GEMM substrate (blocked vs prepacked)");
     let a = Tensor::new(vec![256, 256], (0..65536).map(|i| (i % 13) as f32 - 6.0).collect());
     let bm = Tensor::new(vec![256, 256], (0..65536).map(|i| (i % 7) as f32 - 3.0).collect());
-    let st = bench("gemm 256x256x256", 3, 20, || a.matmul2d(&bm).unwrap());
+    let st = bench("gemm 256x256x256 (pack per call)", 3, 20, || a.matmul2d(&bm).unwrap());
     println!("{}", st.report());
     println!(
         "  -> {:.2} GFLOP/s",
         2.0 * 256f64.powi(3) / st.mean.as_secs_f64() / 1e9
     );
+    json.record("gemm_256_gflop_per_s", 2.0 * 256f64.powi(3) / st.mean.as_secs_f64() / 1e9);
+    let bp = qonnx::tensor::PackedB::pack(256, 256, bm.as_f32()?);
+    let st_pp = bench("gemm 256x256x256 (prepacked B)", 3, 20, || {
+        let mut out = vec![0f32; 256 * 256];
+        qonnx::tensor::gemm_prepacked(256, 256, &bp, a.as_f32().unwrap(), &mut out);
+        out
+    });
+    println!("{}", st_pp.report());
+    println!(
+        "  -> {:.2} GFLOP/s",
+        2.0 * 256f64.powi(3) / st_pp.mean.as_secs_f64() / 1e9
+    );
+    json.record(
+        "gemm_256_prepacked_gflop_per_s",
+        2.0 * 256f64.powi(3) / st_pp.mean.as_secs_f64() / 1e9,
+    );
+
+    json.write(concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR2.json"));
     Ok(())
 }

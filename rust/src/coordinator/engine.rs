@@ -4,10 +4,10 @@
 
 use crate::exec;
 use crate::ir::ModelGraph;
-use crate::plan::{ExecutionPlan, RunConfig};
+use crate::plan::{ExecutionPlan, RunConfig, ScratchArena};
 use crate::runtime::{ArtifactMeta, CompiledModel, PjrtRuntime};
 use crate::tensor::Tensor;
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
 
@@ -77,13 +77,29 @@ impl InferenceEngine for PjrtEngine {
     }
 }
 
+/// How the engine's flat `[n, in_dim]` request rows map onto the graph's
+/// declared input.
+#[derive(Clone, Copy)]
+enum EdgeAdapter {
+    /// `[n, in_dim]` graphs: the batch tensor binds directly.
+    Dense,
+    /// NCHW graphs (`[1, c, h, w]` input, e.g. CNV): each request row is
+    /// reshaped to one NCHW image at the boundary and run per sample
+    /// (conv-net flatten chains bake a batch of 1 into their reshape
+    /// targets, so re-batching happens outside the plan).
+    Nchw { c: usize, h: usize, w: usize },
+}
+
 /// Compiled-plan engine over a QONNX graph (any batch size).
 ///
 /// Compiles the graph **once** into an owned [`ExecutionPlan`] — weights
-/// `Arc`-resident, weight-quant subgraphs folded at compile time, slot
-/// arena sized — then serves every request (any batch) against that plan
-/// with zero per-call graph work. This is the native serving path when no
-/// PJRT artifact is present.
+/// `Arc`-resident and prepacked, weight-quant subgraphs folded at compile
+/// time, slot arena sized — then serves every request (any batch) against
+/// that plan with zero per-call graph work. A persistent [`ScratchArena`]
+/// carries kernel scratch and recycled intermediate buffers across
+/// requests. This is the native serving path when no PJRT artifact is
+/// present. Dense `[n, dim]` graphs batch directly; NCHW graphs (CNV)
+/// go through the flatten/reshape edge adapter.
 pub struct PlannedEngine {
     plan: ExecutionPlan<'static>,
     model_name: String,
@@ -91,24 +107,47 @@ pub struct PlannedEngine {
     output_name: String,
     in_dim: usize,
     out_dim: usize,
+    adapter: EdgeAdapter,
+    scratch: ScratchArena,
 }
 
 impl PlannedEngine {
-    /// Compile a `[n, in_dim] -> [n, out_dim]` graph into a resident plan.
+    /// Compile a `[n, in_dim] -> [n, out_dim]` (or NCHW-input) graph
+    /// into a resident plan.
     pub fn new(graph: &ModelGraph) -> Result<PlannedEngine> {
         ensure!(graph.inputs.len() == 1 && graph.outputs.len() == 1, "single-input/output graphs only");
         let in_shape = graph.inputs[0].shape.clone().unwrap_or_default();
         let out_shape = graph.outputs[0].shape.clone().unwrap_or_default();
-        ensure!(in_shape.len() == 2 && out_shape.len() == 2, "[n, dim] graphs only");
+        ensure!(out_shape.len() == 2, "[n, dim] graph outputs only");
+        let (in_dim, adapter) = match in_shape.as_slice() {
+            [_, dim] => (*dim, EdgeAdapter::Dense),
+            [1, c, h, w] => (c * h * w, EdgeAdapter::Nchw { c: *c, h: *h, w: *w }),
+            other => bail!("unsupported input shape {other:?} (want [n, dim] or [1, c, h, w])"),
+        };
         let plan = ExecutionPlan::compile(graph)?.into_owned();
         Ok(PlannedEngine {
             plan,
             model_name: graph.name.clone(),
             input_name: graph.inputs[0].name.clone(),
             output_name: graph.outputs[0].name.clone(),
-            in_dim: in_shape[1],
+            in_dim,
             out_dim: out_shape[1],
+            adapter,
+            scratch: ScratchArena::new(),
         })
+    }
+
+    /// Run one bound input tensor through the resident plan.
+    fn run_one(&mut self, t: &Tensor) -> Result<Tensor> {
+        // The plan's kernels are batch-agnostic; skip the declared-shape
+        // check so one plan serves every batch size (no per-batch graph
+        // clones, unlike the reference engine).
+        let cfg = RunConfig { check_input_shapes: false, record_intermediates: false };
+        let mut r =
+            self.plan.run_cfg_scratch(|n| (n == self.input_name).then_some(t), &cfg, &mut self.scratch)?;
+        r.outputs
+            .remove(&self.output_name)
+            .with_context(|| format!("plan did not produce output '{}'", self.output_name))
     }
 
     /// Build and compile a model-zoo entry by Table III name
@@ -149,14 +188,31 @@ impl InferenceEngine for PlannedEngine {
             "batch shape {shape:?} incompatible with [n, {}]",
             self.in_dim
         );
-        // The plan's kernels are batch-agnostic; skip the declared-shape
-        // check so one plan serves every batch size (no per-batch graph
-        // clones, unlike the reference engine).
-        let cfg = RunConfig { check_input_shapes: false, record_intermediates: false };
-        let mut r = self.plan.run_cfg(|n| (n == self.input_name).then_some(batch), &cfg)?;
-        r.outputs
-            .remove(&self.output_name)
-            .with_context(|| format!("plan did not produce output '{}'", self.output_name))
+        match self.adapter {
+            EdgeAdapter::Dense => self.run_one(batch),
+            EdgeAdapter::Nchw { c, h, w } => {
+                // flatten/reshape at the edge: each request row becomes one
+                // NCHW image; rows run sequentially through the same plan
+                let n = shape[0];
+                let rows = batch.as_f32()?;
+                let mut out = Vec::with_capacity(n * self.out_dim);
+                for i in 0..n {
+                    let img = Tensor::new(
+                        vec![1, c, h, w],
+                        rows[i * self.in_dim..(i + 1) * self.in_dim].to_vec(),
+                    );
+                    let y = self.run_one(&img)?;
+                    ensure!(
+                        y.numel() == self.out_dim,
+                        "plan produced {} values per sample, expected {}",
+                        y.numel(),
+                        self.out_dim
+                    );
+                    out.extend_from_slice(y.as_f32()?);
+                }
+                Ok(Tensor::new(vec![n, self.out_dim], out))
+            }
+        }
     }
 }
 
@@ -245,6 +301,48 @@ mod tests {
             let yp = planned.infer_batch(&x).unwrap();
             let yr = reference.infer_batch(&x).unwrap();
             assert_eq!(yp, yr, "batch {n}");
+        }
+    }
+
+    #[test]
+    fn planned_engine_nchw_edge_adapter_matches_per_sample_exec() {
+        // tiny conv->flatten->matmul graph with a batch-1 reshape baked in,
+        // the same topology shape as CNV's conv->FC transition
+        let mut b = crate::ir::GraphBuilder::new("tinyconv");
+        b.input("x", vec![1, 2, 4, 4]);
+        b.initializer(
+            "w",
+            Tensor::new(vec![3, 2, 3, 3], (0..54).map(|v| (v % 7) as f32 * 0.25 - 0.75).collect()),
+        );
+        b.node(
+            "Conv",
+            &["x", "w"],
+            &["c"],
+            &[
+                ("kernel_shape", crate::ir::AttrValue::Ints(vec![3, 3])),
+                ("pads", crate::ir::AttrValue::Ints(vec![1, 1, 1, 1])),
+            ],
+        );
+        b.initializer("target", Tensor::new_i64(vec![2], vec![1, 48]));
+        b.node("Reshape", &["c", "target"], &["flat"], &[]);
+        b.initializer(
+            "fcw",
+            Tensor::new(vec![48, 5], (0..240).map(|v| (v % 9) as f32 * 0.1 - 0.4).collect()),
+        );
+        b.node("MatMul", &["flat", "fcw"], &["y"], &[]);
+        b.output("y", vec![1, 5]);
+        let g = b.finish().unwrap();
+
+        let mut e = PlannedEngine::new(&g).unwrap();
+        assert_eq!(e.input_dim(), 32);
+        assert_eq!(e.output_dim(), 5);
+        let rows: Vec<f32> = (0..2 * 32).map(|i| (i % 13) as f32 / 13.0 - 0.4).collect();
+        let y = e.infer_batch(&Tensor::new(vec![2, 32], rows.clone())).unwrap();
+        assert_eq!(y.shape(), &[2, 5]);
+        for r in 0..2 {
+            let img = Tensor::new(vec![1, 2, 4, 4], rows[r * 32..(r + 1) * 32].to_vec());
+            let want = exec::execute_simple(&g, &img).unwrap();
+            assert_eq!(&y.as_f32().unwrap()[r * 5..(r + 1) * 5], want.as_f32().unwrap(), "row {r}");
         }
     }
 

@@ -61,7 +61,13 @@ pub fn execute_with(
     inputs: &BTreeMap<String, Tensor>,
     opts: &ExecOptions,
 ) -> Result<ExecResult> {
-    let popts = PlanOptions { standard_onnx_only: opts.standard_onnx_only };
+    let popts = PlanOptions {
+        standard_onnx_only: opts.standard_onnx_only,
+        // epilogue fusion hides fused nodes' intermediate names, so shape
+        // inference (and any keep_intermediates caller) compiles unfused
+        fuse_epilogues: !opts.keep_intermediates,
+        ..Default::default()
+    };
     let plan = ExecutionPlan::compile_with(graph, &popts)?;
     let cfg = RunConfig { check_input_shapes: true, record_intermediates: opts.keep_intermediates };
     let r = plan.run_cfg(|n| inputs.get(n), &cfg)?;

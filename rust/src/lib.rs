@@ -32,9 +32,25 @@
 //!        │      │                   folded at compile time, initializers
 //!        │      │                   borrowed/Arc — never cloned per call,
 //!        │      │                   last-use pass + SlotArena slot reuse.
-//!        │      └─► plan.run(..)    slot-indexed hot loop.
+//!        │      │                   Kernel tiers: folded → packed+fused
+//!        │      │                   (PackedConv/Gemm/MatMul: weights
+//!        │      │                   transposed + panel-packed once,
+//!        │      │                   conv epilogues fused into the
+//!        │      │                   scatter loop) → generic OpFn.
+//!        │      └─► plan.run(..)    slot-indexed hot loop; kernels draw
+//!        │                          im2col/GEMM/output buffers from a
+//!        │                          ScratchArena that also recycles
+//!        │                          released intermediates — kernel
+//!        │                          scratch hits a zero-alloc steady
+//!        │                          state on warm runs.
 //!        │
 //!        └─► runtime (PJRT)         AOT Pallas/HLO artifacts.
+//!
+//!   tensor::gemm / gemm_prepacked  MC/KC/NC cache-blocked GEMM over
+//!                                  PackedB panels; deterministic
+//!                                  ascending-k accumulation keeps every
+//!                                  path (naive/serial/packed/threaded)
+//!                                  bit-identical.
 //!
 //!   coordinator::Batcher ──► InferenceEngine
 //!        ├─ PjrtEngine        compiled artifact (fixed batch, pads)

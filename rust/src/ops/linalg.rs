@@ -2,20 +2,28 @@
 //! depthwise-separable MobileNet), `Gemm`, `MatMul`.
 
 use crate::ir::Node;
-use crate::tensor::{conv_out_dim, gemm, im2col_nchw, Tensor};
+use crate::tensor::{conv_out_dim, gemm, im2col_group_into, Tensor};
 use anyhow::{ensure, Result};
+use std::borrow::Cow;
 
-/// Resolve conv hyper-parameters from attributes.
-struct ConvParams {
-    kh: usize,
-    kw: usize,
-    stride_h: usize,
-    stride_w: usize,
-    pads: [usize; 4], // top, left, bottom, right
-    group: usize,
+/// Conv hyper-parameters, resolved once from the attribute map.
+///
+/// Shared between the generic [`conv_impl`] and the plan's compiled
+/// `PackedConv` kernel (which resolves them a single time at
+/// plan-compile instead of per request).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvParams {
+    pub kh: usize,
+    pub kw: usize,
+    pub stride_h: usize,
+    pub stride_w: usize,
+    pub pads: [usize; 4], // top, left, bottom, right
+    pub group: usize,
 }
 
-fn conv_params(node: &Node, w_shape: &[usize]) -> Result<ConvParams> {
+/// Resolve conv hyper-parameters from a node's attributes and the weight
+/// shape (kernel_shape defaults to the weight's trailing dims).
+pub fn conv_params(node: &Node, w_shape: &[usize]) -> Result<ConvParams> {
     let ks = node.attr_ints_or("kernel_shape", &[w_shape[2] as i64, w_shape[3] as i64]);
     ensure!(ks.len() == 2, "only 2-D conv supported, kernel_shape {ks:?}");
     let strides = node.attr_ints_or("strides", &[1, 1]);
@@ -31,6 +39,22 @@ fn conv_params(node: &Node, w_shape: &[usize]) -> Result<ConvParams> {
         pads: [pads[0] as usize, pads[1] as usize, pads[2] as usize, pads[3] as usize],
         group: node.attr_int_or("group", 1) as usize,
     })
+}
+
+/// Transpose group `g`'s weight rows (`[mg, k]` slices of a flattened
+/// `[M, C/g, kh, kw]` tensor) into a `[k, mg]` matrix — the GEMM rhs
+/// layout. Shared by the generic conv and the plan's `PackedConv` (which
+/// calls it once at compile time instead of per request); keeping one
+/// impl is what guarantees both paths multiply identical matrices.
+pub(crate) fn transpose_group_weights(ws: &[f32], g: usize, mg: usize, k: usize) -> Vec<f32> {
+    let mut wt = vec![0f32; k * mg];
+    for mi in 0..mg {
+        let wrow = &ws[(g * mg + mi) * k..(g * mg + mi + 1) * k];
+        for (ki, &wv) in wrow.iter().enumerate() {
+            wt[ki * mg + mi] = wv;
+        }
+    }
+    wt
 }
 
 /// Shared conv implementation (also used by `QLinearConv`/`ConvInteger`).
@@ -51,32 +75,22 @@ pub fn conv_impl(node: &Node, x: &Tensor, w: &Tensor, bias: Option<&Tensor>) -> 
     let mut out = vec![0f32; n * m * oh * ow];
     let ws = w.as_f32()?;
     let xs = x.as_f32()?;
+    let k = cg * p.kh * p.kw;
+    let rows = n * oh * ow;
+    let mut cols = vec![0f32; rows * k];
+    let mut prod = vec![0f32; rows * mg];
     for g in 0..p.group {
-        // slice input channels for this group into a temp NCHW tensor
-        let x_g = if p.group == 1 {
-            x.clone()
-        } else {
-            let mut data = Vec::with_capacity(n * cg * h * width);
-            for b in 0..n {
-                let base = (b * c + g * cg) * h * width;
-                data.extend_from_slice(&xs[base..base + cg * h * width]);
-            }
-            Tensor::new(vec![n, cg, h, width], data)
-        };
-        let cols = im2col_nchw(&x_g, p.kh, p.kw, p.stride_h, p.stride_w, p.pads[0], p.pads[1], p.pads[2], p.pads[3])?;
-        // weights for this group as [mg, cg*kh*kw], transposed to [k, mg]
-        let k = cg * p.kh * p.kw;
-        let mut wt = vec![0f32; k * mg];
-        for mi in 0..mg {
-            let wrow = &ws[(g * mg + mi) * k..(g * mg + mi + 1) * k];
-            for (ki, &wv) in wrow.iter().enumerate() {
-                wt[ki * mg + mi] = wv;
-            }
+        if g > 0 {
+            prod.fill(0.0); // gemm accumulates; padding zeros in cols persist
         }
+        // per-group channel window sliced inside im2col — no input clone
+        im2col_group_into(
+            xs, n, c, h, width, g * cg, cg, p.kh, p.kw, p.stride_h, p.stride_w, p.pads, &mut cols,
+        );
+        // weights for this group as [mg, cg*kh*kw], transposed to [k, mg]
+        let wt = transpose_group_weights(ws, g, mg, k);
         // cols [n*oh*ow, k] x wt [k, mg] -> [n*oh*ow, mg]
-        let rows = n * oh * ow;
-        let mut prod = vec![0f32; rows * mg];
-        gemm(rows, k, mg, cols.as_f32()?, &wt, &mut prod);
+        gemm(rows, k, mg, &cols, &wt, &mut prod);
         // scatter into NCHW out
         for b in 0..n {
             for mi in 0..mg {
@@ -116,14 +130,24 @@ pub fn gemm_op(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
     ensure!(inputs.len() >= 2, "Gemm wants >= 2 inputs");
     let alpha = node.attr_float_or("alpha", 1.0);
     let beta = node.attr_float_or("beta", 1.0);
-    let a = if node.attr_int_or("transA", 0) != 0 { inputs[0].transpose(&[1, 0])? } else { inputs[0].clone() };
-    let b = if node.attr_int_or("transB", 0) != 0 { inputs[1].transpose(&[1, 0])? } else { inputs[1].clone() };
+    // borrow untransposed operands — no clone on the common transA/B = 0 path
+    let a: Cow<Tensor> = if node.attr_int_or("transA", 0) != 0 {
+        Cow::Owned(inputs[0].transpose(&[1, 0])?)
+    } else {
+        Cow::Borrowed(inputs[0])
+    };
+    let b: Cow<Tensor> = if node.attr_int_or("transB", 0) != 0 {
+        Cow::Owned(inputs[1].transpose(&[1, 0])?)
+    } else {
+        Cow::Borrowed(inputs[1])
+    };
     let mut y = a.matmul2d(&b)?;
     if alpha != 1.0 {
         y = y.map(|v| v * alpha)?;
     }
     if let Some(c) = inputs.get(2) {
-        let scaled_c = if beta != 1.0 { c.map(|v| v * beta)? } else { (*c).clone() };
+        let scaled_c: Cow<Tensor> =
+            if beta != 1.0 { Cow::Owned(c.map(|v| v * beta)?) } else { Cow::Borrowed(c) };
         y = y.binary_op(&scaled_c, |p, q| p + q)?;
     }
     Ok(vec![y])

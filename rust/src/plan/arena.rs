@@ -1,13 +1,21 @@
-//! Physical tensor-slot arena.
+//! Arenas: the compile-time tensor-slot allocator ([`SlotArena`]) and the
+//! run-time scratch-buffer pool ([`ScratchArena`]).
 //!
 //! The plan compiler runs a register-allocation style linear scan over the
 //! frozen step schedule: every value (graph input, preloaded constant,
 //! node output) is assigned a *physical slot*, and slots whose value has
-//! passed its last use are recycled for later values. The arena is the
-//! compile-time allocator for that scan; at run time the plan materializes
-//! `capacity()` slots once and indexes them directly — no name-keyed map,
-//! and peak live tensors is bounded by the schedule's high-water mark
-//! rather than the total tensor count.
+//! passed its last use are recycled for later values. The [`SlotArena`] is
+//! the compile-time allocator for that scan; at run time the plan
+//! materializes `capacity()` slots once and indexes them directly — no
+//! name-keyed map, and peak live tensors is bounded by the schedule's
+//! high-water mark rather than the total tensor count.
+//!
+//! The [`ScratchArena`] is the run-time counterpart: compiled kernels
+//! draw their working buffers (im2col matrices, GEMM products, output
+//! tensors) from it instead of `vec!`-allocating per call, and the
+//! executor returns released intermediates' storage to it — so kernel
+//! scratch reaches a zero-allocation steady state (small bookkeeping
+//! vectors and buffers that leave as graph outputs still allocate).
 
 /// Compile-time slot allocator with a free list.
 #[derive(Debug, Default, Clone)]
@@ -48,6 +56,99 @@ impl SlotArena {
     }
 }
 
+/// Cap on pooled buffers: enough for every live scratch/output buffer of
+/// a deep model's widest region without hoarding unbounded memory.
+const SCRATCH_POOL_CAP: usize = 16;
+
+/// Run-time f32 buffer pool — the scratch side of the kernel invocation
+/// contract ([`super::CompiledKernel::invoke`] takes `&mut ScratchArena`).
+///
+/// `take(len)` hands out a zero-filled buffer of exactly `len` elements,
+/// reusing the best-fitting pooled allocation; `give` returns storage for
+/// later reuse. The executor keeps one arena per run (engines keep one
+/// across requests), so conv im2col/product buffers and recycled
+/// intermediate outputs reach a steady state with zero heap traffic.
+#[derive(Debug, Default)]
+pub struct ScratchArena {
+    free: Vec<Vec<f32>>,
+}
+
+impl ScratchArena {
+    pub fn new() -> ScratchArena {
+        ScratchArena::default()
+    }
+
+    /// A zero-filled buffer of exactly `len` elements. Prefers the pooled
+    /// buffer whose capacity fits `len` most tightly (falls back to the
+    /// largest, which then grows in place).
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        let mut buf = self.pick(len);
+        buf.clear();
+        buf.resize(len, 0.0);
+        buf
+    }
+
+    /// A buffer of exactly `len` elements whose contents are
+    /// **unspecified** (stale data from a previous use may remain). For
+    /// outputs that every-element-overwrite before reading — skips the
+    /// full zeroing memset that [`ScratchArena::take`] pays.
+    pub fn take_uninit(&mut self, len: usize) -> Vec<f32> {
+        let mut buf = self.pick(len);
+        // no clear(): an equal-length reuse is a no-op, a shorter one
+        // truncates, and only a longer one zero-fills the gap
+        buf.resize(len, 0.0);
+        buf
+    }
+
+    /// Best-fit pooled buffer for `len` (or a fresh allocation).
+    fn pick(&mut self, len: usize) -> Vec<f32> {
+        let mut best: Option<usize> = None;
+        for (i, b) in self.free.iter().enumerate() {
+            let cap = b.capacity();
+            best = match best {
+                None => Some(i),
+                Some(j) => {
+                    let bj = self.free[j].capacity();
+                    let better = if bj >= len { cap >= len && cap < bj } else { cap > bj };
+                    Some(if better { i } else { j })
+                }
+            };
+        }
+        match best {
+            Some(i) => self.free.swap_remove(i),
+            None => Vec::with_capacity(len),
+        }
+    }
+
+    /// Return a buffer's storage to the pool. When the pool is full the
+    /// smallest resident buffer is evicted (largest allocations are the
+    /// ones worth keeping).
+    pub fn give(&mut self, buf: Vec<f32>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        if self.free.len() < SCRATCH_POOL_CAP {
+            self.free.push(buf);
+            return;
+        }
+        if let Some((i, _)) = self
+            .free
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, b)| b.capacity())
+        {
+            if self.free[i].capacity() < buf.capacity() {
+                self.free[i] = buf;
+            }
+        }
+    }
+
+    /// Buffers currently pooled (diagnostics).
+    pub fn pooled(&self) -> usize {
+        self.free.len()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -74,5 +175,48 @@ mod tests {
             s = a.alloc();
         }
         assert_eq!(a.capacity(), 1);
+    }
+
+    #[test]
+    fn scratch_zero_fills_reused_buffers() {
+        let mut s = ScratchArena::new();
+        let mut b = s.take(4);
+        b.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        s.give(b);
+        assert_eq!(s.pooled(), 1);
+        let b2 = s.take(3);
+        assert_eq!(b2, vec![0.0; 3], "reused buffer must come back zeroed");
+        let b3 = s.take(8); // pool empty again; fresh allocation
+        assert_eq!(b3.len(), 8);
+    }
+
+    #[test]
+    fn scratch_best_fit_prefers_tightest_buffer() {
+        let mut s = ScratchArena::new();
+        s.give(Vec::with_capacity(100));
+        s.give(Vec::with_capacity(10));
+        let b = s.take(8);
+        assert!(b.capacity() < 100, "should pick the 10-cap buffer");
+        assert_eq!(s.pooled(), 1);
+    }
+
+    #[test]
+    fn scratch_take_uninit_sizes_without_guaranteeing_contents() {
+        let mut s = ScratchArena::new();
+        let mut b = s.take(4);
+        b.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        s.give(b);
+        // only the length is guaranteed; contents are unspecified
+        assert_eq!(s.take_uninit(4).len(), 4);
+        assert_eq!(s.take_uninit(7).len(), 7);
+    }
+
+    #[test]
+    fn scratch_pool_is_bounded() {
+        let mut s = ScratchArena::new();
+        for i in 0..2 * SCRATCH_POOL_CAP {
+            s.give(Vec::with_capacity(i + 1));
+        }
+        assert!(s.pooled() <= SCRATCH_POOL_CAP);
     }
 }

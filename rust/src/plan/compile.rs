@@ -1,19 +1,30 @@
 //! Plan compilation: topo-freeze, constant folding, identity elision,
-//! last-use analysis, and linear-scan slot assignment.
+//! kernel specialization (weight packing + epilogue fusion), last-use
+//! analysis, and linear-scan slot assignment.
 //!
-//! Compilation performs **no tensor copies**: initializers are borrowed
-//! from the source graph, and only compile-time-folded results (e.g.
-//! quantized weights) allocate new `Arc`-held tensors — once, not per run.
+//! Compilation performs **no per-run tensor copies**: initializers are
+//! borrowed from the source graph, and only compile-time-folded results
+//! (e.g. quantized weights) and packed kernel state (transposed,
+//! panel-packed weight matrices) allocate — once, not per run.
+//!
+//! Kernel specialization runs between folding and slot assignment: any
+//! `Conv`/`Gemm`/`MatMul` whose weight operands are compile-time
+//! constants is lowered to a prepacked kernel
+//! ([`super::kernel::PackedConv`] & co.), and a packed conv whose output
+//! feeds a *sole* elementwise consumer with constant parameters
+//! (BatchNorm / Quant / BipolarQuant / Relu) absorbs that consumer into
+//! its scatter-loop epilogue — the consumer's step disappears from the
+//! schedule entirely.
 
 use super::arena::SlotArena;
-use super::kernel::CompiledKernel;
+use super::kernel::{CompiledKernel, Epilogue, PackedConv, PackedGemm, PackedMatMul};
 use super::{ExecutionPlan, PlanConst, PlanInput, PlanOptions, PlanOutput, Preload, Step};
-use crate::ir::{ModelGraph, DOMAIN_FINN, DOMAIN_QONNX};
+use crate::ir::{ModelGraph, Node, DOMAIN_FINN, DOMAIN_QONNX};
 use crate::ops;
 use crate::tensor::Tensor;
 use anyhow::{bail, Context, Result};
 use std::borrow::Cow;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
 
 const UNASSIGNED: u32 = u32::MAX;
@@ -36,9 +47,23 @@ struct VInfo {
     slot: u32,
 }
 
+/// One runtime step after specialization, before value numbering.
+struct StepSpec<'g> {
+    /// Node the kernel was compiled from (error context).
+    node_idx: usize,
+    /// Node whose outputs the step produces (last fused node, or
+    /// `node_idx` when nothing was fused).
+    out_node_idx: usize,
+    kernel: CompiledKernel,
+    /// Canonical names of the step's *runtime* inputs (packed kernels
+    /// carry their constant operands internally).
+    in_names: Vec<&'g str>,
+}
+
 struct StepBuild {
     node_idx: usize,
-    f: ops::OpFn,
+    out_node_idx: usize,
+    kernel: CompiledKernel,
     in_vals: Vec<usize>,
     out_vals: Vec<usize>,
 }
@@ -46,6 +71,19 @@ struct StepBuild {
 /// Resolve an identity-elided name to its canonical runtime name.
 fn canon<'g>(alias: &BTreeMap<&'g str, &'g str>, name: &'g str) -> &'g str {
     alias.get(name).copied().unwrap_or(name)
+}
+
+/// Compile-time constant for `raw` (through identity aliases), if any.
+/// `raw`'s lifetime is deliberately independent of the returned borrow so
+/// callers can pass short-lived name slices (the epilogue-fusion closure
+/// is higher-ranked over its input lifetime).
+fn lookup<'a, 'g>(
+    consts: &'a BTreeMap<&'g str, PlanConst<'g>>,
+    alias: &'a BTreeMap<&'g str, &'g str>,
+    raw: &str,
+) -> Option<&'a Tensor> {
+    let nm: &str = alias.get(raw).copied().unwrap_or(raw);
+    consts.get(nm).map(|c| c.as_tensor())
 }
 
 /// Materialize a constant as a runtime preload value on first use.
@@ -62,6 +100,60 @@ fn intern_const<'g>(
     preloads.push((name.to_string(), cv));
     by_name.insert(name, vid);
     vid
+}
+
+/// Try to lower a conv node with constant weights into a packed kernel.
+fn spec_conv<'g>(
+    node: &'g Node,
+    consts: &BTreeMap<&'g str, PlanConst<'g>>,
+    alias: &BTreeMap<&'g str, &'g str>,
+) -> Option<(PackedConv, Vec<&'g str>)> {
+    if node.inputs.len() < 2 || node.inputs[0].is_empty() || node.inputs[1].is_empty() {
+        return None;
+    }
+    let w = lookup(consts, alias, node.inputs[1].as_str())?;
+    let bias = match node.inputs.get(2).map(String::as_str).filter(|s| !s.is_empty()) {
+        None => None,
+        // a *runtime* bias declines packing (rare; generic path handles it)
+        Some(nm) => Some(lookup(consts, alias, nm)?),
+    };
+    let pc = PackedConv::try_build(node, w, bias)?;
+    Some((pc, vec![canon(alias, node.inputs[0].as_str())]))
+}
+
+/// Try to lower a Gemm node with a constant B into a packed kernel.
+fn spec_gemm<'g>(
+    node: &'g Node,
+    consts: &BTreeMap<&'g str, PlanConst<'g>>,
+    alias: &BTreeMap<&'g str, &'g str>,
+) -> Option<(PackedGemm, Vec<&'g str>)> {
+    if node.inputs.len() < 2 || node.inputs[0].is_empty() || node.inputs[1].is_empty() {
+        return None;
+    }
+    let b = lookup(consts, alias, node.inputs[1].as_str())?;
+    let c_name = node.inputs.get(2).map(String::as_str).filter(|s| !s.is_empty());
+    let c_arg = c_name.map(|nm| lookup(consts, alias, nm));
+    let pg = PackedGemm::try_build(node, b, c_arg)?;
+    let mut ins = vec![canon(alias, node.inputs[0].as_str())];
+    if matches!(c_arg, Some(None)) {
+        // constant-B, runtime-C: C stays a runtime input
+        ins.push(canon(alias, c_name.unwrap()));
+    }
+    Some((pg, ins))
+}
+
+/// Try to lower a MatMul with a constant rhs into a packed kernel.
+fn spec_matmul<'g>(
+    node: &'g Node,
+    consts: &BTreeMap<&'g str, PlanConst<'g>>,
+    alias: &BTreeMap<&'g str, &'g str>,
+) -> Option<(PackedMatMul, Vec<&'g str>)> {
+    if node.inputs.len() != 2 || node.inputs[0].is_empty() || node.inputs[1].is_empty() {
+        return None;
+    }
+    let b = lookup(consts, alias, node.inputs[1].as_str())?;
+    let pm = PackedMatMul::try_build(b)?;
+    Some((pm, vec![canon(alias, node.inputs[0].as_str())]))
 }
 
 pub(super) fn compile<'g>(graph: &'g ModelGraph, opts: &PlanOptions) -> Result<ExecutionPlan<'g>> {
@@ -136,6 +228,113 @@ pub(super) fn compile<'g>(graph: &'g ModelGraph, opts: &PlanOptions) -> Result<E
     }
 
     // ------------------------------------------------------------------
+    // Pass 1.5 — kernel specialization and epilogue fusion. Nodes whose
+    // weight operands are constants become prepacked kernels; a packed
+    // conv absorbs a chain of sole-consumer elementwise stages.
+    // ------------------------------------------------------------------
+    // use counts over canonical names: runtime consumers + graph outputs
+    let mut uses: BTreeMap<&'g str, usize> = BTreeMap::new();
+    let mut users: BTreeMap<&'g str, Vec<usize>> = BTreeMap::new();
+    for (ki, &(ni, _)) in kept.iter().enumerate() {
+        for raw in graph.nodes[ni].present_inputs() {
+            let nm = canon(&alias, raw);
+            *uses.entry(nm).or_insert(0) += 1;
+            users.entry(nm).or_default().push(ki);
+        }
+    }
+    let out_set: BTreeSet<&'g str> =
+        graph.outputs.iter().map(|vi| canon(&alias, vi.name.as_str())).collect();
+
+    let mut consumed = vec![false; kept.len()];
+    let mut specs: Vec<StepSpec<'g>> = Vec::with_capacity(kept.len());
+    let mut packed_count = 0usize;
+    let mut fused_count = 0usize;
+    for (ki, &(node_idx, f)) in kept.iter().enumerate() {
+        if consumed[ki] {
+            continue;
+        }
+        let node = &graph.nodes[node_idx];
+        if opts.specialize {
+            if node.op_type == "Conv" {
+                if let Some((mut pc, in_names)) = spec_conv(node, &consts, &alias) {
+                    // fuse sole-consumer elementwise chains into the scatter loop
+                    let mut out_node_idx = node_idx;
+                    while opts.fuse_epilogues {
+                        let tail = &graph.nodes[out_node_idx];
+                        if tail.outputs.len() != 1 {
+                            break;
+                        }
+                        let out_nm = canon(&alias, tail.outputs[0].as_str());
+                        if out_set.contains(out_nm) || uses.get(out_nm).copied().unwrap_or(0) != 1 {
+                            break;
+                        }
+                        let uk = match users.get(out_nm) {
+                            Some(v) if v.len() == 1 => v[0],
+                            _ => break,
+                        };
+                        if consumed[uk] || uk <= ki {
+                            break;
+                        }
+                        let unode = &graph.nodes[kept[uk].0];
+                        // the produced value must be the consumer's data input
+                        if unode.inputs.first().map(|s| canon(&alias, s.as_str())) != Some(out_nm) {
+                            break;
+                        }
+                        let ep = match Epilogue::try_build(
+                            unode,
+                            |nm| lookup(&consts, &alias, nm),
+                            pc.out_channels(),
+                        ) {
+                            Some(e) => e,
+                            None => break,
+                        };
+                        pc.push_epilogue(ep);
+                        consumed[uk] = true;
+                        fused_count += 1;
+                        out_node_idx = kept[uk].0;
+                    }
+                    packed_count += 1;
+                    specs.push(StepSpec {
+                        node_idx,
+                        out_node_idx,
+                        kernel: CompiledKernel::Conv(Arc::new(pc)),
+                        in_names,
+                    });
+                    continue;
+                }
+            } else if node.op_type == "Gemm" {
+                if let Some((pg, in_names)) = spec_gemm(node, &consts, &alias) {
+                    packed_count += 1;
+                    specs.push(StepSpec {
+                        node_idx,
+                        out_node_idx: node_idx,
+                        kernel: CompiledKernel::Gemm(Arc::new(pg)),
+                        in_names,
+                    });
+                    continue;
+                }
+            } else if node.op_type == "MatMul" {
+                if let Some((pm, in_names)) = spec_matmul(node, &consts, &alias) {
+                    packed_count += 1;
+                    specs.push(StepSpec {
+                        node_idx,
+                        out_node_idx: node_idx,
+                        kernel: CompiledKernel::MatMul(Arc::new(pm)),
+                        in_names,
+                    });
+                    continue;
+                }
+            }
+        }
+        specs.push(StepSpec {
+            node_idx,
+            out_node_idx: node_idx,
+            kernel: CompiledKernel::Op(f),
+            in_names: node.present_inputs().map(|n| canon(&alias, n)).collect(),
+        });
+    }
+
+    // ------------------------------------------------------------------
     // Pass 2 — build the runtime value graph: resolve every name to a
     // dense value id, recording defs and last uses.
     // ------------------------------------------------------------------
@@ -159,13 +358,12 @@ pub(super) fn compile<'g>(graph: &'g ModelGraph, opts: &PlanOptions) -> Result<E
         input_records.push(PlanInput { name: vi.name.clone(), shape: vi.shape.clone(), slot: None });
     }
 
-    let mut steps_build: Vec<StepBuild> = Vec::with_capacity(kept.len());
-    for (node_idx, f) in kept {
+    let mut steps_build: Vec<StepBuild> = Vec::with_capacity(specs.len());
+    for spec in specs {
         let step_idx = steps_build.len();
-        let node = &graph.nodes[node_idx];
-        let mut in_vals = Vec::with_capacity(node.inputs.len());
-        for raw in node.present_inputs() {
-            let name = canon(&alias, raw);
+        let node = &graph.nodes[spec.node_idx];
+        let mut in_vals = Vec::with_capacity(spec.in_names.len());
+        for name in spec.in_names {
             let vid = match by_name.get(name) {
                 Some(&v) => v,
                 None => match consts.get(name).cloned() {
@@ -177,20 +375,27 @@ pub(super) fn compile<'g>(graph: &'g ModelGraph, opts: &PlanOptions) -> Result<E
                         &mut preload_build,
                         &mut by_name,
                     ),
-                    None => bail!("node '{}' input '{raw}' not computed", node.name),
+                    None => bail!("node '{}' input '{name}' not computed", node.name),
                 },
             };
             values[vid].last_use = Some(step_idx);
             in_vals.push(vid);
         }
-        let mut out_vals = Vec::with_capacity(node.outputs.len());
-        for out in &node.outputs {
+        let out_node = &graph.nodes[spec.out_node_idx];
+        let mut out_vals = Vec::with_capacity(out_node.outputs.len());
+        for out in &out_node.outputs {
             let vid = values.len();
             values.push(VInfo { def: Def::Step, last_use: None, persist: false, slot: UNASSIGNED });
             by_name.insert(out.as_str(), vid);
             out_vals.push(vid);
         }
-        steps_build.push(StepBuild { node_idx, f, in_vals, out_vals });
+        steps_build.push(StepBuild {
+            node_idx: spec.node_idx,
+            out_node_idx: spec.out_node_idx,
+            kernel: spec.kernel,
+            in_vals,
+            out_vals,
+        });
     }
 
     let mut output_build: Vec<(String, usize)> = Vec::with_capacity(graph.outputs.len());
@@ -275,7 +480,8 @@ pub(super) fn compile<'g>(graph: &'g ModelGraph, opts: &PlanOptions) -> Result<E
     for (s, sb) in steps_build.into_iter().enumerate() {
         steps.push(Step {
             node_idx: sb.node_idx,
-            kernel: CompiledKernel::Op(sb.f),
+            out_node_idx: sb.out_node_idx,
+            kernel: sb.kernel,
             inputs: sb.in_vals.iter().map(|&v| values[v].slot).collect(),
             outputs: sb
                 .out_vals
@@ -311,6 +517,8 @@ pub(super) fn compile<'g>(graph: &'g ModelGraph, opts: &PlanOptions) -> Result<E
         node_count: graph.nodes.len(),
         folded_count,
         elided_count,
+        packed_count,
+        fused_count,
     })
 }
 
@@ -318,6 +526,7 @@ pub(super) fn compile<'g>(graph: &'g ModelGraph, opts: &PlanOptions) -> Result<E
 mod tests {
     use super::super::ExecutionPlan;
     use crate::ir::GraphBuilder;
+    use crate::tensor::Tensor;
 
     #[test]
     fn standard_only_rejects_at_compile_time() {
@@ -326,7 +535,7 @@ mod tests {
         b.quant("x", "y", 0.5, 0.0, 4.0, false, false, "ROUND");
         b.output("y", vec![1, 4]);
         let g = b.finish().unwrap();
-        let opts = super::PlanOptions { standard_onnx_only: true };
+        let opts = super::PlanOptions { standard_onnx_only: true, ..Default::default() };
         let err = ExecutionPlan::compile_with(&g, &opts).unwrap_err();
         assert!(err.to_string().contains("not a standard ONNX op"));
     }
@@ -351,5 +560,71 @@ mod tests {
         g.nodes.push(crate::ir::Node::new("Relu", &["nope"], &["y"]).with_name("r"));
         let err = ExecutionPlan::compile(&g).unwrap_err().to_string();
         assert!(err.contains("input 'nope' not computed"), "{err}");
+    }
+
+    #[test]
+    fn constant_weight_matmul_is_packed() {
+        let mut b = GraphBuilder::new("pack");
+        b.input("x", vec![1, 2]);
+        b.initializer("w", Tensor::new(vec![2, 3], vec![1., 0., 2., 0., 1., 3.]));
+        b.node("MatMul", &["x", "w"], &["y"], &[]);
+        b.output("y", vec![1, 3]);
+        let g = b.finish().unwrap();
+        let plan = ExecutionPlan::compile(&g).unwrap();
+        assert_eq!(plan.packed_count(), 1, "{}", plan.summary());
+        // the weight never becomes a runtime preload — it lives packed
+        assert_eq!(plan.preload_count(), 0, "{}", plan.summary());
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("x".to_string(), Tensor::new(vec![1, 2], vec![2.0, -1.0]));
+        let out = plan.run(&m).unwrap();
+        assert_eq!(out["y"].as_f32().unwrap(), &[2.0, -1.0, 1.0]);
+    }
+
+    #[test]
+    fn conv_quant_chain_fuses_into_one_step() {
+        let mut b = GraphBuilder::new("fuse");
+        b.input("x", vec![1, 1, 4, 4]);
+        b.initializer("w", Tensor::new(vec![2, 1, 1, 1], vec![1.0, -1.0]));
+        b.node("Conv", &["x", "w"], &["c"], &[("kernel_shape", vec![1i64, 1].into())]);
+        b.quant("c", "q", 0.5, 0.0, 4.0, true, false, "ROUND");
+        b.node("Relu", &["q"], &["y"], &[]);
+        b.output("y", vec![1, 2, 4, 4]);
+        let g = b.finish().unwrap();
+        let plan = ExecutionPlan::compile(&g).unwrap();
+        // Conv + Quant + Relu collapse to one packed step
+        assert_eq!(plan.step_count(), 1, "{}", plan.summary());
+        assert_eq!(plan.fused_epilogue_count(), 2);
+        let mut m = std::collections::BTreeMap::new();
+        m.insert(
+            "x".to_string(),
+            Tensor::new(vec![1, 1, 4, 4], (0..16).map(|v| v as f32 * 0.3 - 2.0).collect()),
+        );
+        let fused = plan.run(&m).unwrap();
+        let unfused_opts = super::PlanOptions { specialize: false, ..Default::default() };
+        let unfused = ExecutionPlan::compile_with(&g, &unfused_opts).unwrap().run(&m).unwrap();
+        assert_eq!(fused, unfused, "fusion must be bit-exact");
+        let interp = crate::exec::interpret(&g, &m).unwrap();
+        assert_eq!(interp.outputs, fused);
+    }
+
+    #[test]
+    fn fusion_declines_shared_or_output_values() {
+        // conv output is also a graph output: the quant cannot be absorbed
+        let mut b = GraphBuilder::new("nofuse");
+        b.input("x", vec![1, 1, 2, 2]);
+        b.initializer("w", Tensor::new(vec![1, 1, 1, 1], vec![2.0]));
+        b.node("Conv", &["x", "w"], &["c"], &[("kernel_shape", vec![1i64, 1].into())]);
+        b.quant("c", "q", 0.5, 0.0, 4.0, true, false, "ROUND");
+        b.output("c", vec![1, 1, 2, 2]);
+        b.output("q", vec![1, 1, 2, 2]);
+        let g = b.finish().unwrap();
+        let plan = ExecutionPlan::compile(&g).unwrap();
+        assert_eq!(plan.fused_epilogue_count(), 0, "{}", plan.summary());
+        assert_eq!(plan.step_count(), 2);
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("x".to_string(), Tensor::new(vec![1, 1, 2, 2], vec![0.1, 0.6, -0.4, 2.0]));
+        let got = plan.run(&m).unwrap();
+        let interp = crate::exec::interpret(&g, &m).unwrap();
+        assert_eq!(interp.outputs, got);
     }
 }

@@ -1,4 +1,5 @@
-//! Compiled per-step kernels.
+//! Compiled per-step kernels: generic op dispatch plus **specialized
+//! prepacked kernels** built at plan-compile time.
 //!
 //! At plan-compile time every node's `op_type` is resolved exactly once
 //! through the op registry ([`crate::ops::kernel_for`]) and frozen into a
@@ -8,26 +9,480 @@
 //! nodes (and any node whose inputs are all compile-time constants) are
 //! folded into preloaded slots, and single-input `Identity` nodes are
 //! elided by slot aliasing.
+//!
+//! Above the generic [`CompiledKernel::Op`] tier sit three *stateful*
+//! kernels, built whenever a node's weight inputs are compile-time
+//! constants:
+//!
+//! * [`PackedConv`] — conv hyper-params resolved once, per-group weights
+//!   transposed and panel-packed once into a [`PackedB`], bias resolved
+//!   once, and an optional fused elementwise epilogue (BatchNorm /
+//!   Quant / BipolarQuant / Relu) applied inside the GEMM scatter loop
+//!   instead of as separate full-tensor passes.
+//! * [`PackedGemm`] — `transB` applied at pack time, `beta` folded into a
+//!   pre-scaled bias, `alpha` applied in the accumulator write-back.
+//! * [`PackedMatMul`] — constant rhs packed once; batched lhs handled
+//!   without the reshape copy of the generic path.
+//!
+//! All three draw their working buffers (im2col matrices, GEMM products,
+//! outputs) from the run's [`ScratchArena`] rather than allocating, and
+//! all three are **bit-exact** with the generic ops: the packed GEMM
+//! accumulates in the same ascending-k order (see
+//! [`crate::tensor::gemm`]'s determinism contract) and every epilogue
+//! stage replays the generic op's per-element arithmetic verbatim.
 
+use super::arena::ScratchArena;
 use crate::ir::Node;
+use crate::ops::linalg::{conv_params, ConvParams};
+use crate::ops::quant::{quant_bounds, RoundingMode};
 use crate::ops::OpFn;
-use crate::tensor::Tensor;
-use anyhow::Result;
+use crate::tensor::{conv_out_dim, gemm_prepacked, im2col_group_into, PackedB, Tensor};
+use anyhow::{ensure, Result};
+use std::borrow::Cow;
+use std::sync::Arc;
 
 /// Resolved dispatch for one plan step.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub enum CompiledKernel {
     /// Registry operator function, resolved at compile time.
     Op(OpFn),
+    /// Conv with constant weights: packed once, arena-fed, fusable.
+    Conv(Arc<PackedConv>),
+    /// Gemm with a constant B operand.
+    Gemm(Arc<PackedGemm>),
+    /// MatMul with a constant rhs.
+    MatMul(Arc<PackedMatMul>),
 }
 
 impl CompiledKernel {
-    /// Run the kernel against resolved input tensors.
+    /// Run the kernel against resolved input tensors, drawing scratch
+    /// buffers from `scratch`. `inputs` holds only the step's *runtime*
+    /// inputs — packed kernels carry their constants internally.
     #[inline]
-    pub fn invoke(&self, node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    pub fn invoke(
+        &self,
+        node: &Node,
+        inputs: &[&Tensor],
+        scratch: &mut ScratchArena,
+    ) -> Result<Vec<Tensor>> {
         match self {
             CompiledKernel::Op(f) => f(node, inputs),
+            CompiledKernel::Conv(pc) => {
+                ensure!(!inputs.is_empty(), "PackedConv wants the data tensor");
+                Ok(vec![pc.run(inputs[0], scratch)?])
+            }
+            CompiledKernel::Gemm(pg) => Ok(vec![pg.run(inputs, scratch)?]),
+            CompiledKernel::MatMul(pm) => {
+                ensure!(!inputs.is_empty(), "PackedMatMul wants the lhs tensor");
+                Ok(vec![pm.run(inputs[0], scratch)?])
+            }
         }
+    }
+
+    /// Short display tag for schedule listings.
+    pub fn tag(&self, node: &Node) -> String {
+        match self {
+            CompiledKernel::Op(_) => node.op_type.clone(),
+            CompiledKernel::Conv(pc) if pc.epilogue.is_empty() => "PackedConv".to_string(),
+            CompiledKernel::Conv(pc) => format!("PackedConv+{}ep", pc.epilogue.len()),
+            CompiledKernel::Gemm(_) => "PackedGemm".to_string(),
+            CompiledKernel::MatMul(_) => "PackedMatMul".to_string(),
+        }
+    }
+
+    /// Whether this is a specialized (non-generic) kernel.
+    pub fn is_packed(&self) -> bool {
+        !matches!(self, CompiledKernel::Op(_))
+    }
+}
+
+/// A fused elementwise stage applied in the conv scatter loop.
+///
+/// Each variant replays the corresponding generic op's per-element f32
+/// arithmetic exactly (same operation order, same f64 widening), so a
+/// fused plan is bit-identical to the unfused one.
+#[derive(Debug, Clone)]
+pub(crate) enum Epilogue {
+    /// `Relu`: `v.max(0.0)`.
+    Relu,
+    /// Scalar-parameter `Quant` (the [`crate::ops::quant::quant_op`]
+    /// fast path, hoisted to compile time).
+    Quant { inv_s: f64, s: f64, z: f64, qmin: f64, qmax: f64, mode: RoundingMode },
+    /// Scalar-scale `BipolarQuant`.
+    Bipolar { s: f64 },
+    /// `BatchNormalization` with per-channel constants; `denom` is
+    /// `sqrt(var + eps)` precomputed per channel.
+    BatchNorm { mean: Vec<f32>, denom: Vec<f32>, scale: Vec<f32>, bias: Vec<f32> },
+}
+
+impl Epilogue {
+    #[inline]
+    fn apply(&self, v: f32, oc: usize) -> f32 {
+        match self {
+            Epilogue::Relu => v.max(0.0),
+            Epilogue::Quant { inv_s, s, z, qmin, qmax, mode } => {
+                let q = mode.apply(f64::from(v) * inv_s + z).clamp(*qmin, *qmax);
+                ((q - z) * s) as f32
+            }
+            Epilogue::Bipolar { s } => {
+                let q = if v >= 0.0 { 1.0 } else { -1.0 };
+                (q * s) as f32
+            }
+            Epilogue::BatchNorm { mean, denom, scale, bias } => {
+                ((v - mean[oc]) / denom[oc]) * scale[oc] + bias[oc]
+            }
+        }
+    }
+
+    /// Try to compile `node` into an epilogue stage. `resolve` maps an
+    /// input name to its compile-time constant (if any); `out_channels`
+    /// is the producer's channel count (conv `M`). Returns `None` when
+    /// the node is not a fusable elementwise op, when its parameters are
+    /// not constant (or not the supported scalar/per-channel layout), or
+    /// when parameter validation would fail — in that last case fusion is
+    /// declined so the generic kernel reports the error with full parity.
+    pub(crate) fn try_build<'t>(
+        node: &Node,
+        resolve: impl Fn(&str) -> Option<&'t Tensor>,
+        out_channels: usize,
+    ) -> Option<Epilogue> {
+        if node.outputs.len() != 1 {
+            return None;
+        }
+        let const_in = |i: usize| -> Option<&'t Tensor> {
+            let name = node.inputs.get(i)?;
+            if name.is_empty() {
+                return None;
+            }
+            resolve(name)
+        };
+        match node.op_type.as_str() {
+            "Relu" if node.present_inputs().count() == 1 => Some(Epilogue::Relu),
+            "Quant" if node.inputs.len() == 4 => {
+                let (scale, zp, bw) = (const_in(1)?, const_in(2)?, const_in(3)?);
+                // scalar params only — and rank <= 1 so broadcasting cannot
+                // change the generic op's output rank
+                if [scale, zp, bw].iter().any(|t| t.numel() != 1 || t.rank() > 1) {
+                    return None;
+                }
+                let signed = node.attr_int_or("signed", 1) != 0;
+                let narrow = node.attr_int_or("narrow", 0) != 0;
+                let mode = RoundingMode::from_str(&node.attr_str_or("rounding_mode", "ROUND"))
+                    .ok()?;
+                let s = scale.to_f64_vec()[0];
+                let z = zp.to_f64_vec()[0];
+                let b = bw.to_f64_vec()[0];
+                // same validations as quant_op; invalid params run generic
+                if s <= 0.0 || !(b >= 2.0 || (!signed && b >= 1.0)) {
+                    return None;
+                }
+                let (qmin, qmax) = quant_bounds(signed, narrow, b);
+                Some(Epilogue::Quant { inv_s: 1.0 / s, s, z, qmin, qmax, mode })
+            }
+            "BipolarQuant" if node.inputs.len() == 2 => {
+                let scale = const_in(1)?;
+                if scale.numel() != 1 || scale.rank() > 1 {
+                    return None;
+                }
+                let s = scale.to_f64_vec()[0];
+                if s <= 0.0 {
+                    return None;
+                }
+                Some(Epilogue::Bipolar { s })
+            }
+            "BatchNormalization" if node.inputs.len() == 5 => {
+                if node.attr_str_or("data_layout", "NCHW") == "NHWC" {
+                    return None;
+                }
+                let eps = node.attr_float_or("epsilon", 1e-5);
+                let mut chans: Vec<Vec<f32>> = Vec::with_capacity(4);
+                for i in 1..5 {
+                    let t = const_in(i)?;
+                    if t.numel() != out_channels {
+                        return None;
+                    }
+                    chans.push(t.as_f32().ok()?.to_vec());
+                }
+                let var = chans.pop().unwrap();
+                let mean = chans.pop().unwrap();
+                let bias = chans.pop().unwrap();
+                let scale = chans.pop().unwrap();
+                let denom: Vec<f32> = var.iter().map(|&v| (v + eps).sqrt()).collect();
+                Some(Epilogue::BatchNorm { mean, denom, scale, bias })
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Conv with compile-time-constant weights (and bias): hyper-params
+/// resolved once, per-group weight matrices transposed to `[k, mg]` and
+/// panel-packed once, scratch drawn from the arena, optional fused
+/// elementwise epilogue applied in the scatter loop.
+#[derive(Debug)]
+pub struct PackedConv {
+    p: ConvParams,
+    m: usize,
+    cg: usize,
+    mg: usize,
+    k: usize,
+    /// One packed `[k, mg]` weight matrix per group.
+    weights: Vec<PackedB>,
+    /// Bias resolved to a dense `[m]` vector.
+    bias: Option<Vec<f32>>,
+    epilogue: Vec<Epilogue>,
+}
+
+impl PackedConv {
+    /// Build from a conv node whose weight (and bias, when present) are
+    /// compile-time constants. Returns `None` whenever anything about the
+    /// node is unsupported — the caller then keeps the generic kernel,
+    /// which either handles the case (NHWC wrapper) or reports the same
+    /// error the interpreter would.
+    pub(crate) fn try_build(node: &Node, w: &Tensor, bias: Option<&Tensor>) -> Option<PackedConv> {
+        if node.attr_str_or("data_layout", "NCHW") != "NCHW" {
+            return None; // channels-last wrapper runs generic
+        }
+        if w.rank() != 4 {
+            return None;
+        }
+        let p = conv_params(node, w.shape()).ok()?;
+        let ws = w.as_f32().ok()?;
+        let m = w.shape()[0];
+        let cg = w.shape()[1];
+        if p.group == 0 || m % p.group != 0 {
+            return None;
+        }
+        let mg = m / p.group;
+        let k = cg * p.kh * p.kw;
+        let bias = match bias {
+            None => None,
+            Some(b) => {
+                if b.numel() != m {
+                    return None; // generic path reports the mismatch
+                }
+                Some(b.as_f32().ok()?.to_vec())
+            }
+        };
+        // per-group [mg, k] weight rows transposed to [k, mg] (the same
+        // shared helper the generic conv uses per request), packed once
+        let mut weights = Vec::with_capacity(p.group);
+        for g in 0..p.group {
+            let wt = crate::ops::linalg::transpose_group_weights(ws, g, mg, k);
+            weights.push(PackedB::pack(k, mg, &wt));
+        }
+        Some(PackedConv { p, m, cg, mg, k, weights, bias, epilogue: Vec::new() })
+    }
+
+    /// Append a fused elementwise stage (compile-time fusion pass).
+    pub(crate) fn push_epilogue(&mut self, e: Epilogue) {
+        self.epilogue.push(e);
+    }
+
+    /// Output channels (`M`) — the channel axis the epilogue indexes.
+    pub(crate) fn out_channels(&self) -> usize {
+        self.m
+    }
+
+    /// Number of fused epilogue stages.
+    pub fn epilogue_len(&self) -> usize {
+        self.epilogue.len()
+    }
+
+    /// Execute on an NCHW input of any batch size.
+    pub fn run(&self, x: &Tensor, scratch: &mut ScratchArena) -> Result<Tensor> {
+        ensure!(x.rank() == 4, "Conv input must be NCHW, got {:?}", x.shape());
+        let (n, c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+        ensure!(
+            c == self.cg * self.p.group,
+            "channel mismatch: x has {c}, w wants {} x group {}",
+            self.cg,
+            self.p.group
+        );
+        let xs = x.as_f32()?;
+        let p = &self.p;
+        let oh = conv_out_dim(h, p.kh, p.stride_h, p.pads[0], p.pads[2]);
+        let ow = conv_out_dim(w, p.kw, p.stride_w, p.pads[1], p.pads[3]);
+        let rows = n * oh * ow;
+        // scatter overwrites every out element — skip the zeroing memset;
+        // cols needs zeros (padding) and prod is a GEMM accumulator
+        let mut out = scratch.take_uninit(n * self.m * oh * ow);
+        let mut cols = scratch.take(rows * self.k);
+        let mut prod = scratch.take(rows * self.mg);
+        for g in 0..p.group {
+            if g > 0 {
+                prod.fill(0.0); // gemm accumulates; cols' padding zeros persist
+            }
+            im2col_group_into(
+                xs, n, c, h, w, g * self.cg, self.cg, p.kh, p.kw, p.stride_h, p.stride_w,
+                p.pads, &mut cols,
+            );
+            gemm_prepacked(rows, self.k, &self.weights[g], &cols, &mut prod);
+            // scatter [rows, mg] -> NCHW, fusing bias + epilogue per element
+            for b in 0..n {
+                for mi in 0..self.mg {
+                    let oc = g * self.mg + mi;
+                    let bias_v = self.bias.as_ref().map(|bv| bv[oc]);
+                    let dst = (b * self.m + oc) * oh * ow;
+                    let src0 = b * oh * ow;
+                    for pix in 0..oh * ow {
+                        let mut v = prod[(src0 + pix) * self.mg + mi];
+                        if let Some(bv) = bias_v {
+                            v += bv;
+                        }
+                        for e in &self.epilogue {
+                            v = e.apply(v, oc);
+                        }
+                        out[dst + pix] = v;
+                    }
+                }
+            }
+        }
+        scratch.give(cols);
+        scratch.give(prod);
+        Ok(Tensor::new(vec![n, self.m, oh, ow], out))
+    }
+}
+
+/// How a Gemm node's `C` input is bound.
+#[derive(Debug)]
+enum GemmBias {
+    /// No C input.
+    None,
+    /// Constant C, pre-scaled by `beta` at compile time.
+    Folded(Tensor),
+    /// Runtime C: arrives as the step's second runtime input.
+    Runtime,
+}
+
+/// `Gemm` with a compile-time-constant `B`: `transB` applied at pack
+/// time, `beta` folded into the pre-scaled bias, `alpha` applied in the
+/// write-back (after the full accumulation, matching the generic op's
+/// rounding order exactly).
+#[derive(Debug)]
+pub struct PackedGemm {
+    k: usize,
+    n: usize,
+    bp: PackedB,
+    alpha: f32,
+    beta: f32,
+    trans_a: bool,
+    bias: GemmBias,
+}
+
+impl PackedGemm {
+    /// Build from a Gemm node with constant `B` (and optionally constant
+    /// `C`). `c` is `None` when the node has no C input, `Some(None)`
+    /// when C exists but is a runtime value, `Some(Some(t))` when C is
+    /// constant.
+    pub(crate) fn try_build(
+        node: &Node,
+        b: &Tensor,
+        c: Option<Option<&Tensor>>,
+    ) -> Option<PackedGemm> {
+        let alpha = node.attr_float_or("alpha", 1.0);
+        let beta = node.attr_float_or("beta", 1.0);
+        let trans_a = node.attr_int_or("transA", 0) != 0;
+        let trans_b = node.attr_int_or("transB", 0) != 0;
+        let bt: Cow<Tensor> =
+            if trans_b { Cow::Owned(b.transpose(&[1, 0]).ok()?) } else { Cow::Borrowed(b) };
+        if bt.rank() != 2 {
+            return None;
+        }
+        let (k, n) = (bt.shape()[0], bt.shape()[1]);
+        let bp = PackedB::pack(k, n, bt.as_f32().ok()?);
+        let bias = match c {
+            None => GemmBias::None,
+            Some(None) => GemmBias::Runtime,
+            Some(Some(ct)) => {
+                let pre = if beta != 1.0 { ct.map(|v| v * beta).ok()? } else { ct.clone() };
+                GemmBias::Folded(pre)
+            }
+        };
+        Some(PackedGemm { k, n, bp, alpha, beta, trans_a, bias })
+    }
+
+    /// `inputs[0]` is A; `inputs[1]` (when present) is a runtime C.
+    pub fn run(&self, inputs: &[&Tensor], scratch: &mut ScratchArena) -> Result<Tensor> {
+        ensure!(!inputs.is_empty(), "PackedGemm wants the A tensor");
+        let a: Cow<Tensor> = if self.trans_a {
+            Cow::Owned(inputs[0].transpose(&[1, 0])?)
+        } else {
+            Cow::Borrowed(inputs[0])
+        };
+        ensure!(a.rank() == 2, "matmul2d wants rank-2");
+        let (m, ak) = (a.shape()[0], a.shape()[1]);
+        ensure!(ak == self.k, "matmul2d inner dim mismatch {ak} vs {}", self.k);
+        let mut out = scratch.take(m * self.n);
+        gemm_prepacked(m, self.k, &self.bp, a.as_f32()?, &mut out);
+        if self.alpha != 1.0 {
+            for v in out.iter_mut() {
+                *v *= self.alpha;
+            }
+        }
+        let y = Tensor::new(vec![m, self.n], out);
+        let summed = match &self.bias {
+            GemmBias::None => return Ok(y),
+            GemmBias::Folded(c) => y.binary_op(c, |p, q| p + q)?,
+            GemmBias::Runtime => {
+                ensure!(inputs.len() >= 2, "PackedGemm wants the runtime C tensor");
+                let c = inputs[1];
+                let scaled: Cow<Tensor> = if self.beta != 1.0 {
+                    Cow::Owned(c.map(|v| v * self.beta)?)
+                } else {
+                    Cow::Borrowed(c)
+                };
+                y.binary_op(&scaled, |p, q| p + q)?
+            }
+        };
+        if let Some(buf) = y.into_f32_vec() {
+            scratch.give(buf); // pre-bias accumulator goes back to the pool
+        }
+        Ok(summed)
+    }
+}
+
+/// `MatMul` with a compile-time-constant rank-2 rhs, packed once.
+/// Batched (>2-D) lhs is flattened by view — no reshape copy.
+#[derive(Debug)]
+pub struct PackedMatMul {
+    k: usize,
+    n: usize,
+    bp: PackedB,
+}
+
+impl PackedMatMul {
+    pub(crate) fn try_build(b: &Tensor) -> Option<PackedMatMul> {
+        if b.rank() != 2 {
+            return None;
+        }
+        let (k, n) = (b.shape()[0], b.shape()[1]);
+        Some(PackedMatMul { k, n, bp: PackedB::pack(k, n, b.as_f32().ok()?) })
+    }
+
+    pub fn run(&self, a: &Tensor, scratch: &mut ScratchArena) -> Result<Tensor> {
+        if a.rank() == 2 {
+            let (m, ak) = (a.shape()[0], a.shape()[1]);
+            ensure!(ak == self.k, "matmul2d inner dim mismatch {ak} vs {}", self.k);
+            let mut out = scratch.take(m * self.n);
+            gemm_prepacked(m, self.k, &self.bp, a.as_f32()?, &mut out);
+            return Ok(Tensor::new(vec![m, self.n], out));
+        }
+        // batched lhs [batch.., m, k] over the shared 2-D rhs
+        ensure!(
+            a.rank() > 2,
+            "unsupported MatMul ranks {:?} x {:?}",
+            a.shape(),
+            [self.k, self.n]
+        );
+        let ak = *a.shape().last().unwrap();
+        ensure!(ak == self.k, "matmul2d inner dim mismatch {ak} vs {}", self.k);
+        let rows = a.numel() / ak;
+        let mut out = scratch.take(rows * self.n);
+        gemm_prepacked(rows, self.k, &self.bp, a.as_f32()?, &mut out);
+        let mut out_shape = a.shape().to_vec();
+        *out_shape.last_mut().unwrap() = self.n;
+        Ok(Tensor::new(out_shape, out))
     }
 }
 
@@ -41,7 +496,108 @@ mod tests {
         let node = Node::new("Relu", &["x"], &["y"]);
         let k = CompiledKernel::Op(ops::kernel_for(&node).unwrap());
         let x = Tensor::new(vec![3], vec![-1.0, 0.0, 2.0]);
-        let out = k.invoke(&node, &[&x]).unwrap();
+        let mut scratch = ScratchArena::new();
+        let out = k.invoke(&node, &[&x], &mut scratch).unwrap();
         assert_eq!(out[0].as_f32().unwrap(), &[0.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn packed_conv_matches_generic_op() {
+        let node = Node::new("Conv", &["x", "w", "b"], &["y"])
+            .with_attr("kernel_shape", vec![3i64, 3])
+            .with_attr("pads", vec![1i64, 1, 1, 1]);
+        let x = Tensor::new(vec![2, 3, 5, 5], (0..150).map(|v| (v % 11) as f32 - 5.0).collect());
+        let w = Tensor::new(vec![4, 3, 3, 3], (0..108).map(|v| (v % 7) as f32 - 3.0).collect());
+        let b = Tensor::new(vec![4], vec![0.5, -1.0, 2.0, 0.0]);
+        let want = ops::linalg::conv(&node, &[&x, &w, &b]).unwrap();
+        let pc = PackedConv::try_build(&node, &w, Some(&b)).unwrap();
+        let mut scratch = ScratchArena::new();
+        let got = pc.run(&x, &mut scratch).unwrap();
+        assert_eq!(got, want[0]);
+        // second run reuses pooled scratch and still matches
+        assert_eq!(pc.run(&x, &mut scratch).unwrap(), want[0]);
+    }
+
+    #[test]
+    fn packed_grouped_conv_matches_generic_op() {
+        let node = Node::new("Conv", &["x", "w"], &["y"])
+            .with_attr("kernel_shape", vec![2i64, 2])
+            .with_attr("group", 2i64);
+        let x = Tensor::new(vec![1, 4, 4, 4], (0..64).map(|v| (v % 9) as f32 - 4.0).collect());
+        let w = Tensor::new(vec![6, 2, 2, 2], (0..48).map(|v| (v % 5) as f32 - 2.0).collect());
+        let want = ops::linalg::conv(&node, &[&x, &w]).unwrap();
+        let pc = PackedConv::try_build(&node, &w, None).unwrap();
+        let got = pc.run(&x, &mut ScratchArena::new()).unwrap();
+        assert_eq!(got, want[0]);
+    }
+
+    #[test]
+    fn packed_conv_with_quant_epilogue_matches_two_pass() {
+        let conv_node = Node::new("Conv", &["x", "w"], &["c"])
+            .with_attr("kernel_shape", vec![3i64, 3]);
+        let quant_node = Node::new("Quant", &["c", "s", "z", "bw"], &["y"])
+            .with_attr("signed", 1i64)
+            .with_attr("rounding_mode", "ROUND");
+        let x = Tensor::new(vec![1, 2, 6, 6], (0..72).map(|v| (v % 13) as f32 * 0.3 - 2.0).collect());
+        let w = Tensor::new(vec![3, 2, 3, 3], (0..54).map(|v| (v % 5) as f32 * 0.25 - 0.5).collect());
+        let s = Tensor::scalar(0.5);
+        let z = Tensor::scalar(0.0);
+        let bw = Tensor::scalar(4.0);
+        let conv_out = ops::linalg::conv(&conv_node, &[&x, &w]).unwrap();
+        let want = ops::quant::quant_op(&quant_node, &[&conv_out[0], &s, &z, &bw]).unwrap();
+        let mut pc = PackedConv::try_build(&conv_node, &w, None).unwrap();
+        let resolve = |name: &str| match name {
+            "s" => Some(&s),
+            "z" => Some(&z),
+            "bw" => Some(&bw),
+            _ => None,
+        };
+        let ep = Epilogue::try_build(&quant_node, resolve, pc.out_channels()).unwrap();
+        pc.push_epilogue(ep);
+        let got = pc.run(&x, &mut ScratchArena::new()).unwrap();
+        assert_eq!(got, want[0]);
+    }
+
+    #[test]
+    fn packed_gemm_matches_generic_op() {
+        let node = Node::new("Gemm", &["a", "b", "c"], &["y"])
+            .with_attr("alpha", 2.0f32)
+            .with_attr("beta", 3.0f32)
+            .with_attr("transA", 1i64)
+            .with_attr("transB", 1i64);
+        let a = Tensor::new(vec![3, 2], (0..6).map(|v| v as f32 * 0.7 - 1.0).collect());
+        let b = Tensor::new(vec![4, 3], (0..12).map(|v| (v % 5) as f32 - 2.0).collect());
+        let c = Tensor::new(vec![1, 4], vec![1.0, -1.0, 0.5, 2.0]);
+        let want = ops::linalg::gemm_op(&node, &[&a, &b, &c]).unwrap();
+        let pg = PackedGemm::try_build(&node, &b, Some(Some(&c))).unwrap();
+        let got = pg.run(&[&a], &mut ScratchArena::new()).unwrap();
+        assert_eq!(got, want[0]);
+    }
+
+    #[test]
+    fn packed_matmul_matches_generic_including_batched() {
+        let node = Node::new("MatMul", &["a", "b"], &["y"]);
+        let b = Tensor::new(vec![3, 4], (0..12).map(|v| v as f32 - 6.0).collect());
+        let pm = PackedMatMul::try_build(&b).unwrap();
+        let a2 = Tensor::new(vec![2, 3], (0..6).map(|v| v as f32 * 0.5).collect());
+        let want = ops::linalg::matmul(&node, &[&a2, &b]).unwrap();
+        assert_eq!(pm.run(&a2, &mut ScratchArena::new()).unwrap(), want[0]);
+        let a3 = Tensor::new(vec![2, 2, 3], (0..12).map(|v| v as f32 * 0.25 - 1.0).collect());
+        let want3 = ops::linalg::matmul(&node, &[&a3, &b]).unwrap();
+        assert_eq!(pm.run(&a3, &mut ScratchArena::new()).unwrap(), want3[0]);
+    }
+
+    #[test]
+    fn unsupported_shapes_decline_packing() {
+        // NHWC conv wrapper stays generic
+        let nhwc = Node::new("Conv", &["x", "w"], &["y"])
+            .with_attr("data_layout", "NHWC")
+            .with_attr("kernel_shape", vec![1i64, 1]);
+        let w = Tensor::zeros(vec![1, 1, 1, 1]);
+        assert!(PackedConv::try_build(&nhwc, &w, None).is_none());
+        // rank-3 rhs declines MatMul packing
+        assert!(PackedMatMul::try_build(&Tensor::zeros(vec![2, 2, 2])).is_none());
+        // i64 weights decline
+        assert!(PackedMatMul::try_build(&Tensor::new_i64(vec![1, 1], vec![1])).is_none());
     }
 }

@@ -28,6 +28,43 @@
 //!   tensors are freed mid-run and peak live memory is the schedule's
 //!   high-water mark, not the tensor count.
 //!
+//! # Kernel specialization tiers
+//!
+//! Each node lands on the strongest tier its operands allow:
+//!
+//! 1. **Folded** — all inputs are compile-time constants: the node runs
+//!    once at compile time and its outputs become resident constants
+//!    (this is how weight-quantizer subgraphs vanish from the schedule).
+//! 2. **Packed (+ fused)** — the node's *weight* operands are constants
+//!    but its data input is runtime: `Conv`/`Gemm`/`MatMul` become
+//!    stateful prepacked kernels ([`kernel::PackedConv`],
+//!    [`kernel::PackedGemm`], [`kernel::PackedMatMul`]) with hyper-params
+//!    resolved once and weights transposed/panel-packed once
+//!    ([`crate::tensor::PackedB`]); a packed conv additionally absorbs a
+//!    chain of sole-consumer elementwise stages (BatchNorm, Quant,
+//!    BipolarQuant, Relu) into its scatter-loop epilogue, deleting those
+//!    steps from the schedule.
+//! 3. **Generic** — everything else dispatches through the registry
+//!    function pointer resolved at compile time.
+//!
+//! All tiers are bit-exact with the reference interpreter: the packed
+//! GEMM keeps the interpreter's ascending-k accumulation order and each
+//! fused epilogue replays the generic op's per-element arithmetic
+//! (`tests/plan_equiv.rs` asserts byte equality across the zoo).
+//!
+//! # Arena scratch contract
+//!
+//! Kernels receive a `&mut` [`ScratchArena`] at invocation and draw
+//! *all* working memory from it: im2col matrices, GEMM accumulators and
+//! output buffers come from [`ScratchArena::take`] and transient buffers
+//! go back via [`ScratchArena::give`]. The executor closes the loop by
+//! returning each released intermediate's storage to the same arena, so
+//! kernel scratch on a warm plan reaches a zero-allocation steady state
+//! (buffers that leave as graph outputs, and per-run bookkeeping, still
+//! allocate). [`ExecutionPlan::run_cfg_scratch`] lets engines keep one
+//! arena across requests ([`crate::coordinator::PlannedEngine`] does);
+//! `run`/`run_cfg` use a per-call arena.
+//!
 //! The same plan serves every scenario (QONNX, QCDQ, quantized-op and
 //! FINN graphs alike): [`crate::exec::execute_with`] is a thin wrapper
 //! that compiles a borrowed plan per call, while
@@ -36,9 +73,9 @@
 
 pub mod arena;
 mod compile;
-mod kernel;
+pub mod kernel;
 
-pub use arena::SlotArena;
+pub use arena::{ScratchArena, SlotArena};
 pub use kernel::CompiledKernel;
 
 use crate::ir::{ModelGraph, Node};
@@ -50,11 +87,26 @@ use std::fmt::Write as _;
 use std::sync::Arc;
 
 /// Plan compilation options.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct PlanOptions {
     /// Reject QONNX/FINN-domain nodes — emulates a stock ONNX backend
     /// (same semantics as [`crate::exec::ExecOptions::standard_onnx_only`]).
     pub standard_onnx_only: bool,
+    /// Lower constant-weight `Conv`/`Gemm`/`MatMul` nodes to prepacked
+    /// kernels (tier 2). Disable to get the PR-1-style generic-dispatch
+    /// plan (the benchmark baseline).
+    pub specialize: bool,
+    /// Absorb sole-consumer elementwise stages into a packed conv's
+    /// scatter-loop epilogue. Implies nothing unless `specialize` is on.
+    /// Callers that need every intermediate recorded by name disable
+    /// this (fused steps only record their final output).
+    pub fuse_epilogues: bool,
+}
+
+impl Default for PlanOptions {
+    fn default() -> PlanOptions {
+        PlanOptions { standard_onnx_only: false, specialize: true, fuse_epilogues: true }
+    }
 }
 
 /// Per-run configuration.
@@ -133,10 +185,13 @@ impl RtVal<'_> {
 /// One scheduled node execution.
 #[derive(Debug, Clone)]
 pub(crate) struct Step {
-    /// Index into the plan's node table.
+    /// Index into the plan's node table (error context / dispatch).
     pub(crate) node_idx: usize,
+    /// Node whose declared outputs this step produces — differs from
+    /// `node_idx` when an epilogue chain was fused into the kernel.
+    pub(crate) out_node_idx: usize,
     pub(crate) kernel: CompiledKernel,
-    /// Slot of each present input, in `present_inputs()` order.
+    /// Slot of each runtime input (packed kernels bake constants in).
     pub(crate) inputs: Vec<u32>,
     /// Slot per declared output; `None` for dead outputs (dropped at once).
     pub(crate) outputs: Vec<Option<u32>>,
@@ -194,6 +249,8 @@ pub struct ExecutionPlan<'g> {
     pub(crate) node_count: usize,
     pub(crate) folded_count: usize,
     pub(crate) elided_count: usize,
+    pub(crate) packed_count: usize,
+    pub(crate) fused_count: usize,
 }
 
 /// Result of a plan run.
@@ -235,6 +292,8 @@ impl<'g> ExecutionPlan<'g> {
             node_count: self.node_count,
             folded_count: self.folded_count,
             elided_count: self.elided_count,
+            packed_count: self.packed_count,
+            fused_count: self.fused_count,
         }
     }
 
@@ -267,6 +326,16 @@ impl<'g> ExecutionPlan<'g> {
         self.preloads.len()
     }
 
+    /// Steps running a specialized prepacked kernel (tier 2).
+    pub fn packed_count(&self) -> usize {
+        self.packed_count
+    }
+
+    /// Elementwise nodes absorbed into packed-conv epilogues.
+    pub fn fused_epilogue_count(&self) -> usize {
+        self.fused_count
+    }
+
     /// Execute on named inputs, returning the graph outputs.
     pub fn run(&self, inputs: &BTreeMap<String, Tensor>) -> Result<BTreeMap<String, Tensor>> {
         Ok(self.run_cfg(|n| inputs.get(n), &RunConfig::default())?.outputs)
@@ -274,11 +343,24 @@ impl<'g> ExecutionPlan<'g> {
 
     /// Execute with explicit configuration and a caller-controlled input
     /// binding (lets engines bind a batch tensor without cloning it into a
-    /// map).
+    /// map). Uses a fresh per-call scratch arena.
     pub fn run_cfg<'a>(
         &'a self,
         fetch: impl Fn(&str) -> Option<&'a Tensor>,
         cfg: &RunConfig,
+    ) -> Result<PlanRunResult> {
+        self.run_cfg_scratch(fetch, cfg, &mut ScratchArena::new())
+    }
+
+    /// Execute with a caller-owned [`ScratchArena`]. Engines that serve
+    /// repeated requests keep one arena alive so kernel scratch and
+    /// recycled intermediate buffers reach a zero-allocation steady
+    /// state across calls.
+    pub fn run_cfg_scratch<'a>(
+        &'a self,
+        fetch: impl Fn(&str) -> Option<&'a Tensor>,
+        cfg: &RunConfig,
+        scratch: &mut ScratchArena,
     ) -> Result<PlanRunResult> {
         let mut slots: Vec<Option<RtVal<'a>>> = Vec::with_capacity(self.slot_count);
         slots.resize_with(self.slot_count, || None);
@@ -315,7 +397,8 @@ impl<'g> ExecutionPlan<'g> {
             }
         }
 
-        // The hot loop: slot-indexed, dispatch pre-resolved.
+        // The hot loop: slot-indexed, dispatch pre-resolved, scratch
+        // drawn from (and released intermediates recycled into) the arena.
         for step in &self.steps {
             let node = &self.nodes[step.node_idx];
             let mut ins: Vec<&Tensor> = Vec::with_capacity(step.inputs.len());
@@ -331,24 +414,31 @@ impl<'g> ExecutionPlan<'g> {
             }
             let outs = step
                 .kernel
-                .invoke(node, &ins)
+                .invoke(node, &ins, scratch)
                 .with_context(|| format!("executing node '{}' ({})", node.name, node.op_type))?;
-            if outs.len() != node.outputs.len() {
+            // fused steps produce the *last* absorbed node's outputs
+            let out_node = &self.nodes[step.out_node_idx];
+            if outs.len() != out_node.outputs.len() {
                 bail!(
                     "node '{}' produced {} outputs, declared {}",
                     node.name,
                     outs.len(),
-                    node.outputs.len()
+                    out_node.outputs.len()
                 );
             }
             drop(ins);
             // Free dead slots before storing: an output may reuse one.
+            // Owned buffers go back to the scratch pool for later kernels.
             for &sl in &step.release {
-                slots[sl as usize] = None;
+                if let Some(RtVal::Owned(t)) = slots[sl as usize].take() {
+                    if let Some(buf) = t.into_f32_vec() {
+                        scratch.give(buf);
+                    }
+                }
             }
             for (j, t) in outs.into_iter().enumerate() {
                 if cfg.record_intermediates {
-                    intermediates.insert(node.outputs[j].clone(), t.clone());
+                    intermediates.insert(out_node.outputs[j].clone(), t.clone());
                 }
                 if let Some(sl) = step.outputs[j] {
                     slots[sl as usize] = Some(RtVal::Owned(t));
@@ -379,12 +469,15 @@ impl<'g> ExecutionPlan<'g> {
     /// Human-readable schedule listing.
     pub fn summary(&self) -> String {
         let mut s = format!(
-            "plan '{}': {} graph nodes -> {} steps ({} const-folded, {} identity-elided)\n",
+            "plan '{}': {} graph nodes -> {} steps ({} const-folded, {} identity-elided, \
+             {} packed, {} epilogue-fused)\n",
             self.name,
             self.node_count,
             self.steps.len(),
             self.folded_count,
-            self.elided_count
+            self.elided_count,
+            self.packed_count,
+            self.fused_count
         );
         let _ = writeln!(
             s,
@@ -404,7 +497,7 @@ impl<'g> ExecutionPlan<'g> {
             let _ = writeln!(
                 s,
                 "  s{i:<3} {:<18} slots {:?} -> [{}]  release {:?}",
-                node.op_type,
+                step.kernel.tag(node),
                 step.inputs,
                 outs.join(", "),
                 step.release

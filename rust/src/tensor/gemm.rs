@@ -1,0 +1,328 @@
+//! GEMM substrate: cache-blocked, panel-packed matrix multiply.
+//!
+//! This is the executor's dominant kernel — conv lowers onto it via
+//! im2col, and every `MatMul`/`Gemm` node ends here. Two entry points:
+//!
+//! * [`gemm`] — the general `out += a * b` used by
+//!   [`super::Tensor::matmul2d`]. Small problems take an unpacked serial
+//!   i-k-j loop; large ones pack `b` into panels first.
+//! * [`gemm_prepacked`] — the compiled-plan hot path: `b` was packed
+//!   **once at plan-compile time** into a [`PackedB`]
+//!   (see [`crate::plan::CompiledKernel`]), so per-request work is only
+//!   the multiply itself.
+//!
+//! Blocking follows the classic MC/KC/NC scheme: `b` is tiled into
+//! `KC x NC` panels stored contiguously, the row dimension is walked in
+//! `MC`-row blocks (and fanned out over threads for large problems), and
+//! the inner kernel streams one contiguous panel row per `k` step.
+//!
+//! **Determinism contract:** for every output element `out[i, j]` the
+//! products `a[i, kk] * b[kk, j]` are accumulated in ascending-`kk` order
+//! with `a[i, kk] == 0.0` terms skipped (quantized operands are often
+//! sparse), *regardless* of path (serial/packed/threaded) or block sizes.
+//! That is what lets the compiled plan, the interpreter, and the naive
+//! triple loop produce bit-identical f32 results — the equivalence tests
+//! rely on it.
+
+/// Rows-block: each thread/chunk walks its rows in MC-row groups.
+pub const GEMM_MC: usize = 64;
+/// Depth-block: `k` is split into KC runs so a panel stays cache-resident.
+pub const GEMM_KC: usize = 256;
+/// Column-block: panel width; also the serial path's j-block width.
+pub const GEMM_NC: usize = 128;
+
+/// Below this many FLOPs the thread-spawn (and packing) overhead dominates.
+const PAR_FLOP_THRESHOLD: usize = 4_000_000;
+
+/// A `[k, n]` matrix packed into contiguous `KC x NC` panels.
+///
+/// Layout: for each `KC` row-block (outer), for each `NC` column-block
+/// (inner), the `kc_len x nc_len` tile is stored row-major and
+/// contiguously. The compute kernel then reads one contiguous `nc_len`
+/// strip per `k` step instead of striding across the full row length.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedB {
+    k: usize,
+    n: usize,
+    data: Vec<f32>,
+}
+
+impl PackedB {
+    /// Pack a row-major `[k, n]` matrix. A pure reordering copy — values
+    /// are untouched, so packed and unpacked GEMM agree bit-for-bit.
+    pub fn pack(k: usize, n: usize, b: &[f32]) -> PackedB {
+        debug_assert_eq!(b.len(), k * n);
+        let mut data = Vec::with_capacity(k * n);
+        for kc0 in (0..k).step_by(GEMM_KC) {
+            let kc1 = (kc0 + GEMM_KC).min(k);
+            for nc0 in (0..n).step_by(GEMM_NC) {
+                let nc1 = (nc0 + GEMM_NC).min(n);
+                for kk in kc0..kc1 {
+                    data.extend_from_slice(&b[kk * n + nc0..kk * n + nc1]);
+                }
+            }
+        }
+        PackedB { k, n, data }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// The contiguous `kc_len x nc_len` tile at block origin `(kc0, nc0)`.
+    #[inline]
+    fn tile(&self, kc0: usize, kc_len: usize, nc0: usize) -> &[f32] {
+        // preceding KC blocks hold kc_block_len * n elements each; within
+        // this block, preceding NC tiles hold kc_len * nc0 elements.
+        let off = kc0 * self.n + kc_len * nc0;
+        let nc_len = (self.n - nc0).min(GEMM_NC);
+        &self.data[off..off + kc_len * nc_len]
+    }
+}
+
+/// Blocked GEMM: `out[m,n] += a[m,k] * b[k,n]`, `out` assumed zeroed.
+///
+/// Small problems run the unpacked serial kernel; large ones pack `b`
+/// once and fan out over row chunks on `available_parallelism` threads.
+pub fn gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let flops = 2 * m * k * n;
+    if flops < PAR_FLOP_THRESHOLD || m < 2 {
+        gemm_serial_rows(k, n, a, b, out);
+        return;
+    }
+    let bp = PackedB::pack(k, n, b);
+    gemm_prepacked(m, k, &bp, a, out);
+}
+
+/// GEMM against a pre-packed `b` panel set: `out[m,n] += a[m,k] * bp`.
+///
+/// The plan's packed kernels call this with a `PackedB` built at
+/// compile time; [`gemm`] calls it after packing per-call. Threads split
+/// the row range; each output element is owned by exactly one thread, so
+/// results are independent of the thread count.
+pub fn gemm_prepacked(m: usize, k: usize, bp: &PackedB, a: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(bp.k, k);
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(out.len(), m * bp.n);
+    let n = bp.n;
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let flops = 2 * m * k * n;
+    let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
+    if threads <= 1 || flops < PAR_FLOP_THRESHOLD || m < 2 {
+        gemm_packed_rows(k, a, bp, out);
+        return;
+    }
+    let threads = threads.min(m);
+    let rows_per = m.div_ceil(threads);
+    std::thread::scope(|scope| {
+        let mut rest = out;
+        let mut row0 = 0usize;
+        for _ in 0..threads {
+            let rows = rows_per.min(m - row0);
+            if rows == 0 {
+                break;
+            }
+            let (chunk, tail) = rest.split_at_mut(rows * n);
+            rest = tail;
+            let a_chunk = &a[row0 * k..(row0 + rows) * k];
+            scope.spawn(move || gemm_packed_rows(k, a_chunk, bp, chunk));
+            row0 += rows;
+        }
+    });
+}
+
+/// Serial unpacked GEMM over however many rows `a`/`out` contain.
+/// i-k-j loop order with NC-wide j blocks keeps the hot `b` strip in L1.
+fn gemm_serial_rows(k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+    if n == 0 {
+        return;
+    }
+    let m = out.len() / n;
+    for j0 in (0..n).step_by(GEMM_NC) {
+        let j1 = (j0 + GEMM_NC).min(n);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n + j0..i * n + j1];
+            for (kk, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue; // quantized operands are often sparse
+                }
+                let brow = &b[kk * n + j0..kk * n + j1];
+                // zipped slices: bounds checks hoisted, inner loop
+                // autovectorizes cleanly
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    }
+}
+
+/// Serial blocked kernel over the rows in `out`, reading packed panels.
+///
+/// Loop nest: MC row-blocks (outer) -> KC depth-blocks (ascending, which
+/// preserves the per-element accumulation order) -> NC panels -> rows ->
+/// panel strips. The `KC x NC` tile plus the MC-row `a` slab stay
+/// cache-resident across the inner sweeps.
+fn gemm_packed_rows(k: usize, a: &[f32], bp: &PackedB, out: &mut [f32]) {
+    let n = bp.n;
+    if n == 0 {
+        return;
+    }
+    let m = out.len() / n;
+    for ic0 in (0..m).step_by(GEMM_MC) {
+        let ic1 = (ic0 + GEMM_MC).min(m);
+        for kc0 in (0..k).step_by(GEMM_KC) {
+            let kc_len = (k - kc0).min(GEMM_KC);
+            for nc0 in (0..n).step_by(GEMM_NC) {
+                let nc_len = (n - nc0).min(GEMM_NC);
+                let tile = bp.tile(kc0, kc_len, nc0);
+                for i in ic0..ic1 {
+                    let arow = &a[i * k + kc0..i * k + kc0 + kc_len];
+                    let orow = &mut out[i * n + nc0..i * n + nc0 + nc_len];
+                    for (kk, &av) in arow.iter().enumerate() {
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let brow = &tile[kk * nc_len..(kk + 1) * nc_len];
+                        for (o, &bv) in orow.iter_mut().zip(brow) {
+                            *o += av * bv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Naive i-j-k triple loop, ascending k with the same zero-skip rule —
+    /// the reference the blocked paths must match bit-for-bit.
+    fn gemm_naive(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0f32;
+                for kk in 0..k {
+                    let av = a[i * k + kk];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    acc += av * b[kk * n + j];
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        out
+    }
+
+    fn fill(len: usize, seed: u64) -> Vec<f32> {
+        // nonzero pseudo-random values (zero-skip makes zeros a special case
+        // tested separately)
+        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(1);
+        (0..len)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                let v = ((s >> 40) as i32 % 1000 - 500) as f32 / 97.0;
+                if v == 0.0 {
+                    0.5
+                } else {
+                    v
+                }
+            })
+            .collect()
+    }
+
+    /// Property: blocked/packed/threaded gemm matches the naive triple
+    /// loop bit-for-bit on shapes that are *not* multiples of the block
+    /// sizes (odd edges exercise every partial-tile path).
+    #[test]
+    fn prop_blocked_matches_naive_on_odd_shapes() {
+        let shapes = [
+            (1, 1, 1),
+            (1, 7, 3),
+            (3, 5, 2),
+            (7, 1000, 3),
+            (13, 130, 17),
+            (64, 256, 128),             // exact block multiples
+            (65, 257, 129),             // one past each block edge
+            (GEMM_MC + 3, GEMM_KC + 5, GEMM_NC + 7),
+            (130, 300, 7),
+        ];
+        for &(m, k, n) in &shapes {
+            let a = fill(m * k, (m * 31 + k) as u64);
+            let b = fill(k * n, (k * 17 + n) as u64);
+            let want = gemm_naive(m, k, n, &a, &b);
+
+            let mut got = vec![0f32; m * n];
+            gemm(m, k, n, &a, &b, &mut got);
+            assert_eq!(got, want, "gemm() diverged at m={m} k={k} n={n}");
+
+            let bp = PackedB::pack(k, n, &b);
+            let mut got_p = vec![0f32; m * n];
+            gemm_prepacked(m, k, &bp, &a, &mut got_p);
+            assert_eq!(got_p, want, "gemm_prepacked() diverged at m={m} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn zero_rows_are_skipped_consistently() {
+        // a containing zeros: both paths skip them identically
+        let (m, k, n) = (5, 9, 11);
+        let mut a = fill(m * k, 3);
+        for v in a.iter_mut().step_by(3) {
+            *v = 0.0;
+        }
+        let b = fill(k * n, 4);
+        let want = gemm_naive(m, k, n, &a, &b);
+        let mut got = vec![0f32; m * n];
+        gemm(m, k, n, &a, &b, &mut got);
+        assert_eq!(got, want);
+        let bp = PackedB::pack(k, n, &b);
+        let mut got_p = vec![0f32; m * n];
+        gemm_prepacked(m, k, &bp, &a, &mut got_p);
+        assert_eq!(got_p, want);
+    }
+
+    #[test]
+    fn degenerate_dims_are_noops() {
+        let mut out: Vec<f32> = vec![];
+        gemm(0, 4, 0, &[], &[], &mut out);
+        let bp = PackedB::pack(0, 3, &[]);
+        assert_eq!(bp.k(), 0);
+        assert_eq!(bp.n(), 3);
+        gemm_prepacked(0, 0, &bp, &[], &mut out);
+        // k == 0: out stays zeroed
+        let mut out2 = vec![0f32; 4];
+        gemm(2, 0, 2, &[], &[], &mut out2);
+        assert_eq!(out2, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn pack_roundtrips_values() {
+        let (k, n) = (GEMM_KC + 2, GEMM_NC + 5);
+        let b = fill(k * n, 9);
+        let bp = PackedB::pack(k, n, &b);
+        // identity multiply recovers each row of b
+        let mut a = vec![0f32; k];
+        a[3] = 1.0;
+        let mut out = vec![0f32; n];
+        gemm_prepacked(1, k, &bp, &a, &mut out);
+        assert_eq!(out, b[3 * n..4 * n].to_vec());
+    }
+}

@@ -31,21 +31,70 @@ pub fn im2col_nchw(
     let (n, c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
     let oh = conv_out_dim(h, kh, stride_h, pad_top, pad_bottom);
     let ow = conv_out_dim(w, kw, stride_w, pad_left, pad_right);
-    let src = x.as_f32()?;
     let row_len = c * kh * kw;
     let mut out = vec![0f32; n * oh * ow * row_len];
+    im2col_group_into(
+        x.as_f32()?,
+        n,
+        c,
+        h,
+        w,
+        0,
+        c,
+        kh,
+        kw,
+        stride_h,
+        stride_w,
+        [pad_top, pad_left, pad_bottom, pad_right],
+        &mut out,
+    );
+    Ok(Tensor::new(vec![n * oh * ow, row_len], out))
+}
+
+/// im2col of a channel window `[c0, c0 + cg)` of an NCHW input, written
+/// into a caller-provided (zeroed) `[n * oh * ow, cg * kh * kw]` buffer.
+///
+/// This is the allocation-free core shared by the generic conv op and
+/// the plan's `PackedConv` kernel: grouped convolution slices its per-group
+/// input channels *here* instead of materializing a per-group input
+/// tensor, and the output buffer is typically drawn from a
+/// [`crate::plan::ScratchArena`]. Padding positions are left untouched —
+/// the caller's buffer must already be zero-filled.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_group_into(
+    src: &[f32],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    c0: usize,
+    cg: usize,
+    kh: usize,
+    kw: usize,
+    stride_h: usize,
+    stride_w: usize,
+    pads: [usize; 4], // top, left, bottom, right
+    out: &mut [f32],
+) {
+    let [pad_top, pad_left, pad_bottom, pad_right] = pads;
+    let oh = conv_out_dim(h, kh, stride_h, pad_top, pad_bottom);
+    let ow = conv_out_dim(w, kw, stride_w, pad_left, pad_right);
+    let row_len = cg * kh * kw;
+    debug_assert!(c0 + cg <= c);
+    debug_assert_eq!(src.len(), n * c * h * w);
+    debug_assert_eq!(out.len(), n * oh * ow * row_len);
     for b in 0..n {
         for oy in 0..oh {
             for ox in 0..ow {
                 let row = ((b * oh + oy) * ow + ox) * row_len;
-                for ch in 0..c {
+                for ch in 0..cg {
                     for ky in 0..kh {
                         let iy = oy * stride_h + ky;
                         if iy < pad_top || iy - pad_top >= h {
                             continue; // zero padding
                         }
                         let iy = iy - pad_top;
-                        let src_base = ((b * c + ch) * h + iy) * w;
+                        let src_base = ((b * c + c0 + ch) * h + iy) * w;
                         let dst_base = row + (ch * kh + ky) * kw;
                         for kx in 0..kw {
                             let ix = ox * stride_w + kx;
@@ -59,7 +108,6 @@ pub fn im2col_nchw(
             }
         }
     }
-    Ok(Tensor::new(vec![n * oh * ow, row_len], out))
 }
 
 #[cfg(test)]
@@ -109,6 +157,26 @@ mod tests {
         let m = im2col_nchw(&x, 2, 2, 1, 1, 0, 0, 0, 0).unwrap();
         assert_eq!(m.shape(), &[1, 8]);
         assert_eq!(m.as_f32().unwrap(), &[1., 2., 3., 4., 10., 20., 30., 40.]);
+    }
+
+    #[test]
+    fn group_window_matches_sliced_input() {
+        // channel window [1, 3) of a 4-channel input == im2col of the slice
+        let (n, c, h, w) = (2usize, 4usize, 3usize, 3usize);
+        let x = Tensor::new(vec![n, c, h, w], (0..n * c * h * w).map(|v| v as f32).collect());
+        let xs = x.as_f32().unwrap();
+        let (c0, cg) = (1usize, 2usize);
+        // reference: materialize the channel slice, run the full im2col
+        let mut sliced = Vec::new();
+        for b in 0..n {
+            let base = (b * c + c0) * h * w;
+            sliced.extend_from_slice(&xs[base..base + cg * h * w]);
+        }
+        let xg = Tensor::new(vec![n, cg, h, w], sliced);
+        let want = im2col_nchw(&xg, 2, 2, 1, 1, 1, 1, 0, 0).unwrap();
+        let mut got = vec![0f32; want.numel()];
+        im2col_group_into(xs, n, c, h, w, c0, cg, 2, 2, 1, 1, [1, 1, 0, 0], &mut got);
+        assert_eq!(&got, want.as_f32().unwrap());
     }
 
     #[test]

@@ -6,11 +6,13 @@
 //! `Reshape` targets). Broadcasting follows numpy/ONNX semantics.
 
 mod broadcast;
+mod gemm;
 mod im2col;
 mod layout;
 
 pub use broadcast::{broadcast_shapes, broadcastable_to, BroadcastIter};
-pub use im2col::{conv_out_dim, im2col_nchw};
+pub use gemm::{gemm, gemm_prepacked, PackedB, GEMM_KC, GEMM_MC, GEMM_NC};
+pub use im2col::{conv_out_dim, im2col_group_into, im2col_nchw};
 pub use layout::{nchw_to_nhwc, nhwc_to_nchw};
 
 use anyhow::{bail, ensure, Result};
@@ -110,6 +112,16 @@ impl Tensor {
         match &self.data {
             TensorData::I64(v) => v.clone(),
             TensorData::F32(v) => v.iter().map(|&x| x as i64).collect(),
+        }
+    }
+
+    /// Take ownership of the f32 payload (buffer recycling: the plan
+    /// executor returns released intermediates' storage to its
+    /// [`crate::plan::ScratchArena`]). `None` for i64 tensors.
+    pub fn into_f32_vec(self) -> Option<Vec<f32>> {
+        match self.data {
+            TensorData::F32(v) => Some(v),
+            TensorData::I64(_) => None,
         }
     }
 
@@ -258,65 +270,6 @@ pub fn strides_for(shape: &[usize]) -> Vec<usize> {
         strides[d] = strides[d + 1] * shape[d + 1];
     }
     strides
-}
-
-/// Blocked GEMM: `out[m,n] += a[m,k] * b[k,n]`, out assumed zeroed.
-/// i-k-j loop order keeps `b` row access contiguous; 64-wide j blocks keep
-/// the hot strip in L1. Large problems fan out over row chunks on
-/// `available_parallelism` threads (§Perf: this is the executor's
-/// dominant kernel — conv lowers onto it via im2col).
-pub fn gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(out.len(), m * n);
-    let flops = 2 * m * k * n;
-    let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
-    // below ~4 MFLOP the spawn overhead dominates
-    if threads <= 1 || flops < 4_000_000 || m < 2 {
-        gemm_serial_rows(k, n, a, b, out);
-        return;
-    }
-    let threads = threads.min(m);
-    let rows_per = m.div_ceil(threads);
-    std::thread::scope(|scope| {
-        let mut rest = out;
-        let mut row0 = 0usize;
-        for _ in 0..threads {
-            let rows = rows_per.min(m - row0);
-            if rows == 0 {
-                break;
-            }
-            let (chunk, tail) = rest.split_at_mut(rows * n);
-            rest = tail;
-            let a_chunk = &a[row0 * k..(row0 + rows) * k];
-            scope.spawn(move || gemm_serial_rows(k, n, a_chunk, b, chunk));
-            row0 += rows;
-        }
-    });
-}
-
-/// Serial GEMM over however many rows `a`/`out` contain.
-fn gemm_serial_rows(k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
-    const JB: usize = 128;
-    let m = out.len() / n;
-    for j0 in (0..n).step_by(JB) {
-        let j1 = (j0 + JB).min(n);
-        for i in 0..m {
-            let arow = &a[i * k..(i + 1) * k];
-            let orow = &mut out[i * n + j0..i * n + j1];
-            for (kk, &av) in arow.iter().enumerate() {
-                if av == 0.0 {
-                    continue; // quantized operands are often sparse
-                }
-                let brow = &b[kk * n + j0..kk * n + j1];
-                // zipped slices: bounds checks hoisted, inner loop
-                // autovectorizes cleanly
-                for (o, &bv) in orow.iter_mut().zip(brow) {
-                    *o += av * bv;
-                }
-            }
-        }
-    }
 }
 
 #[cfg(test)]

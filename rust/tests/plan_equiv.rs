@@ -6,7 +6,7 @@
 
 use qonnx::coordinator::{Batcher, BatcherConfig, InferenceEngine, PlannedEngine};
 use qonnx::exec::{self, ExecOptions};
-use qonnx::ir::ModelGraph;
+use qonnx::ir::{AttrValue, GraphBuilder, ModelGraph};
 use qonnx::plan::{ExecutionPlan, PlanOptions};
 use qonnx::tensor::Tensor;
 use qonnx::testutil::random_tensor;
@@ -74,7 +74,7 @@ fn standard_onnx_only_parity() {
     // QONNX graph: both executors reject with the same diagnosis
     let e1 = exec::interpret_with(&g, &inputs, &opts).unwrap_err().to_string();
     let e2 = exec::execute_with(&g, &inputs, &opts).unwrap_err().to_string();
-    let popts = PlanOptions { standard_onnx_only: true };
+    let popts = PlanOptions { standard_onnx_only: true, ..Default::default() };
     let e3 = ExecutionPlan::compile_with(&g, &popts).unwrap_err().to_string();
     for e in [&e1, &e2, &e3] {
         assert!(e.contains("not a standard ONNX op"), "{e}");
@@ -148,6 +148,131 @@ fn batcher_serves_planned_engine() {
     let mut direct = PlannedEngine::from_zoo("TFC-w2a2").unwrap();
     let y = direct.infer_batch(&Tensor::new(vec![1, 784], input)).unwrap();
     assert_eq!(served, y.as_f32().unwrap());
+}
+
+/// Interpreter, packed plan, and generic (specialize=off) plan must be
+/// bit-identical; the packed plan must actually use packed kernels.
+fn assert_packed_equivalent(g: &ModelGraph, inputs: &BTreeMap<String, Tensor>, min_packed: usize) {
+    let interp = exec::interpret(g, inputs).unwrap();
+    let packed = ExecutionPlan::compile(g).unwrap();
+    assert!(
+        packed.packed_count() >= min_packed,
+        "expected >= {min_packed} packed kernels on '{}':\n{}",
+        g.name,
+        packed.summary()
+    );
+    let got = packed.run(inputs).unwrap();
+    assert_eq!(interp.outputs, got, "packed plan != interpreter on '{}'", g.name);
+    let generic_opts = PlanOptions { specialize: false, ..Default::default() };
+    let generic = ExecutionPlan::compile_with(g, &generic_opts).unwrap();
+    assert_eq!(generic.packed_count(), 0);
+    assert_eq!(generic.run(inputs).unwrap(), got, "generic plan != packed plan on '{}'", g.name);
+}
+
+/// Grouped and depthwise Conv (with bias) through PackedConv: plan,
+/// generic plan, and interpreter bit-match.
+#[test]
+fn grouped_and_depthwise_conv_match_through_packed_kernels() {
+    let mut rng = Rng::new(42);
+    for (channels, group, m) in [(4usize, 2usize, 6usize), (3, 3, 3), (8, 4, 8)] {
+        let mut b = GraphBuilder::new(&format!("conv-g{group}"));
+        b.input("x", vec![2, channels, 6, 6]);
+        let cg = channels / group;
+        b.initializer(
+            "w",
+            random_tensor(&mut rng, vec![m, cg, 3, 3], -1.0, 1.0),
+        );
+        b.initializer("bias", random_tensor(&mut rng, vec![m], -0.5, 0.5));
+        b.node(
+            "Conv",
+            &["x", "w", "bias"],
+            &["y"],
+            &[
+                ("kernel_shape", AttrValue::Ints(vec![3, 3])),
+                ("pads", AttrValue::Ints(vec![1, 1, 1, 1])),
+                ("group", AttrValue::Int(group as i64)),
+            ],
+        );
+        b.output("y", vec![2, m, 6, 6]);
+        let g = b.finish().unwrap();
+        assert_packed_equivalent(&g, &random_inputs(&g, 13), 1);
+    }
+}
+
+/// Gemm with every attribute combination (transA/transB/alpha/beta,
+/// constant and runtime C) through PackedGemm.
+#[test]
+fn gemm_attribute_combinations_match_through_packed_kernels() {
+    let mut rng = Rng::new(7);
+    for (trans_a, trans_b, alpha, beta) in [
+        (0i64, 0i64, 1.0f32, 1.0f32),
+        (1, 0, 1.0, 1.0),
+        (0, 1, 2.5, 0.5),
+        (1, 1, 0.75, 3.0),
+    ] {
+        let (m, k, n) = (3usize, 5usize, 4usize);
+        let mut b = GraphBuilder::new("gemm-attrs");
+        b.input("a", if trans_a != 0 { vec![k, m] } else { vec![m, k] });
+        let b_shape = if trans_b != 0 { vec![n, k] } else { vec![k, n] };
+        b.initializer("w", random_tensor(&mut rng, b_shape, -2.0, 2.0));
+        b.initializer("c", random_tensor(&mut rng, vec![1, n], -1.0, 1.0));
+        b.node(
+            "Gemm",
+            &["a", "w", "c"],
+            &["y"],
+            &[
+                ("transA", AttrValue::Int(trans_a)),
+                ("transB", AttrValue::Int(trans_b)),
+                ("alpha", AttrValue::Float(alpha)),
+                ("beta", AttrValue::Float(beta)),
+            ],
+        );
+        b.output("y", vec![m, n]);
+        let g = b.finish().unwrap();
+        assert_packed_equivalent(&g, &random_inputs(&g, 19), 1);
+    }
+
+    // runtime C: B constant but C a graph input — still packed
+    let (m, k, n) = (2usize, 6usize, 3usize);
+    let mut b = GraphBuilder::new("gemm-runtime-c");
+    b.input("a", vec![m, k]);
+    b.input("c", vec![m, n]);
+    b.initializer("w", random_tensor(&mut rng, vec![k, n], -1.0, 1.0));
+    b.node("Gemm", &["a", "w", "c"], &["y"], &[("beta", AttrValue::Float(2.0))]);
+    b.output("y", vec![m, n]);
+    let g = b.finish().unwrap();
+    assert_packed_equivalent(&g, &random_inputs(&g, 23), 1);
+}
+
+/// The zoo models exercise PackedConv/PackedMatMul + epilogue fusion at
+/// scale; re-assert bit equality with the packed-kernel counters checked.
+#[test]
+fn zoo_models_run_packed_and_match() {
+    let g = zoo::build("TFC-w2a2", 1, 32).unwrap();
+    assert_packed_equivalent(&g, &random_inputs(&g, 31), 3);
+    let keras = keras_to_qonnx(&KerasModel::fig4_example(), 3).unwrap();
+    assert_packed_equivalent(&keras, &random_inputs(&keras, 37), 1);
+}
+
+/// CNV through the batcher via the NCHW edge adapter — the
+/// `serve --zoo CNV-w2a2` path.
+#[test]
+fn batcher_serves_cnv_through_nchw_adapter() {
+    let batcher = Batcher::start(
+        || Ok(Box::new(PlannedEngine::from_zoo("CNV-w2a2")?) as Box<dyn InferenceEngine>),
+        BatcherConfig::default(),
+    )
+    .unwrap();
+    let input: Vec<f32> = (0..3072).map(|i| (i % 11) as f32 / 11.0).collect();
+    let served = batcher.infer(input.clone()).unwrap();
+    assert_eq!(served.len(), 10);
+
+    // must equal direct per-sample plan execution on the NCHW tensor
+    let mut g = zoo::build("CNV-w2a2", 1, 32).unwrap();
+    transforms::cleanup(&mut g).unwrap();
+    let x = Tensor::new(vec![1, 3, 32, 32], input);
+    let want = exec::execute_simple(&g, &x).unwrap();
+    assert_eq!(served, want.as_f32().unwrap());
 }
 
 /// One compiled plan serves every batch size: replicated rows give
