@@ -20,8 +20,9 @@ clippy:
 	cd rust && cargo clippy --all-targets -- -D warnings
 
 # Interpreter-vs-plan throughput comparison (plus the PJRT sections when
-# artifacts are present). Writes machine-readable BENCH_PR2.json to the
-# repo root (Melem/s, GMAC/s, and b1/b8 plan-vs-interpreter speedups).
+# artifacts are present). Writes machine-readable BENCH_PR3.json to the
+# repo root (Melem/s, GMAC/s, plan-vs-interpreter speedups, and the
+# batched-CNV b1/b8/b32 batch-symbolic-vs-per-sample comparison).
 bench:
 	cd rust && cargo bench --bench bench_exec
 

@@ -19,7 +19,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 /// Machine-readable results for CI trend tracking (`make bench` writes
-/// this to the repo root as BENCH_PR2.json).
+/// this to the repo root as BENCH_PR3.json).
 #[derive(Default)]
 struct BenchJson {
     entries: Vec<(String, f64)>,
@@ -212,6 +212,127 @@ fn main() -> anyhow::Result<()> {
         st_gp.mean.as_secs_f64() / st_cp.mean.as_secs_f64(),
     );
 
+    section("batched CNV-w2a2: batch-symbolic plan vs per-sample plan vs interpreter");
+    // The PR-3 tentpole measurement: one batch-symbolic plan invocation
+    // on [n, 3, 32, 32] vs n per-sample invocations of the same plan.
+    // The interpreter cannot execute batched CNV at all (its Reshape
+    // keeps the batch-1-baked target), so its per-image rate from the
+    // b1 measurement above IS its per-sample serving rate.
+    let interp_img_per_s = 1.0 / st.mean.as_secs_f64();
+    json.record("cnv_interp_img_per_s", interp_img_per_s);
+    let in_name = cg.inputs[0].name.clone();
+    let out_name = cg.outputs[0].name.clone();
+    println!(
+        "  plan: {} batch-symbolic reshapes; interpreter baseline {:.1} img/s",
+        cplan.batch_symbolic_count(),
+        interp_img_per_s
+    );
+    let free = qonnx::plan::RunConfig {
+        shape_check: qonnx::plan::ShapeCheck::FreeBatch,
+        record_intermediates: false,
+    };
+    for batch in [1usize, 8, 32] {
+        let xb = Tensor::new(
+            vec![batch, 3, 32, 32],
+            (0..batch * 3072).map(|i| (i % 253) as f32 / 253.0).collect(),
+        );
+        // correctness first: batched row i == per-sample run on row i
+        let yb = cplan
+            .run_cfg(|n| (n == in_name).then_some(&xb), &free)?
+            .outputs
+            .remove(&out_name)
+            .unwrap();
+        let rows = xb.as_f32()?;
+        for r in 0..batch {
+            let img = Tensor::new(vec![1, 3, 32, 32], rows[r * 3072..(r + 1) * 3072].to_vec());
+            let mut m = BTreeMap::new();
+            m.insert(in_name.clone(), img);
+            let y1 = cplan.run(&m)?.remove(&out_name).unwrap();
+            assert_eq!(
+                &yb.as_f32()?[r * 10..(r + 1) * 10],
+                y1.as_f32()?,
+                "batched row {r} diverged from per-sample run"
+            );
+        }
+        let st_b = bench_for(
+            &format!("batch-symbolic plan CNV-w2a2 b{batch} (one invocation)"),
+            Duration::from_secs(2),
+            || cplan.run_cfg(|n| (n == in_name).then_some(&xb), &free).unwrap(),
+        );
+        println!("{}", st_b.report());
+        let st_s = bench_for(
+            &format!("per-sample plan      CNV-w2a2 b{batch} ({batch} invocations)"),
+            Duration::from_secs(2),
+            || {
+                for r in 0..batch {
+                    let img =
+                        Tensor::new(vec![1, 3, 32, 32], rows[r * 3072..(r + 1) * 3072].to_vec());
+                    let mut m = BTreeMap::new();
+                    m.insert(in_name.clone(), img);
+                    cplan.run(&m).unwrap();
+                }
+            },
+        );
+        println!("{}", st_s.report());
+        let batched_ips = batch as f64 / st_b.mean.as_secs_f64();
+        let per_sample_ips = batch as f64 / st_s.mean.as_secs_f64();
+        println!(
+            "  -> b{batch}: batched {batched_ips:.1} img/s, per-sample {per_sample_ips:.1} img/s \
+             ({:.2}x), interpreter {interp_img_per_s:.1} img/s ({:.2}x)",
+            st_s.mean.as_secs_f64() / st_b.mean.as_secs_f64(),
+            batched_ips / interp_img_per_s
+        );
+        json.record(&format!("cnv_b{batch}_batched_plan_img_per_s"), batched_ips);
+        json.record(&format!("cnv_b{batch}_per_sample_plan_img_per_s"), per_sample_ips);
+        json.record(
+            &format!("cnv_b{batch}_batched_vs_per_sample_speedup"),
+            st_s.mean.as_secs_f64() / st_b.mean.as_secs_f64(),
+        );
+        json.record(
+            &format!("cnv_b{batch}_batched_vs_interp_speedup"),
+            batched_ips / interp_img_per_s,
+        );
+    }
+
+    section("sharded batcher over one Arc'd CNV plan (8 clients x 16 req)");
+    // shards share ONE compiled plan (PlannedEngine::share) — throughput
+    // scales with workers while packed weights stay resident once.
+    {
+        let template = PlannedEngine::from_zoo("CNV-w2a2")?;
+        for shards in [1usize, 2, 4] {
+            let t = template.share();
+            let batcher = Arc::new(Batcher::start_sharded(
+                move || Ok(Box::new(t.share()) as Box<dyn InferenceEngine>),
+                BatcherConfig { max_wait: Duration::from_micros(200) },
+                shards,
+            )?);
+            let t0 = std::time::Instant::now();
+            let mut handles = Vec::new();
+            for c in 0..8 {
+                let b = batcher.clone();
+                handles.push(std::thread::spawn(move || {
+                    for i in 0..16 {
+                        let v = (c * 16 + i) as f32 / 128.0;
+                        b.infer(vec![v; 3072]).unwrap();
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+            let el = t0.elapsed();
+            let stats = batcher.stats();
+            let rps = stats.requests as f64 / el.as_secs_f64();
+            println!(
+                "{shards} shard(s): {:>7.1} req/s, mean latency {:>8.0}us, mean batch {:>5.2}",
+                rps,
+                stats.mean_latency_us(),
+                stats.mean_batch_occupancy()
+            );
+            json.record(&format!("cnv_serve_shards{shards}_req_per_s"), rps);
+        }
+    }
+
     section("serving throughput vs batching window (PJRT engine, 8 clients)");
     if tfc_stem.with_extension("hlo.txt").exists() {
         for wait_us in [0u64, 200, 1000, 5000] {
@@ -275,6 +396,6 @@ fn main() -> anyhow::Result<()> {
         2.0 * 256f64.powi(3) / st_pp.mean.as_secs_f64() / 1e9,
     );
 
-    json.write(concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR2.json"));
+    json.write(concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR3.json"));
     Ok(())
 }

@@ -41,9 +41,12 @@ Training & serving:
   train --w N --a N [--epochs N] [--out <file>]   QAT on synth-digits
   infer <artifact-stem>      load + self-check a PJRT artifact
   serve [--artifact <stem>] [--zoo <name>] [--requests N] [--clients N]
-                             batching server demo; serves a zoo model via
+        [--shards N]         batching server demo; serves a zoo model via
                              the compiled ExecutionPlan when no PJRT
-                             artifact is present (or --zoo is given)
+                             artifact is present (or --zoo is given).
+                             --shards runs N batcher workers sharing ONE
+                             compiled plan (PJRT shards each load their
+                             own artifact copy)
 ";
 
 fn parse_flag(args: &[String], key: &str) -> Option<String> {
@@ -328,6 +331,7 @@ fn serve_cmd(rest: &[String]) -> Result<()> {
         .unwrap_or_else(|| runtime::artifacts_dir().join("tfc_w2a2"));
     let requests: usize = parse_flag(rest, "--requests").map(|s| s.parse()).transpose()?.unwrap_or(256);
     let clients: usize = parse_flag(rest, "--clients").map(|s| s.parse()).transpose()?.unwrap_or(8);
+    let shards: usize = parse_flag(rest, "--shards").map(|s| s.parse()).transpose()?.unwrap_or(1);
     let zoo_name = parse_flag(rest, "--zoo");
     let artifact_requested = has_flag(rest, "--artifact");
     let have_artifact = stem.with_extension("hlo.txt").exists();
@@ -339,27 +343,32 @@ fn serve_cmd(rest: &[String]) -> Result<()> {
     }
 
     let batcher = if zoo_name.is_none() && have_artifact {
-        coordinator::Batcher::start(
+        // PJRT executables are thread-affine: each shard loads its own
+        coordinator::Batcher::start_sharded(
             move || {
                 let rt = runtime::PjrtRuntime::cpu()?;
                 Ok(Box::new(coordinator::PjrtEngine::load(&rt, &stem)?)
                     as Box<dyn coordinator::InferenceEngine>)
             },
             coordinator::BatcherConfig::default(),
+            shards,
         )?
     } else {
         // no compiled artifact (or an explicit zoo request): serve the
-        // model natively through a compiled ExecutionPlan
+        // model natively through a compiled ExecutionPlan. The plan is
+        // compiled ONCE here; every shard serves an Arc-shared view of it
         let name = zoo_name.unwrap_or_else(|| "TFC-w2a2".to_string());
         if !have_artifact {
             println!("(no PJRT artifact at {stem:?} — serving '{name}' via the compiled ExecutionPlan)");
         }
-        coordinator::Batcher::start(
-            move || {
-                Ok(Box::new(coordinator::PlannedEngine::from_zoo(&name)?)
-                    as Box<dyn coordinator::InferenceEngine>)
-            },
+        let template = coordinator::PlannedEngine::from_zoo(&name)?;
+        if shards > 1 {
+            println!("({shards} batcher shards sharing one compiled plan)");
+        }
+        coordinator::Batcher::start_sharded(
+            move || Ok(Box::new(template.share()) as Box<dyn coordinator::InferenceEngine>),
             coordinator::BatcherConfig::default(),
+            shards,
         )?
     };
     // row lengths come from the engine's startup handshake, so both

@@ -1,15 +1,23 @@
-//! Dynamic micro-batching request loop.
+//! Dynamic micro-batching request loop, optionally sharded.
 //!
-//! Requests enter an mpsc queue; the worker drains up to
+//! Requests enter an mpsc queue; a worker drains up to
 //! `engine.max_batch()` of them or waits at most `max_wait` for stragglers
 //! (size-or-deadline triggering, the standard serving-batcher policy),
 //! executes one fused inference, and scatters the rows back to per-request
 //! channels. Latency and batch-occupancy stats are recorded for the bench
 //! harness.
+//!
+//! [`Batcher::start_sharded`] runs N such workers over ONE shared queue:
+//! each worker holds the queue lock only while *draining* its batch and
+//! releases it before running inference, so shards overlap compute.
+//! Engines built from a shared template (e.g.
+//! [`super::PlannedEngine::share`]) make every shard serve the same
+//! `Arc`'d compiled plan — packed weights resident once, one
+//! scratch arena per worker.
 
 use super::engine::InferenceEngine;
 use crate::tensor::Tensor;
-use anyhow::Result;
+use anyhow::{anyhow, ensure, Result};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -60,13 +68,17 @@ impl ServerStats {
     }
 }
 
-/// A running batching server around an [`InferenceEngine`].
+/// A running batching server around one or more [`InferenceEngine`]
+/// worker shards.
 pub struct Batcher {
-    tx: mpsc::Sender<Request>,
+    /// `None` once shutdown began — dropping the sender disconnects the
+    /// queue so every idle shard wakes immediately instead of each
+    /// burning a 50 ms poll in turn.
+    tx: Option<mpsc::Sender<Request>>,
     in_dim: usize,
     out_dim: usize,
     stats: Arc<Stats>,
-    worker: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
     shutdown: Arc<AtomicBool>,
 }
 
@@ -79,92 +91,149 @@ struct Stats {
 }
 
 impl Batcher {
-    /// Start the worker thread. The engine is built *inside* the worker by
-    /// `factory` (PJRT handles are thread-affine and `!Send`).
+    /// Start a single worker thread. The engine is built *inside* the
+    /// worker by `factory` (PJRT handles are thread-affine and `!Send`).
     pub fn start<F>(factory: F, cfg: BatcherConfig) -> Result<Batcher>
     where
         F: FnOnce() -> Result<Box<dyn InferenceEngine>> + Send + 'static,
     {
+        // adapt the one-shot factory to the sharded (multi-call) shape
+        let cell = Mutex::new(Some(factory));
+        Batcher::start_sharded(
+            move || {
+                let f = cell
+                    .lock()
+                    .unwrap()
+                    .take()
+                    .ok_or_else(|| anyhow!("single-shot engine factory called twice"))?;
+                f()
+            },
+            cfg,
+            1,
+        )
+    }
+
+    /// Start `shards` worker threads over ONE shared request queue. The
+    /// factory runs once per worker, inside that worker's thread; engines
+    /// that can share compiled state should hand out views of it (e.g.
+    /// one [`super::PlannedEngine`] template `share()`d per shard, so all
+    /// workers serve the same `Arc`'d plan). A worker holds the queue
+    /// lock only while draining its batch — inference runs unlocked, so
+    /// shards execute concurrently.
+    pub fn start_sharded<F>(factory: F, cfg: BatcherConfig, shards: usize) -> Result<Batcher>
+    where
+        F: Fn() -> Result<Box<dyn InferenceEngine>> + Send + Sync + 'static,
+    {
+        ensure!(shards >= 1, "need at least one batcher shard");
         let (tx, rx) = mpsc::channel::<Request>();
-        let rx = Mutex::new(rx);
+        let rx = Arc::new(Mutex::new(rx));
+        let factory = Arc::new(factory);
         let stats: Arc<Stats> = Arc::default();
         let shutdown = Arc::new(AtomicBool::new(false));
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize)>>();
-        let worker_stats = stats.clone();
-        let worker_shutdown = shutdown.clone();
-        let worker = std::thread::spawn(move || {
-            let mut engine = match factory() {
-                Ok(e) => {
-                    let _ = ready_tx.send(Ok((e.input_dim(), e.output_dim())));
-                    e
-                }
-                Err(e) => {
-                    let _ = ready_tx.send(Err(e));
-                    return;
-                }
-            };
-            let in_dim = engine.input_dim();
-            let out_dim = engine.output_dim();
-            let rx = rx.lock().unwrap();
-            let max_batch = engine.max_batch().min(1024);
-            loop {
-                // block for the first request (with a poll so shutdown works)
-                let first = match rx.recv_timeout(Duration::from_millis(50)) {
-                    Ok(r) => r,
-                    Err(mpsc::RecvTimeoutError::Timeout) => {
-                        if worker_shutdown.load(Ordering::Relaxed) {
-                            return;
-                        }
-                        continue;
-                    }
-                    Err(mpsc::RecvTimeoutError::Disconnected) => return,
-                };
-                let mut batch = vec![first];
-                let deadline = Instant::now() + cfg.max_wait;
-                while batch.len() < max_batch {
-                    let now = Instant::now();
-                    if now >= deadline {
-                        break;
-                    }
-                    match rx.recv_timeout(deadline - now) {
-                        Ok(r) => batch.push(r),
-                        Err(_) => break,
-                    }
-                }
-                // fuse, execute, scatter
-                let n = batch.len();
-                let mut data = Vec::with_capacity(n * in_dim);
-                for r in &batch {
-                    data.extend_from_slice(&r.input);
-                }
-                let result = engine.infer_batch(&Tensor::new(vec![n, in_dim], data));
-                worker_stats.batches.fetch_add(1, Ordering::Relaxed);
-                match result {
-                    Ok(y) => {
-                        let rows = y.as_f32().expect("engine output must be f32");
-                        for (i, req) in batch.into_iter().enumerate() {
-                            let lat = req.enqueued.elapsed().as_micros() as u64;
-                            worker_stats.requests.fetch_add(1, Ordering::Relaxed);
-                            worker_stats.total_latency_us.fetch_add(lat, Ordering::Relaxed);
-                            worker_stats.max_latency_us.fetch_max(lat, Ordering::Relaxed);
-                            let row = rows[i * out_dim..(i + 1) * out_dim].to_vec();
-                            let _ = req.resp.send(Ok(row));
-                        }
+        let mut workers = Vec::with_capacity(shards);
+        for _ in 0..shards {
+            let factory = factory.clone();
+            let rx = rx.clone();
+            let cfg = cfg.clone();
+            let ready_tx = ready_tx.clone();
+            let worker_stats = stats.clone();
+            let worker_shutdown = shutdown.clone();
+            workers.push(std::thread::spawn(move || {
+                let mut engine = match factory() {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok((e.input_dim(), e.output_dim())));
+                        e
                     }
                     Err(e) => {
-                        let msg = format!("{e:#}");
-                        for req in batch {
-                            worker_stats.requests.fetch_add(1, Ordering::Relaxed);
-                            let _ = req.resp.send(Err(anyhow::anyhow!("{msg}")));
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                // release the handshake sender now: if another shard dies
+                // (factory panic) the channel disconnects once the healthy
+                // shards have reported, instead of blocking startup forever
+                drop(ready_tx);
+                let in_dim = engine.input_dim();
+                let out_dim = engine.output_dim();
+                let max_batch = engine.max_batch().min(1024);
+                loop {
+                    // take the queue, block for the first request (with a
+                    // poll so shutdown works), drain the batch, release
+                    let batch = {
+                        let rx = rx.lock().unwrap();
+                        let first = match rx.recv_timeout(Duration::from_millis(50)) {
+                            Ok(r) => r,
+                            Err(mpsc::RecvTimeoutError::Timeout) => {
+                                drop(rx);
+                                if worker_shutdown.load(Ordering::Relaxed) {
+                                    return;
+                                }
+                                continue;
+                            }
+                            Err(mpsc::RecvTimeoutError::Disconnected) => return,
+                        };
+                        let mut batch = vec![first];
+                        let deadline = Instant::now() + cfg.max_wait;
+                        while batch.len() < max_batch {
+                            let now = Instant::now();
+                            if now >= deadline {
+                                break;
+                            }
+                            match rx.recv_timeout(deadline - now) {
+                                Ok(r) => batch.push(r),
+                                Err(_) => break,
+                            }
+                        }
+                        batch
+                    };
+                    // fuse, execute (unlocked — shards overlap), scatter
+                    let n = batch.len();
+                    let mut data = Vec::with_capacity(n * in_dim);
+                    for r in &batch {
+                        data.extend_from_slice(&r.input);
+                    }
+                    let result = engine.infer_batch(&Tensor::new(vec![n, in_dim], data));
+                    worker_stats.batches.fetch_add(1, Ordering::Relaxed);
+                    match result {
+                        Ok(y) => {
+                            let rows = y.as_f32().expect("engine output must be f32");
+                            for (i, req) in batch.into_iter().enumerate() {
+                                let lat = req.enqueued.elapsed().as_micros() as u64;
+                                worker_stats.requests.fetch_add(1, Ordering::Relaxed);
+                                worker_stats.total_latency_us.fetch_add(lat, Ordering::Relaxed);
+                                worker_stats.max_latency_us.fetch_max(lat, Ordering::Relaxed);
+                                let row = rows[i * out_dim..(i + 1) * out_dim].to_vec();
+                                let _ = req.resp.send(Ok(row));
+                            }
+                        }
+                        Err(e) => {
+                            let msg = format!("{e:#}");
+                            for req in batch {
+                                worker_stats.requests.fetch_add(1, Ordering::Relaxed);
+                                let _ = req.resp.send(Err(anyhow!("{msg}")));
+                            }
                         }
                     }
                 }
+            }));
+        }
+        drop(ready_tx);
+        // all shards must come up (engine built) before we serve
+        let mut dims: Option<(usize, usize)> = None;
+        for _ in 0..shards {
+            let d = ready_rx
+                .recv()
+                .map_err(|_| anyhow!("engine factory thread died"))??;
+            match dims {
+                None => dims = Some(d),
+                Some(prev) => {
+                    ensure!(prev == d, "shard engines disagree on dims: {prev:?} vs {d:?}")
+                }
             }
-        });
-        let (in_dim, out_dim) = ready_rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("engine factory thread died"))??;
-        Ok(Batcher { tx, in_dim, out_dim, stats, worker: Some(worker), shutdown })
+        }
+        let (in_dim, out_dim) = dims.expect("shards >= 1");
+        Ok(Batcher { tx: Some(tx), in_dim, out_dim, stats, workers, shutdown })
     }
 
     /// Input row length, as reported by the engine at startup.
@@ -179,11 +248,13 @@ impl Batcher {
 
     /// Submit one input row; returns a receiver for the output row.
     pub fn submit(&self, input: Vec<f32>) -> Result<mpsc::Receiver<Result<Vec<f32>>>> {
-        anyhow::ensure!(input.len() == self.in_dim, "input length {} != {}", input.len(), self.in_dim);
+        ensure!(input.len() == self.in_dim, "input length {} != {}", input.len(), self.in_dim);
         let (resp_tx, resp_rx) = mpsc::channel();
         self.tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("server is shut down"))?
             .send(Request { input, enqueued: Instant::now(), resp: resp_tx })
-            .map_err(|_| anyhow::anyhow!("server is shut down"))?;
+            .map_err(|_| anyhow!("server is shut down"))?;
         Ok(resp_rx)
     }
 
@@ -201,10 +272,13 @@ impl Batcher {
         }
     }
 
-    /// Stop the worker and wait for it.
+    /// Stop all worker shards and wait for them. Already-queued requests
+    /// still drain (disconnect only fires on an empty queue); idle
+    /// shards wake immediately.
     pub fn shutdown(mut self) -> ServerStats {
         self.shutdown.store(true, Ordering::Relaxed);
-        if let Some(w) = self.worker.take() {
+        self.tx = None; // disconnect the queue
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
         self.stats()
@@ -214,7 +288,8 @@ impl Batcher {
 impl Drop for Batcher {
     fn drop(&mut self) {
         self.shutdown.store(true, Ordering::Relaxed);
-        if let Some(w) = self.worker.take() {
+        self.tx = None; // disconnect the queue
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
@@ -285,5 +360,44 @@ mod tests {
     fn wrong_input_len_rejected() {
         let b = Batcher::start(ref_engine, BatcherConfig::default()).unwrap();
         assert!(b.submit(vec![0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn sharded_batcher_serves_concurrent_requests() {
+        use crate::coordinator::PlannedEngine;
+        let template = PlannedEngine::from_zoo("TFC-w2a2").unwrap();
+        let mut direct = template.share();
+        let b = Arc::new(
+            Batcher::start_sharded(
+                move || Ok(Box::new(template.share()) as Box<dyn InferenceEngine>),
+                BatcherConfig { max_wait: Duration::from_millis(5) },
+                3,
+            )
+            .unwrap(),
+        );
+        let mut handles = Vec::new();
+        for i in 0..24 {
+            let b = b.clone();
+            handles.push(std::thread::spawn(move || {
+                let input: Vec<f32> = (0..784).map(|j| ((i + j) % 11) as f32 / 11.0).collect();
+                (input.clone(), b.infer(input).unwrap())
+            }));
+        }
+        for h in handles {
+            let (input, served) = h.join().unwrap();
+            let want = direct.infer_batch(&Tensor::new(vec![1, 784], input)).unwrap();
+            assert_eq!(served, want.as_f32().unwrap(), "sharded result diverged");
+        }
+        assert_eq!(b.stats().requests, 24);
+    }
+
+    #[test]
+    fn zero_shards_rejected() {
+        let r = Batcher::start_sharded(
+            || anyhow::bail!("never called"),
+            BatcherConfig::default(),
+            0,
+        );
+        assert!(r.is_err());
     }
 }

@@ -4,12 +4,13 @@
 
 use crate::exec;
 use crate::ir::ModelGraph;
-use crate::plan::{ExecutionPlan, RunConfig, ScratchArena};
+use crate::plan::{ExecutionPlan, RunConfig, ScratchArena, ShapeCheck};
 use crate::runtime::{ArtifactMeta, CompiledModel, PjrtRuntime};
 use crate::tensor::Tensor;
 use anyhow::{bail, ensure, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::Arc;
 
 /// A model that maps a `[n, in_dim]` batch to `[n, out_dim]` outputs.
 ///
@@ -83,25 +84,36 @@ impl InferenceEngine for PjrtEngine {
 enum EdgeAdapter {
     /// `[n, in_dim]` graphs: the batch tensor binds directly.
     Dense,
-    /// NCHW graphs (`[1, c, h, w]` input, e.g. CNV): each request row is
-    /// reshaped to one NCHW image at the boundary and run per sample
-    /// (conv-net flatten chains bake a batch of 1 into their reshape
-    /// targets, so re-batching happens outside the plan).
+    /// NCHW graphs (`[_, c, h, w]` input, e.g. CNV): the whole `[n,
+    /// in_dim]` request batch is re-viewed as one `[n, c, h, w]` tensor
+    /// and executed in ONE plan invocation — the batch-symbolic compile
+    /// pass made the plan's reshape targets batch-preserving, so no
+    /// per-sample loop runs at the edge.
     Nchw { c: usize, h: usize, w: usize },
 }
 
 /// Compiled-plan engine over a QONNX graph (any batch size).
 ///
-/// Compiles the graph **once** into an owned [`ExecutionPlan`] — weights
-/// `Arc`-resident and prepacked, weight-quant subgraphs folded at compile
-/// time, slot arena sized — then serves every request (any batch) against
-/// that plan with zero per-call graph work. A persistent [`ScratchArena`]
-/// carries kernel scratch and recycled intermediate buffers across
-/// requests. This is the native serving path when no PJRT artifact is
-/// present. Dense `[n, dim]` graphs batch directly; NCHW graphs (CNV)
-/// go through the flatten/reshape edge adapter.
+/// Compiles the graph **once** into an owned, `Arc`-shared
+/// [`ExecutionPlan`] — weights `Arc`-resident and prepacked, weight-quant
+/// subgraphs folded at compile time, slot arena sized — then serves every
+/// request (any batch) against that plan with zero per-call graph work.
+/// A persistent [`ScratchArena`] carries kernel scratch and recycled
+/// intermediate buffers across requests. This is the native serving path
+/// when no PJRT artifact is present. Dense `[n, dim]` graphs batch
+/// directly; NCHW graphs (CNV) bind the request batch as one
+/// `[n, c, h, w]` tensor (native batched execution — the plan is
+/// batch-symbolic, see [`crate::plan`] module docs).
+///
+/// [`PlannedEngine::share`] hands out additional engines over the SAME
+/// compiled plan (one `Arc` clone; packed weights and schedule resident
+/// once) with their own scratch arenas — this is how sharded batcher
+/// workers serve one model without duplicating it per worker. Graphs
+/// without inferred intermediate shapes should go through
+/// [`crate::transforms::cleanup`] first so the batch-symbolic pass can
+/// prove its rewrites (the zoo path does).
 pub struct PlannedEngine {
-    plan: ExecutionPlan<'static>,
+    plan: Arc<ExecutionPlan<'static>>,
     model_name: String,
     input_name: String,
     output_name: String,
@@ -121,10 +133,10 @@ impl PlannedEngine {
         ensure!(out_shape.len() == 2, "[n, dim] graph outputs only");
         let (in_dim, adapter) = match in_shape.as_slice() {
             [_, dim] => (*dim, EdgeAdapter::Dense),
-            [1, c, h, w] => (c * h * w, EdgeAdapter::Nchw { c: *c, h: *h, w: *w }),
-            other => bail!("unsupported input shape {other:?} (want [n, dim] or [1, c, h, w])"),
+            [_, c, h, w] => (c * h * w, EdgeAdapter::Nchw { c: *c, h: *h, w: *w }),
+            other => bail!("unsupported input shape {other:?} (want [n, dim] or [n, c, h, w])"),
         };
-        let plan = ExecutionPlan::compile(graph)?.into_owned();
+        let plan = Arc::new(ExecutionPlan::compile(graph)?.into_owned());
         Ok(PlannedEngine {
             plan,
             model_name: graph.name.clone(),
@@ -137,12 +149,33 @@ impl PlannedEngine {
         })
     }
 
+    /// A second engine over the SAME compiled plan: clones the `Arc` (no
+    /// weight or schedule duplication) and starts a fresh per-engine
+    /// [`ScratchArena`]. Sharded batcher workers each take one.
+    pub fn share(&self) -> PlannedEngine {
+        PlannedEngine {
+            plan: self.plan.clone(),
+            model_name: self.model_name.clone(),
+            input_name: self.input_name.clone(),
+            output_name: self.output_name.clone(),
+            in_dim: self.in_dim,
+            out_dim: self.out_dim,
+            adapter: self.adapter,
+            scratch: ScratchArena::new(),
+        }
+    }
+
+    /// The shared compiled plan (inspection / share-count assertions).
+    pub fn plan_handle(&self) -> Arc<ExecutionPlan<'static>> {
+        self.plan.clone()
+    }
+
     /// Run one bound input tensor through the resident plan.
     fn run_one(&mut self, t: &Tensor) -> Result<Tensor> {
-        // The plan's kernels are batch-agnostic; skip the declared-shape
-        // check so one plan serves every batch size (no per-batch graph
-        // clones, unlike the reference engine).
-        let cfg = RunConfig { check_input_shapes: false, record_intermediates: false };
+        // The plan is batch-symbolic: the leading axis is free, rank and
+        // trailing dims still validated — one plan serves every batch
+        // size (no per-batch graph clones, unlike the reference engine).
+        let cfg = RunConfig { shape_check: ShapeCheck::FreeBatch, record_intermediates: false };
         let mut r =
             self.plan.run_cfg_scratch(|n| (n == self.input_name).then_some(t), &cfg, &mut self.scratch)?;
         r.outputs
@@ -191,26 +224,19 @@ impl InferenceEngine for PlannedEngine {
         match self.adapter {
             EdgeAdapter::Dense => self.run_one(batch),
             EdgeAdapter::Nchw { c, h, w } => {
-                // flatten/reshape at the edge: each request row becomes one
-                // NCHW image; rows run sequentially through the same plan
+                // native batched NCHW: the request rows ARE the [n, c, h,
+                // w] tensor (row-major NCHW flattens to exactly the flat
+                // row layout) — one plan invocation, no per-sample loop
                 let n = shape[0];
-                let rows = batch.as_f32()?;
-                let mut out = Vec::with_capacity(n * self.out_dim);
-                for i in 0..n {
-                    let img = Tensor::new(
-                        vec![1, c, h, w],
-                        rows[i * self.in_dim..(i + 1) * self.in_dim].to_vec(),
-                    );
-                    let y = self.run_one(&img)?;
-                    ensure!(
-                        y.numel() == self.out_dim,
-                        "plan produced {} values per sample, expected {}",
-                        y.numel(),
-                        self.out_dim
-                    );
-                    out.extend_from_slice(y.as_f32()?);
-                }
-                Ok(Tensor::new(vec![n, self.out_dim], out))
+                let img = batch.reshape(vec![n, c, h, w])?;
+                let y = self.run_one(&img)?;
+                ensure!(
+                    y.numel() == n * self.out_dim,
+                    "plan produced {} values for batch {n}, expected {}",
+                    y.numel(),
+                    n * self.out_dim
+                );
+                y.reshape(vec![n, self.out_dim])
             }
         }
     }
@@ -305,9 +331,10 @@ mod tests {
     }
 
     #[test]
-    fn planned_engine_nchw_edge_adapter_matches_per_sample_exec() {
+    fn planned_engine_nchw_batched_run_matches_per_sample_exec() {
         // tiny conv->flatten->matmul graph with a batch-1 reshape baked in,
-        // the same topology shape as CNV's conv->FC transition
+        // the same topology shape as CNV's conv->FC transition; the
+        // batch-symbolic plan runs the whole request batch natively
         let mut b = crate::ir::GraphBuilder::new("tinyconv");
         b.input("x", vec![1, 2, 4, 4]);
         b.initializer(
@@ -336,6 +363,8 @@ mod tests {
         let mut e = PlannedEngine::new(&g).unwrap();
         assert_eq!(e.input_dim(), 32);
         assert_eq!(e.output_dim(), 5);
+        // the baked [1, 48] target was rewritten batch-preserving
+        assert_eq!(e.plan_handle().batch_symbolic_count(), 1, "{}", e.plan_summary());
         let rows: Vec<f32> = (0..2 * 32).map(|i| (i % 13) as f32 / 13.0 - 0.4).collect();
         let y = e.infer_batch(&Tensor::new(vec![2, 32], rows.clone())).unwrap();
         assert_eq!(y.shape(), &[2, 5]);
@@ -344,6 +373,42 @@ mod tests {
             let want = exec::execute_simple(&g, &img).unwrap();
             assert_eq!(&y.as_f32().unwrap()[r * 5..(r + 1) * 5], want.as_f32().unwrap(), "row {r}");
         }
+    }
+
+    #[test]
+    fn planned_engine_accepts_declared_batch_nchw_inputs() {
+        // graphs exported with a fixed batch > 1 also serve per-row
+        let mut b = crate::ir::GraphBuilder::new("b4");
+        b.input("x", vec![4, 2, 3, 3]);
+        b.node("Relu", &["x"], &["r"], &[]);
+        b.node("Flatten", &["r"], &["y"], &[]);
+        b.output("y", vec![4, 18]);
+        let g = b.finish().unwrap();
+        let mut e = PlannedEngine::new(&g).unwrap();
+        assert_eq!(e.input_dim(), 18);
+        assert_eq!(e.output_dim(), 18);
+        let rows: Vec<f32> = (0..3 * 18).map(|i| i as f32 * 0.5 - 10.0).collect();
+        let y = e.infer_batch(&Tensor::new(vec![3, 18], rows.clone())).unwrap();
+        assert_eq!(y.shape(), &[3, 18]);
+        assert_eq!(
+            y.as_f32().unwrap(),
+            rows.iter().map(|&v| v.max(0.0)).collect::<Vec<_>>().as_slice()
+        );
+    }
+
+    #[test]
+    fn shared_engines_use_one_plan_and_agree() {
+        let template = PlannedEngine::from_zoo("TFC-w2a2").unwrap();
+        let plan = template.plan_handle();
+        let mut a = template.share();
+        let mut b = template.share();
+        // one compiled plan behind all three engines (+ our handle)
+        assert!(Arc::ptr_eq(&a.plan_handle(), &b.plan_handle()));
+        assert_eq!(Arc::strong_count(&plan), 4);
+        let x = Tensor::new(vec![2, 784], (0..2 * 784).map(|i| (i % 19) as f32 / 19.0).collect());
+        let ya = a.infer_batch(&x).unwrap();
+        let yb = b.infer_batch(&x).unwrap();
+        assert_eq!(ya, yb);
     }
 
     #[test]

@@ -2,11 +2,17 @@
 //!
 //! The paper's contribution lives in the IR/compiler (L2/L1), so the
 //! coordinator is a thin-but-real serving loop: a request queue, a dynamic
-//! micro-batcher (size- or deadline-triggered), a worker running one of
-//! three engines — the PJRT artifact engine (hot path), the compiled
+//! micro-batcher (size- or deadline-triggered), worker shards running one
+//! of three engines — the PJRT artifact engine (hot path), the compiled
 //! [`PlannedEngine`] (native path: serves zoo models when no PJRT
 //! artifact is present), or the interpreter-backed [`ReferenceEngine`]
 //! (verification path) — and latency/throughput accounting.
+//!
+//! Since the batch-symbolic plan work, [`PlannedEngine`] executes a whole
+//! `[n, c, h, w]` request batch in one plan invocation (no per-sample
+//! NCHW loop), and [`Batcher::start_sharded`] runs several workers over
+//! one queue — each holding a [`PlannedEngine::share`] view of the SAME
+//! `Arc`'d compiled plan, so sharding adds zero duplicate packed weights.
 
 mod batcher;
 mod engine;

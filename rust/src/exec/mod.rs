@@ -24,7 +24,7 @@
 
 use crate::ir::{ModelGraph, DOMAIN_FINN, DOMAIN_QONNX};
 use crate::ops;
-use crate::plan::{ExecutionPlan, PlanOptions, RtVal, RunConfig};
+use crate::plan::{ExecutionPlan, PlanOptions, RtVal, RunConfig, ShapeCheck};
 use crate::tensor::Tensor;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -69,7 +69,8 @@ pub fn execute_with(
         ..Default::default()
     };
     let plan = ExecutionPlan::compile_with(graph, &popts)?;
-    let cfg = RunConfig { check_input_shapes: true, record_intermediates: opts.keep_intermediates };
+    let cfg =
+        RunConfig { shape_check: ShapeCheck::Exact, record_intermediates: opts.keep_intermediates };
     let r = plan.run_cfg(|n| inputs.get(n), &cfg)?;
     let mut intermediates = r.intermediates;
     if opts.keep_intermediates {

@@ -52,9 +52,14 @@
 //!                                  path (naive/serial/packed/threaded)
 //!                                  bit-identical.
 //!
-//!   coordinator::Batcher ──► InferenceEngine
+//!   coordinator::Batcher ──► InferenceEngine   (1..N worker shards over
+//!        │                                      one request queue)
 //!        ├─ PjrtEngine        compiled artifact (fixed batch, pads)
-//!        ├─ PlannedEngine     ExecutionPlan<'static>, any batch size
+//!        ├─ PlannedEngine     Arc<ExecutionPlan<'static>>, any batch
+//!        │                    size natively (plans are batch-symbolic:
+//!        │                    baked batch-1 reshape targets rewritten
+//!        │                    at compile time); share() gives every
+//!        │                    shard a view of ONE plan
 //!        └─ ReferenceEngine   interpreter, verification
 //! ```
 //!

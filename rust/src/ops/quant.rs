@@ -112,16 +112,20 @@ pub fn quant_op(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
         ensure!(s > 0.0, "Quant scale must be positive, got {s}");
     }
     // §Perf fast path: scalar parameters (the overwhelmingly common case)
-    // avoid the 4-way broadcast iterator and hoist all param math out of
-    // the loop (~5x on the elementwise hot path).
+    // avoid the 4-way broadcast iterator and hoist the bounds/param
+    // lookups out of the loop (~5x on the elementwise hot path). The
+    // division is deliberately NOT strength-reduced to `* (1.0/s)`:
+    // multiplying by the rounded reciprocal is up to 1 ulp off the true
+    // quotient, and at a rounding-boundary tie that 1 ulp flips the
+    // output by a full grid step — the fast path must stay bit-identical
+    // to the broadcast path (and to `quantize_dequantize`).
     if ss.len() == 1 && zs.len() == 1 && bs.len() == 1 && out_shape == x.shape() {
         let (qmin, qmax) = quant_bounds(signed, narrow, bs[0]);
         let (s, z) = (ss[0], zs[0]);
-        let inv_s = 1.0 / s;
         let out: Vec<f32> = xs
             .iter()
             .map(|&v| {
-                let q = mode.apply(f64::from(v) * inv_s + z).clamp(qmin, qmax);
+                let q = mode.apply(f64::from(v) / s + z).clamp(qmin, qmax);
                 ((q - z) * s) as f32
             })
             .collect();
@@ -178,8 +182,26 @@ pub fn trunc_op(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
     let zs = zeropt.to_f64_vec();
     let ibw = in_bw.to_f64_vec();
     let obw = out_bw.to_f64_vec();
-    for &b in ibw.iter().chain(obw.iter()) {
-        ensure!(b >= 2.0, "Trunc bit widths must be >= 2, got {b}");
+    // 1-bit outputs are legal truncation targets (the quantized grid
+    // still has 2^1 levels); what is *not* legal is widening — a
+    // negative shift would amplify the magnitude instead of truncating.
+    for &b in obw.iter() {
+        ensure!(b >= 1.0, "Trunc out_bit_width must be >= 1, got {b}");
+    }
+    for &b in ibw.iter() {
+        ensure!(b >= 1.0, "Trunc in_bit_width must be >= 1, got {b}");
+    }
+    // scalar widths (the common case) validate once up front — this also
+    // covers zero-element outputs, which never reach the loop; broadcast
+    // (per-channel) widths pair up per element inside the loop instead
+    let widths_scalar = ibw.len() == 1 && obw.len() == 1;
+    if widths_scalar {
+        ensure!(
+            ibw[0] >= obw[0],
+            "Trunc out_bit_width {} exceeds in_bit_width {} (widening is not truncation)",
+            obw[0],
+            ibw[0]
+        );
     }
     let ix = BroadcastIter::new(x.shape(), &out_shape);
     let is = BroadcastIter::new(scale.shape(), &out_shape);
@@ -188,6 +210,14 @@ pub fn trunc_op(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
     let io = BroadcastIter::new(out_bw.shape(), &out_shape);
     let mut out = Vec::with_capacity(out_shape.iter().product());
     for ((((ox, os), oz), oi), oo) in ix.zip(is).zip(iz).zip(ii).zip(io) {
+        if !widths_scalar {
+            ensure!(
+                ibw[oi] >= obw[oo],
+                "Trunc out_bit_width {} exceeds in_bit_width {} (widening is not truncation)",
+                obw[oo],
+                ibw[oi]
+            );
+        }
         let s = ss[os];
         let z = zs[oz];
         // recover the integer value under the declared input quantization
@@ -330,6 +360,32 @@ mod tests {
     }
 
     #[test]
+    fn scalar_fast_path_matches_broadcast_path_at_rounding_boundary() {
+        // s = 0.102f32: x = 6.5 * s is exactly representable in f32, so
+        // the true quotient x / s is exactly 6.5 — a round-half-even tie
+        // that resolves to 6. Multiplying by the rounded reciprocal
+        // instead gives x * (1.0/s) = 6.500000000000001, which rounds to
+        // 7: a 1-ulp divergence becomes a full grid step. The scalar
+        // fast path must therefore divide, exactly like the broadcast
+        // path does.
+        let s = 0.102f32;
+        let x_val = (6.5 * f64::from(s)) as f32;
+        assert_eq!(f64::from(x_val), 6.5 * f64::from(s), "tie input must be exact in f32");
+        let x = Tensor::new(vec![2], vec![x_val, -x_val]);
+        let scale = Tensor::scalar(s);
+        let node = quant_node(true, false, "ROUND");
+        // scalar params select the fast path ...
+        let fast =
+            quant_op(&node, &[&x, &scale, &Tensor::scalar(0.0), &Tensor::scalar(4.0)]).unwrap();
+        // ... a length-2 zero point (same values) forces the broadcast path
+        let z2 = Tensor::new(vec![2], vec![0.0, 0.0]);
+        let broad = quant_op(&node, &[&x, &scale, &z2, &Tensor::scalar(4.0)]).unwrap();
+        assert_eq!(fast[0], broad[0], "fast path diverged from broadcast path");
+        // the tie resolves to the even integer 6 (and -6.5 to -6)
+        assert_eq!(fast[0].as_f32().unwrap(), &[6.0 * s, -6.0 * s]);
+    }
+
+    #[test]
     fn bipolar_quant_signs() {
         let x = Tensor::new(vec![4], vec![-3.0, -0.0, 0.0, 2.0]);
         let s = Tensor::scalar(0.25);
@@ -361,6 +417,34 @@ mod tests {
         let y = trunc_op(&node, &[&x, &s, &z, &i, &o]).unwrap();
         // 203/4 = 50.75 -> 51
         assert_eq!(y[0].as_f32().unwrap(), &[51.0]);
+    }
+
+    #[test]
+    fn trunc_to_one_bit_is_legal() {
+        // binarizing truncation: 2-bit -> 1-bit drops one LSB (shift 2)
+        let node = Node::new("Trunc", &["x", "s", "z", "i", "o"], &["y"]).with_domain(DOMAIN_QONNX);
+        let x = Tensor::new(vec![3], vec![3.0, 1.0, 0.0]);
+        let (s, z) = (Tensor::scalar(1.0), Tensor::scalar(0.0));
+        let (i, o) = (Tensor::scalar(2.0), Tensor::scalar(1.0));
+        let y = trunc_op(&node, &[&x, &s, &z, &i, &o]).unwrap();
+        assert_eq!(y[0].as_f32().unwrap(), &[1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn trunc_rejects_widening_and_sub_one_widths() {
+        let node = Node::new("Trunc", &["x", "s", "z", "i", "o"], &["y"]).with_domain(DOMAIN_QONNX);
+        let x = Tensor::new(vec![1], vec![5.0]);
+        let (s, z) = (Tensor::scalar(1.0), Tensor::scalar(0.0));
+        // out wider than in: a negative shift would *amplify*, not truncate
+        let err = trunc_op(&node, &[&x, &s, &z, &Tensor::scalar(4.0), &Tensor::scalar(8.0)])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("exceeds in_bit_width"), "{err}");
+        // widths below 1 bit are meaningless
+        assert!(trunc_op(&node, &[&x, &s, &z, &Tensor::scalar(4.0), &Tensor::scalar(0.0)]).is_err());
+        // equal widths are a legal no-op shift
+        let y = trunc_op(&node, &[&x, &s, &z, &Tensor::scalar(4.0), &Tensor::scalar(4.0)]).unwrap();
+        assert_eq!(y[0].as_f32().unwrap(), &[5.0]);
     }
 
     #[test]

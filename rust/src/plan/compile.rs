@@ -1,6 +1,7 @@
 //! Plan compilation: topo-freeze, constant folding, identity elision,
-//! kernel specialization (weight packing + epilogue fusion), last-use
-//! analysis, and linear-scan slot assignment.
+//! kernel specialization (weight packing + epilogue fusion), the
+//! batch-symbolic reshape rewrite, last-use analysis, and linear-scan
+//! slot assignment.
 //!
 //! Compilation performs **no per-run tensor copies**: initializers are
 //! borrowed from the source graph, and only compile-time-folded results
@@ -15,9 +16,19 @@
 //! (BatchNorm / Quant / BipolarQuant / Relu) absorbs that consumer into
 //! its scatter-loop epilogue — the consumer's step disappears from the
 //! schedule entirely.
+//!
+//! The **batch-symbolic pass** runs in the same walk: `Reshape` nodes
+//! whose constant targets bake the declared batch of 1 into their
+//! leading dim (conv-net flatten chains) become batch-preserving
+//! [`super::kernel::BatchReshape`] kernels, so one plan natively serves
+//! `[n, c, h, w]` batches with no per-sample loop at the engine edge.
+//! (`Flatten` with the default `axis = 1` is already batch-preserving
+//! and needs no rewrite.) All other kernels — packed conv/matmul, pools,
+//! elementwise — iterate over the leading dim anyway, against the same
+//! packed weights.
 
 use super::arena::SlotArena;
-use super::kernel::{CompiledKernel, Epilogue, PackedConv, PackedGemm, PackedMatMul};
+use super::kernel::{BatchReshape, CompiledKernel, Epilogue, PackedConv, PackedGemm, PackedMatMul};
 use super::{ExecutionPlan, PlanConst, PlanInput, PlanOptions, PlanOutput, Preload, Step};
 use crate::ir::{ModelGraph, Node, DOMAIN_FINN, DOMAIN_QONNX};
 use crate::ops;
@@ -142,6 +153,55 @@ fn spec_gemm<'g>(
     Some((pg, ins))
 }
 
+/// The batch-symbolic pass: try to rewrite a `Reshape` whose constant
+/// target bakes the declared batch of 1 into its leading dim (the
+/// conv-net flatten chain, e.g. CNV's `[1, 256]` — or `[1, -1]` for the
+/// cleaned raw export) into a batch-preserving [`BatchReshape`] kernel.
+///
+/// Plain targets get the *fallback* kernel (original target tried first,
+/// so anything the unrewritten plan accepted is byte-identical; larger
+/// batches take the `[0, …]` copy-dim form). Targets containing a `-1`
+/// wildcard resolve against any element count, so they are rewritten
+/// unconditionally — but only when the graph's shape annotations prove
+/// the data input's leading dim is 1 at declared shapes (`cleanup` /
+/// `infer_shapes` provides these); otherwise the node stays generic.
+fn spec_batch_reshape<'g>(
+    graph: &'g ModelGraph,
+    node: &'g Node,
+    consts: &BTreeMap<&'g str, PlanConst<'g>>,
+    alias: &BTreeMap<&'g str, &'g str>,
+) -> Option<(BatchReshape, Vec<&'g str>)> {
+    if node.inputs.len() != 2 || node.inputs[0].is_empty() || node.inputs[1].is_empty() {
+        return None;
+    }
+    let target = lookup(consts, alias, node.inputs[1].as_str())?;
+    if !target.is_i64() || target.rank() != 1 {
+        return None;
+    }
+    let dims = target.as_i64().ok()?;
+    // need a literal leading 1 and at least one trailing dim to preserve
+    if dims.len() < 2 || dims[0] != 1 {
+        return None;
+    }
+    // positional copy-dims interact with the rewritten leading 0; decline
+    if dims[1..].contains(&0) {
+        return None;
+    }
+    let has_wildcard = dims[1..].contains(&-1);
+    if has_wildcard {
+        // `[1, -1]` swallows any batch silently — rewrite only when the
+        // input is provably batch-1-leading, where both forms agree
+        let in_shape = graph.tensor_shape(node.inputs[0].as_str())?;
+        if in_shape.first() != Some(&1) {
+            return None;
+        }
+    }
+    Some((
+        BatchReshape::new(dims, !has_wildcard),
+        vec![canon(alias, node.inputs[0].as_str())],
+    ))
+}
+
 /// Try to lower a MatMul with a constant rhs into a packed kernel.
 fn spec_matmul<'g>(
     node: &'g Node,
@@ -249,11 +309,26 @@ pub(super) fn compile<'g>(graph: &'g ModelGraph, opts: &PlanOptions) -> Result<E
     let mut specs: Vec<StepSpec<'g>> = Vec::with_capacity(kept.len());
     let mut packed_count = 0usize;
     let mut fused_count = 0usize;
+    let mut batch_symbolic_count = 0usize;
     for (ki, &(node_idx, f)) in kept.iter().enumerate() {
         if consumed[ki] {
             continue;
         }
         let node = &graph.nodes[node_idx];
+        // batch-symbolic pass: independent of `specialize` so even the
+        // generic (PR-1-style) plan serves any leading batch
+        if opts.batch_symbolic && node.op_type == "Reshape" {
+            if let Some((br, in_names)) = spec_batch_reshape(graph, node, &consts, &alias) {
+                batch_symbolic_count += 1;
+                specs.push(StepSpec {
+                    node_idx,
+                    out_node_idx: node_idx,
+                    kernel: CompiledKernel::Reshape(Arc::new(br)),
+                    in_names,
+                });
+                continue;
+            }
+        }
         if opts.specialize {
             if node.op_type == "Conv" {
                 if let Some((mut pc, in_names)) = spec_conv(node, &consts, &alias) {
@@ -519,6 +594,7 @@ pub(super) fn compile<'g>(graph: &'g ModelGraph, opts: &PlanOptions) -> Result<E
         elided_count,
         packed_count,
         fused_count,
+        batch_symbolic_count,
     })
 }
 
@@ -605,6 +681,81 @@ mod tests {
         assert_eq!(fused, unfused, "fusion must be bit-exact");
         let interp = crate::exec::interpret(&g, &m).unwrap();
         assert_eq!(interp.outputs, fused);
+    }
+
+    #[test]
+    fn batch_symbolic_pass_rewrites_baked_reshape() {
+        use super::super::{RunConfig, ShapeCheck};
+        // conv -> reshape [1, 48] -> matmul: the CNV conv->FC shape
+        let mut b = GraphBuilder::new("bsym");
+        b.input("x", vec![1, 3, 4, 4]);
+        b.initializer("w", Tensor::new(vec![3, 3, 1, 1], (0..9).map(|v| v as f32 * 0.5 - 2.0).collect()));
+        b.node("Conv", &["x", "w"], &["c"], &[("kernel_shape", vec![1i64, 1].into())]);
+        b.initializer("target", Tensor::new_i64(vec![2], vec![1, 48]));
+        b.node("Reshape", &["c", "target"], &["flat"], &[]);
+        b.initializer("fcw", Tensor::new(vec![48, 2], (0..96).map(|v| (v % 7) as f32 * 0.25 - 0.75).collect()));
+        b.node("MatMul", &["flat", "fcw"], &["y"], &[]);
+        b.output("y", vec![1, 2]);
+        let g = b.finish().unwrap();
+        let plan = ExecutionPlan::compile(&g).unwrap();
+        assert_eq!(plan.batch_symbolic_count(), 1, "{}", plan.summary());
+        // the rewritten target is baked into the kernel, not a preload
+        assert_eq!(plan.preload_count(), 0, "{}", plan.summary());
+
+        // batch 1 through the checked path is bit-identical to the interpreter
+        let row: Vec<f32> = (0..48).map(|i| (i % 5) as f32 * 0.3 - 0.6).collect();
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("x".to_string(), Tensor::new(vec![1, 3, 4, 4], row.clone()));
+        let y1 = plan.run(&m).unwrap();
+        assert_eq!(crate::exec::interpret(&g, &m).unwrap().outputs, y1);
+
+        // batch 3 through one invocation == three per-sample runs
+        let mut rows = Vec::new();
+        for r in 0..3 {
+            rows.extend(row.iter().map(|v| v + r as f32 * 0.1));
+        }
+        let x3 = Tensor::new(vec![3, 3, 4, 4], rows.clone());
+        let cfg = RunConfig { shape_check: ShapeCheck::FreeBatch, record_intermediates: false };
+        let y3 = plan.run_cfg(|n| (n == "x").then_some(&x3), &cfg).unwrap().outputs;
+        assert_eq!(y3["y"].shape(), &[3, 2]);
+        for r in 0..3 {
+            let mut mi = std::collections::BTreeMap::new();
+            mi.insert("x".to_string(), Tensor::new(vec![1, 3, 4, 4], rows[r * 48..(r + 1) * 48].to_vec()));
+            let yi = plan.run(&mi).unwrap();
+            assert_eq!(
+                &y3["y"].as_f32().unwrap()[r * 2..(r + 1) * 2],
+                yi["y"].as_f32().unwrap(),
+                "row {r}"
+            );
+        }
+    }
+
+    #[test]
+    fn batch_symbolic_pass_declines_without_proof_for_wildcards() {
+        // [1, -1] resolves against any batch, so without a shape
+        // annotation proving a batch-1-leading input it stays generic
+        let mut b = GraphBuilder::new("bsym-wild");
+        b.input("x", vec![1, 2, 2, 2]);
+        b.node("Relu", &["x"], &["r"], &[]);
+        b.initializer("target", Tensor::new_i64(vec![2], vec![1, -1]));
+        b.node("Reshape", &["r", "target"], &["y"], &[]);
+        b.output("y", vec![1, 8]);
+        let g = b.finish().unwrap();
+        let plan = ExecutionPlan::compile(&g).unwrap();
+        assert_eq!(plan.batch_symbolic_count(), 0, "{}", plan.summary());
+
+        // with inferred shapes the proof exists and the rewrite applies
+        let mut g2 = g.clone();
+        crate::transforms::infer_shapes(&mut g2).unwrap();
+        let plan2 = ExecutionPlan::compile(&g2).unwrap();
+        assert_eq!(plan2.batch_symbolic_count(), 1, "{}", plan2.summary());
+        let x = Tensor::new(vec![2, 2, 2, 2], (0..16).map(|v| v as f32 - 8.0).collect());
+        let cfg = super::super::RunConfig {
+            shape_check: super::super::ShapeCheck::FreeBatch,
+            record_intermediates: false,
+        };
+        let y = plan2.run_cfg(|n| (n == "x").then_some(&x), &cfg).unwrap().outputs;
+        assert_eq!(y["y"].shape(), &[2, 8]);
     }
 
     #[test]

@@ -35,6 +35,7 @@ use super::arena::ScratchArena;
 use crate::ir::Node;
 use crate::ops::linalg::{conv_params, ConvParams};
 use crate::ops::quant::{quant_bounds, RoundingMode};
+use crate::ops::shape_ops::resolve_reshape;
 use crate::ops::OpFn;
 use crate::tensor::{conv_out_dim, gemm_prepacked, im2col_group_into, PackedB, Tensor};
 use anyhow::{ensure, Result};
@@ -52,6 +53,9 @@ pub enum CompiledKernel {
     Gemm(Arc<PackedGemm>),
     /// MatMul with a constant rhs.
     MatMul(Arc<PackedMatMul>),
+    /// Reshape whose constant target baked a batch of 1 into its leading
+    /// dim, rewritten batch-preserving (the batch-symbolic compile pass).
+    Reshape(Arc<BatchReshape>),
 }
 
 impl CompiledKernel {
@@ -76,6 +80,10 @@ impl CompiledKernel {
                 ensure!(!inputs.is_empty(), "PackedMatMul wants the lhs tensor");
                 Ok(vec![pm.run(inputs[0], scratch)?])
             }
+            CompiledKernel::Reshape(br) => {
+                ensure!(!inputs.is_empty(), "BatchReshape wants the data tensor");
+                Ok(vec![br.run(inputs[0])?])
+            }
         }
     }
 
@@ -87,12 +95,63 @@ impl CompiledKernel {
             CompiledKernel::Conv(pc) => format!("PackedConv+{}ep", pc.epilogue.len()),
             CompiledKernel::Gemm(_) => "PackedGemm".to_string(),
             CompiledKernel::MatMul(_) => "PackedMatMul".to_string(),
+            CompiledKernel::Reshape(_) => "BatchReshape".to_string(),
         }
     }
 
-    /// Whether this is a specialized (non-generic) kernel.
+    /// Whether this is a specialized prepacked (tier-2) kernel.
     pub fn is_packed(&self) -> bool {
-        !matches!(self, CompiledKernel::Op(_))
+        matches!(
+            self,
+            CompiledKernel::Conv(_) | CompiledKernel::Gemm(_) | CompiledKernel::MatMul(_)
+        )
+    }
+}
+
+/// A `Reshape` whose compile-time-constant target baked the declared
+/// batch of 1 into its leading dimension (the CNV conv→FC flatten chain:
+/// `[1, 256]`, or `[1, -1]` for the cleaned raw export).
+///
+/// The batch-symbolic pass rewrites the leading `1` to ONNX's `0`
+/// ("copy the input's dim 0") so the same plan serves any leading batch:
+/// `[n, 256, 1, 1] -> [n, 256]` instead of failing the element-count
+/// check. Two modes keep it bit-identical to the generic kernel:
+///
+/// * **fallback** (`try_orig_first`) — the original target is attempted
+///   first and wins whenever it resolves, so every input the unrewritten
+///   plan accepted produces byte-identical output; only inputs the
+///   original target *rejects* (a larger batch) take the rewritten form.
+/// * **always** — targets containing a `-1` wildcard resolve against any
+///   element count (collapsing the batch into the wildcard), so the
+///   fallback can't discriminate. The compile pass only emits this mode
+///   when shape inference proves the data input's leading dim is 1 at
+///   declared shapes, where both forms agree.
+#[derive(Debug)]
+pub struct BatchReshape {
+    /// The node's original target (leading dim literally 1).
+    orig: Vec<i64>,
+    /// Batch-preserving form: leading dim 0 (= copy input dim 0).
+    batched: Vec<i64>,
+    try_orig_first: bool,
+}
+
+impl BatchReshape {
+    pub(crate) fn new(orig: &[i64], try_orig_first: bool) -> BatchReshape {
+        let mut batched = orig.to_vec();
+        batched[0] = 0;
+        BatchReshape { orig: orig.to_vec(), batched, try_orig_first }
+    }
+
+    /// Resolve and apply the target against `x` (same data, new shape —
+    /// byte-identical to [`crate::ops::shape_ops::reshape`]).
+    pub fn run(&self, x: &Tensor) -> Result<Tensor> {
+        if self.try_orig_first {
+            if let Ok(shape) = resolve_reshape(x.shape(), &self.orig) {
+                return x.reshape(shape);
+            }
+        }
+        let shape = resolve_reshape(x.shape(), &self.batched)?;
+        x.reshape(shape)
     }
 }
 
@@ -106,8 +165,10 @@ pub(crate) enum Epilogue {
     /// `Relu`: `v.max(0.0)`.
     Relu,
     /// Scalar-parameter `Quant` (the [`crate::ops::quant::quant_op`]
-    /// fast path, hoisted to compile time).
-    Quant { inv_s: f64, s: f64, z: f64, qmin: f64, qmax: f64, mode: RoundingMode },
+    /// fast path, hoisted to compile time). Divides by the scale —
+    /// never multiplies by the reciprocal — so it stays bit-identical
+    /// to the generic op at rounding-boundary ties.
+    Quant { s: f64, z: f64, qmin: f64, qmax: f64, mode: RoundingMode },
     /// Scalar-scale `BipolarQuant`.
     Bipolar { s: f64 },
     /// `BatchNormalization` with per-channel constants; `denom` is
@@ -120,8 +181,8 @@ impl Epilogue {
     fn apply(&self, v: f32, oc: usize) -> f32 {
         match self {
             Epilogue::Relu => v.max(0.0),
-            Epilogue::Quant { inv_s, s, z, qmin, qmax, mode } => {
-                let q = mode.apply(f64::from(v) * inv_s + z).clamp(*qmin, *qmax);
+            Epilogue::Quant { s, z, qmin, qmax, mode } => {
+                let q = mode.apply(f64::from(v) / s + z).clamp(*qmin, *qmax);
                 ((q - z) * s) as f32
             }
             Epilogue::Bipolar { s } => {
@@ -177,7 +238,7 @@ impl Epilogue {
                     return None;
                 }
                 let (qmin, qmax) = quant_bounds(signed, narrow, b);
-                Some(Epilogue::Quant { inv_s: 1.0 / s, s, z, qmin, qmax, mode })
+                Some(Epilogue::Quant { s, z, qmin, qmax, mode })
             }
             "BipolarQuant" if node.inputs.len() == 2 => {
                 let scale = const_in(1)?;
@@ -585,6 +646,29 @@ mod tests {
         let a3 = Tensor::new(vec![2, 2, 3], (0..12).map(|v| v as f32 * 0.25 - 1.0).collect());
         let want3 = ops::linalg::matmul(&node, &[&a3, &b]).unwrap();
         assert_eq!(pm.run(&a3, &mut ScratchArena::new()).unwrap(), want3[0]);
+    }
+
+    #[test]
+    fn batch_reshape_preserves_leading_dim() {
+        // fallback mode: the original [1, 6] wins whenever it resolves
+        let br = BatchReshape::new(&[1, 6], true);
+        let x1 = Tensor::new(vec![1, 2, 3], (0..6).map(|v| v as f32).collect());
+        let y1 = br.run(&x1).unwrap();
+        assert_eq!(y1.shape(), &[1, 6]);
+        assert_eq!(y1.as_f32().unwrap(), x1.as_f32().unwrap());
+        // ... and a batch the original rejects takes the batched form
+        let x4 = Tensor::new(vec![4, 2, 3], (0..24).map(|v| v as f32).collect());
+        let y4 = br.run(&x4).unwrap();
+        assert_eq!(y4.shape(), &[4, 6]);
+        assert_eq!(y4.as_f32().unwrap(), x4.as_f32().unwrap());
+        // wildcard targets run the batched form unconditionally
+        let brw = BatchReshape::new(&[1, -1], false);
+        let y = brw.run(&x4).unwrap();
+        assert_eq!(y.shape(), &[4, 6]);
+        let y = brw.run(&x1).unwrap();
+        assert_eq!(y.shape(), &[1, 6]);
+        // element-count mismatches still error
+        assert!(br.run(&Tensor::new(vec![1, 5], vec![0.0; 5])).is_err());
     }
 
     #[test]

@@ -52,6 +52,24 @@
 //! fused epilogue replays the generic op's per-element arithmetic
 //! (`tests/plan_equiv.rs` asserts byte equality across the zoo).
 //!
+//! # Batch-symbolic plans
+//!
+//! Compilation additionally rewrites batch-1-baked constant `Reshape`
+//! targets (the conv-net flatten chains of the paper's Fig. 1/2) into
+//! batch-preserving [`kernel::BatchReshape`] kernels, making the plan
+//! *symbolic over the leading batch dim*: every other kernel — packed
+//! conv/matmul, pools, elementwise — already iterates over the leading
+//! axis against the same packed weights. A plan compiled from a batch-1
+//! graph therefore executes `[n, c, h, w]` batches in ONE invocation
+//! when run under [`ShapeCheck::FreeBatch`] (rank and trailing dims
+//! still validated; [`ShapeCheck::Exact`] keeps interpreter error
+//! parity for the one-shot wrapper). This is what lets
+//! [`crate::coordinator::PlannedEngine`] serve batched conv-net
+//! requests natively instead of looping per sample at the NCHW edge,
+//! and — because the plan is immutable after compile — what lets
+//! sharded batcher workers share one `Arc`'d plan (packed weights
+//! resident once) with only a per-worker [`ScratchArena`].
+//!
 //! # Arena scratch contract
 //!
 //! Kernels receive a `&mut` [`ScratchArena`] at invocation and draw
@@ -101,21 +119,45 @@ pub struct PlanOptions {
     /// Callers that need every intermediate recorded by name disable
     /// this (fused steps only record their final output).
     pub fuse_epilogues: bool,
+    /// Rewrite batch-1-baked constant `Reshape` targets (conv-net
+    /// flatten chains) into batch-preserving [`kernel::BatchReshape`]
+    /// kernels, making the compiled plan symbolic over the leading batch
+    /// dim. Independent of `specialize`; bit-identical at declared
+    /// shapes (see [`kernel::BatchReshape`] for the exact contract).
+    pub batch_symbolic: bool,
 }
 
 impl Default for PlanOptions {
     fn default() -> PlanOptions {
-        PlanOptions { standard_onnx_only: false, specialize: true, fuse_epilogues: true }
+        PlanOptions {
+            standard_onnx_only: false,
+            specialize: true,
+            fuse_epilogues: true,
+            batch_symbolic: true,
+        }
     }
+}
+
+/// How bound inputs are validated against the graph's declared shapes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShapeCheck {
+    /// Inputs must match declared shapes exactly (interpreter error
+    /// parity — the default).
+    Exact,
+    /// The leading (batch) axis is free; rank and trailing dims must
+    /// match. This is the batched-serving mode: a batch-symbolic plan
+    /// compiled from a batch-1 graph accepts `[n, …]` inputs.
+    FreeBatch,
+    /// No validation. For engines re-batching arbitrary graphs where
+    /// the kernels themselves enforce shape agreement.
+    Skip,
 }
 
 /// Per-run configuration.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
-    /// Check provided inputs against the graph's declared shapes.
-    /// Engines that re-batch a fixed-batch graph disable this (the kernels
-    /// themselves are batch-agnostic).
-    pub check_input_shapes: bool,
+    /// Input-shape validation mode (see [`ShapeCheck`]).
+    pub shape_check: ShapeCheck,
     /// Record every loaded/computed tensor by name (shape inference and
     /// debugging). Includes preloads, step outputs, compile-time-folded
     /// constants and identity aliases. Initializers consumed *only* by
@@ -127,7 +169,7 @@ pub struct RunConfig {
 
 impl Default for RunConfig {
     fn default() -> RunConfig {
-        RunConfig { check_input_shapes: true, record_intermediates: false }
+        RunConfig { shape_check: ShapeCheck::Exact, record_intermediates: false }
     }
 }
 
@@ -251,6 +293,7 @@ pub struct ExecutionPlan<'g> {
     pub(crate) elided_count: usize,
     pub(crate) packed_count: usize,
     pub(crate) fused_count: usize,
+    pub(crate) batch_symbolic_count: usize,
 }
 
 /// Result of a plan run.
@@ -294,6 +337,7 @@ impl<'g> ExecutionPlan<'g> {
             elided_count: self.elided_count,
             packed_count: self.packed_count,
             fused_count: self.fused_count,
+            batch_symbolic_count: self.batch_symbolic_count,
         }
     }
 
@@ -334,6 +378,13 @@ impl<'g> ExecutionPlan<'g> {
     /// Elementwise nodes absorbed into packed-conv epilogues.
     pub fn fused_epilogue_count(&self) -> usize {
         self.fused_count
+    }
+
+    /// `Reshape` nodes rewritten batch-preserving by the batch-symbolic
+    /// pass. When > 0 (or the graph needed no rewrites), the plan serves
+    /// any leading batch through [`ShapeCheck::FreeBatch`].
+    pub fn batch_symbolic_count(&self) -> usize {
+        self.batch_symbolic_count
     }
 
     /// Execute on named inputs, returning the graph outputs.
@@ -377,16 +428,31 @@ impl<'g> ExecutionPlan<'g> {
         for pi in &self.inputs {
             let t = fetch(&pi.name)
                 .with_context(|| format!("missing input tensor '{}'", pi.name))?;
-            if cfg.check_input_shapes {
-                if let Some(shape) = &pi.shape {
-                    if t.shape() != shape.as_slice() {
-                        bail!(
-                            "input '{}' shape {:?} does not match declared {:?}",
-                            pi.name,
-                            t.shape(),
-                            shape
-                        );
+            if let Some(shape) = &pi.shape {
+                let ok = match cfg.shape_check {
+                    ShapeCheck::Skip => true,
+                    ShapeCheck::Exact => t.shape() == shape.as_slice(),
+                    // leading (batch) axis free, rank + trailing dims
+                    // fixed; never stricter than Exact (scalars pass)
+                    ShapeCheck::FreeBatch => {
+                        t.shape() == shape.as_slice()
+                            || (!shape.is_empty()
+                                && t.rank() == shape.len()
+                                && t.shape()[1..] == shape[1..])
                     }
+                };
+                if !ok {
+                    bail!(
+                        "input '{}' shape {:?} does not match declared {:?}{}",
+                        pi.name,
+                        t.shape(),
+                        shape,
+                        if cfg.shape_check == ShapeCheck::FreeBatch {
+                            " (batch axis free)"
+                        } else {
+                            ""
+                        }
+                    );
                 }
             }
             if let Some(slot) = pi.slot {
@@ -470,14 +536,15 @@ impl<'g> ExecutionPlan<'g> {
     pub fn summary(&self) -> String {
         let mut s = format!(
             "plan '{}': {} graph nodes -> {} steps ({} const-folded, {} identity-elided, \
-             {} packed, {} epilogue-fused)\n",
+             {} packed, {} epilogue-fused, {} batch-symbolic)\n",
             self.name,
             self.node_count,
             self.steps.len(),
             self.folded_count,
             self.elided_count,
             self.packed_count,
-            self.fused_count
+            self.fused_count,
+            self.batch_symbolic_count
         );
         let _ = writeln!(
             s,
@@ -612,10 +679,18 @@ mod tests {
         let g = b.finish().unwrap();
         let plan = ExecutionPlan::compile(&g).unwrap();
         let batch = Tensor::full(vec![5, 4], -1.0);
-        let cfg = RunConfig { check_input_shapes: false, record_intermediates: false };
-        let r = plan.run_cfg(|n| (n == "x").then_some(&batch), &cfg).unwrap();
-        assert_eq!(r.outputs["y"].shape(), &[5, 4]);
-        // and the checked path still rejects it
+        for check in [ShapeCheck::Skip, ShapeCheck::FreeBatch] {
+            let cfg = RunConfig { shape_check: check, record_intermediates: false };
+            let r = plan.run_cfg(|n| (n == "x").then_some(&batch), &cfg).unwrap();
+            assert_eq!(r.outputs["y"].shape(), &[5, 4]);
+        }
+        // FreeBatch still validates rank and trailing dims
+        let bad = Tensor::full(vec![5, 3], -1.0);
+        let cfg = RunConfig { shape_check: ShapeCheck::FreeBatch, record_intermediates: false };
+        let err =
+            plan.run_cfg(|n| (n == "x").then_some(&bad), &cfg).unwrap_err().to_string();
+        assert!(err.contains("does not match declared"), "{err}");
+        // and the exact (default) path still rejects re-batching
         let mut m = BTreeMap::new();
         m.insert("x".to_string(), batch);
         assert!(plan.run(&m).is_err());
@@ -635,7 +710,7 @@ mod tests {
         let plan = ExecutionPlan::compile(&g).unwrap();
         let mut m = BTreeMap::new();
         m.insert("x".to_string(), Tensor::new(vec![1, 2], vec![2.0, -1.0]));
-        let cfg = RunConfig { check_input_shapes: true, record_intermediates: true };
+        let cfg = RunConfig { shape_check: ShapeCheck::Exact, record_intermediates: true };
         let r = plan.run_cfg(|n| m.get(n), &cfg).unwrap();
         for name in ["x", "r", "wq", "mm", "y"] {
             assert!(r.intermediates.contains_key(name), "missing '{name}'");

@@ -57,6 +57,16 @@ fn lower_quant(graph: &mut ModelGraph, idx: usize, node: &Node) -> Result<()> {
         p.bit_width,
         node.name
     );
+    // Fractional widths (paper §V, e.g. 7.5 bits) produce non-integer
+    // Clip bounds like -90.5 that no int8 container represents — a ✗
+    // cell of Table I, same as >8-bit precision.
+    ensure!(
+        p.bit_width.fract() == 0.0,
+        "QCDQ cannot represent fractional {}-bit quantization (node '{}'): \
+         integer-container Clip bounds only",
+        p.bit_width,
+        node.name
+    );
     ensure!(
         p.rounding_mode == "ROUND",
         "QCDQ cannot represent rounding mode '{}' (node '{}')",
@@ -172,6 +182,18 @@ mod tests {
         let mut g = quant_graph(9.0, true, false, "ROUND");
         let err = lower_to_qcdq(&mut g).unwrap_err();
         assert!(err.to_string().contains("8-bit"));
+    }
+
+    #[test]
+    fn rejects_fractional_bit_width_but_native_exec_accepts() {
+        // nb = 7.5 (paper §V) executes natively on the QONNX backend ...
+        let g0 = quant_graph(7.5, true, false, "ROUND");
+        let y = execute_simple(&g0, &ramp()).unwrap();
+        assert_eq!(y.shape(), &[1, 16]);
+        // ... but QCDQ has no int8 container for Clip bounds like -90.5
+        let mut g1 = g0.clone();
+        let err = lower_to_qcdq(&mut g1).unwrap_err().to_string();
+        assert!(err.contains("fractional"), "{err}");
     }
 
     #[test]

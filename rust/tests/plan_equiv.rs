@@ -7,12 +7,13 @@
 use qonnx::coordinator::{Batcher, BatcherConfig, InferenceEngine, PlannedEngine};
 use qonnx::exec::{self, ExecOptions};
 use qonnx::ir::{AttrValue, GraphBuilder, ModelGraph};
-use qonnx::plan::{ExecutionPlan, PlanOptions};
+use qonnx::plan::{ExecutionPlan, PlanOptions, RunConfig, ShapeCheck};
 use qonnx::tensor::Tensor;
 use qonnx::testutil::random_tensor;
 use qonnx::transforms;
 use qonnx::zoo::{self, keras_to_qonnx, rng::Rng, tfc, KerasModel, TfcParams};
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 fn random_inputs(g: &ModelGraph, seed: u64) -> BTreeMap<String, Tensor> {
     let mut rng = Rng::new(seed);
@@ -273,6 +274,80 @@ fn batcher_serves_cnv_through_nchw_adapter() {
     let x = Tensor::new(vec![1, 3, 32, 32], input);
     let want = exec::execute_simple(&g, &x).unwrap();
     assert_eq!(served, want.as_f32().unwrap());
+}
+
+/// The tentpole acceptance case: one batch-symbolic plan executes a
+/// batch-8 CNV request in ONE invocation, byte-identical both to eight
+/// per-sample plan runs and to eight interpreter runs.
+#[test]
+fn cnv_batched_plan_matches_per_sample_and_interpreter() {
+    let mut g = zoo::build("CNV-w2a2", 1, 32).unwrap();
+    transforms::cleanup(&mut g).unwrap();
+    let plan = ExecutionPlan::compile(&g).unwrap();
+    assert!(
+        plan.batch_symbolic_count() >= 1,
+        "CNV's baked flatten target must be rewritten:\n{}",
+        plan.summary()
+    );
+    let in_name = g.inputs[0].name.clone();
+    let out_name = g.outputs[0].name.clone();
+    let n = 8usize;
+    let mut rng = Rng::new(77);
+    let xb = random_tensor(&mut rng, vec![n, 3, 32, 32], 0.0, 1.0);
+
+    // one invocation for the whole batch (leading axis free)
+    let cfg = RunConfig { shape_check: ShapeCheck::FreeBatch, record_intermediates: false };
+    let yb = plan
+        .run_cfg(|nm| (nm == in_name).then_some(&xb), &cfg)
+        .unwrap()
+        .outputs
+        .remove(&out_name)
+        .unwrap();
+    assert_eq!(yb.shape(), &[n, 10]);
+
+    let rows = xb.as_f32().unwrap();
+    let yrows = yb.as_f32().unwrap();
+    for r in 0..n {
+        let img = Tensor::new(vec![1, 3, 32, 32], rows[r * 3072..(r + 1) * 3072].to_vec());
+        let mut m = BTreeMap::new();
+        m.insert(in_name.clone(), img);
+        // per-sample plan run (exact declared shapes)
+        let y1 = plan.run(&m).unwrap().remove(&out_name).unwrap();
+        assert_eq!(&yrows[r * 10..(r + 1) * 10], y1.as_f32().unwrap(), "plan row {r}");
+        // name-keyed interpreter
+        let yi = exec::interpret(&g, &m).unwrap().outputs.remove(&out_name).unwrap();
+        assert_eq!(&yrows[r * 10..(r + 1) * 10], yi.as_f32().unwrap(), "interp row {r}");
+    }
+}
+
+/// Two sharded batcher workers serve the SAME `Arc`'d compiled plan —
+/// sharding duplicates no packed weights — and agree with direct
+/// execution.
+#[test]
+fn sharded_batcher_workers_share_one_arc_plan() {
+    let template = PlannedEngine::from_zoo("CNV-w2a2").unwrap();
+    let plan = template.plan_handle();
+    // template + our handle
+    assert_eq!(Arc::strong_count(&plan), 2);
+    let batcher = Batcher::start_sharded(
+        move || Ok(Box::new(template.share()) as Box<dyn InferenceEngine>),
+        BatcherConfig::default(),
+        2,
+    )
+    .unwrap();
+    // both worker engines came up (start_sharded waits for readiness)
+    // holding Arc views of the one plan: template-in-factory + 2 workers
+    assert_eq!(Arc::strong_count(&plan), 4);
+
+    let input: Vec<f32> = (0..3072).map(|i| (i % 23) as f32 / 23.0).collect();
+    let served = batcher.infer(input.clone()).unwrap();
+    let mut direct = PlannedEngine::from_zoo("CNV-w2a2").unwrap();
+    let want = direct.infer_batch(&Tensor::new(vec![1, 3072], input)).unwrap();
+    assert_eq!(served, want.as_f32().unwrap());
+
+    // shutdown drops the worker engines and the factory's template
+    batcher.shutdown();
+    assert_eq!(Arc::strong_count(&plan), 1);
 }
 
 /// One compiled plan serves every batch size: replicated rows give
