@@ -1,9 +1,9 @@
 # Repo-level tooling. `make check` is the CI gate: build, tests, format,
 # and lints over the rust crate.
 
-.PHONY: check build test fmt clippy bench bench-build
+.PHONY: check build test fmt clippy bench bench-build examples-build
 
-check: build test fmt clippy bench-build
+check: build test fmt clippy bench-build examples-build
 
 build:
 	cd rust && cargo build --release
@@ -20,12 +20,17 @@ clippy:
 	cd rust && cargo clippy --all-targets -- -D warnings
 
 # Interpreter-vs-plan throughput comparison (plus the PJRT sections when
-# artifacts are present). Writes machine-readable BENCH_PR3.json to the
-# repo root (Melem/s, GMAC/s, plan-vs-interpreter speedups, and the
-# batched-CNV b1/b8/b32 batch-symbolic-vs-per-sample comparison).
+# artifacts are present). Writes machine-readable BENCH_PR4.json to the
+# repo root (Melem/s, GMAC/s, plan-vs-interpreter speedups, the
+# batched-CNV b1/b8/b32 batch-symbolic-vs-per-sample comparison, and the
+# integer-streamlined-vs-packed-float kernel-tier section on TFC/CNV).
 bench:
 	cd rust && cargo bench --bench bench_exec
 
 # Compile-only check so benches can't rot (CI gate; no measurements run).
 bench-build:
 	cd rust && cargo build --release --benches
+
+# Compile-only check for the runnable walkthroughs in examples/.
+examples-build:
+	cd rust && cargo build --release --examples

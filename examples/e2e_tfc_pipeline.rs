@@ -24,6 +24,7 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Instant;
 
+#[rustfmt::skip] // hand-formatted walkthrough (predates fmt enforcement)
 fn graph_accuracy(g: &qonnx::ir::ModelGraph, data: &Dataset) -> anyhow::Result<f32> {
     let mut g = g.clone();
     g.inputs[0].shape = Some(vec![data.len(), 784]);
@@ -43,6 +44,7 @@ fn graph_accuracy(g: &qonnx::ir::ModelGraph, data: &Dataset) -> anyhow::Result<f
     Ok(100.0 * correct as f32 / data.len() as f32)
 }
 
+#[rustfmt::skip] // hand-formatted walkthrough (predates fmt enforcement)
 fn main() -> anyhow::Result<()> {
     // ---------------- 1. train ----------------------------------------
     let train = synth_digits(2000, 100);

@@ -11,6 +11,7 @@ use qonnx::transforms;
 use qonnx::zoo::cnv;
 use std::collections::BTreeMap;
 
+#[rustfmt::skip] // hand-formatted walkthrough (predates fmt enforcement)
 fn conv_fc_transition(g: &qonnx::ir::ModelGraph) -> String {
     // print the node window around the conv->FC transition (the region the
     // paper's figures show)
@@ -28,6 +29,7 @@ fn conv_fc_transition(g: &qonnx::ir::ModelGraph) -> String {
     names[pos..(pos + 9).min(names.len())].join("\n")
 }
 
+#[rustfmt::skip] // hand-formatted walkthrough (predates fmt enforcement)
 fn main() -> anyhow::Result<()> {
     let x = Tensor::new(vec![1, 3, 32, 32], (0..3072).map(|i| (i % 251) as f32 / 251.0).collect());
 

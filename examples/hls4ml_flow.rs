@@ -11,6 +11,7 @@ use qonnx::tensor::Tensor;
 use qonnx::transforms;
 use qonnx::zoo::{keras_to_qonnx, KerasLayer, KerasModel, QuantizedBits};
 
+#[rustfmt::skip] // hand-formatted walkthrough (predates fmt enforcement)
 fn main() -> anyhow::Result<()> {
     // ---- Fig. 4: keras-like -> QONNX ----------------------------------
     let model = KerasModel {
@@ -64,7 +65,7 @@ fn main() -> anyhow::Result<()> {
     transforms::infer_datatypes(&mut h)?;
     println!("\nper-tensor datatype annotations:");
     let mut any = false;
-    for (name, _) in &h.initializers {
+    for name in h.initializers.keys() {
         let dt = h.tensor_datatype(name);
         if dt != qonnx::datatypes::DataType::Float32 {
             println!("  initializer {:<24} -> {}", name, dt);

@@ -11,6 +11,7 @@ use qonnx::transforms;
 use qonnx::zoo::{keras_to_qonnx, KerasModel};
 use std::collections::BTreeMap;
 
+#[rustfmt::skip] // hand-formatted walkthrough (predates fmt enforcement)
 fn main() -> anyhow::Result<()> {
     // --- 1. build a small quantized MLP with the graph builder ---------
     let mut b = GraphBuilder::new("quickstart");

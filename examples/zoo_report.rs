@@ -6,6 +6,7 @@
 
 use qonnx::{metrics, transforms, zoo};
 
+#[rustfmt::skip] // hand-formatted walkthrough (predates fmt enforcement)
 fn main() -> anyhow::Result<()> {
     let full = std::env::args().any(|a| a == "--full-res");
     let mobilenet_res = if full { 224 } else { 64 };

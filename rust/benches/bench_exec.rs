@@ -19,7 +19,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 /// Machine-readable results for CI trend tracking (`make bench` writes
-/// this to the repo root as BENCH_PR3.json).
+/// this to the repo root as BENCH_PR4.json).
 #[derive(Default)]
 struct BenchJson {
     entries: Vec<(String, f64)>,
@@ -294,6 +294,75 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    section("integer streamlined plan vs packed float plan (TFC/CNV, b1/b8)");
+    // The PR-4 tentpole measurement: the streamline pass lowers the zoo
+    // models to integer-domain form (Quant acts -> integer
+    // MultiThreshold, i8 weights) and the plan's quantized tier executes
+    // them with i8 panels + i32 accumulators + fused thresholds. Both
+    // plans here are batch-symbolic, so each batch runs in ONE invocation.
+    for model in ["TFC-w2a2", "CNV-w2a2"] {
+        let mut g = qonnx::zoo::build(model, 1, 32)?;
+        transforms::cleanup(&mut g)?;
+        let sl = qonnx::streamline::try_streamline(&g)?;
+        if !sl.report.ok {
+            println!("({model} did not streamline — skipping)\n{}", sl.report.render());
+            continue;
+        }
+        let fplan = ExecutionPlan::compile(&g)?;
+        let qplan = ExecutionPlan::compile(&sl.graph)?;
+        println!(
+            "{model}: float plan {} steps / {} packed; integer plan {} steps / {} quantized, \
+             {} fused thresholds",
+            fplan.step_count(),
+            fplan.packed_count(),
+            qplan.step_count(),
+            qplan.quant_kernel_count(),
+            qplan.fused_epilogue_count()
+        );
+        let in_name = g.inputs[0].name.clone();
+        let in_shape = g.inputs[0].shape.clone().unwrap();
+        let free = qonnx::plan::RunConfig {
+            shape_check: qonnx::plan::ShapeCheck::FreeBatch,
+            record_intermediates: false,
+        };
+        let key = if model.starts_with("TFC") { "tfc" } else { "cnv" };
+        for batch in [1usize, 8] {
+            let mut shape = in_shape.clone();
+            shape[0] = batch;
+            let numel: usize = shape.iter().product();
+            let xb = Tensor::new(
+                shape,
+                (0..numel).map(|i| (i % 251) as f32 / 251.0).collect(),
+            );
+            let st_f = bench(
+                &format!("float  plan {model} b{batch}"),
+                3,
+                if model.starts_with("TFC") { 200 } else { 10 },
+                || fplan.run_cfg(|n| (n == in_name).then_some(&xb), &free).unwrap(),
+            );
+            println!("{}", st_f.report());
+            let st_q = bench(
+                &format!("integer plan {model} b{batch}"),
+                3,
+                if model.starts_with("TFC") { 200 } else { 10 },
+                || qplan.run_cfg(|n| (n == in_name).then_some(&xb), &free).unwrap(),
+            );
+            println!("{}", st_q.report());
+            let speedup = st_f.mean.as_secs_f64() / st_q.mean.as_secs_f64();
+            println!(
+                "  -> b{batch}: integer tier {:.2}x over packed float ({:.1} vs {:.1} req/s)",
+                speedup,
+                batch as f64 / st_q.mean.as_secs_f64(),
+                batch as f64 / st_f.mean.as_secs_f64(),
+            );
+            json.record(
+                &format!("{key}_b{batch}_int_plan_req_per_s"),
+                batch as f64 / st_q.mean.as_secs_f64(),
+            );
+            json.record(&format!("{key}_b{batch}_int_vs_float_speedup"), speedup);
+        }
+    }
+
     section("sharded batcher over one Arc'd CNV plan (8 clients x 16 req)");
     // shards share ONE compiled plan (PlannedEngine::share) — throughput
     // scales with workers while packed weights stay resident once.
@@ -396,6 +465,6 @@ fn main() -> anyhow::Result<()> {
         2.0 * 256f64.powi(3) / st_pp.mean.as_secs_f64() / 1e9,
     );
 
-    json.write(concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR3.json"));
+    json.write(concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR4.json"));
     Ok(())
 }

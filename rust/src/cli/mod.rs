@@ -25,6 +25,12 @@ Model transformation:
 Inspection & execution:
   summary <model>            print the node listing with shapes/datatypes
   plan <model>               compile and print the execution plan schedule
+  streamline <model> [--out <file>]
+                             lower the model to integer-domain form (Quant
+                             activations -> integer MultiThreshold, integer
+                             weights, scales pushed to the graph edge);
+                             reports which nodes lowered and why any did
+                             not, and the quantized-kernel plan it unlocks
   stats <model>              MACs / BOPs / weight bits report
   datatypes <in> <out>       run arbitrary-precision datatype inference
   exec <model> [--seed N] [--engine plan|interp]
@@ -43,10 +49,12 @@ Training & serving:
   serve [--artifact <stem>] [--zoo <name>] [--requests N] [--clients N]
         [--shards N]         batching server demo; serves a zoo model via
                              the compiled ExecutionPlan when no PJRT
-                             artifact is present (or --zoo is given).
-                             --shards runs N batcher workers sharing ONE
-                             compiled plan (PJRT shards each load their
-                             own artifact copy)
+                             artifact is present (or --zoo is given) —
+                             streamlined to the integer kernel tier when
+                             the model lowers cleanly, float plan
+                             otherwise. --shards runs N batcher workers
+                             sharing ONE compiled plan (PJRT shards each
+                             load their own artifact copy)
 ";
 
 fn parse_flag(args: &[String], key: &str) -> Option<String> {
@@ -78,6 +86,7 @@ pub fn run(args: Vec<String>) -> Result<()> {
             println!("{}", plan.summary());
             Ok(())
         }
+        "streamline" => streamline_cmd(rest),
         "stats" => stats_cmd(rest),
         "exec" => exec_cmd(rest),
         "zoo" => zoo_cmd(rest),
@@ -138,6 +147,31 @@ fn transform_cmd(cmd: &str, rest: &[String]) -> Result<()> {
     }
     save_model(&g, output)?;
     println!("{cmd}: {} -> {} nodes, wrote {output}", before, g.nodes.len());
+    Ok(())
+}
+
+/// `streamline <model> [--out <file>]`: lower to integer-domain form and
+/// report, node by node, what lowered and why anything didn't.
+fn streamline_cmd(rest: &[String]) -> Result<()> {
+    let input = rest.first().context("usage: streamline <model> [--out <file>]")?;
+    let g = load_model(input)?;
+    let att = crate::streamline::try_streamline(&g)?;
+    print!("{}", att.report.render());
+    if !att.report.ok {
+        println!("(model left unchanged — the float plan remains the serving tier)");
+        return Ok(());
+    }
+    let plan = crate::plan::ExecutionPlan::compile(&att.graph)?;
+    println!(
+        "integer plan: {} quantized kernels, {} fused epilogues, {} steps total",
+        plan.quant_kernel_count(),
+        plan.fused_epilogue_count(),
+        plan.step_count()
+    );
+    if let Some(out) = parse_flag(rest, "--out") {
+        save_model(&att.graph, &out)?;
+        println!("wrote streamlined model to {out}");
+    }
     Ok(())
 }
 
@@ -362,6 +396,9 @@ fn serve_cmd(rest: &[String]) -> Result<()> {
             println!("(no PJRT artifact at {stem:?} — serving '{name}' via the compiled ExecutionPlan)");
         }
         let template = coordinator::PlannedEngine::from_zoo(&name)?;
+        if template.streamlined() {
+            println!("('{name}' streamlined: serving the integer-domain quantized plan)");
+        }
         if shards > 1 {
             println!("({shards} batcher shards sharing one compiled plan)");
         }

@@ -105,6 +105,20 @@ enum EdgeAdapter {
 /// `[n, c, h, w]` tensor (native batched execution — the plan is
 /// batch-symbolic, see [`crate::plan`] module docs).
 ///
+/// **Batchability probe:** construction fails loudly when the plan
+/// reports [`ExecutionPlan::batch_blockers`] — a constant reshape target
+/// that bakes a batch > 1, or a wildcard target the batch-symbolic pass
+/// could not prove (run `cleanup` first) — instead of surfacing the
+/// problem later as per-batch errors from the batcher.
+///
+/// **Streamline tier:** [`PlannedEngine::new_auto`] (which
+/// [`PlannedEngine::from_zoo`] uses) first attempts
+/// [`crate::streamline::try_streamline`]; when the model lowers cleanly
+/// to integer-domain form the engine serves the streamlined graph
+/// through the plan's quantized kernel tier, with the float plan as the
+/// fallback for everything else ([`PlannedEngine::new`] always takes
+/// the float path — it is the byte-exact baseline).
+///
 /// [`PlannedEngine::share`] hands out additional engines over the SAME
 /// compiled plan (one `Arc` clone; packed weights and schedule resident
 /// once) with their own scratch arenas — this is how sharded batcher
@@ -120,13 +134,28 @@ pub struct PlannedEngine {
     in_dim: usize,
     out_dim: usize,
     adapter: EdgeAdapter,
+    streamlined: bool,
     scratch: ScratchArena,
 }
 
 impl PlannedEngine {
     /// Compile a `[n, in_dim] -> [n, out_dim]` (or NCHW-input) graph
-    /// into a resident plan.
+    /// into a resident plan (float tier — the exact baseline).
     pub fn new(graph: &ModelGraph) -> Result<PlannedEngine> {
+        PlannedEngine::build(graph, false)
+    }
+
+    /// Like [`PlannedEngine::new`], but first attempts to streamline the
+    /// model into integer-domain form; the quantized plan serves when the
+    /// whole graph lowers cleanly, the float plan otherwise.
+    pub fn new_auto(graph: &ModelGraph) -> Result<PlannedEngine> {
+        match crate::streamline::try_streamline(graph) {
+            Ok(att) if att.report.ok => PlannedEngine::build(&att.graph, true),
+            _ => PlannedEngine::build(graph, false),
+        }
+    }
+
+    fn build(graph: &ModelGraph, streamlined: bool) -> Result<PlannedEngine> {
         ensure!(graph.inputs.len() == 1 && graph.outputs.len() == 1, "single-input/output graphs only");
         let in_shape = graph.inputs[0].shape.clone().unwrap_or_default();
         let out_shape = graph.outputs[0].shape.clone().unwrap_or_default();
@@ -136,7 +165,17 @@ impl PlannedEngine {
             [_, c, h, w] => (c * h * w, EdgeAdapter::Nchw { c: *c, h: *h, w: *w }),
             other => bail!("unsupported input shape {other:?} (want [n, dim] or [n, c, h, w])"),
         };
-        let plan = Arc::new(ExecutionPlan::compile(graph)?.into_owned());
+        let plan = ExecutionPlan::compile(graph)?;
+        // compile-time batchability probe: fail construction loudly
+        // instead of surfacing per-batch errors from the batcher later
+        ensure!(
+            plan.batch_blockers().is_empty(),
+            "graph '{}' cannot serve batched requests: {} (run `cleanup` first, or fix the \
+             reshape target)",
+            graph.name,
+            plan.batch_blockers().join("; ")
+        );
+        let plan = Arc::new(plan.into_owned());
         Ok(PlannedEngine {
             plan,
             model_name: graph.name.clone(),
@@ -145,8 +184,15 @@ impl PlannedEngine {
             in_dim,
             out_dim: out_shape[1],
             adapter,
+            streamlined,
             scratch: ScratchArena::new(),
         })
+    }
+
+    /// Whether this engine serves the integer-domain streamlined form
+    /// (quantized kernel tier) rather than the float plan.
+    pub fn streamlined(&self) -> bool {
+        self.streamlined
     }
 
     /// A second engine over the SAME compiled plan: clones the `Arc` (no
@@ -161,6 +207,7 @@ impl PlannedEngine {
             in_dim: self.in_dim,
             out_dim: self.out_dim,
             adapter: self.adapter,
+            streamlined: self.streamlined,
             scratch: ScratchArena::new(),
         }
     }
@@ -184,8 +231,19 @@ impl PlannedEngine {
     }
 
     /// Build and compile a model-zoo entry by Table III name
-    /// (e.g. `TFC-w2a2`).
+    /// (e.g. `TFC-w2a2`). Serves the integer-domain streamlined form
+    /// when the model lowers cleanly (the zoo models do); use
+    /// [`PlannedEngine::from_zoo_float`] for the float baseline.
     pub fn from_zoo(name: &str) -> Result<PlannedEngine> {
+        let mut g = crate::zoo::build(name, 1, 32)?;
+        crate::transforms::cleanup(&mut g)?;
+        PlannedEngine::new_auto(&g)
+    }
+
+    /// The float-plan (non-streamlined) variant of
+    /// [`PlannedEngine::from_zoo`]: bit-exact with the interpreter on the
+    /// original graph.
+    pub fn from_zoo_float(name: &str) -> Result<PlannedEngine> {
         let mut g = crate::zoo::build(name, 1, 32)?;
         crate::transforms::cleanup(&mut g)?;
         PlannedEngine::new(&g)
@@ -409,6 +467,64 @@ mod tests {
         let ya = a.infer_batch(&x).unwrap();
         let yb = b.infer_batch(&x).unwrap();
         assert_eq!(ya, yb);
+    }
+
+    #[test]
+    fn construction_fails_loudly_on_unbatchable_reshape() {
+        // a reshape target that bakes batch 4: the old behavior was
+        // per-batch errors from the batcher; now construction reports it
+        let mut b = crate::ir::GraphBuilder::new("baked");
+        b.input("x", vec![4, 2, 3, 3]);
+        b.node("Relu", &["x"], &["r"], &[]);
+        b.initializer("target", Tensor::new_i64(vec![2], vec![4, 18]));
+        b.node("Reshape", &["r", "target"], &["y"], &[]);
+        b.output("y", vec![4, 18]);
+        let g = b.finish().unwrap();
+        let err = PlannedEngine::new(&g).unwrap_err().to_string();
+        assert!(err.contains("cannot serve batched requests"), "{err}");
+        assert!(err.contains("bakes batch 4"), "{err}");
+
+        // an unproven wildcard target fails with the cleanup hint ...
+        let mut b2 = crate::ir::GraphBuilder::new("wild");
+        b2.input("x", vec![1, 2, 3, 3]);
+        b2.node("Relu", &["x"], &["r"], &[]);
+        b2.initializer("target", Tensor::new_i64(vec![2], vec![1, -1]));
+        b2.node("Reshape", &["r", "target"], &["y"], &[]);
+        b2.output("y", vec![1, 18]);
+        let g2 = b2.finish().unwrap();
+        let err2 = PlannedEngine::new(&g2).unwrap_err().to_string();
+        assert!(err2.contains("cleanup"), "{err2}");
+        // ... and succeeds once cleanup has inferred the shapes
+        let mut g3 = g2.clone();
+        crate::transforms::cleanup(&mut g3).unwrap();
+        assert!(PlannedEngine::new(&g3).is_ok());
+    }
+
+    #[test]
+    fn from_zoo_serves_streamlined_integer_plan() {
+        let mut auto = PlannedEngine::from_zoo("TFC-w2a2").unwrap();
+        assert!(auto.streamlined(), "TFC-w2a2 must streamline cleanly:\n{}", auto.plan_summary());
+        assert!(
+            auto.plan_handle().quant_kernel_count() >= 3,
+            "{}",
+            auto.plan_summary()
+        );
+        let mut float = PlannedEngine::from_zoo_float("TFC-w2a2").unwrap();
+        assert!(!float.streamlined());
+        let x = Tensor::new(vec![2, 784], (0..2 * 784).map(|i| (i % 13) as f32 / 13.0).collect());
+        let ya = auto.infer_batch(&x).unwrap();
+        let yf = float.infer_batch(&x).unwrap();
+        assert_eq!(ya.shape(), yf.shape());
+        // integer-domain vs float plan: equal up to rare rounding-boundary
+        // level flips at the model's one non-dyadic (1/255) scale — the
+        // documented tolerance at the scaled output edge
+        for (a, b) in ya.as_f32().unwrap().iter().zip(yf.as_f32().unwrap()) {
+            assert!((a - b).abs() <= 0.5, "streamlined {a} vs float {b}");
+        }
+        // shared views keep the streamlined flag and agree bit-exactly
+        let mut shared = auto.share();
+        assert!(shared.streamlined());
+        assert_eq!(shared.infer_batch(&x).unwrap(), ya);
     }
 
     #[test]

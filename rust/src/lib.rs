@@ -9,6 +9,8 @@
 //! * [`datatypes`], [`tensor`], [`ir`] — the IR substrate.
 //! * [`ops`], [`exec`], [`plan`] — operator semantics + executors.
 //! * [`transforms`] — graph passes (cleanup, shape inference, lowering).
+//! * [`streamline`] — integer-domain lowering (Quant → MultiThreshold,
+//!   integer weights, scales pushed to the graph edge).
 //! * [`metrics`], [`zoo`], [`training`] — model zoo, BOPs/MACs, QAT.
 //! * [`formats`] — the six ONNX-based QNN format descriptors (Table I).
 //! * [`runtime`], [`coordinator`] — PJRT artifact execution + serving.
@@ -21,6 +23,14 @@
 //!
 //! ```text
 //!   ModelGraph ──(transforms)──► ModelGraph
+//!        │            │
+//!        │            └─(streamline)──► integer-domain ModelGraph
+//!        │                              Quant acts → MultiThreshold
+//!        │                              emitting raw integer levels,
+//!        │                              weights folded to integers,
+//!        │                              BatchNorm absorbed into
+//!        │                              thresholds, ONE residual Mul at
+//!        │                              the graph edge.
 //!        │
 //!        ├─► exec::interpret*       name-keyed interpreter: per-call topo
 //!        │                          sort, BTreeMap<String, Tensor> context,
@@ -32,11 +42,16 @@
 //!        │      │                   folded at compile time, initializers
 //!        │      │                   borrowed/Arc — never cloned per call,
 //!        │      │                   last-use pass + SlotArena slot reuse.
-//!        │      │                   Kernel tiers: folded → packed+fused
+//!        │      │                   Kernel tiers: folded → quantized
+//!        │      │                   (QuantConv/Gemm/MatMul: i8 weight
+//!        │      │                   panels, i32 accumulate, integer
+//!        │      │                   MultiThreshold fused in the scatter
+//!        │      │                   loop — selected via infer_ranges
+//!        │      │                   proofs) → packed+fused float
 //!        │      │                   (PackedConv/Gemm/MatMul: weights
 //!        │      │                   transposed + panel-packed once,
-//!        │      │                   conv epilogues fused into the
-//!        │      │                   scatter loop) → generic OpFn.
+//!        │      │                   elementwise epilogues fused into
+//!        │      │                   the write-back) → generic OpFn.
 //!        │      └─► plan.run(..)    slot-indexed hot loop; kernels draw
 //!        │                          im2col/GEMM/output buffers from a
 //!        │                          ScratchArena that also recycles
@@ -51,6 +66,11 @@
 //!                                  ascending-k accumulation keeps every
 //!                                  path (naive/serial/packed/threaded)
 //!                                  bit-identical.
+//!   tensor::qgemm_prepacked        the integer twin: i8 PackedBi8
+//!                                  panels, i32 accumulators — exact, so
+//!                                  order-free; bounded below 2^24 at
+//!                                  plan compile so results are also
+//!                                  exact in their f32 containers.
 //!
 //!   coordinator::Batcher ──► InferenceEngine   (1..N worker shards over
 //!        │                                      one request queue)
@@ -58,7 +78,11 @@
 //!        ├─ PlannedEngine     Arc<ExecutionPlan<'static>>, any batch
 //!        │                    size natively (plans are batch-symbolic:
 //!        │                    baked batch-1 reshape targets rewritten
-//!        │                    at compile time); share() gives every
+//!        │                    at compile time; unbatchable targets fail
+//!        │                    engine construction loudly); from_zoo /
+//!        │                    new_auto serve the streamlined integer
+//!        │                    form when the model lowers cleanly, the
+//!        │                    float plan otherwise; share() gives every
 //!        │                    shard a view of ONE plan
 //!        └─ ReferenceEngine   interpreter, verification
 //! ```
@@ -79,6 +103,7 @@ pub mod metrics;
 pub mod ops;
 pub mod plan;
 pub mod runtime;
+pub mod streamline;
 pub mod tensor;
 pub mod testutil;
 pub mod training;

@@ -43,11 +43,17 @@ pub fn conv_params(node: &Node, w_shape: &[usize]) -> Result<ConvParams> {
 
 /// Transpose group `g`'s weight rows (`[mg, k]` slices of a flattened
 /// `[M, C/g, kh, kw]` tensor) into a `[k, mg]` matrix — the GEMM rhs
-/// layout. Shared by the generic conv and the plan's `PackedConv` (which
-/// calls it once at compile time instead of per request); keeping one
-/// impl is what guarantees both paths multiply identical matrices.
-pub(crate) fn transpose_group_weights(ws: &[f32], g: usize, mg: usize, k: usize) -> Vec<f32> {
-    let mut wt = vec![0f32; k * mg];
+/// layout. Shared by the generic conv, the plan's `PackedConv` (f32),
+/// and the quantized tier's `QuantConv` (i8), each packing once at
+/// compile time; keeping one impl is what guarantees all paths multiply
+/// identical matrices.
+pub(crate) fn transpose_group_weights<T: Copy + Default>(
+    ws: &[T],
+    g: usize,
+    mg: usize,
+    k: usize,
+) -> Vec<T> {
+    let mut wt = vec![T::default(); k * mg];
     for mi in 0..mg {
         let wrow = &ws[(g * mg + mi) * k..(g * mg + mi + 1) * k];
         for (ki, &wv) in wrow.iter().enumerate() {

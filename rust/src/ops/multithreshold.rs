@@ -26,6 +26,26 @@ pub fn threshold_count(row: &[f32], x: f32) -> usize {
     lo
 }
 
+/// Integer-domain [`threshold_count`]: same partition-point semantics over
+/// an `i32` row. When both the value and the thresholds are exact
+/// integers (the streamlined form — see [`crate::streamline`]), this is
+/// bit-equivalent to the f32 search, with no float comparisons at all;
+/// the plan's quantized kernels run it as their fused epilogue.
+#[inline]
+pub fn threshold_count_i32(row: &[i32], x: i32) -> usize {
+    let mut lo = 0usize;
+    let mut hi = row.len();
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if x >= row[mid] {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
 /// `MultiThreshold(x, thresholds) -> y`.
 ///
 /// * `x`: `[N, C, ...]` (channels-first) or `[N, ..., C]` with
@@ -90,6 +110,19 @@ mod tests {
         assert_eq!(threshold_count(&row, 0.5), 1); // inclusive
         assert_eq!(threshold_count(&row, 2.0), 2);
         assert_eq!(threshold_count(&row, 99.0), 3);
+    }
+
+    #[test]
+    fn threshold_count_i32_matches_f32_on_integer_grids() {
+        let row_i = [-3i32, 0, 0, 7];
+        let row_f: Vec<f32> = row_i.iter().map(|&t| t as f32).collect();
+        for x in -5i32..=9 {
+            assert_eq!(
+                threshold_count_i32(&row_i, x),
+                threshold_count(&row_f, x as f32),
+                "x={x}"
+            );
+        }
     }
 
     #[test]

@@ -41,6 +41,27 @@ impl RoundingMode {
     }
 }
 
+/// Smallest f32 strictly greater than `x`.
+///
+/// The threshold-construction passes ([`crate::transforms`]'s FINN
+/// ingestion and [`crate::streamline`]) share this for their one-ULP tie
+/// nudge: at a round-half-even tie the threshold must exclude the exact
+/// boundary when the entered level is odd, and both lowerings must nudge
+/// identically to stay bit-equivalent.
+pub(crate) fn next_up(x: f32) -> f32 {
+    if !x.is_finite() {
+        return x;
+    }
+    if x == 0.0 {
+        return f32::from_bits(1);
+    }
+    if x > 0.0 {
+        f32::from_bits(x.to_bits() + 1)
+    } else {
+        f32::from_bits(x.to_bits() - 1)
+    }
+}
+
 /// Round half to even, matching numpy's `np.round` / IEEE roundTiesToEven.
 pub fn round_half_even(v: f64) -> f64 {
     let r = v.round(); // half away from zero

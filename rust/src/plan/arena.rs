@@ -71,6 +71,9 @@ const SCRATCH_POOL_CAP: usize = 16;
 #[derive(Debug, Default)]
 pub struct ScratchArena {
     free: Vec<Vec<f32>>,
+    /// Separate pool for the quantized tier's `i32` working buffers
+    /// (activation conversions, integer im2col, accumulators).
+    free_i32: Vec<Vec<i32>>,
 }
 
 impl ScratchArena {
@@ -147,6 +150,65 @@ impl ScratchArena {
     pub fn pooled(&self) -> usize {
         self.free.len()
     }
+
+    /// A zero-filled `i32` buffer of exactly `len` elements (quantized
+    /// kernel tier). Same best-fit policy as [`ScratchArena::take`].
+    pub fn take_i32(&mut self, len: usize) -> Vec<i32> {
+        let mut buf = self.pick_i32(len);
+        buf.clear();
+        buf.resize(len, 0);
+        buf
+    }
+
+    /// An `i32` buffer of exactly `len` elements with **unspecified**
+    /// contents (counterpart of [`ScratchArena::take_uninit`]).
+    pub fn take_i32_uninit(&mut self, len: usize) -> Vec<i32> {
+        let mut buf = self.pick_i32(len);
+        buf.resize(len, 0);
+        buf
+    }
+
+    fn pick_i32(&mut self, len: usize) -> Vec<i32> {
+        let mut best: Option<usize> = None;
+        for (i, b) in self.free_i32.iter().enumerate() {
+            let cap = b.capacity();
+            best = match best {
+                None => Some(i),
+                Some(j) => {
+                    let bj = self.free_i32[j].capacity();
+                    let better = if bj >= len { cap >= len && cap < bj } else { cap > bj };
+                    Some(if better { i } else { j })
+                }
+            };
+        }
+        match best {
+            Some(i) => self.free_i32.swap_remove(i),
+            None => Vec::with_capacity(len),
+        }
+    }
+
+    /// Return an `i32` buffer's storage to the pool.
+    pub fn give_i32(&mut self, buf: Vec<i32>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        if self.free_i32.len() < SCRATCH_POOL_CAP {
+            self.free_i32.push(buf);
+            return;
+        }
+        if let Some((i, _)) =
+            self.free_i32.iter().enumerate().min_by_key(|(_, b)| b.capacity())
+        {
+            if self.free_i32[i].capacity() < buf.capacity() {
+                self.free_i32[i] = buf;
+            }
+        }
+    }
+
+    /// `i32` buffers currently pooled (diagnostics).
+    pub fn pooled_i32(&self) -> usize {
+        self.free_i32.len()
+    }
 }
 
 #[cfg(test)]
@@ -218,5 +280,22 @@ mod tests {
             s.give(Vec::with_capacity(i + 1));
         }
         assert!(s.pooled() <= SCRATCH_POOL_CAP);
+    }
+
+    #[test]
+    fn i32_pool_mirrors_f32_pool() {
+        let mut s = ScratchArena::new();
+        let mut b = s.take_i32(4);
+        b.copy_from_slice(&[1, 2, 3, 4]);
+        s.give_i32(b);
+        assert_eq!(s.pooled_i32(), 1);
+        assert_eq!(s.pooled(), 0, "i32 pool is separate from the f32 pool");
+        let b2 = s.take_i32(3);
+        assert_eq!(b2, vec![0; 3], "reused i32 buffer must come back zeroed");
+        assert_eq!(s.take_i32_uninit(7).len(), 7);
+        for i in 0..2 * SCRATCH_POOL_CAP {
+            s.give_i32(Vec::with_capacity(i + 1));
+        }
+        assert!(s.pooled_i32() <= SCRATCH_POOL_CAP);
     }
 }

@@ -11,11 +11,20 @@
 //! Kernel specialization runs between folding and slot assignment: any
 //! `Conv`/`Gemm`/`MatMul` whose weight operands are compile-time
 //! constants is lowered to a prepacked kernel
-//! ([`super::kernel::PackedConv`] & co.), and a packed conv whose output
-//! feeds a *sole* elementwise consumer with constant parameters
-//! (BatchNorm / Quant / BipolarQuant / Relu) absorbs that consumer into
-//! its scatter-loop epilogue — the consumer's step disappears from the
+//! ([`super::kernel::PackedConv`] & co.), and a packed conv/gemm/matmul
+//! whose output feeds a *sole* elementwise consumer with constant
+//! parameters (BatchNorm / Quant / BipolarQuant / Relu) absorbs that
+//! consumer into its epilogue — the consumer's step disappears from the
 //! schedule entirely.
+//!
+//! Above the float tier, the **quantized tier** is tried first: when the
+//! value-range proofs from [`crate::transforms::infer_ranges`] show the
+//! data input on a literal integer grid, the weights fit `i8`, and every
+//! accumulator stays below `2^24`, the node lowers to an integer-domain
+//! kernel ([`super::qkernel`]) and a sole-consumer `MultiThreshold` with
+//! constant integer thresholds fuses into its scatter loop. This is the
+//! execution tier the [`crate::streamline`] pass targets; graphs without
+//! integer proofs are untouched by it.
 //!
 //! The **batch-symbolic pass** runs in the same walk: `Reshape` nodes
 //! whose constant targets bake the declared batch of 1 into their
@@ -29,10 +38,12 @@
 
 use super::arena::SlotArena;
 use super::kernel::{BatchReshape, CompiledKernel, Epilogue, PackedConv, PackedGemm, PackedMatMul};
+use super::qkernel::{QThreshold, QuantConv, QuantGemm, QuantMatMul};
 use super::{ExecutionPlan, PlanConst, PlanInput, PlanOptions, PlanOutput, Preload, Step};
 use crate::ir::{ModelGraph, Node, DOMAIN_FINN, DOMAIN_QONNX};
 use crate::ops;
 use crate::tensor::Tensor;
+use crate::transforms::{infer_ranges, ValueRange};
 use anyhow::{bail, Context, Result};
 use std::borrow::Cow;
 use std::collections::{BTreeMap, BTreeSet};
@@ -153,6 +164,20 @@ fn spec_gemm<'g>(
     Some((pg, ins))
 }
 
+/// Outcome of the batch-symbolic pass for one `Reshape` node.
+enum ReshapeSpec<'g> {
+    /// Rewritten into a batch-preserving kernel.
+    Rewrite(BatchReshape, Vec<&'g str>),
+    /// Already batch-safe (runtime target, `0`/`-1` leading dim, ...):
+    /// runs generic, no batching concern.
+    Neutral,
+    /// The constant target *defeats* batching — the node runs generic at
+    /// declared shapes, but the plan can never serve a larger leading
+    /// batch. Engines that promise batched serving fail construction on
+    /// these (see [`super::ExecutionPlan::batch_blockers`]).
+    Blocked(String),
+}
+
 /// The batch-symbolic pass: try to rewrite a `Reshape` whose constant
 /// target bakes the declared batch of 1 into its leading dim (the
 /// conv-net flatten chain, e.g. CNV's `[1, 256]` — or `[1, -1]` for the
@@ -164,42 +189,213 @@ fn spec_gemm<'g>(
 /// wildcard resolve against any element count, so they are rewritten
 /// unconditionally — but only when the graph's shape annotations prove
 /// the data input's leading dim is 1 at declared shapes (`cleanup` /
-/// `infer_shapes` provides these); otherwise the node stays generic.
+/// `infer_shapes` provides these); otherwise the node stays generic
+/// *and* is reported as a batchability blocker.
 fn spec_batch_reshape<'g>(
     graph: &'g ModelGraph,
     node: &'g Node,
     consts: &BTreeMap<&'g str, PlanConst<'g>>,
     alias: &BTreeMap<&'g str, &'g str>,
-) -> Option<(BatchReshape, Vec<&'g str>)> {
+) -> ReshapeSpec<'g> {
     if node.inputs.len() != 2 || node.inputs[0].is_empty() || node.inputs[1].is_empty() {
-        return None;
+        return ReshapeSpec::Neutral;
     }
-    let target = lookup(consts, alias, node.inputs[1].as_str())?;
+    // runtime targets (Shape->...->Concat chains) read the live batch and
+    // adapt on their own; only *constant* targets can bake a batch in
+    let Some(target) = lookup(consts, alias, node.inputs[1].as_str()) else {
+        return ReshapeSpec::Neutral;
+    };
     if !target.is_i64() || target.rank() != 1 {
-        return None;
+        return ReshapeSpec::Neutral;
     }
-    let dims = target.as_i64().ok()?;
-    // need a literal leading 1 and at least one trailing dim to preserve
-    if dims.len() < 2 || dims[0] != 1 {
-        return None;
+    let Ok(dims) = target.as_i64() else {
+        return ReshapeSpec::Neutral;
+    };
+    if dims.first().copied().unwrap_or(0) > 1 {
+        return ReshapeSpec::Blocked(format!(
+            "constant target {dims:?} bakes batch {} (> 1) into its leading dim",
+            dims[0]
+        ));
+    }
+    if dims.first() != Some(&1) {
+        return ReshapeSpec::Neutral; // 0 / -1 leading dims are batch-safe
+    }
+    if dims.len() < 2 {
+        return ReshapeSpec::Blocked(format!(
+            "constant target {dims:?} collapses the batch dim entirely"
+        ));
     }
     // positional copy-dims interact with the rewritten leading 0; decline
     if dims[1..].contains(&0) {
-        return None;
+        return ReshapeSpec::Blocked(format!(
+            "constant target {dims:?} mixes a baked batch 1 with positional copy-dims"
+        ));
     }
     let has_wildcard = dims[1..].contains(&-1);
     if has_wildcard {
         // `[1, -1]` swallows any batch silently — rewrite only when the
         // input is provably batch-1-leading, where both forms agree
-        let in_shape = graph.tensor_shape(node.inputs[0].as_str())?;
-        if in_shape.first() != Some(&1) {
-            return None;
+        let proven = graph
+            .tensor_shape(node.inputs[0].as_str())
+            .is_some_and(|s| s.first() == Some(&1));
+        if !proven {
+            return ReshapeSpec::Blocked(format!(
+                "wildcard target {dims:?} bakes batch 1 but the input shape is not \
+                 inferred (run `cleanup` first)"
+            ));
         }
     }
-    Some((
+    ReshapeSpec::Rewrite(
         BatchReshape::new(dims, !has_wildcard),
         vec![canon(alias, node.inputs[0].as_str())],
-    ))
+    )
+}
+
+/// Quantized-tier conv: constant `i8`-grid weights + a proven integral
+/// input range.
+fn spec_qconv<'g>(
+    node: &'g Node,
+    consts: &BTreeMap<&'g str, PlanConst<'g>>,
+    alias: &BTreeMap<&'g str, &'g str>,
+    ranges: &BTreeMap<String, ValueRange>,
+) -> Option<(QuantConv, Vec<&'g str>)> {
+    if node.inputs.len() < 2 || node.inputs[0].is_empty() || node.inputs[1].is_empty() {
+        return None;
+    }
+    let w = lookup(consts, alias, node.inputs[1].as_str())?;
+    let r = *ranges.get(node.inputs[0].as_str())?;
+    let qc = QuantConv::try_build(node, w, r)?;
+    Some((qc, vec![canon(alias, node.inputs[0].as_str())]))
+}
+
+/// Quantized-tier Gemm (constant integral B, no runtime C).
+fn spec_qgemm<'g>(
+    node: &'g Node,
+    consts: &BTreeMap<&'g str, PlanConst<'g>>,
+    alias: &BTreeMap<&'g str, &'g str>,
+    ranges: &BTreeMap<String, ValueRange>,
+) -> Option<(QuantGemm, Vec<&'g str>)> {
+    if node.inputs.len() < 2 || node.inputs[0].is_empty() || node.inputs[1].is_empty() {
+        return None;
+    }
+    let b = lookup(consts, alias, node.inputs[1].as_str())?;
+    let c_name = node.inputs.get(2).map(String::as_str).filter(|s| !s.is_empty());
+    let c_arg = c_name.map(|nm| lookup(consts, alias, nm));
+    let r = *ranges.get(node.inputs[0].as_str())?;
+    let qg = QuantGemm::try_build(node, b, c_arg, r)?;
+    Some((qg, vec![canon(alias, node.inputs[0].as_str())]))
+}
+
+/// Quantized-tier MatMul (constant integral rhs).
+fn spec_qmatmul<'g>(
+    node: &'g Node,
+    consts: &BTreeMap<&'g str, PlanConst<'g>>,
+    alias: &BTreeMap<&'g str, &'g str>,
+    ranges: &BTreeMap<String, ValueRange>,
+) -> Option<(QuantMatMul, Vec<&'g str>)> {
+    if node.inputs.len() != 2 || node.inputs[0].is_empty() || node.inputs[1].is_empty() {
+        return None;
+    }
+    let b = lookup(consts, alias, node.inputs[1].as_str())?;
+    let r = *ranges.get(node.inputs[0].as_str())?;
+    let qm = QuantMatMul::try_build(b, r)?;
+    Some((qm, vec![canon(alias, node.inputs[0].as_str())]))
+}
+
+/// Shared context for the sole-consumer epilogue fusion walks.
+struct FuseCtx<'a, 'g> {
+    graph: &'g ModelGraph,
+    kept: &'a [(usize, ops::OpFn)],
+    uses: &'a BTreeMap<&'g str, usize>,
+    users: &'a BTreeMap<&'g str, Vec<usize>>,
+    out_set: &'a BTreeSet<&'g str>,
+    consts: &'a BTreeMap<&'g str, PlanConst<'g>>,
+    alias: &'a BTreeMap<&'g str, &'g str>,
+}
+
+impl<'g> FuseCtx<'_, 'g> {
+    /// The sole runtime consumer of `node_idx`'s single output, when that
+    /// value is internal (not a graph output), used exactly once, the
+    /// consumer appears later in the schedule, isn't already fused, and
+    /// reads the value as its *data* (first) input.
+    fn sole_consumer(&self, start_ki: usize, node_idx: usize, consumed: &[bool]) -> Option<usize> {
+        let tail = &self.graph.nodes[node_idx];
+        if tail.outputs.len() != 1 {
+            return None;
+        }
+        let out_nm = canon(self.alias, tail.outputs[0].as_str());
+        if self.out_set.contains(out_nm) || self.uses.get(out_nm).copied().unwrap_or(0) != 1 {
+            return None;
+        }
+        let uk = match self.users.get(out_nm) {
+            Some(v) if v.len() == 1 => v[0],
+            _ => return None,
+        };
+        if consumed[uk] || uk <= start_ki {
+            return None;
+        }
+        let unode = &self.graph.nodes[self.kept[uk].0];
+        if unode.inputs.first().map(|s| canon(self.alias, s.as_str())) != Some(out_nm) {
+            return None;
+        }
+        Some(uk)
+    }
+
+    /// Walk the sole-consumer chain from `start_node_idx` collecting
+    /// fusable float epilogue stages. Returns the stages, the kept
+    /// indices they came from (for the caller to mark consumed), and the
+    /// node whose outputs the fused step now produces.
+    fn float_epilogues(
+        &self,
+        start_ki: usize,
+        start_node_idx: usize,
+        out_channels: usize,
+        allow_channelwise: bool,
+        consumed: &[bool],
+    ) -> (Vec<Epilogue>, Vec<usize>, usize) {
+        let mut eps = Vec::new();
+        let mut fused_kept = Vec::new();
+        let mut out_node_idx = start_node_idx;
+        loop {
+            let Some(uk) = self.sole_consumer(start_ki, out_node_idx, consumed) else {
+                break;
+            };
+            let unode = &self.graph.nodes[self.kept[uk].0];
+            let ep = Epilogue::try_build(
+                unode,
+                |nm| lookup(self.consts, self.alias, nm),
+                out_channels,
+            );
+            let ep = match ep {
+                Some(e) if allow_channelwise || e.channel_independent() => e,
+                _ => break,
+            };
+            eps.push(ep);
+            fused_kept.push(uk);
+            out_node_idx = self.kept[uk].0;
+        }
+        (eps, fused_kept, out_node_idx)
+    }
+
+    /// A sole-consumer `MultiThreshold` with constant integer thresholds
+    /// (the quantized tier's fused activation). Returns the compiled
+    /// stage, the consumer's kept index, and its node index.
+    fn mt_epilogue(
+        &self,
+        start_ki: usize,
+        node_idx: usize,
+        out_channels: usize,
+        consumed: &[bool],
+    ) -> Option<(QThreshold, usize, usize)> {
+        let uk = self.sole_consumer(start_ki, node_idx, consumed)?;
+        let unode = &self.graph.nodes[self.kept[uk].0];
+        if unode.op_type != "MultiThreshold" || unode.inputs.len() != 2 {
+            return None;
+        }
+        let th = lookup(self.consts, self.alias, unode.inputs[1].as_str())?;
+        let qt = QThreshold::try_build(unode, th, out_channels)?;
+        Some((qt, uk, self.kept[uk].0))
+    }
 }
 
 /// Try to lower a MatMul with a constant rhs into a packed kernel.
@@ -305,11 +501,34 @@ pub(super) fn compile<'g>(graph: &'g ModelGraph, opts: &PlanOptions) -> Result<E
     let out_set: BTreeSet<&'g str> =
         graph.outputs.iter().map(|vi| canon(&alias, vi.name.as_str())).collect();
 
+    // Value-range proofs for the quantized tier. Computed once per
+    // compile; the walk is cheap next to weight packing, and graphs
+    // without integer grids simply prove nothing. The quantized tier is
+    // a *specialization* — disabling `specialize` (the PR1-style generic
+    // baseline) disables it too.
+    let quantize = opts.quantize && opts.specialize;
+    let ranges: BTreeMap<String, ValueRange> = if quantize {
+        infer_ranges(graph).unwrap_or_default()
+    } else {
+        BTreeMap::new()
+    };
+
+    let ctx = FuseCtx {
+        graph,
+        kept: &kept,
+        uses: &uses,
+        users: &users,
+        out_set: &out_set,
+        consts: &consts,
+        alias: &alias,
+    };
     let mut consumed = vec![false; kept.len()];
     let mut specs: Vec<StepSpec<'g>> = Vec::with_capacity(kept.len());
     let mut packed_count = 0usize;
+    let mut quant_count = 0usize;
     let mut fused_count = 0usize;
     let mut batch_symbolic_count = 0usize;
+    let mut batch_blockers: Vec<String> = Vec::new();
     for (ki, &(node_idx, f)) in kept.iter().enumerate() {
         if consumed[ki] {
             continue;
@@ -318,15 +537,107 @@ pub(super) fn compile<'g>(graph: &'g ModelGraph, opts: &PlanOptions) -> Result<E
         // batch-symbolic pass: independent of `specialize` so even the
         // generic (PR-1-style) plan serves any leading batch
         if opts.batch_symbolic && node.op_type == "Reshape" {
-            if let Some((br, in_names)) = spec_batch_reshape(graph, node, &consts, &alias) {
-                batch_symbolic_count += 1;
-                specs.push(StepSpec {
-                    node_idx,
-                    out_node_idx: node_idx,
-                    kernel: CompiledKernel::Reshape(Arc::new(br)),
-                    in_names,
-                });
-                continue;
+            match spec_batch_reshape(graph, node, &consts, &alias) {
+                ReshapeSpec::Rewrite(br, in_names) => {
+                    batch_symbolic_count += 1;
+                    specs.push(StepSpec {
+                        node_idx,
+                        out_node_idx: node_idx,
+                        kernel: CompiledKernel::Reshape(Arc::new(br)),
+                        in_names,
+                    });
+                    continue;
+                }
+                ReshapeSpec::Blocked(reason) => {
+                    // the node still runs generic at declared shapes; the
+                    // plan just can't promise batched serving
+                    batch_blockers.push(format!("reshape '{}': {reason}", node.name));
+                }
+                ReshapeSpec::Neutral => {}
+            }
+        }
+        // quantized tier first: strictly better than the float tier on
+        // the (integer-proven) graphs it accepts, and exact on them
+        if quantize {
+            match node.op_type.as_str() {
+                "Conv" => {
+                    if let Some((mut qc, in_names)) = spec_qconv(node, &consts, &alias, &ranges) {
+                        let mut out_node_idx = node_idx;
+                        if opts.fuse_epilogues {
+                            if let Some((qt, uk, onx)) =
+                                ctx.mt_epilogue(ki, node_idx, qc.out_channels(), &consumed)
+                            {
+                                qc.set_epilogue(qt);
+                                consumed[uk] = true;
+                                fused_count += 1;
+                                out_node_idx = onx;
+                            }
+                        }
+                        quant_count += 1;
+                        specs.push(StepSpec {
+                            node_idx,
+                            out_node_idx,
+                            kernel: CompiledKernel::QConv(Arc::new(qc)),
+                            in_names,
+                        });
+                        continue;
+                    }
+                }
+                "Gemm" => {
+                    if let Some((mut qg, in_names)) = spec_qgemm(node, &consts, &alias, &ranges) {
+                        let mut out_node_idx = node_idx;
+                        if opts.fuse_epilogues {
+                            if let Some((qt, uk, onx)) =
+                                ctx.mt_epilogue(ki, node_idx, qg.out_channels(), &consumed)
+                            {
+                                qg.set_epilogue(qt);
+                                consumed[uk] = true;
+                                fused_count += 1;
+                                out_node_idx = onx;
+                            }
+                        }
+                        quant_count += 1;
+                        specs.push(StepSpec {
+                            node_idx,
+                            out_node_idx,
+                            kernel: CompiledKernel::QGemm(Arc::new(qg)),
+                            in_names,
+                        });
+                        continue;
+                    }
+                }
+                "MatMul" => {
+                    if let Some((mut qm, in_names)) = spec_qmatmul(node, &consts, &alias, &ranges) {
+                        let mut out_node_idx = node_idx;
+                        // MT fusion only when the output is provably
+                        // rank-2: a batched (rank > 2) MatMul output is
+                        // rejected by the generic MultiThreshold op, and
+                        // fusing would turn that compile-visible fact
+                        // into a runtime error on the fused path
+                        let rank2 = graph
+                            .tensor_shape(node.outputs[0].as_str())
+                            .is_some_and(|s| s.len() == 2);
+                        if opts.fuse_epilogues && rank2 {
+                            if let Some((qt, uk, onx)) =
+                                ctx.mt_epilogue(ki, node_idx, qm.out_channels(), &consumed)
+                            {
+                                qm.set_epilogue(qt);
+                                consumed[uk] = true;
+                                fused_count += 1;
+                                out_node_idx = onx;
+                            }
+                        }
+                        quant_count += 1;
+                        specs.push(StepSpec {
+                            node_idx,
+                            out_node_idx,
+                            kernel: CompiledKernel::QMatMul(Arc::new(qm)),
+                            in_names,
+                        });
+                        continue;
+                    }
+                }
+                _ => {}
             }
         }
         if opts.specialize {
@@ -334,39 +645,17 @@ pub(super) fn compile<'g>(graph: &'g ModelGraph, opts: &PlanOptions) -> Result<E
                 if let Some((mut pc, in_names)) = spec_conv(node, &consts, &alias) {
                     // fuse sole-consumer elementwise chains into the scatter loop
                     let mut out_node_idx = node_idx;
-                    while opts.fuse_epilogues {
-                        let tail = &graph.nodes[out_node_idx];
-                        if tail.outputs.len() != 1 {
-                            break;
+                    if opts.fuse_epilogues {
+                        let (eps, fused, onx) =
+                            ctx.float_epilogues(ki, node_idx, pc.out_channels(), true, &consumed);
+                        for e in eps {
+                            pc.push_epilogue(e);
                         }
-                        let out_nm = canon(&alias, tail.outputs[0].as_str());
-                        if out_set.contains(out_nm) || uses.get(out_nm).copied().unwrap_or(0) != 1 {
-                            break;
+                        for uk in fused {
+                            consumed[uk] = true;
+                            fused_count += 1;
                         }
-                        let uk = match users.get(out_nm) {
-                            Some(v) if v.len() == 1 => v[0],
-                            _ => break,
-                        };
-                        if consumed[uk] || uk <= ki {
-                            break;
-                        }
-                        let unode = &graph.nodes[kept[uk].0];
-                        // the produced value must be the consumer's data input
-                        if unode.inputs.first().map(|s| canon(&alias, s.as_str())) != Some(out_nm) {
-                            break;
-                        }
-                        let ep = match Epilogue::try_build(
-                            unode,
-                            |nm| lookup(&consts, &alias, nm),
-                            pc.out_channels(),
-                        ) {
-                            Some(e) => e,
-                            None => break,
-                        };
-                        pc.push_epilogue(ep);
-                        consumed[uk] = true;
-                        fused_count += 1;
-                        out_node_idx = kept[uk].0;
+                        out_node_idx = onx;
                     }
                     packed_count += 1;
                     specs.push(StepSpec {
@@ -378,22 +667,50 @@ pub(super) fn compile<'g>(graph: &'g ModelGraph, opts: &PlanOptions) -> Result<E
                     continue;
                 }
             } else if node.op_type == "Gemm" {
-                if let Some((pg, in_names)) = spec_gemm(node, &consts, &alias) {
+                if let Some((mut pg, in_names)) = spec_gemm(node, &consts, &alias) {
+                    let mut out_node_idx = node_idx;
+                    if opts.fuse_epilogues {
+                        let (eps, fused, onx) =
+                            ctx.float_epilogues(ki, node_idx, pg.out_channels(), true, &consumed);
+                        for e in eps {
+                            pg.push_epilogue(e);
+                        }
+                        for uk in fused {
+                            consumed[uk] = true;
+                            fused_count += 1;
+                        }
+                        out_node_idx = onx;
+                    }
                     packed_count += 1;
                     specs.push(StepSpec {
                         node_idx,
-                        out_node_idx: node_idx,
+                        out_node_idx,
                         kernel: CompiledKernel::Gemm(Arc::new(pg)),
                         in_names,
                     });
                     continue;
                 }
             } else if node.op_type == "MatMul" {
-                if let Some((pm, in_names)) = spec_matmul(node, &consts, &alias) {
+                if let Some((mut pm, in_names)) = spec_matmul(node, &consts, &alias) {
+                    // a batched lhs changes the channel axis, so only
+                    // channel-independent stages fuse here
+                    let mut out_node_idx = node_idx;
+                    if opts.fuse_epilogues {
+                        let (eps, fused, onx) =
+                            ctx.float_epilogues(ki, node_idx, pm.out_channels(), false, &consumed);
+                        for e in eps {
+                            pm.push_epilogue(e);
+                        }
+                        for uk in fused {
+                            consumed[uk] = true;
+                            fused_count += 1;
+                        }
+                        out_node_idx = onx;
+                    }
                     packed_count += 1;
                     specs.push(StepSpec {
                         node_idx,
-                        out_node_idx: node_idx,
+                        out_node_idx,
                         kernel: CompiledKernel::MatMul(Arc::new(pm)),
                         in_names,
                     });
@@ -593,8 +910,10 @@ pub(super) fn compile<'g>(graph: &'g ModelGraph, opts: &PlanOptions) -> Result<E
         folded_count,
         elided_count,
         packed_count,
+        quant_count,
         fused_count,
         batch_symbolic_count,
+        batch_blockers,
     })
 }
 
@@ -756,6 +1075,178 @@ mod tests {
         };
         let y = plan2.run_cfg(|n| (n == "x").then_some(&x), &cfg).unwrap().outputs;
         assert_eq!(y["y"].shape(), &[2, 8]);
+    }
+
+    #[test]
+    fn quant_tier_selected_when_ranges_prove_integers() {
+        // unit-scale Quant proves an integer grid -> the MatMul lowers to
+        // QuantMatMul; disabling `quantize` gives the float tier with
+        // byte-identical outputs (integer math is exact below 2^24)
+        let mut b = GraphBuilder::new("qtier");
+        b.input("x", vec![1, 8]);
+        b.quant("x", "xq", 1.0, 0.0, 4.0, true, false, "ROUND");
+        b.initializer(
+            "w",
+            Tensor::new(vec![8, 3], (0..24).map(|v| ((v % 5) as f32) - 2.0).collect()),
+        );
+        b.node("MatMul", &["xq", "w"], &["y"], &[]);
+        b.output("y", vec![1, 3]);
+        let g = b.finish().unwrap();
+        let plan = ExecutionPlan::compile(&g).unwrap();
+        assert_eq!(plan.quant_kernel_count(), 1, "{}", plan.summary());
+        let mut m = std::collections::BTreeMap::new();
+        m.insert(
+            "x".to_string(),
+            Tensor::new(vec![1, 8], vec![-9.0, -2.4, -0.6, 0.0, 0.4, 1.6, 3.0, 99.0]),
+        );
+        let got = plan.run(&m).unwrap();
+        let float_opts = super::PlanOptions { quantize: false, ..Default::default() };
+        let fplan = ExecutionPlan::compile_with(&g, &float_opts).unwrap();
+        assert_eq!(fplan.quant_kernel_count(), 0);
+        assert_eq!(fplan.run(&m).unwrap(), got, "quant tier must be bit-exact");
+        assert_eq!(crate::exec::interpret(&g, &m).unwrap().outputs, got);
+    }
+
+    #[test]
+    fn quant_tier_declines_scaled_grids() {
+        // scale 0.5 -> values are not literal integers -> float tier
+        let mut b = GraphBuilder::new("qdecline");
+        b.input("x", vec![1, 4]);
+        b.quant("x", "xq", 0.5, 0.0, 4.0, true, false, "ROUND");
+        b.initializer("w", Tensor::new(vec![4, 2], vec![1.0; 8]));
+        b.node("MatMul", &["xq", "w"], &["y"], &[]);
+        b.output("y", vec![1, 2]);
+        let g = b.finish().unwrap();
+        let plan = ExecutionPlan::compile(&g).unwrap();
+        assert_eq!(plan.quant_kernel_count(), 0, "{}", plan.summary());
+        assert_eq!(plan.packed_count(), 1);
+    }
+
+    #[test]
+    fn quant_matmul_fuses_multithreshold_consumer() {
+        use crate::ir::AttrValue;
+        // streamlined shape: MT (float input) -> integer MatMul -> MT
+        let mut b = GraphBuilder::new("qmt");
+        b.input("x", vec![1, 4]);
+        b.initializer("t0", Tensor::new(vec![1, 3], vec![0.5, 1.5, 2.5]));
+        b.node_in_domain(crate::ir::DOMAIN_FINN, "MultiThreshold", &["x", "t0"], &["xi"], &[]);
+        b.initializer("w", Tensor::new(vec![4, 2], vec![1.0, -1.0, 2.0, 0.0, -2.0, 1.0, 1.0, 1.0]));
+        b.node("MatMul", &["xi", "w"], &["acc"], &[]);
+        b.initializer("t1", Tensor::new(vec![1, 2], vec![-1.0, 2.0]));
+        b.node_in_domain(
+            crate::ir::DOMAIN_FINN,
+            "MultiThreshold",
+            &["acc", "t1"],
+            &["y"],
+            &[("out_scale", AttrValue::Float(1.0)), ("out_bias", AttrValue::Float(-1.0))],
+        );
+        b.output("y", vec![1, 2]);
+        let mut g = b.finish().unwrap();
+        // MT fusion requires the MatMul output to be provably rank-2
+        crate::transforms::infer_shapes(&mut g).unwrap();
+        let plan = ExecutionPlan::compile(&g).unwrap();
+        // input MT stays generic; MatMul+MT collapse into one quant step
+        assert_eq!(plan.quant_kernel_count(), 1, "{}", plan.summary());
+        assert_eq!(plan.fused_epilogue_count(), 1, "{}", plan.summary());
+        assert_eq!(plan.step_count(), 2, "{}", plan.summary());
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("x".to_string(), Tensor::new(vec![1, 4], vec![-1.0, 0.7, 1.6, 7.0]));
+        let got = plan.run(&m).unwrap();
+        let unfused_opts = super::PlanOptions { fuse_epilogues: false, ..Default::default() };
+        let unfused = ExecutionPlan::compile_with(&g, &unfused_opts).unwrap();
+        assert_eq!(unfused.run(&m).unwrap(), got, "MT fusion must be bit-exact");
+        assert_eq!(crate::exec::interpret(&g, &m).unwrap().outputs, got);
+    }
+
+    #[test]
+    fn gemm_and_matmul_fuse_float_epilogues() {
+        // Gemm -> Quant -> Relu collapses into one packed step
+        let mut b = GraphBuilder::new("gfuse");
+        b.input("a", vec![2, 3]);
+        b.initializer("w", Tensor::new(vec![3, 4], (0..12).map(|v| v as f32 * 0.3 - 1.5).collect()));
+        b.initializer("c", Tensor::new(vec![1, 4], vec![0.5, -0.5, 0.0, 1.0]));
+        b.node("Gemm", &["a", "w", "c"], &["g"], &[]);
+        b.quant("g", "q", 0.5, 0.0, 4.0, true, false, "ROUND");
+        b.node("Relu", &["q"], &["y"], &[]);
+        b.output("y", vec![2, 4]);
+        let g = b.finish().unwrap();
+        let plan = ExecutionPlan::compile(&g).unwrap();
+        assert_eq!(plan.step_count(), 1, "{}", plan.summary());
+        assert_eq!(plan.fused_epilogue_count(), 2, "{}", plan.summary());
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("a".to_string(), Tensor::new(vec![2, 3], vec![0.3, -0.9, 1.7, 0.0, 2.2, -1.1]));
+        let got = plan.run(&m).unwrap();
+        let unfused_opts = super::PlanOptions { fuse_epilogues: false, ..Default::default() };
+        assert_eq!(
+            ExecutionPlan::compile_with(&g, &unfused_opts).unwrap().run(&m).unwrap(),
+            got,
+            "gemm epilogue fusion must be bit-exact"
+        );
+        assert_eq!(crate::exec::interpret(&g, &m).unwrap().outputs, got);
+
+        // MatMul -> BatchNorm does NOT fuse (batch-dependent channel
+        // axis), but MatMul -> Relu does
+        let mut b2 = GraphBuilder::new("mmfuse");
+        b2.input("a", vec![2, 3]);
+        b2.initializer("w", Tensor::new(vec![3, 2], vec![1.0, -0.5, 0.25, 2.0, -1.0, 0.75]));
+        b2.node("MatMul", &["a", "w"], &["mm"], &[]);
+        for (suffix, v) in [("scale", 2.0f32), ("bias", 0.5), ("mean", 0.1), ("var", 1.5)] {
+            b2.initializer(&format!("bn_{suffix}"), Tensor::full(vec![2], v));
+        }
+        b2.node(
+            "BatchNormalization",
+            &["mm", "bn_scale", "bn_bias", "bn_mean", "bn_var"],
+            &["bn"],
+            &[],
+        );
+        b2.node("Relu", &["bn"], &["y"], &[]);
+        b2.output("y", vec![2, 2]);
+        let g2 = b2.finish().unwrap();
+        let plan2 = ExecutionPlan::compile(&g2).unwrap();
+        // BatchNorm breaks the chain: nothing fuses past it
+        assert_eq!(plan2.fused_epilogue_count(), 0, "{}", plan2.summary());
+        let mut m2 = std::collections::BTreeMap::new();
+        m2.insert("a".to_string(), Tensor::new(vec![2, 3], vec![1.0, -2.0, 0.5, 0.0, 3.0, -1.0]));
+        let got2 = plan2.run(&m2).unwrap();
+        assert_eq!(crate::exec::interpret(&g2, &m2).unwrap().outputs, got2);
+    }
+
+    #[test]
+    fn batch_blockers_recorded_for_unbatchable_targets() {
+        // baked batch 4: runs at declared shapes, but flagged
+        let mut b = GraphBuilder::new("baked");
+        b.input("x", vec![4, 2, 3]);
+        b.node("Relu", &["x"], &["r"], &[]);
+        b.initializer("target", Tensor::new_i64(vec![2], vec![4, 6]));
+        b.node("Reshape", &["r", "target"], &["y"], &[]);
+        b.output("y", vec![4, 6]);
+        let g = b.finish().unwrap();
+        let plan = ExecutionPlan::compile(&g).unwrap();
+        assert_eq!(plan.batch_symbolic_count(), 0);
+        assert_eq!(plan.batch_blockers().len(), 1, "{}", plan.summary());
+        assert!(plan.batch_blockers()[0].contains("bakes batch 4"), "{:?}", plan.batch_blockers());
+        // it still executes at the declared batch
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("x".to_string(), Tensor::full(vec![4, 2, 3], -1.0));
+        assert_eq!(plan.run(&m).unwrap()["y"].shape(), &[4, 6]);
+
+        // wildcard without inferred shapes: flagged with the cleanup hint
+        let mut b2 = GraphBuilder::new("wild");
+        b2.input("x", vec![1, 2, 2, 2]);
+        b2.node("Relu", &["x"], &["r"], &[]);
+        b2.initializer("target", Tensor::new_i64(vec![2], vec![1, -1]));
+        b2.node("Reshape", &["r", "target"], &["y"], &[]);
+        b2.output("y", vec![1, 8]);
+        let g2 = b2.finish().unwrap();
+        let plan2 = ExecutionPlan::compile(&g2).unwrap();
+        assert_eq!(plan2.batch_symbolic_count(), 0);
+        assert!(plan2.batch_blockers()[0].contains("cleanup"), "{:?}", plan2.batch_blockers());
+        // ... and with shapes inferred the blocker disappears
+        let mut g3 = g2.clone();
+        crate::transforms::infer_shapes(&mut g3).unwrap();
+        let plan3 = ExecutionPlan::compile(&g3).unwrap();
+        assert_eq!(plan3.batch_symbolic_count(), 1);
+        assert!(plan3.batch_blockers().is_empty());
     }
 
     #[test]

@@ -32,6 +32,7 @@
 //! stage replays the generic op's per-element arithmetic verbatim.
 
 use super::arena::ScratchArena;
+use super::qkernel::{QuantConv, QuantGemm, QuantMatMul};
 use crate::ir::Node;
 use crate::ops::linalg::{conv_params, ConvParams};
 use crate::ops::quant::{quant_bounds, RoundingMode};
@@ -53,6 +54,13 @@ pub enum CompiledKernel {
     Gemm(Arc<PackedGemm>),
     /// MatMul with a constant rhs.
     MatMul(Arc<PackedMatMul>),
+    /// Integer-domain conv (tier 3): `i8` panels, `i32` accumulate,
+    /// `MultiThreshold` fusable (see [`crate::plan::qkernel`]).
+    QConv(Arc<QuantConv>),
+    /// Integer-domain Gemm.
+    QGemm(Arc<QuantGemm>),
+    /// Integer-domain MatMul.
+    QMatMul(Arc<QuantMatMul>),
     /// Reshape whose constant target baked a batch of 1 into its leading
     /// dim, rewritten batch-preserving (the batch-symbolic compile pass).
     Reshape(Arc<BatchReshape>),
@@ -80,6 +88,18 @@ impl CompiledKernel {
                 ensure!(!inputs.is_empty(), "PackedMatMul wants the lhs tensor");
                 Ok(vec![pm.run(inputs[0], scratch)?])
             }
+            CompiledKernel::QConv(qc) => {
+                ensure!(!inputs.is_empty(), "QuantConv wants the data tensor");
+                Ok(vec![qc.run(inputs[0], scratch)?])
+            }
+            CompiledKernel::QGemm(qg) => {
+                ensure!(!inputs.is_empty(), "QuantGemm wants the A tensor");
+                Ok(vec![qg.run(inputs[0], scratch)?])
+            }
+            CompiledKernel::QMatMul(qm) => {
+                ensure!(!inputs.is_empty(), "QuantMatMul wants the lhs tensor");
+                Ok(vec![qm.run(inputs[0], scratch)?])
+            }
             CompiledKernel::Reshape(br) => {
                 ensure!(!inputs.is_empty(), "BatchReshape wants the data tensor");
                 Ok(vec![br.run(inputs[0])?])
@@ -93,17 +113,33 @@ impl CompiledKernel {
             CompiledKernel::Op(_) => node.op_type.clone(),
             CompiledKernel::Conv(pc) if pc.epilogue.is_empty() => "PackedConv".to_string(),
             CompiledKernel::Conv(pc) => format!("PackedConv+{}ep", pc.epilogue.len()),
-            CompiledKernel::Gemm(_) => "PackedGemm".to_string(),
-            CompiledKernel::MatMul(_) => "PackedMatMul".to_string(),
+            CompiledKernel::Gemm(pg) if pg.epilogue.is_empty() => "PackedGemm".to_string(),
+            CompiledKernel::Gemm(pg) => format!("PackedGemm+{}ep", pg.epilogue.len()),
+            CompiledKernel::MatMul(pm) if pm.epilogue.is_empty() => "PackedMatMul".to_string(),
+            CompiledKernel::MatMul(pm) => format!("PackedMatMul+{}ep", pm.epilogue.len()),
+            CompiledKernel::QConv(qc) if qc.has_fused_threshold() => "QuantConv+mt".to_string(),
+            CompiledKernel::QConv(_) => "QuantConv".to_string(),
+            CompiledKernel::QGemm(qg) if qg.has_fused_threshold() => "QuantGemm+mt".to_string(),
+            CompiledKernel::QGemm(_) => "QuantGemm".to_string(),
+            CompiledKernel::QMatMul(qm) if qm.has_fused_threshold() => "QuantMatMul+mt".to_string(),
+            CompiledKernel::QMatMul(_) => "QuantMatMul".to_string(),
             CompiledKernel::Reshape(_) => "BatchReshape".to_string(),
         }
     }
 
-    /// Whether this is a specialized prepacked (tier-2) kernel.
+    /// Whether this is a specialized prepacked float (tier-2) kernel.
     pub fn is_packed(&self) -> bool {
         matches!(
             self,
             CompiledKernel::Conv(_) | CompiledKernel::Gemm(_) | CompiledKernel::MatMul(_)
+        )
+    }
+
+    /// Whether this is an integer-domain quantized (tier-3) kernel.
+    pub fn is_quant(&self) -> bool {
+        matches!(
+            self,
+            CompiledKernel::QConv(_) | CompiledKernel::QGemm(_) | CompiledKernel::QMatMul(_)
         )
     }
 }
@@ -177,6 +213,15 @@ pub(crate) enum Epilogue {
 }
 
 impl Epilogue {
+    /// Whether the stage reads the channel index at all. Channel-indexed
+    /// stages (BatchNorm) only fuse into kernels whose output channel
+    /// axis is statically known (conv NCHW, rank-2 Gemm) — a batched
+    /// MatMul's output rank isn't known at compile time, so it only
+    /// absorbs channel-independent stages.
+    pub(crate) fn channel_independent(&self) -> bool {
+        !matches!(self, Epilogue::BatchNorm { .. })
+    }
+
     #[inline]
     fn apply(&self, v: f32, oc: usize) -> f32 {
         match self {
@@ -419,7 +464,9 @@ enum GemmBias {
 /// `Gemm` with a compile-time-constant `B`: `transB` applied at pack
 /// time, `beta` folded into the pre-scaled bias, `alpha` applied in the
 /// write-back (after the full accumulation, matching the generic op's
-/// rounding order exactly).
+/// rounding order exactly), and an optional fused elementwise epilogue
+/// chain applied per output element (channel = output column), the same
+/// fusion [`PackedConv`] has had since PR 2.
 #[derive(Debug)]
 pub struct PackedGemm {
     k: usize,
@@ -429,6 +476,23 @@ pub struct PackedGemm {
     beta: f32,
     trans_a: bool,
     bias: GemmBias,
+    epilogue: Vec<Epilogue>,
+}
+
+/// Apply a fused epilogue chain in place over row-major `[.., n]` data
+/// (channel = column). Replays each stage's per-element arithmetic in
+/// node order — identical to running the original elementwise nodes as
+/// separate full-tensor passes.
+fn apply_epilogue_columns(data: &mut [f32], n: usize, epilogue: &[Epilogue]) {
+    if epilogue.is_empty() {
+        return;
+    }
+    for (i, v) in data.iter_mut().enumerate() {
+        let oc = i % n;
+        for e in epilogue {
+            *v = e.apply(*v, oc);
+        }
+    }
 }
 
 impl PackedGemm {
@@ -460,7 +524,22 @@ impl PackedGemm {
                 GemmBias::Folded(pre)
             }
         };
-        Some(PackedGemm { k, n, bp, alpha, beta, trans_a, bias })
+        Some(PackedGemm { k, n, bp, alpha, beta, trans_a, bias, epilogue: Vec::new() })
+    }
+
+    /// Append a fused elementwise stage (compile-time fusion pass).
+    pub(crate) fn push_epilogue(&mut self, e: Epilogue) {
+        self.epilogue.push(e);
+    }
+
+    /// Output features (`N`) — the channel axis the epilogue indexes.
+    pub(crate) fn out_channels(&self) -> usize {
+        self.n
+    }
+
+    /// Number of fused epilogue stages.
+    pub fn epilogue_len(&self) -> usize {
+        self.epilogue.len()
     }
 
     /// `inputs[0]` is A; `inputs[1]` (when present) is a runtime C.
@@ -482,8 +561,12 @@ impl PackedGemm {
             }
         }
         let y = Tensor::new(vec![m, self.n], out);
-        let summed = match &self.bias {
-            GemmBias::None => return Ok(y),
+        let mut summed = match &self.bias {
+            GemmBias::None => {
+                let mut y = y;
+                apply_epilogue_columns(y.as_f32_mut()?, self.n, &self.epilogue);
+                return Ok(y);
+            }
             GemmBias::Folded(c) => y.binary_op(c, |p, q| p + q)?,
             GemmBias::Runtime => {
                 ensure!(inputs.len() >= 2, "PackedGemm wants the runtime C tensor");
@@ -499,17 +582,23 @@ impl PackedGemm {
         if let Some(buf) = y.into_f32_vec() {
             scratch.give(buf); // pre-bias accumulator goes back to the pool
         }
+        apply_epilogue_columns(summed.as_f32_mut()?, self.n, &self.epilogue);
         Ok(summed)
     }
 }
 
 /// `MatMul` with a compile-time-constant rank-2 rhs, packed once.
-/// Batched (>2-D) lhs is flattened by view — no reshape copy.
+/// Batched (>2-D) lhs is flattened by view — no reshape copy. An
+/// optional fused elementwise epilogue applies per output element
+/// (channel = last-axis column); the compile pass only fuses
+/// channel-independent stages here, since a batched lhs changes which
+/// axis a channel-indexed op like BatchNorm would read.
 #[derive(Debug)]
 pub struct PackedMatMul {
     k: usize,
     n: usize,
     bp: PackedB,
+    epilogue: Vec<Epilogue>,
 }
 
 impl PackedMatMul {
@@ -518,7 +607,22 @@ impl PackedMatMul {
             return None;
         }
         let (k, n) = (b.shape()[0], b.shape()[1]);
-        Some(PackedMatMul { k, n, bp: PackedB::pack(k, n, b.as_f32().ok()?) })
+        Some(PackedMatMul { k, n, bp: PackedB::pack(k, n, b.as_f32().ok()?), epilogue: Vec::new() })
+    }
+
+    /// Append a fused elementwise stage (compile-time fusion pass).
+    pub(crate) fn push_epilogue(&mut self, e: Epilogue) {
+        self.epilogue.push(e);
+    }
+
+    /// Output features (`N`) — the channel axis the epilogue indexes.
+    pub(crate) fn out_channels(&self) -> usize {
+        self.n
+    }
+
+    /// Number of fused epilogue stages.
+    pub fn epilogue_len(&self) -> usize {
+        self.epilogue.len()
     }
 
     pub fn run(&self, a: &Tensor, scratch: &mut ScratchArena) -> Result<Tensor> {
@@ -527,6 +631,7 @@ impl PackedMatMul {
             ensure!(ak == self.k, "matmul2d inner dim mismatch {ak} vs {}", self.k);
             let mut out = scratch.take(m * self.n);
             gemm_prepacked(m, self.k, &self.bp, a.as_f32()?, &mut out);
+            apply_epilogue_columns(&mut out, self.n, &self.epilogue);
             return Ok(Tensor::new(vec![m, self.n], out));
         }
         // batched lhs [batch.., m, k] over the shared 2-D rhs
@@ -541,6 +646,7 @@ impl PackedMatMul {
         let rows = a.numel() / ak;
         let mut out = scratch.take(rows * self.n);
         gemm_prepacked(rows, self.k, &self.bp, a.as_f32()?, &mut out);
+        apply_epilogue_columns(&mut out, self.n, &self.epilogue);
         let mut out_shape = a.shape().to_vec();
         *out_shape.last_mut().unwrap() = self.n;
         Ok(Tensor::new(out_shape, out))
@@ -632,6 +738,48 @@ mod tests {
         let want = ops::linalg::gemm_op(&node, &[&a, &b, &c]).unwrap();
         let pg = PackedGemm::try_build(&node, &b, Some(Some(&c))).unwrap();
         let got = pg.run(&[&a], &mut ScratchArena::new()).unwrap();
+        assert_eq!(got, want[0]);
+    }
+
+    #[test]
+    fn packed_gemm_with_quant_epilogue_matches_two_pass() {
+        let gemm_node = Node::new("Gemm", &["a", "b", "c"], &["g"]).with_attr("beta", 2.0f32);
+        let quant_node = Node::new("Quant", &["g", "s", "z", "bw"], &["y"])
+            .with_attr("signed", 1i64)
+            .with_attr("rounding_mode", "ROUND");
+        let a = Tensor::new(vec![3, 5], (0..15).map(|v| (v % 7) as f32 * 0.4 - 1.0).collect());
+        let b = Tensor::new(vec![5, 4], (0..20).map(|v| (v % 9) as f32 * 0.3 - 1.2).collect());
+        let c = Tensor::new(vec![1, 4], vec![0.5, -0.5, 1.0, 0.0]);
+        let s = Tensor::scalar(0.25);
+        let z = Tensor::scalar(0.0);
+        let bw = Tensor::scalar(4.0);
+        let g_out = ops::linalg::gemm_op(&gemm_node, &[&a, &b, &c]).unwrap();
+        let want = ops::quant::quant_op(&quant_node, &[&g_out[0], &s, &z, &bw]).unwrap();
+        let mut pg = PackedGemm::try_build(&gemm_node, &b, Some(Some(&c))).unwrap();
+        let resolve = |name: &str| match name {
+            "s" => Some(&s),
+            "z" => Some(&z),
+            "bw" => Some(&bw),
+            _ => None,
+        };
+        let ep = Epilogue::try_build(&quant_node, resolve, pg.out_channels()).unwrap();
+        pg.push_epilogue(ep);
+        assert_eq!(pg.epilogue_len(), 1);
+        let got = pg.run(&[&a], &mut ScratchArena::new()).unwrap();
+        assert_eq!(got, want[0]);
+    }
+
+    #[test]
+    fn packed_matmul_with_relu_epilogue_matches_two_pass_batched() {
+        let node = Node::new("MatMul", &["a", "b"], &["m"]);
+        let b = Tensor::new(vec![3, 4], (0..12).map(|v| v as f32 - 6.0).collect());
+        let a3 = Tensor::new(vec![2, 2, 3], (0..12).map(|v| v as f32 * 0.25 - 1.0).collect());
+        let m_out = ops::linalg::matmul(&node, &[&a3, &b]).unwrap();
+        let relu_node = Node::new("Relu", &["m"], &["y"]);
+        let want = ops::eltwise::relu(&relu_node, &[&m_out[0]]).unwrap();
+        let mut pm = PackedMatMul::try_build(&b).unwrap();
+        pm.push_epilogue(Epilogue::Relu);
+        let got = pm.run(&a3, &mut ScratchArena::new()).unwrap();
         assert_eq!(got, want[0]);
     }
 

@@ -35,21 +35,32 @@
 //! 1. **Folded** — all inputs are compile-time constants: the node runs
 //!    once at compile time and its outputs become resident constants
 //!    (this is how weight-quantizer subgraphs vanish from the schedule).
-//! 2. **Packed (+ fused)** — the node's *weight* operands are constants
-//!    but its data input is runtime: `Conv`/`Gemm`/`MatMul` become
+//! 2. **Quantized** — the node's constant weights fit `i8` *and* the
+//!    value-range proofs from [`crate::transforms::infer_ranges`] show
+//!    its runtime input on a literal integer grid (the form
+//!    [`crate::streamline`] produces): `Conv`/`Gemm`/`MatMul` lower to
+//!    integer-domain kernels ([`qkernel::QuantConv`] & co. — `i8` weight
+//!    panels, `i32` accumulation, a sole-consumer `MultiThreshold`
+//!    fused as the scatter-loop epilogue). Accumulators are bounded
+//!    below `2^24` at compile time, so the integer result is exactly the
+//!    float result: this tier is byte-identical on the graphs it accepts.
+//! 3. **Packed (+ fused)** — the node's *weight* operands are constants
+//!    but its data input is runtime float: `Conv`/`Gemm`/`MatMul` become
 //!    stateful prepacked kernels ([`kernel::PackedConv`],
 //!    [`kernel::PackedGemm`], [`kernel::PackedMatMul`]) with hyper-params
 //!    resolved once and weights transposed/panel-packed once
-//!    ([`crate::tensor::PackedB`]); a packed conv additionally absorbs a
-//!    chain of sole-consumer elementwise stages (BatchNorm, Quant,
-//!    BipolarQuant, Relu) into its scatter-loop epilogue, deleting those
-//!    steps from the schedule.
-//! 3. **Generic** — everything else dispatches through the registry
+//!    ([`crate::tensor::PackedB`]); all three absorb chains of
+//!    sole-consumer elementwise stages (BatchNorm, Quant, BipolarQuant,
+//!    Relu) into their write-back epilogues, deleting those steps from
+//!    the schedule (MatMul, whose output rank is batch-dependent, only
+//!    absorbs channel-independent stages).
+//! 4. **Generic** — everything else dispatches through the registry
 //!    function pointer resolved at compile time.
 //!
 //! All tiers are bit-exact with the reference interpreter: the packed
-//! GEMM keeps the interpreter's ascending-k accumulation order and each
-//! fused epilogue replays the generic op's per-element arithmetic
+//! GEMM keeps the interpreter's ascending-k accumulation order, each
+//! fused epilogue replays the generic op's per-element arithmetic, and
+//! the quantized tier's integer math is exact under its `2^24` bound
 //! (`tests/plan_equiv.rs` asserts byte equality across the zoo).
 //!
 //! # Batch-symbolic plans
@@ -92,6 +103,7 @@
 pub mod arena;
 mod compile;
 pub mod kernel;
+pub mod qkernel;
 
 pub use arena::{ScratchArena, SlotArena};
 pub use kernel::CompiledKernel;
@@ -125,6 +137,12 @@ pub struct PlanOptions {
     /// dim. Independent of `specialize`; bit-identical at declared
     /// shapes (see [`kernel::BatchReshape`] for the exact contract).
     pub batch_symbolic: bool,
+    /// Lower integer-proven `Conv`/`Gemm`/`MatMul` nodes to the
+    /// quantized `i8`/`i32` kernel tier ([`qkernel`]). Only applies
+    /// where [`crate::transforms::infer_ranges`] proves a literal
+    /// integer grid, so it is a no-op on ordinary float graphs.
+    /// Requires `specialize` (the generic baseline disables both).
+    pub quantize: bool,
 }
 
 impl Default for PlanOptions {
@@ -134,6 +152,7 @@ impl Default for PlanOptions {
             specialize: true,
             fuse_epilogues: true,
             batch_symbolic: true,
+            quantize: true,
         }
     }
 }
@@ -292,8 +311,12 @@ pub struct ExecutionPlan<'g> {
     pub(crate) folded_count: usize,
     pub(crate) elided_count: usize,
     pub(crate) packed_count: usize,
+    pub(crate) quant_count: usize,
     pub(crate) fused_count: usize,
     pub(crate) batch_symbolic_count: usize,
+    /// Reasons this plan can never serve a leading batch larger than its
+    /// declared shapes (constant reshape targets that bake a batch).
+    pub(crate) batch_blockers: Vec<String>,
 }
 
 /// Result of a plan run.
@@ -336,8 +359,10 @@ impl<'g> ExecutionPlan<'g> {
             folded_count: self.folded_count,
             elided_count: self.elided_count,
             packed_count: self.packed_count,
+            quant_count: self.quant_count,
             fused_count: self.fused_count,
             batch_symbolic_count: self.batch_symbolic_count,
+            batch_blockers: self.batch_blockers,
         }
     }
 
@@ -370,14 +395,32 @@ impl<'g> ExecutionPlan<'g> {
         self.preloads.len()
     }
 
-    /// Steps running a specialized prepacked kernel (tier 2).
+    /// Steps running a specialized prepacked float kernel.
     pub fn packed_count(&self) -> usize {
         self.packed_count
     }
 
-    /// Elementwise nodes absorbed into packed-conv epilogues.
+    /// Steps running an integer-domain quantized kernel
+    /// ([`qkernel::QuantConv`] / [`qkernel::QuantGemm`] /
+    /// [`qkernel::QuantMatMul`]).
+    pub fn quant_kernel_count(&self) -> usize {
+        self.quant_count
+    }
+
+    /// Elementwise nodes absorbed into kernel epilogues (packed-float
+    /// chains and `MultiThreshold` stages fused into quantized kernels).
     pub fn fused_epilogue_count(&self) -> usize {
         self.fused_count
+    }
+
+    /// Why this plan can never serve a leading batch beyond its declared
+    /// shapes: constant `Reshape` targets the batch-symbolic pass could
+    /// not rewrite (baked batch > 1, wildcard without inferred shapes,
+    /// positional copy-dims). Empty for batchable plans. Engines that
+    /// promise batched serving check this at construction
+    /// ([`crate::coordinator::PlannedEngine`] fails loudly on it).
+    pub fn batch_blockers(&self) -> &[String] {
+        &self.batch_blockers
     }
 
     /// `Reshape` nodes rewritten batch-preserving by the batch-symbolic
@@ -536,16 +579,20 @@ impl<'g> ExecutionPlan<'g> {
     pub fn summary(&self) -> String {
         let mut s = format!(
             "plan '{}': {} graph nodes -> {} steps ({} const-folded, {} identity-elided, \
-             {} packed, {} epilogue-fused, {} batch-symbolic)\n",
+             {} packed, {} quantized, {} epilogue-fused, {} batch-symbolic)\n",
             self.name,
             self.node_count,
             self.steps.len(),
             self.folded_count,
             self.elided_count,
             self.packed_count,
+            self.quant_count,
             self.fused_count,
             self.batch_symbolic_count
         );
+        for b in &self.batch_blockers {
+            let _ = writeln!(s, "  ! batch-blocked: {b}");
+        }
         let _ = writeln!(
             s,
             "  {} physical slots, {} preloaded constants, {} inputs, {} outputs",

@@ -1,0 +1,627 @@
+//! The quantized (tier-3) kernels: integer-domain `Conv`/`Gemm`/`MatMul`
+//! with `i8` weight panels, `i32` accumulation, and the streamlined
+//! `MultiThreshold` activation fused as the scatter-loop epilogue.
+//!
+//! The plan compiler selects these whenever the value-range proofs from
+//! [`crate::transforms::infer_ranges`] show that a linear op's runtime
+//! input lives on a literal integer grid and its constant weights fit
+//! `i8` — the form [`crate::streamline`] produces. Compared with the
+//! packed float tier this moves 4-byte weight traffic to 1 byte, turns
+//! the inner loop into integer MACs (no rounding, so no accumulation-
+//! order contract is needed), and replaces the separate full-tensor
+//! `MultiThreshold` pass with a per-element binary search over `i32`
+//! thresholds inside the scatter loop.
+//!
+//! # Exactness contract
+//!
+//! Selection requires every accumulator magnitude (including any folded
+//! integer bias) to stay below `2^24`. Under that bound the `i32` result
+//! is exactly representable in the f32 container, so a quantized plan is
+//! **byte-identical** to running the same streamlined graph through the
+//! float kernels or the reference interpreter — `tests/plan_equiv.rs`
+//! asserts this across the zoo. The runtime conversion re-checks that
+//! bound: a caller binding values off the proven grid (violating the
+//! graph's datatype annotations) gets an error, not silent truncation.
+
+use super::arena::ScratchArena;
+use crate::ir::Node;
+use crate::ops::linalg::{conv_params, ConvParams};
+use crate::ops::multithreshold::threshold_count_i32;
+use crate::tensor::{conv_out_dim, im2col_group_into, qgemm_prepacked, PackedBi8, Tensor};
+use crate::transforms::ValueRange;
+use anyhow::{ensure, Result};
+
+/// Largest magnitude exactly representable on the f32 integer grid; the
+/// compile-time accumulator bound AND the runtime input-validation bound.
+const EXACT_F32_LIMIT: f64 = 16_777_216.0; // 2^24
+
+/// Extract a tensor's values as `i8`, or `None` if any value is off the
+/// integer grid or outside `[-128, 127]`.
+fn to_i8(vals: &[f32]) -> Option<Vec<i8>> {
+    let mut out = Vec::with_capacity(vals.len());
+    for &v in vals {
+        let vf = f64::from(v);
+        if vf.fract() != 0.0 || !(-128.0..=127.0).contains(&vf) {
+            return None;
+        }
+        out.push(v as i8);
+    }
+    Some(out)
+}
+
+/// Max absolute value of an integral range (None when unusable).
+fn range_abs(r: ValueRange) -> Option<f64> {
+    if !r.integral || !r.lo.is_finite() || !r.hi.is_finite() {
+        return None;
+    }
+    Some(r.lo.abs().max(r.hi.abs()))
+}
+
+/// Convert a proven-integral f32 slice into `i32`, re-validating the
+/// compile-time range proof per element.
+fn to_i32_checked(src: &[f32], lo: f64, hi: f64, out: &mut [i32]) -> Result<()> {
+    debug_assert_eq!(src.len(), out.len());
+    for (&v, o) in src.iter().zip(out.iter_mut()) {
+        let vf = f64::from(v);
+        ensure!(
+            vf.fract() == 0.0 && vf >= lo && vf <= hi,
+            "quantized-tier input value {v} is off the proven integer grid [{lo}, {hi}] \
+             (the bound datatype annotation does not match the runtime data)"
+        );
+        *o = v as i32;
+    }
+    Ok(())
+}
+
+/// A `MultiThreshold` stage fused into a quantized kernel's scatter loop:
+/// per-channel sorted `i32` threshold rows, counted by binary search,
+/// with the node's `out_scale`/`out_bias` replayed in f32 exactly as the
+/// generic op computes them.
+#[derive(Debug, Clone)]
+pub(crate) struct QThreshold {
+    channels: usize,
+    steps: usize,
+    rows: Vec<i32>,
+    out_scale: f32,
+    out_bias: f32,
+}
+
+impl QThreshold {
+    /// Compile a `MultiThreshold` node whose thresholds are a compile-time
+    /// constant into a fused integer epilogue. Declines (`None`) whenever
+    /// anything deviates from the integer-domain form — the node then
+    /// stays a separate generic step with full error parity.
+    pub(crate) fn try_build(node: &Node, th: &Tensor, out_channels: usize) -> Option<QThreshold> {
+        if node.op_type != "MultiThreshold" || node.inputs.len() != 2 || node.outputs.len() != 1 {
+            return None;
+        }
+        if node.attr_str_or("data_layout", "NCHW") != "NCHW" {
+            return None;
+        }
+        if th.rank() != 2 {
+            return None;
+        }
+        let (tc, tt) = (th.shape()[0], th.shape()[1]);
+        if (tc != out_channels && tc != 1) || tt == 0 {
+            return None;
+        }
+        let vals = th.as_f32().ok()?;
+        let mut rows = Vec::with_capacity(vals.len());
+        for &v in vals {
+            let vf = f64::from(v);
+            if vf.fract() != 0.0 || vf.abs() >= EXACT_F32_LIMIT {
+                return None;
+            }
+            rows.push(v as i32);
+        }
+        for c in 0..tc {
+            let row = &rows[c * tt..(c + 1) * tt];
+            if !row.windows(2).all(|w| w[0] <= w[1]) {
+                return None; // unsorted: generic op reports the error
+            }
+        }
+        Some(QThreshold {
+            channels: tc,
+            steps: tt,
+            rows,
+            out_scale: node.attr_float_or("out_scale", 1.0),
+            out_bias: node.attr_float_or("out_bias", 0.0),
+        })
+    }
+
+    #[inline]
+    fn apply(&self, acc: i32, oc: usize) -> f32 {
+        let c = if self.channels == 1 { 0 } else { oc };
+        let row = &self.rows[c * self.steps..(c + 1) * self.steps];
+        // identical expression to ops::multithreshold::multi_threshold
+        self.out_scale * threshold_count_i32(row, acc) as f32 + self.out_bias
+    }
+}
+
+#[inline]
+fn emit(epilogue: &Option<QThreshold>, acc: i32, oc: usize) -> f32 {
+    match epilogue {
+        None => acc as f32, // exact: |acc| < 2^24 by the compile-time bound
+        Some(t) => t.apply(acc, oc),
+    }
+}
+
+/// Integer-domain conv: `i8` weight panels per group, `i32` im2col +
+/// accumulate, fused `MultiThreshold` in the scatter loop.
+#[derive(Debug)]
+pub struct QuantConv {
+    p: ConvParams,
+    m: usize,
+    cg: usize,
+    mg: usize,
+    k: usize,
+    weights: Vec<PackedBi8>,
+    in_lo: f64,
+    in_hi: f64,
+    epilogue: Option<QThreshold>,
+}
+
+impl QuantConv {
+    /// Build from a conv node with constant `i8`-grid weights and a
+    /// proven-integral input range. Declines on anything unsupported
+    /// (bias input, NHWC wrapper, non-integer weights, accumulator bound):
+    /// the caller then falls back to the packed float tier.
+    pub(crate) fn try_build(node: &Node, w: &Tensor, r: ValueRange) -> Option<QuantConv> {
+        if node.inputs.get(2).map(String::as_str).is_some_and(|s| !s.is_empty()) {
+            return None; // streamlined graphs carry no conv bias
+        }
+        if node.attr_str_or("data_layout", "NCHW") != "NCHW" {
+            return None;
+        }
+        if w.rank() != 4 {
+            return None;
+        }
+        let p = conv_params(node, w.shape()).ok()?;
+        let ws = to_i8(w.as_f32().ok()?)?;
+        let m = w.shape()[0];
+        let cg = w.shape()[1];
+        if p.group == 0 || m % p.group != 0 {
+            return None;
+        }
+        let mg = m / p.group;
+        let k = cg * p.kh * p.kw;
+        let in_abs = range_abs(r)?;
+        let w_abs = ws.iter().map(|&v| i32::from(v).abs()).max().unwrap_or(0) as f64;
+        if in_abs * w_abs * k as f64 >= EXACT_F32_LIMIT {
+            return None;
+        }
+        // per-group [mg, k] weight rows transposed to [k, mg] (the same
+        // shared helper the f32 paths use), packed once
+        let mut weights = Vec::with_capacity(p.group);
+        for g in 0..p.group {
+            let wt = crate::ops::linalg::transpose_group_weights(&ws, g, mg, k);
+            weights.push(PackedBi8::pack(k, mg, &wt));
+        }
+        Some(QuantConv {
+            p,
+            m,
+            cg,
+            mg,
+            k,
+            weights,
+            in_lo: r.lo,
+            in_hi: r.hi,
+            epilogue: None,
+        })
+    }
+
+    /// Output channels (`M`) — the axis a fused threshold indexes.
+    pub(crate) fn out_channels(&self) -> usize {
+        self.m
+    }
+
+    pub(crate) fn set_epilogue(&mut self, t: QThreshold) {
+        self.epilogue = Some(t);
+    }
+
+    /// Whether a `MultiThreshold` stage is fused in.
+    pub fn has_fused_threshold(&self) -> bool {
+        self.epilogue.is_some()
+    }
+
+    /// Execute on an NCHW input of any batch size.
+    pub fn run(&self, x: &Tensor, scratch: &mut ScratchArena) -> Result<Tensor> {
+        ensure!(x.rank() == 4, "Conv input must be NCHW, got {:?}", x.shape());
+        let (n, c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+        ensure!(
+            c == self.cg * self.p.group,
+            "channel mismatch: x has {c}, w wants {} x group {}",
+            self.cg,
+            self.p.group
+        );
+        let xs = x.as_f32()?;
+        let mut xi = scratch.take_i32_uninit(xs.len());
+        to_i32_checked(xs, self.in_lo, self.in_hi, &mut xi)?;
+        let p = &self.p;
+        let oh = conv_out_dim(h, p.kh, p.stride_h, p.pads[0], p.pads[2]);
+        let ow = conv_out_dim(w, p.kw, p.stride_w, p.pads[1], p.pads[3]);
+        let rows = n * oh * ow;
+        let mut out = scratch.take_uninit(n * self.m * oh * ow);
+        let mut cols = scratch.take_i32(rows * self.k);
+        let mut prod = scratch.take_i32(rows * self.mg);
+        for g in 0..p.group {
+            if g > 0 {
+                prod.fill(0); // qgemm accumulates; cols' padding zeros persist
+            }
+            im2col_group_into(
+                &xi, n, c, h, w, g * self.cg, self.cg, p.kh, p.kw, p.stride_h, p.stride_w,
+                p.pads, &mut cols,
+            );
+            qgemm_prepacked(rows, self.k, &self.weights[g], &cols, &mut prod);
+            // scatter [rows, mg] -> NCHW, fusing the threshold per element
+            for b in 0..n {
+                for mi in 0..self.mg {
+                    let oc = g * self.mg + mi;
+                    let dst = (b * self.m + oc) * oh * ow;
+                    let src0 = b * oh * ow;
+                    for pix in 0..oh * ow {
+                        out[dst + pix] = emit(&self.epilogue, prod[(src0 + pix) * self.mg + mi], oc);
+                    }
+                }
+            }
+        }
+        scratch.give_i32(xi);
+        scratch.give_i32(cols);
+        scratch.give_i32(prod);
+        Ok(Tensor::new(vec![n, self.m, oh, ow], out))
+    }
+}
+
+/// Integer-domain `Gemm` (no runtime `C`): constant `i8` `B` with `transB`
+/// applied at pack time; a constant integral `beta * C` folds into an
+/// `i32` per-column bias inside the accumulator.
+#[derive(Debug)]
+pub struct QuantGemm {
+    k: usize,
+    n: usize,
+    bp: PackedBi8,
+    bias: Option<Vec<i32>>,
+    in_lo: f64,
+    in_hi: f64,
+    epilogue: Option<QThreshold>,
+}
+
+impl QuantGemm {
+    /// `c` is `None` when the node has no C input, `Some(None)` when C is
+    /// a runtime value (declines — the float tier handles it),
+    /// `Some(Some(t))` when C is constant.
+    pub(crate) fn try_build(
+        node: &Node,
+        b: &Tensor,
+        c: Option<Option<&Tensor>>,
+        r: ValueRange,
+    ) -> Option<QuantGemm> {
+        if node.attr_float_or("alpha", 1.0) != 1.0 || node.attr_int_or("transA", 0) != 0 {
+            return None;
+        }
+        let beta = f64::from(node.attr_float_or("beta", 1.0));
+        let trans_b = node.attr_int_or("transB", 0) != 0;
+        if b.rank() != 2 {
+            return None;
+        }
+        let bt = if trans_b { b.transpose(&[1, 0]).ok()? } else { b.clone() };
+        let (k, n) = (bt.shape()[0], bt.shape()[1]);
+        let bi = to_i8(bt.as_f32().ok()?)?;
+        let in_abs = range_abs(r)?;
+        let w_abs = bi.iter().map(|&v| i32::from(v).abs()).max().unwrap_or(0) as f64;
+        let bias = match c {
+            None => None,
+            Some(None) => return None, // runtime C stays on the float tier
+            Some(Some(ct)) => {
+                // per-column broadcast only ([n] / [1, n] / scalar); a
+                // per-row or full-matrix C stays on the float tier
+                let per_column = ct.numel() == 1
+                    || (ct.numel() == n
+                        && (ct.rank() == 1 || (ct.rank() == 2 && ct.shape()[0] == 1)));
+                if !per_column {
+                    return None;
+                }
+                let cv = ct.as_f32().ok()?;
+                let mut out = Vec::with_capacity(n);
+                for j in 0..n {
+                    let v = beta * f64::from(cv[j % cv.len()]);
+                    if v.fract() != 0.0 || v.abs() >= EXACT_F32_LIMIT {
+                        return None;
+                    }
+                    out.push(v as i32);
+                }
+                Some(out)
+            }
+        };
+        let c_abs = bias
+            .as_ref()
+            .map(|b| b.iter().map(|&v| v.abs()).max().unwrap_or(0) as f64)
+            .unwrap_or(0.0);
+        if in_abs * w_abs * k as f64 + c_abs >= EXACT_F32_LIMIT {
+            return None;
+        }
+        Some(QuantGemm {
+            k,
+            n,
+            bp: PackedBi8::pack(k, n, &bi),
+            bias,
+            in_lo: r.lo,
+            in_hi: r.hi,
+            epilogue: None,
+        })
+    }
+
+    pub(crate) fn out_channels(&self) -> usize {
+        self.n
+    }
+
+    pub(crate) fn set_epilogue(&mut self, t: QThreshold) {
+        self.epilogue = Some(t);
+    }
+
+    /// Whether a `MultiThreshold` stage is fused in.
+    pub fn has_fused_threshold(&self) -> bool {
+        self.epilogue.is_some()
+    }
+
+    pub fn run(&self, a: &Tensor, scratch: &mut ScratchArena) -> Result<Tensor> {
+        ensure!(a.rank() == 2, "matmul2d wants rank-2");
+        let (m, ak) = (a.shape()[0], a.shape()[1]);
+        ensure!(ak == self.k, "matmul2d inner dim mismatch {ak} vs {}", self.k);
+        let xs = a.as_f32()?;
+        let mut xi = scratch.take_i32_uninit(xs.len());
+        to_i32_checked(xs, self.in_lo, self.in_hi, &mut xi)?;
+        let mut prod = scratch.take_i32(m * self.n);
+        qgemm_prepacked(m, self.k, &self.bp, &xi, &mut prod);
+        let mut out = scratch.take_uninit(m * self.n);
+        for (i, (o, &acc)) in out.iter_mut().zip(prod.iter()).enumerate() {
+            let oc = i % self.n;
+            let acc = match &self.bias {
+                Some(bv) => acc + bv[oc],
+                None => acc,
+            };
+            *o = emit(&self.epilogue, acc, oc);
+        }
+        scratch.give_i32(xi);
+        scratch.give_i32(prod);
+        Ok(Tensor::new(vec![m, self.n], out))
+    }
+}
+
+/// Integer-domain `MatMul` with a constant rank-2 `i8` rhs; batched
+/// (>2-D) lhs is flattened by view like the packed float kernel.
+#[derive(Debug)]
+pub struct QuantMatMul {
+    k: usize,
+    n: usize,
+    bp: PackedBi8,
+    in_lo: f64,
+    in_hi: f64,
+    epilogue: Option<QThreshold>,
+}
+
+impl QuantMatMul {
+    pub(crate) fn try_build(b: &Tensor, r: ValueRange) -> Option<QuantMatMul> {
+        if b.rank() != 2 {
+            return None;
+        }
+        let (k, n) = (b.shape()[0], b.shape()[1]);
+        let bi = to_i8(b.as_f32().ok()?)?;
+        let in_abs = range_abs(r)?;
+        let w_abs = bi.iter().map(|&v| i32::from(v).abs()).max().unwrap_or(0) as f64;
+        if in_abs * w_abs * k as f64 >= EXACT_F32_LIMIT {
+            return None;
+        }
+        Some(QuantMatMul {
+            k,
+            n,
+            bp: PackedBi8::pack(k, n, &bi),
+            in_lo: r.lo,
+            in_hi: r.hi,
+            epilogue: None,
+        })
+    }
+
+    pub(crate) fn out_channels(&self) -> usize {
+        self.n
+    }
+
+    pub(crate) fn set_epilogue(&mut self, t: QThreshold) {
+        self.epilogue = Some(t);
+    }
+
+    /// Whether a `MultiThreshold` stage is fused in.
+    pub fn has_fused_threshold(&self) -> bool {
+        self.epilogue.is_some()
+    }
+
+    pub fn run(&self, a: &Tensor, scratch: &mut ScratchArena) -> Result<Tensor> {
+        if a.rank() > 2 && self.epilogue.is_some() {
+            // the generic MultiThreshold op only supports rank-2/4 inputs;
+            // keep the fused path's error surface aligned with it
+            anyhow::bail!("unsupported MultiThreshold input rank {} after batched MatMul", a.rank());
+        }
+        ensure!(a.rank() >= 2, "unsupported MatMul lhs rank {:?}", a.shape());
+        let ak = *a.shape().last().unwrap();
+        ensure!(ak == self.k, "matmul2d inner dim mismatch {ak} vs {}", self.k);
+        let rows = a.numel() / ak;
+        let xs = a.as_f32()?;
+        let mut xi = scratch.take_i32_uninit(xs.len());
+        to_i32_checked(xs, self.in_lo, self.in_hi, &mut xi)?;
+        let mut prod = scratch.take_i32(rows * self.n);
+        qgemm_prepacked(rows, self.k, &self.bp, &xi, &mut prod);
+        let mut out = scratch.take_uninit(rows * self.n);
+        for (i, (o, &acc)) in out.iter_mut().zip(prod.iter()).enumerate() {
+            *o = emit(&self.epilogue, acc, i % self.n);
+        }
+        scratch.give_i32(xi);
+        scratch.give_i32(prod);
+        let mut out_shape = a.shape().to_vec();
+        *out_shape.last_mut().unwrap() = self.n;
+        Ok(Tensor::new(out_shape, out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops;
+
+    fn int_range(lo: f64, hi: f64) -> ValueRange {
+        ValueRange { lo, hi, integral: true }
+    }
+
+    fn int_tensor(shape: Vec<usize>, seed: u64, span: i32) -> Tensor {
+        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(7);
+        let n: usize = shape.iter().product();
+        let data: Vec<f32> = (0..n)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                (((s >> 40) as i32).rem_euclid(2 * span + 1) - span) as f32
+            })
+            .collect();
+        Tensor::new(shape, data)
+    }
+
+    #[test]
+    fn quant_matmul_matches_float_matmul_exactly() {
+        let node = Node::new("MatMul", &["a", "b"], &["y"]);
+        let a = int_tensor(vec![5, 33], 1, 7);
+        let b = int_tensor(vec![33, 9], 2, 3);
+        let want = ops::linalg::matmul(&node, &[&a, &b]).unwrap();
+        let qm = QuantMatMul::try_build(&b, int_range(-7.0, 7.0)).unwrap();
+        let mut scratch = ScratchArena::new();
+        let got = qm.run(&a, &mut scratch).unwrap();
+        assert_eq!(got, want[0]);
+        // warm second run reuses pooled i32 scratch
+        assert_eq!(qm.run(&a, &mut scratch).unwrap(), want[0]);
+        // batched lhs
+        let a3 = int_tensor(vec![2, 4, 33], 3, 7);
+        let want3 = ops::linalg::matmul(&node, &[&a3, &b]).unwrap();
+        assert_eq!(qm.run(&a3, &mut scratch).unwrap(), want3[0]);
+    }
+
+    #[test]
+    fn quant_conv_matches_float_conv_exactly() {
+        let node = Node::new("Conv", &["x", "w"], &["y"])
+            .with_attr("kernel_shape", vec![3i64, 3])
+            .with_attr("pads", vec![1i64, 1, 1, 1]);
+        let x = int_tensor(vec![2, 3, 6, 6], 4, 15);
+        let w = int_tensor(vec![4, 3, 3, 3], 5, 2);
+        let want = ops::linalg::conv(&node, &[&x, &w]).unwrap();
+        let qc = QuantConv::try_build(&node, &w, int_range(-15.0, 15.0)).unwrap();
+        let got = qc.run(&x, &mut ScratchArena::new()).unwrap();
+        assert_eq!(got, want[0]);
+    }
+
+    #[test]
+    fn quant_grouped_conv_matches_float() {
+        let node = Node::new("Conv", &["x", "w"], &["y"])
+            .with_attr("kernel_shape", vec![2i64, 2])
+            .with_attr("group", 2i64);
+        let x = int_tensor(vec![1, 4, 5, 5], 6, 7);
+        let w = int_tensor(vec![6, 2, 2, 2], 7, 3);
+        let want = ops::linalg::conv(&node, &[&x, &w]).unwrap();
+        let qc = QuantConv::try_build(&node, &w, int_range(-7.0, 7.0)).unwrap();
+        assert_eq!(qc.run(&x, &mut ScratchArena::new()).unwrap(), want[0]);
+    }
+
+    #[test]
+    fn fused_threshold_matches_two_pass() {
+        let mm = Node::new("MatMul", &["a", "b"], &["acc"]);
+        let mt = Node::new("MultiThreshold", &["acc", "t"], &["y"])
+            .with_attr("out_scale", 1.0f32)
+            .with_attr("out_bias", -2.0f32);
+        let a = int_tensor(vec![3, 16], 8, 7);
+        let b = int_tensor(vec![16, 4], 9, 1);
+        // per-column thresholds (4 channels x 3 steps), sorted
+        let th = Tensor::new(
+            vec![4, 3],
+            vec![-5., 0., 5., -9., -1., 2., 0., 1., 3., -2., -2., 8.],
+        );
+        let acc = ops::linalg::matmul(&mm, &[&a, &b]).unwrap();
+        let want = ops::multithreshold::multi_threshold(&mt, &[&acc[0], &th]).unwrap();
+        let mut qm = QuantMatMul::try_build(&b, int_range(-7.0, 7.0)).unwrap();
+        let qt = QThreshold::try_build(&mt, &th, qm.out_channels()).unwrap();
+        qm.set_epilogue(qt);
+        let got = qm.run(&a, &mut ScratchArena::new()).unwrap();
+        assert_eq!(got, want[0]);
+    }
+
+    #[test]
+    fn quant_gemm_with_integral_bias_matches_float() {
+        let node = Node::new("Gemm", &["a", "b", "c"], &["y"])
+            .with_attr("transB", 1i64)
+            .with_attr("beta", 2.0f32);
+        let a = int_tensor(vec![3, 5], 10, 7);
+        let b = int_tensor(vec![4, 5], 11, 3); // transB: [n, k]
+        let c = int_tensor(vec![1, 4], 12, 6);
+        let want = ops::linalg::gemm_op(&node, &[&a, &b, &c]).unwrap();
+        let qg = QuantGemm::try_build(&node, &b, Some(Some(&c)), int_range(-7.0, 7.0)).unwrap();
+        let got = qg.run(&a, &mut ScratchArena::new()).unwrap();
+        assert_eq!(got, want[0]);
+    }
+
+    #[test]
+    fn builders_decline_non_integer_forms() {
+        let r = int_range(-7.0, 7.0);
+        // fractional weights
+        let wf = Tensor::new(vec![2, 2], vec![0.5, 1.0, -1.0, 2.0]);
+        assert!(QuantMatMul::try_build(&wf, r).is_none());
+        // weights beyond i8
+        let wb = Tensor::new(vec![2, 2], vec![200.0, 1.0, -1.0, 2.0]);
+        assert!(QuantMatMul::try_build(&wb, r).is_none());
+        // non-integral input range
+        let wi = Tensor::new(vec![2, 2], vec![1.0, -1.0, 0.0, 1.0]);
+        assert!(QuantMatMul::try_build(&wi, ValueRange { lo: -1.0, hi: 1.0, integral: false })
+            .is_none());
+        // accumulator bound: 2^20 * 127 * k blows past 2^24
+        let big = ValueRange { lo: 0.0, hi: 1_048_576.0, integral: true };
+        let w = Tensor::new(vec![4, 1], vec![127.0, 1.0, 1.0, 1.0]);
+        assert!(QuantMatMul::try_build(&w, big).is_none());
+        // conv with a bias input declines
+        let node = Node::new("Conv", &["x", "w", "bias"], &["y"])
+            .with_attr("kernel_shape", vec![1i64, 1]);
+        let w4 = Tensor::new(vec![1, 1, 1, 1], vec![1.0]);
+        assert!(QuantConv::try_build(&node, &w4, r).is_none());
+        // gemm with runtime C declines
+        let gn = Node::new("Gemm", &["a", "b", "c"], &["y"]);
+        let b2 = Tensor::new(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        assert!(QuantGemm::try_build(&gn, &b2, Some(None), r).is_none());
+        // gemm with fractional beta*C declines
+        let gb = Node::new("Gemm", &["a", "b", "c"], &["y"]).with_attr("beta", 0.5f32);
+        let c = Tensor::new(vec![1, 2], vec![1.0, 3.0]);
+        assert!(QuantGemm::try_build(&gb, &b2, Some(Some(&c)), r).is_none());
+    }
+
+    #[test]
+    fn runtime_rejects_values_off_the_proven_grid() {
+        let b = Tensor::new(vec![2, 2], vec![1.0, -1.0, 0.0, 1.0]);
+        let qm = QuantMatMul::try_build(&b, int_range(-4.0, 4.0)).unwrap();
+        let mut scratch = ScratchArena::new();
+        let frac = Tensor::new(vec![1, 2], vec![0.5, 1.0]);
+        let err = qm.run(&frac, &mut scratch).unwrap_err().to_string();
+        assert!(err.contains("off the proven integer grid"), "{err}");
+        let oob = Tensor::new(vec![1, 2], vec![5.0, 1.0]);
+        assert!(qm.run(&oob, &mut scratch).is_err());
+    }
+
+    #[test]
+    fn threshold_builder_declines_bad_rows() {
+        let mt = Node::new("MultiThreshold", &["x", "t"], &["y"]);
+        // unsorted
+        let bad = Tensor::new(vec![1, 2], vec![3.0, 1.0]);
+        assert!(QThreshold::try_build(&mt, &bad, 4).is_none());
+        // fractional
+        let frac = Tensor::new(vec![1, 2], vec![0.5, 1.0]);
+        assert!(QThreshold::try_build(&mt, &frac, 4).is_none());
+        // channel mismatch (neither 1 nor out_channels)
+        let two = Tensor::new(vec![2, 1], vec![0.0, 1.0]);
+        assert!(QThreshold::try_build(&mt, &two, 4).is_none());
+        // NHWC layout
+        let nhwc = Node::new("MultiThreshold", &["x", "t"], &["y"]).with_attr("data_layout", "NHWC");
+        let ok = Tensor::new(vec![1, 1], vec![0.0]);
+        assert!(QThreshold::try_build(&nhwc, &ok, 4).is_none());
+        assert!(QThreshold::try_build(&mt, &ok, 4).is_some());
+    }
+}

@@ -1,0 +1,872 @@
+//! Streamlining: rewrite a quantized `ModelGraph` into **integer-domain**
+//! form (paper §VI-D; FINN's streamlining, NEMO's integer deployment
+//! stage, TVM QNN's QNN-to-integer legalization).
+//!
+//! The float graphs the exporters produce interleave real-valued scale
+//! factors with what is, underneath, pure integer arithmetic: a `Quant`
+//! activation computes `s * clamp(round(x / s + z))`, a quantized weight
+//! is `s_w * I` for an integer matrix `I`. Streamlining separates the two
+//! worlds:
+//!
+//! * every activation `Quant`/`BipolarQuant` becomes a FINN
+//!   [`MultiThreshold`](crate::ops::multithreshold) emitting the **raw
+//!   integer level** (`out_scale`/`out_bias` integral), with the
+//!   producer's accumulated scale absorbed into the thresholds — computed
+//!   in the producer's *integer* domain, so the thresholds themselves are
+//!   integers everywhere except at the float graph edge;
+//! * weight quantizers over initializers are folded to **integer
+//!   initializers** (`w = s_w * I` stores `I`, annotated with its
+//!   datatype), their scale tracked symbolically;
+//! * `BatchNormalization` disappears: its per-channel affine folds into
+//!   the tracked interpretation and thence into the next activation's
+//!   per-channel thresholds;
+//! * the one residual output scale is pushed to the graph edge as a
+//!   single `Mul` (the only float multiply left in the graph).
+//!
+//! Between the edges the graph is pure integer arithmetic in float
+//! containers, which is exactly what the plan compiler's quantized tier
+//! ([`crate::plan::qkernel`]) proves and exploits: `i8` weight panels,
+//! `i32` accumulators, thresholds fused into the scatter loop.
+//!
+//! # Semantics tracked per tensor
+//!
+//! The pass walks the topo order maintaining, for every tensor, an affine
+//! interpretation `float_value = scale[c] * int_value + bias[c]` (scalar
+//! or per-channel). Linear ops require a scalar zero-bias interpretation
+//! (a per-channel scale cannot pass *through* an integer matmul without
+//! un-integering the weights); activations absorb any per-channel affine
+//! into per-channel threshold rows; monotone ops (`Relu`, `MaxPool`)
+//! pass positive-scale interpretations through untouched.
+//!
+//! # Exactness
+//!
+//! Where every scale in the model is a power of two, float arithmetic is
+//! exact and the streamlined graph is **bit-identical** to the original
+//! (tests assert this). With non-dyadic scales (e.g. the zoo's `1/255`
+//! input quant), the original float graph itself rounds per layer while
+//! the integer form is exact, so outputs can differ by a grid step at
+//! rounding boundaries — the documented tolerance at the scaled output
+//! edge. Either way, the streamlined graph run through the quantized
+//! plan, the float plan, or the reference interpreter is byte-identical
+//! to itself (`tests/plan_equiv.rs`).
+
+use crate::datatypes::DataType;
+use crate::ir::{ModelGraph, Node, DOMAIN_FINN};
+use crate::ops::quant::{next_up, quant_bounds};
+use crate::tensor::Tensor;
+use crate::transforms;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Affine interpretation of a tensor: `float = scale[c] * int + bias[c]`.
+#[derive(Debug, Clone)]
+struct Affine {
+    /// Per-channel scale (len 1 = scalar).
+    scale: Vec<f64>,
+    /// Per-channel bias (len 1 = scalar).
+    bias: Vec<f64>,
+    /// The tensor's values are literal integers (false only at the float
+    /// graph edge, where the interpretation is the identity).
+    integral: bool,
+}
+
+impl Affine {
+    fn identity() -> Affine {
+        Affine { scale: vec![1.0], bias: vec![0.0], integral: false }
+    }
+
+    fn scalar_int(scale: f64) -> Affine {
+        Affine { scale: vec![scale], bias: vec![0.0], integral: true }
+    }
+
+    fn channels(&self) -> usize {
+        self.scale.len().max(self.bias.len())
+    }
+
+    fn is_scalar(&self) -> bool {
+        self.channels() == 1
+    }
+
+    fn scale_at(&self, c: usize) -> f64 {
+        self.scale[c % self.scale.len()]
+    }
+
+    fn bias_at(&self, c: usize) -> f64 {
+        self.bias[c % self.bias.len()]
+    }
+
+    fn all_positive(&self) -> bool {
+        self.scale.iter().all(|&s| s > 0.0)
+    }
+
+    fn zero_bias(&self) -> bool {
+        self.bias.iter().all(|&b| b == 0.0)
+    }
+
+    fn is_exact_identity(&self) -> bool {
+        self.is_scalar() && self.scale[0] == 1.0 && self.bias[0] == 0.0
+    }
+}
+
+/// What `try_streamline` found, node by node.
+#[derive(Debug, Clone)]
+pub struct StreamlineReport {
+    pub model: String,
+    /// One line per lowered / rewritten node.
+    pub lowered: Vec<String>,
+    /// Why streamlining stopped (empty when `ok`).
+    pub blockers: Vec<String>,
+    /// The whole graph reached integer-domain form.
+    pub ok: bool,
+}
+
+impl StreamlineReport {
+    /// Human-readable rendering (the `streamline` CLI prints this).
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "streamline '{}': {}\n",
+            self.model,
+            if self.ok { "integer-domain form reached ✓" } else { "NOT streamlined" }
+        );
+        for l in &self.lowered {
+            let _ = writeln!(s, "  {l}");
+        }
+        for b in &self.blockers {
+            let _ = writeln!(s, "  ! blocker: {b}");
+        }
+        s
+    }
+}
+
+/// A streamlining attempt: the (possibly rewritten) graph plus the
+/// node-by-node report. When `report.ok` is false the graph is the
+/// *cleaned* input with no integer lowering applied (semantically
+/// equivalent to the original; callers that need the verbatim source
+/// keep their own copy — [`streamline`] does).
+#[derive(Debug)]
+pub struct Streamlined {
+    pub graph: ModelGraph,
+    pub report: StreamlineReport,
+}
+
+/// Streamline in place when (and only when) the whole graph lowers
+/// cleanly; the returned report says what happened either way.
+pub fn streamline(graph: &mut ModelGraph) -> Result<StreamlineReport> {
+    let att = try_streamline(graph)?;
+    if att.report.ok {
+        *graph = att.graph;
+    }
+    Ok(att.report)
+}
+
+/// Attempt to streamline a copy of `src` (which is cleaned first — shape
+/// inference must succeed for threshold channel counts and the final
+/// annotation pass). Never fails on *unsupported* graphs: those come
+/// back with `report.ok == false` and the blocking node named.
+pub fn try_streamline(src: &ModelGraph) -> Result<Streamlined> {
+    let mut g = src.clone();
+    transforms::cleanup(&mut g).context("streamline: cleanup")?;
+    let mut report = StreamlineReport {
+        model: g.name.clone(),
+        lowered: Vec::new(),
+        blockers: Vec::new(),
+        ok: false,
+    };
+    match build(&g, &mut report) {
+        Ok(Some(graph)) => {
+            report.ok = true;
+            Ok(Streamlined { graph, report })
+        }
+        // hand back the cleaned working copy — no point cloning the
+        // full weight set again just to discard the lowering attempt
+        Ok(None) => Ok(Streamlined { graph: g, report }),
+        Err(e) => Err(e),
+    }
+}
+
+/// Scalar static quant params of a node, as f64.
+struct QParams {
+    s: f64,
+    z: f64,
+    qmin: f64,
+    qmax: f64,
+    mode_round: bool,
+}
+
+fn quant_params(g: &ModelGraph, node: &Node) -> Result<QParams, String> {
+    let p = transforms::quant_params_static(g, node)
+        .map_err(|_| "non-scalar or dynamic quant parameters".to_string())?;
+    let s = f64::from(p.scale);
+    let z = f64::from(p.zero_point);
+    if s <= 0.0 {
+        return Err(format!("non-positive scale {s}"));
+    }
+    if z.fract() != 0.0 {
+        return Err(format!("fractional zero point {z} (integer grid needed)"));
+    }
+    let mode_round = match p.rounding_mode.as_str() {
+        "ROUND" => true,
+        "FLOOR" => false,
+        other => return Err(format!("unsupported rounding mode '{other}'")),
+    };
+    let (qmin, qmax) = quant_bounds(p.signed, p.narrow, p.bit_width);
+    if (qmax - qmin).fract() != 0.0 || qmax - qmin < 1.0 {
+        return Err(format!("fractional bit width {} has no threshold grid", p.bit_width));
+    }
+    Ok(QParams { s, z, qmin, qmax, mode_round })
+}
+
+/// One threshold for entering output level `m`, in the *producer's
+/// domain*: the smallest value `t` such that `count(t <= v)` reproduces
+/// the quantizer's decision `round(float(v)/s + z) >= m`.
+///
+/// `tau` is the exact real boundary `(s*(m - z - offset) - bias_c) /
+/// scale_c`. For integral producers the threshold snaps to an integer
+/// (`ceil`, with the half-even tie excluded for odd `m` under ROUND); at
+/// the float edge the f32 threshold gets the one-ULP tie nudge instead.
+fn level_threshold(q: &QParams, m: f64, scale_c: f64, bias_c: f64, integral: bool) -> f32 {
+    let offset = if q.mode_round { 0.5 } else { 0.0 };
+    let tau = (q.s * (m - q.z - offset) - bias_c) / scale_c;
+    if integral {
+        // integer inputs: t <= v  <=>  ceil(tau) <= v; an exact tie
+        // (tau integral) is included for even m (half-even rounds up
+        // into the level) and excluded for odd m
+        if q.mode_round && tau.fract() == 0.0 && m.rem_euclid(2.0) != 0.0 {
+            (tau + 1.0) as f32
+        } else {
+            tau.ceil() as f32
+        }
+    } else {
+        let t = tau as f32;
+        if q.mode_round && m.rem_euclid(2.0) != 0.0 {
+            next_up(t)
+        } else {
+            t
+        }
+    }
+}
+
+/// The core rewrite walk. Returns `Ok(None)` (with a blocker recorded)
+/// when any node cannot be lowered; the caller then leaves the original
+/// graph untouched.
+#[allow(clippy::too_many_lines)]
+fn build(g: &ModelGraph, report: &mut StreamlineReport) -> Result<Option<ModelGraph>> {
+    let mut interp: BTreeMap<String, Affine> = BTreeMap::new();
+    // graph-wiring renames for deleted nodes (BatchNorm pass-through)
+    let mut rename: BTreeMap<String, String> = BTreeMap::new();
+    let mut nodes: Vec<Node> = Vec::new();
+    let mut new_inits: BTreeMap<String, Tensor> = BTreeMap::new();
+    let mut weight_dtypes: Vec<(String, DataType)> = Vec::new();
+
+    for vi in &g.inputs {
+        if !g.initializers.contains_key(&vi.name) {
+            interp.insert(vi.name.clone(), Affine::identity());
+        }
+    }
+
+    let resolve = |rename: &BTreeMap<String, String>, name: &str| -> String {
+        rename.get(name).cloned().unwrap_or_else(|| name.to_string())
+    };
+    // interpretation of a data input: tracked affine, or the identity
+    // for constants that are not quantized weights (shape targets etc.)
+    let lookup = |interp: &BTreeMap<String, Affine>, name: &str| -> Option<Affine> {
+        interp.get(name).cloned()
+    };
+    macro_rules! block {
+        ($($arg:tt)*) => {{
+            report.blockers.push(format!($($arg)*));
+            return Ok(None);
+        }};
+    }
+
+    for node in &g.nodes {
+        let nm = if node.name.is_empty() { node.op_type.clone() } else { node.name.clone() };
+        let min_arity = match node.op_type.as_str() {
+            "Quant" => 4,
+            "BipolarQuant" | "MatMul" | "Conv" => 2,
+            _ => 1,
+        };
+        if node.inputs.len() < min_arity || node.outputs.is_empty() {
+            block!("'{nm}': malformed {} node", node.op_type);
+        }
+        match node.op_type.as_str() {
+            // ---------------- weight quantizers over initializers -------
+            "Quant" | "BipolarQuant" if g.initializers.contains_key(&node.inputs[0]) => {
+                let w = &g.initializers[&node.inputs[0]];
+                let wv = match w.as_f32() {
+                    Ok(v) => v,
+                    Err(_) => block!("'{nm}': non-f32 weight initializer"),
+                };
+                let (ints, scale, dt) = if node.op_type == "BipolarQuant" {
+                    let s = match g.initializer(&node.inputs[1]).and_then(|t| t.scalar_value().ok())
+                    {
+                        Some(s) if s > 0.0 => f64::from(s),
+                        _ => block!("'{nm}': non-scalar or non-positive bipolar weight scale"),
+                    };
+                    let ints: Vec<f32> =
+                        wv.iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }).collect();
+                    (ints, s, DataType::Bipolar)
+                } else {
+                    let q = match quant_params(g, node) {
+                        Ok(q) => q,
+                        Err(why) => block!("'{nm}': {why}"),
+                    };
+                    if !q.mode_round {
+                        block!("'{nm}': FLOOR weight rounding unsupported");
+                    }
+                    let mut ints = Vec::with_capacity(wv.len());
+                    for &v in wv {
+                        let lvl = crate::ops::quant::round_half_even(f64::from(v) / q.s + q.z)
+                            .clamp(q.qmin, q.qmax);
+                        ints.push((lvl - q.z) as f32);
+                    }
+                    let dt = DataType::smallest_covering(q.qmin - q.z, q.qmax - q.z);
+                    (ints, q.s, dt)
+                };
+                let out = node.outputs[0].clone();
+                new_inits.insert(out.clone(), Tensor::new(w.shape().to_vec(), ints));
+                weight_dtypes.push((out.clone(), dt));
+                interp.insert(out.clone(), Affine::scalar_int(scale));
+                report
+                    .lowered
+                    .push(format!("{nm:<24} {} -> {} weights, scale {scale}", node.op_type, dt));
+            }
+            // ---------------- activation quantizers ---------------------
+            "Quant" | "BipolarQuant" => {
+                let Some(a) = lookup(&interp, &node.inputs[0]) else {
+                    block!("'{nm}': input has no tracked interpretation");
+                };
+                if !a.all_positive() {
+                    block!("'{nm}': non-positive input scale cannot map to thresholds");
+                }
+                let channels = a.channels();
+                let src = resolve(&rename, &node.inputs[0]);
+                let (th, steps, out_scale, out_bias, scale, note) = if node.op_type
+                    == "BipolarQuant"
+                {
+                    let s = match g.initializer(&node.inputs[1]).and_then(|t| t.scalar_value().ok())
+                    {
+                        Some(s) if s > 0.0 => f64::from(s),
+                        _ => block!("'{nm}': non-scalar or non-positive bipolar scale"),
+                    };
+                    // v >= 0 (inclusive): threshold at -bias/scale
+                    let mut th = Vec::with_capacity(channels);
+                    for c in 0..channels {
+                        let tau = -a.bias_at(c) / a.scale_at(c);
+                        th.push(if a.integral { tau.ceil() as f32 } else { tau as f32 });
+                    }
+                    (th, 1usize, 2.0f32, -1.0f32, s, "bipolar sign".to_string())
+                } else {
+                    let q = match quant_params(g, node) {
+                        Ok(q) => q,
+                        Err(why) => block!("'{nm}': {why}"),
+                    };
+                    if q.qmax - q.qmin > 65536.0 {
+                        block!(
+                            "'{nm}': {} threshold steps is past the practical MultiThreshold range",
+                            q.qmax - q.qmin
+                        );
+                    }
+                    let steps = (q.qmax - q.qmin) as usize;
+                    let mut th = Vec::with_capacity(channels * steps);
+                    for c in 0..channels {
+                        let (sc, bc) = (a.scale_at(c), a.bias_at(c));
+                        for i in 1..=steps {
+                            th.push(level_threshold(&q, q.qmin + i as f64, sc, bc, a.integral));
+                        }
+                    }
+                    let ob = q.qmin - q.z;
+                    (th, steps, 1.0f32, ob as f32, q.s, format!("{steps} steps"))
+                };
+                let out = node.outputs[0].clone();
+                let th_name = g.fresh_name(&format!("{out}_ithresh"));
+                new_inits.insert(th_name.clone(), Tensor::new(vec![channels, steps], th));
+                nodes.push(
+                    Node::new("MultiThreshold", &[&src, &th_name], &[&out])
+                        .with_domain(DOMAIN_FINN)
+                        .with_name(&format!("{nm}_imt"))
+                        .with_attr("out_scale", out_scale)
+                        .with_attr("out_bias", out_bias),
+                );
+                interp.insert(out, Affine::scalar_int(scale));
+                report.lowered.push(format!(
+                    "{nm:<24} {} -> MultiThreshold [{channels} x {note}], scale {scale} absorbed",
+                    node.op_type
+                ));
+            }
+            // ---------------- integer linear ops -------------------------
+            "MatMul" | "Conv" => {
+                let Some(w) = lookup(&interp, &node.inputs[1]) else {
+                    block!("'{nm}': weights are not integer-quantized constants");
+                };
+                if !(w.is_scalar() && w.zero_bias() && w.integral) {
+                    block!("'{nm}': per-channel weight scale cannot pass through integer {}",
+                        node.op_type);
+                }
+                let Some(a) = lookup(&interp, &node.inputs[0]) else {
+                    block!("'{nm}': data input has no tracked interpretation");
+                };
+                if !a.integral {
+                    block!("'{nm}': data input is not integer-valued (float edge reaches a linear op)");
+                }
+                if !(a.is_scalar() && a.zero_bias()) {
+                    block!(
+                        "'{nm}': per-channel input interpretation cannot pass through integer {}",
+                        node.op_type
+                    );
+                }
+                if node.op_type == "Conv" {
+                    if node.inputs.get(2).map(String::as_str).is_some_and(|s| !s.is_empty()) {
+                        block!("'{nm}': conv bias is not representable on the accumulator grid");
+                    }
+                    if node.attr_str_or("data_layout", "NCHW") != "NCHW" {
+                        block!("'{nm}': channels-last conv unsupported");
+                    }
+                }
+                let mut n = node.clone();
+                for inp in n.inputs.iter_mut() {
+                    *inp = resolve(&rename, inp);
+                }
+                nodes.push(n);
+                let scale = a.scale[0] * w.scale[0];
+                interp.insert(node.outputs[0].clone(), Affine::scalar_int(scale));
+                report.lowered.push(format!(
+                    "{nm:<24} {} -> integer accumulator, scale {scale}",
+                    node.op_type
+                ));
+            }
+            // ---------------- BatchNorm folds into the interpretation ----
+            "BatchNormalization" => {
+                if node.inputs.len() != 5 {
+                    block!("'{nm}': BatchNorm needs 5 static inputs");
+                }
+                if g.is_output(&node.outputs[0]) {
+                    block!("'{nm}': BatchNorm feeding a graph output cannot be absorbed");
+                }
+                let mut params: Vec<Vec<f64>> = Vec::with_capacity(4);
+                for i in 1..5 {
+                    match g.initializer(&node.inputs[i]) {
+                        Some(t) => params.push(t.to_f64_vec()),
+                        None => block!("'{nm}': BatchNorm parameters must be constants"),
+                    }
+                }
+                let eps = f64::from(node.attr_float_or("epsilon", 1e-5));
+                let (gamma, beta, mean, var) =
+                    (&params[0], &params[1], &params[2], &params[3]);
+                let c = gamma.len();
+                if [beta.len(), mean.len(), var.len()].iter().any(|&l| l != c) {
+                    block!("'{nm}': BatchNorm parameter lengths disagree");
+                }
+                let Some(a) = lookup(&interp, &node.inputs[0]) else {
+                    block!("'{nm}': BatchNorm input has no tracked interpretation");
+                };
+                if a.channels() != 1 && a.channels() != c {
+                    block!("'{nm}': channel count mismatch absorbing BatchNorm");
+                }
+                let mut scale = Vec::with_capacity(c);
+                let mut bias = Vec::with_capacity(c);
+                for ch in 0..c {
+                    let g_c = gamma[ch] / (var[ch] + eps).sqrt();
+                    if g_c <= 0.0 {
+                        block!("'{nm}': non-positive BatchNorm gain flips threshold order");
+                    }
+                    scale.push(g_c * a.scale_at(ch));
+                    bias.push(g_c * a.bias_at(ch) + (beta[ch] - mean[ch] * g_c));
+                }
+                // uniform per-channel affines collapse back to scalar
+                let uniform = scale.windows(2).all(|w| w[0] == w[1])
+                    && bias.windows(2).all(|w| w[0] == w[1]);
+                let aff = if uniform {
+                    Affine { scale: vec![scale[0]], bias: vec![bias[0]], integral: a.integral }
+                } else {
+                    Affine { scale, bias, integral: a.integral }
+                };
+                let src = resolve(&rename, &node.inputs[0]);
+                rename.insert(node.outputs[0].clone(), src);
+                interp.insert(node.outputs[0].clone(), aff);
+                report.lowered.push(format!(
+                    "{nm:<24} BatchNormalization -> absorbed into downstream thresholds"
+                ));
+            }
+            // ---------------- monotone / structural pass-through ---------
+            "Relu" => {
+                let Some(a) = lookup(&interp, &node.inputs[0]) else {
+                    block!("'{nm}': input has no tracked interpretation");
+                };
+                if !(a.all_positive() && a.zero_bias() && a.integral) {
+                    block!("'{nm}': Relu only passes positive zero-bias integer interpretations");
+                }
+                let mut n = node.clone();
+                for inp in n.inputs.iter_mut() {
+                    *inp = resolve(&rename, inp);
+                }
+                nodes.push(n);
+                interp.insert(node.outputs[0].clone(), a);
+            }
+            "MaxPool" => {
+                let Some(a) = lookup(&interp, &node.inputs[0]) else {
+                    block!("'{nm}': input has no tracked interpretation");
+                };
+                if !a.all_positive() {
+                    block!("'{nm}': MaxPool needs positive scales (order-preserving)");
+                }
+                let mut n = node.clone();
+                for inp in n.inputs.iter_mut() {
+                    *inp = resolve(&rename, inp);
+                }
+                nodes.push(n);
+                interp.insert(node.outputs[0].clone(), a);
+            }
+            "Reshape" | "Flatten" | "Squeeze" | "Unsqueeze" => {
+                let Some(a) = lookup(&interp, &node.inputs[0]) else {
+                    block!("'{nm}': input has no tracked interpretation");
+                };
+                if !a.is_scalar() {
+                    block!("'{nm}': per-channel interpretation does not survive {}", node.op_type);
+                }
+                let mut n = node.clone();
+                // only the data input is renamed; shape targets stay
+                n.inputs[0] = resolve(&rename, &n.inputs[0]);
+                nodes.push(n);
+                interp.insert(node.outputs[0].clone(), a);
+            }
+            "Identity" => {
+                // cleanup removes these; tolerate stragglers as renames
+                let src = resolve(&rename, &node.inputs[0]);
+                rename.insert(node.outputs[0].clone(), src);
+                if let Some(a) = lookup(&interp, &node.inputs[0]) {
+                    interp.insert(node.outputs[0].clone(), a);
+                }
+            }
+            other => {
+                block!("'{nm}': op '{other}' has no integer-domain lowering");
+            }
+        }
+    }
+
+    // ---------------- push residual scales to the graph edge ------------
+    let mut edge_fixups: Vec<(String, f64, f64)> = Vec::new();
+    for vi in &g.outputs {
+        let Some(a) = lookup(&interp, &vi.name) else {
+            block!("output '{}': not produced by the streamlined path", vi.name);
+        };
+        if rename.contains_key(&vi.name) {
+            block!("output '{}': produced by an absorbed node", vi.name);
+        }
+        if a.is_exact_identity() {
+            continue;
+        }
+        if !a.is_scalar() {
+            block!("output '{}': per-channel scale at the graph edge unsupported", vi.name);
+        }
+        edge_fixups.push((vi.name.clone(), a.scale[0], a.bias[0]));
+    }
+    for (out, scale, bias) in &edge_fixups {
+        // reroute the producer (and any internal consumers) to the raw
+        // integer tensor, then append the de-scaling Mul/Add chain that
+        // re-produces the declared output name
+        let int_name = g.fresh_name(&format!("{out}_int"));
+        for n in nodes.iter_mut() {
+            for o in n.outputs.iter_mut() {
+                if o == out {
+                    *o = int_name.clone();
+                }
+            }
+            for i in n.inputs.iter_mut() {
+                if i == out {
+                    *i = int_name.clone();
+                }
+            }
+        }
+        let scale_name = g.fresh_name(&format!("{out}_scale_out"));
+        new_inits.insert(scale_name.clone(), Tensor::scalar(*scale as f32));
+        if *bias == 0.0 {
+            nodes.push(
+                Node::new("Mul", &[&int_name, &scale_name], &[out])
+                    .with_name(&format!("{out}_descale")),
+            );
+        } else {
+            let scaled_name = g.fresh_name(&format!("{out}_scaled"));
+            let bias_name = g.fresh_name(&format!("{out}_bias_out"));
+            new_inits.insert(bias_name.clone(), Tensor::scalar(*bias as f32));
+            nodes.push(
+                Node::new("Mul", &[&int_name, &scale_name], &[&scaled_name])
+                    .with_name(&format!("{out}_descale")),
+            );
+            nodes.push(
+                Node::new("Add", &[&scaled_name, &bias_name], &[out])
+                    .with_name(&format!("{out}_debias")),
+            );
+        }
+        report
+            .lowered
+            .push(format!("output '{out}': residual scale {scale} pushed to the graph edge"));
+    }
+
+    // ---------------- assemble + annotate -------------------------------
+    let mut sg = ModelGraph::new(&g.name);
+    sg.doc = if g.doc.is_empty() {
+        "streamlined to integer-domain form".to_string()
+    } else {
+        format!("{} [streamlined to integer-domain form]", g.doc)
+    };
+    sg.inputs = g.inputs.clone();
+    sg.outputs = g.outputs.clone();
+    sg.initializers = g.initializers.clone();
+    for (k, t) in new_inits {
+        sg.initializers.insert(k, t);
+    }
+    sg.nodes = nodes;
+    transforms::remove_dead_nodes(&mut sg)?;
+    sg.sort_topologically()?;
+    sg.validate().context("streamlined graph failed validation")?;
+    transforms::infer_shapes(&mut sg).context("streamlined graph shape inference")?;
+    transforms::infer_datatypes(&mut sg)?;
+    for (name, dt) in weight_dtypes {
+        if sg.initializers.contains_key(&name) {
+            sg.set_tensor_datatype(&name, dt);
+        }
+    }
+    Ok(Some(sg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec;
+    use crate::plan::ExecutionPlan;
+    use crate::testutil::random_tensor;
+    use crate::zoo::rng::Rng;
+    use std::collections::BTreeMap as Map;
+
+    fn run1(g: &ModelGraph, x: &Tensor) -> Tensor {
+        exec::execute_simple(g, x).unwrap()
+    }
+
+    /// Power-of-two scales end to end: the float graph computes exactly,
+    /// so streamlining must be bit-identical — the "exact where the grid
+    /// guarantees it" case.
+    #[test]
+    fn dyadic_scale_model_is_bit_exact() {
+        let mut b = crate::ir::GraphBuilder::new("dyadic");
+        b.input("x", vec![1, 12]);
+        b.quant("x", "xq", 0.25, 0.0, 8.0, false, false, "ROUND");
+        b.initializer(
+            "w0",
+            Tensor::new(vec![12, 6], (0..72).map(|v| ((v % 9) as f32 - 4.0) * 0.6).collect()),
+        );
+        b.quant("w0", "w0q", 0.5, 0.0, 3.0, true, true, "ROUND");
+        b.node("MatMul", &["xq", "w0q"], &["h"], &[]);
+        b.quant("h", "hq", 0.5, 0.0, 4.0, true, false, "ROUND");
+        b.initializer(
+            "w1",
+            Tensor::new(vec![6, 4], (0..24).map(|v| ((v % 7) as f32 - 3.0) * 0.4).collect()),
+        );
+        b.quant("w1", "w1q", 0.5, 0.0, 3.0, true, true, "ROUND");
+        b.node("MatMul", &["hq", "w1q"], &["y"], &[]);
+        b.output("y", vec![1, 4]);
+        let g = b.finish().unwrap();
+
+        let att = try_streamline(&g).unwrap();
+        assert!(att.report.ok, "{}", att.report.render());
+        let sg = att.graph;
+        let h = sg.op_histogram();
+        assert!(!h.contains_key("Quant"), "{h:?}");
+        assert_eq!(h.get("MultiThreshold"), Some(&2));
+        assert_eq!(h.get("Mul"), Some(&1), "one residual de-scale at the edge: {h:?}");
+
+        let mut rng = Rng::new(3);
+        for trial in 0..5 {
+            let x = random_tensor(&mut rng, vec![1, 12], -3.0, 3.0);
+            let y0 = run1(&g, &x);
+            let y1 = run1(&sg, &x);
+            assert_eq!(y0, y1, "trial {trial}: dyadic streamlining must be bit-exact");
+        }
+
+        // ... and the quantized plan is byte-identical to the float
+        // interpreter on the streamlined graph
+        let plan = ExecutionPlan::compile(&sg).unwrap();
+        assert!(plan.quant_kernel_count() >= 2, "{}", plan.summary());
+        let x = random_tensor(&mut rng, vec![1, 12], -3.0, 3.0);
+        let mut m = Map::new();
+        m.insert("x".to_string(), x.clone());
+        let got = plan.run(&m).unwrap();
+        assert_eq!(exec::interpret(&sg, &m).unwrap().outputs, got);
+    }
+
+    #[test]
+    fn bipolar_w1a1_style_model_streamlines() {
+        let mut b = crate::ir::GraphBuilder::new("bip");
+        b.input("x", vec![1, 8]);
+        b.quant("x", "xq", 0.125, 0.0, 8.0, false, false, "ROUND");
+        b.initializer(
+            "w",
+            Tensor::new(vec![8, 4], (0..32).map(|v| ((v % 5) as f32 - 2.0) * 0.3).collect()),
+        );
+        b.bipolar_quant("w", "wq", 0.25);
+        b.node("MatMul", &["xq", "wq"], &["h"], &[]);
+        b.bipolar_quant("h", "hq", 1.0);
+        b.initializer(
+            "w2",
+            Tensor::new(vec![4, 3], (0..12).map(|v| ((v % 3) as f32 - 1.0) * 0.7).collect()),
+        );
+        b.bipolar_quant("w2", "w2q", 0.5);
+        b.node("MatMul", &["hq", "w2q"], &["y"], &[]);
+        b.output("y", vec![1, 3]);
+        let g = b.finish().unwrap();
+        let att = try_streamline(&g).unwrap();
+        assert!(att.report.ok, "{}", att.report.render());
+        let sg = att.graph;
+        // bipolar weights are ±1 integers
+        assert_eq!(sg.tensor_datatype("wq"), DataType::Bipolar);
+        assert!(sg.initializers["wq"].as_f32().unwrap().iter().all(|&v| v == 1.0 || v == -1.0));
+        let mut rng = Rng::new(9);
+        let x = random_tensor(&mut rng, vec![1, 8], -2.0, 2.0);
+        // dyadic scales: exact here too
+        assert_eq!(run1(&g, &x), run1(&sg, &x));
+    }
+
+    #[test]
+    fn batchnorm_folds_into_per_channel_thresholds() {
+        let mut b = crate::ir::GraphBuilder::new("bnfold");
+        b.input("x", vec![1, 2, 4, 4]);
+        b.quant("x", "xq", 0.25, 0.0, 4.0, false, false, "ROUND");
+        b.initializer(
+            "w",
+            Tensor::new(vec![3, 2, 3, 3], (0..54).map(|v| ((v % 5) as f32 - 2.0) * 0.5).collect()),
+        );
+        b.quant("w", "wq", 0.5, 0.0, 3.0, true, true, "ROUND");
+        b.node(
+            "Conv",
+            &["xq", "wq"],
+            &["c"],
+            &[("kernel_shape", crate::ir::AttrValue::Ints(vec![3, 3]))],
+        );
+        // real (non-identity) per-channel BN parameters, positive gains
+        b.initializer("bn_scale", Tensor::new(vec![3], vec![0.5, 1.0, 2.0]));
+        b.initializer("bn_bias", Tensor::new(vec![3], vec![0.25, -0.5, 0.0]));
+        b.initializer("bn_mean", Tensor::new(vec![3], vec![0.125, 0.0, -0.25]));
+        b.initializer("bn_var", Tensor::new(vec![3], vec![1.0, 4.0, 0.25]));
+        b.node(
+            "BatchNormalization",
+            &["c", "bn_scale", "bn_bias", "bn_mean", "bn_var"],
+            &["bn"],
+            &[("epsilon", crate::ir::AttrValue::Float(0.0))],
+        );
+        b.quant("bn", "y", 0.5, 0.0, 4.0, true, false, "ROUND");
+        b.output("y", vec![1, 3, 2, 2]);
+        let g = b.finish().unwrap();
+        let att = try_streamline(&g).unwrap();
+        assert!(att.report.ok, "{}", att.report.render());
+        let sg = att.graph;
+        assert!(!sg.op_histogram().contains_key("BatchNormalization"));
+        // the activation thresholds went per-channel (3 rows)
+        let mt = sg
+            .nodes
+            .iter()
+            .filter(|n| n.op_type == "MultiThreshold")
+            .find(|n| n.outputs[0].contains("y"))
+            .expect("activation MultiThreshold");
+        assert_eq!(sg.initializers[&mt.inputs[1]].shape()[0], 3);
+        // numerically close to the original (non-dyadic sqrt scales make
+        // exactness impossible in general; the tolerance is one output
+        // grid step)
+        let mut rng = Rng::new(5);
+        let x = random_tensor(&mut rng, vec![1, 2, 4, 4], 0.0, 2.0);
+        let y0 = run1(&g, &x);
+        let y1 = run1(&sg, &x);
+        for (a, b) in y0.as_f32().unwrap().iter().zip(y1.as_f32().unwrap()) {
+            assert!((a - b).abs() <= 0.5 + 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn blockers_are_reported_and_graph_untouched() {
+        let mut b = crate::ir::GraphBuilder::new("blocked");
+        b.input("x", vec![1, 4]);
+        b.node("Sigmoid", &["x"], &["s"], &[]);
+        b.quant("s", "y", 0.5, 0.0, 4.0, false, false, "ROUND");
+        b.output("y", vec![1, 4]);
+        let g = b.finish().unwrap();
+        let att = try_streamline(&g).unwrap();
+        assert!(!att.report.ok);
+        assert!(
+            att.report.blockers.iter().any(|b| b.contains("Sigmoid")),
+            "{}",
+            att.report.render()
+        );
+        // in-place variant leaves the graph alone
+        let mut g2 = g.clone();
+        let rep = streamline(&mut g2).unwrap();
+        assert!(!rep.ok);
+        assert_eq!(g2.nodes.len(), g.nodes.len());
+    }
+
+    #[test]
+    fn negative_bn_gain_blocks() {
+        let mut b = crate::ir::GraphBuilder::new("negbn");
+        b.input("x", vec![1, 1, 2, 2]);
+        b.quant("x", "xq", 1.0, 0.0, 4.0, false, false, "ROUND");
+        b.initializer("w", Tensor::new(vec![1, 1, 1, 1], vec![1.0]));
+        b.quant("w", "wq", 1.0, 0.0, 3.0, true, false, "ROUND");
+        b.node(
+            "Conv",
+            &["xq", "wq"],
+            &["c"],
+            &[("kernel_shape", crate::ir::AttrValue::Ints(vec![1, 1]))],
+        );
+        b.initializer("bn_scale", Tensor::new(vec![1], vec![-1.0]));
+        b.initializer("bn_bias", Tensor::new(vec![1], vec![0.0]));
+        b.initializer("bn_mean", Tensor::new(vec![1], vec![0.0]));
+        b.initializer("bn_var", Tensor::new(vec![1], vec![1.0]));
+        b.node(
+            "BatchNormalization",
+            &["c", "bn_scale", "bn_bias", "bn_mean", "bn_var"],
+            &["bn"],
+            &[],
+        );
+        b.quant("bn", "y", 1.0, 0.0, 4.0, true, false, "ROUND");
+        b.output("y", vec![1, 1, 2, 2]);
+        let g = b.finish().unwrap();
+        let att = try_streamline(&g).unwrap();
+        assert!(!att.report.ok);
+        assert!(
+            att.report.blockers.iter().any(|b| b.contains("non-positive BatchNorm gain")),
+            "{}",
+            att.report.render()
+        );
+    }
+
+    /// The integer-threshold construction must reproduce the quantizer's
+    /// half-even tie behavior exactly when the producer domain is exact.
+    #[test]
+    fn integer_thresholds_respect_half_even_ties() {
+        // producer: integers scaled by 0.25 (exact); quantizer s = 0.5
+        // puts ties at v/s = m - 0.5 i.e. v = 0.25 * odd integers
+        let mut b = crate::ir::GraphBuilder::new("ties");
+        b.input("x", vec![1, 9]);
+        b.quant("x", "xq", 0.25, 0.0, 6.0, true, false, "ROUND");
+        b.initializer("w", Tensor::new(vec![9, 9], {
+            let mut id = vec![0.0f32; 81];
+            for i in 0..9 {
+                id[i * 9 + i] = 0.5;
+            }
+            id
+        }));
+        b.quant("w", "wq", 0.5, 0.0, 2.0, true, false, "ROUND");
+        b.node("MatMul", &["xq", "wq"], &["h"], &[]);
+        b.quant("h", "y", 0.5, 0.0, 4.0, true, false, "ROUND");
+        b.output("y", vec![1, 9]);
+        let g = b.finish().unwrap();
+        let att = try_streamline(&g).unwrap();
+        assert!(att.report.ok, "{}", att.report.render());
+        // inputs sitting exactly on quantizer ties after the 0.25 grid:
+        // x = 0.25*q, h = 0.25*q (identity weights); h/0.5 = q/2 ties at
+        // odd q
+        let xs: Vec<f32> =
+            (-4..5).map(|q| q as f32 * 0.25).collect();
+        let x = Tensor::new(vec![1, 9], xs);
+        assert_eq!(run1(&g, &x), run1(&att.graph, &x), "tie handling diverged");
+    }
+}

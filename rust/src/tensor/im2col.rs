@@ -60,9 +60,12 @@ pub fn im2col_nchw(
 /// tensor, and the output buffer is typically drawn from a
 /// [`crate::plan::ScratchArena`]. Padding positions are left untouched —
 /// the caller's buffer must already be zero-filled.
+///
+/// Generic over the element type (a pure gather): the float kernels run it
+/// over `f32`, the quantized tier (`crate::plan`'s `QuantConv`) over `i32`.
 #[allow(clippy::too_many_arguments)]
-pub fn im2col_group_into(
-    src: &[f32],
+pub fn im2col_group_into<T: Copy>(
+    src: &[T],
     n: usize,
     c: usize,
     h: usize,
@@ -74,7 +77,7 @@ pub fn im2col_group_into(
     stride_h: usize,
     stride_w: usize,
     pads: [usize; 4], // top, left, bottom, right
-    out: &mut [f32],
+    out: &mut [T],
 ) {
     let [pad_top, pad_left, pad_bottom, pad_right] = pads;
     let oh = conv_out_dim(h, kh, stride_h, pad_top, pad_bottom);

@@ -9,11 +9,13 @@ mod broadcast;
 mod gemm;
 mod im2col;
 mod layout;
+mod qgemm;
 
 pub use broadcast::{broadcast_shapes, broadcastable_to, BroadcastIter};
 pub use gemm::{gemm, gemm_prepacked, PackedB, GEMM_KC, GEMM_MC, GEMM_NC};
 pub use im2col::{conv_out_dim, im2col_group_into, im2col_nchw};
 pub use layout::{nchw_to_nhwc, nhwc_to_nchw};
+pub use qgemm::{qgemm_prepacked, PackedBi8};
 
 use anyhow::{bail, ensure, Result};
 

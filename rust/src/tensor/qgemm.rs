@@ -1,0 +1,225 @@
+//! Integer GEMM substrate for the quantized kernel tier: `i8` weight
+//! panels, `i32` accumulation.
+//!
+//! This is the execution form the streamline subsystem
+//! ([`crate::streamline`]) lowers to: once datatype inference proves that
+//! activations and weights live on an INT≤8 grid, the float GEMM's 4-byte
+//! weight traffic shrinks to 1 byte per element and the inner loop becomes
+//! a pure integer multiply-accumulate (NEMO and the TVM QNN compiler make
+//! the same move — an explicit integer stage is what unlocks low-bit
+//! speed).
+//!
+//! Layout mirrors [`super::gemm`]: the constant rhs is packed **once at
+//! plan-compile time** into `KC x NC` panels ([`PackedBi8`], same block
+//! constants as the f32 kernel), rows are walked in `MC` blocks and fanned
+//! out over threads for large problems.
+//!
+//! Unlike the f32 path there is **no accumulation-order contract**:
+//! integer addition is associative, so any blocking/threading produces the
+//! same bits. Callers guarantee no overflow — the plan compiler only
+//! selects this tier when the inferred value ranges bound every
+//! accumulator below `2^24` (which also keeps the result exactly
+//! representable when it is handed back in an f32 container).
+
+use super::gemm::{GEMM_KC, GEMM_MC, GEMM_NC};
+
+/// Below this many integer MACs the thread-spawn overhead dominates.
+const PAR_MAC_THRESHOLD: usize = 2_000_000;
+
+/// A `[k, n]` `i8` matrix packed into contiguous `KC x NC` panels
+/// (identical layout to [`super::PackedB`], 1/4 the bytes).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackedBi8 {
+    k: usize,
+    n: usize,
+    data: Vec<i8>,
+}
+
+impl PackedBi8 {
+    /// Pack a row-major `[k, n]` matrix. A pure reordering copy.
+    pub fn pack(k: usize, n: usize, b: &[i8]) -> PackedBi8 {
+        debug_assert_eq!(b.len(), k * n);
+        let mut data = Vec::with_capacity(k * n);
+        for kc0 in (0..k).step_by(GEMM_KC) {
+            let kc1 = (kc0 + GEMM_KC).min(k);
+            for nc0 in (0..n).step_by(GEMM_NC) {
+                let nc1 = (nc0 + GEMM_NC).min(n);
+                for kk in kc0..kc1 {
+                    data.extend_from_slice(&b[kk * n + nc0..kk * n + nc1]);
+                }
+            }
+        }
+        PackedBi8 { k, n, data }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// The contiguous `kc_len x nc_len` tile at block origin `(kc0, nc0)`.
+    #[inline]
+    fn tile(&self, kc0: usize, kc_len: usize, nc0: usize) -> &[i8] {
+        let off = kc0 * self.n + kc_len * nc0;
+        let nc_len = (self.n - nc0).min(GEMM_NC);
+        &self.data[off..off + kc_len * nc_len]
+    }
+}
+
+/// Integer GEMM against a pre-packed `i8` rhs:
+/// `out[m,n] += a[m,k] * bp[k,n]`, accumulating in `i32`.
+///
+/// Threads split the row range for large problems; each output element is
+/// owned by exactly one thread. Exact for any order (integer arithmetic).
+pub fn qgemm_prepacked(m: usize, k: usize, bp: &PackedBi8, a: &[i32], out: &mut [i32]) {
+    debug_assert_eq!(bp.k, k);
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(out.len(), m * bp.n);
+    let n = bp.n;
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let macs = m * k * n;
+    let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
+    if threads <= 1 || macs < PAR_MAC_THRESHOLD || m < 2 {
+        qgemm_packed_rows(k, a, bp, out);
+        return;
+    }
+    let threads = threads.min(m);
+    let rows_per = m.div_ceil(threads);
+    std::thread::scope(|scope| {
+        let mut rest = out;
+        let mut row0 = 0usize;
+        for _ in 0..threads {
+            let rows = rows_per.min(m - row0);
+            if rows == 0 {
+                break;
+            }
+            let (chunk, tail) = rest.split_at_mut(rows * n);
+            rest = tail;
+            let a_chunk = &a[row0 * k..(row0 + rows) * k];
+            scope.spawn(move || qgemm_packed_rows(k, a_chunk, bp, chunk));
+            row0 += rows;
+        }
+    });
+}
+
+/// Serial blocked kernel over the rows in `out`, reading packed panels.
+/// Same MC -> KC -> NC -> row -> strip nest as the f32 kernel; the
+/// widening `i8 -> i32` happens on the panel strip inside the inner loop
+/// (the strip is contiguous, so the loop autovectorizes).
+fn qgemm_packed_rows(k: usize, a: &[i32], bp: &PackedBi8, out: &mut [i32]) {
+    let n = bp.n;
+    if n == 0 {
+        return;
+    }
+    let m = out.len() / n;
+    for ic0 in (0..m).step_by(GEMM_MC) {
+        let ic1 = (ic0 + GEMM_MC).min(m);
+        for kc0 in (0..k).step_by(GEMM_KC) {
+            let kc_len = (k - kc0).min(GEMM_KC);
+            for nc0 in (0..n).step_by(GEMM_NC) {
+                let nc_len = (n - nc0).min(GEMM_NC);
+                let tile = bp.tile(kc0, kc_len, nc0);
+                for i in ic0..ic1 {
+                    let arow = &a[i * k + kc0..i * k + kc0 + kc_len];
+                    let orow = &mut out[i * n + nc0..i * n + nc0 + nc_len];
+                    for (kk, &av) in arow.iter().enumerate() {
+                        if av == 0 {
+                            continue; // low-bit activations are often sparse
+                        }
+                        let brow = &tile[kk * nc_len..(kk + 1) * nc_len];
+                        for (o, &bv) in orow.iter_mut().zip(brow) {
+                            *o += av * i32::from(bv);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn qgemm_naive(m: usize, k: usize, n: usize, a: &[i32], b: &[i8]) -> Vec<i32> {
+        let mut out = vec![0i32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0i32;
+                for kk in 0..k {
+                    acc += a[i * k + kk] * i32::from(b[kk * n + j]);
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        out
+    }
+
+    fn fill_i32(len: usize, seed: u64, span: i32) -> Vec<i32> {
+        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(1);
+        (0..len)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                ((s >> 40) as i32).rem_euclid(2 * span + 1) - span
+            })
+            .collect()
+    }
+
+    fn fill_i8(len: usize, seed: u64) -> Vec<i8> {
+        fill_i32(len, seed, 127).into_iter().map(|v| v as i8).collect()
+    }
+
+    #[test]
+    fn prop_blocked_matches_naive_on_odd_shapes() {
+        let shapes = [
+            (1usize, 1usize, 1usize),
+            (1, 7, 3),
+            (3, 5, 2),
+            (7, 1000, 3),
+            (13, 130, 17),
+            (64, 256, 128),
+            (65, 257, 129),
+            (GEMM_MC + 3, GEMM_KC + 5, GEMM_NC + 7),
+        ];
+        for &(m, k, n) in &shapes {
+            let a = fill_i32(m * k, (m * 31 + k) as u64, 255);
+            let b = fill_i8(k * n, (k * 17 + n) as u64);
+            let want = qgemm_naive(m, k, n, &a, &b);
+            let bp = PackedBi8::pack(k, n, &b);
+            let mut got = vec![0i32; m * n];
+            qgemm_prepacked(m, k, &bp, &a, &mut got);
+            assert_eq!(got, want, "qgemm diverged at m={m} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn degenerate_dims_are_noops() {
+        let mut out: Vec<i32> = vec![];
+        let bp = PackedBi8::pack(0, 3, &[]);
+        assert_eq!(bp.k(), 0);
+        assert_eq!(bp.n(), 3);
+        qgemm_prepacked(0, 0, &bp, &[], &mut out);
+        let bp2 = PackedBi8::pack(0, 2, &[]);
+        let mut out2 = vec![0i32; 4];
+        qgemm_prepacked(2, 0, &bp2, &[], &mut out2);
+        assert_eq!(out2, vec![0; 4]);
+    }
+
+    #[test]
+    fn pack_roundtrips_values() {
+        let (k, n) = (GEMM_KC + 2, GEMM_NC + 5);
+        let b = fill_i8(k * n, 9);
+        let bp = PackedBi8::pack(k, n, &b);
+        let mut a = vec![0i32; k];
+        a[3] = 1;
+        let mut out = vec![0i32; n];
+        qgemm_prepacked(1, k, &bp, &a, &mut out);
+        let want: Vec<i32> = b[3 * n..4 * n].iter().map(|&v| i32::from(v)).collect();
+        assert_eq!(out, want);
+    }
+}

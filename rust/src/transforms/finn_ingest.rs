@@ -12,7 +12,7 @@
 use super::quant_params_static;
 use crate::datatypes::DataType;
 use crate::ir::{ModelGraph, Node, DOMAIN_FINN};
-use crate::ops::quant::quant_bounds;
+use crate::ops::quant::{next_up, quant_bounds};
 use crate::tensor::Tensor;
 use anyhow::{bail, ensure, Result};
 
@@ -51,21 +51,6 @@ pub fn fold_weight_quants(graph: &mut ModelGraph) -> Result<bool> {
     }
 }
 
-/// Smallest f32 strictly greater than `x` (for exact tie handling).
-fn next_up(x: f32) -> f32 {
-    if !x.is_finite() {
-        return x;
-    }
-    if x == 0.0 {
-        return f32::from_bits(1);
-    }
-    if x > 0.0 {
-        f32::from_bits(x.to_bits() + 1)
-    } else {
-        f32::from_bits(x.to_bits() - 1)
-    }
-}
-
 /// Compute the `MultiThreshold` equivalent of a static `Quant`:
 /// thresholds `t_i = s (q_min - z + i - 1/2)` (ROUND) or
 /// `t_i = s (q_min - z + i)` (FLOOR), `out_scale = s`,
@@ -98,10 +83,14 @@ pub fn quant_to_thresholds(
         for i in 1..=steps {
             let mut t = (s * (qmin - zero_point + i as f64 - offset)) as f32;
             if rounding_mode == "ROUND" {
-                // At the tie x/s + z = m - 1/2, half-even picks the even of
-                // {m-1, m}: even m enters the level (tie included), odd m
-                // stays below (tie excluded -> nudge threshold up one ULP).
-                let m = qmin - zero_point + i as f64; // level entered at t
+                // At the tie x/s + z = m - 1/2 (m = qmin + i, the level
+                // entered at t), half-even picks the even of {m-1, m}:
+                // even m enters the level (tie included), odd m stays
+                // below (tie excluded -> nudge threshold up one ULP).
+                // The parity is m's — the value being rounded is x/s + z,
+                // so the zero point shifts the threshold but not which
+                // integer the tie resolves to.
+                let m = qmin + i as f64;
                 if m.rem_euclid(2.0) != 0.0 {
                     t = next_up(t);
                 }
@@ -260,6 +249,29 @@ mod tests {
         let x = Tensor::new(vec![1, 4], vec![0.5, 1.5, 2.5, 3.5]);
         let y = multi_threshold(&node, &[&x, &th]).unwrap();
         assert_eq!(y[0].as_f32().unwrap(), &[0.0, 2.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn thresholds_exact_at_ties_with_odd_zero_point() {
+        // z = 1: x = -0.5 gives x/s + z = 0.5, which half-even rounds to
+        // 0 — level 1 must NOT be entered at the tie (level parity, not
+        // level-minus-z parity, decides).
+        use crate::ops::multithreshold::multi_threshold;
+        let (th, os, ob) = quant_to_thresholds(&[1.0], 1.0, 2.0, false, false, "ROUND").unwrap();
+        let node = crate::ir::Node::new("MultiThreshold", &["x", "t"], &["y"])
+            .with_attr("out_scale", os)
+            .with_attr("out_bias", ob);
+        let x = Tensor::new(vec![1, 4], vec![-0.5, 0.5, 1.5, 2.5]);
+        let got = multi_threshold(&node, &[&x, &th]).unwrap();
+        let quant = crate::ir::Node::new("Quant", &["x", "s", "z", "b"], &["y"])
+            .with_attr("signed", false)
+            .with_attr("rounding_mode", "ROUND");
+        let want = crate::ops::quant::quant_op(
+            &quant,
+            &[&x, &Tensor::scalar(1.0), &Tensor::scalar(1.0), &Tensor::scalar(2.0)],
+        )
+        .unwrap();
+        assert_eq!(got[0], want[0]);
     }
 
     fn relu_quant_graph(signed: bool) -> ModelGraph {

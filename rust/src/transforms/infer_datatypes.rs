@@ -6,23 +6,39 @@
 //! the paper's §V observation that fine-grained magnitude bounds let one
 //! "assess whether the operation might overflow given a certain number of
 //! output accumulation bits".
+//!
+//! The range-propagation engine is exported as [`infer_ranges`] /
+//! [`ValueRange`] so other layers can consume the same proofs:
+//! [`crate::streamline`] drives its integer-domain lowering with them, and
+//! the plan compiler ([`crate::plan`]) uses them to decide when a
+//! `Conv`/`Gemm`/`MatMul` may run on the quantized `i8`/`i32` kernel tier.
+//! `integral == true` is a *literal* claim — every value the tensor can
+//! hold is an integer (step-1 grid) — which is exactly the property the
+//! integer kernels need.
 
 use super::quant_params_static;
 use crate::datatypes::DataType;
 use crate::ir::ModelGraph;
+use crate::ops::quant::{round_half_even, RoundingMode};
 use crate::tensor::Tensor;
 use anyhow::Result;
+use std::collections::BTreeMap;
 
 /// Closed value interval tracked per tensor.
+///
+/// `integral` means every representable value is a literal integer; the
+/// interval bounds are then exact integer bounds. Non-integral ranges
+/// still carry magnitude information (used for overflow analysis) but
+/// never qualify a tensor for the integer kernel tier.
 #[derive(Debug, Clone, Copy)]
-struct Range {
-    lo: f64,
-    hi: f64,
-    /// all values on the integer grid?
-    integral: bool,
+pub struct ValueRange {
+    pub lo: f64,
+    pub hi: f64,
+    /// all values on the step-1 integer grid?
+    pub integral: bool,
 }
 
-impl Range {
+impl ValueRange {
     fn dt(&self) -> DataType {
         if self.integral {
             DataType::smallest_covering(self.lo, self.hi)
@@ -32,26 +48,33 @@ impl Range {
     }
 }
 
-fn range_of_tensor(t: &Tensor) -> Range {
+fn range_of_tensor(t: &Tensor) -> ValueRange {
     let vals = t.to_f64_vec();
     let lo = vals.iter().copied().fold(f64::INFINITY, f64::min);
     let hi = vals.iter().copied().fold(f64::NEG_INFINITY, f64::max);
     let integral = vals.iter().all(|v| v.fract() == 0.0);
-    Range { lo: lo.min(hi), hi: hi.max(lo), integral }
+    ValueRange { lo: lo.min(hi), hi: hi.max(lo), integral }
 }
 
-fn range_of_dt(dt: DataType) -> Option<Range> {
+fn range_of_dt(dt: DataType) -> Option<ValueRange> {
     match dt {
         DataType::Float32 => None,
-        d => Some(Range { lo: d.min(), hi: d.max(), integral: d.is_integer() }),
+        // SCALEDINT<n> is integer *levels* times an unknown float scale:
+        // neither the value bounds nor literal integrality can be claimed
+        DataType::ScaledInt(_) => None,
+        d => Some(ValueRange { lo: d.min(), hi: d.max(), integral: d.is_integer() }),
     }
 }
 
-/// Infer and annotate datatypes for all tensors. Returns true if any
-/// annotation changed. Run after shapes are known.
-pub fn infer_datatypes(graph: &mut ModelGraph) -> Result<bool> {
-    graph.sort_topologically()?;
-    let mut ranges: std::collections::BTreeMap<String, Range> = Default::default();
+/// Propagate value ranges through the graph (no mutation). Seeds come
+/// from initializer values (refined by explicit datatype annotations) and
+/// annotated input datatypes; node rules cover the quantization dialect,
+/// shape-preserving ops, elementwise arithmetic, and `MatMul`/`Conv`
+/// accumulator growth. Tensors without a derivable range are absent from
+/// the returned map (i.e. unconstrained float).
+pub fn infer_ranges(graph: &ModelGraph) -> Result<BTreeMap<String, ValueRange>> {
+    let order = graph.topo_order()?;
+    let mut ranges: BTreeMap<String, ValueRange> = Default::default();
     // seeds: initializers (from values, refined by explicit annotations)
     for (name, t) in &graph.initializers {
         let r = match range_of_dt(graph.tensor_datatype(name)) {
@@ -66,17 +89,18 @@ pub fn infer_datatypes(graph: &mut ModelGraph) -> Result<bool> {
         }
     }
 
-    let nodes = graph.nodes.clone();
-    for node in &nodes {
-        let get = |i: usize| -> Option<Range> { node.inputs.get(i).and_then(|n| ranges.get(n)).copied() };
-        let out_range: Option<Range> = match node.op_type.as_str() {
+    for &ni in &order {
+        let node = &graph.nodes[ni];
+        let get =
+            |i: usize| -> Option<ValueRange> { node.inputs.get(i).and_then(|n| ranges.get(n)).copied() };
+        let out_range: Option<ValueRange> = match node.op_type.as_str() {
             "Quant" => {
                 // static params: exact output grid
                 quant_params_static(graph, node).ok().map(|p| {
                     let (qlo, qhi) = crate::ops::quant::quant_bounds(p.signed, p.narrow, p.bit_width);
                     let s = f64::from(p.scale);
                     let z = f64::from(p.zero_point);
-                    Range {
+                    ValueRange {
                         lo: (qlo - z) * s,
                         hi: (qhi - z) * s,
                         integral: s == 1.0 && z.fract() == 0.0,
@@ -85,7 +109,7 @@ pub fn infer_datatypes(graph: &mut ModelGraph) -> Result<bool> {
             }
             "BipolarQuant" => {
                 let s = graph.initializer(&node.inputs[1]).and_then(|t| t.scalar_value().ok());
-                s.map(|s| Range { lo: -f64::from(s), hi: f64::from(s), integral: s == 1.0 })
+                s.map(|s| ValueRange { lo: -f64::from(s), hi: f64::from(s), integral: s == 1.0 })
             }
             "MultiThreshold" => {
                 let t = graph.initializer(&node.inputs[1]);
@@ -94,23 +118,28 @@ pub fn infer_datatypes(graph: &mut ModelGraph) -> Result<bool> {
                     let os = f64::from(node.attr_float_or("out_scale", 1.0));
                     let ob = f64::from(node.attr_float_or("out_bias", 0.0));
                     let (a, b) = (ob, os * steps + ob);
-                    Range {
+                    ValueRange {
                         lo: a.min(b),
                         hi: a.max(b),
                         integral: os.fract() == 0.0 && ob.fract() == 0.0,
                     }
                 })
             }
-            "Relu" => get(0).map(|r| Range { lo: r.lo.max(0.0), hi: r.hi.max(0.0), integral: r.integral }),
+            "Trunc" => trunc_range(graph, node, get(0)),
+            "Relu" => get(0).map(|r| ValueRange {
+                lo: r.lo.max(0.0),
+                hi: r.hi.max(0.0),
+                integral: r.integral,
+            }),
             "MaxPool" | "Reshape" | "Transpose" | "Flatten" | "Identity" | "Squeeze" | "Unsqueeze"
             | "Pad" | "Gather" => get(0),
             "Concat" => {
-                let mut acc: Option<Range> = None;
+                let mut acc: Option<ValueRange> = None;
                 for i in 0..node.inputs.len() {
                     match (acc, get(i)) {
                         (None, r) => acc = r,
                         (Some(a), Some(b)) => {
-                            acc = Some(Range {
+                            acc = Some(ValueRange {
                                 lo: a.lo.min(b.lo),
                                 hi: a.hi.max(b.hi),
                                 integral: a.integral && b.integral,
@@ -127,14 +156,18 @@ pub fn infer_datatypes(graph: &mut ModelGraph) -> Result<bool> {
             "Add" | "Sub" => match (get(0), get(1)) {
                 (Some(a), Some(b)) => {
                     let (blo, bhi) = if node.op_type == "Sub" { (-b.hi, -b.lo) } else { (b.lo, b.hi) };
-                    Some(Range { lo: a.lo + blo, hi: a.hi + bhi, integral: a.integral && b.integral })
+                    Some(ValueRange {
+                        lo: a.lo + blo,
+                        hi: a.hi + bhi,
+                        integral: a.integral && b.integral,
+                    })
                 }
                 _ => None,
             },
             "Mul" => match (get(0), get(1)) {
                 (Some(a), Some(b)) => {
                     let cands = [a.lo * b.lo, a.lo * b.hi, a.hi * b.lo, a.hi * b.hi];
-                    Some(Range {
+                    Some(ValueRange {
                         lo: cands.iter().copied().fold(f64::INFINITY, f64::min),
                         hi: cands.iter().copied().fold(f64::NEG_INFINITY, f64::max),
                         integral: a.integral && b.integral,
@@ -151,9 +184,9 @@ pub fn infer_datatypes(graph: &mut ModelGraph) -> Result<bool> {
                             let cands = [a.lo * b.lo, a.lo * b.hi, a.hi * b.lo, a.hi * b.hi];
                             let plo = cands.iter().copied().fold(f64::INFINITY, f64::min);
                             let phi = cands.iter().copied().fold(f64::NEG_INFINITY, f64::max);
-                            Range {
-                                lo: plo * k as f64,
-                                hi: phi * k as f64,
+                            ValueRange {
+                                lo: plo.min(0.0) * k as f64,
+                                hi: phi.max(0.0) * k as f64,
                                 integral: a.integral && b.integral,
                             }
                         })
@@ -169,13 +202,84 @@ pub fn infer_datatypes(graph: &mut ModelGraph) -> Result<bool> {
             }
         }
     }
+    Ok(ranges)
+}
+
+/// Range rule for `Trunc` with static scalar parameters: recover the
+/// integer bounds under the declared input quantization, apply the
+/// monotone right-shift, and re-apply scale/zero-point. 1-bit outputs are
+/// legal (the executor accepts them since PR 3).
+fn trunc_range(
+    graph: &ModelGraph,
+    node: &crate::ir::Node,
+    input: Option<ValueRange>,
+) -> Option<ValueRange> {
+    let input = input?;
+    let scalar = |i: usize| -> Option<f64> {
+        let t = graph.initializer(node.inputs.get(i)?)?;
+        if t.numel() != 1 {
+            return None;
+        }
+        t.scalar_value().ok().map(f64::from)
+    };
+    let s = scalar(1)?;
+    let z = scalar(2)?;
+    let ibw = scalar(3)?;
+    let obw = scalar(4)?;
+    if s <= 0.0 || ibw < obw || obw < 1.0 {
+        return None; // the op itself rejects these; no range claim
+    }
+    let mode = RoundingMode::from_str(&node.attr_str_or("rounding_mode", "FLOOR")).ok()?;
+    let shift = 2f64.powf(ibw - obw);
+    // monotone per element: bounds map to bounds
+    let q_of = |v: f64| -> f64 { mode.apply(round_half_even(v / s + z) / shift) };
+    let lo = (q_of(input.lo) - z) * s;
+    let hi = (q_of(input.hi) - z) * s;
+    Some(ValueRange {
+        lo: lo.min(hi),
+        hi: hi.max(lo),
+        integral: s == 1.0 && z.fract() == 0.0,
+    })
+}
+
+/// Infer and annotate datatypes for all tensors. Returns true if any
+/// annotation changed. Run after shapes are known.
+///
+/// Tensors on a literal integer grid get the smallest covering
+/// `INT`/`UINT`; a `Quant` output whose grid carries a non-unit scale (or
+/// fractional zero point) is annotated `SCALEDINT<n>` — integer levels of
+/// unknown float scale — instead of falling all the way back to FLOAT32.
+pub fn infer_datatypes(graph: &mut ModelGraph) -> Result<bool> {
+    graph.sort_topologically()?;
+    let ranges = infer_ranges(graph)?;
+
+    // SCALEDINT refinement: Quant outputs that are integer *levels* times
+    // a non-unit scale (the range pass reports these as non-integral).
+    let mut scaled: BTreeMap<String, DataType> = BTreeMap::new();
+    for node in &graph.nodes {
+        if node.op_type != "Quant" {
+            continue;
+        }
+        if let Ok(p) = quant_params_static(graph, node) {
+            let unit = f64::from(p.scale) == 1.0 && f64::from(p.zero_point).fract() == 0.0;
+            if !unit {
+                let bits = (p.bit_width.ceil().max(1.0) as u8).min(64);
+                for o in &node.outputs {
+                    scaled.insert(o.clone(), DataType::ScaledInt(bits));
+                }
+            }
+        }
+    }
 
     let mut changed = false;
     for (name, r) in &ranges {
         if graph.is_input(name) || graph.initializers.contains_key(name) {
             continue;
         }
-        let dt = r.dt();
+        let dt = match scaled.get(name) {
+            Some(&d) if !r.integral => d,
+            _ => r.dt(),
+        };
         if graph.tensor_datatype(name) != dt {
             graph.set_tensor_datatype(name, dt);
             changed = true;
@@ -247,14 +351,19 @@ mod tests {
     }
 
     #[test]
-    fn scaled_quant_not_integral() {
+    fn scaled_quant_gets_scaledint() {
+        // non-unit scale: integer levels of unknown float scale, not FLOAT32
         let mut b = GraphBuilder::new("s");
         b.input("x", vec![1, 4]);
         b.quant("x", "y", 0.5, 0.0, 4.0, true, false, "ROUND");
         b.output("y", vec![1, 4]);
         let mut g = b.finish().unwrap();
         infer_datatypes(&mut g).unwrap();
-        assert_eq!(g.tensor_datatype("y"), DataType::Float32);
+        assert_eq!(g.tensor_datatype("y"), DataType::ScaledInt(4));
+        // the range itself stays non-integral: SCALEDINT never qualifies a
+        // tensor for the literal-integer kernel tier
+        let ranges = infer_ranges(&g).unwrap();
+        assert!(!ranges["y"].integral);
     }
 
     #[test]
@@ -277,9 +386,108 @@ mod tests {
         b.node("MatMul", &["x", "w"], &["y"], &[]);
         b.output("y", vec![1, 2]);
         let mut g = b.finish().unwrap();
-        b"";
         infer_datatypes(&mut g).unwrap();
         // x unknown float -> y stays float; but w's range seeds exist
         assert_eq!(g.tensor_datatype("y"), DataType::Float32);
+    }
+
+    #[test]
+    fn bipolar_activation_times_bipolar_weights_accumulates() {
+        // BIPOLAR x BIPOLAR over k=64: acc in [-64, 64] -> INT8; the
+        // bipolar grid (s = 1) is a literal integer grid, so the
+        // accumulator proof goes through.
+        let mut b = GraphBuilder::new("bip");
+        b.input("x", vec![1, 64]);
+        b.bipolar_quant("x", "xq", 1.0);
+        b.initializer("w", Tensor::new(vec![64, 4], vec![1.0; 256]));
+        b.node("MatMul", &["xq", "w"], &["y"], &[]);
+        b.output("y", vec![1, 4]);
+        let mut g = b.finish().unwrap();
+        cleanup(&mut g).unwrap();
+        infer_datatypes(&mut g).unwrap();
+        assert_eq!(g.tensor_datatype("y"), DataType::Int(8));
+        let ranges = infer_ranges(&g).unwrap();
+        assert!(ranges["xq"].integral);
+        assert_eq!((ranges["y"].lo, ranges["y"].hi), (-64.0, 64.0));
+        // scaled bipolar (s != 1) is NOT a literal integer grid
+        let mut b2 = GraphBuilder::new("bip2");
+        b2.input("x", vec![1, 4]);
+        b2.bipolar_quant("x", "y", 0.5);
+        b2.output("y", vec![1, 4]);
+        let mut g2 = b2.finish().unwrap();
+        infer_datatypes(&mut g2).unwrap();
+        assert_eq!(g2.tensor_datatype("y"), DataType::Float32);
+    }
+
+    #[test]
+    fn ternary_weights_through_matmul() {
+        // TERNARY annotation on the weights: [-1, 1] integral; uint8
+        // activations over k=16 -> acc in [-4080, 4080] -> INT13
+        let mut b = GraphBuilder::new("tern");
+        b.input("x", vec![1, 16]);
+        b.quant("x", "xq", 1.0, 0.0, 8.0, false, false, "ROUND");
+        b.initializer("w", Tensor::new(vec![16, 2], vec![1.0; 32]));
+        b.node("MatMul", &["xq", "w"], &["y"], &[]);
+        b.output("y", vec![1, 2]);
+        let mut g = b.finish().unwrap();
+        cleanup(&mut g).unwrap();
+        g.set_tensor_datatype("w", DataType::Ternary);
+        infer_datatypes(&mut g).unwrap();
+        assert_eq!(g.tensor_datatype("y"), DataType::Int(13));
+    }
+
+    #[test]
+    fn trunc_one_bit_output_range() {
+        // uint2 input truncated 2 -> 1 bit: q/2 floored lands in {0, 1}
+        let mut b = GraphBuilder::new("tr");
+        b.input("x", vec![1, 4]);
+        b.quant("x", "xq", 1.0, 0.0, 2.0, false, false, "ROUND");
+        b.scalar("s", 1.0);
+        b.scalar("z", 0.0);
+        b.scalar("ib", 2.0);
+        b.scalar("ob", 1.0);
+        b.node_in_domain(
+            crate::ir::DOMAIN_QONNX,
+            "Trunc",
+            &["xq", "s", "z", "ib", "ob"],
+            &["y"],
+            &[],
+        );
+        b.output("y", vec![1, 4]);
+        let mut g = b.finish().unwrap();
+        infer_datatypes(&mut g).unwrap();
+        assert_eq!(g.tensor_datatype("y"), DataType::Uint(1));
+        let ranges = infer_ranges(&g).unwrap();
+        assert_eq!((ranges["y"].lo, ranges["y"].hi), (0.0, 1.0));
+        assert!(ranges["y"].integral);
+    }
+
+    #[test]
+    fn trunc_scaled_range_not_integral() {
+        // scale 0.5 input: the truncated grid keeps the scale, so the
+        // range is known but not a literal integer grid
+        let mut b = GraphBuilder::new("trs");
+        b.input("x", vec![1, 2]);
+        b.quant("x", "xq", 0.5, 0.0, 8.0, false, false, "ROUND");
+        b.scalar("s", 0.5);
+        b.scalar("z", 0.0);
+        b.scalar("ib", 8.0);
+        b.scalar("ob", 4.0);
+        b.node_in_domain(
+            crate::ir::DOMAIN_QONNX,
+            "Trunc",
+            &["xq", "s", "z", "ib", "ob"],
+            &["y"],
+            &[],
+        );
+        b.output("y", vec![1, 2]);
+        let mut g = b.finish().unwrap();
+        infer_datatypes(&mut g).unwrap();
+        assert_eq!(g.tensor_datatype("y"), DataType::Float32);
+        let ranges = infer_ranges(&g).unwrap();
+        assert!(!ranges["y"].integral);
+        // uint8 levels [0, 255] scaled by 0.5, shifted 4 bits: q in
+        // [0, 15], value = 0.5 * q in [0, 7.5]
+        assert_eq!((ranges["y"].lo, ranges["y"].hi), (0.0, 7.5));
     }
 }

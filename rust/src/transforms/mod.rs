@@ -23,7 +23,7 @@ pub use cleanup::{cleanup, give_unique_names, remove_dead_nodes, remove_identity
 pub use finn_ingest::{convert_to_finn, fold_weight_quants, quant_to_multithreshold, quant_to_thresholds};
 pub use fold_constants::fold_constants;
 pub use hls4ml_ingest::{hls4ml_ingest, propagate_dequant, quantize_constant_paths};
-pub use infer_datatypes::infer_datatypes;
+pub use infer_datatypes::{infer_datatypes, infer_ranges, ValueRange};
 pub use infer_shapes::infer_shapes;
 pub use lower_qcdq::lower_to_qcdq;
 pub use lower_qop::lower_to_qop_clip;

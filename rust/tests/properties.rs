@@ -178,3 +178,35 @@ fn prop_multithreshold_equals_quant_on_grid() {
         assert_eq!(y_mt, y_q, "bw={bw} signed={signed} s={s}");
     });
 }
+
+/// Streamlining a random `Quant` activation into the integer-domain
+/// `MultiThreshold` form (thresholds computed in the producer's integer
+/// domain, raw levels emitted, scale pushed to the graph edge) is
+/// bit-exact on dyadic grids — **including half-grid tie points**, where
+/// round-half-even and the threshold nudges must agree.
+#[test]
+fn prop_streamlined_quant_matches_quant_op_with_ties() {
+    for_all_seeds(25, |rng| {
+        let bw = 2.0 + rng.below(5) as f32;
+        let s = [0.25f32, 0.5, 1.0, 2.0][rng.below(4)];
+        let s_in = [0.25f32, 0.5, 1.0][rng.below(3)];
+        let signed = rng.below(2) == 0;
+        let narrow = rng.below(2) == 0;
+        let mut b = qonnx::ir::GraphBuilder::new("pq");
+        b.input("x", vec![1, 64]);
+        b.quant("x", "xq", s_in, 0.0, 8.0, true, false, "ROUND");
+        b.quant("xq", "y", s, 0.0, bw, signed, narrow, "ROUND");
+        b.output("y", vec![1, 64]);
+        let g = b.finish().unwrap();
+        let att = qonnx::streamline::try_streamline(&g).unwrap();
+        assert!(att.report.ok, "{}", att.report.render());
+        // inputs on the s_in grid and its half-grid tie points
+        let vals: Vec<f32> = (0..64).map(|i| (i as f32 - 32.0) * 0.5 * s_in).collect();
+        let x = Tensor::new(vec![1, 64], vals);
+        assert_eq!(
+            qonnx::exec::execute_simple(&g, &x).unwrap(),
+            qonnx::exec::execute_simple(&att.graph, &x).unwrap(),
+            "bw={bw} s={s} s_in={s_in} signed={signed} narrow={narrow}"
+        );
+    });
+}
