@@ -1,9 +1,9 @@
 # Repo-level tooling. `make check` is the CI gate: build, tests, format,
 # and lints over the rust crate.
 
-.PHONY: check build test fmt clippy bench bench-build examples-build
+.PHONY: check build test fmt clippy doc bench bench-build examples-build
 
-check: build test fmt clippy bench-build examples-build
+check: build test fmt clippy doc bench-build examples-build
 
 build:
 	cd rust && cargo build --release
@@ -19,11 +19,17 @@ fmt:
 clippy:
 	cd rust && cargo clippy --all-targets -- -D warnings
 
+# Doc build (doc-link rot gate; CI runs this too). -D warnings turns
+# broken intra-doc links into failures — a plain `cargo doc` exits 0.
+doc:
+	cd rust && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
 # Interpreter-vs-plan throughput comparison (plus the PJRT sections when
-# artifacts are present). Writes machine-readable BENCH_PR4.json to the
+# artifacts are present). Writes machine-readable BENCH_PR5.json to the
 # repo root (Melem/s, GMAC/s, plan-vs-interpreter speedups, the
-# batched-CNV b1/b8/b32 batch-symbolic-vs-per-sample comparison, and the
-# integer-streamlined-vs-packed-float kernel-tier section on TFC/CNV).
+# batched-CNV b1/b8/b32 batch-symbolic-vs-per-sample comparison, the
+# integer-streamlined-vs-packed-float kernel-tier section, and the PR-5
+# resident-int-vs-convert-per-call section on TFC/CNV b1/b8).
 bench:
 	cd rust && cargo bench --bench bench_exec
 

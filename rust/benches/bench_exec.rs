@@ -19,7 +19,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 /// Machine-readable results for CI trend tracking (`make bench` writes
-/// this to the repo root as BENCH_PR4.json).
+/// this to the repo root as BENCH_PR5.json).
 #[derive(Default)]
 struct BenchJson {
     entries: Vec<(String, f64)>,
@@ -363,6 +363,82 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    section("resident-int plan vs convert-per-call plan (TFC/CNV, b1/b8)");
+    // The PR-5 tentpole measurement: with integer residency, activations
+    // stay in i8/i32 slots between quantized kernels (the MultiThreshold
+    // emits integer levels in place and the next GEMM reads i8 panels);
+    // convert-per-call (the PR-4 behavior, int_residency: false) writes
+    // every intermediate back to f32 and re-validates + converts on entry
+    // to every quantized kernel.
+    for model in ["TFC-w2a2", "CNV-w2a2"] {
+        let mut g = qonnx::zoo::build(model, 1, 32)?;
+        transforms::cleanup(&mut g)?;
+        let sl = qonnx::streamline::try_streamline(&g)?;
+        if !sl.report.ok {
+            println!("({model} did not streamline — skipping)\n{}", sl.report.render());
+            continue;
+        }
+        let rplan = ExecutionPlan::compile(&sl.graph)?;
+        let convert_opts = PlanOptions { int_residency: false, ..Default::default() };
+        let cplan = ExecutionPlan::compile_with(&sl.graph, &convert_opts)?;
+        let int_slots = rplan
+            .slot_dtypes()
+            .iter()
+            .filter(|d| matches!(d, qonnx::tensor::DType::I8 | qonnx::tensor::DType::I32))
+            .count();
+        println!(
+            "{model}: {} integer-resident values, {int_slots}/{} integer slots \
+             (convert-per-call plan: {})",
+            rplan.resident_int_count(),
+            rplan.slot_count(),
+            cplan.resident_int_count()
+        );
+        let in_name = g.inputs[0].name.clone();
+        let in_shape = g.inputs[0].shape.clone().unwrap();
+        let free = qonnx::plan::RunConfig {
+            shape_check: qonnx::plan::ShapeCheck::FreeBatch,
+            record_intermediates: false,
+        };
+        let key = if model.starts_with("TFC") { "tfc" } else { "cnv" };
+        for batch in [1usize, 8] {
+            let mut shape = in_shape.clone();
+            shape[0] = batch;
+            let numel: usize = shape.iter().product();
+            let xb = Tensor::new(shape, (0..numel).map(|i| (i % 249) as f32 / 249.0).collect());
+            // correctness before speed: residency must not change bytes
+            let yr = rplan.run_cfg(|n| (n == in_name).then_some(&xb), &free)?;
+            let yc = cplan.run_cfg(|n| (n == in_name).then_some(&xb), &free)?;
+            assert_eq!(yr.outputs, yc.outputs, "residency changed values on {model} b{batch}");
+            let iters = if model.starts_with("TFC") { 200 } else { 10 };
+            let st_c = bench(
+                &format!("convert-per-call {model} b{batch}"),
+                3,
+                iters,
+                || cplan.run_cfg(|n| (n == in_name).then_some(&xb), &free).unwrap(),
+            );
+            println!("{}", st_c.report());
+            let st_r = bench(
+                &format!("resident-int     {model} b{batch}"),
+                3,
+                iters,
+                || rplan.run_cfg(|n| (n == in_name).then_some(&xb), &free).unwrap(),
+            );
+            println!("{}", st_r.report());
+            let speedup = st_c.mean.as_secs_f64() / st_r.mean.as_secs_f64();
+            println!(
+                "  -> b{batch}: resident-int {:.2}x over convert-per-call ({:.1} vs {:.1} req/s)",
+                speedup,
+                batch as f64 / st_r.mean.as_secs_f64(),
+                batch as f64 / st_c.mean.as_secs_f64(),
+            );
+            json.record(
+                &format!("{key}_b{batch}_resident_int_req_per_s"),
+                batch as f64 / st_r.mean.as_secs_f64(),
+            );
+            json.record(&format!("{key}_b{batch}_resident_vs_convert_speedup"), speedup);
+        }
+    }
+
     section("sharded batcher over one Arc'd CNV plan (8 clients x 16 req)");
     // shards share ONE compiled plan (PlannedEngine::share) — throughput
     // scales with workers while packed weights stay resident once.
@@ -465,6 +541,6 @@ fn main() -> anyhow::Result<()> {
         2.0 * 256f64.powi(3) / st_pp.mean.as_secs_f64() / 1e9,
     );
 
-    json.write(concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR4.json"));
+    json.write(concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR5.json"));
     Ok(())
 }

@@ -25,6 +25,7 @@ Model transformation:
 Inspection & execution:
   summary <model>            print the node listing with shapes/datatypes
   plan <model>               compile and print the execution plan schedule
+                             (incl. the per-slot dtype + bytes table)
   streamline <model> [--out <file>]
                              lower the model to integer-domain form (Quant
                              activations -> integer MultiThreshold, integer
@@ -162,10 +163,18 @@ fn streamline_cmd(rest: &[String]) -> Result<()> {
         return Ok(());
     }
     let plan = crate::plan::ExecutionPlan::compile(&att.graph)?;
+    let int_slots = plan
+        .slot_dtypes()
+        .iter()
+        .filter(|d| matches!(d, crate::tensor::DType::I8 | crate::tensor::DType::I32))
+        .count();
     println!(
-        "integer plan: {} quantized kernels, {} fused epilogues, {} steps total",
+        "integer plan: {} quantized kernels, {} fused epilogues, {} integer-resident values \
+         ({int_slots}/{} integer slots), {} steps total",
         plan.quant_kernel_count(),
         plan.fused_epilogue_count(),
+        plan.resident_int_count(),
+        plan.slot_count(),
         plan.step_count()
     );
     if let Some(out) = parse_flag(rest, "--out") {

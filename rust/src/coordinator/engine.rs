@@ -117,7 +117,12 @@ enum EdgeAdapter {
 /// to integer-domain form the engine serves the streamlined graph
 /// through the plan's quantized kernel tier, with the float plan as the
 /// fallback for everything else ([`PlannedEngine::new`] always takes
-/// the float path — it is the byte-exact baseline).
+/// the float path — it is the byte-exact baseline). Batch binding at
+/// the NCHW edge stays **f32** either way: the engine binds the request
+/// rows as one float tensor and the plan's boundary `MultiThreshold`
+/// performs the single f32→integer conversion, after which activations
+/// stay resident in `i8`/`i32` slots through the quantized tier (see
+/// [`crate::plan`]'s dtype-aware-slots docs).
 ///
 /// [`PlannedEngine::share`] hands out additional engines over the SAME
 /// compiled plan (one `Arc` clone; packed weights and schedule resident

@@ -64,8 +64,11 @@ pub fn execute_with(
     let popts = PlanOptions {
         standard_onnx_only: opts.standard_onnx_only,
         // epilogue fusion hides fused nodes' intermediate names, so shape
-        // inference (and any keep_intermediates caller) compiles unfused
+        // inference (and any keep_intermediates caller) compiles unfused;
+        // integer residency likewise changes intermediate *containers*,
+        // so recording callers keep the all-f32 interpreter view
         fuse_epilogues: !opts.keep_intermediates,
+        int_residency: !opts.keep_intermediates,
         ..Default::default()
     };
     let plan = ExecutionPlan::compile_with(graph, &popts)?;

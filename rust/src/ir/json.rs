@@ -309,19 +309,15 @@ fn parse_obj(b: &[u8], pos: &mut usize) -> Result<Json> {
 
 fn tensor_to_json(t: &Tensor) -> Json {
     let shape = Json::Arr(t.shape().iter().map(|&d| Json::Num(d as f64)).collect());
-    if t.is_i64() {
-        Json::obj(vec![
-            ("shape", shape),
-            ("dtype", Json::Str("i64".into())),
-            ("data", Json::Arr(t.as_i64().unwrap().iter().map(|&v| Json::Num(v as f64)).collect())),
-        ])
+    // i8/i32-resident tensors (plan residency containers) serialize by
+    // value; graph-level tensors are f32/i64 in practice
+    let dtype = t.dtype().name();
+    let data = if t.dtype() == crate::tensor::DType::F32 {
+        Json::Arr(t.as_f32().unwrap().iter().map(|&v| Json::Num(f64::from(v))).collect())
     } else {
-        Json::obj(vec![
-            ("shape", shape),
-            ("dtype", Json::Str("f32".into())),
-            ("data", Json::Arr(t.as_f32().unwrap().iter().map(|&v| Json::Num(f64::from(v))).collect())),
-        ])
-    }
+        Json::Arr(t.to_f64_vec().into_iter().map(Json::Num).collect())
+    };
+    Json::obj(vec![("shape", shape), ("dtype", Json::Str(dtype.into())), ("data", data)])
 }
 
 fn tensor_from_json(j: &Json) -> Result<Tensor> {
@@ -335,6 +331,24 @@ fn tensor_from_json(j: &Json) -> Result<Tensor> {
     match j.req("dtype")?.as_str()? {
         "f32" => Ok(Tensor::new(shape, data.iter().map(|v| v.as_f64().map(|x| x as f32)).collect::<Result<_>>()?)),
         "i64" => Ok(Tensor::new_i64(shape, data.iter().map(|v| v.as_i64()).collect::<Result<_>>()?)),
+        "i8" => Ok(Tensor::new_i8(
+            shape,
+            data.iter()
+                .map(|v| {
+                    let x = v.as_i64()?;
+                    i8::try_from(x).map_err(|_| anyhow::anyhow!("value {x} does not fit i8"))
+                })
+                .collect::<Result<_>>()?,
+        )),
+        "i32" => Ok(Tensor::new_i32(
+            shape,
+            data.iter()
+                .map(|v| {
+                    let x = v.as_i64()?;
+                    i32::try_from(x).map_err(|_| anyhow::anyhow!("value {x} does not fit i32"))
+                })
+                .collect::<Result<_>>()?,
+        )),
         other => bail!("unknown tensor dtype '{other}'"),
     }
 }

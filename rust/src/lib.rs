@@ -52,12 +52,29 @@
 //!        │      │                   transposed + panel-packed once,
 //!        │      │                   elementwise epilogues fused into
 //!        │      │                   the write-back) → generic OpFn.
+//!        │      │
+//!        │      │                   Slots are dtype-aware (tensor::DType):
+//!        │      │                   the residency pass keeps quantized
+//!        │      │                   activations resident in i8/i32 slots
+//!        │      │                   between kernels —
+//!        │      │
+//!        │      │                     f32 in ─► Threshold(i8/i32)   ◄ graph edge: one f32→int cast
+//!        │      │                         i8 ─► QuantConv+mt ─► i8  ◄ i8 panels, i32 acc,
+//!        │      │                         i8 ─► MaxPool/Reshape     ◄ dtype pass-through
+//!        │      │                         i8 ─► QuantGemm ─► f32    ◄ float-tier neighbor /
+//!        │      │                        f32 ─► Mul (de-scale)        graph output: f32 emitted
+//!        │      │                                                     in the scatter loop
+//!        │      │
+//!        │      │                   casts live only at tier boundaries,
+//!        │      │                   inside the boundary kernels; values
+//!        │      │                   (< 2^24, exact in f32) never change.
 //!        │      └─► plan.run(..)    slot-indexed hot loop; kernels draw
 //!        │                          im2col/GEMM/output buffers from a
-//!        │                          ScratchArena that also recycles
-//!        │                          released intermediates — kernel
-//!        │                          scratch hits a zero-alloc steady
-//!        │                          state on warm runs.
+//!        │                          ScratchArena with per-dtype pools
+//!        │                          (f32/i32/i8) that also recycles
+//!        │                          released intermediates by container —
+//!        │                          kernel scratch hits a zero-alloc
+//!        │                          steady state on warm runs.
 //!        │
 //!        └─► runtime (PJRT)         AOT Pallas/HLO artifacts.
 //!
@@ -71,6 +88,11 @@
 //!                                  order-free; bounded below 2^24 at
 //!                                  plan compile so results are also
 //!                                  exact in their f32 containers.
+//!   tensor::qgemm_prepacked_i8     the same kernel over i8-RESIDENT
+//!                                  activations (1-byte panels both
+//!                                  sides) — what the residency pass
+//!                                  feeds when the previous layer's
+//!                                  levels fit i8.
 //!
 //!   coordinator::Batcher ──► InferenceEngine   (1..N worker shards over
 //!        │                                      one request queue)

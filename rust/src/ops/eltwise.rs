@@ -1,11 +1,23 @@
 //! Elementwise operators: activations, broadcast arithmetic, batch norm.
 
 use crate::ir::Node;
-use crate::tensor::Tensor;
+use crate::tensor::{DType, Tensor};
 use anyhow::{ensure, Result};
 
+/// `Relu` is dtype-polymorphic: integer-resident activations (the plan's
+/// residency containers) clamp on the integer grid — bit-identical to the
+/// f32 clamp on the same (exactly representable) values.
 pub fn relu(_node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
-    Ok(vec![inputs[0].map(|v| v.max(0.0))?])
+    let x = inputs[0];
+    Ok(vec![match x.dtype() {
+        DType::I8 => {
+            Tensor::new_i8(x.shape().to_vec(), x.as_i8()?.iter().map(|&v| v.max(0)).collect())
+        }
+        DType::I32 => {
+            Tensor::new_i32(x.shape().to_vec(), x.as_i32()?.iter().map(|&v| v.max(0)).collect())
+        }
+        _ => x.map(|v| v.max(0.0))?,
+    }])
 }
 
 pub fn sign(_node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {

@@ -1,7 +1,7 @@
 //! Pooling operators over NCHW tensors.
 
 use crate::ir::Node;
-use crate::tensor::{conv_out_dim, Tensor};
+use crate::tensor::{conv_out_dim, DType, Tensor};
 use anyhow::{ensure, Result};
 
 struct PoolParams {
@@ -85,10 +85,79 @@ fn with_layout(
     Ok(vec![body(x)?])
 }
 
-/// ONNX `MaxPool`.
+/// Integer-resident NCHW max pool (plan residency containers): same
+/// window walk as [`pool_generic`] with `Ord::max` — the comparison order
+/// of exactly representable integers matches the f32 path bit for bit.
+fn max_pool_int<T: Copy + Ord>(x: &Tensor, p: &PoolParams, src: &[T], init: T) -> (Vec<usize>, Vec<T>) {
+    let (n, c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let oh = conv_out_dim(h, p.kh, p.stride_h, p.pads[0], p.pads[2]);
+    let ow = conv_out_dim(w, p.kw, p.stride_w, p.pads[1], p.pads[3]);
+    let mut out = Vec::with_capacity(n * c * oh * ow);
+    for b in 0..n {
+        for ch in 0..c {
+            let src_base = (b * c + ch) * h * w;
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut v = init;
+                    for ky in 0..p.kh {
+                        let iy = oy * p.stride_h + ky;
+                        if iy < p.pads[0] || iy - p.pads[0] >= h {
+                            continue;
+                        }
+                        for kx in 0..p.kw {
+                            let ix = ox * p.stride_w + kx;
+                            if ix < p.pads[1] || ix - p.pads[1] >= w {
+                                continue;
+                            }
+                            v = v.max(src[src_base + (iy - p.pads[0]) * w + (ix - p.pads[1])]);
+                        }
+                    }
+                    out.push(v);
+                }
+            }
+        }
+    }
+    (vec![n, c, oh, ow], out)
+}
+
+/// Pads strictly smaller than the kernel on every side: every window
+/// then overlaps at least one real input element. THE guard for the
+/// integer pooling paths (an empty window yields `-inf` on the f32 path,
+/// which no integer container can represent).
+fn windows_nonempty(p: &PoolParams) -> bool {
+    p.pads[0] < p.kh && p.pads[2] < p.kh && p.pads[1] < p.kw && p.pads[3] < p.kw
+}
+
+/// Whether every pooling window of this `MaxPool` node is guaranteed to
+/// overlap at least one real input element — the plan's residency pass
+/// routes integer containers through a `MaxPool` only when this holds
+/// (the op's own integer fast path uses the same predicate).
+pub fn max_pool_windows_nonempty(node: &Node) -> bool {
+    match pool_params(node) {
+        Ok(p) => windows_nonempty(&p),
+        Err(_) => false,
+    }
+}
+
+/// ONNX `MaxPool`. Dtype-polymorphic on the NCHW path: integer-resident
+/// inputs pool on the integer grid (the monotone op preserves it).
 pub fn max_pool(node: &Node, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
     ensure!(inputs.len() == 1, "MaxPool wants 1 input");
     let p = pool_params(node)?;
+    let x = inputs[0];
+    if node.attr_str_or("data_layout", "NCHW") == "NCHW" && x.rank() == 4 && windows_nonempty(&p) {
+        match x.dtype() {
+            DType::I8 => {
+                let (shape, out) = max_pool_int(x, &p, x.as_i8()?, i8::MIN);
+                return Ok(vec![Tensor::new_i8(shape, out)]);
+            }
+            DType::I32 => {
+                let (shape, out) = max_pool_int(x, &p, x.as_i32()?, i32::MIN);
+                return Ok(vec![Tensor::new_i32(shape, out)]);
+            }
+            _ => {}
+        }
+    }
     with_layout(node, inputs[0], |x| {
         pool_generic(x, &p, f32::NEG_INFINITY, f32::max, |v, _| v, false)
     })
@@ -136,6 +205,43 @@ mod tests {
         let y = max_pool(&n, &[&x]).unwrap();
         assert_eq!(y[0].shape(), &[1, 1, 2, 2]);
         assert_eq!(y[0].as_f32().unwrap(), &[5., 7., 13., 15.]);
+    }
+
+    #[test]
+    fn fully_padded_windows_decline_the_integer_path() {
+        // pads >= kernel extent can produce an EMPTY window, whose f32
+        // result is -inf — unrepresentable in any integer container, so
+        // both the op fast path and the residency pass must decline
+        let n = Node::new("MaxPool", &["x"], &["y"])
+            .with_attr("kernel_shape", vec![2i64, 2])
+            .with_attr("strides", vec![1i64, 1])
+            .with_attr("pads", vec![2i64, 0, 0, 0]);
+        assert!(!max_pool_windows_nonempty(&n));
+        let ok = Node::new("MaxPool", &["x"], &["y"]).with_attr("kernel_shape", vec![2i64, 2]);
+        assert!(max_pool_windows_nonempty(&ok));
+        // the f32 semantics of the empty top window stay -inf
+        let x = Tensor::new(vec![1, 1, 2, 2], vec![1., 2., 3., 4.]);
+        let y = max_pool(&n, &[&x]).unwrap();
+        assert_eq!(y[0].as_f32().unwrap()[0], f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn max_pool_integer_containers_match_f32() {
+        let n = Node::new("MaxPool", &["x"], &["y"])
+            .with_attr("kernel_shape", vec![2i64, 2])
+            .with_attr("strides", vec![2i64, 2]);
+        let vals: Vec<i32> = (0..32).map(|v| (v * 7 % 23) - 11).collect();
+        let xf = Tensor::new(vec![1, 2, 4, 4], vals.iter().map(|&v| v as f32).collect());
+        let xi = Tensor::new_i32(vec![1, 2, 4, 4], vals.clone());
+        let x8 = Tensor::new_i8(vec![1, 2, 4, 4], vals.iter().map(|&v| v as i8).collect());
+        let yf = max_pool(&n, &[&xf]).unwrap();
+        let yi = max_pool(&n, &[&xi]).unwrap();
+        let y8 = max_pool(&n, &[&x8]).unwrap();
+        assert_eq!(yi[0].shape(), yf[0].shape());
+        let want: Vec<i32> = yf[0].as_f32().unwrap().iter().map(|&v| v as i32).collect();
+        assert_eq!(yi[0].as_i32().unwrap(), want.as_slice());
+        let want8: Vec<i8> = want.iter().map(|&v| v as i8).collect();
+        assert_eq!(y8[0].as_i8().unwrap(), want8.as_slice());
     }
 
     #[test]

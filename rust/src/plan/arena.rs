@@ -10,18 +10,36 @@
 //! name-keyed map, and peak live tensors is bounded by the schedule's
 //! high-water mark rather than the total tensor count.
 //!
+//! Both arenas are **dtype-aware** (PR 5): slots carry the container type
+//! ([`DType`]) the residency pass proved for their values, and a slot is
+//! only ever recycled for a value of the *same* dtype — an `i8` activation
+//! slot never comes back as `f32` storage, so the plan's slot-dtype table
+//! is a static fact about the schedule, not a per-run observation.
+//!
 //! The [`ScratchArena`] is the run-time counterpart: compiled kernels
 //! draw their working buffers (im2col matrices, GEMM products, output
 //! tensors) from it instead of `vec!`-allocating per call, and the
 //! executor returns released intermediates' storage to it — so kernel
 //! scratch reaches a zero-allocation steady state (small bookkeeping
 //! vectors and buffers that leave as graph outputs still allocate).
+//! Buffers are pooled per `(dtype, capacity)`: separate best-fit pools for
+//! `f32`, `i32`, and `i8` storage, with [`ScratchArena::recycle`] routing
+//! a released tensor's buffer to the pool matching its container.
 
-/// Compile-time slot allocator with a free list.
+use crate::tensor::{DType, Tensor, TensorData};
+
+/// Compile-time slot allocator with per-dtype free lists. Each slot is
+/// permanently typed at allocation; `release` returns it to its own
+/// dtype's free list, so recycling can never alias containers.
 #[derive(Debug, Default, Clone)]
 pub struct SlotArena {
-    free: Vec<u32>,
-    next: u32,
+    /// Container type of every slot ever allocated (index = slot id).
+    dtypes: Vec<DType>,
+    /// Free lists keyed by dtype (parallel to the small DType universe).
+    free_f32: Vec<u32>,
+    free_i8: Vec<u32>,
+    free_i32: Vec<u32>,
+    free_i64: Vec<u32>,
 }
 
 impl SlotArena {
@@ -29,51 +47,157 @@ impl SlotArena {
         SlotArena::default()
     }
 
-    /// Allocate a slot, preferring a recycled one.
-    pub fn alloc(&mut self) -> u32 {
-        self.free.pop().unwrap_or_else(|| {
-            let s = self.next;
-            self.next += 1;
-            s
-        })
+    fn free_list(&mut self, dt: DType) -> &mut Vec<u32> {
+        match dt {
+            DType::F32 => &mut self.free_f32,
+            DType::I8 => &mut self.free_i8,
+            DType::I32 => &mut self.free_i32,
+            DType::I64 => &mut self.free_i64,
+        }
     }
 
-    /// Return a slot to the free list (its value passed its last use).
+    /// Allocate an `f32` slot (the pre-residency default).
+    pub fn alloc(&mut self) -> u32 {
+        self.alloc_dtype(DType::F32)
+    }
+
+    /// Allocate a slot of container type `dt`, preferring a recycled slot
+    /// of the *same* dtype.
+    pub fn alloc_dtype(&mut self, dt: DType) -> u32 {
+        if let Some(s) = self.free_list(dt).pop() {
+            return s;
+        }
+        let s = self.dtypes.len() as u32;
+        self.dtypes.push(dt);
+        s
+    }
+
+    /// Return a slot to its dtype's free list (its value passed its last
+    /// use).
     pub fn release(&mut self, slot: u32) {
-        debug_assert!(slot < self.next, "released slot {slot} was never allocated");
-        self.free.push(slot);
+        debug_assert!((slot as usize) < self.dtypes.len(), "released slot {slot} was never allocated");
+        let dt = self.dtypes[slot as usize];
+        self.free_list(dt).push(slot);
     }
 
     /// Total distinct slots ever allocated — the run-time slot-vector size
     /// and the schedule's high-water mark of live tensors.
     pub fn capacity(&self) -> usize {
-        self.next as usize
+        self.dtypes.len()
     }
 
     /// Currently live (allocated, not released) slots.
     pub fn live(&self) -> usize {
-        self.next as usize - self.free.len()
+        self.dtypes.len()
+            - self.free_f32.len()
+            - self.free_i8.len()
+            - self.free_i32.len()
+            - self.free_i64.len()
+    }
+
+    /// Container type per slot (index = slot id).
+    pub fn dtypes(&self) -> &[DType] {
+        &self.dtypes
     }
 }
 
-/// Cap on pooled buffers: enough for every live scratch/output buffer of
-/// a deep model's widest region without hoarding unbounded memory.
+/// Cap on pooled buffers per dtype: enough for every live scratch/output
+/// buffer of a deep model's widest region without hoarding unbounded
+/// memory.
 const SCRATCH_POOL_CAP: usize = 16;
 
-/// Run-time f32 buffer pool — the scratch side of the kernel invocation
+/// One best-fit buffer pool for a single element type. `(dtype, capacity)`
+/// keying falls out of the structure: each element type has its own pool,
+/// and within a pool `pick` selects by capacity.
+#[derive(Debug)]
+struct Pool<T> {
+    bufs: Vec<Vec<T>>,
+}
+
+impl<T> Default for Pool<T> {
+    fn default() -> Pool<T> {
+        Pool { bufs: Vec::new() }
+    }
+}
+
+impl<T: Copy + Default> Pool<T> {
+    /// A zero-filled buffer of exactly `len` elements.
+    fn take(&mut self, len: usize) -> Vec<T> {
+        let mut buf = self.pick(len);
+        buf.clear();
+        buf.resize(len, T::default());
+        buf
+    }
+
+    /// A buffer of exactly `len` elements with **unspecified** contents.
+    fn take_uninit(&mut self, len: usize) -> Vec<T> {
+        let mut buf = self.pick(len);
+        // no clear(): an equal-length reuse is a no-op, a shorter one
+        // truncates, and only a longer one zero-fills the gap
+        buf.resize(len, T::default());
+        buf
+    }
+
+    /// Best-fit pooled buffer for `len` (or a fresh allocation).
+    fn pick(&mut self, len: usize) -> Vec<T> {
+        let mut best: Option<usize> = None;
+        for (i, b) in self.bufs.iter().enumerate() {
+            let cap = b.capacity();
+            best = match best {
+                None => Some(i),
+                Some(j) => {
+                    let bj = self.bufs[j].capacity();
+                    let better = if bj >= len { cap >= len && cap < bj } else { cap > bj };
+                    Some(if better { i } else { j })
+                }
+            };
+        }
+        match best {
+            Some(i) => self.bufs.swap_remove(i),
+            None => Vec::with_capacity(len),
+        }
+    }
+
+    /// Return a buffer's storage. When the pool is full the smallest
+    /// resident buffer is evicted (largest allocations are worth keeping).
+    fn give(&mut self, buf: Vec<T>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        if self.bufs.len() < SCRATCH_POOL_CAP {
+            self.bufs.push(buf);
+            return;
+        }
+        if let Some((i, _)) = self.bufs.iter().enumerate().min_by_key(|(_, b)| b.capacity()) {
+            if self.bufs[i].capacity() < buf.capacity() {
+                self.bufs[i] = buf;
+            }
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.bufs.len()
+    }
+}
+
+/// Run-time buffer pool — the scratch side of the kernel invocation
 /// contract ([`super::CompiledKernel::invoke`] takes `&mut ScratchArena`).
 ///
-/// `take(len)` hands out a zero-filled buffer of exactly `len` elements,
-/// reusing the best-fitting pooled allocation; `give` returns storage for
-/// later reuse. The executor keeps one arena per run (engines keep one
-/// across requests), so conv im2col/product buffers and recycled
-/// intermediate outputs reach a steady state with zero heap traffic.
+/// `take*(len)` hands out a buffer of exactly `len` elements, reusing the
+/// best-fitting pooled allocation of the *same element type*; `give*`
+/// returns storage for later reuse. The executor keeps one arena per run
+/// (engines keep one across requests), so conv im2col/product buffers and
+/// recycled intermediate outputs reach a steady state with zero heap
+/// traffic. Pools are strictly segregated by dtype — an `i8` buffer can
+/// never be handed back as `f32` scratch.
 #[derive(Debug, Default)]
 pub struct ScratchArena {
-    free: Vec<Vec<f32>>,
-    /// Separate pool for the quantized tier's `i32` working buffers
-    /// (activation conversions, integer im2col, accumulators).
-    free_i32: Vec<Vec<i32>>,
+    pool_f32: Pool<f32>,
+    /// Quantized tier's `i32` working buffers (integer im2col,
+    /// accumulators, resident `i32` activations).
+    pool_i32: Pool<i32>,
+    /// Resident `i8` activation buffers (and `i8` im2col panels).
+    pool_i8: Pool<i8>,
 }
 
 impl ScratchArena {
@@ -81,133 +205,85 @@ impl ScratchArena {
         ScratchArena::default()
     }
 
-    /// A zero-filled buffer of exactly `len` elements. Prefers the pooled
-    /// buffer whose capacity fits `len` most tightly (falls back to the
-    /// largest, which then grows in place).
+    /// A zero-filled `f32` buffer of exactly `len` elements. Prefers the
+    /// pooled buffer whose capacity fits `len` most tightly (falls back to
+    /// the largest, which then grows in place).
     pub fn take(&mut self, len: usize) -> Vec<f32> {
-        let mut buf = self.pick(len);
-        buf.clear();
-        buf.resize(len, 0.0);
-        buf
+        self.pool_f32.take(len)
     }
 
-    /// A buffer of exactly `len` elements whose contents are
+    /// An `f32` buffer of exactly `len` elements whose contents are
     /// **unspecified** (stale data from a previous use may remain). For
     /// outputs that every-element-overwrite before reading — skips the
     /// full zeroing memset that [`ScratchArena::take`] pays.
     pub fn take_uninit(&mut self, len: usize) -> Vec<f32> {
-        let mut buf = self.pick(len);
-        // no clear(): an equal-length reuse is a no-op, a shorter one
-        // truncates, and only a longer one zero-fills the gap
-        buf.resize(len, 0.0);
-        buf
+        self.pool_f32.take_uninit(len)
     }
 
-    /// Best-fit pooled buffer for `len` (or a fresh allocation).
-    fn pick(&mut self, len: usize) -> Vec<f32> {
-        let mut best: Option<usize> = None;
-        for (i, b) in self.free.iter().enumerate() {
-            let cap = b.capacity();
-            best = match best {
-                None => Some(i),
-                Some(j) => {
-                    let bj = self.free[j].capacity();
-                    let better = if bj >= len { cap >= len && cap < bj } else { cap > bj };
-                    Some(if better { i } else { j })
-                }
-            };
-        }
-        match best {
-            Some(i) => self.free.swap_remove(i),
-            None => Vec::with_capacity(len),
-        }
-    }
-
-    /// Return a buffer's storage to the pool. When the pool is full the
-    /// smallest resident buffer is evicted (largest allocations are the
-    /// ones worth keeping).
+    /// Return an `f32` buffer's storage to the pool.
     pub fn give(&mut self, buf: Vec<f32>) {
-        if buf.capacity() == 0 {
-            return;
-        }
-        if self.free.len() < SCRATCH_POOL_CAP {
-            self.free.push(buf);
-            return;
-        }
-        if let Some((i, _)) = self
-            .free
-            .iter()
-            .enumerate()
-            .min_by_key(|(_, b)| b.capacity())
-        {
-            if self.free[i].capacity() < buf.capacity() {
-                self.free[i] = buf;
-            }
-        }
+        self.pool_f32.give(buf);
     }
 
-    /// Buffers currently pooled (diagnostics).
+    /// `f32` buffers currently pooled (diagnostics).
     pub fn pooled(&self) -> usize {
-        self.free.len()
+        self.pool_f32.len()
     }
 
     /// A zero-filled `i32` buffer of exactly `len` elements (quantized
     /// kernel tier). Same best-fit policy as [`ScratchArena::take`].
     pub fn take_i32(&mut self, len: usize) -> Vec<i32> {
-        let mut buf = self.pick_i32(len);
-        buf.clear();
-        buf.resize(len, 0);
-        buf
+        self.pool_i32.take(len)
     }
 
     /// An `i32` buffer of exactly `len` elements with **unspecified**
     /// contents (counterpart of [`ScratchArena::take_uninit`]).
     pub fn take_i32_uninit(&mut self, len: usize) -> Vec<i32> {
-        let mut buf = self.pick_i32(len);
-        buf.resize(len, 0);
-        buf
-    }
-
-    fn pick_i32(&mut self, len: usize) -> Vec<i32> {
-        let mut best: Option<usize> = None;
-        for (i, b) in self.free_i32.iter().enumerate() {
-            let cap = b.capacity();
-            best = match best {
-                None => Some(i),
-                Some(j) => {
-                    let bj = self.free_i32[j].capacity();
-                    let better = if bj >= len { cap >= len && cap < bj } else { cap > bj };
-                    Some(if better { i } else { j })
-                }
-            };
-        }
-        match best {
-            Some(i) => self.free_i32.swap_remove(i),
-            None => Vec::with_capacity(len),
-        }
+        self.pool_i32.take_uninit(len)
     }
 
     /// Return an `i32` buffer's storage to the pool.
     pub fn give_i32(&mut self, buf: Vec<i32>) {
-        if buf.capacity() == 0 {
-            return;
-        }
-        if self.free_i32.len() < SCRATCH_POOL_CAP {
-            self.free_i32.push(buf);
-            return;
-        }
-        if let Some((i, _)) =
-            self.free_i32.iter().enumerate().min_by_key(|(_, b)| b.capacity())
-        {
-            if self.free_i32[i].capacity() < buf.capacity() {
-                self.free_i32[i] = buf;
-            }
-        }
+        self.pool_i32.give(buf);
     }
 
     /// `i32` buffers currently pooled (diagnostics).
     pub fn pooled_i32(&self) -> usize {
-        self.free_i32.len()
+        self.pool_i32.len()
+    }
+
+    /// A zero-filled `i8` buffer of exactly `len` elements (resident
+    /// activations / `i8` im2col panels).
+    pub fn take_i8(&mut self, len: usize) -> Vec<i8> {
+        self.pool_i8.take(len)
+    }
+
+    /// An `i8` buffer of exactly `len` elements with **unspecified**
+    /// contents.
+    pub fn take_i8_uninit(&mut self, len: usize) -> Vec<i8> {
+        self.pool_i8.take_uninit(len)
+    }
+
+    /// Return an `i8` buffer's storage to the pool.
+    pub fn give_i8(&mut self, buf: Vec<i8>) {
+        self.pool_i8.give(buf);
+    }
+
+    /// `i8` buffers currently pooled (diagnostics).
+    pub fn pooled_i8(&self) -> usize {
+        self.pool_i8.len()
+    }
+
+    /// Route a released tensor's storage to the pool matching its
+    /// container. The executor calls this for every dead intermediate;
+    /// i64 (shape) tensors are tiny and simply dropped.
+    pub fn recycle(&mut self, t: Tensor) {
+        match t.into_data() {
+            TensorData::F32(v) => self.give(v),
+            TensorData::I32(v) => self.give_i32(v),
+            TensorData::I8(v) => self.give_i8(v),
+            TensorData::I64(_) => {}
+        }
     }
 }
 
@@ -237,6 +313,23 @@ mod tests {
             s = a.alloc();
         }
         assert_eq!(a.capacity(), 1);
+    }
+
+    #[test]
+    fn slots_recycle_within_their_dtype_only() {
+        let mut a = SlotArena::new();
+        let sf = a.alloc_dtype(DType::F32);
+        let s8 = a.alloc_dtype(DType::I8);
+        a.release(sf);
+        a.release(s8);
+        // an i8 request must get the i8 slot back, never the f32 one
+        assert_eq!(a.alloc_dtype(DType::I8), s8);
+        assert_eq!(a.alloc_dtype(DType::F32), sf);
+        // a fresh dtype with an empty free list allocates a new slot
+        let s32 = a.alloc_dtype(DType::I32);
+        assert_eq!(s32 as usize, 2);
+        assert_eq!(a.dtypes(), &[DType::F32, DType::I8, DType::I32]);
+        assert_eq!(a.capacity(), 3);
     }
 
     #[test]
@@ -297,5 +390,32 @@ mod tests {
             s.give_i32(Vec::with_capacity(i + 1));
         }
         assert!(s.pooled_i32() <= SCRATCH_POOL_CAP);
+    }
+
+    #[test]
+    fn cross_dtype_recycling_never_aliases_pools() {
+        let mut s = ScratchArena::new();
+        // recycle() routes by the tensor's actual container
+        s.recycle(Tensor::new_i8(vec![4], vec![1, 2, 3, 4]));
+        s.recycle(Tensor::new_i32(vec![2], vec![5, 6]));
+        s.recycle(Tensor::new(vec![3], vec![1.0, 2.0, 3.0]));
+        s.recycle(Tensor::new_i64(vec![1], vec![9])); // dropped
+        assert_eq!(s.pooled_i8(), 1);
+        assert_eq!(s.pooled_i32(), 1);
+        assert_eq!(s.pooled(), 1);
+        // an i8 buffer handed back is never visible to the f32 pool: the
+        // only pooled f32 buffer has capacity >= 3, while a (bigger) take
+        // from the i8 pool must not shrink the f32 side
+        let f = s.take(3);
+        assert_eq!(f.len(), 3);
+        assert_eq!(s.pooled(), 0);
+        let b8 = s.take_i8(4);
+        assert_eq!(b8, vec![0i8; 4], "reused i8 buffer must come back zeroed");
+        assert_eq!(s.pooled_i8(), 0);
+        assert_eq!(s.take_i8_uninit(6).len(), 6);
+        for i in 0..2 * SCRATCH_POOL_CAP {
+            s.give_i8(Vec::with_capacity(i + 1));
+        }
+        assert!(s.pooled_i8() <= SCRATCH_POOL_CAP);
     }
 }

@@ -1,7 +1,7 @@
 //! Plan compilation: topo-freeze, constant folding, identity elision,
 //! kernel specialization (weight packing + epilogue fusion), the
-//! batch-symbolic reshape rewrite, last-use analysis, and linear-scan
-//! slot assignment.
+//! batch-symbolic reshape rewrite, integer-residency planning, last-use
+//! analysis, and dtype-aware linear-scan slot assignment.
 //!
 //! Compilation performs **no per-run tensor copies**: initializers are
 //! borrowed from the source graph, and only compile-time-folded results
@@ -35,14 +35,31 @@
 //! and needs no rewrite.) All other kernels — packed conv/matmul, pools,
 //! elementwise — iterate over the leading dim anyway, against the same
 //! packed weights.
+//!
+//! The **integer-residency pass** (pass 1.75, [`plan_residency`]) then
+//! negotiates each runtime value's *container*: a backward walk collects
+//! which values some consumer forces to stay `f32` (graph outputs,
+//! inputs of kernels with no integer path), and a forward walk lets
+//! every integer-capable producer — quantized kernels, the standalone
+//! [`super::qkernel::ThresholdKernel`] this pass installs, and the
+//! dtype-polymorphic pass-through ops (`Reshape`/`Flatten`/`Squeeze`/
+//! `Unsqueeze`/`MaxPool`/`Relu`) — emit the narrowest container its
+//! consumers accept (`i8` when the proven levels fit, `i32` for
+//! accumulator-domain edges, `f32` otherwise). Conversions therefore
+//! happen only at tier boundaries, *inside* the boundary kernels: the
+//! input `MultiThreshold` ingests the f32 graph edge, and a quantized
+//! kernel whose consumer needs floats (the residual de-scale `Mul`, a
+//! graph output, any float-tier neighbor) writes f32 in its scatter
+//! loop. Slot assignment is then dtype-keyed, so the plan's slot-dtype
+//! table is a static fact of the schedule.
 
 use super::arena::SlotArena;
 use super::kernel::{BatchReshape, CompiledKernel, Epilogue, PackedConv, PackedGemm, PackedMatMul};
-use super::qkernel::{QThreshold, QuantConv, QuantGemm, QuantMatMul};
+use super::qkernel::{QThreshold, QuantConv, QuantGemm, QuantMatMul, ThresholdKernel};
 use super::{ExecutionPlan, PlanConst, PlanInput, PlanOptions, PlanOutput, Preload, Step};
 use crate::ir::{ModelGraph, Node, DOMAIN_FINN, DOMAIN_QONNX};
 use crate::ops;
-use crate::tensor::Tensor;
+use crate::tensor::{DType, Tensor};
 use crate::transforms::{infer_ranges, ValueRange};
 use anyhow::{bail, Context, Result};
 use std::borrow::Cow;
@@ -62,6 +79,10 @@ enum Def {
 /// Per-value lifetime record for the linear scan.
 struct VInfo {
     def: Def,
+    /// Canonical tensor name (slot-table reporting).
+    name: String,
+    /// Container the value lives in (residency pass; `F32` default).
+    dtype: DType,
     /// Step index of the final read, if any.
     last_use: Option<usize>,
     /// Graph outputs are never released.
@@ -118,7 +139,14 @@ fn intern_const<'g>(
     by_name: &mut BTreeMap<&'g str, usize>,
 ) -> usize {
     let vid = values.len();
-    values.push(VInfo { def: Def::Preload(preloads.len()), last_use: None, persist, slot: UNASSIGNED });
+    values.push(VInfo {
+        def: Def::Preload(preloads.len()),
+        name: name.to_string(),
+        dtype: cv.as_tensor().dtype(),
+        last_use: None,
+        persist,
+        slot: UNASSIGNED,
+    });
     preloads.push((name.to_string(), cv));
     by_name.insert(name, vid);
     vid
@@ -410,6 +438,173 @@ fn spec_matmul<'g>(
     let b = lookup(consts, alias, node.inputs[1].as_str())?;
     let pm = PackedMatMul::try_build(b)?;
     Some((pm, vec![canon(alias, node.inputs[0].as_str())]))
+}
+
+/// Ops with an integer-container implementation that pass their input
+/// dtype through unchanged — the structural/monotone interior of a
+/// streamlined graph. (`MaxPool` only on the plain NCHW path; the NHWC
+/// wrapper transposes through f32.)
+fn residency_passthrough(node: &Node) -> bool {
+    if node.outputs.len() != 1 {
+        return false;
+    }
+    match node.op_type.as_str() {
+        "Reshape" | "Flatten" | "Squeeze" | "Unsqueeze" | "Relu" => true,
+        // a fully-padded window would need f32's -inf, so integer
+        // containers are only routed through pools that can't have one
+        "MaxPool" => {
+            node.attr_str_or("data_layout", "NCHW") == "NCHW"
+                && crate::ops::pool::max_pool_windows_nonempty(node)
+        }
+        _ => false,
+    }
+}
+
+/// Pass 1.75 — integer-residency planning.
+///
+/// Backward walk: collect the values some consumer forces to stay `f32`
+/// (graph outputs; every input of a kernel with no integer path;
+/// transitively, the inputs of pass-through ops whose output must be
+/// f32). Forward walk: let each integer-capable producer emit the
+/// narrowest container its consumers accept, recording the decision in
+/// `val_dtype` and configuring the kernels (`set_out_dtype`); standalone
+/// constant-threshold `MultiThreshold` steps are specialized into
+/// [`ThresholdKernel`]s here, which is what turns the graph-input edge
+/// into the tier's single f32→int conversion point. Returns the number of
+/// integer-resident runtime values.
+fn plan_residency<'g>(
+    graph: &'g ModelGraph,
+    specs: &mut [StepSpec<'g>],
+    consts: &BTreeMap<&'g str, PlanConst<'g>>,
+    alias: &BTreeMap<&'g str, &'g str>,
+    out_set: &BTreeSet<&'g str>,
+    val_dtype: &mut BTreeMap<&'g str, DType>,
+) -> usize {
+    // Candidate standalone-MT specializations: generic MultiThreshold
+    // steps whose thresholds are compile-time constants (runtime
+    // thresholds keep the generic op, which then demands f32 neighbors).
+    let mut mt_candidates: BTreeMap<usize, ThresholdKernel> = BTreeMap::new();
+    for (si, spec) in specs.iter().enumerate() {
+        if !matches!(spec.kernel, CompiledKernel::Op(_)) {
+            continue;
+        }
+        let node = &graph.nodes[spec.node_idx];
+        if node.op_type != "MultiThreshold" || spec.in_names.len() != 2 {
+            continue;
+        }
+        let Some(th) = lookup(consts, alias, spec.in_names[1]) else {
+            continue;
+        };
+        if let Some(tk) = ThresholdKernel::try_build(node, th) {
+            mt_candidates.insert(si, tk);
+        }
+    }
+
+    // Backward demand walk (specs are topo-ordered, so reverse order sees
+    // every consumer before its producer).
+    let mut f32_demand: BTreeSet<&'g str> = out_set.iter().copied().collect();
+    for (si, spec) in specs.iter().enumerate().rev() {
+        let node = &graph.nodes[spec.node_idx];
+        let out_node = &graph.nodes[spec.out_node_idx];
+        let out_demanded = out_node.outputs.iter().any(|o| f32_demand.contains(o.as_str()));
+        match &spec.kernel {
+            // integer-native: accept any container, emit what consumers
+            // demand — no constraint propagates upstream
+            CompiledKernel::QConv(_) | CompiledKernel::QGemm(_) | CompiledKernel::QMatMul(_) => {}
+            // pass-throughs re-emit their input's container, so an f32
+            // demand on the output travels to the data input
+            CompiledKernel::Reshape(_) => {
+                if out_demanded {
+                    if let Some(&n0) = spec.in_names.first() {
+                        f32_demand.insert(n0);
+                    }
+                }
+            }
+            CompiledKernel::Op(_) if mt_candidates.contains_key(&si) => {}
+            CompiledKernel::Op(_) if residency_passthrough(node) => {
+                if out_demanded {
+                    if let Some(&n0) = spec.in_names.first() {
+                        f32_demand.insert(n0);
+                    }
+                }
+            }
+            // everything else (generic ops, packed float kernels) has no
+            // integer path: all runtime inputs must stay f32
+            _ => {
+                for &n in &spec.in_names {
+                    f32_demand.insert(n);
+                }
+            }
+        }
+    }
+
+    // Forward resolution: producers emit the narrowest container allowed.
+    let mut count = 0usize;
+    for (si, spec) in specs.iter_mut().enumerate() {
+        let out_node = &graph.nodes[spec.out_node_idx];
+        if out_node.outputs.len() != 1 {
+            continue; // multi-output steps are generic (f32) by the walk above
+        }
+        let out_name: &'g str = out_node.outputs[0].as_str();
+        let demanded = f32_demand.contains(out_name);
+        let in0: DType = spec
+            .in_names
+            .first()
+            .map(|&n| {
+                val_dtype
+                    .get(n)
+                    .copied()
+                    .or_else(|| lookup(consts, alias, n).map(Tensor::dtype))
+                    .unwrap_or(DType::F32)
+            })
+            .unwrap_or(DType::F32);
+        // standalone MT: specialize whenever it must ingest an integer
+        // container or may emit one (otherwise the generic op is fine)
+        if let Some(mut tk) = mt_candidates.remove(&si) {
+            let dt = if demanded { DType::F32 } else { tk.preferred_out_dtype() };
+            if in0 != DType::F32 || dt != DType::F32 {
+                tk.set_out_dtype(dt);
+                spec.kernel = CompiledKernel::Threshold(Arc::new(tk));
+                // thresholds are baked into the kernel; only the data
+                // tensor remains a runtime input
+                spec.in_names.truncate(1);
+                if dt != DType::F32 {
+                    val_dtype.insert(out_name, dt);
+                    count += 1;
+                }
+            }
+            continue;
+        }
+        let node_idx = spec.node_idx;
+        let chosen = match &mut spec.kernel {
+            CompiledKernel::QConv(qc) => {
+                let k = Arc::get_mut(qc).expect("plan kernels are unshared during compile");
+                let dt = if demanded { DType::F32 } else { k.preferred_out_dtype() };
+                k.set_out_dtype(dt);
+                dt
+            }
+            CompiledKernel::QGemm(qg) => {
+                let k = Arc::get_mut(qg).expect("plan kernels are unshared during compile");
+                let dt = if demanded { DType::F32 } else { k.preferred_out_dtype() };
+                k.set_out_dtype(dt);
+                dt
+            }
+            CompiledKernel::QMatMul(qm) => {
+                let k = Arc::get_mut(qm).expect("plan kernels are unshared during compile");
+                let dt = if demanded { DType::F32 } else { k.preferred_out_dtype() };
+                k.set_out_dtype(dt);
+                dt
+            }
+            CompiledKernel::Reshape(_) => in0,
+            CompiledKernel::Op(_) if residency_passthrough(&graph.nodes[node_idx]) => in0,
+            _ => DType::F32,
+        };
+        if chosen != DType::F32 {
+            val_dtype.insert(out_name, chosen);
+            count += 1;
+        }
+    }
+    count
 }
 
 pub(super) fn compile<'g>(graph: &'g ModelGraph, opts: &PlanOptions) -> Result<ExecutionPlan<'g>> {
@@ -727,6 +922,19 @@ pub(super) fn compile<'g>(graph: &'g ModelGraph, opts: &PlanOptions) -> Result<E
     }
 
     // ------------------------------------------------------------------
+    // Pass 1.75 — integer-residency planning: decide each runtime value's
+    // container and configure the producing kernels (see
+    // [`plan_residency`]). Rides on the quantized tier's proofs, so it is
+    // gated the same way.
+    // ------------------------------------------------------------------
+    let mut val_dtype: BTreeMap<&'g str, DType> = BTreeMap::new();
+    let mut resident_int_count = 0usize;
+    if quantize && opts.int_residency {
+        resident_int_count =
+            plan_residency(graph, &mut specs, &consts, &alias, &out_set, &mut val_dtype);
+    }
+
+    // ------------------------------------------------------------------
     // Pass 2 — build the runtime value graph: resolve every name to a
     // dense value id, recording defs and last uses.
     // ------------------------------------------------------------------
@@ -742,6 +950,8 @@ pub(super) fn compile<'g>(graph: &'g ModelGraph, opts: &PlanOptions) -> Result<E
         let vid = values.len();
         values.push(VInfo {
             def: Def::Input(input_records.len()),
+            name: vi.name.clone(),
+            dtype: DType::F32, // callers bind f32 data at the graph edge
             last_use: None,
             persist: false,
             slot: UNASSIGNED,
@@ -777,7 +987,14 @@ pub(super) fn compile<'g>(graph: &'g ModelGraph, opts: &PlanOptions) -> Result<E
         let mut out_vals = Vec::with_capacity(out_node.outputs.len());
         for out in &out_node.outputs {
             let vid = values.len();
-            values.push(VInfo { def: Def::Step, last_use: None, persist: false, slot: UNASSIGNED });
+            values.push(VInfo {
+                def: Def::Step,
+                name: out.clone(),
+                dtype: val_dtype.get(out.as_str()).copied().unwrap_or(DType::F32),
+                last_use: None,
+                persist: false,
+                slot: UNASSIGNED,
+            });
             by_name.insert(out.as_str(), vid);
             out_vals.push(vid);
         }
@@ -827,7 +1044,7 @@ pub(super) fn compile<'g>(graph: &'g ModelGraph, opts: &PlanOptions) -> Result<E
             continue;
         }
         if v.persist || v.last_use.is_some() {
-            v.slot = arena.alloc();
+            v.slot = arena.alloc_dtype(v.dtype);
         }
     }
     let mut release_at: Vec<Vec<u32>> = vec![Vec::new(); steps_build.len()];
@@ -842,8 +1059,24 @@ pub(super) fn compile<'g>(graph: &'g ModelGraph, opts: &PlanOptions) -> Result<E
         for &vid in &steps_build[s].out_vals {
             let v = &mut values[vid];
             if v.persist || v.last_use.is_some() {
-                v.slot = arena.alloc();
+                // dtype-keyed: an i8 value can only reuse an i8 slot
+                v.slot = arena.alloc_dtype(v.dtype);
             }
+        }
+    }
+
+    // Slot-dtype table + best-known per-slot footprint (from declared /
+    // inferred shapes; `None` where no shape annotation exists).
+    let slot_dtypes: Vec<DType> = arena.dtypes().to_vec();
+    let mut slot_numel: Vec<Option<usize>> = vec![None; slot_dtypes.len()];
+    for v in &values {
+        if v.slot == UNASSIGNED {
+            continue;
+        }
+        if let Some(shape) = graph.tensor_shape(&v.name) {
+            let n: usize = shape.iter().product();
+            let e = &mut slot_numel[v.slot as usize];
+            *e = Some(e.map_or(n, |m| m.max(n)));
         }
     }
 
@@ -904,6 +1137,8 @@ pub(super) fn compile<'g>(graph: &'g ModelGraph, opts: &PlanOptions) -> Result<E
         inputs: input_records,
         outputs,
         slot_count: arena.capacity(),
+        slot_dtypes,
+        slot_numel,
         folded_outputs,
         alias_outputs,
         node_count: graph.nodes.len(),
@@ -912,6 +1147,7 @@ pub(super) fn compile<'g>(graph: &'g ModelGraph, opts: &PlanOptions) -> Result<E
         packed_count,
         quant_count,
         fused_count,
+        resident_int_count,
         batch_symbolic_count,
         batch_blockers,
     })
@@ -1247,6 +1483,68 @@ mod tests {
         let plan3 = ExecutionPlan::compile(&g3).unwrap();
         assert_eq!(plan3.batch_symbolic_count(), 1);
         assert!(plan3.batch_blockers().is_empty());
+    }
+
+    #[test]
+    fn residency_specializes_input_threshold_and_negotiates_containers() {
+        use crate::tensor::DType;
+        // x -> MT(const thresholds) -> integer MatMul -> y: the MT emits
+        // resident i8 levels, the MatMul consumes them and emits f32 for
+        // the graph output
+        let mut b = GraphBuilder::new("resid");
+        b.input("x", vec![1, 4]);
+        b.initializer("t0", Tensor::new(vec![1, 3], vec![0.5, 1.5, 2.5]));
+        b.node_in_domain(crate::ir::DOMAIN_FINN, "MultiThreshold", &["x", "t0"], &["xi"], &[]);
+        b.initializer("w", Tensor::new(vec![4, 2], vec![1.0, -1.0, 2.0, 0.0, -2.0, 1.0, 1.0, 1.0]));
+        b.node("MatMul", &["xi", "w"], &["y"], &[]);
+        b.output("y", vec![1, 2]);
+        let g = b.finish().unwrap();
+        let plan = ExecutionPlan::compile(&g).unwrap();
+        assert_eq!(plan.resident_int_count(), 1, "{}", plan.summary());
+        let table = plan.step_table();
+        assert_eq!(table[0].0, "Threshold(i8)", "{}", plan.summary());
+        let mt_slot = table[0].1[0].unwrap() as usize;
+        assert_eq!(plan.slot_dtypes()[mt_slot], DType::I8);
+        // the graph output demands f32: the MatMul's slot stays f32
+        assert_eq!(table[1].0, "QuantMatMul", "{}", plan.summary());
+        let y_slot = table[1].1[0].unwrap() as usize;
+        assert_eq!(plan.slot_dtypes()[y_slot], DType::F32);
+        // residency is traffic-only: identical to convert-per-call and
+        // the interpreter
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("x".to_string(), Tensor::new(vec![1, 4], vec![-1.0, 0.7, 1.6, 7.0]));
+        let got = plan.run(&m).unwrap();
+        let off = super::PlanOptions { int_residency: false, ..Default::default() };
+        let cplan = ExecutionPlan::compile_with(&g, &off).unwrap();
+        assert_eq!(cplan.resident_int_count(), 0);
+        assert_eq!(cplan.run(&m).unwrap(), got);
+        assert_eq!(crate::exec::interpret(&g, &m).unwrap().outputs, got);
+    }
+
+    #[test]
+    fn residency_declines_when_a_float_consumer_shares_the_value() {
+        use crate::tensor::DType;
+        // xi feeds both the integer MatMul and a generic Sigmoid: the
+        // shared value must stay f32 and the MT stays generic
+        let mut b = GraphBuilder::new("resid-shared");
+        b.input("x", vec![1, 4]);
+        b.initializer("t0", Tensor::new(vec![1, 3], vec![0.5, 1.5, 2.5]));
+        b.node_in_domain(crate::ir::DOMAIN_FINN, "MultiThreshold", &["x", "t0"], &["xi"], &[]);
+        b.initializer("w", Tensor::new(vec![4, 2], vec![1.0, 0.0, -1.0, 1.0, 2.0, -2.0, 0.0, 1.0]));
+        b.node("MatMul", &["xi", "w"], &["y"], &[]);
+        b.node("Sigmoid", &["xi"], &["s"], &[]);
+        b.output("y", vec![1, 2]);
+        b.output("s", vec![1, 4]);
+        let g = b.finish().unwrap();
+        let plan = ExecutionPlan::compile(&g).unwrap();
+        assert_eq!(plan.resident_int_count(), 0, "{}", plan.summary());
+        let table = plan.step_table();
+        assert_eq!(table[0].0, "MultiThreshold", "generic MT kept:\n{}", plan.summary());
+        assert!(plan.slot_dtypes().iter().all(|&d| d == DType::F32), "{}", plan.summary());
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("x".to_string(), Tensor::new(vec![1, 4], vec![0.2, 1.1, 2.2, 3.3]));
+        let got = plan.run(&m).unwrap();
+        assert_eq!(crate::exec::interpret(&g, &m).unwrap().outputs, got);
     }
 
     #[test]

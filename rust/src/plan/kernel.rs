@@ -32,7 +32,7 @@
 //! stage replays the generic op's per-element arithmetic verbatim.
 
 use super::arena::ScratchArena;
-use super::qkernel::{QuantConv, QuantGemm, QuantMatMul};
+use super::qkernel::{QuantConv, QuantGemm, QuantMatMul, ThresholdKernel};
 use crate::ir::Node;
 use crate::ops::linalg::{conv_params, ConvParams};
 use crate::ops::quant::{quant_bounds, RoundingMode};
@@ -61,6 +61,11 @@ pub enum CompiledKernel {
     QGemm(Arc<QuantGemm>),
     /// Integer-domain MatMul.
     QMatMul(Arc<QuantMatMul>),
+    /// Standalone `MultiThreshold` with constant thresholds, emitting its
+    /// integer levels directly into their proven container (the
+    /// resident-integer tier's boundary kernel — see
+    /// [`crate::plan::qkernel::ThresholdKernel`]).
+    Threshold(Arc<ThresholdKernel>),
     /// Reshape whose constant target baked a batch of 1 into its leading
     /// dim, rewritten batch-preserving (the batch-symbolic compile pass).
     Reshape(Arc<BatchReshape>),
@@ -100,6 +105,10 @@ impl CompiledKernel {
                 ensure!(!inputs.is_empty(), "QuantMatMul wants the lhs tensor");
                 Ok(vec![qm.run(inputs[0], scratch)?])
             }
+            CompiledKernel::Threshold(tk) => {
+                ensure!(!inputs.is_empty(), "ThresholdKernel wants the data tensor");
+                Ok(vec![tk.run(inputs[0], scratch)?])
+            }
             CompiledKernel::Reshape(br) => {
                 ensure!(!inputs.is_empty(), "BatchReshape wants the data tensor");
                 Ok(vec![br.run(inputs[0])?])
@@ -123,6 +132,7 @@ impl CompiledKernel {
             CompiledKernel::QGemm(_) => "QuantGemm".to_string(),
             CompiledKernel::QMatMul(qm) if qm.has_fused_threshold() => "QuantMatMul+mt".to_string(),
             CompiledKernel::QMatMul(_) => "QuantMatMul".to_string(),
+            CompiledKernel::Threshold(tk) => format!("Threshold({})", tk.out_dtype()),
             CompiledKernel::Reshape(_) => "BatchReshape".to_string(),
         }
     }

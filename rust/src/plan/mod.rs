@@ -63,6 +63,29 @@
 //! the quantized tier's integer math is exact under its `2^24` bound
 //! (`tests/plan_equiv.rs` asserts byte equality across the zoo).
 //!
+//! # Dtype-aware slots (integer residency)
+//!
+//! Plan slots carry a container type ([`crate::tensor::DType`]): the
+//! residency pass (`compile.rs::plan_residency`) proves, per runtime
+//! value, the narrowest container every consumer accepts, and the
+//! quantized tier then keeps activations **resident** in `i8`/`i32`
+//! between layers — a streamlined `MultiThreshold` (fused epilogue or
+//! the standalone [`qkernel::ThresholdKernel`]) writes integer levels
+//! straight into integer storage, pass-through ops (`MaxPool`,
+//! `Reshape`, `Relu`, ...) carry them unchanged, and the next
+//! `QuantConv`/`QuantGemm` consumes them directly (`i8` activation
+//! panels — no f32 detour, no per-element grid re-validation).
+//! Containers convert only at tier boundaries, inside the boundary
+//! kernels: the graph-input `MultiThreshold` ingests f32, and any
+//! quantized kernel feeding a float consumer (the residual de-scale
+//! `Mul`, a graph output, a float-tier neighbor) emits f32 in its
+//! scatter loop. Because the emitted integers are exactly representable
+//! in f32 (the `2^24` bound), residency changes *traffic*, not values —
+//! byte-identity with the interpreter is preserved. Slot recycling and
+//! the [`ScratchArena`] pools are dtype-keyed, so an `i8` buffer is
+//! never handed back as `f32` storage;
+//! [`ExecutionPlan::slot_dtypes`] exposes the resulting table.
+//!
 //! # Batch-symbolic plans
 //!
 //! Compilation additionally rewrites batch-1-baked constant `Reshape`
@@ -109,7 +132,7 @@ pub use arena::{ScratchArena, SlotArena};
 pub use kernel::CompiledKernel;
 
 use crate::ir::{ModelGraph, Node};
-use crate::tensor::Tensor;
+use crate::tensor::{DType, Tensor};
 use anyhow::{anyhow, bail, Context, Result};
 use std::borrow::Cow;
 use std::collections::BTreeMap;
@@ -143,6 +166,16 @@ pub struct PlanOptions {
     /// integer grid, so it is a no-op on ordinary float graphs.
     /// Requires `specialize` (the generic baseline disables both).
     pub quantize: bool,
+    /// Keep quantized-tier activations **resident in integer
+    /// containers** between kernels: the residency pass assigns each
+    /// plan slot the container its value provably fits (`i8`/`i32`),
+    /// `MultiThreshold` emissions land there directly, and the next
+    /// integer kernel consumes them with no float detour. Disable for
+    /// the convert-per-call baseline (the PR-4 behavior) or when every
+    /// intermediate must be observable as f32
+    /// ([`crate::exec::ExecOptions::keep_intermediates`] does).
+    /// Requires `quantize`; a no-op on graphs without integer proofs.
+    pub int_residency: bool,
 }
 
 impl Default for PlanOptions {
@@ -153,6 +186,7 @@ impl Default for PlanOptions {
             fuse_epilogues: true,
             batch_symbolic: true,
             quantize: true,
+            int_residency: true,
         }
     }
 }
@@ -302,6 +336,13 @@ pub struct ExecutionPlan<'g> {
     pub(crate) inputs: Vec<PlanInput>,
     pub(crate) outputs: Vec<PlanOutput>,
     pub(crate) slot_count: usize,
+    /// Container type per physical slot (index = slot id). Slot
+    /// assignment is dtype-keyed, so this is a static property of the
+    /// schedule: an `i8` slot only ever holds `i8` values.
+    pub(crate) slot_dtypes: Vec<DType>,
+    /// Best-known element count per slot (max over the values assigned
+    /// to it, from declared/inferred shapes; `None` when unannotated).
+    pub(crate) slot_numel: Vec<Option<usize>>,
     /// All compile-time-folded node outputs by name (for intermediates
     /// recording; `Arc`-shared with any preloads that use them).
     pub(crate) folded_outputs: Vec<(String, Arc<Tensor>)>,
@@ -313,6 +354,7 @@ pub struct ExecutionPlan<'g> {
     pub(crate) packed_count: usize,
     pub(crate) quant_count: usize,
     pub(crate) fused_count: usize,
+    pub(crate) resident_int_count: usize,
     pub(crate) batch_symbolic_count: usize,
     /// Reasons this plan can never serve a leading batch larger than its
     /// declared shapes (constant reshape targets that bake a batch).
@@ -353,6 +395,8 @@ impl<'g> ExecutionPlan<'g> {
             inputs: self.inputs,
             outputs: self.outputs,
             slot_count: self.slot_count,
+            slot_dtypes: self.slot_dtypes,
+            slot_numel: self.slot_numel,
             folded_outputs: self.folded_outputs,
             alias_outputs: self.alias_outputs,
             node_count: self.node_count,
@@ -361,6 +405,7 @@ impl<'g> ExecutionPlan<'g> {
             packed_count: self.packed_count,
             quant_count: self.quant_count,
             fused_count: self.fused_count,
+            resident_int_count: self.resident_int_count,
             batch_symbolic_count: self.batch_symbolic_count,
             batch_blockers: self.batch_blockers,
         }
@@ -411,6 +456,27 @@ impl<'g> ExecutionPlan<'g> {
     /// chains and `MultiThreshold` stages fused into quantized kernels).
     pub fn fused_epilogue_count(&self) -> usize {
         self.fused_count
+    }
+
+    /// Runtime values the residency pass keeps in integer containers
+    /// (`i8`/`i32`) between kernels instead of f32.
+    pub fn resident_int_count(&self) -> usize {
+        self.resident_int_count
+    }
+
+    /// Container type per physical slot (index = slot id). Dtype-keyed
+    /// slot recycling makes this a static fact of the schedule.
+    pub fn slot_dtypes(&self) -> &[DType] {
+        &self.slot_dtypes
+    }
+
+    /// Per-step view for reports/tests: display tag plus the output slot
+    /// (if any) of each declared output.
+    pub fn step_table(&self) -> Vec<(String, Vec<Option<u32>>)> {
+        self.steps
+            .iter()
+            .map(|s| (s.kernel.tag(&self.nodes[s.node_idx]), s.outputs.clone()))
+            .collect()
     }
 
     /// Why this plan can never serve a leading batch beyond its declared
@@ -537,12 +603,12 @@ impl<'g> ExecutionPlan<'g> {
             }
             drop(ins);
             // Free dead slots before storing: an output may reuse one.
-            // Owned buffers go back to the scratch pool for later kernels.
+            // Owned buffers go back to the scratch pool for later kernels
+            // — routed to the pool matching their container, so an i8
+            // activation buffer never resurfaces as f32 scratch.
             for &sl in &step.release {
                 if let Some(RtVal::Owned(t)) = slots[sl as usize].take() {
-                    if let Some(buf) = t.into_f32_vec() {
-                        scratch.give(buf);
-                    }
+                    scratch.recycle(t);
                 }
             }
             for (j, t) in outs.into_iter().enumerate() {
@@ -575,11 +641,12 @@ impl<'g> ExecutionPlan<'g> {
         Ok(PlanRunResult { outputs, intermediates })
     }
 
-    /// Human-readable schedule listing.
+    /// Human-readable schedule listing (with the per-slot dtype + bytes
+    /// table the `plan` CLI prints).
     pub fn summary(&self) -> String {
         let mut s = format!(
             "plan '{}': {} graph nodes -> {} steps ({} const-folded, {} identity-elided, \
-             {} packed, {} quantized, {} epilogue-fused, {} batch-symbolic)\n",
+             {} packed, {} quantized, {} epilogue-fused, {} int-resident, {} batch-symbolic)\n",
             self.name,
             self.node_count,
             self.steps.len(),
@@ -588,6 +655,7 @@ impl<'g> ExecutionPlan<'g> {
             self.packed_count,
             self.quant_count,
             self.fused_count,
+            self.resident_int_count,
             self.batch_symbolic_count
         );
         for b in &self.batch_blockers {
@@ -615,6 +683,30 @@ impl<'g> ExecutionPlan<'g> {
                 step.inputs,
                 outs.join(", "),
                 step.release
+            );
+        }
+        // per-slot dtype + bytes column: the residency pass's memory story
+        // at a glance (bytes at declared shapes; '?' when unannotated)
+        let mut resident = 0usize;
+        let mut all_f32 = 0usize;
+        let _ = writeln!(s, "  slot dtypes (bytes at declared shapes):");
+        for (i, dt) in self.slot_dtypes.iter().enumerate() {
+            match self.slot_numel.get(i).copied().flatten() {
+                Some(n) => {
+                    let bytes = n * dt.size_bytes();
+                    resident += bytes;
+                    all_f32 += n * DType::F32.size_bytes();
+                    let _ = writeln!(s, "    s{i:<3} {:<4} {bytes:>10} B", dt.name());
+                }
+                None => {
+                    let _ = writeln!(s, "    s{i:<3} {:<4} {:>10} B", dt.name(), "?");
+                }
+            }
+        }
+        if all_f32 > 0 {
+            let _ = writeln!(
+                s,
+                "    resident slot bytes {resident} (all-f32 layout would be {all_f32})"
             );
         }
         s

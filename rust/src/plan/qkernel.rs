@@ -12,6 +12,22 @@
 //! `MultiThreshold` pass with a per-element binary search over `i32`
 //! thresholds inside the scatter loop.
 //!
+//! # Dtype-aware residency (PR 5)
+//!
+//! Every kernel here is **container-polymorphic on both sides**. Inputs:
+//! an `f32` tensor is validated against the compile-time range proof and
+//! converted once (the classic path — now only the plan-boundary case); an
+//! `i32`-resident tensor feeds the integer GEMM directly with *zero*
+//! conversion; an `i8`-resident tensor feeds the `i8`-activation GEMM
+//! ([`crate::tensor::qgemm_prepacked_i8`]) — 1-byte activation panels, the
+//! ROADMAP's "resident `i8` activation path". Outputs: the residency pass
+//! in `plan/compile.rs` tells each kernel which container its consumers
+//! accept ([`QuantConv::set_out_dtype`] & co.), so a fused
+//! `MultiThreshold` writes its integer levels straight into `i8`/`i32`
+//! storage instead of round-tripping through floats. The standalone
+//! [`ThresholdKernel`] is the tier's entry boundary: it ingests the f32
+//! graph edge and emits resident integer levels in one pass.
+//!
 //! # Exactness contract
 //!
 //! Selection requires every accumulator magnitude (including any folded
@@ -19,21 +35,25 @@
 //! is exactly representable in the f32 container, so a quantized plan is
 //! **byte-identical** to running the same streamlined graph through the
 //! float kernels or the reference interpreter — `tests/plan_equiv.rs`
-//! asserts this across the zoo. The runtime conversion re-checks that
-//! bound: a caller binding values off the proven grid (violating the
-//! graph's datatype annotations) gets an error, not silent truncation.
+//! asserts this across the zoo. Integer residency preserves the contract:
+//! integer emission replays the f32 arithmetic and casts the (exactly
+//! representable) result, and integer-resident inputs are trusted by
+//! construction — their producing kernel proved the grid, so the
+//! per-element runtime re-validation only remains on the f32 boundary.
 
 use super::arena::ScratchArena;
 use crate::ir::Node;
 use crate::ops::linalg::{conv_params, ConvParams};
-use crate::ops::multithreshold::threshold_count_i32;
-use crate::tensor::{conv_out_dim, im2col_group_into, qgemm_prepacked, PackedBi8, Tensor};
+use crate::ops::multithreshold::{threshold_count, threshold_count_i32};
+use crate::tensor::{
+    conv_out_dim, im2col_group_into, qgemm_prepacked, qgemm_prepacked_i8, DType, PackedBi8, Tensor,
+};
 use crate::transforms::ValueRange;
 use anyhow::{ensure, Result};
 
 /// Largest magnitude exactly representable on the f32 integer grid; the
 /// compile-time accumulator bound AND the runtime input-validation bound.
-const EXACT_F32_LIMIT: f64 = 16_777_216.0; // 2^24
+const EXACT_F32_LIMIT: f64 = crate::tensor::F32_EXACT_INT_LIMIT; // 2^24
 
 /// Extract a tensor's values as `i8`, or `None` if any value is off the
 /// integer grid or outside `[-128, 127]`.
@@ -57,6 +77,36 @@ fn range_abs(r: ValueRange) -> Option<f64> {
     Some(r.lo.abs().max(r.hi.abs()))
 }
 
+/// Narrowest integer container that exactly holds integer levels in
+/// `[lo, hi]` (which must stay inside the f32-exact `±2^24` window so the
+/// emitted value is the f32 value, bit for bit, after any cast). `None`
+/// means: keep the f32 container.
+fn int_container(lo: f64, hi: f64) -> Option<DType> {
+    if lo <= -EXACT_F32_LIMIT || hi >= EXACT_F32_LIMIT {
+        return None;
+    }
+    if lo >= f64::from(i8::MIN) && hi <= f64::from(i8::MAX) {
+        Some(DType::I8)
+    } else {
+        Some(DType::I32)
+    }
+}
+
+/// Container of a `MultiThreshold` emission `out_scale * count + out_bias`
+/// over `count` in `0..=steps` — the ONE level-range rule shared by fused
+/// epilogues ([`QThreshold`]) and standalone [`ThresholdKernel`]s, so the
+/// two can never disagree about a proven container. `F32` when the out
+/// params are not integral (or the levels leave the f32-exact window).
+fn level_container(out_scale: f32, out_bias: f32, steps: usize) -> DType {
+    let os = f64::from(out_scale);
+    let ob = f64::from(out_bias);
+    if os.fract() != 0.0 || ob.fract() != 0.0 {
+        return DType::F32;
+    }
+    let (a, b) = (ob, os * steps as f64 + ob);
+    int_container(a.min(b), a.max(b)).unwrap_or(DType::F32)
+}
+
 /// Convert a proven-integral f32 slice into `i32`, re-validating the
 /// compile-time range proof per element.
 fn to_i32_checked(src: &[f32], lo: f64, hi: f64, out: &mut [i32]) -> Result<()> {
@@ -69,6 +119,35 @@ fn to_i32_checked(src: &[f32], lo: f64, hi: f64, out: &mut [i32]) -> Result<()> 
              (the bound datatype annotation does not match the runtime data)"
         );
         *o = v as i32;
+    }
+    Ok(())
+}
+
+/// Accumulate `rows x k` activations against a packed `i8` weight matrix
+/// into `prod`, dispatching on the activation container: `i8`-resident
+/// panels take the 1-byte path, `i32`-resident ones multiply directly, and
+/// the f32 boundary validates + converts through arena scratch.
+#[allow(clippy::too_many_arguments)]
+fn qgemm_any(
+    a: &Tensor,
+    rows: usize,
+    k: usize,
+    bp: &PackedBi8,
+    in_lo: f64,
+    in_hi: f64,
+    prod: &mut [i32],
+    scratch: &mut ScratchArena,
+) -> Result<()> {
+    match a.dtype() {
+        DType::I8 => qgemm_prepacked_i8(rows, k, bp, a.as_i8()?, prod),
+        DType::I32 => qgemm_prepacked(rows, k, bp, a.as_i32()?, prod),
+        _ => {
+            let xs = a.as_f32()?;
+            let mut xi = scratch.take_i32_uninit(xs.len());
+            to_i32_checked(xs, in_lo, in_hi, &mut xi)?;
+            qgemm_prepacked(rows, k, bp, &xi, prod);
+            scratch.give_i32(xi);
+        }
     }
     Ok(())
 }
@@ -129,6 +208,11 @@ impl QThreshold {
         })
     }
 
+    /// Narrowest container that exactly holds every emitted level.
+    fn preferred_container(&self) -> DType {
+        level_container(self.out_scale, self.out_bias, self.steps)
+    }
+
     #[inline]
     fn apply(&self, acc: i32, oc: usize) -> f32 {
         let c = if self.channels == 1 { 0 } else { oc };
@@ -138,6 +222,8 @@ impl QThreshold {
     }
 }
 
+/// The per-element write-back value in f32 — integer containers cast this
+/// exact value, so every container holds the same number.
 #[inline]
 fn emit(epilogue: &Option<QThreshold>, acc: i32, oc: usize) -> f32 {
     match epilogue {
@@ -146,8 +232,63 @@ fn emit(epilogue: &Option<QThreshold>, acc: i32, oc: usize) -> f32 {
     }
 }
 
-/// Integer-domain conv: `i8` weight panels per group, `i32` im2col +
-/// accumulate, fused `MultiThreshold` in the scatter loop.
+/// Preferred output container of a quantized linear kernel: the fused
+/// threshold's level container when one is fused, otherwise the raw
+/// (`< 2^24`-bounded) `i32` accumulator.
+fn preferred_out(epilogue: &Option<QThreshold>) -> DType {
+    match epilogue {
+        Some(t) => t.preferred_container(),
+        None => DType::I32,
+    }
+}
+
+/// Emit a row-major `[.., n]` accumulator (plus optional per-column bias
+/// and fused threshold) into a tensor of container `dt`. The `I32` case
+/// rewrites the accumulator buffer in place — zero extra traffic.
+fn emit_rowmajor(
+    shape: Vec<usize>,
+    prod: Vec<i32>,
+    n: usize,
+    bias: Option<&[i32]>,
+    epilogue: &Option<QThreshold>,
+    dt: DType,
+    scratch: &mut ScratchArena,
+) -> Tensor {
+    let acc_at = |i: usize, a: i32| -> i32 {
+        match bias {
+            Some(b) => a + b[i % n],
+            None => a,
+        }
+    };
+    match dt {
+        DType::I32 => {
+            let mut out = prod;
+            for (i, v) in out.iter_mut().enumerate() {
+                *v = emit(epilogue, acc_at(i, *v), i % n) as i32;
+            }
+            Tensor::new_i32(shape, out)
+        }
+        DType::I8 => {
+            let mut out = scratch.take_i8_uninit(prod.len());
+            for (i, (o, &a)) in out.iter_mut().zip(prod.iter()).enumerate() {
+                *o = emit(epilogue, acc_at(i, a), i % n) as i8;
+            }
+            scratch.give_i32(prod);
+            Tensor::new_i8(shape, out)
+        }
+        _ => {
+            let mut out = scratch.take_uninit(prod.len());
+            for (i, (o, &a)) in out.iter_mut().zip(prod.iter()).enumerate() {
+                *o = emit(epilogue, acc_at(i, a), i % n);
+            }
+            scratch.give_i32(prod);
+            Tensor::new(shape, out)
+        }
+    }
+}
+
+/// Integer-domain conv: `i8` weight panels per group, `i32` (or resident
+/// `i8`) im2col + accumulate, fused `MultiThreshold` in the scatter loop.
 #[derive(Debug)]
 pub struct QuantConv {
     p: ConvParams,
@@ -159,6 +300,7 @@ pub struct QuantConv {
     in_lo: f64,
     in_hi: f64,
     epilogue: Option<QThreshold>,
+    out_dtype: DType,
 }
 
 impl QuantConv {
@@ -207,6 +349,7 @@ impl QuantConv {
             in_lo: r.lo,
             in_hi: r.hi,
             epilogue: None,
+            out_dtype: DType::F32,
         })
     }
 
@@ -224,7 +367,23 @@ impl QuantConv {
         self.epilogue.is_some()
     }
 
-    /// Execute on an NCHW input of any batch size.
+    /// Narrowest container the kernel can emit without changing values.
+    pub(crate) fn preferred_out_dtype(&self) -> DType {
+        preferred_out(&self.epilogue)
+    }
+
+    /// Container the residency pass chose for this kernel's output.
+    pub(crate) fn set_out_dtype(&mut self, dt: DType) {
+        self.out_dtype = dt;
+    }
+
+    /// The output container (f32 unless the residency pass chose tighter).
+    pub fn out_dtype(&self) -> DType {
+        self.out_dtype
+    }
+
+    /// Execute on an NCHW input (f32, or integer-resident) of any batch
+    /// size.
     pub fn run(&self, x: &Tensor, scratch: &mut ScratchArena) -> Result<Tensor> {
         ensure!(x.rank() == 4, "Conv input must be NCHW, got {:?}", x.shape());
         let (n, c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
@@ -234,25 +393,103 @@ impl QuantConv {
             self.cg,
             self.p.group
         );
-        let xs = x.as_f32()?;
-        let mut xi = scratch.take_i32_uninit(xs.len());
-        to_i32_checked(xs, self.in_lo, self.in_hi, &mut xi)?;
         let p = &self.p;
         let oh = conv_out_dim(h, p.kh, p.stride_h, p.pads[0], p.pads[2]);
         let ow = conv_out_dim(w, p.kw, p.stride_w, p.pads[1], p.pads[3]);
+        let out_shape = vec![n, self.m, oh, ow];
+        let out_len = n * self.m * oh * ow;
+        match self.out_dtype {
+            DType::I8 => {
+                let mut out = scratch.take_i8_uninit(out_len);
+                self.conv_into(x, (n, c, h, w, oh, ow), scratch, |acc, oc| {
+                    emit(&self.epilogue, acc, oc) as i8
+                }, &mut out)?;
+                Ok(Tensor::new_i8(out_shape, out))
+            }
+            DType::I32 => {
+                let mut out = scratch.take_i32_uninit(out_len);
+                self.conv_into(x, (n, c, h, w, oh, ow), scratch, |acc, oc| {
+                    emit(&self.epilogue, acc, oc) as i32
+                }, &mut out)?;
+                Ok(Tensor::new_i32(out_shape, out))
+            }
+            _ => {
+                let mut out = scratch.take_uninit(out_len);
+                self.conv_into(x, (n, c, h, w, oh, ow), scratch, |acc, oc| {
+                    emit(&self.epilogue, acc, oc)
+                }, &mut out)?;
+                Ok(Tensor::new(out_shape, out))
+            }
+        }
+    }
+
+    /// Core walk shared by every container combination: pick the
+    /// activation path by input dtype, then im2col + qgemm + scatter per
+    /// group, writing through `f`.
+    fn conv_into<T: Copy>(
+        &self,
+        x: &Tensor,
+        dims: (usize, usize, usize, usize, usize, usize),
+        scratch: &mut ScratchArena,
+        f: impl Fn(i32, usize) -> T,
+        out: &mut [T],
+    ) -> Result<()> {
+        let (n, _c, _h, _w, oh, ow) = dims;
         let rows = n * oh * ow;
-        let mut out = scratch.take_uninit(n * self.m * oh * ow);
-        let mut cols = scratch.take_i32(rows * self.k);
         let mut prod = scratch.take_i32(rows * self.mg);
+        match x.dtype() {
+            DType::I8 => {
+                // resident i8 activations: 1-byte im2col panels
+                let src = x.as_i8()?;
+                let mut cols = scratch.take_i8(rows * self.k);
+                self.groups(src, dims, &mut cols, &mut prod, qgemm_prepacked_i8, &f, out);
+                scratch.give_i8(cols);
+            }
+            DType::I32 => {
+                let src = x.as_i32()?;
+                let mut cols = scratch.take_i32(rows * self.k);
+                self.groups(src, dims, &mut cols, &mut prod, qgemm_prepacked, &f, out);
+                scratch.give_i32(cols);
+            }
+            _ => {
+                // float boundary: validate against the compile-time range
+                // proof, then run on the converted i32 activations
+                let xs = x.as_f32()?;
+                let mut xi = scratch.take_i32_uninit(xs.len());
+                to_i32_checked(xs, self.in_lo, self.in_hi, &mut xi)?;
+                let mut cols = scratch.take_i32(rows * self.k);
+                self.groups(&xi, dims, &mut cols, &mut prod, qgemm_prepacked, &f, out);
+                scratch.give_i32(cols);
+                scratch.give_i32(xi);
+            }
+        }
+        scratch.give_i32(prod);
+        Ok(())
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn groups<A: Copy, T: Copy>(
+        &self,
+        src: &[A],
+        dims: (usize, usize, usize, usize, usize, usize),
+        cols: &mut [A],
+        prod: &mut [i32],
+        gemm: impl Fn(usize, usize, &PackedBi8, &[A], &mut [i32]),
+        f: &impl Fn(i32, usize) -> T,
+        out: &mut [T],
+    ) {
+        let (n, c, h, w, oh, ow) = dims;
+        let p = &self.p;
+        let rows = n * oh * ow;
         for g in 0..p.group {
             if g > 0 {
                 prod.fill(0); // qgemm accumulates; cols' padding zeros persist
             }
             im2col_group_into(
-                &xi, n, c, h, w, g * self.cg, self.cg, p.kh, p.kw, p.stride_h, p.stride_w,
-                p.pads, &mut cols,
+                src, n, c, h, w, g * self.cg, self.cg, p.kh, p.kw, p.stride_h, p.stride_w,
+                p.pads, cols,
             );
-            qgemm_prepacked(rows, self.k, &self.weights[g], &cols, &mut prod);
+            gemm(rows, self.k, &self.weights[g], &*cols, &mut *prod);
             // scatter [rows, mg] -> NCHW, fusing the threshold per element
             for b in 0..n {
                 for mi in 0..self.mg {
@@ -260,15 +497,11 @@ impl QuantConv {
                     let dst = (b * self.m + oc) * oh * ow;
                     let src0 = b * oh * ow;
                     for pix in 0..oh * ow {
-                        out[dst + pix] = emit(&self.epilogue, prod[(src0 + pix) * self.mg + mi], oc);
+                        out[dst + pix] = f(prod[(src0 + pix) * self.mg + mi], oc);
                     }
                 }
             }
         }
-        scratch.give_i32(xi);
-        scratch.give_i32(cols);
-        scratch.give_i32(prod);
-        Ok(Tensor::new(vec![n, self.m, oh, ow], out))
     }
 }
 
@@ -284,6 +517,7 @@ pub struct QuantGemm {
     in_lo: f64,
     in_hi: f64,
     epilogue: Option<QThreshold>,
+    out_dtype: DType,
 }
 
 impl QuantGemm {
@@ -348,6 +582,7 @@ impl QuantGemm {
             in_lo: r.lo,
             in_hi: r.hi,
             epilogue: None,
+            out_dtype: DType::F32,
         })
     }
 
@@ -364,27 +599,36 @@ impl QuantGemm {
         self.epilogue.is_some()
     }
 
+    /// Narrowest container the kernel can emit without changing values.
+    pub(crate) fn preferred_out_dtype(&self) -> DType {
+        preferred_out(&self.epilogue)
+    }
+
+    /// Container the residency pass chose for this kernel's output.
+    pub(crate) fn set_out_dtype(&mut self, dt: DType) {
+        self.out_dtype = dt;
+    }
+
+    /// The output container (f32 unless the residency pass chose tighter).
+    pub fn out_dtype(&self) -> DType {
+        self.out_dtype
+    }
+
     pub fn run(&self, a: &Tensor, scratch: &mut ScratchArena) -> Result<Tensor> {
         ensure!(a.rank() == 2, "matmul2d wants rank-2");
         let (m, ak) = (a.shape()[0], a.shape()[1]);
         ensure!(ak == self.k, "matmul2d inner dim mismatch {ak} vs {}", self.k);
-        let xs = a.as_f32()?;
-        let mut xi = scratch.take_i32_uninit(xs.len());
-        to_i32_checked(xs, self.in_lo, self.in_hi, &mut xi)?;
         let mut prod = scratch.take_i32(m * self.n);
-        qgemm_prepacked(m, self.k, &self.bp, &xi, &mut prod);
-        let mut out = scratch.take_uninit(m * self.n);
-        for (i, (o, &acc)) in out.iter_mut().zip(prod.iter()).enumerate() {
-            let oc = i % self.n;
-            let acc = match &self.bias {
-                Some(bv) => acc + bv[oc],
-                None => acc,
-            };
-            *o = emit(&self.epilogue, acc, oc);
-        }
-        scratch.give_i32(xi);
-        scratch.give_i32(prod);
-        Ok(Tensor::new(vec![m, self.n], out))
+        qgemm_any(a, m, self.k, &self.bp, self.in_lo, self.in_hi, &mut prod, scratch)?;
+        Ok(emit_rowmajor(
+            vec![m, self.n],
+            prod,
+            self.n,
+            self.bias.as_deref(),
+            &self.epilogue,
+            self.out_dtype,
+            scratch,
+        ))
     }
 }
 
@@ -398,6 +642,7 @@ pub struct QuantMatMul {
     in_lo: f64,
     in_hi: f64,
     epilogue: Option<QThreshold>,
+    out_dtype: DType,
 }
 
 impl QuantMatMul {
@@ -419,6 +664,7 @@ impl QuantMatMul {
             in_lo: r.lo,
             in_hi: r.hi,
             epilogue: None,
+            out_dtype: DType::F32,
         })
     }
 
@@ -435,6 +681,21 @@ impl QuantMatMul {
         self.epilogue.is_some()
     }
 
+    /// Narrowest container the kernel can emit without changing values.
+    pub(crate) fn preferred_out_dtype(&self) -> DType {
+        preferred_out(&self.epilogue)
+    }
+
+    /// Container the residency pass chose for this kernel's output.
+    pub(crate) fn set_out_dtype(&mut self, dt: DType) {
+        self.out_dtype = dt;
+    }
+
+    /// The output container (f32 unless the residency pass chose tighter).
+    pub fn out_dtype(&self) -> DType {
+        self.out_dtype
+    }
+
     pub fn run(&self, a: &Tensor, scratch: &mut ScratchArena) -> Result<Tensor> {
         if a.rank() > 2 && self.epilogue.is_some() {
             // the generic MultiThreshold op only supports rank-2/4 inputs;
@@ -445,20 +706,154 @@ impl QuantMatMul {
         let ak = *a.shape().last().unwrap();
         ensure!(ak == self.k, "matmul2d inner dim mismatch {ak} vs {}", self.k);
         let rows = a.numel() / ak;
-        let xs = a.as_f32()?;
-        let mut xi = scratch.take_i32_uninit(xs.len());
-        to_i32_checked(xs, self.in_lo, self.in_hi, &mut xi)?;
         let mut prod = scratch.take_i32(rows * self.n);
-        qgemm_prepacked(rows, self.k, &self.bp, &xi, &mut prod);
-        let mut out = scratch.take_uninit(rows * self.n);
-        for (i, (o, &acc)) in out.iter_mut().zip(prod.iter()).enumerate() {
-            *o = emit(&self.epilogue, acc, i % self.n);
-        }
-        scratch.give_i32(xi);
-        scratch.give_i32(prod);
+        qgemm_any(a, rows, self.k, &self.bp, self.in_lo, self.in_hi, &mut prod, scratch)?;
         let mut out_shape = a.shape().to_vec();
         *out_shape.last_mut().unwrap() = self.n;
-        Ok(Tensor::new(out_shape, out))
+        Ok(emit_rowmajor(out_shape, prod, self.n, None, &self.epilogue, self.out_dtype, scratch))
+    }
+}
+
+/// A standalone `MultiThreshold` step compiled for the resident-integer
+/// plan: constant sorted threshold rows (in the producer's f32 domain),
+/// binary-searched per element, with the level written directly into its
+/// proven container — or f32, in which case it replays the generic op
+/// verbatim.
+///
+/// This is the tier's **entry boundary**: a streamlined graph's input
+/// `MultiThreshold` ingests the f32 graph edge and emits resident
+/// `i8`/`i32` levels in one pass, so no downstream quantized kernel ever
+/// sees a float activation. Integer-resident *inputs* are also accepted
+/// (fuse-disabled plans chain integer kernels through standalone
+/// thresholds): the value converts to f32 for the row search — exact
+/// below `2^24` — keeping bit parity with the generic op.
+#[derive(Debug)]
+pub struct ThresholdKernel {
+    channels: usize,
+    steps: usize,
+    rows: Vec<f32>,
+    out_scale: f32,
+    out_bias: f32,
+    out_dtype: DType,
+}
+
+impl ThresholdKernel {
+    /// Compile a standalone `MultiThreshold` with constant thresholds.
+    /// Declines (`None`) on anything the generic op would reject or that
+    /// it handles differently (NHWC layout, unsorted rows) — the step then
+    /// stays generic with full error parity.
+    pub(crate) fn try_build(node: &Node, th: &Tensor) -> Option<ThresholdKernel> {
+        if node.op_type != "MultiThreshold" || node.inputs.len() != 2 || node.outputs.len() != 1 {
+            return None;
+        }
+        if node.attr_str_or("data_layout", "NCHW") != "NCHW" {
+            return None;
+        }
+        if th.rank() != 2 {
+            return None;
+        }
+        let (tc, tt) = (th.shape()[0], th.shape()[1]);
+        if tt == 0 {
+            return None;
+        }
+        let vals = th.as_f32().ok()?;
+        for c in 0..tc {
+            let row = &vals[c * tt..(c + 1) * tt];
+            if !row.windows(2).all(|w| w[0] <= w[1]) {
+                return None; // unsorted: generic op reports the error
+            }
+        }
+        Some(ThresholdKernel {
+            channels: tc,
+            steps: tt,
+            rows: vals.to_vec(),
+            out_scale: node.attr_float_or("out_scale", 1.0),
+            out_bias: node.attr_float_or("out_bias", 0.0),
+            out_dtype: DType::F32,
+        })
+    }
+
+    /// Narrowest container that exactly holds every emitted level.
+    pub(crate) fn preferred_out_dtype(&self) -> DType {
+        level_container(self.out_scale, self.out_bias, self.steps)
+    }
+
+    /// Container the residency pass chose for this kernel's output.
+    pub(crate) fn set_out_dtype(&mut self, dt: DType) {
+        self.out_dtype = dt;
+    }
+
+    /// The output container (f32 unless the residency pass chose tighter).
+    pub fn out_dtype(&self) -> DType {
+        self.out_dtype
+    }
+
+    #[inline]
+    fn level(&self, v: f32, c: usize) -> f32 {
+        let row = &self.rows[c * self.steps..(c + 1) * self.steps];
+        // identical expression to ops::multithreshold::multi_threshold
+        self.out_scale * threshold_count(row, v) as f32 + self.out_bias
+    }
+
+    pub fn run(&self, x: &Tensor, scratch: &mut ScratchArena) -> Result<Tensor> {
+        // same shape/layout contract as the generic op (NCHW enforced at
+        // compile time)
+        let channels = match x.rank() {
+            2 | 4 => x.shape()[1],
+            r => anyhow::bail!("unsupported MultiThreshold input rank {r} / layout NCHW"),
+        };
+        ensure!(
+            self.channels == channels || self.channels == 1,
+            "threshold channels {} != input channels {channels}",
+            self.channels
+        );
+        enum Src<'a> {
+            F(&'a [f32]),
+            B(&'a [i8]),
+            W(&'a [i32]),
+        }
+        let src = match x.dtype() {
+            DType::I8 => Src::B(x.as_i8()?),
+            DType::I32 => Src::W(x.as_i32()?),
+            _ => Src::F(x.as_f32()?),
+        };
+        // value at flat index i, in the f32 compare domain (exact for the
+        // < 2^24 integer-resident containers)
+        let at = |i: usize| -> f32 {
+            match &src {
+                Src::F(v) => v[i],
+                Src::B(v) => f32::from(v[i]),
+                Src::W(v) => v[i] as f32,
+            }
+        };
+        let inner = if x.rank() == 4 { x.shape()[2] * x.shape()[3] } else { 1 };
+        let chan_of =
+            |flat: usize| -> usize { if self.channels == 1 { 0 } else { (flat / inner) % channels } };
+        let numel = x.numel();
+        let shape = x.shape().to_vec();
+        Ok(match self.out_dtype {
+            DType::I8 => {
+                let mut out = scratch.take_i8_uninit(numel);
+                for (i, o) in out.iter_mut().enumerate() {
+                    *o = self.level(at(i), chan_of(i)) as i8;
+                }
+                Tensor::new_i8(shape, out)
+            }
+            DType::I32 => {
+                let mut out = scratch.take_i32_uninit(numel);
+                for (i, o) in out.iter_mut().enumerate() {
+                    *o = self.level(at(i), chan_of(i)) as i32;
+                }
+                Tensor::new_i32(shape, out)
+            }
+            _ => {
+                let mut out = scratch.take_uninit(numel);
+                for (i, o) in out.iter_mut().enumerate() {
+                    *o = self.level(at(i), chan_of(i));
+                }
+                Tensor::new(shape, out)
+            }
+        })
     }
 }
 
@@ -502,6 +897,59 @@ mod tests {
     }
 
     #[test]
+    fn resident_integer_inputs_match_float_inputs() {
+        // the same activations fed as f32, i32-resident, and i8-resident
+        // containers produce identical results through every input path
+        let node = Node::new("MatMul", &["a", "b"], &["y"]);
+        let af = int_tensor(vec![5, 33], 4, 7);
+        let b = int_tensor(vec![33, 9], 5, 3);
+        let want = ops::linalg::matmul(&node, &[&af, &b]).unwrap();
+        let qm = QuantMatMul::try_build(&b, int_range(-7.0, 7.0)).unwrap();
+        let mut scratch = ScratchArena::new();
+        let a32 = Tensor::new_i32(
+            af.shape().to_vec(),
+            af.as_f32().unwrap().iter().map(|&v| v as i32).collect(),
+        );
+        let a8 = Tensor::new_i8(
+            af.shape().to_vec(),
+            af.as_f32().unwrap().iter().map(|&v| v as i8).collect(),
+        );
+        assert_eq!(qm.run(&af, &mut scratch).unwrap(), want[0]);
+        assert_eq!(qm.run(&a32, &mut scratch).unwrap(), want[0]);
+        assert_eq!(qm.run(&a8, &mut scratch).unwrap(), want[0]);
+    }
+
+    #[test]
+    fn integer_emission_matches_f32_emission() {
+        // i8/i32 output containers hold exactly the f32 values
+        let mm = Node::new("MatMul", &["a", "b"], &["acc"]);
+        let mt = Node::new("MultiThreshold", &["acc", "t"], &["y"])
+            .with_attr("out_scale", 1.0f32)
+            .with_attr("out_bias", -2.0f32);
+        let a = int_tensor(vec![3, 16], 6, 7);
+        let b = int_tensor(vec![16, 4], 7, 1);
+        let th = Tensor::new(vec![1, 3], vec![-5.0, 0.0, 5.0]);
+        let mut qm = QuantMatMul::try_build(&b, int_range(-7.0, 7.0)).unwrap();
+        let qt = QThreshold::try_build(&mt, &th, qm.out_channels()).unwrap();
+        qm.set_epilogue(qt);
+        assert_eq!(qm.preferred_out_dtype(), DType::I8, "levels in [-2, 1] fit i8");
+        let mut scratch = ScratchArena::new();
+        let yf = qm.run(&a, &mut scratch).unwrap();
+        qm.set_out_dtype(DType::I8);
+        let y8 = qm.run(&a, &mut scratch).unwrap();
+        assert_eq!(y8.dtype(), DType::I8);
+        let as_f: Vec<f32> = y8.as_i8().unwrap().iter().map(|&v| f32::from(v)).collect();
+        assert_eq!(as_f.as_slice(), yf.as_f32().unwrap());
+        qm.set_out_dtype(DType::I32);
+        let y32 = qm.run(&a, &mut scratch).unwrap();
+        let as_f: Vec<f32> = y32.as_i32().unwrap().iter().map(|&v| v as f32).collect();
+        assert_eq!(as_f.as_slice(), yf.as_f32().unwrap());
+        // without an epilogue the raw accumulator prefers i32
+        let qm2 = QuantMatMul::try_build(&b, int_range(-7.0, 7.0)).unwrap();
+        assert_eq!(qm2.preferred_out_dtype(), DType::I32);
+    }
+
+    #[test]
     fn quant_conv_matches_float_conv_exactly() {
         let node = Node::new("Conv", &["x", "w"], &["y"])
             .with_attr("kernel_shape", vec![3i64, 3])
@@ -512,6 +960,29 @@ mod tests {
         let qc = QuantConv::try_build(&node, &w, int_range(-15.0, 15.0)).unwrap();
         let got = qc.run(&x, &mut ScratchArena::new()).unwrap();
         assert_eq!(got, want[0]);
+    }
+
+    #[test]
+    fn quant_conv_resident_i8_input_matches() {
+        let node = Node::new("Conv", &["x", "w"], &["y"])
+            .with_attr("kernel_shape", vec![2i64, 2]);
+        let xf = int_tensor(vec![2, 3, 5, 5], 8, 7);
+        let w = int_tensor(vec![4, 3, 2, 2], 9, 2);
+        let want = ops::linalg::conv(&node, &[&xf, &w]).unwrap();
+        let qc = QuantConv::try_build(&node, &w, int_range(-7.0, 7.0)).unwrap();
+        let mut scratch = ScratchArena::new();
+        let x8 = Tensor::new_i8(
+            xf.shape().to_vec(),
+            xf.as_f32().unwrap().iter().map(|&v| v as i8).collect(),
+        );
+        let x32 = Tensor::new_i32(
+            xf.shape().to_vec(),
+            xf.as_f32().unwrap().iter().map(|&v| v as i32).collect(),
+        );
+        assert_eq!(qc.run(&x8, &mut scratch).unwrap(), want[0]);
+        assert_eq!(qc.run(&x32, &mut scratch).unwrap(), want[0]);
+        // warm reruns through the pooled i8 panels stay exact
+        assert_eq!(qc.run(&x8, &mut scratch).unwrap(), want[0]);
     }
 
     #[test]
@@ -623,5 +1094,66 @@ mod tests {
         let ok = Tensor::new(vec![1, 1], vec![0.0]);
         assert!(QThreshold::try_build(&nhwc, &ok, 4).is_none());
         assert!(QThreshold::try_build(&mt, &ok, 4).is_some());
+    }
+
+    #[test]
+    fn threshold_kernel_matches_generic_op() {
+        // standalone MT with fractional thresholds (the float graph edge)
+        // but integral out params: emits integer levels exactly
+        let mt = Node::new("MultiThreshold", &["x", "t"], &["y"])
+            .with_attr("out_scale", 1.0f32)
+            .with_attr("out_bias", 0.0f32);
+        let th = Tensor::new(vec![2, 3], vec![0.5, 1.5, 2.5, -0.25, 0.75, 1.75]);
+        let x = Tensor::new(
+            vec![2, 2, 2, 2],
+            (0..16).map(|v| v as f32 * 0.4 - 1.3).collect(),
+        );
+        let want = ops::multithreshold::multi_threshold(&mt, &[&x, &th]).unwrap();
+        let mut tk = ThresholdKernel::try_build(&mt, &th).unwrap();
+        assert_eq!(tk.preferred_out_dtype(), DType::I8, "levels 0..=3 fit i8");
+        let mut scratch = ScratchArena::new();
+        // f32 emission replays the generic op bit for bit
+        let got_f = tk.run(&x, &mut scratch).unwrap();
+        assert_eq!(got_f, want[0]);
+        // i8 emission holds the identical values
+        tk.set_out_dtype(DType::I8);
+        let got8 = tk.run(&x, &mut scratch).unwrap();
+        assert_eq!(got8.dtype(), DType::I8);
+        let as_f: Vec<f32> = got8.as_i8().unwrap().iter().map(|&v| f32::from(v)).collect();
+        assert_eq!(as_f.as_slice(), want[0].as_f32().unwrap());
+        // integer-resident input: compare domain converts exactly
+        let xi = Tensor::new_i32(vec![1, 2], vec![1, 2]);
+        let want_i =
+            ops::multithreshold::multi_threshold(&mt, &[&Tensor::new(vec![1, 2], vec![1.0, 2.0]), &th])
+                .unwrap();
+        tk.set_out_dtype(DType::F32);
+        assert_eq!(tk.run(&xi, &mut scratch).unwrap(), want_i[0]);
+        // rank/channel errors keep generic-op parity
+        let bad_rank = Tensor::new(vec![4], vec![0.0; 4]);
+        let err = tk.run(&bad_rank, &mut scratch).unwrap_err().to_string();
+        assert!(err.contains("unsupported MultiThreshold input rank"), "{err}");
+        let bad_ch = Tensor::new(vec![1, 3], vec![0.0; 3]);
+        let err = tk.run(&bad_ch, &mut scratch).unwrap_err().to_string();
+        assert!(err.contains("threshold channels"), "{err}");
+    }
+
+    #[test]
+    fn threshold_kernel_container_boundaries() {
+        // 255 steps with bias 0 -> levels 0..=255: i8 cannot hold them
+        let mt = Node::new("MultiThreshold", &["x", "t"], &["y"]);
+        let th = Tensor::new(vec![1, 255], (0..255).map(|v| v as f32 + 0.5).collect());
+        let tk = ThresholdKernel::try_build(&mt, &th).unwrap();
+        assert_eq!(tk.preferred_out_dtype(), DType::I32);
+        // 127 steps stays i8
+        let th8 = Tensor::new(vec![1, 127], (0..127).map(|v| v as f32 + 0.5).collect());
+        let tk8 = ThresholdKernel::try_build(&mt, &th8).unwrap();
+        assert_eq!(tk8.preferred_out_dtype(), DType::I8);
+        // fractional out_scale keeps f32
+        let mtf = Node::new("MultiThreshold", &["x", "t"], &["y"]).with_attr("out_scale", 0.5f32);
+        let tkf = ThresholdKernel::try_build(&mtf, &th8).unwrap();
+        assert_eq!(tkf.preferred_out_dtype(), DType::F32);
+        // unsorted rows decline
+        let bad = Tensor::new(vec![1, 2], vec![3.0, 1.0]);
+        assert!(ThresholdKernel::try_build(&mt, &bad).is_none());
     }
 }

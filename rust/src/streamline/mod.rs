@@ -284,7 +284,7 @@ fn build(g: &ModelGraph, report: &mut StreamlineReport) -> Result<Option<ModelGr
         let nm = if node.name.is_empty() { node.op_type.clone() } else { node.name.clone() };
         let min_arity = match node.op_type.as_str() {
             "Quant" => 4,
-            "BipolarQuant" | "MatMul" | "Conv" => 2,
+            "BipolarQuant" | "MatMul" | "Conv" | "Gemm" => 2,
             _ => 1,
         };
         if node.inputs.len() < min_arity || node.outputs.is_empty() {
@@ -396,7 +396,7 @@ fn build(g: &ModelGraph, report: &mut StreamlineReport) -> Result<Option<ModelGr
                 ));
             }
             // ---------------- integer linear ops -------------------------
-            "MatMul" | "Conv" => {
+            "MatMul" | "Conv" | "Gemm" => {
                 let Some(w) = lookup(&interp, &node.inputs[1]) else {
                     block!("'{nm}': weights are not integer-quantized constants");
                 };
@@ -424,15 +424,60 @@ fn build(g: &ModelGraph, report: &mut StreamlineReport) -> Result<Option<ModelGr
                         block!("'{nm}': channels-last conv unsupported");
                     }
                 }
+                let scale = a.scale[0] * w.scale[0];
                 let mut n = node.clone();
                 for inp in n.inputs.iter_mut() {
                     *inp = resolve(&rename, inp);
                 }
+                let mut note = String::new();
+                if node.op_type == "Gemm" {
+                    // alpha scales the integer product off the grid
+                    let alpha = f64::from(node.attr_float_or("alpha", 1.0));
+                    if alpha != 1.0 {
+                        block!("'{nm}': Gemm alpha {alpha} != 1 leaves the integer grid");
+                    }
+                    // an integer-provable bias folds into the i32
+                    // accumulator: beta * C must land on the accumulator
+                    // grid s_a * s_w exactly
+                    if let Some(cname) =
+                        node.inputs.get(2).map(String::as_str).filter(|s| !s.is_empty())
+                    {
+                        let Some(ct) = g.initializer(cname) else {
+                            block!("'{nm}': Gemm bias must be a constant initializer");
+                        };
+                        let cv = match ct.as_f32() {
+                            Ok(v) => v,
+                            Err(_) => block!("'{nm}': non-f32 Gemm bias"),
+                        };
+                        let beta = f64::from(node.attr_float_or("beta", 1.0));
+                        let mut ints = Vec::with_capacity(cv.len());
+                        let (mut lo, mut hi) = (0.0f64, 0.0f64);
+                        for &v in cv {
+                            let ci = beta * f64::from(v) / scale;
+                            if ci.fract() != 0.0 || ci.abs() >= crate::tensor::F32_EXACT_INT_LIMIT {
+                                block!(
+                                    "'{nm}': Gemm bias beta*C is not on the integer \
+                                     accumulator grid (scale {scale})"
+                                );
+                            }
+                            lo = lo.min(ci);
+                            hi = hi.max(ci);
+                            ints.push(ci as f32);
+                        }
+                        let cint = g.fresh_name(&format!("{}_ibias", node.outputs[0]));
+                        new_inits.insert(cint.clone(), Tensor::new(ct.shape().to_vec(), ints));
+                        weight_dtypes.push((cint.clone(), DataType::smallest_covering(lo, hi)));
+                        n.inputs[2] = cint;
+                        if beta != 1.0 {
+                            n.attrs.insert("beta".to_string(), crate::ir::AttrValue::Float(1.0));
+                        }
+                        note = ", integer bias folded into the accumulator".to_string();
+                    }
+                }
                 nodes.push(n);
-                let scale = a.scale[0] * w.scale[0];
                 interp.insert(node.outputs[0].clone(), Affine::scalar_int(scale));
                 report.lowered.push(format!(
-                    "{nm:<24} {} -> integer accumulator, scale {scale}",
+                    "{nm:<24} {} -> integer accumulator, scale {scale}{note}",
                     node.op_type
                 ));
             }
@@ -779,6 +824,98 @@ mod tests {
         for (a, b) in y0.as_f32().unwrap().iter().zip(y1.as_f32().unwrap()) {
             assert!((a - b).abs() <= 0.5 + 1e-6, "{a} vs {b}");
         }
+    }
+
+    /// Gemm-with-bias: an integer-provable `beta * C` folds into the i32
+    /// accumulator grid instead of blocking the lowering (ROADMAP "widen
+    /// streamlining" item).
+    #[test]
+    fn gemm_with_integer_bias_streamlines_and_runs_quantized() {
+        let mut b = crate::ir::GraphBuilder::new("gemmbias");
+        b.input("x", vec![1, 8]);
+        b.quant("x", "xq", 0.25, 0.0, 6.0, true, false, "ROUND");
+        b.initializer(
+            "w",
+            Tensor::new(vec![4, 8], (0..32).map(|v| ((v % 7) as f32 - 3.0) * 0.4).collect()),
+        );
+        b.quant("w", "wq", 0.5, 0.0, 3.0, true, true, "ROUND");
+        // accumulator grid is 0.25 * 0.5 = 0.125; beta*C/0.125 = [2,-4,0,8]
+        b.initializer("c", Tensor::new(vec![1, 4], vec![0.25, -0.5, 0.0, 1.0]));
+        b.node(
+            "Gemm",
+            &["xq", "wq", "c"],
+            &["y"],
+            &[("transB", crate::ir::AttrValue::Int(1))],
+        );
+        b.output("y", vec![1, 4]);
+        let g = b.finish().unwrap();
+        let att = try_streamline(&g).unwrap();
+        assert!(att.report.ok, "{}", att.report.render());
+        assert!(
+            att.report.lowered.iter().any(|l| l.contains("integer bias folded")),
+            "{}",
+            att.report.render()
+        );
+        let sg = att.graph;
+        // the rewritten bias initializer is integer-valued
+        let gemm = sg.nodes.iter().find(|n| n.op_type == "Gemm").unwrap();
+        let cint = &sg.initializers[&gemm.inputs[2]];
+        assert_eq!(cint.as_f32().unwrap(), &[2.0, -4.0, 0.0, 8.0]);
+        // dyadic scales end to end: bit-exact vs the original float graph
+        let mut rng = Rng::new(11);
+        for trial in 0..4 {
+            let x = random_tensor(&mut rng, vec![1, 8], -2.0, 2.0);
+            assert_eq!(run1(&g, &x), run1(&sg, &x), "trial {trial}");
+        }
+        // and the plan executes the Gemm on the quantized tier
+        let plan = ExecutionPlan::compile(&sg).unwrap();
+        assert!(plan.quant_kernel_count() >= 1, "{}", plan.summary());
+        let x = random_tensor(&mut rng, vec![1, 8], -2.0, 2.0);
+        let mut m = Map::new();
+        m.insert("x".to_string(), x);
+        assert_eq!(exec::interpret(&sg, &m).unwrap().outputs, plan.run(&m).unwrap());
+    }
+
+    #[test]
+    fn gemm_bias_off_the_accumulator_grid_blocks() {
+        let mut b = crate::ir::GraphBuilder::new("gemmbad");
+        b.input("x", vec![1, 4]);
+        b.quant("x", "xq", 0.25, 0.0, 4.0, true, false, "ROUND");
+        b.initializer("w", Tensor::new(vec![4, 2], vec![0.5; 8]));
+        b.quant("w", "wq", 0.5, 0.0, 3.0, true, true, "ROUND");
+        // 0.3 / 0.125 = 2.4: not on the accumulator grid
+        b.initializer("c", Tensor::new(vec![1, 2], vec![0.3, 0.5]));
+        b.node("Gemm", &["xq", "wq", "c"], &["y"], &[]);
+        b.output("y", vec![1, 2]);
+        let g = b.finish().unwrap();
+        let att = try_streamline(&g).unwrap();
+        assert!(!att.report.ok);
+        assert!(
+            att.report.blockers.iter().any(|b| b.contains("accumulator grid")),
+            "{}",
+            att.report.render()
+        );
+        // alpha != 1 blocks too
+        let mut b2 = crate::ir::GraphBuilder::new("gemmalpha");
+        b2.input("x", vec![1, 4]);
+        b2.quant("x", "xq", 0.5, 0.0, 4.0, true, false, "ROUND");
+        b2.initializer("w", Tensor::new(vec![4, 2], vec![0.5; 8]));
+        b2.quant("w", "wq", 0.5, 0.0, 3.0, true, true, "ROUND");
+        b2.node(
+            "Gemm",
+            &["xq", "wq"],
+            &["y"],
+            &[("alpha", crate::ir::AttrValue::Float(2.0))],
+        );
+        b2.output("y", vec![1, 2]);
+        let g2 = b2.finish().unwrap();
+        let att2 = try_streamline(&g2).unwrap();
+        assert!(!att2.report.ok);
+        assert!(
+            att2.report.blockers.iter().any(|b| b.contains("alpha")),
+            "{}",
+            att2.report.render()
+        );
     }
 
     #[test]

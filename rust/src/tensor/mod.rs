@@ -2,8 +2,18 @@
 //!
 //! QONNX's convention is that quantized values travel in float containers, so
 //! the executor is float-first: `Tensor` is a dense row-major f32 tensor with
-//! an optional i64 variant for shape-carrying tensors (`Shape`, `Gather`,
-//! `Reshape` targets). Broadcasting follows numpy/ONNX semantics.
+//! an i64 variant for shape-carrying tensors (`Shape`, `Gather`, `Reshape`
+//! targets). Broadcasting follows numpy/ONNX semantics.
+//!
+//! Since PR 5 the storage is **dtype-aware**: [`TensorData`] additionally
+//! carries `i8` and `i32` payloads so the compiled plan's quantized tier can
+//! keep activations *resident* in narrow integer containers between layers
+//! (a streamlined `MultiThreshold` emits its integer levels straight into an
+//! `i8`/`i32` buffer and the next integer GEMM consumes them without any
+//! float detour). The physical container is [`DType`] — distinct from the
+//! *logical* arbitrary-precision [`crate::datatypes::DataType`] annotation
+//! (`INT3` values live in an `I8` container, `INT17` in `I32`, and an
+//! un-streamlined graph keeps everything in `F32` exactly as before).
 
 mod broadcast;
 mod gemm;
@@ -15,14 +25,63 @@ pub use broadcast::{broadcast_shapes, broadcastable_to, BroadcastIter};
 pub use gemm::{gemm, gemm_prepacked, PackedB, GEMM_KC, GEMM_MC, GEMM_NC};
 pub use im2col::{conv_out_dim, im2col_group_into, im2col_nchw};
 pub use layout::{nchw_to_nhwc, nhwc_to_nchw};
-pub use qgemm::{qgemm_prepacked, PackedBi8};
+pub use qgemm::{qgemm_prepacked, qgemm_prepacked_i8, PackedBi8};
 
 use anyhow::{bail, ensure, Result};
 
-/// Element storage: f32 for data tensors, i64 for shape/index tensors.
+/// Largest magnitude exactly representable on the f32 integer grid
+/// (`2^24`). The single exactness bound shared by the quantized kernel
+/// tier's accumulator proofs ([`crate::plan`]) and streamlining's
+/// integer-grid admission checks ([`crate::streamline`]): integers below
+/// it round-trip through an f32 container bit-exactly.
+pub const F32_EXACT_INT_LIMIT: f64 = 16_777_216.0;
+
+/// Physical element container of a [`Tensor`] (and of a compiled-plan
+/// slot). This is storage, not semantics: the *logical* quantized type
+/// (`INT3`, `UINT2`, ...) is the [`crate::datatypes::DataType`]
+/// annotation; `DType` says which Rust vector holds the values.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum DType {
+    F32,
+    I8,
+    I32,
+    I64,
+}
+
+impl DType {
+    /// Bytes per element in this container.
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::I8 => 1,
+            DType::F32 | DType::I32 => 4,
+            DType::I64 => 8,
+        }
+    }
+
+    /// Short lowercase name (`f32`, `i8`, ...).
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I8 => "i8",
+            DType::I32 => "i32",
+            DType::I64 => "i64",
+        }
+    }
+}
+
+impl std::fmt::Display for DType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Element storage: f32 for data tensors, i64 for shape/index tensors,
+/// i8/i32 for integer-resident quantized activations (plan residency).
 #[derive(Debug, Clone, PartialEq)]
 pub enum TensorData {
     F32(Vec<f32>),
+    I8(Vec<i8>),
+    I32(Vec<i32>),
     I64(Vec<i64>),
 }
 
@@ -49,6 +108,18 @@ impl Tensor {
     pub fn new_i64(shape: Vec<usize>, data: Vec<i64>) -> Tensor {
         assert_eq!(shape.iter().product::<usize>(), data.len());
         Tensor { shape, data: TensorData::I64(data) }
+    }
+
+    /// New i8 tensor (integer-resident quantized activations).
+    pub fn new_i8(shape: Vec<usize>, data: Vec<i8>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: TensorData::I8(data) }
+    }
+
+    /// New i32 tensor (integer-resident accumulator-domain values).
+    pub fn new_i32(shape: Vec<usize>, data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: TensorData::I32(data) }
     }
 
     /// Scalar (rank-0) f32 tensor.
@@ -84,11 +155,21 @@ impl Tensor {
         matches!(self.data, TensorData::I64(_))
     }
 
-    /// Borrow f32 payload; errors on i64 tensors.
+    /// Physical element container of this tensor.
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            TensorData::F32(_) => DType::F32,
+            TensorData::I8(_) => DType::I8,
+            TensorData::I32(_) => DType::I32,
+            TensorData::I64(_) => DType::I64,
+        }
+    }
+
+    /// Borrow f32 payload; errors on non-f32 containers.
     pub fn as_f32(&self) -> Result<&[f32]> {
         match &self.data {
             TensorData::F32(v) => Ok(v),
-            TensorData::I64(_) => bail!("expected f32 tensor, found i64"),
+            _ => bail!("expected f32 tensor, found {}", self.dtype()),
         }
     }
 
@@ -96,15 +177,31 @@ impl Tensor {
     pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
         match &mut self.data {
             TensorData::F32(v) => Ok(v),
-            TensorData::I64(_) => bail!("expected f32 tensor, found i64"),
+            _ => bail!("expected f32 tensor, found {}", self.dtype()),
         }
     }
 
-    /// Borrow i64 payload; errors on f32 tensors.
+    /// Borrow i64 payload; errors on other containers.
     pub fn as_i64(&self) -> Result<&[i64]> {
         match &self.data {
             TensorData::I64(v) => Ok(v),
-            TensorData::F32(_) => bail!("expected i64 tensor, found f32"),
+            _ => bail!("expected i64 tensor, found {}", self.dtype()),
+        }
+    }
+
+    /// Borrow i8 payload; errors on other containers.
+    pub fn as_i8(&self) -> Result<&[i8]> {
+        match &self.data {
+            TensorData::I8(v) => Ok(v),
+            _ => bail!("expected i8 tensor, found {}", self.dtype()),
+        }
+    }
+
+    /// Borrow i32 payload; errors on other containers.
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => bail!("expected i32 tensor, found {}", self.dtype()),
         }
     }
 
@@ -114,17 +211,26 @@ impl Tensor {
         match &self.data {
             TensorData::I64(v) => v.clone(),
             TensorData::F32(v) => v.iter().map(|&x| x as i64).collect(),
+            TensorData::I8(v) => v.iter().map(|&x| i64::from(x)).collect(),
+            TensorData::I32(v) => v.iter().map(|&x| i64::from(x)).collect(),
         }
     }
 
     /// Take ownership of the f32 payload (buffer recycling: the plan
     /// executor returns released intermediates' storage to its
-    /// [`crate::plan::ScratchArena`]). `None` for i64 tensors.
+    /// [`crate::plan::ScratchArena`]). `None` for non-f32 tensors.
     pub fn into_f32_vec(self) -> Option<Vec<f32>> {
         match self.data {
             TensorData::F32(v) => Some(v),
-            TensorData::I64(_) => None,
+            _ => None,
         }
+    }
+
+    /// Take ownership of the raw storage (typed buffer recycling: the
+    /// plan executor routes each released intermediate's storage back to
+    /// the matching [`crate::plan::ScratchArena`] pool by dtype).
+    pub fn into_data(self) -> TensorData {
+        self.data
     }
 
     /// Payload as f64 values regardless of storage.
@@ -132,6 +238,8 @@ impl Tensor {
         match &self.data {
             TensorData::I64(v) => v.iter().map(|&x| x as f64).collect(),
             TensorData::F32(v) => v.iter().map(|&x| f64::from(x)).collect(),
+            TensorData::I8(v) => v.iter().map(|&x| f64::from(x)).collect(),
+            TensorData::I32(v) => v.iter().map(|&x| f64::from(x)).collect(),
         }
     }
 
@@ -141,6 +249,8 @@ impl Tensor {
         Ok(match &self.data {
             TensorData::F32(v) => v[0],
             TensorData::I64(v) => v[0] as f32,
+            TensorData::I8(v) => f32::from(v[0]),
+            TensorData::I32(v) => v[0] as f32,
         })
     }
 
@@ -354,5 +464,33 @@ mod tests {
         assert!(t.as_f32().is_err());
         assert_eq!(t.as_i64().unwrap(), &[1, -1, 256]);
         assert_eq!(t.to_f64_vec(), vec![1.0, -1.0, 256.0]);
+    }
+
+    #[test]
+    fn integer_container_tensors() {
+        let t8 = Tensor::new_i8(vec![2, 2], vec![-128, -1, 0, 127]);
+        assert_eq!(t8.dtype(), DType::I8);
+        assert_eq!(t8.as_i8().unwrap(), &[-128, -1, 0, 127]);
+        assert!(t8.as_f32().is_err());
+        assert_eq!(t8.to_i64_vec(), vec![-128, -1, 0, 127]);
+        assert_eq!(t8.to_f64_vec(), vec![-128.0, -1.0, 0.0, 127.0]);
+        // reshape is container-agnostic
+        let r = t8.reshape(vec![4]).unwrap();
+        assert_eq!(r.dtype(), DType::I8);
+        assert_eq!(r.shape(), &[4]);
+
+        let t32 = Tensor::new_i32(vec![1], vec![70000]);
+        assert_eq!(t32.dtype(), DType::I32);
+        assert_eq!(t32.as_i32().unwrap(), &[70000]);
+        assert_eq!(t32.scalar_value().unwrap(), 70000.0);
+        match t32.into_data() {
+            TensorData::I32(v) => assert_eq!(v, vec![70000]),
+            other => panic!("wrong payload {other:?}"),
+        }
+        // f32 recycling path ignores integer containers
+        assert!(Tensor::new_i8(vec![1], vec![1]).into_f32_vec().is_none());
+        assert_eq!(DType::I8.size_bytes(), 1);
+        assert_eq!(DType::F32.size_bytes(), 4);
+        assert_eq!(format!("{}", DType::I32), "i32");
     }
 }

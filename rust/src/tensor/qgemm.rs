@@ -75,6 +75,25 @@ impl PackedBi8 {
 /// Threads split the row range for large problems; each output element is
 /// owned by exactly one thread. Exact for any order (integer arithmetic).
 pub fn qgemm_prepacked(m: usize, k: usize, bp: &PackedBi8, a: &[i32], out: &mut [i32]) {
+    qgemm_generic(m, k, bp, a, out);
+}
+
+/// [`qgemm_prepacked`] over **`i8` activations** — the resident-activation
+/// path: when the previous layer's `MultiThreshold` emitted its levels
+/// into an `i8` container, the activation panel read here is 1 byte per
+/// element instead of 4 (and the widening to `i32` happens in-register in
+/// the inner loop). Bit-identical to widening up front.
+pub fn qgemm_prepacked_i8(m: usize, k: usize, bp: &PackedBi8, a: &[i8], out: &mut [i32]) {
+    qgemm_generic(m, k, bp, a, out);
+}
+
+fn qgemm_generic<A: Copy + Into<i32> + Sync>(
+    m: usize,
+    k: usize,
+    bp: &PackedBi8,
+    a: &[A],
+    out: &mut [i32],
+) {
     debug_assert_eq!(bp.k, k);
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(out.len(), m * bp.n);
@@ -109,9 +128,10 @@ pub fn qgemm_prepacked(m: usize, k: usize, bp: &PackedBi8, a: &[i32], out: &mut 
 
 /// Serial blocked kernel over the rows in `out`, reading packed panels.
 /// Same MC -> KC -> NC -> row -> strip nest as the f32 kernel; the
-/// widening `i8 -> i32` happens on the panel strip inside the inner loop
-/// (the strip is contiguous, so the loop autovectorizes).
-fn qgemm_packed_rows(k: usize, a: &[i32], bp: &PackedBi8, out: &mut [i32]) {
+/// widening (`i8 -> i32` on the panel strip, and on the activation when it
+/// is `i8`-resident) happens inside the inner loop — the strip is
+/// contiguous, so the loop autovectorizes.
+fn qgemm_packed_rows<A: Copy + Into<i32>>(k: usize, a: &[A], bp: &PackedBi8, out: &mut [i32]) {
     let n = bp.n;
     if n == 0 {
         return;
@@ -128,6 +148,7 @@ fn qgemm_packed_rows(k: usize, a: &[i32], bp: &PackedBi8, out: &mut [i32]) {
                     let arow = &a[i * k + kc0..i * k + kc0 + kc_len];
                     let orow = &mut out[i * n + nc0..i * n + nc0 + nc_len];
                     for (kk, &av) in arow.iter().enumerate() {
+                        let av: i32 = av.into();
                         if av == 0 {
                             continue; // low-bit activations are often sparse
                         }
@@ -194,6 +215,21 @@ mod tests {
             let mut got = vec![0i32; m * n];
             qgemm_prepacked(m, k, &bp, &a, &mut got);
             assert_eq!(got, want, "qgemm diverged at m={m} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn i8_activation_path_matches_i32_path() {
+        for &(m, k, n) in &[(1usize, 7usize, 3usize), (13, 130, 17), (65, 257, 129)] {
+            let a8 = fill_i8(m * k, (m * 7 + n) as u64);
+            let a32: Vec<i32> = a8.iter().map(|&v| i32::from(v)).collect();
+            let b = fill_i8(k * n, (k * 3 + m) as u64);
+            let bp = PackedBi8::pack(k, n, &b);
+            let mut want = vec![0i32; m * n];
+            qgemm_prepacked(m, k, &bp, &a32, &mut want);
+            let mut got = vec![0i32; m * n];
+            qgemm_prepacked_i8(m, k, &bp, &a8, &mut got);
+            assert_eq!(got, want, "i8 activations diverged at m={m} k={k} n={n}");
         }
     }
 

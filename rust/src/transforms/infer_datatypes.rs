@@ -194,6 +194,7 @@ pub fn infer_ranges(graph: &ModelGraph) -> Result<BTreeMap<String, ValueRange>> 
                     _ => None,
                 }
             }
+            "Gemm" => gemm_range(graph, node, get(0), get(1), get(2)),
             _ => None,
         };
         if let Some(r) = out_range {
@@ -240,6 +241,47 @@ fn trunc_range(
         hi: hi.max(lo),
         integral: s == 1.0 && z.fract() == 0.0,
     })
+}
+
+/// Range rule for `Gemm`: `alpha * (A @ B) + beta * C` — the MatMul-style
+/// accumulator bound scaled by `alpha`, plus the (broadcast) `beta * C`
+/// interval when a C input is present. The reduction length comes from
+/// B's shape honoring `transB`. Integral only when the accumulator and
+/// scaled bias both stay on the step-1 grid.
+fn gemm_range(
+    graph: &ModelGraph,
+    node: &crate::ir::Node,
+    a: Option<ValueRange>,
+    b: Option<ValueRange>,
+    c: Option<ValueRange>,
+) -> Option<ValueRange> {
+    let (a, b) = (a?, b?);
+    let w_shape = graph.tensor_shape(&node.inputs[1])?;
+    if w_shape.len() != 2 {
+        return None;
+    }
+    let trans_b = node.attr_int_or("transB", 0) != 0;
+    let k = if trans_b { w_shape[1] } else { w_shape[0] };
+    let alpha = f64::from(node.attr_float_or("alpha", 1.0));
+    let cands = [a.lo * b.lo, a.lo * b.hi, a.hi * b.lo, a.hi * b.hi];
+    let plo = cands.iter().copied().fold(f64::INFINITY, f64::min);
+    let phi = cands.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let (acc_lo, acc_hi) = (plo.min(0.0) * k as f64, phi.max(0.0) * k as f64);
+    let (mut lo, mut hi) = (
+        (alpha * acc_lo).min(alpha * acc_hi),
+        (alpha * acc_lo).max(alpha * acc_hi),
+    );
+    let mut integral = a.integral && b.integral && alpha.fract() == 0.0;
+    let has_c = node.inputs.get(2).map(String::as_str).is_some_and(|s| !s.is_empty());
+    if has_c {
+        let c = c?; // C present but unconstrained: no claim at all
+        let beta = f64::from(node.attr_float_or("beta", 1.0));
+        let (blo, bhi) = ((beta * c.lo).min(beta * c.hi), (beta * c.lo).max(beta * c.hi));
+        lo += blo;
+        hi += bhi;
+        integral = integral && c.integral && beta.fract() == 0.0;
+    }
+    Some(ValueRange { lo, hi, integral })
 }
 
 /// Infer and annotate datatypes for all tensors. Returns true if any
@@ -434,6 +476,42 @@ mod tests {
         g.set_tensor_datatype("w", DataType::Ternary);
         infer_datatypes(&mut g).unwrap();
         assert_eq!(g.tensor_datatype("y"), DataType::Int(13));
+    }
+
+    #[test]
+    fn gemm_accumulator_range_with_bias() {
+        // int4 activations x [3,3]-integral weights (transB, k=16) plus an
+        // integral beta*C: acc in [-8*3*16, 7*3*16] + 2*[-5, 5]
+        let mut b = GraphBuilder::new("gemmacc");
+        b.input("x", vec![1, 16]);
+        b.quant("x", "xq", 1.0, 0.0, 4.0, true, false, "ROUND");
+        b.initializer("w", Tensor::full(vec![8, 16], 3.0)); // transB: [n, k]
+        b.initializer("c", Tensor::new(vec![1, 8], vec![5.0, -5.0, 0.0, 1.0, 2.0, 3.0, 4.0, -1.0]));
+        b.node(
+            "Gemm",
+            &["xq", "w", "c"],
+            &["y"],
+            &[
+                ("transB", crate::ir::AttrValue::Int(1)),
+                ("beta", crate::ir::AttrValue::Float(2.0)),
+            ],
+        );
+        b.output("y", vec![1, 8]);
+        let mut g = b.finish().unwrap();
+        cleanup(&mut g).unwrap();
+        let ranges = infer_ranges(&g).unwrap();
+        let r = ranges["y"];
+        assert!(r.integral, "integral accumulator + integral bias");
+        assert_eq!((r.lo, r.hi), (-8.0 * 3.0 * 16.0 - 10.0, 7.0 * 3.0 * 16.0 + 10.0));
+        // fractional beta drops the integral claim but keeps the bound
+        let mut g2 = g.clone();
+        for n in g2.nodes.iter_mut() {
+            if n.op_type == "Gemm" {
+                n.attrs.insert("beta".to_string(), crate::ir::AttrValue::Float(0.5));
+            }
+        }
+        let r2 = infer_ranges(&g2).unwrap()["y"];
+        assert!(!r2.integral);
     }
 
     #[test]

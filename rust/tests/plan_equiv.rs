@@ -8,7 +8,7 @@ use qonnx::coordinator::{Batcher, BatcherConfig, InferenceEngine, PlannedEngine}
 use qonnx::exec::{self, ExecOptions};
 use qonnx::ir::{AttrValue, GraphBuilder, ModelGraph};
 use qonnx::plan::{ExecutionPlan, PlanOptions, RunConfig, ShapeCheck};
-use qonnx::tensor::Tensor;
+use qonnx::tensor::{DType, Tensor};
 use qonnx::testutil::random_tensor;
 use qonnx::transforms;
 use qonnx::zoo::{self, keras_to_qonnx, rng::Rng, tfc, KerasModel, TfcParams};
@@ -342,6 +342,110 @@ fn streamlined_integer_plan_matches_interpreter_on_zoo() {
             }
         }
     }
+}
+
+/// The PR-5 acceptance case: in a streamlined plan, every intermediate
+/// slot between the first and the last quantized kernel is an integer
+/// slot (zero f32 intermediates — activations stay resident in `i8`/
+/// `i32` containers), and residency changes *traffic only*: the resident
+/// plan is byte-identical to the convert-per-call plan and the
+/// interpreter, batched included.
+#[test]
+fn streamlined_plans_keep_integer_residency() {
+    for name in ["TFC-w1a1", "TFC-w2a2", "CNV-w2a2"] {
+        let mut g = zoo::build(name, 1, 32).unwrap();
+        transforms::cleanup(&mut g).unwrap();
+        let sl = qonnx::streamline::try_streamline(&g).unwrap();
+        assert!(sl.report.ok, "{}", sl.report.render());
+        let sg = sl.graph;
+        let plan = ExecutionPlan::compile(&sg).unwrap();
+        assert!(
+            plan.resident_int_count() >= 2,
+            "'{name}' expected integer-resident values:\n{}",
+            plan.summary()
+        );
+
+        // the quantized-kernel span: every output slot of the first
+        // quantized step up to (excluding) the last quantized step must
+        // be an integer slot — the last kernel itself emits f32 for the
+        // residual de-scale edge, which is outside the region
+        let table = plan.step_table();
+        let qsteps: Vec<usize> = table
+            .iter()
+            .enumerate()
+            .filter(|(_, (tag, _))| tag.starts_with("Quant"))
+            .map(|(i, _)| i)
+            .collect();
+        assert!(qsteps.len() >= 2, "'{name}':\n{}", plan.summary());
+        let (first, last) = (qsteps[0], *qsteps.last().unwrap());
+        let dtypes = plan.slot_dtypes();
+        for (i, (tag, outs)) in table.iter().enumerate() {
+            if i < first || i >= last {
+                continue;
+            }
+            for slot in outs.iter().flatten() {
+                assert_ne!(
+                    dtypes[*slot as usize],
+                    DType::F32,
+                    "'{name}' step {i} ({tag}) allocated an f32 intermediate inside the \
+                     quantized region:\n{}",
+                    plan.summary()
+                );
+            }
+        }
+
+        // byte-identity: resident vs convert-per-call vs interpreter
+        let inputs = random_inputs(&sg, 47);
+        let got = plan.run(&inputs).unwrap();
+        let convert_opts = PlanOptions { int_residency: false, ..Default::default() };
+        let cplan = ExecutionPlan::compile_with(&sg, &convert_opts).unwrap();
+        assert_eq!(cplan.resident_int_count(), 0);
+        assert_eq!(cplan.run(&inputs).unwrap(), got, "'{name}': residency changed values");
+        assert_eq!(exec::interpret(&sg, &inputs).unwrap().outputs, got);
+    }
+}
+
+/// Back-to-back quantized layers hand activations over in a resident
+/// `i8` container (the i8-activation GEMM path), byte-identical both to
+/// the streamlined interpreter run and — all scales dyadic — to the
+/// original float graph.
+#[test]
+fn back_to_back_quantized_layers_hand_off_resident_i8() {
+    let mut b = GraphBuilder::new("i8handoff");
+    b.input("x", vec![2, 12]);
+    b.quant("x", "xq", 0.25, 0.0, 4.0, true, false, "ROUND");
+    b.initializer(
+        "w0",
+        Tensor::new(vec![12, 10], (0..120).map(|v| ((v % 9) as f32 - 4.0) * 0.6).collect()),
+    );
+    b.quant("w0", "w0q", 0.5, 0.0, 3.0, true, true, "ROUND");
+    b.node("MatMul", &["xq", "w0q"], &["h"], &[]);
+    b.quant("h", "hq", 0.5, 0.0, 4.0, true, false, "ROUND");
+    b.initializer(
+        "w1",
+        Tensor::new(vec![10, 4], (0..40).map(|v| ((v % 7) as f32 - 3.0) * 0.4).collect()),
+    );
+    b.quant("w1", "w1q", 0.5, 0.0, 3.0, true, true, "ROUND");
+    b.node("MatMul", &["hq", "w1q"], &["y"], &[]);
+    b.output("y", vec![2, 4]);
+    let g = b.finish().unwrap();
+
+    let sl = qonnx::streamline::try_streamline(&g).unwrap();
+    assert!(sl.report.ok, "{}", sl.report.render());
+    let plan = ExecutionPlan::compile(&sl.graph).unwrap();
+    assert!(plan.quant_kernel_count() >= 2, "{}", plan.summary());
+    // int4 levels fit i8: both the input MultiThreshold and the fused
+    // inter-layer threshold emit into i8 slots
+    assert!(
+        plan.slot_dtypes().contains(&DType::I8),
+        "expected a resident i8 handoff slot:\n{}",
+        plan.summary()
+    );
+    let inputs = random_inputs(&sl.graph, 53);
+    let got = plan.run(&inputs).unwrap();
+    assert_eq!(exec::interpret(&sl.graph, &inputs).unwrap().outputs, got);
+    // dyadic scales end to end: exact vs the original float graph too
+    assert_eq!(exec::interpret(&g, &inputs).unwrap().outputs, got);
 }
 
 /// Batched streamlined CNV: one quantized-plan invocation on a batch-4

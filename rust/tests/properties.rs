@@ -179,6 +179,63 @@ fn prop_multithreshold_equals_quant_on_grid() {
     });
 }
 
+/// Integer-residency container property: across random bit widths, zero
+/// points, and signedness, a streamlined `MultiThreshold`'s emitted
+/// levels always fit the container the residency pass declares — `i8`
+/// exactly when the level range `[qmin - z, qmax - z]` fits, `i32`
+/// otherwise — and the resident plan stays byte-identical to the
+/// interpreter (an overflowing container would wrap and diverge).
+#[test]
+fn prop_mt_levels_fit_declared_container() {
+    use qonnx::plan::ExecutionPlan;
+    use qonnx::tensor::DType;
+    for_all_seeds(20, |rng| {
+        let signed = rng.below(2) == 0;
+        let bw = if signed { 2.0 + rng.below(7) as f32 } else { 1.0 + rng.below(8) as f32 };
+        let z = if signed { 0.0 } else { rng.below(3) as f32 };
+        let s = [0.125f32, 0.25, 0.5, 1.0][rng.below(4)];
+        let mut b = qonnx::ir::GraphBuilder::new("mtfit");
+        b.input("x", vec![2, 9]);
+        b.quant("x", "xq", s, z, bw, signed, false, "ROUND");
+        b.initializer(
+            "w",
+            random_tensor(rng, vec![9, 4], -1.5, 1.5),
+        );
+        b.quant("w", "wq", 1.0, 0.0, 3.0, true, false, "ROUND");
+        b.node("MatMul", &["xq", "wq"], &["y"], &[]);
+        b.output("y", vec![2, 4]);
+        let g = b.finish().unwrap();
+        let att = qonnx::streamline::try_streamline(&g).unwrap();
+        assert!(att.report.ok, "{}", att.report.render());
+        let plan = ExecutionPlan::compile(&att.graph).unwrap();
+
+        // the declared container of the input MultiThreshold must cover
+        // its level range exactly
+        let (qmin, qmax) = quant_bounds(signed, false, f64::from(bw));
+        let (lo, hi) = (qmin - f64::from(z), qmax - f64::from(z));
+        let want = if lo >= -128.0 && hi <= 127.0 { DType::I8 } else { DType::I32 };
+        let table = plan.step_table();
+        let mt_tag = &table
+            .iter()
+            .find(|(tag, _)| tag.starts_with("Threshold"))
+            .unwrap_or_else(|| panic!("no Threshold step:\n{}", plan.summary()))
+            .0;
+        assert_eq!(
+            mt_tag,
+            &format!("Threshold({want})"),
+            "bw={bw} z={z} signed={signed}:\n{}",
+            plan.summary()
+        );
+
+        // byte-identity proves every emitted level fit its container
+        let mut inputs = std::collections::BTreeMap::new();
+        inputs.insert("x".to_string(), random_tensor(rng, vec![2, 9], -6.0, 6.0));
+        let got = plan.run(&inputs).unwrap();
+        let want_out = qonnx::exec::interpret(&att.graph, &inputs).unwrap();
+        assert_eq!(want_out.outputs, got, "bw={bw} z={z} s={s} signed={signed}");
+    });
+}
+
 /// Streamlining a random `Quant` activation into the integer-domain
 /// `MultiThreshold` form (thresholds computed in the producer's integer
 /// domain, raw levels emitted, scale pushed to the graph edge) is
