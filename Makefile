@@ -25,11 +25,14 @@ doc:
 	cd rust && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
 # Interpreter-vs-plan throughput comparison (plus the PJRT sections when
-# artifacts are present). Writes machine-readable BENCH_PR5.json to the
+# artifacts are present). Writes machine-readable BENCH_PR6.json to the
 # repo root (Melem/s, GMAC/s, plan-vs-interpreter speedups, the
 # batched-CNV b1/b8/b32 batch-symbolic-vs-per-sample comparison, the
-# integer-streamlined-vs-packed-float kernel-tier section, and the PR-5
-# resident-int-vs-convert-per-call section on TFC/CNV b1/b8).
+# integer-streamlined-vs-packed-float kernel-tier section, the PR-5
+# resident-int-vs-convert-per-call section on TFC/CNV b1/b8, and the
+# PR-6 scalar-vs-SIMD-vs-SIMD+pool microkernel section on CNV b1/b8/b32
+# with the shards x intra-op serving sweep; asserts the SIMD path clears
+# 2x over scalar on CNV b32 when the host has AVX2/NEON).
 bench:
 	cd rust && cargo bench --bench bench_exec
 

@@ -25,7 +25,11 @@ Model transformation:
 Inspection & execution:
   summary <model>            print the node listing with shapes/datatypes
   plan <model>               compile and print the execution plan schedule
-                             (incl. the per-slot dtype + bytes table)
+                             (incl. the per-slot dtype + bytes table and a
+                             'kernel substrate' line: detected ISA —
+                             avx2/neon/scalar, QONNX_FORCE_SCALAR=1 to
+                             override — intra-op pool width, and how many
+                             quantized kernels carry SIMD weight tiles)
   streamline <model> [--out <file>]
                              lower the model to integer-domain form (Quant
                              activations -> integer MultiThreshold, integer
@@ -48,14 +52,20 @@ Training & serving:
   train --w N --a N [--epochs N] [--out <file>]   QAT on synth-digits
   infer <artifact-stem>      load + self-check a PJRT artifact
   serve [--artifact <stem>] [--zoo <name>] [--requests N] [--clients N]
-        [--shards N]         batching server demo; serves a zoo model via
+        [--shards N] [--intraop-threads N]
+                             batching server demo; serves a zoo model via
                              the compiled ExecutionPlan when no PJRT
                              artifact is present (or --zoo is given) —
                              streamlined to the integer kernel tier when
                              the model lowers cleanly, float plan
                              otherwise. --shards runs N batcher workers
                              sharing ONE compiled plan (PJRT shards each
-                             load their own artifact copy)
+                             load their own artifact copy).
+                             --intraop-threads caps each shard's kernel
+                             fan-out on the shared worker pool (default:
+                             pool threads / shards, so shards x intra-op
+                             stays <= cores); startup reports the ISA and
+                             thread configuration
 ";
 
 fn parse_flag(args: &[String], key: &str) -> Option<String> {
@@ -375,6 +385,8 @@ fn serve_cmd(rest: &[String]) -> Result<()> {
     let requests: usize = parse_flag(rest, "--requests").map(|s| s.parse()).transpose()?.unwrap_or(256);
     let clients: usize = parse_flag(rest, "--clients").map(|s| s.parse()).transpose()?.unwrap_or(8);
     let shards: usize = parse_flag(rest, "--shards").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let intraop: Option<usize> =
+        parse_flag(rest, "--intraop-threads").map(|s| s.parse()).transpose()?;
     let zoo_name = parse_flag(rest, "--zoo");
     let artifact_requested = has_flag(rest, "--artifact");
     let have_artifact = stem.with_extension("hlo.txt").exists();
@@ -384,6 +396,21 @@ fn serve_cmd(rest: &[String]) -> Result<()> {
     if artifact_requested && !have_artifact {
         bail!("artifact {stem:?} not found (missing {:?})", stem.with_extension("hlo.txt"));
     }
+    if shards == 0 {
+        bail!("--shards must be at least 1");
+    }
+
+    // the shards × intra-op trade: request-parallelism across shards,
+    // kernel-parallelism inside each, bounded by the shared pool
+    let pool_threads = crate::runtime::pool::global().threads();
+    let budget = intraop.unwrap_or_else(|| (pool_threads / shards).max(1));
+    println!(
+        "kernel substrate: isa {} ({}), pool {pool_threads} threads, \
+         {shards} shard(s) x {budget} intra-op",
+        crate::tensor::simd::active_isa(),
+        if crate::tensor::simd::force_scalar() { "forced scalar" } else { "detected" },
+    );
+    let cfg = coordinator::BatcherConfig { intraop_threads: intraop, ..Default::default() };
 
     let batcher = if zoo_name.is_none() && have_artifact {
         // PJRT executables are thread-affine: each shard loads its own
@@ -393,7 +420,7 @@ fn serve_cmd(rest: &[String]) -> Result<()> {
                 Ok(Box::new(coordinator::PjrtEngine::load(&rt, &stem)?)
                     as Box<dyn coordinator::InferenceEngine>)
             },
-            coordinator::BatcherConfig::default(),
+            cfg,
             shards,
         )?
     } else {
@@ -413,7 +440,7 @@ fn serve_cmd(rest: &[String]) -> Result<()> {
         }
         coordinator::Batcher::start_sharded(
             move || Ok(Box::new(template.share()) as Box<dyn coordinator::InferenceEngine>),
-            coordinator::BatcherConfig::default(),
+            cfg,
             shards,
         )?
     };

@@ -27,11 +27,17 @@ use std::time::{Duration, Instant};
 pub struct BatcherConfig {
     /// max time the first request of a batch waits for company
     pub max_wait: Duration,
+    /// per-shard intra-op thread cap for the shared kernel pool
+    /// ([`crate::runtime::pool`]). `None` divides the pool evenly:
+    /// `(pool threads / shards).max(1)`, so shards × intra-op ≤ cores —
+    /// request-parallelism is traded against per-request parallelism
+    /// instead of oversubscribing.
+    pub intraop_threads: Option<usize>,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { max_wait: Duration::from_millis(2) }
+        BatcherConfig { max_wait: Duration::from_millis(2), intraop_threads: None }
     }
 }
 
@@ -140,6 +146,12 @@ impl Batcher {
             let worker_stats = stats.clone();
             let worker_shutdown = shutdown.clone();
             workers.push(std::thread::spawn(move || {
+                // budget this shard's intra-op fan-out so that across all
+                // shards the pool is not oversubscribed
+                let budget = cfg.intraop_threads.unwrap_or_else(|| {
+                    (crate::runtime::pool::global().threads() / shards).max(1)
+                });
+                crate::runtime::pool::set_thread_intraop_limit(budget);
                 let mut engine = match factory() {
                     Ok(e) => {
                         let _ = ready_tx.send(Ok((e.input_dim(), e.output_dim())));
@@ -327,8 +339,11 @@ mod tests {
     #[test]
     fn concurrent_requests_get_batched() {
         let b = Arc::new(
-            Batcher::start(ref_engine, BatcherConfig { max_wait: Duration::from_millis(20) })
-                .unwrap(),
+            Batcher::start(
+                ref_engine,
+                BatcherConfig { max_wait: Duration::from_millis(20), ..Default::default() },
+            )
+            .unwrap(),
         );
         let mut handles = Vec::new();
         for i in 0..16 {
@@ -370,7 +385,7 @@ mod tests {
         let b = Arc::new(
             Batcher::start_sharded(
                 move || Ok(Box::new(template.share()) as Box<dyn InferenceEngine>),
-                BatcherConfig { max_wait: Duration::from_millis(5) },
+                BatcherConfig { max_wait: Duration::from_millis(5), ..Default::default() },
                 3,
             )
             .unwrap(),
@@ -389,6 +404,23 @@ mod tests {
             assert_eq!(served, want.as_f32().unwrap(), "sharded result diverged");
         }
         assert_eq!(b.stats().requests, 24);
+    }
+
+    #[test]
+    fn pinned_intraop_budget_still_serves() {
+        // shards with an explicit 1-thread intra-op cap run the kernels
+        // inline (no pool fan-out) and must produce identical rows
+        let b = Batcher::start_sharded(
+            ref_engine,
+            BatcherConfig { intraop_threads: Some(1), ..Default::default() },
+            2,
+        )
+        .unwrap();
+        let mut solo = ref_engine().unwrap();
+        let input: Vec<f32> = (0..784).map(|i| (i % 5) as f32 / 5.0).collect();
+        let served = b.infer(input.clone()).unwrap();
+        let want = solo.infer_batch(&Tensor::new(vec![1, 784], input)).unwrap();
+        assert_eq!(served, want.as_f32().unwrap());
     }
 
     #[test]

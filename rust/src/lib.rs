@@ -94,6 +94,27 @@
 //!                                  feeds when the previous layer's
 //!                                  levels fit i8.
 //!
+//!   tensor::simd                   the i8×i8→i32 microkernel layer under
+//!                                  qgemm: one ISA probe at startup
+//!                                  (AVX2 via a saturation-free
+//!                                  sign-split maddubs ladder, NEON via
+//!                                  vmull_s8/vpadalq — scalar panels
+//!                                  otherwise, or under
+//!                                  QONNX_FORCE_SCALAR=1), with PackedBi8
+//!                                  repacked into interleaved K×8 tiles
+//!                                  at plan-compile time. i32 accumulation
+//!                                  is order-free, so every ISA produces
+//!                                  byte-identical plans.
+//!   runtime::pool                  the persistent intra-op worker pool:
+//!                                  gemm/qgemm/im2col fan row- and
+//!                                  column-chunks onto it instead of
+//!                                  spawning OS threads per call. Sized
+//!                                  by available_parallelism (or
+//!                                  QONNX_INTRAOP_THREADS); serving
+//!                                  shards cap their per-request fan-out
+//!                                  (BatcherConfig::intraop_threads) so
+//!                                  shards × intra-op ≤ cores.
+//!
 //!   coordinator::Batcher ──► InferenceEngine   (1..N worker shards over
 //!        │                                      one request queue)
 //!        ├─ PjrtEngine        compiled artifact (fixed batch, pads)

@@ -152,6 +152,18 @@ impl CompiledKernel {
             CompiledKernel::QConv(_) | CompiledKernel::QGemm(_) | CompiledKernel::QMatMul(_)
         )
     }
+
+    /// ISA of the prebuilt interleaved SIMD weight tiles, for quantized
+    /// kernels that carry them (`None` for float-tier kernels, and for
+    /// quantized kernels packed under forced-scalar / unsupported ISAs).
+    pub fn simd_isa(&self) -> Option<crate::tensor::Isa> {
+        match self {
+            CompiledKernel::QConv(k) => k.simd_isa(),
+            CompiledKernel::QGemm(k) => k.simd_isa(),
+            CompiledKernel::QMatMul(k) => k.simd_isa(),
+            _ => None,
+        }
+    }
 }
 
 /// A `Reshape` whose compile-time-constant target baked the declared

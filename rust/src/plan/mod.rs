@@ -709,6 +709,19 @@ impl<'g> ExecutionPlan<'g> {
                 "    resident slot bytes {resident} (all-f32 layout would be {all_f32})"
             );
         }
+        // kernel substrate: which microkernel the quantized tier will run
+        // on and how wide the intra-op pool fans (see tensor::simd and
+        // runtime::pool)
+        let tiled = self.steps.iter().filter(|st| st.kernel.simd_isa().is_some()).count();
+        let _ = writeln!(
+            s,
+            "  kernel substrate: isa {} ({}), intra-op threads {}, {tiled}/{} quantized kernels \
+             simd-tiled",
+            crate::tensor::simd::active_isa(),
+            if crate::tensor::simd::force_scalar() { "forced scalar" } else { "detected" },
+            crate::runtime::pool::effective_parallelism(),
+            self.quant_count,
+        );
         s
     }
 }

@@ -22,7 +22,7 @@
 //! ([`crate::tensor::qgemm_prepacked_i8`]) — 1-byte activation panels, the
 //! ROADMAP's "resident `i8` activation path". Outputs: the residency pass
 //! in `plan/compile.rs` tells each kernel which container its consumers
-//! accept ([`QuantConv::set_out_dtype`] & co.), so a fused
+//! accept (`QuantConv::set_out_dtype` & co.), so a fused
 //! `MultiThreshold` writes its integer levels straight into `i8`/`i32`
 //! storage instead of round-tripping through floats. The standalone
 //! [`ThresholdKernel`] is the tier's entry boundary: it ingests the f32
@@ -40,13 +40,28 @@
 //! representable) result, and integer-resident inputs are trusted by
 //! construction — their producing kernel proved the grid, so the
 //! per-element runtime re-validation only remains on the f32 boundary.
+//!
+//! # SIMD microkernel dispatch (PR 6)
+//!
+//! Weight packing prebuilds interleaved SIMD tiles ([`crate::tensor::simd`])
+//! whenever the detected ISA supports them, and `qgemm_any` narrows wide
+//! activations to `i8` whenever the compile-time range proof fits the
+//! container — so the f32 boundary and `i32`-resident paths reach the
+//! microkernel too, not just resident-`i8` plans. Packing also records a
+//! sparsity hint from the activation range (`dense_activations`): 1–2 bit
+//! grids keep the scalar path's `av == 0` skip, wider grids take the
+//! branch-free loop. None of this changes a single byte — `i32`
+//! accumulation is order-free, so scalar, AVX2, and NEON plans are
+//! byte-identical (`QONNX_FORCE_SCALAR=1` flips any compiled plan back to
+//! the scalar panels at run time; `tests/plan_equiv.rs` asserts equality).
 
 use super::arena::ScratchArena;
 use crate::ir::Node;
 use crate::ops::linalg::{conv_params, ConvParams};
 use crate::ops::multithreshold::{threshold_count, threshold_count_i32};
 use crate::tensor::{
-    conv_out_dim, im2col_group_into, qgemm_prepacked, qgemm_prepacked_i8, DType, PackedBi8, Tensor,
+    conv_out_dim, im2col_group_into, qgemm_prepacked, qgemm_prepacked_i8, DType, Isa, PackedBi8,
+    Tensor,
 };
 use crate::transforms::ValueRange;
 use anyhow::{ensure, Result};
@@ -67,6 +82,14 @@ fn to_i8(vals: &[f32]) -> Option<Vec<i8>> {
         out.push(v as i8);
     }
     Some(out)
+}
+
+/// Compile-time sparsity hint for the scalar qgemm path: on 1–2 bit
+/// activation grids (range span ≤ 3 levels) zeros are frequent enough
+/// that the `av == 0` skip wins, so the packed weights keep it; wider
+/// grids take the branch-free loop. SIMD tiles ignore the hint entirely.
+fn dense_activations(r: ValueRange) -> bool {
+    r.hi - r.lo > 3.0
 }
 
 /// Max absolute value of an integral range (None when unusable).
@@ -123,6 +146,31 @@ fn to_i32_checked(src: &[f32], lo: f64, hi: f64, out: &mut [i32]) -> Result<()> 
     Ok(())
 }
 
+/// Same re-validation, narrowing to `i8` — the activation container the
+/// SIMD microkernel consumes. Only called when the compile-time proof
+/// already bounds the range inside `[-128, 127]`, so the cast is exact.
+fn to_i8_checked(src: &[f32], lo: f64, hi: f64, out: &mut [i8]) -> Result<()> {
+    debug_assert_eq!(src.len(), out.len());
+    debug_assert!(lo >= f64::from(i8::MIN) && hi <= f64::from(i8::MAX));
+    for (&v, o) in src.iter().zip(out.iter_mut()) {
+        let vf = f64::from(v);
+        ensure!(
+            vf.fract() == 0.0 && vf >= lo && vf <= hi,
+            "quantized-tier input value {v} is off the proven integer grid [{lo}, {hi}] \
+             (the bound datatype annotation does not match the runtime data)"
+        );
+        *o = v as i8;
+    }
+    Ok(())
+}
+
+/// Whether `qgemm_any` should narrow wide activations to `i8`: the packed
+/// weights carry prebuilt SIMD tiles (so the 1-byte path actually hits the
+/// microkernel) and the compile-time range proof fits the container.
+fn narrows_to_i8(bp: &PackedBi8, lo: f64, hi: f64) -> bool {
+    bp.simd_isa().is_some() && lo >= f64::from(i8::MIN) && hi <= f64::from(i8::MAX)
+}
+
 /// Accumulate `rows x k` activations against a packed `i8` weight matrix
 /// into `prod`, dispatching on the activation container: `i8`-resident
 /// panels take the 1-byte path, `i32`-resident ones multiply directly, and
@@ -140,13 +188,35 @@ fn qgemm_any(
 ) -> Result<()> {
     match a.dtype() {
         DType::I8 => qgemm_prepacked_i8(rows, k, bp, a.as_i8()?, prod),
-        DType::I32 => qgemm_prepacked(rows, k, bp, a.as_i32()?, prod),
+        DType::I32 => {
+            let xs = a.as_i32()?;
+            if narrows_to_i8(bp, in_lo, in_hi) {
+                // integer-resident values are trusted by construction (the
+                // producing kernel proved the grid), so the narrowing cast
+                // is exact under the compile-time range proof
+                let mut xb = scratch.take_i8_uninit(xs.len());
+                for (o, &v) in xb.iter_mut().zip(xs) {
+                    *o = v as i8;
+                }
+                qgemm_prepacked_i8(rows, k, bp, &xb, prod);
+                scratch.give_i8(xb);
+            } else {
+                qgemm_prepacked(rows, k, bp, xs, prod);
+            }
+        }
         _ => {
             let xs = a.as_f32()?;
-            let mut xi = scratch.take_i32_uninit(xs.len());
-            to_i32_checked(xs, in_lo, in_hi, &mut xi)?;
-            qgemm_prepacked(rows, k, bp, &xi, prod);
-            scratch.give_i32(xi);
+            if narrows_to_i8(bp, in_lo, in_hi) {
+                let mut xb = scratch.take_i8_uninit(xs.len());
+                to_i8_checked(xs, in_lo, in_hi, &mut xb)?;
+                qgemm_prepacked_i8(rows, k, bp, &xb, prod);
+                scratch.give_i8(xb);
+            } else {
+                let mut xi = scratch.take_i32_uninit(xs.len());
+                to_i32_checked(xs, in_lo, in_hi, &mut xi)?;
+                qgemm_prepacked(rows, k, bp, &xi, prod);
+                scratch.give_i32(xi);
+            }
         }
     }
     Ok(())
@@ -334,10 +404,11 @@ impl QuantConv {
         }
         // per-group [mg, k] weight rows transposed to [k, mg] (the same
         // shared helper the f32 paths use), packed once
+        let dense = dense_activations(r);
         let mut weights = Vec::with_capacity(p.group);
         for g in 0..p.group {
             let wt = crate::ops::linalg::transpose_group_weights(&ws, g, mg, k);
-            weights.push(PackedBi8::pack(k, mg, &wt));
+            weights.push(PackedBi8::pack_with(k, mg, &wt, dense));
         }
         Some(QuantConv {
             p,
@@ -380,6 +451,12 @@ impl QuantConv {
     /// The output container (f32 unless the residency pass chose tighter).
     pub fn out_dtype(&self) -> DType {
         self.out_dtype
+    }
+
+    /// ISA whose interleaved weight tiles were prebuilt at pack time
+    /// (`None` when packing ran under forced-scalar / unsupported ISAs).
+    pub fn simd_isa(&self) -> Option<Isa> {
+        self.weights.first().and_then(PackedBi8::simd_isa)
     }
 
     /// Execute on an NCHW input (f32, or integer-resident) of any batch
@@ -468,7 +545,7 @@ impl QuantConv {
     }
 
     #[allow(clippy::too_many_arguments)]
-    fn groups<A: Copy, T: Copy>(
+    fn groups<A: Copy + Send + Sync, T: Copy>(
         &self,
         src: &[A],
         dims: (usize, usize, usize, usize, usize, usize),
@@ -577,7 +654,7 @@ impl QuantGemm {
         Some(QuantGemm {
             k,
             n,
-            bp: PackedBi8::pack(k, n, &bi),
+            bp: PackedBi8::pack_with(k, n, &bi, dense_activations(r)),
             bias,
             in_lo: r.lo,
             in_hi: r.hi,
@@ -612,6 +689,11 @@ impl QuantGemm {
     /// The output container (f32 unless the residency pass chose tighter).
     pub fn out_dtype(&self) -> DType {
         self.out_dtype
+    }
+
+    /// ISA whose interleaved weight tiles were prebuilt at pack time.
+    pub fn simd_isa(&self) -> Option<Isa> {
+        self.bp.simd_isa()
     }
 
     pub fn run(&self, a: &Tensor, scratch: &mut ScratchArena) -> Result<Tensor> {
@@ -660,7 +742,7 @@ impl QuantMatMul {
         Some(QuantMatMul {
             k,
             n,
-            bp: PackedBi8::pack(k, n, &bi),
+            bp: PackedBi8::pack_with(k, n, &bi, dense_activations(r)),
             in_lo: r.lo,
             in_hi: r.hi,
             epilogue: None,
@@ -694,6 +776,11 @@ impl QuantMatMul {
     /// The output container (f32 unless the residency pass chose tighter).
     pub fn out_dtype(&self) -> DType {
         self.out_dtype
+    }
+
+    /// ISA whose interleaved weight tiles were prebuilt at pack time.
+    pub fn simd_isa(&self) -> Option<Isa> {
+        self.bp.simd_isa()
     }
 
     pub fn run(&self, a: &Tensor, scratch: &mut ScratchArena) -> Result<Tensor> {

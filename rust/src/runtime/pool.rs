@@ -1,0 +1,392 @@
+//! Persistent intra-op worker pool for the tensor substrate.
+//!
+//! Before this module, every large GEMM paid `std::thread::scope` spawn
+//! + join costs per invocation. Here a process-wide pool is created once
+//! ([`global`]), sized by `available_parallelism` (overridable with the
+//! `QONNX_INTRAOP_THREADS` env knob, or injectable per-pool for tests),
+//! and [`crate::tensor::gemm`](crate::tensor::gemm()) /
+//! [`crate::tensor::qgemm_prepacked`] / im2col fan their row/column
+//! chunks onto it instead of spawning.
+//!
+//! # Scoped execution
+//!
+//! [`WorkerPool::run_scoped`] accepts *borrowing* closures (non-`'static`
+//! jobs over the caller's slices) and only returns once every job has
+//! finished — the same guarantee `std::thread::scope` gives, provided by
+//! a completion latch. Internally the borrowed jobs are lifetime-erased
+//! to sit in the shared queue; soundness rests on the latch: no borrow
+//! outlives the call because the call does not return (even on panic)
+//! until all jobs are done. Panics inside jobs are caught, forwarded,
+//! and re-raised on the calling thread after the latch drains.
+//!
+//! The **caller participates**: a pool of `threads = T` spawns `T − 1`
+//! OS workers and runs one job chunk inline, so `T = 1` degenerates to
+//! fully-inline serial execution (that is what the CI job pinning
+//! `QONNX_INTRAOP_THREADS=1` exercises). Jobs that themselves call
+//! `run_scoped` (nested intra-op fan-out) run inline rather than
+//! re-queueing, so pool workers can never deadlock waiting on their own
+//! queue.
+//!
+//! # Request- vs intra-op parallelism
+//!
+//! The pool is shared by all batcher shards. Each shard worker declares
+//! its budget via [`set_thread_intraop_limit`] (the coordinator sets
+//! `cores / shards`, so *shards × intra-op threads ≤ cores*);
+//! [`effective_parallelism`] is what the GEMMs consult when deciding the
+//! fan-out width. The limit is thread-local: it caps how wide a caller
+//! *fans out*, while the worker set itself stays shared and persistent.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<(VecDeque<Job>, bool)>, // (jobs, shutdown)
+    available: Condvar,
+    jobs_executed: AtomicU64,
+}
+
+/// Completion latch for one `run_scoped` batch.
+struct Latch {
+    pending: Mutex<(usize, Option<Box<dyn std::any::Any + Send>>)>,
+    done: Condvar,
+}
+
+impl Latch {
+    fn new(count: usize) -> Latch {
+        Latch { pending: Mutex::new((count, None)), done: Condvar::new() }
+    }
+
+    fn complete(&self, panic: Option<Box<dyn std::any::Any + Send>>) {
+        let mut g = self.pending.lock().unwrap();
+        g.0 -= 1;
+        if g.1.is_none() {
+            g.1 = panic;
+        }
+        if g.0 == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn wait(&self) -> Option<Box<dyn std::any::Any + Send>> {
+        let mut g = self.pending.lock().unwrap();
+        while g.0 > 0 {
+            g = self.done.wait(g).unwrap();
+        }
+        g.1.take()
+    }
+}
+
+thread_local! {
+    /// Set while a pool worker (or inline caller) is inside a job:
+    /// nested fan-out then runs inline instead of re-queueing.
+    static IN_POOL_JOB: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+    /// Per-thread fan-out cap (0 = uncapped). See module docs.
+    static INTRAOP_LIMIT: std::cell::Cell<usize> = const { std::cell::Cell::new(0) };
+}
+
+fn run_job_tracked(job: impl FnOnce()) -> Option<Box<dyn std::any::Any + Send>> {
+    let prev = IN_POOL_JOB.with(|f| f.replace(true));
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+    IN_POOL_JOB.with(|f| f.set(prev));
+    result.err()
+}
+
+/// A persistent set of worker threads executing scoped job batches.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// Pool with an injected parallelism of `threads` (clamped to ≥ 1).
+    /// Spawns `threads − 1` OS workers; the caller is the last lane.
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new((VecDeque::new(), false)),
+            available: Condvar::new(),
+            jobs_executed: AtomicU64::new(0),
+        });
+        let handles = (0..threads - 1)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("qonnx-intraop-{i}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawning intra-op worker")
+            })
+            .collect();
+        WorkerPool { shared, handles, threads }
+    }
+
+    /// The pool's parallelism (worker threads + the participating caller).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// OS worker threads owned by the pool (`threads() − 1`). Constant
+    /// for the pool's lifetime — the "no spawn per invocation" witness.
+    pub fn worker_count(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Total jobs the pool has executed (workers + inline lanes).
+    pub fn jobs_executed(&self) -> u64 {
+        self.shared.jobs_executed.load(Ordering::Relaxed)
+    }
+
+    /// Run every job to completion, in parallel where workers are free.
+    /// Blocks until all jobs finished; panics (after draining) if any
+    /// job panicked. Jobs may borrow caller state — see module docs.
+    pub fn run_scoped<'s>(&self, mut jobs: Vec<Box<dyn FnOnce() + Send + 's>>) {
+        if jobs.is_empty() {
+            return;
+        }
+        // Serial lanes: nothing to gain (or nested fan-out) — run inline.
+        if jobs.len() == 1 || self.worker_count() == 0 || IN_POOL_JOB.with(|f| f.get()) {
+            let mut panic = None;
+            for job in jobs {
+                if let Some(p) = run_job_tracked(job) {
+                    panic = panic.or(Some(p));
+                }
+            }
+            if let Some(p) = panic {
+                std::panic::resume_unwind(p);
+            }
+            return;
+        }
+        let first = jobs.remove(0);
+        let latch = Arc::new(Latch::new(jobs.len()));
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for job in jobs {
+                // SAFETY: lifetime erasure of the borrowed job. The latch
+                // below guarantees every queued job has completed before
+                // this call returns (including the panic path), so no
+                // borrow inside the closure outlives the caller's frame.
+                let job: Job = unsafe {
+                    std::mem::transmute::<
+                        Box<dyn FnOnce() + Send + 's>,
+                        Box<dyn FnOnce() + Send + 'static>,
+                    >(job)
+                };
+                let l = Arc::clone(&latch);
+                let sh = Arc::clone(&self.shared);
+                q.0.push_back(Box::new(move || {
+                    let panic = run_job_tracked(job);
+                    sh.jobs_executed.fetch_add(1, Ordering::Relaxed);
+                    l.complete(panic);
+                }));
+            }
+            self.shared.available.notify_all();
+        }
+        // the caller is a lane too: run the first chunk inline
+        let inline_panic = run_job_tracked(first);
+        self.shared.jobs_executed.fetch_add(1, Ordering::Relaxed);
+        let worker_panic = latch.wait();
+        if let Some(p) = inline_panic.or(worker_panic) {
+            std::panic::resume_unwind(p);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.1 = true;
+            self.shared.available.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.0.pop_front() {
+                    break job;
+                }
+                if q.1 {
+                    return;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        job();
+    }
+}
+
+/// Parallelism for the process pool: `QONNX_INTRAOP_THREADS` when set
+/// (≥ 1), else `available_parallelism`.
+fn default_threads() -> usize {
+    if let Some(v) = std::env::var_os("QONNX_INTRAOP_THREADS") {
+        if let Ok(n) = v.to_string_lossy().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1)
+}
+
+/// The shared process-wide pool, created on first use.
+pub fn global() -> &'static WorkerPool {
+    static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+    GLOBAL.get_or_init(|| WorkerPool::new(default_threads()))
+}
+
+/// Cap this thread's intra-op fan-out (0 clears the cap). Batcher shard
+/// workers call this with `cores / shards` so concurrent shards don't
+/// oversubscribe: shards × intra-op threads ≤ cores.
+pub fn set_thread_intraop_limit(limit: usize) {
+    INTRAOP_LIMIT.with(|l| l.set(limit));
+}
+
+/// This thread's intra-op fan-out cap (0 = uncapped).
+pub fn thread_intraop_limit() -> usize {
+    INTRAOP_LIMIT.with(|l| l.get())
+}
+
+/// The fan-out width tensor kernels should use from this thread:
+/// the global pool's parallelism, clamped by the thread's budget.
+pub fn effective_parallelism() -> usize {
+    let t = global().threads();
+    match thread_intraop_limit() {
+        0 => t,
+        cap => t.min(cap),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn pool_runs_borrowed_jobs_and_persists_workers() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.threads(), 4);
+        assert_eq!(pool.worker_count(), 3);
+        let mut data = vec![0usize; 64];
+        let chunks: Vec<&mut [usize]> = data.chunks_mut(16).collect();
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+        for (ci, chunk) in chunks.into_iter().enumerate() {
+            jobs.push(Box::new(move || {
+                for (i, v) in chunk.iter_mut().enumerate() {
+                    *v = ci * 100 + i;
+                }
+            }));
+        }
+        pool.run_scoped(jobs);
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, (i / 16) * 100 + i % 16);
+        }
+        // a second batch reuses the same workers — nothing respawned
+        let before = pool.worker_count();
+        let executed = pool.jobs_executed();
+        let counter = AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..8)
+            .map(|_| {
+                Box::new(|| {
+                    counter.fetch_add(1, Ordering::SeqCst);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(jobs);
+        assert_eq!(counter.load(Ordering::SeqCst), 8);
+        assert_eq!(pool.worker_count(), before);
+        assert!(pool.jobs_executed() > executed);
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.worker_count(), 0);
+        let mut hits = 0usize;
+        let h = &mut hits;
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = vec![Box::new(move || *h += 1)];
+        pool.run_scoped(jobs);
+        assert_eq!(hits, 1);
+    }
+
+    #[test]
+    fn nested_fan_out_runs_inline_without_deadlock() {
+        let pool = WorkerPool::new(2);
+        let outer = AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+            .map(|_| {
+                Box::new(|| {
+                    // nested run_scoped from inside a pool job: must run
+                    // inline (the global pool is a different pool, but the
+                    // IN_POOL_JOB guard is process-wide per thread)
+                    let inner = AtomicUsize::new(0);
+                    let inner_jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..3)
+                        .map(|_| {
+                            Box::new(|| {
+                                inner.fetch_add(1, Ordering::SeqCst);
+                            })
+                                as Box<dyn FnOnce() + Send + '_>
+                        })
+                        .collect();
+                    global().run_scoped(inner_jobs);
+                    outer.fetch_add(inner.load(Ordering::SeqCst), Ordering::SeqCst);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(jobs);
+        assert_eq!(outer.load(Ordering::SeqCst), 12);
+    }
+
+    #[test]
+    fn job_panics_propagate_after_draining() {
+        let pool = WorkerPool::new(3);
+        let finished = Arc::new(AtomicUsize::new(0));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let f = Arc::clone(&finished);
+            let g = Arc::clone(&finished);
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+                Box::new(move || {
+                    f.fetch_add(1, Ordering::SeqCst);
+                }),
+                Box::new(|| panic!("intentional")),
+                Box::new(move || {
+                    g.fetch_add(1, Ordering::SeqCst);
+                }),
+            ];
+            pool.run_scoped(jobs);
+        }));
+        assert!(result.is_err(), "panic must propagate to the caller");
+        assert_eq!(finished.load(Ordering::SeqCst), 2, "other jobs still ran");
+        // the pool survives a panicking batch
+        let ok = AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+            .map(|_| {
+                Box::new(|| {
+                    ok.fetch_add(1, Ordering::SeqCst);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(jobs);
+        assert_eq!(ok.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn intraop_limit_caps_effective_parallelism() {
+        let unlimited = effective_parallelism();
+        assert!(unlimited >= 1);
+        set_thread_intraop_limit(1);
+        assert_eq!(effective_parallelism(), 1);
+        assert_eq!(thread_intraop_limit(), 1);
+        set_thread_intraop_limit(0);
+        assert_eq!(effective_parallelism(), unlimited);
+    }
+}

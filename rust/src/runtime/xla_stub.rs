@@ -1,0 +1,104 @@
+//! Typed stand-in for the `xla` PJRT bindings.
+//!
+//! The artifact runtime in this module tree was written against the
+//! `xla` crate (PJRT CPU client + HLO-text compilation), but that crate
+//! is not available as a dependency of this build. This stub mirrors the
+//! exact API surface `super` uses so the runtime keeps compiling; every
+//! entry point ([`PjRtClient::cpu`], [`HloModuleProto::from_text_file`])
+//! reports the missing backend with a typed error at run time, and the
+//! artifact-existence guards in tests/benches/CLI skip PJRT paths long
+//! before reaching it. Replacing this with the real crate is a one-line
+//! change in `super` (`use xla_stub as xla` → `use xla`).
+
+// Most stub types are never constructed (the entry points error before
+// anything downstream runs) — that is the point of the stub, not rot.
+#![allow(dead_code)]
+
+/// Error carrier matching how `super` consumes the real crate's errors
+/// (`{e:?}` formatting only).
+pub struct XlaError(pub &'static str);
+
+impl std::fmt::Debug for XlaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.0)
+    }
+}
+
+const UNAVAILABLE: XlaError = XlaError(
+    "the xla/PJRT backend is not linked into this build — serve models \
+     through the compiled ExecutionPlan engine instead",
+);
+
+/// PJRT CPU client handle (stub: construction always fails).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        Err(UNAVAILABLE)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        Err(UNAVAILABLE)
+    }
+}
+
+/// Parsed HLO module (stub: parsing always fails).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, XlaError> {
+        Err(UNAVAILABLE)
+    }
+}
+
+/// Computation wrapper around a parsed HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Compiled executable (stub: unreachable — `compile` never succeeds).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        Err(UNAVAILABLE)
+    }
+}
+
+/// Device-resident result buffer.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        Err(UNAVAILABLE)
+    }
+}
+
+/// Host literal value.
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_values: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, XlaError> {
+        Err(UNAVAILABLE)
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal, XlaError> {
+        Err(UNAVAILABLE)
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, XlaError> {
+        Err(UNAVAILABLE)
+    }
+}

@@ -13,16 +13,24 @@
 //!
 //! Blocking follows the classic MC/KC/NC scheme: `b` is tiled into
 //! `KC x NC` panels stored contiguously, the row dimension is walked in
-//! `MC`-row blocks (and fanned out over threads for large problems), and
-//! the inner kernel streams one contiguous panel row per `k` step.
+//! `MC`-row blocks, and the inner kernel streams one contiguous panel
+//! row per `k` step. Large problems fan row × `NC`-aligned column chunks
+//! onto the persistent intra-op pool ([`crate::runtime::pool`]) — no
+//! per-call thread spawn, and short-row/wide-column shapes (batch-1
+//! inference: `m = 1`) still use every core via the column split.
 //!
 //! **Determinism contract:** for every output element `out[i, j]` the
 //! products `a[i, kk] * b[kk, j]` are accumulated in ascending-`kk` order
 //! with `a[i, kk] == 0.0` terms skipped (quantized operands are often
 //! sparse), *regardless* of path (serial/packed/threaded) or block sizes.
-//! That is what lets the compiled plan, the interpreter, and the naive
-//! triple loop produce bit-identical f32 results — the equivalence tests
-//! rely on it.
+//! Column splitting respects this: each output element is still owned by
+//! exactly one job, which walks its `KC` blocks in ascending order. That
+//! is what lets the compiled plan, the interpreter, and the naive triple
+//! loop produce bit-identical f32 results — the equivalence tests rely
+//! on it.
+
+use super::qgemm::{par_grid, SendPtr};
+use crate::runtime::pool;
 
 /// Rows-block: each thread/chunk walks its rows in MC-row groups.
 pub const GEMM_MC: usize = 64;
@@ -96,10 +104,12 @@ pub fn gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32])
         return;
     }
     let flops = 2 * m * k * n;
-    if flops < PAR_FLOP_THRESHOLD || m < 2 {
+    if flops < PAR_FLOP_THRESHOLD {
         gemm_serial_rows(k, n, a, b, out);
         return;
     }
+    // packing is a pure reorder, so this path is bit-identical — and it
+    // lets even m = 1 problems column-split across the pool
     let bp = PackedB::pack(k, n, b);
     gemm_prepacked(m, k, &bp, a, out);
 }
@@ -107,9 +117,11 @@ pub fn gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32])
 /// GEMM against a pre-packed `b` panel set: `out[m,n] += a[m,k] * bp`.
 ///
 /// The plan's packed kernels call this with a `PackedB` built at
-/// compile time; [`gemm`] calls it after packing per-call. Threads split
-/// the row range; each output element is owned by exactly one thread, so
-/// results are independent of the thread count.
+/// compile time; [`gemm`] calls it after packing per-call. Large
+/// problems fan a row × `NC`-aligned column grid onto the persistent
+/// intra-op pool; each output element is owned by exactly one job (and
+/// accumulated ascending-`k` within it), so results are independent of
+/// the fan-out.
 pub fn gemm_prepacked(m: usize, k: usize, bp: &PackedB, a: &[f32], out: &mut [f32]) {
     debug_assert_eq!(bp.k, k);
     debug_assert_eq!(a.len(), m * k);
@@ -119,28 +131,37 @@ pub fn gemm_prepacked(m: usize, k: usize, bp: &PackedB, a: &[f32], out: &mut [f3
         return;
     }
     let flops = 2 * m * k * n;
-    let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
-    if threads <= 1 || flops < PAR_FLOP_THRESHOLD || m < 2 {
-        gemm_packed_rows(k, a, bp, out);
+    let threads = pool::effective_parallelism();
+    let (row_chunks, col_chunks) = par_grid(m, n, threads);
+    let base = SendPtr(out.as_mut_ptr());
+    if threads <= 1 || flops < PAR_FLOP_THRESHOLD || row_chunks * col_chunks <= 1 {
+        // SAFETY: the single "job" covers the whole (rows × cols) rect.
+        unsafe { gemm_packed_rect(k, a, bp, 0, m, 0, n, base.0) };
         return;
     }
-    let threads = threads.min(m);
-    let rows_per = m.div_ceil(threads);
-    std::thread::scope(|scope| {
-        let mut rest = out;
-        let mut row0 = 0usize;
-        for _ in 0..threads {
-            let rows = rows_per.min(m - row0);
-            if rows == 0 {
-                break;
-            }
-            let (chunk, tail) = rest.split_at_mut(rows * n);
-            rest = tail;
-            let a_chunk = &a[row0 * k..(row0 + rows) * k];
-            scope.spawn(move || gemm_packed_rows(k, a_chunk, bp, chunk));
-            row0 += rows;
+    let rows_per = m.div_ceil(row_chunks);
+    let nc_blocks = n.div_ceil(GEMM_NC);
+    let blocks_per = nc_blocks.div_ceil(col_chunks);
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+    let mut r0 = 0usize;
+    while r0 < m {
+        let r1 = (r0 + rows_per).min(m);
+        let mut blk = 0usize;
+        while blk < nc_blocks {
+            let c0 = blk * GEMM_NC;
+            let c1 = ((blk + blocks_per) * GEMM_NC).min(n);
+            let p = base;
+            jobs.push(Box::new(move || {
+                // SAFETY: this job exclusively owns rows r0..r1 of
+                // columns c0..c1; rectangles of distinct jobs are
+                // disjoint and the pool joins before `out` is reused.
+                unsafe { gemm_packed_rect(k, a, bp, r0, r1, c0, c1, p.0) }
+            }));
+            blk += blocks_per;
         }
-    });
+        r0 = r1;
+    }
+    pool::global().run_scoped(jobs);
 }
 
 /// Serial unpacked GEMM over however many rows `a`/`out` contain.
@@ -170,28 +191,40 @@ fn gemm_serial_rows(k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
     }
 }
 
-/// Serial blocked kernel over the rows in `out`, reading packed panels.
+/// Blocked kernel over the `(row0..row1) × (col0..col1)` rectangle of
+/// the full `[m, n]` output (`col0` is `NC`-panel aligned), reading
+/// packed panels.
 ///
 /// Loop nest: MC row-blocks (outer) -> KC depth-blocks (ascending, which
 /// preserves the per-element accumulation order) -> NC panels -> rows ->
 /// panel strips. The `KC x NC` tile plus the MC-row `a` slab stay
 /// cache-resident across the inner sweeps.
-fn gemm_packed_rows(k: usize, a: &[f32], bp: &PackedB, out: &mut [f32]) {
+///
+/// # Safety
+/// `out` must point at the full `[m, n]` output and the caller must own
+/// the rectangle exclusively for the duration of the call.
+unsafe fn gemm_packed_rect(
+    k: usize,
+    a: &[f32],
+    bp: &PackedB,
+    row0: usize,
+    row1: usize,
+    col0: usize,
+    col1: usize,
+    out: *mut f32,
+) {
     let n = bp.n;
-    if n == 0 {
-        return;
-    }
-    let m = out.len() / n;
-    for ic0 in (0..m).step_by(GEMM_MC) {
-        let ic1 = (ic0 + GEMM_MC).min(m);
+    debug_assert_eq!(col0 % GEMM_NC, 0);
+    for ic0 in (row0..row1).step_by(GEMM_MC) {
+        let ic1 = (ic0 + GEMM_MC).min(row1);
         for kc0 in (0..k).step_by(GEMM_KC) {
             let kc_len = (k - kc0).min(GEMM_KC);
-            for nc0 in (0..n).step_by(GEMM_NC) {
-                let nc_len = (n - nc0).min(GEMM_NC);
+            for nc0 in (col0..col1).step_by(GEMM_NC) {
+                let nc_len = (col1 - nc0).min(GEMM_NC);
                 let tile = bp.tile(kc0, kc_len, nc0);
                 for i in ic0..ic1 {
                     let arow = &a[i * k + kc0..i * k + kc0 + kc_len];
-                    let orow = &mut out[i * n + nc0..i * n + nc0 + nc_len];
+                    let orow = std::slice::from_raw_parts_mut(out.add(i * n + nc0), nc_len);
                     for (kk, &av) in arow.iter().enumerate() {
                         if av == 0.0 {
                             continue;
@@ -311,6 +344,29 @@ mod tests {
         let mut out2 = vec![0f32; 4];
         gemm(2, 0, 2, &[], &[], &mut out2);
         assert_eq!(out2, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn single_row_wide_output_splits_columns_bit_identically() {
+        // m = 1 used to pin gemm_prepacked to a single thread
+        // (threads.min(m)); the NC-aligned column split must stay on the
+        // ascending-k + zero-skip contract bit-for-bit on every machine,
+        // whichever fan-out engages.
+        let (m, k, n) = (1usize, 2000usize, 1100usize);
+        assert!(2 * m * k * n >= PAR_FLOP_THRESHOLD);
+        let mut a = fill(m * k, 21);
+        for v in a.iter_mut().step_by(7) {
+            *v = 0.0; // exercise the zero-skip on the parallel path too
+        }
+        let b = fill(k * n, 22);
+        let want = gemm_naive(m, k, n, &a, &b);
+        let bp = PackedB::pack(k, n, &b);
+        let mut got = vec![0f32; m * n];
+        gemm_prepacked(m, k, &bp, &a, &mut got);
+        assert_eq!(got, want);
+        let mut got2 = vec![0f32; m * n];
+        gemm(m, k, n, &a, &b, &mut got2);
+        assert_eq!(got2, want);
     }
 
     #[test]

@@ -62,9 +62,14 @@ pub fn im2col_nchw(
 /// the caller's buffer must already be zero-filled.
 ///
 /// Generic over the element type (a pure gather): the float kernels run it
-/// over `f32`, the quantized tier (`crate::plan`'s `QuantConv`) over `i32`.
+/// over `f32`/`i8`/`i32` as needed by the calling tier.
+///
+/// Large multi-image gathers fan per-batch chunks onto the persistent
+/// intra-op pool ([`crate::runtime::pool`]) — each image's rows are a
+/// contiguous, disjoint slice of `out`, and a gather is exact, so the
+/// fan-out cannot change a single byte.
 #[allow(clippy::too_many_arguments)]
-pub fn im2col_group_into<T: Copy>(
+pub fn im2col_group_into<T: Copy + Send + Sync>(
     src: &[T],
     n: usize,
     c: usize,
@@ -79,14 +84,64 @@ pub fn im2col_group_into<T: Copy>(
     pads: [usize; 4], // top, left, bottom, right
     out: &mut [T],
 ) {
-    let [pad_top, pad_left, pad_bottom, pad_right] = pads;
-    let oh = conv_out_dim(h, kh, stride_h, pad_top, pad_bottom);
-    let ow = conv_out_dim(w, kw, stride_w, pad_left, pad_right);
+    let [pad_top, pad_left, _, _] = pads;
+    let oh = conv_out_dim(h, kh, stride_h, pads[0], pads[2]);
+    let ow = conv_out_dim(w, kw, stride_w, pads[1], pads[3]);
     let row_len = cg * kh * kw;
     debug_assert!(c0 + cg <= c);
     debug_assert_eq!(src.len(), n * c * h * w);
     debug_assert_eq!(out.len(), n * oh * ow * row_len);
-    for b in 0..n {
+    let threads = crate::runtime::pool::effective_parallelism();
+    let per_image = oh * ow * row_len;
+    if n > 1 && threads > 1 && n * per_image >= IM2COL_PAR_ELEMS {
+        let batches_per = n.div_ceil(threads.min(n));
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+        for (ci, chunk) in out.chunks_mut(batches_per * per_image).enumerate() {
+            let b0 = ci * batches_per;
+            jobs.push(Box::new(move || {
+                let nb = chunk.len() / per_image;
+                im2col_batch_range(
+                    src, c, h, w, c0, cg, kh, kw, stride_h, stride_w, pad_top, pad_left, oh, ow,
+                    b0, nb, chunk,
+                );
+            }));
+        }
+        crate::runtime::pool::global().run_scoped(jobs);
+        return;
+    }
+    im2col_batch_range(
+        src, c, h, w, c0, cg, kh, kw, stride_h, stride_w, pad_top, pad_left, oh, ow, 0, n, out,
+    );
+}
+
+/// Below this many gathered elements the fan-out overhead dominates.
+const IM2COL_PAR_ELEMS: usize = 1 << 20;
+
+/// The serial gather over images `[b0, b0 + nb)`; `out` holds exactly
+/// those images' rows.
+#[allow(clippy::too_many_arguments)]
+fn im2col_batch_range<T: Copy>(
+    src: &[T],
+    c: usize,
+    h: usize,
+    w: usize,
+    c0: usize,
+    cg: usize,
+    kh: usize,
+    kw: usize,
+    stride_h: usize,
+    stride_w: usize,
+    pad_top: usize,
+    pad_left: usize,
+    oh: usize,
+    ow: usize,
+    b0: usize,
+    nb: usize,
+    out: &mut [T],
+) {
+    let row_len = cg * kh * kw;
+    for bi in 0..nb {
+        let b = b0 + bi;
         for oy in 0..oh {
             for ox in 0..ow {
                 let row = ((b * oh + oy) * ow + ox) * row_len;

@@ -20,12 +20,14 @@ mod gemm;
 mod im2col;
 mod layout;
 mod qgemm;
+pub mod simd;
 
 pub use broadcast::{broadcast_shapes, broadcastable_to, BroadcastIter};
 pub use gemm::{gemm, gemm_prepacked, PackedB, GEMM_KC, GEMM_MC, GEMM_NC};
 pub use im2col::{conv_out_dim, im2col_group_into, im2col_nchw};
 pub use layout::{nchw_to_nhwc, nhwc_to_nchw};
 pub use qgemm::{qgemm_prepacked, qgemm_prepacked_i8, PackedBi8};
+pub use simd::Isa;
 
 use anyhow::{bail, ensure, Result};
 

@@ -1,5 +1,5 @@
 //! Integer GEMM substrate for the quantized kernel tier: `i8` weight
-//! panels, `i32` accumulation.
+//! panels, `i32` accumulation, explicit-SIMD microkernels.
 //!
 //! This is the execution form the streamline subsystem
 //! ([`crate::streamline`]) lowers to: once datatype inference proves that
@@ -11,33 +11,103 @@
 //!
 //! Layout mirrors [`super::gemm`]: the constant rhs is packed **once at
 //! plan-compile time** into `KC x NC` panels ([`PackedBi8`], same block
-//! constants as the f32 kernel), rows are walked in `MC` blocks and fanned
-//! out over threads for large problems.
+//! constants as the f32 kernel). When the host CPU has a vector path
+//! ([`crate::tensor::simd::detected_isa`]), packing *additionally* builds
+//! the microkernel's native interleaved tile form, so the hot loop reads
+//! contiguous vectors; `i8` activations then run the AVX2/NEON i8×i8→i32
+//! kernel, with the scalar panel loop as the portable fallback (and the
+//! `QONNX_FORCE_SCALAR` run-time override).
+//!
+//! Large problems fan row × column chunks onto the persistent intra-op
+//! pool ([`crate::runtime::pool`]) instead of spawning scoped threads per
+//! call; short-row/wide-column shapes (TFC batch-1: `m = 1`) split
+//! columns at `NC`-panel granularity so cores no longer idle.
 //!
 //! Unlike the f32 path there is **no accumulation-order contract**:
-//! integer addition is associative, so any blocking/threading produces the
-//! same bits. Callers guarantee no overflow — the plan compiler only
-//! selects this tier when the inferred value ranges bound every
-//! accumulator below `2^24` (which also keeps the result exactly
+//! integer addition is associative, so any blocking/threading/ISA
+//! produces the same bits. Callers guarantee no overflow — the plan
+//! compiler only selects this tier when the inferred value ranges bound
+//! every accumulator below `2^24` (which also keeps the result exactly
 //! representable when it is handed back in an f32 container).
 
 use super::gemm::{GEMM_KC, GEMM_MC, GEMM_NC};
+use super::simd::{self, Isa, J_GROUP, K_GROUP};
+use crate::runtime::pool;
 
-/// Below this many integer MACs the thread-spawn overhead dominates.
+/// Below this many integer MACs the fan-out overhead dominates.
 const PAR_MAC_THRESHOLD: usize = 2_000_000;
 
+/// Interleaved-tile companion to the panel form: the same `[k, n]`
+/// matrix re-laid for the vector microkernel (see
+/// [`crate::tensor::simd`] for the layout), built once at pack time.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct SimdTiles {
+    /// ISA the tiles were packed for (recorded for kernel reports).
+    isa: Isa,
+    /// Sum of 8-padded column extents over one full-`KC` tile row.
+    np_total: usize,
+    data: Vec<i8>,
+}
+
+impl SimdTiles {
+    fn build(k: usize, n: usize, b: &[i8], isa: Isa) -> SimdTiles {
+        let mut np_total = 0;
+        for nc0 in (0..n).step_by(GEMM_NC) {
+            np_total += (n - nc0).min(GEMM_NC).div_ceil(J_GROUP) * J_GROUP;
+        }
+        let mut data = Vec::new();
+        for kc0 in (0..k).step_by(GEMM_KC) {
+            let kc_len = (k - kc0).min(GEMM_KC);
+            for nc0 in (0..n).step_by(GEMM_NC) {
+                let nc_len = (n - nc0).min(GEMM_NC);
+                simd::interleave_tile(b, n, kc0, kc_len, nc0, nc_len, &mut data);
+            }
+        }
+        SimdTiles { isa, np_total, data }
+    }
+
+    /// The interleaved tile at block origin `(kc0, nc0)`. `kc0` is a
+    /// multiple of `KC`, `nc0` of `NC` (so every preceding tile row has
+    /// `kp = KC` and every preceding tile in this row has `np = NC`).
+    #[inline]
+    fn tile(&self, kc0: usize, kc_len: usize, nc0: usize, nc_len: usize) -> &[i8] {
+        let kp = kc_len.div_ceil(K_GROUP) * K_GROUP;
+        let np = nc_len.div_ceil(J_GROUP) * J_GROUP;
+        let off = kc0 * self.np_total + kp * nc0;
+        &self.data[off..off + kp * np]
+    }
+}
+
 /// A `[k, n]` `i8` matrix packed into contiguous `KC x NC` panels
-/// (identical layout to [`super::PackedB`], 1/4 the bytes).
+/// (identical layout to [`super::PackedB`], 1/4 the bytes), plus — when
+/// a vector ISA is active at pack time — the microkernel's interleaved
+/// tile form.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct PackedBi8 {
     k: usize,
     n: usize,
     data: Vec<i8>,
+    /// Compile-time sparsity hint: `true` means the inferred activation
+    /// grid is dense (> 2 bits), so the scalar path drops its `av == 0`
+    /// skip; `false` (1–2 bit grids) keeps it.
+    dense: bool,
+    simd: Option<SimdTiles>,
 }
 
 impl PackedBi8 {
-    /// Pack a row-major `[k, n]` matrix. A pure reordering copy.
+    /// Pack a row-major `[k, n]` matrix with the conservative sparse
+    /// hint (keep the zero-skip). A pure reordering copy (plus the
+    /// interleaved SIMD form when the host has a vector path).
     pub fn pack(k: usize, n: usize, b: &[i8]) -> PackedBi8 {
+        Self::pack_with(k, n, b, false)
+    }
+
+    /// [`PackedBi8::pack`] with an explicit activation-density hint from
+    /// the plan compiler's range inference: `dense = true` (8-bit-ish
+    /// grids) drops the scalar path's `av == 0` skip, which pessimizes
+    /// dense w8a8 activations and blocks vectorization; `false` (1–2 bit
+    /// grids, where zeros are common) keeps it.
+    pub fn pack_with(k: usize, n: usize, b: &[i8], dense: bool) -> PackedBi8 {
         debug_assert_eq!(b.len(), k * n);
         let mut data = Vec::with_capacity(k * n);
         for kc0 in (0..k).step_by(GEMM_KC) {
@@ -49,7 +119,11 @@ impl PackedBi8 {
                 }
             }
         }
-        PackedBi8 { k, n, data }
+        let simd = match simd::active_isa() {
+            Isa::Scalar => None,
+            isa => Some(SimdTiles::build(k, n, b, isa)),
+        };
+        PackedBi8 { k, n, data, dense, simd }
     }
 
     pub fn k(&self) -> usize {
@@ -60,7 +134,19 @@ impl PackedBi8 {
         self.n
     }
 
-    /// The contiguous `kc_len x nc_len` tile at block origin `(kc0, nc0)`.
+    /// The vector ISA this matrix carries interleaved tiles for, if any.
+    pub fn simd_isa(&self) -> Option<Isa> {
+        self.simd.as_ref().map(|t| t.isa)
+    }
+
+    /// The compile-time activation-density hint this matrix was packed
+    /// with (see [`PackedBi8::pack_with`]).
+    pub fn dense_hint(&self) -> bool {
+        self.dense
+    }
+
+    /// The contiguous `kc_len x nc_len` panel tile at block origin
+    /// `(kc0, nc0)`.
     #[inline]
     fn tile(&self, kc0: usize, kc_len: usize, nc0: usize) -> &[i8] {
         let off = kc0 * self.n + kc_len * nc0;
@@ -69,11 +155,32 @@ impl PackedBi8 {
     }
 }
 
+/// Activation element of the integer GEMM: `i32` (widened levels) or
+/// `i8` (resident levels — the type the vector microkernel accepts).
+pub(crate) trait QAct: Copy + Into<i32> + Send + Sync {
+    /// The activation slice as raw `i8`, when that is its actual type.
+    fn as_i8(a: &[Self]) -> Option<&[i8]>;
+}
+
+impl QAct for i32 {
+    fn as_i8(_: &[i32]) -> Option<&[i8]> {
+        None
+    }
+}
+
+impl QAct for i8 {
+    fn as_i8(a: &[i8]) -> Option<&[i8]> {
+        Some(a)
+    }
+}
+
 /// Integer GEMM against a pre-packed `i8` rhs:
 /// `out[m,n] += a[m,k] * bp[k,n]`, accumulating in `i32`.
 ///
-/// Threads split the row range for large problems; each output element is
-/// owned by exactly one thread. Exact for any order (integer arithmetic).
+/// Large problems fan out over the persistent intra-op pool; each output
+/// element is owned by exactly one job. Exact for any order (integer
+/// arithmetic), so every path — scalar, SIMD, threaded — produces
+/// identical bits.
 pub fn qgemm_prepacked(m: usize, k: usize, bp: &PackedBi8, a: &[i32], out: &mut [i32]) {
     qgemm_generic(m, k, bp, a, out);
 }
@@ -81,19 +188,34 @@ pub fn qgemm_prepacked(m: usize, k: usize, bp: &PackedBi8, a: &[i32], out: &mut 
 /// [`qgemm_prepacked`] over **`i8` activations** — the resident-activation
 /// path: when the previous layer's `MultiThreshold` emitted its levels
 /// into an `i8` container, the activation panel read here is 1 byte per
-/// element instead of 4 (and the widening to `i32` happens in-register in
-/// the inner loop). Bit-identical to widening up front.
+/// element instead of 4, and the explicit vector microkernel
+/// ([`crate::tensor::simd`]) engages when the host has one. Bit-identical
+/// to widening up front.
 pub fn qgemm_prepacked_i8(m: usize, k: usize, bp: &PackedBi8, a: &[i8], out: &mut [i32]) {
     qgemm_generic(m, k, bp, a, out);
 }
 
-fn qgemm_generic<A: Copy + Into<i32> + Sync>(
-    m: usize,
-    k: usize,
-    bp: &PackedBi8,
-    a: &[A],
-    out: &mut [i32],
-) {
+/// Row × column fan-out for `threads` lanes: rows first, then `NC`-panel
+/// column chunks once rows are exhausted (short-row/wide-column shapes —
+/// TFC batch-1 has `m = 1` — would otherwise leave cores idle).
+pub(crate) fn par_grid(m: usize, n: usize, threads: usize) -> (usize, usize) {
+    let rows = threads.min(m).max(1);
+    let cols = if rows < threads {
+        (threads / rows).min(n.div_ceil(GEMM_NC)).max(1)
+    } else {
+        1
+    };
+    (rows, cols)
+}
+
+/// Raw output cursor handed to pool jobs. Each job writes a disjoint
+/// (row-range × column-range) rectangle, so sharing the base pointer is
+/// race-free.
+#[derive(Clone, Copy)]
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+
+fn qgemm_generic<A: QAct>(m: usize, k: usize, bp: &PackedBi8, a: &[A], out: &mut [i32]) {
     debug_assert_eq!(bp.k, k);
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(out.len(), m * bp.n);
@@ -101,63 +223,118 @@ fn qgemm_generic<A: Copy + Into<i32> + Sync>(
     if m == 0 || n == 0 || k == 0 {
         return;
     }
+    // run-time override: tiles packed for a vector ISA still run the
+    // scalar panel loop under QONNX_FORCE_SCALAR
+    let isa = if simd::force_scalar() { None } else { bp.simd_isa() };
     let macs = m * k * n;
-    let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
-    if threads <= 1 || macs < PAR_MAC_THRESHOLD || m < 2 {
-        qgemm_packed_rows(k, a, bp, out);
+    let threads = pool::effective_parallelism();
+    let (row_chunks, col_chunks) = par_grid(m, n, threads);
+    let base = SendPtr(out.as_mut_ptr());
+    if threads <= 1 || macs < PAR_MAC_THRESHOLD || row_chunks * col_chunks <= 1 {
+        // SAFETY: the single "job" covers the whole (rows × cols) rect.
+        unsafe { qgemm_block(k, a, bp, isa, 0, m, 0, n, base.0) };
         return;
     }
-    let threads = threads.min(m);
-    let rows_per = m.div_ceil(threads);
-    std::thread::scope(|scope| {
-        let mut rest = out;
-        let mut row0 = 0usize;
-        for _ in 0..threads {
-            let rows = rows_per.min(m - row0);
-            if rows == 0 {
-                break;
-            }
-            let (chunk, tail) = rest.split_at_mut(rows * n);
-            rest = tail;
-            let a_chunk = &a[row0 * k..(row0 + rows) * k];
-            scope.spawn(move || qgemm_packed_rows(k, a_chunk, bp, chunk));
-            row0 += rows;
+    let rows_per = m.div_ceil(row_chunks);
+    let nc_blocks = n.div_ceil(GEMM_NC);
+    let blocks_per = nc_blocks.div_ceil(col_chunks);
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+    let mut r0 = 0usize;
+    while r0 < m {
+        let r1 = (r0 + rows_per).min(m);
+        let mut blk = 0usize;
+        while blk < nc_blocks {
+            let c0 = blk * GEMM_NC;
+            let c1 = ((blk + blocks_per) * GEMM_NC).min(n);
+            let p = base;
+            jobs.push(Box::new(move || {
+                // SAFETY: this job exclusively owns rows r0..r1 of
+                // columns c0..c1; rectangles of distinct jobs are
+                // disjoint and the pool joins before `out` is reused.
+                unsafe { qgemm_block(k, a, bp, isa, r0, r1, c0, c1, p.0) }
+            }));
+            blk += blocks_per;
         }
-    });
+        r0 = r1;
+    }
+    pool::global().run_scoped(jobs);
 }
 
-/// Serial blocked kernel over the rows in `out`, reading packed panels.
-/// Same MC -> KC -> NC -> row -> strip nest as the f32 kernel; the
-/// widening (`i8 -> i32` on the panel strip, and on the activation when it
-/// is `i8`-resident) happens inside the inner loop — the strip is
-/// contiguous, so the loop autovectorizes.
-fn qgemm_packed_rows<A: Copy + Into<i32>>(k: usize, a: &[A], bp: &PackedBi8, out: &mut [i32]) {
+/// Blocked kernel over the `(row0..row1) × (col0..col1)` rectangle of the
+/// full `[m, n]` output (`col0` is `NC`-panel aligned). Same
+/// MC -> KC -> NC -> row nest as the f32 kernel; dispatches each
+/// (row, tile) strip to the vector microkernel when `isa` says so, else
+/// to the scalar panel loop.
+///
+/// # Safety
+/// `out` must point at the full `[m, n]` output and the caller must own
+/// the rectangle exclusively for the duration of the call.
+unsafe fn qgemm_block<A: QAct>(
+    k: usize,
+    a: &[A],
+    bp: &PackedBi8,
+    isa: Option<Isa>,
+    row0: usize,
+    row1: usize,
+    col0: usize,
+    col1: usize,
+    out: *mut i32,
+) {
     let n = bp.n;
-    if n == 0 {
-        return;
-    }
-    let m = out.len() / n;
-    for ic0 in (0..m).step_by(GEMM_MC) {
-        let ic1 = (ic0 + GEMM_MC).min(m);
+    debug_assert_eq!(col0 % GEMM_NC, 0);
+    let vector = match (isa, &bp.simd, A::as_i8(a)) {
+        (Some(isa), Some(tiles), Some(a8)) => Some((isa, tiles, a8)),
+        _ => None,
+    };
+    for ic0 in (row0..row1).step_by(GEMM_MC) {
+        let ic1 = (ic0 + GEMM_MC).min(row1);
         for kc0 in (0..k).step_by(GEMM_KC) {
             let kc_len = (k - kc0).min(GEMM_KC);
-            for nc0 in (0..n).step_by(GEMM_NC) {
-                let nc_len = (n - nc0).min(GEMM_NC);
-                let tile = bp.tile(kc0, kc_len, nc0);
-                for i in ic0..ic1 {
-                    let arow = &a[i * k + kc0..i * k + kc0 + kc_len];
-                    let orow = &mut out[i * n + nc0..i * n + nc0 + nc_len];
-                    for (kk, &av) in arow.iter().enumerate() {
-                        let av: i32 = av.into();
-                        if av == 0 {
-                            continue; // low-bit activations are often sparse
-                        }
-                        let brow = &tile[kk * nc_len..(kk + 1) * nc_len];
-                        for (o, &bv) in orow.iter_mut().zip(brow) {
-                            *o += av * i32::from(bv);
-                        }
+            for nc0 in (col0..col1).step_by(GEMM_NC) {
+                let nc_len = (col1 - nc0).min(GEMM_NC);
+                if let Some((isa, tiles, a8)) = vector {
+                    let tile = tiles.tile(kc0, kc_len, nc0, nc_len);
+                    for i in ic0..ic1 {
+                        let arow = &a8[i * k + kc0..i * k + kc0 + kc_len];
+                        let orow = std::slice::from_raw_parts_mut(out.add(i * n + nc0), nc_len);
+                        simd::tile_dot(isa, arow, tile, orow);
+                    }
+                } else {
+                    let tile = bp.tile(kc0, kc_len, nc0);
+                    for i in ic0..ic1 {
+                        let arow = &a[i * k + kc0..i * k + kc0 + kc_len];
+                        let orow = std::slice::from_raw_parts_mut(out.add(i * n + nc0), nc_len);
+                        row_tile_scalar(arow, tile, nc_len, bp.dense, orow);
                     }
                 }
+            }
+        }
+    }
+}
+
+/// One activation strip × one panel tile on the scalar path. The
+/// `av == 0` skip only runs when the compile-time hint says the
+/// activation grid is sparse (1–2 bits); dense grids take the
+/// branch-free loop that autovectorizes.
+#[inline]
+fn row_tile_scalar<A: QAct>(arow: &[A], tile: &[i8], nc_len: usize, dense: bool, orow: &mut [i32]) {
+    if dense {
+        for (kk, &av) in arow.iter().enumerate() {
+            let av: i32 = av.into();
+            let brow = &tile[kk * nc_len..(kk + 1) * nc_len];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * i32::from(bv);
+            }
+        }
+    } else {
+        for (kk, &av) in arow.iter().enumerate() {
+            let av: i32 = av.into();
+            if av == 0 {
+                continue; // low-bit activations are often sparse
+            }
+            let brow = &tile[kk * nc_len..(kk + 1) * nc_len];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * i32::from(bv);
             }
         }
     }
@@ -219,6 +396,66 @@ mod tests {
     }
 
     #[test]
+    fn prop_i8_simd_path_matches_naive_on_odd_shapes() {
+        // exercises the vector microkernel whenever the host has one
+        // (pack() builds interleaved tiles for the detected ISA)
+        for &(m, k, n) in &[
+            (1usize, 7usize, 3usize),
+            (5, 64, 200),
+            (13, 130, 17),
+            (65, 257, 129),
+            (GEMM_MC + 1, GEMM_KC + 3, GEMM_NC + 9),
+        ] {
+            let a8 = fill_i8(m * k, (m * 13 + n) as u64);
+            let a32: Vec<i32> = a8.iter().map(|&v| i32::from(v)).collect();
+            let b = fill_i8(k * n, (k * 29 + m) as u64);
+            let want = qgemm_naive(m, k, n, &a32, &b);
+            let bp = PackedBi8::pack(k, n, &b);
+            let mut got = vec![0i32; m * n];
+            qgemm_prepacked_i8(m, k, &bp, &a8, &mut got);
+            assert_eq!(got, want, "i8 simd path diverged at m={m} k={k} n={n} ({:?})", bp.simd_isa());
+        }
+    }
+
+    #[test]
+    fn adversarial_extremes_survive_simd_dispatch() {
+        // all-(-128) activations × all-(-128) weights and alternating-sign
+        // K-pairs, end-to-end through qgemm (the tile-level versions live
+        // in tensor::simd) — pins the maddubs saturation fix
+        let (m, k, n) = (3usize, 512usize, 160usize);
+        let a8 = vec![-128i8; m * k];
+        let b = vec![-128i8; k * n];
+        let a32: Vec<i32> = a8.iter().map(|&v| i32::from(v)).collect();
+        let bp = PackedBi8::pack(k, n, &b);
+        let mut got = vec![0i32; m * n];
+        qgemm_prepacked_i8(m, k, &bp, &a8, &mut got);
+        assert_eq!(got, qgemm_naive(m, k, n, &a32, &b));
+        let alt: Vec<i8> = (0..m * k).map(|i| if i % 2 == 0 { 127 } else { -128 }).collect();
+        let alt32: Vec<i32> = alt.iter().map(|&v| i32::from(v)).collect();
+        let mut got = vec![0i32; m * n];
+        qgemm_prepacked_i8(m, k, &bp, &alt, &mut got);
+        assert_eq!(got, qgemm_naive(m, k, n, &alt32, &b));
+    }
+
+    #[test]
+    fn dense_hint_changes_nothing_numerically() {
+        let (m, k, n) = (9usize, 300usize, 50usize);
+        // plenty of zero activations so the skip actually fires
+        let a: Vec<i32> = fill_i32(m * k, 5, 2);
+        let b = fill_i8(k * n, 6);
+        let sparse = PackedBi8::pack_with(k, n, &b, false);
+        let dense = PackedBi8::pack_with(k, n, &b, true);
+        assert!(!sparse.dense_hint());
+        assert!(dense.dense_hint());
+        let mut got_s = vec![0i32; m * n];
+        let mut got_d = vec![0i32; m * n];
+        qgemm_prepacked(m, k, &sparse, &a, &mut got_s);
+        qgemm_prepacked(m, k, &dense, &a, &mut got_d);
+        assert_eq!(got_s, got_d);
+        assert_eq!(got_s, qgemm_naive(m, k, n, &a, &b));
+    }
+
+    #[test]
     fn i8_activation_path_matches_i32_path() {
         for &(m, k, n) in &[(1usize, 7usize, 3usize), (13, 130, 17), (65, 257, 129)] {
             let a8 = fill_i8(m * k, (m * 7 + n) as u64);
@@ -231,6 +468,33 @@ mod tests {
             qgemm_prepacked_i8(m, k, &bp, &a8, &mut got);
             assert_eq!(got, want, "i8 activations diverged at m={m} k={k} n={n}");
         }
+    }
+
+    #[test]
+    fn single_row_wide_output_splits_columns() {
+        // m = 1 used to force the serial path no matter how many cores
+        // (threads.min(m)); with the pool it splits NC panels instead.
+        // Correctness must hold on any machine, whichever path engages.
+        let (m, k, n) = (1usize, 2000usize, 1100usize);
+        assert!(m * k * n >= PAR_MAC_THRESHOLD);
+        let (rows, cols) = par_grid(m, n, 8);
+        assert_eq!(rows, 1);
+        assert_eq!(cols, 8);
+        let a = fill_i32(m * k, 77, 127);
+        let b = fill_i8(k * n, 78);
+        let bp = PackedBi8::pack(k, n, &b);
+        let mut got = vec![0i32; m * n];
+        qgemm_prepacked(m, k, &bp, &a, &mut got);
+        assert_eq!(got, qgemm_naive(m, k, n, &a, &b));
+    }
+
+    #[test]
+    fn par_grid_budgets_rows_then_columns() {
+        assert_eq!(par_grid(16, 4096, 8), (8, 1));
+        assert_eq!(par_grid(2, 4096, 8), (2, 4));
+        assert_eq!(par_grid(1, 100, 8), (1, 1)); // single NC block
+        assert_eq!(par_grid(1, 4096, 1), (1, 1));
+        assert_eq!(par_grid(3, 4096, 8), (3, 2));
     }
 
     #[test]

@@ -1,0 +1,371 @@
+//! Explicit-SIMD i8×i8→i32 microkernels behind runtime CPU detection.
+//!
+//! The quantized tier's inner loop (`qgemm_packed_rows`) is a scalar
+//! widen-multiply-accumulate that leans on autovectorization. This module
+//! supplies the explicit vector form — the core trick of the TVM QNN
+//! compiler and of FINN-R's compute cores: an i8×i8 multiply with
+//! pairwise widening into i32 lanes, fed from weight tiles repacked into
+//! the kernel's native interleaved layout at plan-compile time.
+//!
+//! # Dispatch
+//!
+//! [`detected_isa`] probes the CPU once (`is_x86_feature_detected!` /
+//! `is_aarch64_feature_detected!`, cached in a `OnceLock`); the
+//! `QONNX_FORCE_SCALAR` env knob overrides it per *call* via
+//! [`active_isa`], so a prepacked plan can be flipped to the scalar
+//! fallback at run time for A/B checks. Three paths:
+//!
+//! * **AVX2** — `_mm256_maddubs_epi16` pairwise u8×i8 widening. The
+//!   instruction's *saturating* i16 pair-sum is a correctness hazard for
+//!   full-range inputs (e.g. zero-offsetting activations to `[0,255]`
+//!   still saturates: `255·(−128)·2 = −65280 < i16::MIN`). We use the
+//!   **sign-split** fix instead: `a = a⁺ − a⁻` with `a⁺ = max(a,0) ∈
+//!   [0,127]` and `a⁻ = max(−a,0) ∈ [0,128]`. Then every maddubs pair-sum
+//!   is bounded by `2·127·128 = 32512` on the positive half and by
+//!   `−2·128·128 = −32768 = i16::MIN` (exactly representable, so the
+//!   saturating add is lossless) on the negative half — saturation-free
+//!   even at the `±127`/`−128` extremes. A proof test below pins this.
+//! * **NEON** — `vmull_s8` (signed widening multiply, no saturation
+//!   hazard) + `vpadalq_s16` pairwise accumulate into i32 lanes.
+//! * **Scalar** — the portable fallback. The packed-panel loop behind
+//!   [`crate::tensor::qgemm_prepacked`] *is* the scalar path for
+//!   production GEMMs; the interleaved-layout scalar walker here
+//!   (`tile_dot_scalar`) is the reference the vector paths are tested
+//!   against and the safety net on architectures without a kernel.
+//!
+//! All paths accumulate in exact i32 arithmetic, so they produce
+//! **identical bits** — the plan compiler's `< 2^24` accumulator proof
+//! makes overflow impossible and integer addition is order-free.
+//!
+//! # Interleaved tile layout
+//!
+//! Weight tiles (`KC×NC` blocks, same constants as the f32 kernel) are
+//! repacked once at plan-compile time into the microkernel's native
+//! layout: the k-extent padded to a multiple of [`K_GROUP`] (4) and the
+//! column extent to a multiple of [`J_GROUP`] (8) with zeros, then laid
+//! out j8-block-major:
+//!
+//! ```text
+//! for each 8-column block j0:
+//!   for each 4-row group k0:
+//!     32 bytes: [b(k0..k0+4, j0), b(k0..k0+4, j0+1), … b(k0..k0+4, j0+7)]
+//! ```
+//!
+//! One 32-byte chunk is exactly one AVX2 register (eight 4-byte column
+//! groups) and two NEON registers, so the hot loop reads contiguous,
+//! aligned-stride vectors with no gather. Zero padding contributes 0 to
+//! every dot product; column-tail lanes are masked on write-back.
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+
+use std::sync::OnceLock;
+
+/// k-extent grouping of the interleaved layout (bytes per column group).
+pub const K_GROUP: usize = 4;
+/// Column grouping of the interleaved layout (one 32-byte chunk).
+pub const J_GROUP: usize = 8;
+
+/// Instruction set the i8 microkernel dispatches to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    /// Portable scalar loop (also the `QONNX_FORCE_SCALAR` target).
+    Scalar,
+    /// x86-64 AVX2 `maddubs` path (sign-split activations).
+    Avx2,
+    /// AArch64 NEON `vmull_s8`/`vpadalq_s16` path.
+    Neon,
+}
+
+impl Isa {
+    /// Short lowercase name for reports (`plan` summary, `serve` banner).
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+
+    /// Whether this is a vector path (i.e. interleaved tiles are built).
+    pub fn is_simd(self) -> bool {
+        self != Isa::Scalar
+    }
+}
+
+impl std::fmt::Display for Isa {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+fn detect() -> Isa {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return Isa::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Isa::Neon;
+        }
+    }
+    Isa::Scalar
+}
+
+/// The best ISA the CPU supports, probed once per process.
+pub fn detected_isa() -> Isa {
+    static DETECTED: OnceLock<Isa> = OnceLock::new();
+    *DETECTED.get_or_init(detect)
+}
+
+/// Whether `QONNX_FORCE_SCALAR` demands the portable fallback. Read per
+/// call (not cached) so tests and operators can flip it at run time.
+pub fn force_scalar() -> bool {
+    std::env::var_os("QONNX_FORCE_SCALAR").is_some_and(|v| !v.is_empty() && v != "0")
+}
+
+/// The ISA in effect right now: [`detected_isa`] unless
+/// `QONNX_FORCE_SCALAR` overrides it.
+pub fn active_isa() -> Isa {
+    if force_scalar() {
+        Isa::Scalar
+    } else {
+        detected_isa()
+    }
+}
+
+/// Padded byte length of one interleaved `kc_len × nc_len` tile.
+pub(crate) fn padded_tile_len(kc_len: usize, nc_len: usize) -> usize {
+    kc_len.div_ceil(K_GROUP) * K_GROUP * nc_len.div_ceil(J_GROUP) * J_GROUP
+}
+
+/// Append the interleaved form of the `kc_len × nc_len` tile of row-major
+/// `b` (`[k, n]`) at block origin `(kc0, nc0)` onto `out`. Out-of-range
+/// positions (k/column padding) are zero-filled.
+pub(crate) fn interleave_tile(
+    b: &[i8],
+    n: usize,
+    kc0: usize,
+    kc_len: usize,
+    nc0: usize,
+    nc_len: usize,
+    out: &mut Vec<i8>,
+) {
+    let kp = kc_len.div_ceil(K_GROUP) * K_GROUP;
+    let np = nc_len.div_ceil(J_GROUP) * J_GROUP;
+    out.reserve(kp * np);
+    for j0 in (0..np).step_by(J_GROUP) {
+        for k0 in (0..kp).step_by(K_GROUP) {
+            for jj in 0..J_GROUP {
+                for kk in 0..K_GROUP {
+                    let (ki, ji) = (k0 + kk, j0 + jj);
+                    let v = if ki < kc_len && ji < nc_len {
+                        b[(kc0 + ki) * n + (nc0 + ji)]
+                    } else {
+                        0
+                    };
+                    out.push(v);
+                }
+            }
+        }
+    }
+}
+
+/// `out[j] += dot(a, tile_column_j)` over one interleaved tile.
+///
+/// `a` is the activation strip (`kc_len` values, `kc_len ≤ GEMM_KC`),
+/// `tile` the interleaved tile bytes (length
+/// `padded_tile_len(a.len(), out.len())`), `out` the `nc_len` output
+/// accumulators. Every path produces identical bits (exact i32 math).
+#[inline]
+pub(crate) fn tile_dot(isa: Isa, a: &[i8], tile: &[i8], out: &mut [i32]) {
+    debug_assert_eq!(tile.len(), padded_tile_len(a.len(), out.len()));
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: callers only pass Isa::Avx2 when detection proved AVX2.
+        Isa::Avx2 => unsafe { avx2::tile_dot(a, tile, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: callers only pass Isa::Neon when detection proved NEON.
+        Isa::Neon => unsafe { neon::tile_dot(a, tile, out) },
+        _ => tile_dot_scalar(a, tile, out),
+    }
+}
+
+/// Scalar walker of the interleaved layout — the reference the vector
+/// paths are property-tested against, and the fallback when a plan
+/// packed tiles for an ISA the run-time override disabled.
+pub(crate) fn tile_dot_scalar(a: &[i8], tile: &[i8], out: &mut [i32]) {
+    let kc = a.len();
+    let kp = kc.div_ceil(K_GROUP) * K_GROUP;
+    for (j, o) in out.iter_mut().enumerate() {
+        let base = (j / J_GROUP) * kp * J_GROUP + (j % J_GROUP) * K_GROUP;
+        let mut acc = 0i32;
+        for g in 0..kp / K_GROUP {
+            let chunk = base + g * K_GROUP * J_GROUP;
+            for kk in 0..K_GROUP {
+                let ki = g * K_GROUP + kk;
+                if ki < kc {
+                    acc += i32::from(a[ki]) * i32::from(tile[chunk + kk]);
+                }
+            }
+        }
+        *o += acc;
+    }
+}
+
+/// Every ISA the current host can actually execute (scalar always).
+#[cfg(test)]
+pub(crate) fn available_isas() -> Vec<Isa> {
+    let mut isas = vec![Isa::Scalar];
+    if detected_isa().is_simd() {
+        isas.push(detected_isa());
+    }
+    isas
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_dot(a: &[i8], b: &[i8], nc: usize) -> Vec<i32> {
+        // b is row-major [a.len(), nc]
+        let mut out = vec![0i32; nc];
+        for (ki, &av) in a.iter().enumerate() {
+            for j in 0..nc {
+                out[j] += i32::from(av) * i32::from(b[ki * nc + j]);
+            }
+        }
+        out
+    }
+
+    fn check(a: &[i8], b: &[i8], nc: usize) {
+        let want = naive_dot(a, b, nc);
+        let mut tile = Vec::new();
+        interleave_tile(b, nc, 0, a.len(), 0, nc, &mut tile);
+        assert_eq!(tile.len(), padded_tile_len(a.len(), nc));
+        for isa in available_isas() {
+            let mut got = vec![0i32; nc];
+            tile_dot(isa, a, &tile, &mut got);
+            assert_eq!(got, want, "{isa} diverged at k={} nc={nc}", a.len());
+            // accumulation (not overwrite): a second call doubles
+            tile_dot(isa, a, &tile, &mut got);
+            let doubled: Vec<i32> = want.iter().map(|v| v * 2).collect();
+            assert_eq!(got, doubled, "{isa} did not accumulate");
+        }
+    }
+
+    fn fill_i8(len: usize, seed: u64) -> Vec<i8> {
+        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(1);
+        (0..len)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                (s >> 40) as i8
+            })
+            .collect()
+    }
+
+    #[test]
+    fn prop_paths_match_naive_on_odd_shapes() {
+        for &(k, nc) in &[
+            (1usize, 1usize),
+            (1, 9),
+            (3, 5),
+            (4, 8),
+            (5, 8),
+            (7, 17),
+            (31, 63),
+            (63, 31),
+            (250, 120),
+            (255, 127),
+            (256, 128),
+        ] {
+            let a = fill_i8(k, (k * 31 + nc) as u64);
+            let b = fill_i8(k * nc, (k * 7 + nc * 3) as u64);
+            check(&a, &b, nc);
+        }
+    }
+
+    #[test]
+    fn maddubs_saturation_proof_at_extremes() {
+        // The pairs that break a naive maddubs use: every combination of
+        // extreme activation and weight values, over a full-depth strip
+        // (k = 256 keeps per-pair sums at the ±32512 / −32768 boundary
+        // for 64 consecutive groups). A saturating path would clamp and
+        // diverge from the exact i32 reference.
+        let extremes: [i8; 5] = [-128, -127, 127, 126, 1];
+        for &av in &extremes {
+            for &bv in &extremes {
+                let a = vec![av; 256];
+                let b = vec![bv; 256 * 8];
+                check(&a, &b, 8);
+            }
+        }
+    }
+
+    #[test]
+    fn adversarial_alternating_sign_k_pairs() {
+        // Alternating-sign activations make adjacent maddubs pairs land
+        // on opposite extremes — the exact shape the sign-split must
+        // keep separated (mixing them inside one saturating i16 add is
+        // where the zero-offset trick fails).
+        let k = 256;
+        let a: Vec<i8> = (0..k).map(|i| if i % 2 == 0 { 127 } else { -128 }).collect();
+        let b = vec![-128i8; k * 8];
+        check(&a, &b, 8);
+        let a2: Vec<i8> = (0..k).map(|i| if i % 2 == 0 { -128 } else { 127 }).collect();
+        let b2 = vec![127i8; k * 8];
+        check(&a2, &b2, 8);
+        // all-(-128) activations × all-(-128) weights: max-magnitude
+        // positive accumulation, 256·16384 = 2^22 (under the 2^24 proof)
+        let a3 = vec![-128i8; k];
+        let b3 = vec![-128i8; k * 8];
+        check(&a3, &b3, 8);
+    }
+
+    #[test]
+    fn interleave_pads_with_zeros_and_offsets_correctly() {
+        // 5×9 tile inside a 6×20 matrix at origin (1, 10)
+        let (k, n) = (6usize, 20usize);
+        let b = fill_i8(k * n, 42);
+        let (kc0, kc_len, nc0, nc_len) = (1usize, 5usize, 10usize, 9usize);
+        let mut tile = Vec::new();
+        interleave_tile(&b, n, kc0, kc_len, nc0, nc_len, &mut tile);
+        assert_eq!(tile.len(), padded_tile_len(kc_len, nc_len)); // 8 * 16
+        // spot-check mapping: chunk for j-block 0, k-group 0, column 2,
+        // byte 3 holds b[kc0+3, nc0+2]
+        assert_eq!(tile[2 * K_GROUP + 3], b[(kc0 + 3) * n + nc0 + 2]);
+        // k-padding byte (ki=5..7 rows of group 1) is zero
+        assert_eq!(tile[K_GROUP * J_GROUP + 1], 0); // group 1, col 0, kk=1 -> ki=5
+        // column padding block (j=9..15) is all zero in its lanes
+        let blk1 = kc_len.div_ceil(K_GROUP) * K_GROUP * J_GROUP;
+        for jj in 1..J_GROUP {
+            for g in 0..2 {
+                for kk in 0..K_GROUP {
+                    assert_eq!(tile[blk1 + g * 32 + jj * K_GROUP + kk], 0);
+                }
+            }
+        }
+        // and the scalar walker agrees with a direct dot on the subtile
+        let a = fill_i8(kc_len, 7);
+        let sub: Vec<i8> = (0..kc_len)
+            .flat_map(|ki| (0..nc_len).map(move |ji| b[(kc0 + ki) * n + (nc0 + ji)]))
+            .collect();
+        let want = naive_dot(&a, &sub, nc_len);
+        let mut got = vec![0i32; nc_len];
+        tile_dot_scalar(&a, &tile, &mut got);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn force_scalar_env_is_live() {
+        // not asserting on the ambient env (other tests may set it);
+        // just pin the parsing contract
+        assert!(matches!(active_isa(), Isa::Scalar | Isa::Avx2 | Isa::Neon));
+        assert_eq!(detected_isa(), detected_isa());
+    }
+}

@@ -1,0 +1,59 @@
+//! NEON i8×i8→i32 tile kernel: `vmull_s8` signed widening multiply (no
+//! saturation hazard — products are exact in i16) + `vpadalq_s16`
+//! pairwise accumulate into i32 lanes, recombined per column with
+//! `vpaddq_s32` at block end. Reads the same interleaved layout as the
+//! AVX2 path, one 32-byte chunk as four 8-byte halves.
+
+use super::{J_GROUP, K_GROUP};
+use crate::tensor::GEMM_KC;
+
+#[cfg(target_arch = "aarch64")]
+use std::arch::aarch64::*;
+
+/// # Safety
+/// Caller must have verified NEON support (baseline on AArch64, still
+/// probed). `tile` must be the interleaved form of a
+/// `a.len() × out.len()` tile, and `a.len() <= GEMM_KC`.
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn tile_dot(a: &[i8], tile: &[i8], out: &mut [i32]) {
+    let kc = a.len();
+    debug_assert!(kc <= GEMM_KC, "activation strip exceeds KC");
+    let kp = kc.div_ceil(K_GROUP) * K_GROUP;
+    let groups = kp / K_GROUP;
+    let nc = out.len();
+    let np = nc.div_ceil(J_GROUP) * J_GROUP;
+    debug_assert_eq!(tile.len(), kp * np);
+    // duplicated activation groups: [a0,a1,a2,a3, a0,a1,a2,a3] per
+    // 4-group, so one 8-byte load pairs with two adjacent columns
+    let mut adup = [0i8; 2 * GEMM_KC];
+    for g in 0..groups {
+        for kk in 0..K_GROUP {
+            let ki = g * K_GROUP + kk;
+            let v = if ki < kc { a[ki] } else { 0 };
+            adup[g * 2 * K_GROUP + kk] = v;
+            adup[g * 2 * K_GROUP + K_GROUP + kk] = v;
+        }
+    }
+    for j0 in (0..np).step_by(J_GROUP) {
+        let base = (j0 / J_GROUP) * kp * J_GROUP;
+        // two i32 lanes per column; vpaddq folds them at block end
+        let mut acc01 = vdupq_n_s32(0);
+        let mut acc23 = vdupq_n_s32(0);
+        let mut acc45 = vdupq_n_s32(0);
+        let mut acc67 = vdupq_n_s32(0);
+        for g in 0..groups {
+            let av = vld1_s8(adup.as_ptr().add(g * 2 * K_GROUP));
+            let chunk = tile.as_ptr().add(base + g * K_GROUP * J_GROUP);
+            acc01 = vpadalq_s16(acc01, vmull_s8(vld1_s8(chunk), av));
+            acc23 = vpadalq_s16(acc23, vmull_s8(vld1_s8(chunk.add(8)), av));
+            acc45 = vpadalq_s16(acc45, vmull_s8(vld1_s8(chunk.add(16)), av));
+            acc67 = vpadalq_s16(acc67, vmull_s8(vld1_s8(chunk.add(24)), av));
+        }
+        let mut lanes = [0i32; J_GROUP];
+        vst1q_s32(lanes.as_mut_ptr(), vpaddq_s32(acc01, acc23));
+        vst1q_s32(lanes.as_mut_ptr().add(4), vpaddq_s32(acc45, acc67));
+        for (jj, &lane) in lanes.iter().take((nc - j0).min(J_GROUP)).enumerate() {
+            out[j0 + jj] += lane;
+        }
+    }
+}

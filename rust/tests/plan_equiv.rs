@@ -558,6 +558,46 @@ fn sharded_batcher_workers_share_one_arc_plan() {
     assert_eq!(Arc::strong_count(&plan), 1);
 }
 
+/// The PR-6 acceptance case: quantized plans are byte-identical across
+/// microkernel substrates. `QONNX_FORCE_SCALAR=1` is honored two ways —
+/// a plan compiled under it packs no SIMD tiles at all, and a plan
+/// compiled with tiles flips back to the scalar panels at run time — and
+/// both match the detected-best run bit for bit (i32 accumulation is
+/// order-free, so the ISA cannot leak into values).
+#[test]
+fn forced_scalar_plans_are_byte_identical_to_simd() {
+    for name in ["TFC-w2a2", "CNV-w2a2"] {
+        let mut g = zoo::build(name, 1, 32).unwrap();
+        transforms::cleanup(&mut g).unwrap();
+        let sl = qonnx::streamline::try_streamline(&g).unwrap();
+        assert!(sl.report.ok, "{}", sl.report.render());
+        let sg = sl.graph;
+        let inputs = random_inputs(&sg, 61);
+
+        // detected-best substrate (scalar on hosts without AVX2/NEON)
+        let best = ExecutionPlan::compile(&sg).unwrap();
+        assert!(best.summary().contains("kernel substrate"), "{}", best.summary());
+        let want = best.run(&inputs).unwrap();
+
+        std::env::set_var("QONNX_FORCE_SCALAR", "1");
+        // freshly compiled: packs scalar panels only
+        let scalar = ExecutionPlan::compile(&sg).unwrap();
+        assert!(
+            scalar.summary().contains("forced scalar")
+                && scalar.summary().contains("0/"),
+            "{}",
+            scalar.summary()
+        );
+        let got_scalar = scalar.run(&inputs).unwrap();
+        // already-compiled (possibly SIMD-tiled): flips at run time
+        let got_flipped = best.run(&inputs).unwrap();
+        std::env::remove_var("QONNX_FORCE_SCALAR");
+
+        assert_eq!(want, got_scalar, "'{name}': scalar-packed plan diverged");
+        assert_eq!(want, got_flipped, "'{name}': runtime scalar flip diverged");
+    }
+}
+
 /// One compiled plan serves every batch size: replicated rows give
 /// replicated (bit-identical) outputs.
 #[test]
