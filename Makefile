@@ -1,9 +1,9 @@
 # Repo-level tooling. `make check` is the CI gate: build, tests, format,
 # and lints over the rust crate.
 
-.PHONY: check build test fmt clippy doc bench bench-build examples-build
+.PHONY: check build test test-faults fmt clippy doc bench bench-build examples-build
 
-check: build test fmt clippy doc bench-build examples-build
+check: build test test-faults fmt clippy doc bench-build examples-build
 
 build:
 	cd rust && cargo build --release
@@ -12,6 +12,13 @@ build:
 # compile) and keeps the CNV-sized equivalence tests fast.
 test:
 	cd rust && cargo test -q --release
+
+# Serving-robustness suite on its own: fault injection (errors, panics,
+# stalls) against the batcher — bounded admission, deadlines, shard
+# restart, degraded modes, shutdown semantics. Part of `test` too; this
+# target gives CI a separately-visible gate.
+test-faults:
+	cd rust && cargo test -q --release --test serving_faults
 
 fmt:
 	cd rust && cargo fmt --check
@@ -25,14 +32,17 @@ doc:
 	cd rust && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
 # Interpreter-vs-plan throughput comparison (plus the PJRT sections when
-# artifacts are present). Writes machine-readable BENCH_PR6.json to the
+# artifacts are present). Writes machine-readable BENCH_PR7.json to the
 # repo root (Melem/s, GMAC/s, plan-vs-interpreter speedups, the
 # batched-CNV b1/b8/b32 batch-symbolic-vs-per-sample comparison, the
 # integer-streamlined-vs-packed-float kernel-tier section, the PR-5
 # resident-int-vs-convert-per-call section on TFC/CNV b1/b8, and the
 # PR-6 scalar-vs-SIMD-vs-SIMD+pool microkernel section on CNV b1/b8/b32
-# with the shards x intra-op serving sweep; asserts the SIMD path clears
-# 2x over scalar on CNV b32 when the host has AVX2/NEON).
+# with the shards x intra-op serving sweep, and the PR-7 overload
+# section: open-loop submitters against a cap-32 queue recording
+# shed rate + p99 and asserting queue depth never exceeds the cap;
+# also asserts the SIMD path clears 2x over scalar on CNV b32 when the
+# host has AVX2/NEON).
 bench:
 	cd rust && cargo bench --bench bench_exec
 

@@ -6,6 +6,7 @@
 use qonnx::bench_support::{bench, bench_for, section};
 use qonnx::coordinator::{
     Batcher, BatcherConfig, InferenceEngine, PjrtEngine, PlannedEngine, ReferenceEngine,
+    SubmitError,
 };
 use qonnx::ir::Node;
 use qonnx::plan::{ExecutionPlan, PlanOptions};
@@ -19,7 +20,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 /// Machine-readable results for CI trend tracking (`make bench` writes
-/// this to the repo root as BENCH_PR6.json).
+/// this to the repo root as BENCH_PR7.json).
 #[derive(Default)]
 struct BenchJson {
     entries: Vec<(String, f64)>,
@@ -543,6 +544,7 @@ fn main() -> anyhow::Result<()> {
                 BatcherConfig {
                     max_wait: Duration::from_micros(200),
                     intraop_threads: intraop,
+                    ..Default::default()
                 },
                 shards,
             )?);
@@ -639,6 +641,65 @@ fn main() -> anyhow::Result<()> {
         2.0 * 256f64.powi(3) / st_pp.mean.as_secs_f64() / 1e9,
     );
 
-    json.write(concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR6.json"));
+    section("overload: bounded admission + shed rate (CNV plan, queue cap 32)");
+    // open-loop submitters push far past capacity: the server sheds typed
+    // at admission instead of queueing unboundedly, so queue depth (and
+    // with it tail latency) stays bounded by cap x service time
+    {
+        let template = PlannedEngine::from_zoo("CNV-w2a2")?;
+        let t = template.share();
+        let batcher = Arc::new(Batcher::start_sharded(
+            move || Ok(Box::new(t.share()) as Box<dyn InferenceEngine>),
+            BatcherConfig {
+                max_wait: Duration::from_micros(200),
+                queue_capacity: Some(32),
+                ..Default::default()
+            },
+            2,
+        )?);
+        let total = 4 * 256u64;
+        let mut handles = Vec::new();
+        for c in 0..4u64 {
+            let b = batcher.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut shed = 0u64;
+                let mut responses = Vec::new();
+                for i in 0..256u64 {
+                    let v = (c * 256 + i) as f32 / 1024.0;
+                    match b.submit(vec![v; 3072]) {
+                        Ok(r) => responses.push(r),
+                        Err(SubmitError::Shed { .. }) => shed += 1,
+                        Err(e) => panic!("unexpected submit error: {e}"),
+                    }
+                }
+                for r in responses {
+                    r.wait().unwrap();
+                }
+                shed
+            }));
+        }
+        let shed: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        let m = batcher.metrics();
+        let shed_rate = shed as f64 / total as f64;
+        let p99 = m.latency().quantile_us(0.99);
+        assert!(
+            m.queue_depth_peak() <= 32,
+            "queue depth exceeded the cap: {}",
+            m.queue_depth_peak()
+        );
+        println!(
+            "submitted {total}, completed {}, shed {shed} ({:.1}% shed), p50 {}us, \
+             p99 {p99}us, peak depth {}",
+            m.completed(),
+            100.0 * shed_rate,
+            m.latency().quantile_us(0.5),
+            m.queue_depth_peak()
+        );
+        json.record("overload_shed_rate", shed_rate);
+        json.record("overload_p99_us", p99 as f64);
+        json.record("overload_completed", m.completed() as f64);
+    }
+
+    json.write(concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR7.json"));
     Ok(())
 }

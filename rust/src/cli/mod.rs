@@ -52,7 +52,8 @@ Training & serving:
   train --w N --a N [--epochs N] [--out <file>]   QAT on synth-digits
   infer <artifact-stem>      load + self-check a PJRT artifact
   serve [--artifact <stem>] [--zoo <name>] [--requests N] [--clients N]
-        [--shards N] [--intraop-threads N]
+        [--shards N] [--intraop-threads N] [--queue-cap N]
+        [--deadline-ms N] [--metrics]
                              batching server demo; serves a zoo model via
                              the compiled ExecutionPlan when no PJRT
                              artifact is present (or --zoo is given) —
@@ -65,7 +66,27 @@ Training & serving:
                              fan-out on the shared worker pool (default:
                              pool threads / shards, so shards x intra-op
                              stays <= cores); startup reports the ISA and
-                             thread configuration
+                             thread configuration.
+                             Robust serving: --queue-cap bounds the request
+                             queue — when full, submission fails with a
+                             typed Shed{queue_depth} error instead of
+                             queueing without limit (the demo clients back
+                             off and retry). --deadline-ms attaches a
+                             deadline to every request; an expired request
+                             gets a typed DeadlineExceeded response instead
+                             of spending a batch slot. Shards that panic
+                             are supervised: restarted with capped backoff,
+                             and the run reports health (live/dead shards,
+                             restart count). --metrics prints the serving
+                             metrics exposition (latency p50/p95/p99, queue
+                             depth + peak, shed/deadline/restart counters)
+                             after the run. Fault injection (deterministic,
+                             for soak testing): set QONNX_FAULT_SEED=N
+                             [QONNX_FAULT_RATE=0.1]
+                             [QONNX_FAULT_KIND=error|panic|stall:<ms>] to
+                             make engine calls fail on a seeded schedule —
+                             the server sheds, restarts, and typed-fails
+                             instead of hanging
 ";
 
 fn parse_flag(args: &[String], key: &str) -> Option<String> {
@@ -378,6 +399,27 @@ fn infer_cmd(rest: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Wrap an engine in the fault injector when env-hook injection is on.
+fn wrap_faulty(
+    engine: Box<dyn coordinator::InferenceEngine>,
+    inj: &Option<coordinator::FaultInjector>,
+) -> Box<dyn coordinator::InferenceEngine> {
+    match inj {
+        Some(f) => Box::new(coordinator::FaultyEngine::new(engine, f.clone())),
+        None => engine,
+    }
+}
+
+/// Per-client outcome tally for the serve demo.
+#[derive(Default)]
+struct ClientTally {
+    ok: u64,
+    deadline: u64,
+    faulted: u64,
+    shed_events: u64,
+    gave_up: u64,
+}
+
 fn serve_cmd(rest: &[String]) -> Result<()> {
     let stem = parse_flag(rest, "--artifact")
         .map(PathBuf::from)
@@ -387,6 +429,10 @@ fn serve_cmd(rest: &[String]) -> Result<()> {
     let shards: usize = parse_flag(rest, "--shards").map(|s| s.parse()).transpose()?.unwrap_or(1);
     let intraop: Option<usize> =
         parse_flag(rest, "--intraop-threads").map(|s| s.parse()).transpose()?;
+    let queue_cap: Option<usize> = parse_flag(rest, "--queue-cap").map(|s| s.parse()).transpose()?;
+    let deadline_ms: Option<u64> =
+        parse_flag(rest, "--deadline-ms").map(|s| s.parse()).transpose()?;
+    let show_metrics = has_flag(rest, "--metrics");
     let zoo_name = parse_flag(rest, "--zoo");
     let artifact_requested = has_flag(rest, "--artifact");
     let have_artifact = stem.with_extension("hlo.txt").exists();
@@ -400,6 +446,18 @@ fn serve_cmd(rest: &[String]) -> Result<()> {
         bail!("--shards must be at least 1");
     }
 
+    // deterministic fault injection (QONNX_FAULT_SEED env hooks): every
+    // shard's engine gets wrapped; failures become typed responses,
+    // restarts, and health deltas instead of hangs
+    let fault = coordinator::FaultInjector::from_env();
+    if fault.is_some() {
+        println!(
+            "fault injection ON (QONNX_FAULT_SEED set; rate {}, kind {})",
+            std::env::var("QONNX_FAULT_RATE").unwrap_or_else(|_| "0.1".into()),
+            std::env::var("QONNX_FAULT_KIND").unwrap_or_else(|_| "error".into()),
+        );
+    }
+
     // the shards × intra-op trade: request-parallelism across shards,
     // kernel-parallelism inside each, bounded by the shared pool
     let pool_threads = crate::runtime::pool::global().threads();
@@ -410,15 +468,21 @@ fn serve_cmd(rest: &[String]) -> Result<()> {
         crate::tensor::simd::active_isa(),
         if crate::tensor::simd::force_scalar() { "forced scalar" } else { "detected" },
     );
-    let cfg = coordinator::BatcherConfig { intraop_threads: intraop, ..Default::default() };
+    let cfg = coordinator::BatcherConfig {
+        intraop_threads: intraop,
+        queue_capacity: queue_cap,
+        ..Default::default()
+    };
 
     let batcher = if zoo_name.is_none() && have_artifact {
         // PJRT executables are thread-affine: each shard loads its own
+        let inj = fault.clone();
         coordinator::Batcher::start_sharded(
             move || {
                 let rt = runtime::PjrtRuntime::cpu()?;
-                Ok(Box::new(coordinator::PjrtEngine::load(&rt, &stem)?)
-                    as Box<dyn coordinator::InferenceEngine>)
+                let engine = Box::new(coordinator::PjrtEngine::load(&rt, &stem)?)
+                    as Box<dyn coordinator::InferenceEngine>;
+                Ok(wrap_faulty(engine, &inj))
             },
             cfg,
             shards,
@@ -438,8 +502,12 @@ fn serve_cmd(rest: &[String]) -> Result<()> {
         if shards > 1 {
             println!("({shards} batcher shards sharing one compiled plan)");
         }
+        let inj = fault.clone();
         coordinator::Batcher::start_sharded(
-            move || Ok(Box::new(template.share()) as Box<dyn coordinator::InferenceEngine>),
+            move || {
+                let engine = Box::new(template.share()) as Box<dyn coordinator::InferenceEngine>;
+                Ok(wrap_faulty(engine, &inj))
+            },
             cfg,
             shards,
         )?
@@ -447,6 +515,8 @@ fn serve_cmd(rest: &[String]) -> Result<()> {
     // row lengths come from the engine's startup handshake, so both
     // branches serve correctly-sized requests for any model
     let (in_dim, out_dim) = (batcher.input_dim(), batcher.output_dim());
+    let fault_mode = fault.is_some();
+    let deadline = deadline_ms.map(std::time::Duration::from_millis);
     let batcher = std::sync::Arc::new(batcher);
     println!("serving with {clients} clients x {} requests each...", requests / clients);
     let start = std::time::Instant::now();
@@ -454,21 +524,69 @@ fn serve_cmd(rest: &[String]) -> Result<()> {
     for c in 0..clients {
         let b = batcher.clone();
         let per_client = requests / clients;
-        handles.push(std::thread::spawn(move || -> Result<()> {
+        handles.push(std::thread::spawn(move || -> Result<ClientTally> {
             let mut rng = zoo::rng::Rng::new(c as u64 + 1);
+            let mut tally = ClientTally::default();
             for _ in 0..per_client {
                 let input: Vec<f32> = (0..in_dim).map(|_| rng.uniform()).collect();
-                let out = b.infer(input)?;
-                anyhow::ensure!(out.len() == out_dim);
+                let opts = coordinator::SubmitOptions { deadline, submit_timeout: None };
+                let mut attempts = 0usize;
+                loop {
+                    attempts += 1;
+                    match b.submit_with(input.clone(), opts) {
+                        Ok(resp) => {
+                            match resp.wait() {
+                                Ok(out) => {
+                                    anyhow::ensure!(out.len() == out_dim);
+                                    tally.ok += 1;
+                                }
+                                Err(coordinator::ServeError::DeadlineExceeded { .. }) => {
+                                    tally.deadline += 1;
+                                }
+                                Err(
+                                    e @ (coordinator::ServeError::Engine { .. }
+                                    | coordinator::ServeError::ShardPanicked { .. }),
+                                ) => {
+                                    // with injection on, typed failures are
+                                    // the point; without it they are real
+                                    if fault_mode {
+                                        tally.faulted += 1;
+                                    } else {
+                                        return Err(anyhow::Error::new(e));
+                                    }
+                                }
+                                Err(e) => return Err(anyhow::Error::new(e)),
+                            }
+                            break;
+                        }
+                        // typed shed: back off briefly and retry
+                        Err(coordinator::SubmitError::Shed { .. }) => {
+                            tally.shed_events += 1;
+                            if attempts >= 64 {
+                                tally.gave_up += 1;
+                                break;
+                            }
+                            std::thread::sleep(std::time::Duration::from_micros(200));
+                        }
+                        Err(e) => return Err(anyhow::Error::new(e)),
+                    }
+                }
             }
-            Ok(())
+            Ok(tally)
         }));
     }
+    let mut total = ClientTally::default();
     for h in handles {
-        h.join().unwrap()?;
+        let t = h.join().unwrap()?;
+        total.ok += t.ok;
+        total.deadline += t.deadline;
+        total.faulted += t.faulted;
+        total.shed_events += t.shed_events;
+        total.gave_up += t.gave_up;
     }
     let elapsed = start.elapsed();
     let stats = batcher.stats();
+    let health = batcher.health();
     println!(
         "served {} requests in {:.3}s  ({:.0} req/s, mean latency {:.0}us, max {}us, mean batch {:.2})",
         stats.requests,
@@ -478,5 +596,16 @@ fn serve_cmd(rest: &[String]) -> Result<()> {
         stats.max_latency_us,
         stats.mean_batch_occupancy()
     );
+    println!(
+        "outcomes: {} ok, {} deadline-exceeded, {} faulted, {} shed events ({} gave up)",
+        total.ok, total.deadline, total.faulted, total.shed_events, total.gave_up
+    );
+    println!(
+        "health: {}/{} shards live, {} restarts, {} permanently dead",
+        health.live, health.shards, health.restarts, health.dead
+    );
+    if show_metrics {
+        print!("{}", batcher.metrics_text());
+    }
     Ok(())
 }

@@ -1,26 +1,60 @@
-//! Dynamic micro-batching request loop, optionally sharded.
+//! Dynamic micro-batching request loop with explicit failure handling:
+//! bounded admission, request deadlines, and supervised worker shards.
 //!
-//! Requests enter an mpsc queue; a worker drains up to
-//! `engine.max_batch()` of them or waits at most `max_wait` for stragglers
-//! (size-or-deadline triggering, the standard serving-batcher policy),
-//! executes one fused inference, and scatters the rows back to per-request
-//! channels. Latency and batch-occupancy stats are recorded for the bench
-//! harness.
+//! Requests enter ONE shared, capacity-limited queue
+//! ([`BatcherConfig::queue_capacity`]); when the queue is full, [`Batcher::submit`]
+//! returns a typed [`SubmitError::Shed`] instead of growing without bound
+//! (callers willing to wait pass [`SubmitOptions::submit_timeout`]). Each
+//! worker drains up to `engine.max_batch()` requests or waits at most
+//! `max_wait` for stragglers (size-or-deadline triggering, the standard
+//! serving-batcher policy), executes one fused inference, and scatters the
+//! rows back to per-request channels. Requests may carry a deadline
+//! ([`SubmitOptions::deadline`]): already-expired requests are dropped at
+//! drain time with a typed [`ServeError::DeadlineExceeded`] instead of
+//! spending batch slots on dead work, and the batch closes early when the
+//! oldest member's deadline nears.
 //!
-//! [`Batcher::start_sharded`] runs N such workers over ONE shared queue:
-//! each worker holds the queue lock only while *draining* its batch and
-//! releases it before running inference, so shards overlap compute.
-//! Engines built from a shared template (e.g.
-//! [`super::PlannedEngine::share`]) make every shard serve the same
-//! `Arc`'d compiled plan — packed weights resident once, one
-//! scratch arena per worker.
+//! Failure is a first-class result, not a hang: engine errors and panics
+//! fail the in-flight batch with typed [`ServeError`]s, a panicked shard is
+//! restarted by the supervisor (`super::supervisor`) with capped
+//! exponential backoff, queue locking is poison-recovering (one crashed
+//! shard cannot wedge the others), and shutdown drains or typed-fails every
+//! queued request — a submitted request ALWAYS gets a definitive response.
+//!
+//! [`Batcher::start_sharded`] runs N workers over the shared queue: each
+//! worker holds the queue lock only while *draining* its batch and releases
+//! it before running inference, so shards overlap compute. Engines built
+//! from a shared template (e.g. [`super::PlannedEngine::share`]) make every
+//! shard serve the same `Arc`'d compiled plan. Serving counters and the
+//! latency histogram live in [`crate::metrics::serving`]
+//! ([`Batcher::metrics`]).
 
 use super::engine::InferenceEngine;
+use super::supervisor::{
+    self, DegradedPolicy, Health, InflightEntry, ShardPhase, ShardState, SupervisorConfig,
+};
+use crate::metrics::serving::ServingMetrics;
 use crate::tensor::Tensor;
 use anyhow::{anyhow, ensure, Result};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::collections::VecDeque;
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
+
+/// Lock a mutex, recovering from poison: a worker that panicked while
+/// holding the lock must not wedge every other shard (the guarded state
+/// is a request queue / phase tag, valid at every await point).
+pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// The multi-call engine factory shape retained for shard restarts.
+pub(crate) type EngineFactory = dyn Fn() -> Result<Box<dyn InferenceEngine>> + Send + Sync;
+
+/// Per-request response channel (typed result).
+pub(crate) type RespSender = mpsc::Sender<Result<Vec<f32>, ServeError>>;
 
 /// Batcher tuning.
 #[derive(Debug, Clone)]
@@ -33,18 +67,151 @@ pub struct BatcherConfig {
     /// request-parallelism is traded against per-request parallelism
     /// instead of oversubscribing.
     pub intraop_threads: Option<usize>,
+    /// Bounded admission: max queued (not yet drained) requests. When the
+    /// queue is full, `submit` sheds with [`SubmitError::Shed`] instead of
+    /// enqueueing. `None` = unbounded (the legacy behavior).
+    pub queue_capacity: Option<usize>,
+    /// Shard supervision: restart backoff, deadline sweep cadence,
+    /// degraded-mode policy ([`SupervisorConfig`]).
+    pub supervisor: SupervisorConfig,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { max_wait: Duration::from_millis(2), intraop_threads: None }
+        BatcherConfig {
+            max_wait: Duration::from_millis(2),
+            intraop_threads: None,
+            queue_capacity: None,
+            supervisor: SupervisorConfig::default(),
+        }
     }
 }
 
-struct Request {
-    input: Vec<f32>,
-    enqueued: Instant,
-    resp: mpsc::Sender<Result<Vec<f32>>>,
+/// Why a request was refused at admission (before entering the queue).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The bounded queue is full; the request was shed (not enqueued).
+    Shed { queue_depth: usize },
+    /// The server has shut down (or is shutting down).
+    ShutDown,
+    /// Every shard is dead and unrevivable — nothing can serve.
+    NoLiveShards,
+    /// Some shards are permanently dead and the configured policy
+    /// ([`DegradedPolicy::RefuseWhenDegraded`]) refuses degraded service.
+    Degraded { live: usize, shards: usize },
+    /// Input row length does not match the engine's input dim.
+    InvalidInput { got: usize, want: usize },
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::Shed { queue_depth } => {
+                write!(f, "request shed: queue full at depth {queue_depth}")
+            }
+            SubmitError::ShutDown => write!(f, "server is shut down"),
+            SubmitError::NoLiveShards => {
+                write!(f, "no live shards (all workers dead and unrevivable)")
+            }
+            SubmitError::Degraded { live, shards } => write!(
+                f,
+                "server degraded ({live}/{shards} shards live) and policy refuses degraded service"
+            ),
+            SubmitError::InvalidInput { got, want } => {
+                write!(f, "input length {got} != {want}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Why an admitted request failed to produce an output row.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The request's deadline passed before a result was produced.
+    /// `missed_by` is zero when the *caller's* wait timed out
+    /// (client-side enforcement) and positive when the server dropped or
+    /// swept the expired request.
+    DeadlineExceeded { missed_by: Duration },
+    /// `infer_batch` returned an error (or produced invalid output).
+    Engine { message: String },
+    /// The worker serving this request's batch panicked; the shard is
+    /// being restarted by the supervisor.
+    ShardPanicked { message: String },
+    /// The server shut down before this request could be served.
+    ShutDown,
+    /// Every shard died (restart budget exhausted) with this request
+    /// still queued.
+    NoLiveShards,
+    /// The response channel disconnected without a response — a serving
+    /// bug if it ever surfaces; typed so callers never panic on it.
+    ChannelClosed,
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::DeadlineExceeded { missed_by } => {
+                write!(f, "deadline exceeded (missed by {missed_by:?})")
+            }
+            ServeError::Engine { message } => write!(f, "engine error: {message}"),
+            ServeError::ShardPanicked { message } => {
+                write!(f, "shard panicked while serving this batch: {message}")
+            }
+            ServeError::ShutDown => write!(f, "server shut down before serving this request"),
+            ServeError::NoLiveShards => {
+                write!(f, "all shards dead (restart budget exhausted) with request queued")
+            }
+            ServeError::ChannelClosed => write!(f, "response channel closed without a response"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Per-submit options: deadline and admission wait.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SubmitOptions {
+    /// Drop the request (typed [`ServeError::DeadlineExceeded`]) if no
+    /// result is produced within this duration of submission. Enforced
+    /// server-side (drain-time drop, batch-close, supervisor sweep of
+    /// stalled shards) AND client-side in [`Response::wait`].
+    pub deadline: Option<Duration>,
+    /// When the bounded queue is full, wait up to this long for space
+    /// instead of shedding immediately.
+    pub submit_timeout: Option<Duration>,
+}
+
+pub(crate) struct Request {
+    pub(crate) input: Vec<f32>,
+    pub(crate) enqueued: Instant,
+    pub(crate) deadline: Option<Instant>,
+    pub(crate) resp: RespSender,
+}
+
+struct QueueState {
+    q: VecDeque<Request>,
+    /// false once shutdown begins: submits are refused
+    open: bool,
+}
+
+/// State shared between submitting clients, worker shards, and the
+/// supervisor thread.
+pub(crate) struct ServerShared {
+    queue: Mutex<QueueState>,
+    /// signaled on enqueue (wakes a draining worker)
+    work: Condvar,
+    /// signaled on dequeue (wakes `submit_timeout` waiters)
+    space: Condvar,
+    pub(crate) cfg: BatcherConfig,
+    pub(crate) shards: Vec<ShardState>,
+    pub(crate) metrics: Arc<ServingMetrics>,
+    stats: Stats,
+    pub(crate) shutdown: AtomicBool,
+    /// dims advertised at startup; a restarted shard must agree
+    expect_in: AtomicUsize,
+    expect_out: AtomicUsize,
 }
 
 /// Aggregated serving statistics.
@@ -74,26 +241,439 @@ impl ServerStats {
     }
 }
 
-/// A running batching server around one or more [`InferenceEngine`]
-/// worker shards.
-pub struct Batcher {
-    /// `None` once shutdown began — dropping the sender disconnects the
-    /// queue so every idle shard wakes immediately instead of each
-    /// burning a 50 ms poll in turn.
-    tx: Option<mpsc::Sender<Request>>,
-    in_dim: usize,
-    out_dim: usize,
-    stats: Arc<Stats>,
-    workers: Vec<std::thread::JoinHandle<()>>,
-    shutdown: Arc<AtomicBool>,
-}
-
 #[derive(Default)]
 struct Stats {
     requests: AtomicU64,
     batches: AtomicU64,
     total_latency_us: AtomicU64,
     max_latency_us: AtomicU64,
+}
+
+impl ServerShared {
+    /// Record a served row: latency stats + metrics, then deliver.
+    fn deliver_ok(&self, req: &Request, row: Vec<f32>) {
+        let lat = req.enqueued.elapsed().as_micros() as u64;
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        self.stats.total_latency_us.fetch_add(lat, Ordering::Relaxed);
+        self.stats.max_latency_us.fetch_max(lat, Ordering::Relaxed);
+        self.metrics.record_latency_us(lat);
+        let _ = req.resp.send(Ok(row));
+    }
+
+    /// Deliver a typed failure (to a queued/in-flight request's channel),
+    /// counting it in stats and metrics.
+    pub(crate) fn deliver_err_to(&self, resp: &RespSender, err: ServeError) {
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        match &err {
+            ServeError::DeadlineExceeded { .. } => self.metrics.inc_deadline_exceeded(),
+            _ => self.metrics.inc_failed(1),
+        }
+        let _ = resp.send(Err(err));
+    }
+
+    fn deliver_err(&self, req: &Request, err: ServeError) {
+        self.deliver_err_to(&req.resp, err);
+    }
+
+    /// First worker to claim wins; later (restarted) workers must agree.
+    fn claim_dims(&self, in_dim: usize, out_dim: usize) -> bool {
+        let a = self.expect_in.compare_exchange(0, in_dim, Ordering::SeqCst, Ordering::SeqCst);
+        let b = self.expect_out.compare_exchange(0, out_dim, Ordering::SeqCst, Ordering::SeqCst);
+        let in_ok = match a {
+            Ok(_) => true,
+            Err(prev) => prev == in_dim,
+        };
+        let out_ok = match b {
+            Ok(_) => true,
+            Err(prev) => prev == out_dim,
+        };
+        in_ok && out_ok
+    }
+
+    /// Take the queue, block for the first request, gather a batch until
+    /// `max_batch` / `max_wait` / the oldest member's deadline closes it.
+    /// Already-expired requests are dropped (typed) instead of spending
+    /// batch slots. Returns `None` at shutdown with an empty queue.
+    fn drain_batch(&self, max_batch: usize) -> Option<Vec<Request>> {
+        let mut batch: Vec<Request> = Vec::new();
+        let depth_after = {
+            let mut q = lock_recover(&self.queue);
+            // block (poll-free: condvar with a shutdown-check timeout)
+            // for the first request of the batch
+            loop {
+                let now = Instant::now();
+                match q.q.pop_front() {
+                    Some(r) => {
+                        if let Some(d) = r.deadline {
+                            if d <= now {
+                                self.deliver_err(
+                                    &r,
+                                    ServeError::DeadlineExceeded {
+                                        missed_by: now.duration_since(d),
+                                    },
+                                );
+                                continue;
+                            }
+                        }
+                        batch.push(r);
+                        break;
+                    }
+                    None => {
+                        if self.shutdown.load(Ordering::Relaxed) {
+                            return None;
+                        }
+                        let (g, _) = self
+                            .work
+                            .wait_timeout(q, Duration::from_millis(20))
+                            .unwrap_or_else(PoisonError::into_inner);
+                        q = g;
+                    }
+                }
+            }
+            // gather: close at max_wait OR the nearest member deadline,
+            // whichever comes first (don't let stragglers starve a
+            // deadline-bearing request of its service window)
+            let mut close = Instant::now() + self.cfg.max_wait;
+            if let Some(d) = batch[0].deadline {
+                close = close.min(d);
+            }
+            while batch.len() < max_batch {
+                let now = Instant::now();
+                if now >= close {
+                    break;
+                }
+                match q.q.pop_front() {
+                    Some(r) => {
+                        if let Some(d) = r.deadline {
+                            if d <= now {
+                                self.deliver_err(
+                                    &r,
+                                    ServeError::DeadlineExceeded {
+                                        missed_by: now.duration_since(d),
+                                    },
+                                );
+                                continue;
+                            }
+                            close = close.min(d);
+                        }
+                        batch.push(r);
+                    }
+                    None => {
+                        if self.shutdown.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        let (g, timeout) = self
+                            .work
+                            .wait_timeout(q, close.duration_since(now))
+                            .unwrap_or_else(PoisonError::into_inner);
+                        q = g;
+                        if timeout.timed_out() && q.q.is_empty() {
+                            break;
+                        }
+                    }
+                }
+            }
+            q.q.len()
+        };
+        self.space.notify_all();
+        self.metrics.set_queue_depth(depth_after);
+        Some(batch)
+    }
+
+    /// Remove and typed-fail every queued request whose deadline passed
+    /// (supervisor sweep: catches requests stuck behind stalled shards).
+    pub(crate) fn sweep_expired_queue(&self, now: Instant) {
+        let mut expired = Vec::new();
+        let depth = {
+            let mut q = lock_recover(&self.queue);
+            let mut i = 0;
+            while i < q.q.len() {
+                if q.q[i].deadline.is_some_and(|d| d <= now) {
+                    if let Some(r) = q.q.remove(i) {
+                        expired.push(r);
+                        continue;
+                    }
+                }
+                i += 1;
+            }
+            q.q.len()
+        };
+        if expired.is_empty() {
+            return;
+        }
+        self.metrics.set_queue_depth(depth);
+        self.space.notify_all();
+        for r in expired {
+            let d = r.deadline.expect("swept requests carry deadlines");
+            self.deliver_err(&r, ServeError::DeadlineExceeded { missed_by: now.duration_since(d) });
+        }
+    }
+
+    /// Typed-fail expired deadline-bearing requests currently in-flight on
+    /// a (possibly stalled) shard. The worker's own later scatter to the
+    /// same channel is harmless — the caller has already consumed this.
+    pub(crate) fn sweep_expired_inflight(&self, now: Instant) {
+        for shard in &self.shards {
+            let mut expired = Vec::new();
+            {
+                let mut inf = lock_recover(&shard.inflight);
+                let mut i = 0;
+                while i < inf.len() {
+                    if inf[i].deadline.is_some_and(|d| d <= now) {
+                        expired.push(inf.swap_remove(i));
+                        continue;
+                    }
+                    i += 1;
+                }
+            }
+            for e in expired {
+                let d = e.deadline.expect("filtered on deadline");
+                self.deliver_err_to(
+                    &e.resp,
+                    ServeError::DeadlineExceeded { missed_by: now.duration_since(d) },
+                );
+            }
+        }
+    }
+
+    /// Drain the whole queue, failing every request with `err` — used
+    /// when no shard can ever serve again, and at shutdown for leftovers.
+    pub(crate) fn fail_queue(&self, err: &ServeError) {
+        let drained: Vec<Request> = {
+            let mut q = lock_recover(&self.queue);
+            q.q.drain(..).collect()
+        };
+        if drained.is_empty() {
+            return;
+        }
+        self.metrics.set_queue_depth(0);
+        self.space.notify_all();
+        for r in drained {
+            self.deliver_err(&r, err.clone());
+        }
+    }
+
+    /// Typed-fail whatever shard `idx` still has registered in flight
+    /// (used when an unresponsive worker is abandoned at shutdown).
+    pub(crate) fn fail_inflight(&self, idx: usize, err: &ServeError) {
+        let drained: Vec<InflightEntry> =
+            lock_recover(&self.shards[idx].inflight).drain(..).collect();
+        for e in drained {
+            self.deliver_err_to(&e.resp, err.clone());
+        }
+    }
+
+    pub(crate) fn begin_close(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        lock_recover(&self.queue).open = false;
+        self.work.notify_all();
+        self.space.notify_all();
+    }
+}
+
+/// Extract a human-readable message from a panic payload.
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic payload of unknown type".to_string()
+    }
+}
+
+/// Spawn one shard worker: build the engine inside the thread (PJRT
+/// handles are thread-affine and `!Send`), report readiness (startup
+/// handshake) or phase (restart), then serve drained batches until
+/// shutdown or an engine panic. Used both at startup and by the
+/// supervisor for restarts.
+pub(crate) fn spawn_worker(
+    shared: Arc<ServerShared>,
+    factory: Arc<EngineFactory>,
+    idx: usize,
+    ready: Option<mpsc::Sender<Result<(usize, usize)>>>,
+) -> std::io::Result<std::thread::JoinHandle<()>> {
+    std::thread::Builder::new().name(format!("qonnx-shard-{idx}")).spawn(move || {
+        // budget this shard's intra-op fan-out so that across all shards
+        // the pool is not oversubscribed
+        let shards = shared.shards.len();
+        let budget = shared
+            .cfg
+            .intraop_threads
+            .unwrap_or_else(|| (crate::runtime::pool::global().threads() / shards).max(1));
+        crate::runtime::pool::set_thread_intraop_limit(budget);
+        let mut engine = match factory() {
+            Ok(e) => e,
+            Err(e) => {
+                let reason = format!("engine factory failed: {e:#}");
+                supervisor::set_phase(&shared.shards[idx], ShardPhase::Dead { reason });
+                if let Some(tx) = ready {
+                    let _ = tx.send(Err(e));
+                }
+                return;
+            }
+        };
+        let in_dim = engine.input_dim();
+        let out_dim = engine.output_dim();
+        if !shared.claim_dims(in_dim, out_dim) {
+            let reason = format!(
+                "engine reports dims {in_dim}/{out_dim}, server advertises {}/{}",
+                shared.expect_in.load(Ordering::SeqCst),
+                shared.expect_out.load(Ordering::SeqCst)
+            );
+            supervisor::set_phase(&shared.shards[idx], ShardPhase::Dead { reason: reason.clone() });
+            if let Some(tx) = ready {
+                let _ = tx.send(Err(anyhow!("{reason}")));
+            }
+            return;
+        }
+        supervisor::set_phase(&shared.shards[idx], ShardPhase::Live);
+        if let Some(tx) = ready {
+            let _ = tx.send(Ok((in_dim, out_dim)));
+        }
+        let max_batch = engine.max_batch().min(1024);
+        loop {
+            let Some(batch) = shared.drain_batch(max_batch) else {
+                return; // shutdown with an empty queue
+            };
+            if serve_batch(&shared, idx, engine.as_mut(), in_dim, out_dim, batch) {
+                return; // engine panicked; the supervisor takes over
+            }
+        }
+    })
+}
+
+/// Fuse, execute (unlocked — shards overlap), scatter. Every request in
+/// the batch gets a definitive response on every path: rows on success,
+/// typed [`ServeError`]s on engine error, invalid output, or panic.
+/// Returns `true` when the worker must die (engine panicked).
+fn serve_batch(
+    shared: &ServerShared,
+    idx: usize,
+    engine: &mut dyn InferenceEngine,
+    in_dim: usize,
+    out_dim: usize,
+    batch: Vec<Request>,
+) -> bool {
+    let n = batch.len();
+    let mut data = Vec::with_capacity(n * in_dim);
+    for r in &batch {
+        data.extend_from_slice(&r.input);
+    }
+    // register the in-flight batch so the supervisor can typed-fail it
+    // (deadline sweep over a stalled engine, shutdown of an abandoned
+    // worker) instead of leaving callers on a hung recv
+    {
+        let mut inf = lock_recover(&shared.shards[idx].inflight);
+        inf.clear();
+        inf.extend(
+            batch.iter().map(|r| InflightEntry { deadline: r.deadline, resp: r.resp.clone() }),
+        );
+    }
+    let input = Tensor::new(vec![n, in_dim], data);
+    let result = catch_unwind(AssertUnwindSafe(|| engine.infer_batch(&input)));
+    lock_recover(&shared.shards[idx].inflight).clear();
+    shared.stats.batches.fetch_add(1, Ordering::Relaxed);
+    shared.metrics.inc_batch();
+    match result {
+        Ok(Ok(y)) => {
+            match y.as_f32() {
+                Ok(rows) if rows.len() == n * out_dim => {
+                    for (i, req) in batch.iter().enumerate() {
+                        shared.deliver_ok(req, rows[i * out_dim..(i + 1) * out_dim].to_vec());
+                    }
+                }
+                _ => {
+                    // a non-f32 (or mis-sized) engine output fails THIS
+                    // batch's requests, not the shard
+                    shared.metrics.inc_engine_error();
+                    let message = format!(
+                        "engine produced invalid output: dtype {} shape {:?} (want [{n}, {out_dim}] f32)",
+                        y.dtype(),
+                        y.shape()
+                    );
+                    for req in &batch {
+                        shared.deliver_err(req, ServeError::Engine { message: message.clone() });
+                    }
+                }
+            }
+            false
+        }
+        Ok(Err(e)) => {
+            shared.metrics.inc_engine_error();
+            let message = format!("{e:#}");
+            for req in &batch {
+                shared.deliver_err(req, ServeError::Engine { message: message.clone() });
+            }
+            false
+        }
+        Err(payload) => {
+            let message = panic_message(payload.as_ref());
+            shared.metrics.inc_shard_panic();
+            for req in &batch {
+                shared.deliver_err(req, ServeError::ShardPanicked { message: message.clone() });
+            }
+            supervisor::set_phase(
+                &shared.shards[idx],
+                ShardPhase::Dead { reason: format!("engine panicked: {message}") },
+            );
+            true
+        }
+    }
+}
+
+/// Handle to one submitted request's pending result.
+pub struct Response {
+    rx: mpsc::Receiver<Result<Vec<f32>, ServeError>>,
+    deadline: Option<Instant>,
+}
+
+impl Response {
+    /// Block for the result. When the request carries a deadline, the
+    /// wait is bounded by it (client-side enforcement — even a wedged
+    /// server cannot hold the caller past its deadline); `missed_by` is
+    /// zero for a client-side timeout, positive when the server itself
+    /// dropped the expired request.
+    pub fn wait(self) -> Result<Vec<f32>, ServeError> {
+        match self.deadline {
+            None => self.rx.recv().unwrap_or(Err(ServeError::ChannelClosed)),
+            Some(d) => {
+                let now = Instant::now();
+                if now >= d {
+                    // already past deadline: one non-blocking look for a
+                    // result that raced in, then typed timeout
+                    return match self.rx.try_recv() {
+                        Ok(r) => r,
+                        Err(_) => {
+                            Err(ServeError::DeadlineExceeded { missed_by: Duration::ZERO })
+                        }
+                    };
+                }
+                match self.rx.recv_timeout(d.duration_since(now)) {
+                    Ok(r) => r,
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        Err(ServeError::DeadlineExceeded { missed_by: Duration::ZERO })
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => Err(ServeError::ChannelClosed),
+                }
+            }
+        }
+    }
+
+    /// The raw receiver (no client-side deadline enforcement) — for
+    /// callers that want to observe exactly what the server delivered.
+    pub fn into_receiver(self) -> mpsc::Receiver<Result<Vec<f32>, ServeError>> {
+        self.rx
+    }
+}
+
+/// A running batching server around one or more [`InferenceEngine`]
+/// worker shards, supervised for fault tolerance.
+pub struct Batcher {
+    shared: Arc<ServerShared>,
+    in_dim: usize,
+    out_dim: usize,
+    supervisor: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Batcher {
@@ -103,13 +683,12 @@ impl Batcher {
     where
         F: FnOnce() -> Result<Box<dyn InferenceEngine>> + Send + 'static,
     {
-        // adapt the one-shot factory to the sharded (multi-call) shape
+        // adapt the one-shot factory to the sharded (multi-call) shape;
+        // a supervisor restart of this shard reports the factory spent
         let cell = Mutex::new(Some(factory));
         Batcher::start_sharded(
             move || {
-                let f = cell
-                    .lock()
-                    .unwrap()
+                let f = lock_recover(&cell)
                     .take()
                     .ok_or_else(|| anyhow!("single-shot engine factory called twice"))?;
                 f()
@@ -120,132 +699,79 @@ impl Batcher {
     }
 
     /// Start `shards` worker threads over ONE shared request queue. The
-    /// factory runs once per worker, inside that worker's thread; engines
-    /// that can share compiled state should hand out views of it (e.g.
-    /// one [`super::PlannedEngine`] template `share()`d per shard, so all
-    /// workers serve the same `Arc`'d plan). A worker holds the queue
-    /// lock only while draining its batch — inference runs unlocked, so
-    /// shards execute concurrently.
+    /// factory runs once per worker, inside that worker's thread, and is
+    /// RETAINED: the supervisor re-invokes it to restart a shard whose
+    /// engine panicked. Engines that can share compiled state should hand
+    /// out views of it (e.g. one [`super::PlannedEngine`] template
+    /// `share()`d per call). A worker holds the queue lock only while
+    /// draining its batch — inference runs unlocked, so shards execute
+    /// concurrently.
     pub fn start_sharded<F>(factory: F, cfg: BatcherConfig, shards: usize) -> Result<Batcher>
     where
         F: Fn() -> Result<Box<dyn InferenceEngine>> + Send + Sync + 'static,
     {
         ensure!(shards >= 1, "need at least one batcher shard");
-        let (tx, rx) = mpsc::channel::<Request>();
-        let rx = Arc::new(Mutex::new(rx));
-        let factory = Arc::new(factory);
-        let stats: Arc<Stats> = Arc::default();
-        let shutdown = Arc::new(AtomicBool::new(false));
+        let factory: Arc<EngineFactory> = Arc::new(factory);
+        let shared = Arc::new(ServerShared {
+            queue: Mutex::new(QueueState { q: VecDeque::new(), open: true }),
+            work: Condvar::new(),
+            space: Condvar::new(),
+            cfg,
+            shards: (0..shards).map(|_| ShardState::new()).collect(),
+            metrics: Arc::new(ServingMetrics::new()),
+            stats: Stats::default(),
+            shutdown: AtomicBool::new(false),
+            expect_in: AtomicUsize::new(0),
+            expect_out: AtomicUsize::new(0),
+        });
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize)>>();
-        let mut workers = Vec::with_capacity(shards);
-        for _ in 0..shards {
-            let factory = factory.clone();
-            let rx = rx.clone();
-            let cfg = cfg.clone();
-            let ready_tx = ready_tx.clone();
-            let worker_stats = stats.clone();
-            let worker_shutdown = shutdown.clone();
-            workers.push(std::thread::spawn(move || {
-                // budget this shard's intra-op fan-out so that across all
-                // shards the pool is not oversubscribed
-                let budget = cfg.intraop_threads.unwrap_or_else(|| {
-                    (crate::runtime::pool::global().threads() / shards).max(1)
-                });
-                crate::runtime::pool::set_thread_intraop_limit(budget);
-                let mut engine = match factory() {
-                    Ok(e) => {
-                        let _ = ready_tx.send(Ok((e.input_dim(), e.output_dim())));
-                        e
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return;
-                    }
-                };
-                // release the handshake sender now: if another shard dies
-                // (factory panic) the channel disconnects once the healthy
-                // shards have reported, instead of blocking startup forever
-                drop(ready_tx);
-                let in_dim = engine.input_dim();
-                let out_dim = engine.output_dim();
-                let max_batch = engine.max_batch().min(1024);
-                loop {
-                    // take the queue, block for the first request (with a
-                    // poll so shutdown works), drain the batch, release
-                    let batch = {
-                        let rx = rx.lock().unwrap();
-                        let first = match rx.recv_timeout(Duration::from_millis(50)) {
-                            Ok(r) => r,
-                            Err(mpsc::RecvTimeoutError::Timeout) => {
-                                drop(rx);
-                                if worker_shutdown.load(Ordering::Relaxed) {
-                                    return;
-                                }
-                                continue;
-                            }
-                            Err(mpsc::RecvTimeoutError::Disconnected) => return,
-                        };
-                        let mut batch = vec![first];
-                        let deadline = Instant::now() + cfg.max_wait;
-                        while batch.len() < max_batch {
-                            let now = Instant::now();
-                            if now >= deadline {
-                                break;
-                            }
-                            match rx.recv_timeout(deadline - now) {
-                                Ok(r) => batch.push(r),
-                                Err(_) => break,
-                            }
-                        }
-                        batch
-                    };
-                    // fuse, execute (unlocked — shards overlap), scatter
-                    let n = batch.len();
-                    let mut data = Vec::with_capacity(n * in_dim);
-                    for r in &batch {
-                        data.extend_from_slice(&r.input);
-                    }
-                    let result = engine.infer_batch(&Tensor::new(vec![n, in_dim], data));
-                    worker_stats.batches.fetch_add(1, Ordering::Relaxed);
-                    match result {
-                        Ok(y) => {
-                            let rows = y.as_f32().expect("engine output must be f32");
-                            for (i, req) in batch.into_iter().enumerate() {
-                                let lat = req.enqueued.elapsed().as_micros() as u64;
-                                worker_stats.requests.fetch_add(1, Ordering::Relaxed);
-                                worker_stats.total_latency_us.fetch_add(lat, Ordering::Relaxed);
-                                worker_stats.max_latency_us.fetch_max(lat, Ordering::Relaxed);
-                                let row = rows[i * out_dim..(i + 1) * out_dim].to_vec();
-                                let _ = req.resp.send(Ok(row));
-                            }
-                        }
-                        Err(e) => {
-                            let msg = format!("{e:#}");
-                            for req in batch {
-                                worker_stats.requests.fetch_add(1, Ordering::Relaxed);
-                                let _ = req.resp.send(Err(anyhow!("{msg}")));
-                            }
-                        }
-                    }
-                }
-            }));
+        let mut handles = Vec::with_capacity(shards);
+        for i in 0..shards {
+            handles.push(
+                spawn_worker(shared.clone(), factory.clone(), i, Some(ready_tx.clone()))
+                    .expect("spawning batcher shard worker"),
+            );
         }
         drop(ready_tx);
         // all shards must come up (engine built) before we serve
         let mut dims: Option<(usize, usize)> = None;
+        let mut startup_err: Option<anyhow::Error> = None;
         for _ in 0..shards {
-            let d = ready_rx
-                .recv()
-                .map_err(|_| anyhow!("engine factory thread died"))??;
-            match dims {
-                None => dims = Some(d),
-                Some(prev) => {
-                    ensure!(prev == d, "shard engines disagree on dims: {prev:?} vs {d:?}")
+            match ready_rx.recv() {
+                Ok(Ok(d)) => match dims {
+                    None => dims = Some(d),
+                    Some(prev) if prev != d => {
+                        startup_err =
+                            Some(anyhow!("shard engines disagree on dims: {prev:?} vs {d:?}"));
+                        break;
+                    }
+                    Some(_) => {}
+                },
+                Ok(Err(e)) => {
+                    startup_err = Some(e);
+                    break;
+                }
+                // a worker died without reporting (factory panic)
+                Err(_) => {
+                    startup_err = Some(anyhow!("engine factory thread died"));
+                    break;
                 }
             }
         }
-        let (in_dim, out_dim) = dims.expect("shards >= 1");
-        Ok(Batcher { tx: Some(tx), in_dim, out_dim, stats, workers, shutdown })
+        if startup_err.is_none() && dims.is_none() {
+            startup_err = Some(anyhow!("no shard reported dims"));
+        }
+        if let Some(e) = startup_err {
+            // wind the healthy shards back down before reporting
+            shared.begin_close();
+            for h in handles {
+                let _ = h.join();
+            }
+            return Err(e);
+        }
+        let (in_dim, out_dim) = dims.expect("checked above");
+        let sup = supervisor::spawn(shared.clone(), factory, handles);
+        Ok(Batcher { shared, in_dim, out_dim, supervisor: Some(sup) })
     }
 
     /// Input row length, as reported by the engine at startup.
@@ -258,52 +784,122 @@ impl Batcher {
         self.out_dim
     }
 
-    /// Submit one input row; returns a receiver for the output row.
-    pub fn submit(&self, input: Vec<f32>) -> Result<mpsc::Receiver<Result<Vec<f32>>>> {
-        ensure!(input.len() == self.in_dim, "input length {} != {}", input.len(), self.in_dim);
-        let (resp_tx, resp_rx) = mpsc::channel();
-        self.tx
-            .as_ref()
-            .ok_or_else(|| anyhow!("server is shut down"))?
-            .send(Request { input, enqueued: Instant::now(), resp: resp_tx })
-            .map_err(|_| anyhow!("server is shut down"))?;
-        Ok(resp_rx)
+    /// Submit one input row with default options (no deadline; shed
+    /// immediately when the bounded queue is full).
+    pub fn submit(&self, input: Vec<f32>) -> Result<Response, SubmitError> {
+        self.submit_with(input, SubmitOptions::default())
     }
 
-    /// Blocking convenience: submit and wait.
+    /// Submit one input row; typed admission errors, optional deadline.
+    pub fn submit_with(
+        &self,
+        input: Vec<f32>,
+        opts: SubmitOptions,
+    ) -> Result<Response, SubmitError> {
+        if input.len() != self.in_dim {
+            return Err(SubmitError::InvalidInput { got: input.len(), want: self.in_dim });
+        }
+        let h = self.health();
+        if h.all_dead() {
+            return Err(SubmitError::NoLiveShards);
+        }
+        if self.shared.cfg.supervisor.degraded == DegradedPolicy::RefuseWhenDegraded && h.dead > 0 {
+            return Err(SubmitError::Degraded { live: h.live, shards: h.shards });
+        }
+        let now = Instant::now();
+        let deadline = opts.deadline.map(|d| now + d);
+        let give_up = opts.submit_timeout.map(|t| now + t);
+        let (resp_tx, resp_rx) = mpsc::channel();
+        let req = Request { input, enqueued: now, deadline, resp: resp_tx };
+        let depth = {
+            let mut q = lock_recover(&self.shared.queue);
+            loop {
+                if !q.open {
+                    return Err(SubmitError::ShutDown);
+                }
+                match self.shared.cfg.queue_capacity {
+                    Some(cap) if q.q.len() >= cap => {
+                        let Some(until) = give_up else {
+                            self.shared.metrics.inc_shed();
+                            return Err(SubmitError::Shed { queue_depth: q.q.len() });
+                        };
+                        let now = Instant::now();
+                        if now >= until {
+                            self.shared.metrics.inc_shed();
+                            return Err(SubmitError::Shed { queue_depth: q.q.len() });
+                        }
+                        let (g, _) = self
+                            .shared
+                            .space
+                            .wait_timeout(q, until.duration_since(now))
+                            .unwrap_or_else(PoisonError::into_inner);
+                        q = g;
+                    }
+                    _ => {
+                        q.q.push_back(req);
+                        break q.q.len();
+                    }
+                }
+            }
+        };
+        self.shared.metrics.set_queue_depth(depth);
+        self.shared.work.notify_one();
+        Ok(Response { rx: resp_rx, deadline })
+    }
+
+    /// Blocking convenience: submit and wait (anyhow-typed for callers
+    /// that don't match on the failure kind).
     pub fn infer(&self, input: Vec<f32>) -> Result<Vec<f32>> {
-        self.submit(input)?.recv()?
+        let resp = self.submit(input).map_err(anyhow::Error::new)?;
+        resp.wait().map_err(anyhow::Error::new)
     }
 
     pub fn stats(&self) -> ServerStats {
         ServerStats {
-            requests: self.stats.requests.load(Ordering::Relaxed),
-            batches: self.stats.batches.load(Ordering::Relaxed),
-            total_latency_us: self.stats.total_latency_us.load(Ordering::Relaxed),
-            max_latency_us: self.stats.max_latency_us.load(Ordering::Relaxed),
+            requests: self.shared.stats.requests.load(Ordering::Relaxed),
+            batches: self.shared.stats.batches.load(Ordering::Relaxed),
+            total_latency_us: self.shared.stats.total_latency_us.load(Ordering::Relaxed),
+            max_latency_us: self.shared.stats.max_latency_us.load(Ordering::Relaxed),
         }
     }
 
-    /// Stop all worker shards and wait for them. Already-queued requests
-    /// still drain (disconnect only fires on an empty queue); idle
-    /// shards wake immediately.
-    pub fn shutdown(mut self) -> ServerStats {
-        self.shutdown.store(true, Ordering::Relaxed);
-        self.tx = None; // disconnect the queue
-        for w in self.workers.drain(..) {
-            let _ = w.join();
+    /// Live/starting/dead shard counts and the cumulative restart total.
+    pub fn health(&self) -> Health {
+        supervisor::health_of(&self.shared.shards, self.shared.cfg.supervisor.max_restarts)
+    }
+
+    /// Serving counters / latency histogram (shared handle; scrapeable).
+    pub fn metrics(&self) -> Arc<ServingMetrics> {
+        self.shared.metrics.clone()
+    }
+
+    /// Text exposition of [`Batcher::metrics`] (Prometheus-style lines).
+    pub fn metrics_text(&self) -> String {
+        self.shared.metrics.render_text()
+    }
+
+    fn begin_shutdown(&mut self) {
+        self.shared.begin_close();
+        if let Some(h) = self.supervisor.take() {
+            let _ = h.join();
         }
+        // anything still queued (all shards dead, or raced the final
+        // drain) gets a definitive typed response — never a hung recv
+        self.shared.fail_queue(&ServeError::ShutDown);
+    }
+
+    /// Stop all worker shards and wait for them. Already-queued requests
+    /// still drain through live shards; anything left (e.g. every shard
+    /// dead) is failed with a typed [`ServeError::ShutDown`].
+    pub fn shutdown(mut self) -> ServerStats {
+        self.begin_shutdown();
         self.stats()
     }
 }
 
 impl Drop for Batcher {
     fn drop(&mut self) {
-        self.shutdown.store(true, Ordering::Relaxed);
-        self.tx = None; // disconnect the queue
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        self.begin_shutdown();
     }
 }
 
@@ -318,6 +914,36 @@ mod tests {
         Ok(Box::new(ReferenceEngine::new(g)?))
     }
 
+    /// Test engine: echoes its input back after an optional stall.
+    struct SlowEcho {
+        delay: Duration,
+    }
+
+    impl InferenceEngine for SlowEcho {
+        fn name(&self) -> String {
+            "slow-echo".into()
+        }
+        fn input_dim(&self) -> usize {
+            4
+        }
+        fn output_dim(&self) -> usize {
+            4
+        }
+        fn max_batch(&self) -> usize {
+            usize::MAX
+        }
+        fn infer_batch(&mut self, batch: &Tensor) -> Result<Tensor> {
+            if !self.delay.is_zero() {
+                std::thread::sleep(self.delay);
+            }
+            Ok(batch.clone())
+        }
+    }
+
+    fn echo(delay: Duration) -> impl Fn() -> Result<Box<dyn InferenceEngine>> + Send + Sync {
+        move || Ok(Box::new(SlowEcho { delay }) as Box<dyn InferenceEngine>)
+    }
+
     #[test]
     fn single_request_roundtrip() {
         let b = Batcher::start(ref_engine, BatcherConfig::default()).unwrap();
@@ -329,10 +955,7 @@ mod tests {
 
     #[test]
     fn failing_factory_reported() {
-        let r = Batcher::start(
-            || anyhow::bail!("no such artifact"),
-            BatcherConfig::default(),
-        );
+        let r = Batcher::start(|| anyhow::bail!("no such artifact"), BatcherConfig::default());
         assert!(r.is_err());
     }
 
@@ -348,9 +971,8 @@ mod tests {
         let mut handles = Vec::new();
         for i in 0..16 {
             let b = b.clone();
-            handles.push(std::thread::spawn(move || {
-                b.infer(vec![i as f32 / 16.0; 784]).unwrap()
-            }));
+            handles
+                .push(std::thread::spawn(move || b.infer(vec![i as f32 / 16.0; 784]).unwrap()));
         }
         for h in handles {
             assert_eq!(h.join().unwrap().len(), 10);
@@ -374,7 +996,10 @@ mod tests {
     #[test]
     fn wrong_input_len_rejected() {
         let b = Batcher::start(ref_engine, BatcherConfig::default()).unwrap();
-        assert!(b.submit(vec![0.0; 3]).is_err());
+        assert_eq!(
+            b.submit(vec![0.0; 3]).err(),
+            Some(SubmitError::InvalidInput { got: 3, want: 784 })
+        );
     }
 
     #[test]
@@ -404,6 +1029,9 @@ mod tests {
             assert_eq!(served, want.as_f32().unwrap(), "sharded result diverged");
         }
         assert_eq!(b.stats().requests, 24);
+        let h = b.health();
+        assert_eq!((h.shards, h.live, h.dead), (3, 3, 0));
+        assert!(!h.degraded());
     }
 
     #[test]
@@ -425,11 +1053,229 @@ mod tests {
 
     #[test]
     fn zero_shards_rejected() {
-        let r = Batcher::start_sharded(
-            || anyhow::bail!("never called"),
-            BatcherConfig::default(),
-            0,
-        );
+        let r =
+            Batcher::start_sharded(|| anyhow::bail!("never called"), BatcherConfig::default(), 0);
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn bounded_queue_sheds_with_typed_error() {
+        let b = Batcher::start_sharded(
+            echo(Duration::from_millis(30)),
+            BatcherConfig {
+                max_wait: Duration::from_micros(100),
+                queue_capacity: Some(2),
+                ..Default::default()
+            },
+            1,
+        )
+        .unwrap();
+        let mut pending = Vec::new();
+        let mut shed = 0u64;
+        for _ in 0..24 {
+            match b.submit(vec![0.25; 4]) {
+                Ok(r) => pending.push(r),
+                Err(SubmitError::Shed { queue_depth }) => {
+                    assert_eq!(queue_depth, 2, "shed must report the full queue's depth");
+                    shed += 1;
+                }
+                Err(e) => panic!("unexpected admission error: {e}"),
+            }
+        }
+        assert!(shed > 0, "24 instant submits against a 30ms engine must shed");
+        let m = b.metrics();
+        assert_eq!(m.shed(), shed);
+        assert!(m.queue_depth_peak() <= 2, "depth peaked at {}", m.queue_depth_peak());
+        // every ACCEPTED request still resolves
+        for r in pending {
+            assert_eq!(r.wait().unwrap(), vec![0.25; 4]);
+        }
+        b.shutdown();
+    }
+
+    #[test]
+    fn submit_timeout_waits_for_space() {
+        let b = Batcher::start_sharded(
+            echo(Duration::from_millis(20)),
+            BatcherConfig {
+                max_wait: Duration::from_micros(100),
+                queue_capacity: Some(2),
+                ..Default::default()
+            },
+            1,
+        )
+        .unwrap();
+        let mut pending = Vec::new();
+        let mut saw_shed = false;
+        for _ in 0..16 {
+            match b.submit(vec![0.5; 4]) {
+                Ok(r) => pending.push(r),
+                Err(SubmitError::Shed { .. }) => {
+                    saw_shed = true;
+                    break;
+                }
+                Err(e) => panic!("unexpected admission error: {e}"),
+            }
+        }
+        assert!(saw_shed, "queue never filled");
+        // a caller willing to wait gets admitted once the worker drains
+        let r = b
+            .submit_with(
+                vec![0.75; 4],
+                SubmitOptions { submit_timeout: Some(Duration::from_secs(10)), ..Default::default() },
+            )
+            .expect("submit_timeout caller should be admitted when space frees");
+        assert_eq!(r.wait().unwrap(), vec![0.75; 4]);
+        for r in pending {
+            assert_eq!(r.wait().unwrap(), vec![0.5; 4]);
+        }
+        b.shutdown();
+    }
+
+    #[test]
+    fn expired_request_dropped_at_drain_with_typed_error() {
+        // supervisor sweep effectively disabled (long tick): the typed
+        // DeadlineExceeded must come from the worker's drain-time drop
+        let b = Batcher::start_sharded(
+            echo(Duration::from_millis(50)),
+            BatcherConfig {
+                max_wait: Duration::from_micros(100),
+                supervisor: SupervisorConfig { tick: Duration::from_secs(30), ..Default::default() },
+                ..Default::default()
+            },
+            1,
+        )
+        .unwrap();
+        // occupy the worker, then queue a request that expires behind it
+        let first = b.submit(vec![0.0; 4]).unwrap();
+        std::thread::sleep(Duration::from_millis(10));
+        let doomed = b
+            .submit_with(
+                vec![1.0; 4],
+                SubmitOptions { deadline: Some(Duration::from_millis(1)), ..Default::default() },
+            )
+            .unwrap();
+        // observe the server's own delivery (no client-side enforcement)
+        let rx = doomed.into_receiver();
+        match rx.recv_timeout(Duration::from_secs(10)).unwrap() {
+            Err(ServeError::DeadlineExceeded { missed_by }) => {
+                assert!(missed_by > Duration::ZERO, "drain-time drop reports real lateness");
+            }
+            other => panic!("expected server-side DeadlineExceeded, got {other:?}"),
+        }
+        assert_eq!(b.metrics().deadline_exceeded(), 1);
+        assert_eq!(first.wait().unwrap(), vec![0.0; 4]);
+        b.shutdown();
+    }
+
+    #[test]
+    fn client_side_deadline_bounds_wait() {
+        let b = Batcher::start_sharded(
+            echo(Duration::from_millis(200)),
+            BatcherConfig {
+                supervisor: SupervisorConfig { tick: Duration::from_secs(30), ..Default::default() },
+                ..Default::default()
+            },
+            1,
+        )
+        .unwrap();
+        let t0 = Instant::now();
+        let r = b
+            .submit_with(
+                vec![0.0; 4],
+                SubmitOptions { deadline: Some(Duration::from_millis(20)), ..Default::default() },
+            )
+            .unwrap();
+        match r.wait() {
+            Err(ServeError::DeadlineExceeded { .. }) => {}
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        assert!(
+            t0.elapsed() < Duration::from_millis(150),
+            "caller was held past its deadline: {:?}",
+            t0.elapsed()
+        );
+        b.shutdown();
+    }
+
+    #[test]
+    fn poisoned_queue_lock_is_recovered() {
+        let b = Batcher::start(echo(Duration::ZERO), BatcherConfig::default()).unwrap();
+        assert_eq!(b.infer(vec![1.0; 4]).unwrap(), vec![1.0; 4]);
+        // poison the queue mutex from a doomed thread
+        let shared = b.shared.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = shared.queue.lock().unwrap();
+            panic!("poisoning the batcher queue lock on purpose");
+        })
+        .join();
+        assert!(b.shared.queue.is_poisoned());
+        // submit and the worker both recover the lock and keep serving
+        assert_eq!(b.infer(vec![2.0; 4]).unwrap(), vec![2.0; 4]);
+        b.shutdown();
+    }
+
+    #[test]
+    fn non_f32_engine_output_fails_batch_not_shard() {
+        struct BadDtype;
+        impl InferenceEngine for BadDtype {
+            fn name(&self) -> String {
+                "bad-dtype".into()
+            }
+            fn input_dim(&self) -> usize {
+                4
+            }
+            fn output_dim(&self) -> usize {
+                4
+            }
+            fn max_batch(&self) -> usize {
+                usize::MAX
+            }
+            fn infer_batch(&mut self, batch: &Tensor) -> Result<Tensor> {
+                let n = batch.shape()[0];
+                Ok(Tensor::new_i8(vec![n, 4], vec![0; n * 4]))
+            }
+        }
+        let b = Batcher::start(
+            || Ok(Box::new(BadDtype) as Box<dyn InferenceEngine>),
+            BatcherConfig::default(),
+        )
+        .unwrap();
+        match b.submit(vec![0.0; 4]).unwrap().wait() {
+            Err(ServeError::Engine { message }) => {
+                assert!(message.contains("invalid output"), "{message}");
+            }
+            other => panic!("expected typed engine error, got {other:?}"),
+        }
+        // the shard survived the bad output and still serves (still
+        // erroring, but typed — and alive)
+        assert!(matches!(
+            b.submit(vec![0.0; 4]).unwrap().wait(),
+            Err(ServeError::Engine { .. })
+        ));
+        assert_eq!(b.health().live, 1);
+        assert_eq!(b.metrics().engine_errors(), 2);
+        b.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_queued_requests_definitively() {
+        let b = Batcher::start_sharded(
+            echo(Duration::from_millis(15)),
+            BatcherConfig { max_wait: Duration::from_micros(100), ..Default::default() },
+            1,
+        )
+        .unwrap();
+        let pending: Vec<Response> =
+            (0..6).map(|_| b.submit(vec![0.125; 4]).unwrap()).collect();
+        let stats = b.shutdown();
+        assert!(stats.requests >= 6, "all queued requests counted: {}", stats.requests);
+        for r in pending {
+            match r.wait() {
+                Ok(row) => assert_eq!(row, vec![0.125; 4]),
+                Err(ServeError::ShutDown) => {}
+                other => panic!("queued request got non-definitive response: {other:?}"),
+            }
+        }
     }
 }

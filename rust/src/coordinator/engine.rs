@@ -1,6 +1,13 @@
 //! Inference engines behind one trait: the PJRT hot path, the compiled
 //! [`crate::plan::ExecutionPlan`] native path, and the name-keyed
-//! interpreter verification path.
+//! interpreter verification path. Any of them can be wrapped in
+//! [`super::FaultyEngine`] to inject deterministic errors/panics/stalls
+//! for robustness testing.
+//!
+//! `infer_batch` failures are contract events, not process events: the
+//! batcher converts an `Err` into typed per-request failures and a panic
+//! into a supervised shard restart, so engines should return `Err` for
+//! anything recoverable and reserve panics for genuine bugs.
 
 use crate::exec;
 use crate::ir::ModelGraph;

@@ -1,0 +1,247 @@
+//! Deterministic fault injection for the serving core.
+//!
+//! [`FaultyEngine`] wraps any [`InferenceEngine`] and makes `infer_batch`
+//! error, panic, or stall on schedule, driven by a shared
+//! [`FaultInjector`]. Tests script exact sequences with
+//! [`FaultInjector::arm`]; the CLI (and CI soak runs) enable seeded random
+//! injection through environment hooks ([`FaultInjector::from_env`]):
+//!
+//! ```text
+//! QONNX_FAULT_SEED=7           # u64 seed — presence enables injection
+//! QONNX_FAULT_RATE=0.1         # per-call injection probability (default 0.1)
+//! QONNX_FAULT_KIND=error       # error | panic | stall:<ms> (default error)
+//! ```
+//!
+//! Injection is deterministic given (seed, rate, kind): the decision
+//! sequence comes from the repo's xorshift [`crate::zoo::rng::Rng`], so a
+//! failing run reproduces exactly from its seed.
+
+use super::engine::InferenceEngine;
+use crate::tensor::Tensor;
+use crate::zoo::rng::Rng;
+use anyhow::{bail, Result};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::time::Duration;
+
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// What one `infer_batch` call should do.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Delegate to the wrapped engine (no fault).
+    Serve,
+    /// Return an error from `infer_batch`.
+    Error,
+    /// Panic inside `infer_batch` (exercises shard supervision).
+    Panic,
+    /// Sleep before delegating (exercises deadlines and sweeps).
+    Stall(Duration),
+}
+
+struct SeededFaults {
+    rng: Rng,
+    rate: f64,
+    kind: FaultAction,
+}
+
+struct InjectorState {
+    /// Scripted actions consumed first, in order.
+    script: VecDeque<FaultAction>,
+    /// Seeded random injection (env hooks / soak runs).
+    seeded: Option<SeededFaults>,
+    /// What an unscripted, unseeded call does.
+    default: FaultAction,
+}
+
+/// Shared, clonable schedule of faults for one or more [`FaultyEngine`]s.
+///
+/// Decision order per call: scripted action if any is queued, else a
+/// seeded random draw if seeded mode is on, else the default action.
+#[derive(Clone)]
+pub struct FaultInjector {
+    state: Arc<Mutex<InjectorState>>,
+    calls: Arc<AtomicU64>,
+    injected: Arc<AtomicU64>,
+}
+
+impl Default for FaultInjector {
+    fn default() -> Self {
+        FaultInjector::new()
+    }
+}
+
+impl FaultInjector {
+    /// No faults until armed/seeded: every call serves.
+    pub fn new() -> FaultInjector {
+        FaultInjector {
+            state: Arc::new(Mutex::new(InjectorState {
+                script: VecDeque::new(),
+                seeded: None,
+                default: FaultAction::Serve,
+            })),
+            calls: Arc::new(AtomicU64::new(0)),
+            injected: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Queue one scripted action (consumed by the next `infer_batch`).
+    pub fn arm(&self, action: FaultAction) {
+        lock_recover(&self.state).script.push_back(action);
+    }
+
+    /// Set the action taken when nothing is scripted and seeding is off.
+    pub fn set_default(&self, action: FaultAction) {
+        lock_recover(&self.state).default = action;
+    }
+
+    /// Enable seeded random injection: each unscripted call injects
+    /// `kind` with probability `rate`, deterministically from `seed`.
+    pub fn seeded(&self, seed: u64, rate: f64, kind: FaultAction) {
+        lock_recover(&self.state).seeded =
+            Some(SeededFaults { rng: Rng::new(seed), rate, kind });
+    }
+
+    /// Build an injector from `QONNX_FAULT_SEED` / `QONNX_FAULT_RATE` /
+    /// `QONNX_FAULT_KIND`; `None` when no seed is set (injection off).
+    pub fn from_env() -> Option<FaultInjector> {
+        let seed: u64 = std::env::var("QONNX_FAULT_SEED").ok()?.trim().parse().ok()?;
+        let rate: f64 = std::env::var("QONNX_FAULT_RATE")
+            .ok()
+            .and_then(|v| v.trim().parse().ok())
+            .unwrap_or(0.1);
+        let kind = match std::env::var("QONNX_FAULT_KIND").ok().as_deref().map(str::trim) {
+            None | Some("") | Some("error") => FaultAction::Error,
+            Some("panic") => FaultAction::Panic,
+            Some(s) => match s.strip_prefix("stall:").and_then(|ms| ms.parse::<u64>().ok()) {
+                Some(ms) => FaultAction::Stall(Duration::from_millis(ms)),
+                None => FaultAction::Error,
+            },
+        };
+        let inj = FaultInjector::new();
+        inj.seeded(seed, rate, kind);
+        Some(inj)
+    }
+
+    /// Decide what the next `infer_batch` call does.
+    pub fn next_action(&self) -> FaultAction {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        let action = {
+            let mut s = lock_recover(&self.state);
+            if let Some(a) = s.script.pop_front() {
+                a
+            } else if let Some(seeded) = s.seeded.as_mut() {
+                if f64::from(seeded.rng.uniform()) < seeded.rate {
+                    seeded.kind
+                } else {
+                    FaultAction::Serve
+                }
+            } else {
+                s.default
+            }
+        };
+        if action != FaultAction::Serve {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+        }
+        action
+    }
+
+    /// Total `infer_batch` calls seen across wrapped engines.
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+
+    /// How many of those calls had a fault injected.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+}
+
+/// An [`InferenceEngine`] wrapper that injects faults per the shared
+/// [`FaultInjector`] schedule. Wrap the factory's engine to drive
+/// integration tests (or env-hook soak runs) against the batcher.
+pub struct FaultyEngine {
+    inner: Box<dyn InferenceEngine>,
+    injector: FaultInjector,
+}
+
+impl FaultyEngine {
+    pub fn new(inner: Box<dyn InferenceEngine>, injector: FaultInjector) -> FaultyEngine {
+        FaultyEngine { inner, injector }
+    }
+}
+
+impl InferenceEngine for FaultyEngine {
+    fn name(&self) -> String {
+        format!("faulty:{}", self.inner.name())
+    }
+
+    fn input_dim(&self) -> usize {
+        self.inner.input_dim()
+    }
+
+    fn output_dim(&self) -> usize {
+        self.inner.output_dim()
+    }
+
+    fn max_batch(&self) -> usize {
+        self.inner.max_batch()
+    }
+
+    fn infer_batch(&mut self, batch: &Tensor) -> Result<Tensor> {
+        let call = self.injector.calls();
+        match self.injector.next_action() {
+            FaultAction::Serve => self.inner.infer_batch(batch),
+            FaultAction::Error => bail!("injected engine error (call #{call})"),
+            FaultAction::Panic => panic!("injected engine panic (call #{call})"),
+            FaultAction::Stall(d) => {
+                std::thread::sleep(d);
+                self.inner.infer_batch(batch)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn script_runs_before_default() {
+        let inj = FaultInjector::new();
+        inj.set_default(FaultAction::Error);
+        inj.arm(FaultAction::Serve);
+        inj.arm(FaultAction::Panic);
+        assert_eq!(inj.next_action(), FaultAction::Serve);
+        assert_eq!(inj.next_action(), FaultAction::Panic);
+        assert_eq!(inj.next_action(), FaultAction::Error);
+        assert_eq!(inj.calls(), 3);
+        assert_eq!(inj.injected(), 2);
+    }
+
+    #[test]
+    fn seeded_sequences_are_deterministic() {
+        let a = FaultInjector::new();
+        let b = FaultInjector::new();
+        a.seeded(42, 0.3, FaultAction::Error);
+        b.seeded(42, 0.3, FaultAction::Error);
+        let sa: Vec<FaultAction> = (0..64).map(|_| a.next_action()).collect();
+        let sb: Vec<FaultAction> = (0..64).map(|_| b.next_action()).collect();
+        assert_eq!(sa, sb);
+        assert!(sa.contains(&FaultAction::Error), "rate 0.3 over 64 draws must inject");
+        assert!(sa.contains(&FaultAction::Serve));
+        assert_eq!(a.injected(), sa.iter().filter(|&&x| x != FaultAction::Serve).count() as u64);
+    }
+
+    #[test]
+    fn stall_kind_parses_from_env_shape() {
+        // exercise the kind parser through seeded(); from_env itself is
+        // covered by the integration suite (env mutation is process-wide)
+        let inj = FaultInjector::new();
+        inj.seeded(1, 1.0, FaultAction::Stall(Duration::from_millis(3)));
+        assert_eq!(inj.next_action(), FaultAction::Stall(Duration::from_millis(3)));
+    }
+}

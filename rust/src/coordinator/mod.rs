@@ -1,21 +1,39 @@
-//! L3 coordinator: a batching inference server over the QONNX toolchain.
+//! L3 coordinator: a fault-tolerant batching inference server over the
+//! QONNX toolchain.
 //!
 //! The paper's contribution lives in the IR/compiler (L2/L1), so the
-//! coordinator is a thin-but-real serving loop: a request queue, a dynamic
-//! micro-batcher (size- or deadline-triggered), worker shards running one
-//! of three engines — the PJRT artifact engine (hot path), the compiled
-//! [`PlannedEngine`] (native path: serves zoo models when no PJRT
+//! coordinator is a thin-but-real serving loop: a bounded request queue
+//! with typed admission ([`SubmitError`]), a dynamic micro-batcher (size-,
+//! deadline-, or request-deadline-triggered), supervised worker shards
+//! running one of three engines — the PJRT artifact engine (hot path), the
+//! compiled [`PlannedEngine`] (native path: serves zoo models when no PJRT
 //! artifact is present), or the interpreter-backed [`ReferenceEngine`]
-//! (verification path) — and latency/throughput accounting.
+//! (verification path) — and latency/throughput accounting
+//! ([`crate::metrics::serving`]).
 //!
 //! Since the batch-symbolic plan work, [`PlannedEngine`] executes a whole
 //! `[n, c, h, w]` request batch in one plan invocation (no per-sample
 //! NCHW loop), and [`Batcher::start_sharded`] runs several workers over
 //! one queue — each holding a [`PlannedEngine::share`] view of the SAME
 //! `Arc`'d compiled plan, so sharding adds zero duplicate packed weights.
+//!
+//! Robustness (see the `batcher` and `supervisor` module docs): a
+//! request is either shed at admission with a typed [`SubmitError`] or
+//! guaranteed a definitive [`ServeError`]-typed response — engine panics
+//! restart the shard ([`Batcher::health`]), deadlines bound every wait,
+//! and shutdown drains or typed-fails everything still queued.
+//! [`FaultyEngine`] + [`FaultInjector`] provide the deterministic
+//! fault-injection harness the integration tests (and `QONNX_FAULT_SEED`
+//! env hooks) drive this machinery with.
 
 mod batcher;
 mod engine;
+mod fault;
+mod supervisor;
 
-pub use batcher::{Batcher, BatcherConfig, ServerStats};
+pub use batcher::{
+    Batcher, BatcherConfig, Response, ServeError, ServerStats, SubmitError, SubmitOptions,
+};
 pub use engine::{InferenceEngine, PjrtEngine, PlannedEngine, ReferenceEngine};
+pub use fault::{FaultAction, FaultInjector, FaultyEngine};
+pub use supervisor::{DegradedPolicy, Health, SupervisorConfig};

@@ -1,0 +1,280 @@
+//! Shard supervision for the [`super::Batcher`]: detect worker death
+//! (engine panic, or a thread that exited without reporting), restart dead
+//! shards through the retained engine factory with capped exponential
+//! backoff, sweep expired deadlines out of the queue and out of stalled
+//! shards' in-flight batches, and typed-fail everything when no shard can
+//! ever serve again.
+//!
+//! The supervisor is one thread per [`super::Batcher`]. It owns the worker
+//! `JoinHandle`s: liveness is `JoinHandle::is_finished` (catches silent
+//! thread death, not just the panic path that tags its own phase), and at
+//! shutdown it joins every worker — bounded by
+//! [`SupervisorConfig::shutdown_grace`], after which an unresponsive
+//! (stalled-in-`infer_batch`) worker is abandoned and its registered
+//! in-flight requests are failed with a typed error so no caller hangs.
+//!
+//! Restart policy: a dead shard waits `restart_backoff * 2^restarts`
+//! (capped at `max_backoff`) before the factory is re-invoked, up to
+//! `max_restarts` times; after that the shard is `Failed` and counts as
+//! permanently dead in [`Health`]. [`DegradedPolicy`] decides whether a
+//! server with permanently-dead shards keeps serving on the survivors or
+//! refuses admission.
+
+use super::batcher::{
+    lock_recover, spawn_worker, EngineFactory, RespSender, ServeError, ServerShared,
+};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// What admission does when some shards are permanently dead
+/// (restart budget exhausted) but others still serve.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DegradedPolicy {
+    /// Keep serving on the surviving shards (reduced capacity).
+    #[default]
+    ServeDegraded,
+    /// Refuse new requests ([`super::SubmitError::Degraded`]) so load
+    /// balancers fail over instead of piling onto reduced capacity.
+    RefuseWhenDegraded,
+}
+
+/// Supervision tuning (part of [`super::BatcherConfig`]).
+#[derive(Debug, Clone)]
+pub struct SupervisorConfig {
+    /// Max restarts per shard before it is permanently `Failed`.
+    pub max_restarts: u32,
+    /// Backoff before the first restart; doubles per restart.
+    pub restart_backoff: Duration,
+    /// Cap on the exponential backoff.
+    pub max_backoff: Duration,
+    /// Deadline-sweep cadence (queue + in-flight batches of stalled
+    /// shards). Liveness/restart checks run more often regardless.
+    pub tick: Duration,
+    /// At shutdown, how long to wait for workers to drain before an
+    /// unresponsive worker is abandoned (its in-flight requests are
+    /// failed with a typed error).
+    pub shutdown_grace: Duration,
+    /// Admission policy once shards are permanently dead.
+    pub degraded: DegradedPolicy,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> Self {
+        SupervisorConfig {
+            max_restarts: 8,
+            restart_backoff: Duration::from_millis(5),
+            max_backoff: Duration::from_secs(1),
+            tick: Duration::from_millis(2),
+            shutdown_grace: Duration::from_secs(5),
+            degraded: DegradedPolicy::ServeDegraded,
+        }
+    }
+}
+
+/// One shard's lifecycle phase.
+pub(crate) enum ShardPhase {
+    /// Engine being built (startup or restart in progress).
+    Starting,
+    /// Serving.
+    Live,
+    /// Worker died (reason recorded); the supervisor will schedule a
+    /// restart or mark it `Failed`.
+    Dead { reason: String },
+    /// Waiting out the restart backoff; respawn at `at`.
+    Backoff { at: Instant },
+    /// Permanently dead: restart budget exhausted (or respawn failed).
+    Failed { reason: String },
+}
+
+/// A request registered as in-flight on a shard (the batch the worker is
+/// currently executing) — enough for the supervisor to typed-fail it.
+pub(crate) struct InflightEntry {
+    pub(crate) deadline: Option<Instant>,
+    pub(crate) resp: RespSender,
+}
+
+pub(crate) struct ShardState {
+    pub(crate) phase: Mutex<ShardPhase>,
+    pub(crate) restarts: AtomicU64,
+    pub(crate) inflight: Mutex<Vec<InflightEntry>>,
+}
+
+impl ShardState {
+    pub(crate) fn new() -> ShardState {
+        ShardState {
+            phase: Mutex::new(ShardPhase::Starting),
+            restarts: AtomicU64::new(0),
+            inflight: Mutex::new(Vec::new()),
+        }
+    }
+}
+
+pub(crate) fn set_phase(shard: &ShardState, phase: ShardPhase) {
+    *lock_recover(&shard.phase) = phase;
+}
+
+/// Shard-level health snapshot ([`super::Batcher::health`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Health {
+    /// Configured shard count.
+    pub shards: usize,
+    /// Shards currently serving.
+    pub live: usize,
+    /// Shards starting up or awaiting a scheduled restart.
+    pub starting: usize,
+    /// Shards permanently dead (restart budget exhausted).
+    pub dead: usize,
+    /// Cumulative restarts across all shards.
+    pub restarts: u64,
+}
+
+impl Health {
+    /// Serving below configured capacity.
+    pub fn degraded(&self) -> bool {
+        self.live < self.shards
+    }
+
+    /// Nothing serves and nothing will: every shard permanently dead.
+    pub fn all_dead(&self) -> bool {
+        self.live + self.starting == 0
+    }
+}
+
+pub(crate) fn health_of(shards: &[ShardState], max_restarts: u32) -> Health {
+    let mut h = Health { shards: shards.len(), live: 0, starting: 0, dead: 0, restarts: 0 };
+    for s in shards {
+        let restarts = s.restarts.load(Ordering::Relaxed);
+        h.restarts += restarts;
+        match &*lock_recover(&s.phase) {
+            ShardPhase::Live => h.live += 1,
+            ShardPhase::Starting | ShardPhase::Backoff { .. } => h.starting += 1,
+            // freshly dead: revivable until the budget runs out
+            ShardPhase::Dead { .. } => {
+                if restarts < u64::from(max_restarts) {
+                    h.starting += 1;
+                } else {
+                    h.dead += 1;
+                }
+            }
+            ShardPhase::Failed { .. } => h.dead += 1,
+        }
+    }
+    h
+}
+
+fn backoff_for(restarts: u64, cfg: &SupervisorConfig) -> Duration {
+    let mult = 1u32 << restarts.min(16) as u32;
+    cfg.restart_backoff.saturating_mul(mult).min(cfg.max_backoff)
+}
+
+/// Spawn the supervisor thread. It takes ownership of the worker handles
+/// and runs until `shared.shutdown` is set, then joins the workers
+/// (bounded by `shutdown_grace`).
+pub(crate) fn spawn(
+    shared: Arc<ServerShared>,
+    factory: Arc<EngineFactory>,
+    handles: Vec<JoinHandle<()>>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("qonnx-supervisor".into())
+        .spawn(move || supervise(&shared, &factory, handles))
+        .expect("spawning batcher supervisor")
+}
+
+fn supervise(
+    shared: &Arc<ServerShared>,
+    factory: &Arc<EngineFactory>,
+    mut handles: Vec<JoinHandle<()>>,
+) {
+    let cfg = shared.cfg.supervisor.clone();
+    // liveness/restart checks run every poll; expensive-ish deadline
+    // sweeps every `tick` — and the poll stays short so shutdown is
+    // responsive even under a long sweep tick
+    let poll = cfg.tick.min(Duration::from_millis(5)).max(Duration::from_micros(500));
+    let mut last_sweep = Instant::now();
+    while !shared.shutdown.load(Ordering::Relaxed) {
+        let now = Instant::now();
+        for idx in 0..shared.shards.len() {
+            let shard = &shared.shards[idx];
+            let finished = handles[idx].is_finished();
+            let mut respawn = false;
+            {
+                let mut phase = lock_recover(&shard.phase);
+                // a thread that exited without tagging its phase (silent
+                // death) is dead even though it still claims Live; at
+                // shutdown workers exit Live on purpose, but then this
+                // loop has already stopped
+                if finished && matches!(&*phase, ShardPhase::Live | ShardPhase::Starting) {
+                    *phase = ShardPhase::Dead {
+                        reason: "worker thread exited unexpectedly".to_string(),
+                    };
+                }
+                match &*phase {
+                    ShardPhase::Dead { reason } => {
+                        let restarts = shard.restarts.load(Ordering::Relaxed);
+                        if restarts >= u64::from(cfg.max_restarts) {
+                            let reason = format!(
+                                "{reason} (restart budget of {} exhausted)",
+                                cfg.max_restarts
+                            );
+                            *phase = ShardPhase::Failed { reason };
+                        } else {
+                            *phase =
+                                ShardPhase::Backoff { at: now + backoff_for(restarts, &cfg) };
+                        }
+                    }
+                    ShardPhase::Backoff { at } if *at <= now && finished => {
+                        *phase = ShardPhase::Starting;
+                        respawn = true;
+                    }
+                    _ => {}
+                }
+            }
+            if respawn {
+                shard.restarts.fetch_add(1, Ordering::Relaxed);
+                shared.metrics.inc_shard_restart();
+                match spawn_worker(shared.clone(), factory.clone(), idx, None) {
+                    Ok(h) => {
+                        // the old handle is finished (checked above)
+                        let _ = std::mem::replace(&mut handles[idx], h).join();
+                    }
+                    Err(e) => set_phase(
+                        shard,
+                        ShardPhase::Failed { reason: format!("respawn failed: {e}") },
+                    ),
+                }
+            }
+        }
+        if last_sweep.elapsed() >= cfg.tick {
+            let now = Instant::now();
+            shared.sweep_expired_queue(now);
+            shared.sweep_expired_inflight(now);
+            last_sweep = now;
+        }
+        // nothing serves and nothing will: don't strand queued requests
+        if health_of(&shared.shards, cfg.max_restarts).all_dead() {
+            shared.fail_queue(&ServeError::NoLiveShards);
+        }
+        std::thread::sleep(poll);
+    }
+    // shutdown: workers drain the queue and exit on their own; join them,
+    // abandoning any worker stalled inside infer_batch past the grace
+    // window (its registered in-flight requests are typed-failed so no
+    // caller hangs on recv)
+    let t0 = Instant::now();
+    for (idx, h) in handles.drain(..).enumerate() {
+        loop {
+            if h.is_finished() {
+                let _ = h.join();
+                break;
+            }
+            if t0.elapsed() >= cfg.shutdown_grace {
+                shared.fail_inflight(idx, &ServeError::ShutDown);
+                break; // detach: a stalled engine cannot be interrupted
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+}

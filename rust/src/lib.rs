@@ -134,6 +134,56 @@
 //! call; engines compile once and reuse. The two executors are
 //! equivalence-tested against each other across the model zoo and the
 //! format-lowering round-trips (`tests/plan_equiv.rs`).
+//!
+//! ## Serving robustness
+//!
+//! The serving core guarantees every admitted request a *definitive typed
+//! outcome* — no request ever hangs on a dead shard or vanishes in a
+//! shutdown. The request lifecycle:
+//!
+//! ```text
+//!   submit ──► ADMISSION       bounded queue (BatcherConfig::queue_capacity):
+//!        │                     full ⇒ typed SubmitError::Shed {queue_depth}
+//!        │                     (or wait up to SubmitOptions::submit_timeout);
+//!        │                     all-dead ⇒ NoLiveShards; degraded + refuse
+//!        │                     policy ⇒ Degraded.
+//!        │
+//!        ├──► DEADLINE         optional per-request deadline: expired
+//!        │                     requests are dropped at drain time (and by
+//!        │                     the supervisor's sweep while queued or
+//!        │                     in-flight) with ServeError::DeadlineExceeded;
+//!        │                     batches close early when the oldest member's
+//!        │                     deadline nears; Response::wait enforces the
+//!        │                     bound client-side too, so a stalled engine
+//!        │                     cannot hold the caller past its deadline.
+//!        │
+//!        ├──► SUPERVISION      engine panics are caught per batch: the
+//!        │                     batch's requests fail typed
+//!        │                     (ShardPanicked), the shard is marked dead,
+//!        │                     and the supervisor thread restarts it from
+//!        │                     the retained engine factory with capped
+//!        │                     exponential backoff (SupervisorConfig) up
+//!        │                     to max_restarts. Queue locks recover from
+//!        │                     poisoning, so one panicking worker never
+//!        │                     wedges survivors. Batcher::health reports
+//!        │                     live/starting/dead/restarts.
+//!        │
+//!        └──► DEGRADED/END     with some shards dead the server keeps
+//!                              serving (DegradedPolicy::ServeDegraded,
+//!                              default) or sheds at admission
+//!                              (RefuseWhenDegraded); when every shard is
+//!                              permanently dead, queued + in-flight
+//!                              requests fail typed (NoLiveShards), and
+//!                              shutdown() typed-fails whatever is still
+//!                              queued (ShutDown) after the grace period.
+//! ```
+//!
+//! [`coordinator::FaultyEngine`] + [`coordinator::FaultInjector`] inject
+//! deterministic errors/panics/stalls (scripted, or seeded via
+//! `QONNX_FAULT_SEED` env hooks) to drive this machinery in
+//! `tests/serving_faults.rs`; [`metrics::serving::ServingMetrics`] counts
+//! sheds/deadline-misses/panics/restarts and tracks a log-bucketed latency
+//! histogram (p50/p95/p99) exportable as text (`serve --metrics`).
 
 pub mod bench_support;
 pub mod cli;

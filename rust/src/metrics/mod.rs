@@ -1,5 +1,7 @@
 //! Model complexity metrics: MACs, BOPs (paper Eq. 5), weight counts and
 //! total weight bits — the columns of Table III and the axes of Fig. 5.
+//! Serving-side observability (latency histogram, queue gauge, shed and
+//! restart counters with a scrapeable text export) lives in [`serving`].
 //!
 //! BOPs for one convolutional layer with `b_w`-bit weights, `b_a`-bit
 //! activations, `n` input channels, `m` output channels and `k×k` filters
@@ -13,6 +15,8 @@
 //! connected layers use `k = 1` and a single position). We also report the
 //! simpler MAC-weighted metric `Σ MACs·b_a·b_w` since published zoo
 //! numbers mix conventions; EXPERIMENTS.md compares both against Table III.
+
+pub mod serving;
 
 use crate::datatypes::DataType;
 use crate::ir::ModelGraph;

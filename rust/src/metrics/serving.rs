@@ -1,0 +1,313 @@
+//! Serving-side observability: a log-bucketed latency histogram
+//! (p50/p95/p99 without per-request allocation), a queue-depth gauge,
+//! and the shed/deadline/restart counters that back the fault-tolerant
+//! serving core — plus a scrapeable text export
+//! ([`ServingMetrics::render_text`], Prometheus-style exposition).
+//!
+//! Everything is atomic: workers, the supervisor, and submitting clients
+//! all record concurrently with no locks on the hot path. The histogram
+//! buckets by power-of-two microseconds (40 buckets cover sub-µs through
+//! ~6 days), so quantiles are exact to within a factor-2 bucket bound —
+//! plenty for p99 trend tracking and SLO floors.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const BUCKETS: usize = 40;
+
+/// Upper bound (inclusive, µs) of histogram bucket `i`.
+fn bucket_bound(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+/// Bucket index for a latency of `us` microseconds: bucket 0 holds 0µs,
+/// bucket `i` holds `[2^(i-1), 2^i)`.
+fn bucket_of(us: u64) -> usize {
+    (64 - us.leading_zeros() as usize).min(BUCKETS - 1)
+}
+
+/// Lock-free log-bucketed latency histogram (microseconds).
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn record_us(&self, us: u64) {
+        self.buckets[bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_us() as f64 / n as f64
+        }
+    }
+
+    /// Upper bound (µs) of the bucket containing the `q`-quantile
+    /// (`0.0 < q <= 1.0`); 0 when nothing has been recorded.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return bucket_bound(i);
+            }
+        }
+        bucket_bound(BUCKETS - 1)
+    }
+}
+
+/// Counters, gauges, and the latency histogram for one [`crate::coordinator::Batcher`].
+///
+/// Shared (`Arc`) between the batcher's workers, its supervisor, and any
+/// scraper holding [`crate::coordinator::Batcher::metrics`].
+#[derive(Default)]
+pub struct ServingMetrics {
+    latency: LatencyHistogram,
+    queue_depth: AtomicU64,
+    queue_depth_peak: AtomicU64,
+    completed: AtomicU64,
+    shed: AtomicU64,
+    deadline_exceeded: AtomicU64,
+    engine_errors: AtomicU64,
+    shard_panics: AtomicU64,
+    shard_restarts: AtomicU64,
+    failed: AtomicU64,
+    batches: AtomicU64,
+}
+
+impl ServingMetrics {
+    pub fn new() -> ServingMetrics {
+        ServingMetrics::default()
+    }
+
+    /// Record one served request's end-to-end latency.
+    pub fn record_latency_us(&self, us: u64) {
+        self.latency.record_us(us);
+        self.completed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Set the queue-depth gauge (tracks the peak as a high-water mark).
+    pub fn set_queue_depth(&self, depth: usize) {
+        self.queue_depth.store(depth as u64, Ordering::Relaxed);
+        self.queue_depth_peak.fetch_max(depth as u64, Ordering::Relaxed);
+    }
+
+    pub fn inc_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn inc_deadline_exceeded(&self) {
+        self.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One engine `infer_batch` error (per batch, not per request —
+    /// failed requests are counted by [`ServingMetrics::inc_failed`]).
+    pub fn inc_engine_error(&self) {
+        self.engine_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One engine panic (per batch, not per request).
+    pub fn inc_shard_panic(&self) {
+        self.shard_panics.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn inc_shard_restart(&self) {
+        self.shard_restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn inc_failed(&self, requests: u64) {
+        self.failed.fetch_add(requests, Ordering::Relaxed);
+    }
+
+    pub fn inc_batch(&self) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn latency(&self) -> &LatencyHistogram {
+        &self.latency
+    }
+
+    pub fn queue_depth(&self) -> u64 {
+        self.queue_depth.load(Ordering::Relaxed)
+    }
+
+    pub fn queue_depth_peak(&self) -> u64 {
+        self.queue_depth_peak.load(Ordering::Relaxed)
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed.load(Ordering::Relaxed)
+    }
+
+    pub fn shed(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    pub fn deadline_exceeded(&self) -> u64 {
+        self.deadline_exceeded.load(Ordering::Relaxed)
+    }
+
+    pub fn engine_errors(&self) -> u64 {
+        self.engine_errors.load(Ordering::Relaxed)
+    }
+
+    pub fn shard_panics(&self) -> u64 {
+        self.shard_panics.load(Ordering::Relaxed)
+    }
+
+    pub fn shard_restarts(&self) -> u64 {
+        self.shard_restarts.load(Ordering::Relaxed)
+    }
+
+    pub fn failed(&self) -> u64 {
+        self.failed.load(Ordering::Relaxed)
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    /// Scrapeable text exposition (Prometheus-style lines).
+    pub fn render_text(&self) -> String {
+        let mut s = String::new();
+        let mut line = |k: &str, v: u64| {
+            s.push_str(k);
+            s.push(' ');
+            s.push_str(&v.to_string());
+            s.push('\n');
+        };
+        line("qonnx_requests_completed_total", self.completed());
+        line("qonnx_requests_shed_total", self.shed());
+        line("qonnx_requests_deadline_exceeded_total", self.deadline_exceeded());
+        line("qonnx_requests_failed_total", self.failed());
+        line("qonnx_engine_errors_total", self.engine_errors());
+        line("qonnx_shard_panics_total", self.shard_panics());
+        line("qonnx_shard_restarts_total", self.shard_restarts());
+        line("qonnx_batches_total", self.batches());
+        line("qonnx_queue_depth", self.queue_depth());
+        line("qonnx_queue_depth_peak", self.queue_depth_peak());
+        line("qonnx_request_latency_us_count", self.latency.count());
+        line("qonnx_request_latency_us_sum", self.latency.sum_us());
+        for (q, label) in [(0.5, "0.5"), (0.95, "0.95"), (0.99, "0.99")] {
+            s.push_str(&format!(
+                "qonnx_request_latency_us{{quantile=\"{label}\"}} {}\n",
+                self.latency.quantile_us(q)
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_indexing_is_log2() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(1023), 10);
+        assert_eq!(bucket_of(1024), 11);
+        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1);
+        assert_eq!(bucket_bound(0), 0);
+        assert_eq!(bucket_bound(10), 1023);
+    }
+
+    #[test]
+    fn quantiles_walk_cumulative_counts() {
+        let h = LatencyHistogram::default();
+        // 90 fast requests (~100us), 9 medium (~1000us), 1 slow (~100_000us)
+        for _ in 0..90 {
+            h.record_us(100);
+        }
+        for _ in 0..9 {
+            h.record_us(1000);
+        }
+        h.record_us(100_000);
+        assert_eq!(h.count(), 100);
+        // p50 lands in the 100us bucket: [64, 127]
+        assert_eq!(h.quantile_us(0.5), 127);
+        // p95 lands in the 1000us bucket: [512, 1023]
+        assert_eq!(h.quantile_us(0.95), 1023);
+        // p99 still in the 1000us bucket (99th of 100 = the last medium)
+        assert_eq!(h.quantile_us(0.99), 1023);
+        // p100 catches the slow one: [65536, 131071]
+        assert_eq!(h.quantile_us(1.0), 131_071);
+        assert!((h.mean_us() - (90.0 * 100.0 + 9.0 * 1000.0 + 100_000.0) / 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_histogram_reports_zero() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.quantile_us(0.5), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn gauge_tracks_peak() {
+        let m = ServingMetrics::new();
+        m.set_queue_depth(3);
+        m.set_queue_depth(9);
+        m.set_queue_depth(1);
+        assert_eq!(m.queue_depth(), 1);
+        assert_eq!(m.queue_depth_peak(), 9);
+    }
+
+    #[test]
+    fn text_export_has_all_series() {
+        let m = ServingMetrics::new();
+        m.record_latency_us(250);
+        m.inc_shed();
+        m.inc_deadline_exceeded();
+        m.inc_shard_restart();
+        m.inc_batch();
+        let text = m.render_text();
+        for series in [
+            "qonnx_requests_completed_total 1",
+            "qonnx_requests_shed_total 1",
+            "qonnx_requests_deadline_exceeded_total 1",
+            "qonnx_shard_restarts_total 1",
+            "qonnx_batches_total 1",
+            "qonnx_queue_depth 0",
+            "qonnx_request_latency_us{quantile=\"0.99\"}",
+        ] {
+            assert!(text.contains(series), "missing {series} in:\n{text}");
+        }
+    }
+}

@@ -17,7 +17,12 @@
 //! to sit in the shared queue; soundness rests on the latch: no borrow
 //! outlives the call because the call does not return (even on panic)
 //! until all jobs are done. Panics inside jobs are caught, forwarded,
-//! and re-raised on the calling thread after the latch drains.
+//! and re-raised on the calling thread after the latch drains; the latch
+//! release itself is RAII-guaranteed (an unwinding job wrapper still
+//! releases it), every pool lock recovers from poison, and the worker
+//! loop catches anything that slips through — so a panicking job can
+//! neither strand a `run_scoped` caller nor kill a worker thread
+//! ([`WorkerPool::live_workers`] stays at full strength).
 //!
 //! The **caller participates**: a pool of `threads = T` spawns `T − 1`
 //! OS workers and runs one job chunk inline, so `T = 1` degenerates to
@@ -38,9 +43,16 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, PoisonError};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Lock, recovering from poison: a job that panicked while a lock was
+/// held must not wedge the pool for every later caller (the guarded
+/// state — job queue, latch count — is valid at every unlock point).
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 struct Shared {
     queue: Mutex<(VecDeque<Job>, bool)>, // (jobs, shutdown)
@@ -60,7 +72,7 @@ impl Latch {
     }
 
     fn complete(&self, panic: Option<Box<dyn std::any::Any + Send>>) {
-        let mut g = self.pending.lock().unwrap();
+        let mut g = lock_recover(&self.pending);
         g.0 -= 1;
         if g.1.is_none() {
             g.1 = panic;
@@ -71,11 +83,25 @@ impl Latch {
     }
 
     fn wait(&self) -> Option<Box<dyn std::any::Any + Send>> {
-        let mut g = self.pending.lock().unwrap();
+        let mut g = lock_recover(&self.pending);
         while g.0 > 0 {
-            g = self.done.wait(g).unwrap();
+            g = self.done.wait(g).unwrap_or_else(PoisonError::into_inner);
         }
         g.1.take()
+    }
+}
+
+/// Releases its latch exactly once, on drop: even if the queued job
+/// wrapper unwinds at an unexpected point, the `run_scoped` caller
+/// blocked on the latch can never hang.
+struct CompleteOnDrop {
+    latch: Arc<Latch>,
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+impl Drop for CompleteOnDrop {
+    fn drop(&mut self) {
+        self.latch.complete(self.panic.take());
     }
 }
 
@@ -139,6 +165,13 @@ impl WorkerPool {
         self.shared.jobs_executed.load(Ordering::Relaxed)
     }
 
+    /// Worker threads still running. Equal to [`WorkerPool::worker_count`]
+    /// in a healthy pool — panicking jobs are caught at two layers
+    /// (wrapper and worker loop), so a job can never kill its worker.
+    pub fn live_workers(&self) -> usize {
+        self.handles.iter().filter(|h| !h.is_finished()).count()
+    }
+
     /// Run every job to completion, in parallel where workers are free.
     /// Blocks until all jobs finished; panics (after draining) if any
     /// job panicked. Jobs may borrow caller state — see module docs.
@@ -162,7 +195,7 @@ impl WorkerPool {
         let first = jobs.remove(0);
         let latch = Arc::new(Latch::new(jobs.len()));
         {
-            let mut q = self.shared.queue.lock().unwrap();
+            let mut q = lock_recover(&self.shared.queue);
             for job in jobs {
                 // SAFETY: lifetime erasure of the borrowed job. The latch
                 // below guarantees every queued job has completed before
@@ -177,9 +210,12 @@ impl WorkerPool {
                 let l = Arc::clone(&latch);
                 let sh = Arc::clone(&self.shared);
                 q.0.push_back(Box::new(move || {
-                    let panic = run_job_tracked(job);
+                    // RAII: the latch is released when `guard` drops, on
+                    // every exit path — a panicking job (or even a panic
+                    // in this wrapper) cannot strand the caller's wait
+                    let mut guard = CompleteOnDrop { latch: l, panic: None };
+                    guard.panic = run_job_tracked(job);
                     sh.jobs_executed.fetch_add(1, Ordering::Relaxed);
-                    l.complete(panic);
                 }));
             }
             self.shared.available.notify_all();
@@ -197,7 +233,7 @@ impl WorkerPool {
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         {
-            let mut q = self.shared.queue.lock().unwrap();
+            let mut q = lock_recover(&self.shared.queue);
             q.1 = true;
             self.shared.available.notify_all();
         }
@@ -210,7 +246,7 @@ impl Drop for WorkerPool {
 fn worker_loop(shared: &Shared) {
     loop {
         let job = {
-            let mut q = shared.queue.lock().unwrap();
+            let mut q = lock_recover(&shared.queue);
             loop {
                 if let Some(job) = q.0.pop_front() {
                     break job;
@@ -218,10 +254,12 @@ fn worker_loop(shared: &Shared) {
                 if q.1 {
                     return;
                 }
-                q = shared.available.wait(q).unwrap();
+                q = shared.available.wait(q).unwrap_or_else(PoisonError::into_inner);
             }
         };
-        job();
+        // belt-and-braces: job wrappers already catch panics, but the
+        // worker thread itself must survive anything that slips through
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
     }
 }
 
@@ -377,6 +415,44 @@ mod tests {
             .collect();
         pool.run_scoped(jobs);
         assert_eq!(ok.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn panicking_jobs_release_latch_and_keep_workers_alive() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.live_workers(), 3);
+        // several rounds of mostly-panicking batches: each run_scoped must
+        // RETURN (latch fully released — a hang here is the old bug), and
+        // no worker thread may die
+        for round in 0..3 {
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..6)
+                    .map(|i| {
+                        Box::new(move || {
+                            if i % 2 == 0 {
+                                panic!("intentional pool panic (round {round}, job {i})");
+                            }
+                        }) as Box<dyn FnOnce() + Send + '_>
+                    })
+                    .collect();
+                pool.run_scoped(jobs);
+            }));
+            assert!(result.is_err(), "round {round}: panic must propagate");
+            assert_eq!(pool.worker_count(), 3, "round {round}: worker set must be stable");
+            assert_eq!(pool.live_workers(), 3, "round {round}: a job panic killed a worker");
+        }
+        // and the pool still runs fresh jobs to completion afterwards
+        let ok = AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..8)
+            .map(|_| {
+                Box::new(|| {
+                    ok.fetch_add(1, Ordering::SeqCst);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(jobs);
+        assert_eq!(ok.load(Ordering::SeqCst), 8);
+        assert_eq!(pool.live_workers(), 3);
     }
 
     #[test]

@@ -1,0 +1,324 @@
+//! Fault-injection integration tests for the serving core: bounded
+//! admission, request deadlines, shard supervision/restart, degraded
+//! modes, and shutdown semantics, all driven through [`FaultyEngine`]
+//! wrapping a real compiled [`PlannedEngine`] (TFC-w2a2).
+//!
+//! Every test asserts the core robustness contract: an admitted request
+//! gets a *definitive typed outcome* — never a hung recv.
+
+use qonnx::coordinator::{
+    Batcher, BatcherConfig, DegradedPolicy, FaultAction, FaultInjector, FaultyEngine,
+    InferenceEngine, PlannedEngine, ServeError, SubmitError, SubmitOptions, SupervisorConfig,
+};
+use qonnx::tensor::Tensor;
+use qonnx::zoo::{tfc_batch, TfcParams};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const IN: usize = 784;
+const OUT: usize = 10;
+
+fn tfc_engine() -> PlannedEngine {
+    let g = tfc_batch(&TfcParams::random(2, 2, 5), 1).unwrap();
+    PlannedEngine::new(&g).unwrap()
+}
+
+/// Factory producing fault-wrapped shared views of one compiled plan.
+fn faulty_factory(
+    template: &PlannedEngine,
+    inj: &FaultInjector,
+) -> impl Fn() -> anyhow::Result<Box<dyn InferenceEngine>> + Send + Sync + 'static {
+    let t = template.share();
+    let inj = inj.clone();
+    move || {
+        Ok(Box::new(FaultyEngine::new(Box::new(t.share()), inj.clone()))
+            as Box<dyn InferenceEngine>)
+    }
+}
+
+/// Supervisor tuned for test speed: tight tick, near-instant restarts.
+fn fast_supervisor() -> SupervisorConfig {
+    SupervisorConfig {
+        tick: Duration::from_millis(1),
+        restart_backoff: Duration::from_millis(1),
+        max_backoff: Duration::from_millis(20),
+        ..Default::default()
+    }
+}
+
+fn wait_until(timeout: Duration, mut f: impl FnMut() -> bool) -> bool {
+    let start = Instant::now();
+    while start.elapsed() < timeout {
+        if f() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    f()
+}
+
+#[test]
+fn overload_sheds_typed_and_depth_stays_bounded() {
+    let template = tfc_engine();
+    let inj = FaultInjector::new();
+    inj.set_default(FaultAction::Stall(Duration::from_millis(10)));
+    let cfg = BatcherConfig {
+        // close batches instantly: the worker is stalling in infer_batch
+        // (not gathering) while the submit loop runs, so the queue
+        // deterministically fills to the cap and sheds
+        max_wait: Duration::ZERO,
+        queue_capacity: Some(4),
+        supervisor: fast_supervisor(),
+        ..Default::default()
+    };
+    let b = Batcher::start_sharded(faulty_factory(&template, &inj), cfg, 1).unwrap();
+
+    let mut accepted = Vec::new();
+    let mut shed = 0u64;
+    for _ in 0..64 {
+        match b.submit(vec![0.25; IN]) {
+            Ok(r) => accepted.push(r),
+            Err(SubmitError::Shed { queue_depth }) => {
+                assert_eq!(queue_depth, 4, "shed must report the full queue");
+                shed += 1;
+            }
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    assert!(shed > 0, "64 instant submits against a stalled engine must shed");
+    assert_eq!(b.metrics().shed(), shed);
+    assert!(b.metrics().queue_depth_peak() <= 4, "queue depth must never exceed the cap");
+
+    // every *accepted* request still resolves definitively
+    for r in accepted {
+        assert_eq!(r.wait().unwrap().len(), OUT);
+    }
+
+    // a caller willing to wait for space gets admitted instead of shed
+    let mut pending = Vec::new();
+    loop {
+        match b.submit(vec![0.5; IN]) {
+            Ok(r) => pending.push(r),
+            Err(SubmitError::Shed { .. }) => break,
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    let opts = SubmitOptions { deadline: None, submit_timeout: Some(Duration::from_secs(10)) };
+    let waited = b.submit_with(vec![0.5; IN], opts).expect("submit_timeout caller is admitted");
+    for r in pending {
+        assert_eq!(r.wait().unwrap().len(), OUT);
+    }
+    assert_eq!(waited.wait().unwrap().len(), OUT);
+}
+
+#[test]
+fn shard_restarts_after_panic_and_serves_identically() {
+    let template = tfc_engine();
+    let inj = FaultInjector::new();
+    let cfg = BatcherConfig { supervisor: fast_supervisor(), ..Default::default() };
+    let b = Arc::new(Batcher::start_sharded(faulty_factory(&template, &inj), cfg, 1).unwrap());
+
+    assert_eq!(b.infer(vec![0.1; IN]).unwrap().len(), OUT);
+
+    inj.arm(FaultAction::Panic);
+    let err = b.submit(vec![0.2; IN]).unwrap().wait().unwrap_err();
+    assert!(matches!(err, ServeError::ShardPanicked { .. }), "want ShardPanicked, got {err:?}");
+
+    assert!(
+        wait_until(Duration::from_secs(5), || {
+            let h = b.health();
+            h.live == 1 && h.restarts >= 1
+        }),
+        "shard must restart to full health, got {:?}",
+        b.health()
+    );
+    assert_eq!(b.metrics().shard_panics(), 1);
+    assert!(b.metrics().shard_restarts() >= 1);
+
+    // after recovery, concurrent requests match the direct engine
+    // byte-for-byte
+    let mut handles = Vec::new();
+    for i in 0..8usize {
+        let b = b.clone();
+        handles.push(std::thread::spawn(move || {
+            let input: Vec<f32> =
+                (0..IN).map(|j| ((i * 97 + j) % 11) as f32 / 11.0).collect();
+            let out = b.infer(input.clone()).unwrap();
+            (input, out)
+        }));
+    }
+    let mut direct = template.share();
+    for h in handles {
+        let (input, got) = h.join().unwrap();
+        let want = direct.infer_batch(&Tensor::new(vec![1, IN], input)).unwrap();
+        assert_eq!(got, want.as_f32().unwrap(), "post-restart output must be byte-identical");
+    }
+}
+
+#[test]
+fn deadline_exceeded_is_typed_and_bounded() {
+    let template = tfc_engine();
+    let inj = FaultInjector::new();
+    inj.set_default(FaultAction::Stall(Duration::from_millis(300)));
+    let cfg = BatcherConfig { supervisor: fast_supervisor(), ..Default::default() };
+    let b = Batcher::start_sharded(faulty_factory(&template, &inj), cfg, 1).unwrap();
+
+    // occupy the single shard so deadline-bearing requests wait behind it
+    let busy = b.submit(vec![0.3; IN]).unwrap();
+    std::thread::sleep(Duration::from_millis(30));
+
+    // client-side: wait() returns within the deadline even though the
+    // engine stalls far past it
+    let start = Instant::now();
+    let opts = SubmitOptions { deadline: Some(Duration::from_millis(40)), submit_timeout: None };
+    let err = b.submit_with(vec![0.3; IN], opts).unwrap().wait().unwrap_err();
+    assert!(matches!(err, ServeError::DeadlineExceeded { .. }), "got {err:?}");
+    assert!(
+        start.elapsed() < Duration::from_millis(250),
+        "wait() must be bounded by the deadline, took {:?}",
+        start.elapsed()
+    );
+
+    // server-side: the sweep delivers DeadlineExceeded with a positive
+    // missed_by, observable on the raw receiver
+    let opts = SubmitOptions { deadline: Some(Duration::from_millis(20)), submit_timeout: None };
+    let rx = b.submit_with(vec![0.3; IN], opts).unwrap().into_receiver();
+    match rx.recv_timeout(Duration::from_secs(5)).unwrap() {
+        Err(ServeError::DeadlineExceeded { missed_by }) => {
+            assert!(missed_by > Duration::ZERO, "server-side delivery reports lateness")
+        }
+        other => panic!("want server-side DeadlineExceeded, got {other:?}"),
+    }
+    let m = b.metrics();
+    assert!(
+        wait_until(Duration::from_secs(5), || m.deadline_exceeded() >= 2),
+        "both expired requests must be counted, got {}",
+        m.deadline_exceeded()
+    );
+
+    // the no-deadline request is untouched by its neighbors' expiry
+    assert_eq!(busy.wait().unwrap().len(), OUT);
+}
+
+#[test]
+fn one_panicking_shard_never_wedges_survivors() {
+    let template = tfc_engine();
+    let inj = FaultInjector::new();
+    // slow restarts: the dead shard stays down while the survivor serves
+    let sup = SupervisorConfig {
+        tick: Duration::from_millis(1),
+        restart_backoff: Duration::from_secs(2),
+        max_backoff: Duration::from_secs(2),
+        ..Default::default()
+    };
+    let cfg = BatcherConfig { supervisor: sup, ..Default::default() };
+    let b = Batcher::start_sharded(faulty_factory(&template, &inj), cfg, 2).unwrap();
+
+    inj.arm(FaultAction::Panic);
+    let err = b.submit(vec![0.4; IN]).unwrap().wait().unwrap_err();
+    assert!(matches!(err, ServeError::ShardPanicked { .. }), "got {err:?}");
+
+    // the shared queue survived the panic: the other shard keeps serving
+    for i in 0..16 {
+        let y = b.infer(vec![i as f32 / 16.0; IN]).unwrap();
+        assert_eq!(y.len(), OUT);
+    }
+    let h = b.health();
+    assert_eq!(h.shards, 2);
+    assert!(h.live >= 1, "survivor must stay live, got {h:?}");
+    assert_eq!(b.metrics().shard_panics(), 1);
+}
+
+#[test]
+fn refuse_when_degraded_policy_sheds_at_admission() {
+    let template = tfc_engine();
+    let inj = FaultInjector::new();
+    let sup = SupervisorConfig {
+        tick: Duration::from_millis(1),
+        max_restarts: 0, // dead stays dead => degraded is observable
+        degraded: DegradedPolicy::RefuseWhenDegraded,
+        ..Default::default()
+    };
+    let cfg = BatcherConfig { supervisor: sup, ..Default::default() };
+    let b = Batcher::start_sharded(faulty_factory(&template, &inj), cfg, 2).unwrap();
+
+    inj.arm(FaultAction::Panic);
+    let err = b.submit(vec![0.4; IN]).unwrap().wait().unwrap_err();
+    assert!(matches!(err, ServeError::ShardPanicked { .. }), "got {err:?}");
+    assert!(wait_until(Duration::from_secs(5), || b.health().dead == 1));
+
+    match b.submit(vec![0.4; IN]) {
+        Err(SubmitError::Degraded { live: 1, shards: 2 }) => {}
+        other => panic!("refuse-when-degraded must shed typed, got {other:?}"),
+    }
+}
+
+#[test]
+fn all_shards_dead_is_typed_not_hung() {
+    let template = tfc_engine();
+    let inj = FaultInjector::new();
+    inj.set_default(FaultAction::Panic);
+    let sup = SupervisorConfig {
+        tick: Duration::from_millis(1),
+        max_restarts: 0,
+        ..Default::default()
+    };
+    let cfg = BatcherConfig { supervisor: sup, ..Default::default() };
+    let b = Batcher::start_sharded(faulty_factory(&template, &inj), cfg, 1).unwrap();
+
+    let err = b.submit(vec![0.6; IN]).unwrap().wait().unwrap_err();
+    assert!(matches!(err, ServeError::ShardPanicked { .. }), "got {err:?}");
+    assert!(
+        wait_until(Duration::from_secs(5), || b.health().all_dead()),
+        "shard with no restart budget must go permanently dead"
+    );
+
+    match b.submit(vec![0.6; IN]) {
+        Err(SubmitError::NoLiveShards) => {}
+        other => panic!("submit against a dead server must fail typed, got {other:?}"),
+    }
+    let stats = b.shutdown();
+    assert!(stats.requests >= 1);
+}
+
+#[test]
+fn shutdown_gives_queued_requests_definitive_responses() {
+    let template = tfc_engine();
+    let inj = FaultInjector::new();
+    inj.set_default(FaultAction::Stall(Duration::from_millis(30)));
+    let cfg = BatcherConfig { supervisor: fast_supervisor(), ..Default::default() };
+    let b = Batcher::start_sharded(faulty_factory(&template, &inj), cfg, 1).unwrap();
+
+    let responses: Vec<_> =
+        (0..8).map(|_| b.submit(vec![0.7; IN]).unwrap()).collect();
+    b.shutdown();
+    for r in responses {
+        // drained => Ok rows; undrained => typed ShutDown. Never a hang.
+        match r.wait() {
+            Ok(rows) => assert_eq!(rows.len(), OUT),
+            Err(ServeError::ShutDown) => {}
+            Err(e) => panic!("unexpected shutdown-era error: {e:?}"),
+        }
+    }
+}
+
+#[test]
+fn env_hook_injectors_are_deterministic() {
+    // env mutation is process-wide; this is the only test touching these
+    // vars, and it restores them before returning
+    std::env::set_var("QONNX_FAULT_SEED", "7");
+    std::env::set_var("QONNX_FAULT_RATE", "0.25");
+    std::env::set_var("QONNX_FAULT_KIND", "error");
+    let a = FaultInjector::from_env().expect("seed set => injection on");
+    let b = FaultInjector::from_env().expect("seed set => injection on");
+    std::env::remove_var("QONNX_FAULT_SEED");
+    std::env::remove_var("QONNX_FAULT_RATE");
+    std::env::remove_var("QONNX_FAULT_KIND");
+
+    let sa: Vec<FaultAction> = (0..32).map(|_| a.next_action()).collect();
+    let sb: Vec<FaultAction> = (0..32).map(|_| b.next_action()).collect();
+    assert_eq!(sa, sb, "same (seed, rate, kind) must give the same schedule");
+    assert!(sa.contains(&FaultAction::Error), "rate 0.25 over 32 draws must inject");
+    assert!(sa.contains(&FaultAction::Serve));
+    assert!(FaultInjector::from_env().is_none(), "no seed => injection off");
+}
