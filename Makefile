@@ -1,9 +1,9 @@
 # Repo-level tooling. `make check` is the CI gate: build, tests, format,
 # and lints over the rust crate.
 
-.PHONY: check build test test-faults fmt clippy doc bench bench-build examples-build
+.PHONY: check build test test-faults verify-zoo fmt clippy doc bench bench-build examples-build miri
 
-check: build test test-faults fmt clippy doc bench-build examples-build
+check: build test test-faults verify-zoo fmt clippy doc bench-build examples-build
 
 build:
 	cd rust && cargo build --release
@@ -19,6 +19,24 @@ test:
 # target gives CI a separately-visible gate.
 test-faults:
 	cd rust && cargo test -q --release --test serving_faults
+
+# Static plan verification over the model zoo (negative-result suite):
+# every float + streamlined plan, batch-1 and batch-8, across the
+# compiler's option axes must verify with zero errors. Part of `test`
+# too; this target gives CI a separately-visible gate.
+verify-zoo:
+	cd rust && cargo test -q --release --test verify_zoo
+
+# Concurrency/UB analysis under miri (needs `rustup +nightly component
+# add miri`): the unsafe surface — arena slot recycling, the SIMD
+# microkernels (scalar path; miri has no AVX2/NEON), and the worker
+# pool's queue/latch handoffs. Scoped to those modules: whole-suite
+# miri is hours, these are the only unsafe-bearing paths.
+miri:
+	cd rust && QONNX_FORCE_SCALAR=1 \
+		MIRIFLAGS="-Zmiri-env-forward=QONNX_FORCE_SCALAR -Zmiri-env-forward=QONNX_INTRAOP_THREADS" \
+		QONNX_INTRAOP_THREADS=2 \
+		cargo +nightly miri test --lib -- plan::arena tensor::simd tensor::qgemm runtime::pool
 
 fmt:
 	cd rust && cargo fmt --check

@@ -700,6 +700,60 @@ fn main() -> anyhow::Result<()> {
         json.record("overload_completed", m.completed() as f64);
     }
 
+    section("static plan verifier wall-time (PR-8, per zoo model)");
+    // the verifier re-derives slot liveness, dtype flow, value ranges and
+    // fusion legality per compile — it must stay a compile-time footnote,
+    // not a serving-path tax. Measured per zoo model (float + streamlined
+    // where the model lowers), recorded to BENCH_PR8.json, and guarded:
+    // the largest model (CNV) must verify well under a second.
+    let mut json8 = BenchJson::default();
+    {
+        let mut cnv_verify_ms = 0.0f64;
+        for name in ["TFC-w2a2", "CNV-w2a2"] {
+            let mut g = qonnx::zoo::build(name, 1, 32)?;
+            transforms::cleanup(&mut g)?;
+            let plan = ExecutionPlan::compile(&g)?;
+            let st = bench(&format!("verify {name} (float plan)"), 2, 10, || {
+                let report = qonnx::verify::verify_plan(&plan, &g);
+                assert!(!report.has_errors(), "{}", report.render());
+                report
+            });
+            println!("{}", st.report());
+            let key = name.split('-').next().unwrap_or(name).to_lowercase();
+            json8.record(&format!("{key}_float_verify_ms"), st.mean.as_secs_f64() * 1e3);
+            if key == "cnv" {
+                cnv_verify_ms = cnv_verify_ms.max(st.mean.as_secs_f64() * 1e3);
+            }
+
+            let sl = qonnx::streamline::try_streamline(&g)?;
+            if sl.report.ok {
+                let splan = ExecutionPlan::compile(&sl.graph)?;
+                let st = bench(&format!("verify {name} (streamlined plan)"), 2, 10, || {
+                    let report = qonnx::verify::verify_plan(&splan, &sl.graph);
+                    assert!(!report.has_errors(), "{}", report.render());
+                    report
+                });
+                println!("{}", st.report());
+                json8.record(
+                    &format!("{key}_streamlined_verify_ms"),
+                    st.mean.as_secs_f64() * 1e3,
+                );
+                if key == "cnv" {
+                    cnv_verify_ms = cnv_verify_ms.max(st.mean.as_secs_f64() * 1e3);
+                }
+            }
+        }
+        // ceiling: verification of the biggest zoo model stays far below
+        // its own compile, so deny-by-default debug compiles and the
+        // verify-zoo CI gate stay cheap
+        assert!(
+            cnv_verify_ms < 500.0,
+            "CNV plan verification regressed to {cnv_verify_ms:.1} ms (ceiling 500 ms)"
+        );
+        json8.record("cnv_verify_ceiling_ms", 500.0);
+    }
+    json8.write(concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR8.json"));
+
     json.write(concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR7.json"));
     Ok(())
 }

@@ -24,7 +24,15 @@ Model transformation:
 
 Inspection & execution:
   summary <model>            print the node listing with shapes/datatypes
-  plan <model>               compile and print the execution plan schedule
+  verify <model>             statically verify the compiled plan: slot
+  verify --zoo <name>        lifetimes/aliasing, dtype flow vs the slot
+                             table, 2^24 accumulator bounds + threshold
+                             monotonicity re-proved from the graph, and
+                             fusion/schedule legality. Verifies the float
+                             plan, plus the streamlined integer plan when
+                             the model lowers cleanly. Exits nonzero on
+                             any error-severity diagnostic.
+  plan <model> [--verify]    compile and print the execution plan schedule
                              (incl. the per-slot dtype + bytes table and a
                              'kernel substrate' line: detected ISA —
                              avx2/neon/scalar, QONNX_FORCE_SCALAR=1 to
@@ -113,11 +121,19 @@ pub fn run(args: Vec<String>) -> Result<()> {
             Ok(())
         }
         "plan" => {
-            let g = load_model(rest.first().context("usage: plan <model>")?)?;
+            let g = load_model(rest.first().context("usage: plan <model> [--verify]")?)?;
             let plan = crate::plan::ExecutionPlan::compile(&g)?;
             println!("{}", plan.summary());
+            if has_flag(rest, "--verify") {
+                let report = crate::verify::verify_plan(&plan, &g);
+                print!("{}", report.render());
+                if report.has_errors() {
+                    bail!("plan verification failed");
+                }
+            }
             Ok(())
         }
+        "verify" => verify_cmd(rest),
         "streamline" => streamline_cmd(rest),
         "stats" => stats_cmd(rest),
         "exec" => exec_cmd(rest),
@@ -179,6 +195,41 @@ fn transform_cmd(cmd: &str, rest: &[String]) -> Result<()> {
     }
     save_model(&g, output)?;
     println!("{cmd}: {} -> {} nodes, wrote {output}", before, g.nodes.len());
+    Ok(())
+}
+
+/// `verify <model>` / `verify --zoo <name>`: statically verify the
+/// compiled plan(s) — the float plan, and the streamlined integer plan
+/// when the model lowers cleanly. Exits nonzero on any error-severity
+/// diagnostic.
+fn verify_cmd(rest: &[String]) -> Result<()> {
+    let g = if let Some(name) = parse_flag(rest, "--zoo") {
+        let mut g = zoo::build(&name, 1, 32)?;
+        transforms::cleanup(&mut g)?;
+        g
+    } else {
+        load_model(rest.first().context("usage: verify <model> | verify --zoo <name>")?)?
+    };
+    let mut failed = false;
+    println!("— float plan —");
+    let plan = crate::plan::ExecutionPlan::compile(&g)?;
+    let report = crate::verify::verify_plan(&plan, &g);
+    print!("{}", report.render());
+    failed |= report.has_errors();
+
+    let sl = crate::streamline::try_streamline(&g)?;
+    if sl.report.ok {
+        println!("— streamlined integer plan —");
+        let splan = crate::plan::ExecutionPlan::compile(&sl.graph)?;
+        let sreport = crate::verify::verify_plan(&splan, &sl.graph);
+        print!("{}", sreport.render());
+        failed |= sreport.has_errors();
+    } else {
+        println!("(model does not streamline — float plan only)");
+    }
+    if failed {
+        bail!("plan verification failed");
+    }
     Ok(())
 }
 

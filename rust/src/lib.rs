@@ -184,6 +184,26 @@
 //! `tests/serving_faults.rs`; [`metrics::serving::ServingMetrics`] counts
 //! sheds/deadline-misses/panics/restarts and tracks a log-bucketed latency
 //! histogram (p50/p95/p99) exportable as text (`serve --metrics`).
+//!
+//! ## Static verification
+//!
+//! The executor's hot loop trusts the compiled schedule completely — it
+//! indexes slots unchecked, recycles released buffers by container, and
+//! lets quantized kernels skip per-element validation on proven-integer
+//! inputs. [`verify`] re-derives every one of those claims *statically*
+//! from the plan and its source graph: slot liveness (read-before-write,
+//! double release, overwrite-live), dtype flow (declared kernel
+//! containers vs. the slot table, integer-edge justification),
+//! arithmetic safety (the `< 2^24` accumulator bound recomputed from
+//! claimed ranges, range containment against [`transforms::infer_ranges`],
+//! threshold monotonicity, container fit) and fusion/schedule legality
+//! (sole-consumer proofs replayed from the graph). Findings come back as
+//! a typed [`verify::VerifyReport`]. [`plan::PlanOptions::verify`] runs
+//! it at the tail of every compile — **deny-by-default in debug builds**,
+//! explicit in release (`qonnx verify`, `plan --verify`, the
+//! `verify_zoo` suite over the model zoo). `verify::mutate` provides
+//! single-fault plan mutators that self-test the verifier: every
+//! mutation class must trip its expected diagnostic code.
 
 pub mod bench_support;
 pub mod cli;
@@ -201,4 +221,5 @@ pub mod tensor;
 pub mod testutil;
 pub mod training;
 pub mod transforms;
+pub mod verify;
 pub mod zoo;

@@ -444,7 +444,7 @@ fn spec_matmul<'g>(
 /// dtype through unchanged — the structural/monotone interior of a
 /// streamlined graph. (`MaxPool` only on the plain NCHW path; the NHWC
 /// wrapper transposes through f32.)
-fn residency_passthrough(node: &Node) -> bool {
+pub(crate) fn residency_passthrough(node: &Node) -> bool {
     if node.outputs.len() != 1 {
         return false;
     }

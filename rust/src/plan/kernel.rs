@@ -200,6 +200,20 @@ impl BatchReshape {
         BatchReshape { orig: orig.to_vec(), batched, try_orig_first }
     }
 
+    // Verifier introspection: well-formedness of a compiled batch-symbolic
+    // target is re-checked from these.
+    pub(crate) fn orig(&self) -> &[i64] {
+        &self.orig
+    }
+
+    pub(crate) fn batched(&self) -> &[i64] {
+        &self.batched
+    }
+
+    pub(crate) fn try_orig_first(&self) -> bool {
+        self.try_orig_first
+    }
+
     /// Resolve and apply the target against `x` (same data, new shape —
     /// byte-identical to [`crate::ops::shape_ops::reshape`]).
     pub fn run(&self, x: &Tensor) -> Result<Tensor> {
@@ -412,6 +426,11 @@ impl PackedConv {
         self.m
     }
 
+    /// The fused stage chain in application order (verifier introspection).
+    pub(crate) fn epilogue(&self) -> &[Epilogue] {
+        &self.epilogue
+    }
+
     /// Number of fused epilogue stages.
     pub fn epilogue_len(&self) -> usize {
         self.epilogue.len()
@@ -559,9 +578,19 @@ impl PackedGemm {
         self.n
     }
 
+    /// The fused stage chain in application order (verifier introspection).
+    pub(crate) fn epilogue(&self) -> &[Epilogue] {
+        &self.epilogue
+    }
+
     /// Number of fused epilogue stages.
     pub fn epilogue_len(&self) -> usize {
         self.epilogue.len()
+    }
+
+    /// Whether C arrives as a second runtime input (step arity 2).
+    pub(crate) fn runtime_bias(&self) -> bool {
+        matches!(self.bias, GemmBias::Runtime)
     }
 
     /// `inputs[0]` is A; `inputs[1]` (when present) is a runtime C.
@@ -640,6 +669,11 @@ impl PackedMatMul {
     /// Output features (`N`) — the channel axis the epilogue indexes.
     pub(crate) fn out_channels(&self) -> usize {
         self.n
+    }
+
+    /// The fused stage chain in application order (verifier introspection).
+    pub(crate) fn epilogue(&self) -> &[Epilogue] {
+        &self.epilogue
     }
 
     /// Number of fused epilogue stages.

@@ -130,6 +130,7 @@ pub mod qkernel;
 
 pub use arena::{ScratchArena, SlotArena};
 pub use kernel::CompiledKernel;
+pub(crate) use compile::residency_passthrough;
 
 use crate::ir::{ModelGraph, Node};
 use crate::tensor::{DType, Tensor};
@@ -176,6 +177,13 @@ pub struct PlanOptions {
     /// ([`crate::exec::ExecOptions::keep_intermediates`] does).
     /// Requires `quantize`; a no-op on graphs without integer proofs.
     pub int_residency: bool,
+    /// Run the static plan verifier ([`crate::verify`]) over the freshly
+    /// compiled plan and fail compilation on any `Error`-severity
+    /// diagnostic. Defaults to **on in debug builds** — every plan the
+    /// unit suite compiles is re-proved — and off in release, where
+    /// verification is explicit (`qonnx verify`, `plan --verify`, the
+    /// `verify_zoo` suite).
+    pub verify: bool,
 }
 
 impl Default for PlanOptions {
@@ -187,6 +195,7 @@ impl Default for PlanOptions {
             batch_symbolic: true,
             quantize: true,
             int_residency: true,
+            verify: cfg!(debug_assertions),
         }
     }
 }
@@ -371,12 +380,26 @@ pub struct PlanRunResult {
 impl<'g> ExecutionPlan<'g> {
     /// Compile `graph` with default options.
     pub fn compile(graph: &'g ModelGraph) -> Result<ExecutionPlan<'g>> {
-        compile::compile(graph, &PlanOptions::default())
+        Self::compile_with(graph, &PlanOptions::default())
     }
 
-    /// Compile `graph` with explicit options.
+    /// Compile `graph` with explicit options. When [`PlanOptions::verify`]
+    /// is set (the debug-build default), the compiled plan is handed to
+    /// the static verifier and any `Error`-severity diagnostic fails the
+    /// compile — a plan the verifier rejects never reaches an executor.
     pub fn compile_with(graph: &'g ModelGraph, opts: &PlanOptions) -> Result<ExecutionPlan<'g>> {
-        compile::compile(graph, opts)
+        let plan = compile::compile(graph, opts)?;
+        if opts.verify {
+            let report = crate::verify::verify_plan(&plan, graph);
+            if report.has_errors() {
+                bail!(
+                    "plan verification failed for '{}':\n{}",
+                    plan.name(),
+                    report.render()
+                );
+            }
+        }
+        Ok(plan)
     }
 
     /// Detach the plan from its source graph: each borrowed constant is

@@ -279,8 +279,27 @@ impl QThreshold {
     }
 
     /// Narrowest container that exactly holds every emitted level.
-    fn preferred_container(&self) -> DType {
+    pub(crate) fn preferred_container(&self) -> DType {
         level_container(self.out_scale, self.out_bias, self.steps)
+    }
+
+    // Verifier introspection: the plan verifier re-checks row monotonicity
+    // and level-container fit from these without re-running try_build.
+    pub(crate) fn channels(&self) -> usize {
+        self.channels
+    }
+
+    pub(crate) fn steps(&self) -> usize {
+        self.steps
+    }
+
+    pub(crate) fn rows(&self) -> &[i32] {
+        &self.rows
+    }
+
+    /// Mutation-harness hook: corrupt threshold rows in place.
+    pub(crate) fn rows_mut(&mut self) -> &mut Vec<i32> {
+        &mut self.rows
     }
 
     #[inline]
@@ -431,6 +450,29 @@ impl QuantConv {
 
     pub(crate) fn set_epilogue(&mut self, t: QThreshold) {
         self.epilogue = Some(t);
+    }
+
+    /// The fused `MultiThreshold` stage, if any (verifier introspection).
+    pub(crate) fn epilogue(&self) -> Option<&QThreshold> {
+        self.epilogue.as_ref()
+    }
+
+    /// The proven input range `[lo, hi]` the accumulator bound rests on.
+    pub(crate) fn input_range(&self) -> (f64, f64) {
+        (self.in_lo, self.in_hi)
+    }
+
+    /// `(max |weight|, accumulation depth)` — the `w_abs` / `k` terms of
+    /// the compile-time `< 2^24` accumulator bound, max'd over groups.
+    pub(crate) fn acc_terms(&self) -> (f64, usize) {
+        let w = self.weights.iter().map(PackedBi8::max_abs).max().unwrap_or(0);
+        (f64::from(w), self.k)
+    }
+
+    /// Mutation-harness hook: forge the claimed input range.
+    pub(crate) fn set_input_range(&mut self, lo: f64, hi: f64) {
+        self.in_lo = lo;
+        self.in_hi = hi;
     }
 
     /// Whether a `MultiThreshold` stage is fused in.
@@ -671,6 +713,36 @@ impl QuantGemm {
         self.epilogue = Some(t);
     }
 
+    /// The fused `MultiThreshold` stage, if any (verifier introspection).
+    pub(crate) fn epilogue(&self) -> Option<&QThreshold> {
+        self.epilogue.as_ref()
+    }
+
+    /// The proven input range `[lo, hi]` the accumulator bound rests on.
+    pub(crate) fn input_range(&self) -> (f64, f64) {
+        (self.in_lo, self.in_hi)
+    }
+
+    /// `(max |weight|, accumulation depth)` of the accumulator bound.
+    pub(crate) fn acc_terms(&self) -> (f64, usize) {
+        (f64::from(self.bp.max_abs()), self.k)
+    }
+
+    /// Largest `|beta * C|` folded into the per-column bias (the `c_abs`
+    /// term of the accumulator bound; 0 when there is no C).
+    pub(crate) fn bias_abs(&self) -> f64 {
+        self.bias
+            .as_ref()
+            .map(|b| b.iter().map(|&v| v.abs()).max().unwrap_or(0) as f64)
+            .unwrap_or(0.0)
+    }
+
+    /// Mutation-harness hook: forge the claimed input range.
+    pub(crate) fn set_input_range(&mut self, lo: f64, hi: f64) {
+        self.in_lo = lo;
+        self.in_hi = hi;
+    }
+
     /// Whether a `MultiThreshold` stage is fused in.
     pub fn has_fused_threshold(&self) -> bool {
         self.epilogue.is_some()
@@ -756,6 +828,27 @@ impl QuantMatMul {
 
     pub(crate) fn set_epilogue(&mut self, t: QThreshold) {
         self.epilogue = Some(t);
+    }
+
+    /// The fused `MultiThreshold` stage, if any (verifier introspection).
+    pub(crate) fn epilogue(&self) -> Option<&QThreshold> {
+        self.epilogue.as_ref()
+    }
+
+    /// The proven input range `[lo, hi]` the accumulator bound rests on.
+    pub(crate) fn input_range(&self) -> (f64, f64) {
+        (self.in_lo, self.in_hi)
+    }
+
+    /// `(max |weight|, accumulation depth)` of the accumulator bound.
+    pub(crate) fn acc_terms(&self) -> (f64, usize) {
+        (f64::from(self.bp.max_abs()), self.k)
+    }
+
+    /// Mutation-harness hook: forge the claimed input range.
+    pub(crate) fn set_input_range(&mut self, lo: f64, hi: f64) {
+        self.in_lo = lo;
+        self.in_hi = hi;
     }
 
     /// Whether a `MultiThreshold` stage is fused in.
@@ -873,6 +966,25 @@ impl ThresholdKernel {
     /// The output container (f32 unless the residency pass chose tighter).
     pub fn out_dtype(&self) -> DType {
         self.out_dtype
+    }
+
+    // Verifier introspection: monotonicity and container fit are
+    // re-checked from these without re-running try_build.
+    pub(crate) fn channels(&self) -> usize {
+        self.channels
+    }
+
+    pub(crate) fn steps(&self) -> usize {
+        self.steps
+    }
+
+    pub(crate) fn rows(&self) -> &[f32] {
+        &self.rows
+    }
+
+    /// Mutation-harness hook: corrupt threshold rows in place.
+    pub(crate) fn rows_mut(&mut self) -> &mut Vec<f32> {
+        &mut self.rows
     }
 
     #[inline]

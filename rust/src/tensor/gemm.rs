@@ -224,7 +224,12 @@ unsafe fn gemm_packed_rect(
                 let tile = bp.tile(kc0, kc_len, nc0);
                 for i in ic0..ic1 {
                     let arow = &a[i * k + kc0..i * k + kc0 + kc_len];
-                    let orow = std::slice::from_raw_parts_mut(out.add(i * n + nc0), nc_len);
+                    // SAFETY: `out` spans the full `[m, n]` buffer and this
+                    // call owns rows `row0..row1` × cols `col0..col1`
+                    // exclusively (fn contract), so the `nc_len` elements at
+                    // `i * n + nc0` are in bounds and unaliased.
+                    let orow =
+                        unsafe { std::slice::from_raw_parts_mut(out.add(i * n + nc0), nc_len) };
                     for (kk, &av) in arow.iter().enumerate() {
                         if av == 0.0 {
                             continue;

@@ -31,39 +31,46 @@ pub(super) unsafe fn tile_dot(a: &[i8], tile: &[i8], out: &mut [i32]) {
         ap[i] = v.max(0) as u8;
         an[i] = (-v).max(0) as u8;
     }
-    let ones = _mm256_set1_epi16(1);
-    for j0 in (0..np).step_by(J_GROUP) {
-        let base = (j0 / J_GROUP) * kp * J_GROUP;
-        let mut acc_p = _mm256_setzero_si256();
-        let mut acc_n = _mm256_setzero_si256();
-        for g in 0..groups {
-            // one chunk = eight 4-byte column groups = one register
-            let bv = _mm256_loadu_si256(tile.as_ptr().add(base + g * 32) as *const __m256i);
-            let pa = _mm256_set1_epi32(i32::from_le_bytes([
-                ap[K_GROUP * g],
-                ap[K_GROUP * g + 1],
-                ap[K_GROUP * g + 2],
-                ap[K_GROUP * g + 3],
-            ]));
-            let na = _mm256_set1_epi32(i32::from_le_bytes([
-                an[K_GROUP * g],
-                an[K_GROUP * g + 1],
-                an[K_GROUP * g + 2],
-                an[K_GROUP * g + 3],
-            ]));
-            // maddubs: saturation-free by the sign-split bound;
-            // madd(·, 1): exact pairwise i16→i32 widen
-            let p = _mm256_madd_epi16(_mm256_maddubs_epi16(pa, bv), ones);
-            let n = _mm256_madd_epi16(_mm256_maddubs_epi16(na, bv), ones);
-            acc_p = _mm256_add_epi32(acc_p, p);
-            acc_n = _mm256_add_epi32(acc_n, n);
-        }
-        let acc = _mm256_sub_epi32(acc_p, acc_n);
-        let mut lanes = [0i32; J_GROUP];
-        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
-        // column tail: only write back the valid lanes
-        for (jj, &lane) in lanes.iter().take((nc - j0).min(J_GROUP)).enumerate() {
-            out[j0 + jj] += lane;
+    // SAFETY: AVX2 is available (caller contract, enforced by the
+    // `#[target_feature]` gate). The unaligned loads stay in bounds: for
+    // each group `base + g*32 + 32 <= (j0/J_GROUP)*kp*J_GROUP + kp*J_GROUP
+    // <= kp*np == tile.len()` (asserted above). The store targets a local
+    // `[i32; J_GROUP]`, exactly one register wide.
+    unsafe {
+        let ones = _mm256_set1_epi16(1);
+        for j0 in (0..np).step_by(J_GROUP) {
+            let base = (j0 / J_GROUP) * kp * J_GROUP;
+            let mut acc_p = _mm256_setzero_si256();
+            let mut acc_n = _mm256_setzero_si256();
+            for g in 0..groups {
+                // one chunk = eight 4-byte column groups = one register
+                let bv = _mm256_loadu_si256(tile.as_ptr().add(base + g * 32) as *const __m256i);
+                let pa = _mm256_set1_epi32(i32::from_le_bytes([
+                    ap[K_GROUP * g],
+                    ap[K_GROUP * g + 1],
+                    ap[K_GROUP * g + 2],
+                    ap[K_GROUP * g + 3],
+                ]));
+                let na = _mm256_set1_epi32(i32::from_le_bytes([
+                    an[K_GROUP * g],
+                    an[K_GROUP * g + 1],
+                    an[K_GROUP * g + 2],
+                    an[K_GROUP * g + 3],
+                ]));
+                // maddubs: saturation-free by the sign-split bound;
+                // madd(·, 1): exact pairwise i16→i32 widen
+                let p = _mm256_madd_epi16(_mm256_maddubs_epi16(pa, bv), ones);
+                let n = _mm256_madd_epi16(_mm256_maddubs_epi16(na, bv), ones);
+                acc_p = _mm256_add_epi32(acc_p, p);
+                acc_n = _mm256_add_epi32(acc_n, n);
+            }
+            let acc = _mm256_sub_epi32(acc_p, acc_n);
+            let mut lanes = [0i32; J_GROUP];
+            _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+            // column tail: only write back the valid lanes
+            for (jj, &lane) in lanes.iter().take((nc - j0).min(J_GROUP)).enumerate() {
+                out[j0 + jj] += lane;
+            }
         }
     }
 }

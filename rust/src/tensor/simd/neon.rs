@@ -34,26 +34,34 @@ pub(super) unsafe fn tile_dot(a: &[i8], tile: &[i8], out: &mut [i32]) {
             adup[g * 2 * K_GROUP + K_GROUP + kk] = v;
         }
     }
-    for j0 in (0..np).step_by(J_GROUP) {
-        let base = (j0 / J_GROUP) * kp * J_GROUP;
-        // two i32 lanes per column; vpaddq folds them at block end
-        let mut acc01 = vdupq_n_s32(0);
-        let mut acc23 = vdupq_n_s32(0);
-        let mut acc45 = vdupq_n_s32(0);
-        let mut acc67 = vdupq_n_s32(0);
-        for g in 0..groups {
-            let av = vld1_s8(adup.as_ptr().add(g * 2 * K_GROUP));
-            let chunk = tile.as_ptr().add(base + g * K_GROUP * J_GROUP);
-            acc01 = vpadalq_s16(acc01, vmull_s8(vld1_s8(chunk), av));
-            acc23 = vpadalq_s16(acc23, vmull_s8(vld1_s8(chunk.add(8)), av));
-            acc45 = vpadalq_s16(acc45, vmull_s8(vld1_s8(chunk.add(16)), av));
-            acc67 = vpadalq_s16(acc67, vmull_s8(vld1_s8(chunk.add(24)), av));
-        }
-        let mut lanes = [0i32; J_GROUP];
-        vst1q_s32(lanes.as_mut_ptr(), vpaddq_s32(acc01, acc23));
-        vst1q_s32(lanes.as_mut_ptr().add(4), vpaddq_s32(acc45, acc67));
-        for (jj, &lane) in lanes.iter().take((nc - j0).min(J_GROUP)).enumerate() {
-            out[j0 + jj] += lane;
+    // SAFETY: NEON is available (caller contract, enforced by the
+    // `#[target_feature]` gate). Each 8-byte `vld1_s8` stays in bounds:
+    // `adup` holds `2 * GEMM_KC >= 2 * kp` duplicated bytes, and the four
+    // tile loads cover `base + g*K_GROUP*J_GROUP + 32 <= kp*np ==
+    // tile.len()` (asserted above). The stores target a local
+    // `[i32; J_GROUP]`, two quadwords wide.
+    unsafe {
+        for j0 in (0..np).step_by(J_GROUP) {
+            let base = (j0 / J_GROUP) * kp * J_GROUP;
+            // two i32 lanes per column; vpaddq folds them at block end
+            let mut acc01 = vdupq_n_s32(0);
+            let mut acc23 = vdupq_n_s32(0);
+            let mut acc45 = vdupq_n_s32(0);
+            let mut acc67 = vdupq_n_s32(0);
+            for g in 0..groups {
+                let av = vld1_s8(adup.as_ptr().add(g * 2 * K_GROUP));
+                let chunk = tile.as_ptr().add(base + g * K_GROUP * J_GROUP);
+                acc01 = vpadalq_s16(acc01, vmull_s8(vld1_s8(chunk), av));
+                acc23 = vpadalq_s16(acc23, vmull_s8(vld1_s8(chunk.add(8)), av));
+                acc45 = vpadalq_s16(acc45, vmull_s8(vld1_s8(chunk.add(16)), av));
+                acc67 = vpadalq_s16(acc67, vmull_s8(vld1_s8(chunk.add(24)), av));
+            }
+            let mut lanes = [0i32; J_GROUP];
+            vst1q_s32(lanes.as_mut_ptr(), vpaddq_s32(acc01, acc23));
+            vst1q_s32(lanes.as_mut_ptr().add(4), vpaddq_s32(acc45, acc67));
+            for (jj, &lane) in lanes.iter().take((nc - j0).min(J_GROUP)).enumerate() {
+                out[j0 + jj] += lane;
+            }
         }
     }
 }

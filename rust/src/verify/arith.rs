@@ -1,0 +1,275 @@
+//! Arithmetic-safety proofs for the quantized tier, re-established from
+//! scratch.
+//!
+//! The exactness contract of [`crate::plan::qkernel`] rests on three
+//! compile-time claims: the input lives on a proven integer grid, every
+//! `i32` accumulator magnitude stays below `2^24` (so the f32 container
+//! holds it exactly), and threshold rows are per-channel sorted (so the
+//! binary search replays the generic op's linear count). The kernels
+//! *trust* the claims at run time — resident-integer inputs skip
+//! per-element re-validation entirely.
+//!
+//! This pass re-derives each claim without executing:
+//!
+//! * the accumulator bound `|x| · |w| · k + |c| < 2^24` is re-computed
+//!   from the kernel's claimed input range and its packed weights
+//!   ([`Code::AccumulatorUnbounded`]);
+//! * the claimed range itself is re-derived from the source graph via
+//!   [`infer_ranges`] and checked for containment — a claimed range
+//!   narrower than the provable one would let out-of-grid values into
+//!   unvalidated integer paths ([`Code::InputRangeMismatch`]);
+//! * threshold rows (fused `QThreshold` epilogues and standalone
+//!   [`ThresholdKernel`]s) are re-checked: shape, per-channel
+//!   monotonicity, the f32-exact window, and the channel count against
+//!   the producing kernel's output channels;
+//! * the chosen output container must hold the proven level grid
+//!   ([`Code::GridOverflowsContainer`]): an integer container under
+//!   levels that only fit a wider one silently truncates.
+
+use super::{Code, Location, VerifyReport};
+use crate::ir::ModelGraph;
+use crate::plan::qkernel::{QThreshold, ThresholdKernel};
+use crate::plan::{CompiledKernel, ExecutionPlan};
+use crate::tensor::{DType, F32_EXACT_INT_LIMIT};
+use crate::transforms::{infer_ranges, ValueRange};
+use std::collections::BTreeMap;
+
+pub(super) fn check(plan: &ExecutionPlan<'_>, graph: &ModelGraph, r: &mut VerifyReport) {
+    let any_quant = plan.steps.iter().any(|s| {
+        matches!(
+            s.kernel,
+            CompiledKernel::QConv(_)
+                | CompiledKernel::QGemm(_)
+                | CompiledKernel::QMatMul(_)
+                | CompiledKernel::Threshold(_)
+        )
+    });
+    if !any_quant {
+        return;
+    }
+    // Re-derive the value-range proofs the compiler's quantized tier
+    // rested on. Same call, same graph — deterministic, so a correct
+    // plan's claimed ranges are bit-equal to these.
+    let ranges: BTreeMap<String, ValueRange> = infer_ranges(graph).unwrap_or_default();
+
+    for (si, step) in plan.steps.iter().enumerate() {
+        let loc = Location::Step(si);
+        let node = &graph.nodes[step.node_idx];
+        let data_input = node.inputs.first().map(String::as_str).unwrap_or("");
+        match &step.kernel {
+            CompiledKernel::QConv(qc) => {
+                let (w_abs, k) = qc.acc_terms();
+                check_quant_input(
+                    r, loc, &ranges, data_input, qc.input_range(), w_abs, k, 0.0,
+                );
+                grid_fit(r, loc, qc.out_dtype(), qc.preferred_out_dtype());
+                if let Some(qt) = qc.epilogue() {
+                    check_qthreshold(r, loc, qt, qc.out_channels());
+                }
+            }
+            CompiledKernel::QGemm(qg) => {
+                let (w_abs, k) = qg.acc_terms();
+                check_quant_input(
+                    r, loc, &ranges, data_input, qg.input_range(), w_abs, k, qg.bias_abs(),
+                );
+                grid_fit(r, loc, qg.out_dtype(), qg.preferred_out_dtype());
+                if let Some(qt) = qg.epilogue() {
+                    check_qthreshold(r, loc, qt, qg.out_channels());
+                }
+            }
+            CompiledKernel::QMatMul(qm) => {
+                let (w_abs, k) = qm.acc_terms();
+                check_quant_input(
+                    r, loc, &ranges, data_input, qm.input_range(), w_abs, k, 0.0,
+                );
+                grid_fit(r, loc, qm.out_dtype(), qm.preferred_out_dtype());
+                if let Some(qt) = qm.epilogue() {
+                    check_qthreshold(r, loc, qt, qm.out_channels());
+                }
+            }
+            CompiledKernel::Threshold(tk) => {
+                check_threshold_kernel(r, loc, tk);
+                grid_fit(r, loc, tk.out_dtype(), tk.preferred_out_dtype());
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Re-check a quantized kernel's claimed input range: it must be a
+/// finite integral interval, the accumulator bound must hold under it,
+/// and it must contain the range provable from the source graph.
+#[allow(clippy::too_many_arguments)]
+fn check_quant_input(
+    r: &mut VerifyReport,
+    loc: Location,
+    ranges: &BTreeMap<String, ValueRange>,
+    data_input: &str,
+    claimed: (f64, f64),
+    w_abs: f64,
+    k: usize,
+    bias_abs: f64,
+) {
+    let (lo, hi) = claimed;
+    let usable =
+        lo.is_finite() && hi.is_finite() && lo.fract() == 0.0 && hi.fract() == 0.0 && lo <= hi;
+    if !usable {
+        r.error(
+            Code::AccumulatorUnbounded,
+            loc,
+            format!(
+                "claimed input range [{lo}, {hi}] is not a finite integral interval — \
+                 no accumulator bound can rest on it"
+            ),
+        );
+    } else {
+        let in_abs = lo.abs().max(hi.abs());
+        let bound = in_abs * w_abs * k as f64 + bias_abs;
+        if bound >= F32_EXACT_INT_LIMIT {
+            r.error(
+                Code::AccumulatorUnbounded,
+                loc,
+                format!(
+                    "accumulator bound |x|≤{in_abs} · |w|≤{w_abs} · k={k} + |c|≤{bias_abs} \
+                     = {bound} reaches 2^24 — the i32 → f32 emission is no longer exact"
+                ),
+            );
+        }
+    }
+    match ranges.get(data_input) {
+        None => r.warn(
+            Code::UnprovenQuantInput,
+            loc,
+            format!(
+                "no value range is derivable for quantized input '{data_input}' — the \
+                 integer-grid claim cannot be re-established from the graph"
+            ),
+        ),
+        Some(d) if !d.integral || !d.lo.is_finite() || !d.hi.is_finite() => r.error(
+            Code::InputRangeMismatch,
+            loc,
+            format!(
+                "derived range for '{data_input}' ([{}, {}], integral: {}) does not prove \
+                 an integer grid",
+                d.lo, d.hi, d.integral
+            ),
+        ),
+        Some(d) if d.lo < lo || d.hi > hi => r.error(
+            Code::InputRangeMismatch,
+            loc,
+            format!(
+                "derived range [{}, {}] for '{data_input}' is not contained in the claimed \
+                 [{lo}, {hi}] — runtime values could leave the validated grid",
+                d.lo, d.hi
+            ),
+        ),
+        Some(_) => {}
+    }
+}
+
+/// The chosen output container must hold the proven level grid.
+fn grid_fit(r: &mut VerifyReport, loc: Location, actual: DType, preferred: DType) {
+    if actual == preferred || actual == DType::F32 {
+        return; // exact choice, or the always-safe float container
+    }
+    if preferred == DType::I8 && actual == DType::I32 {
+        r.warn(
+            Code::GridOverflowsContainer,
+            loc,
+            format!(
+                "output container {actual} is wider than the proven level grid needs \
+                 ({preferred}) — correct, but wastes residency bandwidth"
+            ),
+        );
+        return;
+    }
+    r.error(
+        Code::GridOverflowsContainer,
+        loc,
+        format!(
+            "output container {actual} cannot exactly hold the proven level grid \
+             (narrowest exact container: {preferred})"
+        ),
+    );
+}
+
+/// Fused `MultiThreshold` epilogue: shape, channels, f32-exact window,
+/// per-channel monotonicity.
+fn check_qthreshold(r: &mut VerifyReport, loc: Location, qt: &QThreshold, out_channels: usize) {
+    let (c, t) = (qt.channels(), qt.steps());
+    if c != 1 && c != out_channels {
+        r.error(
+            Code::EpilogueChannelMismatch,
+            loc,
+            format!(
+                "fused threshold has {c} channel rows but the kernel emits {out_channels} \
+                 channels (1 or {out_channels} required)"
+            ),
+        );
+    }
+    let rows = qt.rows();
+    if t == 0 || rows.len() != c * t {
+        r.error(
+            Code::ThresholdRowsMalformed,
+            loc,
+            format!("fused threshold rows: {} values for {c} channels × {t} steps", rows.len()),
+        );
+        return;
+    }
+    for (ci, row) in rows.chunks(t).enumerate() {
+        if row.iter().any(|&v| f64::from(v).abs() >= F32_EXACT_INT_LIMIT) {
+            r.error(
+                Code::ThresholdRowsMalformed,
+                loc,
+                format!("fused threshold row {ci} leaves the f32-exact ±2^24 window"),
+            );
+        }
+        if !row.windows(2).all(|w| w[0] <= w[1]) {
+            r.error(
+                Code::ThresholdRowsUnsorted,
+                loc,
+                format!(
+                    "fused threshold row {ci} is not sorted — the binary search would \
+                     diverge from the generic op's linear count"
+                ),
+            );
+        }
+    }
+}
+
+/// Standalone [`ThresholdKernel`]: shape, finiteness, monotonicity. The
+/// rows live in the producer's f32 domain, so there is no ±2^24 window
+/// requirement; non-finite rows are flagged as a warning (the compile
+/// accepts a single-step NaN row, which the generic op also accepts —
+/// it just thresholds nothing).
+fn check_threshold_kernel(r: &mut VerifyReport, loc: Location, tk: &ThresholdKernel) {
+    let (c, t) = (tk.channels(), tk.steps());
+    let rows = tk.rows();
+    if t == 0 || rows.len() != c * t {
+        r.error(
+            Code::ThresholdRowsMalformed,
+            loc,
+            format!("threshold rows: {} values for {c} channels × {t} steps", rows.len()),
+        );
+        return;
+    }
+    for (ci, row) in rows.chunks(t).enumerate() {
+        if row.iter().any(|v| !v.is_finite()) {
+            r.warn(
+                Code::ThresholdRowsMalformed,
+                loc,
+                format!("threshold row {ci} contains non-finite values"),
+            );
+        }
+        if !row.windows(2).all(|w| w[0] <= w[1]) {
+            r.error(
+                Code::ThresholdRowsUnsorted,
+                loc,
+                format!(
+                    "threshold row {ci} is not sorted — the binary search would diverge \
+                     from the generic op's linear count"
+                ),
+            );
+        }
+    }
+}

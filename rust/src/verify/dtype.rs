@@ -1,0 +1,174 @@
+//! Dtype-flow analysis: the slot-container table vs. what kernels
+//! actually emit and accept.
+//!
+//! The residency pass (`plan/compile.rs::plan_residency`) negotiates an
+//! integer container per runtime value and bakes the decision into both
+//! the producing kernel (`set_out_dtype`) and the dtype-keyed slot
+//! table. This pass re-checks the two views against each other, step by
+//! step:
+//!
+//! * a kernel with a declared output container (`ThresholdKernel`,
+//!   `QuantConv`/`QuantGemm`/`QuantMatMul`) must write to a slot of
+//!   exactly that container;
+//! * packed float kernels and generic ops emit f32 — an integer output
+//!   slot under them is container confusion;
+//! * dtype-polymorphic pass-throughs (`Reshape`/`Flatten`/`Squeeze`/
+//!   `Unsqueeze`/`Relu`/plain-NCHW `MaxPool`, and the batch-symbolic
+//!   `BatchReshape` kernel) re-emit their data input's container, so
+//!   their output slot must match it (or f32, when residency is off);
+//! * **integer-edge justification**: a slot is tracked as
+//!   integer-resident when an integer-emitting kernel chain wrote it.
+//!   Kernels with no integer path (packed float kernels, generic
+//!   non-pass-through ops) reading such a slot is an error — the
+//!   residency pass's backward f32-demand walk guarantees this never
+//!   happens on a correct plan. Integer slots *not* rooted in such a
+//!   chain (constant `i64` shape operands, integer initializers) are
+//!   routine for generic ops and flagged only when a packed float
+//!   kernel would choke on them at run time.
+
+use super::{Code, Location, VerifyReport};
+use crate::plan::{residency_passthrough, CompiledKernel, ExecutionPlan};
+use crate::tensor::DType;
+
+pub(super) fn check(plan: &ExecutionPlan<'_>, r: &mut VerifyReport) {
+    let dt_of =
+        |sl: u32| plan.slot_dtypes.get(sl as usize).copied().unwrap_or(DType::F32);
+    // Slots whose current value was written by an integer-emitting
+    // kernel chain (threshold / quantized kernels, propagated through
+    // pass-throughs). Cleared on release so recycled slots don't carry
+    // stale provenance.
+    let mut int_resident = vec![false; plan.slot_count];
+
+    for (si, step) in plan.steps.iter().enumerate() {
+        let loc = Location::Step(si);
+        let node = &plan.nodes[step.node_idx];
+        let flagged =
+            |f: &[bool], sl: u32| f.get(sl as usize).copied().unwrap_or(false);
+        let in0 = step.inputs.first().map(|&sl| (dt_of(sl), flagged(&int_resident, sl)));
+
+        // -- input-side rules ------------------------------------------
+        match &step.kernel {
+            CompiledKernel::Conv(_) | CompiledKernel::Gemm(_) | CompiledKernel::MatMul(_) => {
+                for &sl in &step.inputs {
+                    let dt = dt_of(sl);
+                    if dt == DType::F32 {
+                        continue;
+                    }
+                    if flagged(&int_resident, sl) {
+                        r.error(
+                            Code::KernelInputDtype,
+                            loc,
+                            format!(
+                                "packed float kernel reads integer-resident slot {sl} ({dt}) \
+                                 — the residency pass must demand f32 from its producers"
+                            ),
+                        );
+                    } else {
+                        r.warn(
+                            Code::KernelInputDtype,
+                            loc,
+                            format!(
+                                "packed float kernel reads a constant-rooted {dt} slot {sl}; \
+                                 the kernel will reject it at run time"
+                            ),
+                        );
+                    }
+                }
+            }
+            CompiledKernel::Op(_) if !residency_passthrough(node) => {
+                // generic ops routinely take integer *constants* (shape
+                // operands); only a residency-produced integer edge is a
+                // broken f32-demand proof
+                for &sl in &step.inputs {
+                    if flagged(&int_resident, sl) {
+                        r.error(
+                            Code::IntegerEdgeUnjustified,
+                            loc,
+                            format!(
+                                "generic op '{}' reads integer-resident slot {sl} \
+                                 ({}) but has no integer path — the backward f32-demand \
+                                 walk should have kept this edge f32",
+                                node.op_type,
+                                dt_of(sl)
+                            ),
+                        );
+                    }
+                }
+            }
+            // quantized kernels, thresholds and pass-throughs are
+            // container-polymorphic on the input side
+            _ => {}
+        }
+
+        // -- release clears provenance (slot may be recycled) ----------
+        for &sl in &step.release {
+            if let Some(f) = int_resident.get_mut(sl as usize) {
+                *f = false;
+            }
+        }
+
+        // -- output-side rules -----------------------------------------
+        // declared output container, when the kernel carries one
+        let declared: Option<DType> = match &step.kernel {
+            CompiledKernel::Threshold(tk) => Some(tk.out_dtype()),
+            CompiledKernel::QConv(qc) => Some(qc.out_dtype()),
+            CompiledKernel::QGemm(qg) => Some(qg.out_dtype()),
+            CompiledKernel::QMatMul(qm) => Some(qm.out_dtype()),
+            _ => None,
+        };
+        let passthrough = matches!(step.kernel, CompiledKernel::Reshape(_))
+            || (matches!(step.kernel, CompiledKernel::Op(_)) && residency_passthrough(node));
+
+        for &out in step.outputs.iter().flatten() {
+            let out_dt = dt_of(out);
+            let flag = int_resident.get_mut(out as usize);
+            if let Some(want) = declared {
+                if out_dt != want {
+                    r.error(
+                        Code::DtypeMismatch,
+                        loc,
+                        format!(
+                            "kernel declares output container {want} but slot {out} is \
+                             {out_dt} — the emitted buffer would land in the wrong \
+                             dtype-keyed pool"
+                        ),
+                    );
+                }
+                if let Some(f) = flag {
+                    *f = want != DType::F32;
+                }
+            } else if passthrough {
+                let (in0_dt, in0_flag) = in0.unwrap_or((DType::F32, false));
+                if out_dt != in0_dt && out_dt != DType::F32 {
+                    r.error(
+                        Code::DtypeMismatch,
+                        loc,
+                        format!(
+                            "pass-through op '{}' re-emits its input container {in0_dt} \
+                             but slot {out} is {out_dt}",
+                            node.op_type
+                        ),
+                    );
+                }
+                if let Some(f) = flag {
+                    *f = out_dt != DType::F32 && in0_flag;
+                }
+            } else {
+                // packed float kernels and generic ops emit f32
+                if out_dt != DType::F32 {
+                    r.error(
+                        Code::DtypeMismatch,
+                        loc,
+                        format!(
+                            "'{}' emits f32 but its output slot {out} is declared {out_dt}",
+                            node.op_type
+                        ),
+                    );
+                }
+                if let Some(f) = flag {
+                    *f = false;
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,376 @@
+//! Fusion and schedule legality, re-derived from the source graph.
+//!
+//! Epilogue fusion deletes nodes from the schedule: a packed kernel
+//! absorbs a chain of elementwise consumers, a quantized kernel absorbs
+//! its `MultiThreshold`, and the fused step then produces the *last*
+//! absorbed node's outputs. That is only observably correct when each
+//! absorbed node was the **sole** consumer of its producer's single
+//! output, reading it as the data (first) input, with the value not a
+//! graph output — otherwise some other reader would see a value that no
+//! longer exists.
+//!
+//! The compiler proves this during pass 1.5; this pass proves it
+//! *again*, independently: the constant-folding + identity-elision walk
+//! is replayed from the graph (constness is a closure property — no
+//! tensor is evaluated), use counts are recounted, and every fused hop
+//! recorded in a kernel's epilogue chain is re-matched against the
+//! re-derived sole consumer. The walk also re-checks:
+//!
+//! * the step ↔ node correspondence itself (every schedulable node has
+//!   exactly one step, in topological order),
+//! * per-kernel step arity (a packed kernel bakes its constants in, so
+//!   its step reads exactly the data input),
+//! * batch-symbolic `Reshape` rewrites: the rewritten target must be
+//!   the original with its baked leading 1 replaced by ONNX's `0`
+//!   copy-dim, wildcards unique, and the declared-shape fallback order
+//!   consistent, and
+//! * the plan's input/output tables against the graph's.
+
+use super::{Code, Location, VerifyReport};
+use crate::ir::ModelGraph;
+use crate::plan::kernel::{BatchReshape, Epilogue};
+use crate::plan::{CompiledKernel, ExecutionPlan};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Resolve an identity-elided name to its canonical runtime name
+/// (mirrors `plan/compile.rs::canon`).
+fn canon<'g>(alias: &BTreeMap<&'g str, &'g str>, name: &'g str) -> &'g str {
+    alias.get(name).copied().unwrap_or(name)
+}
+
+/// The node op a fused float epilogue stage must have come from.
+fn ep_op(e: &Epilogue) -> &'static str {
+    match e {
+        Epilogue::Relu => "Relu",
+        Epilogue::Quant { .. } => "Quant",
+        Epilogue::Bipolar { .. } => "BipolarQuant",
+        Epilogue::BatchNorm { .. } => "BatchNormalization",
+    }
+}
+
+pub(super) fn check(plan: &ExecutionPlan<'_>, graph: &ModelGraph, r: &mut VerifyReport) {
+    let nn = graph.nodes.len();
+    for (si, step) in plan.steps.iter().enumerate() {
+        if step.node_idx >= nn || step.out_node_idx >= nn {
+            r.error(
+                Code::BadNodeIndex,
+                Location::Step(si),
+                format!(
+                    "step references node {} / out-node {} of {nn}",
+                    step.node_idx, step.out_node_idx
+                ),
+            );
+            return;
+        }
+    }
+
+    // plan output table == graph output table, in declaration order
+    if plan.outputs.len() != graph.outputs.len() {
+        r.error(
+            Code::OutputMissing,
+            Location::Plan,
+            format!(
+                "plan extracts {} outputs, graph declares {}",
+                plan.outputs.len(),
+                graph.outputs.len()
+            ),
+        );
+    } else {
+        for (i, (po, vi)) in plan.outputs.iter().zip(&graph.outputs).enumerate() {
+            if po.name != vi.name {
+                r.error(
+                    Code::OutputMissing,
+                    Location::Output(i),
+                    format!("plan extracts '{}' where the graph declares '{}'", po.name, vi.name),
+                );
+            }
+        }
+    }
+    // plan input table == the graph's non-initializer-shadowed inputs
+    let want_inputs: Vec<&str> = graph
+        .inputs
+        .iter()
+        .filter(|vi| !graph.initializers.contains_key(&vi.name))
+        .map(|vi| vi.name.as_str())
+        .collect();
+    if plan.inputs.len() != want_inputs.len()
+        || plan.inputs.iter().zip(&want_inputs).any(|(pi, &w)| pi.name != w)
+    {
+        r.error(
+            Code::GraphMismatch,
+            Location::Plan,
+            format!(
+                "plan input table {:?} does not match the graph's runtime inputs {want_inputs:?}",
+                plan.inputs.iter().map(|pi| pi.name.as_str()).collect::<Vec<_>>()
+            ),
+        );
+    }
+
+    let Ok(order) = graph.topo_order() else {
+        r.error(
+            Code::GraphMismatch,
+            Location::Plan,
+            "source graph has no topological order".to_string(),
+        );
+        return;
+    };
+
+    // ------------------------------------------------------------------
+    // Replay pass 1. Which nodes fold is a *closure* property (all
+    // present inputs constant, through identity aliases), so the walk
+    // needs no tensor evaluation — if the plan compiled, every fold
+    // succeeded.
+    // ------------------------------------------------------------------
+    let mut const_names: BTreeSet<&str> =
+        graph.initializers.keys().map(String::as_str).collect();
+    let mut alias: BTreeMap<&str, &str> = BTreeMap::new();
+    let mut kept: Vec<usize> = Vec::new();
+    for &i in &order {
+        let node = &graph.nodes[i];
+        if node.present_inputs().all(|n| const_names.contains(canon(&alias, n))) {
+            for out in &node.outputs {
+                const_names.insert(out.as_str());
+            }
+            continue;
+        }
+        if node.op_type == "Identity" && node.outputs.len() == 1 {
+            let mut present = node.present_inputs();
+            if let (Some(src), None) = (present.next(), present.next()) {
+                let c = canon(&alias, src);
+                alias.insert(node.outputs[0].as_str(), c);
+                continue;
+            }
+        }
+        kept.push(i);
+    }
+
+    // use counts / consumer lists over canonical names, kept nodes only
+    let mut uses: BTreeMap<&str, usize> = BTreeMap::new();
+    let mut users: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+    for (ki, &ni) in kept.iter().enumerate() {
+        for raw in graph.nodes[ni].present_inputs() {
+            let nm = canon(&alias, raw);
+            *uses.entry(nm).or_insert(0) += 1;
+            users.entry(nm).or_default().push(ki);
+        }
+    }
+    let out_set: BTreeSet<&str> =
+        graph.outputs.iter().map(|vi| canon(&alias, vi.name.as_str())).collect();
+
+    // The sole-consumer proof, re-derived (mirrors
+    // `plan/compile.rs::FuseCtx::sole_consumer`): single output, value
+    // internal, used exactly once, by one later unconsumed node that
+    // reads it as its data (first) input.
+    let sole_consumer = |start_ki: usize, node_idx: usize, consumed: &[bool]| -> Option<usize> {
+        let tail = &graph.nodes[node_idx];
+        if tail.outputs.len() != 1 {
+            return None;
+        }
+        let out_nm = canon(&alias, tail.outputs[0].as_str());
+        if out_set.contains(out_nm) || uses.get(out_nm).copied().unwrap_or(0) != 1 {
+            return None;
+        }
+        let uk = match users.get(out_nm) {
+            Some(v) if v.len() == 1 => v[0],
+            _ => return None,
+        };
+        if consumed[uk] || uk <= start_ki {
+            return None;
+        }
+        let unode = &graph.nodes[kept[uk]];
+        if unode.inputs.first().map(|s| canon(&alias, s.as_str())) != Some(out_nm) {
+            return None;
+        }
+        Some(uk)
+    };
+
+    let mut consumed = vec![false; kept.len()];
+    let mut ki = 0usize;
+    for (si, step) in plan.steps.iter().enumerate() {
+        let loc = Location::Step(si);
+        while ki < kept.len() && consumed[ki] {
+            ki += 1;
+        }
+        let Some(&base_node) = kept.get(ki) else {
+            r.error(
+                Code::GraphMismatch,
+                loc,
+                "more plan steps than schedulable graph nodes".to_string(),
+            );
+            return;
+        };
+        if base_node != step.node_idx {
+            r.error(
+                Code::GraphMismatch,
+                loc,
+                format!(
+                    "step compiled from node {} ('{}') but the re-derived schedule expects \
+                     node {base_node} ('{}')",
+                    step.node_idx, graph.nodes[step.node_idx].name, graph.nodes[base_node].name
+                ),
+            );
+            return;
+        }
+        let base_ki = ki;
+        ki += 1;
+
+        // per-kernel step arity: packed/quantized kernels bake their
+        // constants in and read exactly the data input (Gemm keeps a
+        // runtime C when B-only packing applied)
+        let node = &graph.nodes[step.node_idx];
+        let expect_arity = match &step.kernel {
+            CompiledKernel::Op(_) => node.present_inputs().count(),
+            CompiledKernel::Gemm(pg) => 1 + usize::from(pg.runtime_bias()),
+            _ => 1,
+        };
+        if step.inputs.len() != expect_arity {
+            r.error(
+                Code::StepArity,
+                loc,
+                format!(
+                    "step has {} runtime inputs but its kernel expects {expect_arity}",
+                    step.inputs.len()
+                ),
+            );
+        }
+
+        if let CompiledKernel::Reshape(br) = &step.kernel {
+            check_batch_reshape(r, loc, node.op_type.as_str(), br);
+        }
+
+        // re-prove each fused hop against the re-derived graph facts
+        let hops: Vec<&'static str> = match &step.kernel {
+            CompiledKernel::Conv(pc) => pc.epilogue().iter().map(ep_op).collect(),
+            CompiledKernel::Gemm(pg) => pg.epilogue().iter().map(ep_op).collect(),
+            CompiledKernel::MatMul(pm) => pm.epilogue().iter().map(ep_op).collect(),
+            CompiledKernel::QConv(qc) if qc.has_fused_threshold() => vec!["MultiThreshold"],
+            CompiledKernel::QGemm(qg) if qg.has_fused_threshold() => vec!["MultiThreshold"],
+            CompiledKernel::QMatMul(qm) if qm.has_fused_threshold() => vec!["MultiThreshold"],
+            _ => Vec::new(),
+        };
+        let mut cur = step.node_idx;
+        let mut broke = false;
+        for want in &hops {
+            let Some(uk) = sole_consumer(base_ki, cur, &consumed) else {
+                r.error(
+                    Code::FusionNotSoleConsumer,
+                    loc,
+                    format!(
+                        "fused '{want}' stage: node '{}' has no sole later consumer reading \
+                         it as the data input — absorbing one changes observable behavior",
+                        graph.nodes[cur].name
+                    ),
+                );
+                broke = true;
+                break;
+            };
+            let unode = &graph.nodes[kept[uk]];
+            if unode.op_type != *want {
+                r.error(
+                    Code::FusionChainBroken,
+                    loc,
+                    format!(
+                        "fused stage expects a '{want}' consumer but the sole consumer is \
+                         '{}' ('{}')",
+                        unode.op_type, unode.name
+                    ),
+                );
+                broke = true;
+                break;
+            }
+            consumed[uk] = true;
+            cur = kept[uk];
+        }
+        if !broke && cur != step.out_node_idx {
+            r.error(
+                Code::FusionLengthMismatch,
+                loc,
+                format!(
+                    "step declares the outputs of node {} but its re-derived epilogue \
+                     chain ends at node {cur}",
+                    step.out_node_idx
+                ),
+            );
+        }
+    }
+    while ki < kept.len() && consumed[ki] {
+        ki += 1;
+    }
+    if let Some(&ni) = kept.get(ki) {
+        r.error(
+            Code::GraphMismatch,
+            Location::Plan,
+            format!(
+                "graph node '{}' ({}) requires a runtime step but the schedule has none",
+                graph.nodes[ni].name, graph.nodes[ni].op_type
+            ),
+        );
+    }
+}
+
+/// Batch-symbolic rewrite well-formedness: the rewritten (batched)
+/// target must be the original with its baked leading 1 replaced by
+/// ONNX's `0` copy-dim — anything else changes declared-shape results.
+fn check_batch_reshape(r: &mut VerifyReport, loc: Location, op: &str, br: &BatchReshape) {
+    if op != "Reshape" {
+        r.error(
+            Code::BatchReshapeMalformed,
+            loc,
+            format!("batch-symbolic kernel compiled from a '{op}' node"),
+        );
+    }
+    let orig = br.orig();
+    let batched = br.batched();
+    if orig.first() != Some(&1) || orig.len() < 2 {
+        r.error(
+            Code::BatchReshapeMalformed,
+            loc,
+            format!(
+                "rewritten target {orig:?} does not bake a leading batch of 1 over at \
+                 least one trailing dim — the rewrite premise fails"
+            ),
+        );
+        return;
+    }
+    if orig[1..].contains(&0) {
+        r.error(
+            Code::BatchReshapeMalformed,
+            loc,
+            format!(
+                "rewritten target {orig:?} mixes the baked batch with positional \
+                 copy-dims — the compiler must decline these"
+            ),
+        );
+    }
+    if orig[1..].iter().filter(|&&d| d == -1).count() > 1 {
+        r.error(
+            Code::BatchReshapeMalformed,
+            loc,
+            format!("rewritten target {orig:?} has more than one wildcard"),
+        );
+    }
+    if batched.len() != orig.len()
+        || batched.first() != Some(&0)
+        || batched[1..] != orig[1..]
+    {
+        r.error(
+            Code::BatchReshapeMalformed,
+            loc,
+            format!(
+                "batched form {batched:?} is not the original target {orig:?} with its \
+                 leading 1 rewritten to the 0 copy-dim"
+            ),
+        );
+    }
+    if br.try_orig_first() == orig[1..].contains(&-1) {
+        r.error(
+            Code::BatchReshapeMalformed,
+            loc,
+            format!(
+                "declared-shape fallback order (try_orig_first = {}) disagrees with \
+                 wildcard presence in {orig:?}",
+                br.try_orig_first()
+            ),
+        );
+    }
+}

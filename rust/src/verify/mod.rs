@@ -1,0 +1,318 @@
+//! Static plan verification: invariant checking over compiled
+//! [`ExecutionPlan`]s, without executing them.
+//!
+//! The plan compiler ([`crate::plan`]) makes a stack of claims when it
+//! lowers a [`ModelGraph`]: every slot read happens inside the value's
+//! live range with a single writer per range, the dtype-keyed slot table
+//! matches what each kernel actually emits, quantized kernels' `i32`
+//! accumulators stay inside the f32-exact `±2^24` window so integer
+//! execution is byte-identical to float, and every fused epilogue chain
+//! really was the sole consumer of its producer. The executor *trusts*
+//! these claims — the hot loop indexes slots without checking.
+//!
+//! This module re-derives each claim from first principles and reports
+//! every violation as a typed [`Diagnostic`]:
+//!
+//! * **slot lifetimes** ([`Code::ReadBeforeWrite`] & co.) — an abstract
+//!   interpretation of the schedule over a slot-liveness bitmap: reads
+//!   only of live slots, releases only of slots the step actually reads,
+//!   no write over a live value, the end-of-schedule live set is exactly
+//!   the graph outputs.
+//! * **dtype flow** ([`Code::DtypeMismatch`] & co.) — each kernel's
+//!   declared output container must match the slot table, integer-
+//!   resident edges must be produced by an integer-emitting kernel chain
+//!   (threshold/quantized kernels, propagated through the dtype-
+//!   polymorphic pass-through ops), and kernels with no integer path
+//!   must never read an integer-resident slot.
+//! * **arithmetic safety** ([`Code::AccumulatorUnbounded`] & co.) — the
+//!   `|x| · |w| · k + |c| < 2^24` accumulator bound is re-computed from
+//!   each quantized kernel's claimed input range, the range itself is
+//!   re-derived from the source graph via
+//!   [`crate::transforms::infer_ranges`] and checked for containment,
+//!   threshold rows are re-checked for per-channel monotonicity, and
+//!   integer output containers must hold the proven level grid.
+//! * **fusion / schedule legality** ([`Code::FusionNotSoleConsumer`] &
+//!   co.) — the compiler's constant-folding + identity-elision walk is
+//!   replayed (a closure property, no execution needed) and every fused
+//!   epilogue hop is re-proved to be the sole later consumer reading the
+//!   producer as its data input; batch-symbolic reshape rewrites and
+//!   step arities are re-validated.
+//!
+//! # Deny-by-default in debug
+//!
+//! [`crate::plan::PlanOptions::verify`] runs this verifier at the tail
+//! of every compile and fails compilation on any `Error`-severity
+//! diagnostic. It defaults to **on in debug builds** (the whole unit
+//! suite exercises the verifier against every plan it compiles) and off
+//! in release, where verification is explicit: the `qonnx verify` CLI,
+//! `plan --verify`, and the `verify_zoo` integration suite.
+//!
+//! # Self-test by mutation
+//!
+//! A verifier that only ever sees valid plans proves nothing about its
+//! own checks. [`mutate`] provides single-fault plan mutators (swap
+//! dependent steps, drop a release, forge a slot dtype, widen a claimed
+//! range, unsort threshold rows, …); the unit tests assert that each
+//! mutation class trips its expected diagnostic code and that unmutated
+//! zoo plans verify clean.
+
+use crate::ir::ModelGraph;
+use crate::plan::ExecutionPlan;
+use std::fmt;
+
+mod arith;
+mod dtype;
+mod fusion;
+pub mod mutate;
+mod slots;
+
+/// Diagnostic severity, ordered `Info < Warn < Error`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Narrative facts (the closing summary line).
+    Info,
+    /// Suspicious but not provably wrong — the plan still executes
+    /// correctly or fails loudly at run time.
+    Warn,
+    /// A broken plan invariant: executing this plan may read stale
+    /// buffers, confuse containers, or silently lose exactness.
+    Error,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Severity::Info => "info",
+            Severity::Warn => "warn",
+            Severity::Error => "error",
+        })
+    }
+}
+
+/// Stable machine-readable diagnostic codes. The mutation self-tests
+/// key on these, so mutators and checks can never drift apart silently.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Code {
+    // slot lifetimes
+    ReadBeforeWrite,
+    SlotOutOfRange,
+    DoubleRelease,
+    ReleaseWithoutRead,
+    OverwriteLive,
+    OutputDead,
+    SlotLeaked,
+    DuplicateOutputSlot,
+    // dtype flow
+    DtypeMismatch,
+    KernelInputDtype,
+    IntegerEdgeUnjustified,
+    // arithmetic safety
+    AccumulatorUnbounded,
+    InputRangeMismatch,
+    UnprovenQuantInput,
+    GridOverflowsContainer,
+    ThresholdRowsUnsorted,
+    ThresholdRowsMalformed,
+    EpilogueChannelMismatch,
+    // fusion / schedule legality
+    FusionNotSoleConsumer,
+    FusionChainBroken,
+    FusionLengthMismatch,
+    BadNodeIndex,
+    BatchReshapeMalformed,
+    OutputMissing,
+    StepArity,
+    GraphMismatch,
+    // narrative
+    Summary,
+}
+
+impl Code {
+    /// Stable kebab-case name (rendered in reports, matched by tests).
+    pub fn name(self) -> &'static str {
+        match self {
+            Code::ReadBeforeWrite => "read-before-write",
+            Code::SlotOutOfRange => "slot-out-of-range",
+            Code::DoubleRelease => "double-release",
+            Code::ReleaseWithoutRead => "release-without-read",
+            Code::OverwriteLive => "overwrite-live",
+            Code::OutputDead => "output-dead",
+            Code::SlotLeaked => "slot-leaked",
+            Code::DuplicateOutputSlot => "duplicate-output-slot",
+            Code::DtypeMismatch => "dtype-mismatch",
+            Code::KernelInputDtype => "kernel-input-dtype",
+            Code::IntegerEdgeUnjustified => "integer-edge-unjustified",
+            Code::AccumulatorUnbounded => "accumulator-unbounded",
+            Code::InputRangeMismatch => "input-range-mismatch",
+            Code::UnprovenQuantInput => "unproven-quant-input",
+            Code::GridOverflowsContainer => "grid-overflows-container",
+            Code::ThresholdRowsUnsorted => "threshold-rows-unsorted",
+            Code::ThresholdRowsMalformed => "threshold-rows-malformed",
+            Code::EpilogueChannelMismatch => "epilogue-channel-mismatch",
+            Code::FusionNotSoleConsumer => "fusion-not-sole-consumer",
+            Code::FusionChainBroken => "fusion-chain-broken",
+            Code::FusionLengthMismatch => "fusion-length-mismatch",
+            Code::BadNodeIndex => "bad-node-index",
+            Code::BatchReshapeMalformed => "batch-reshape-malformed",
+            Code::OutputMissing => "output-missing",
+            Code::StepArity => "step-arity",
+            Code::GraphMismatch => "graph-mismatch",
+            Code::Summary => "summary",
+        }
+    }
+}
+
+impl fmt::Display for Code {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Where in the plan a diagnostic anchors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Location {
+    /// Plan-wide property (end-of-schedule live set, output table, …).
+    Plan,
+    /// Schedule step index.
+    Step(usize),
+    /// Preload index.
+    Preload(usize),
+    /// Plan input index.
+    Input(usize),
+    /// Plan output index.
+    Output(usize),
+}
+
+impl fmt::Display for Location {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Location::Plan => f.write_str("plan"),
+            Location::Step(i) => write!(f, "step {i}"),
+            Location::Preload(i) => write!(f, "preload {i}"),
+            Location::Input(i) => write!(f, "input {i}"),
+            Location::Output(i) => write!(f, "output {i}"),
+        }
+    }
+}
+
+/// One verifier finding.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub severity: Severity,
+    pub code: Code,
+    pub location: Location,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}[{}] @ {}: {}", self.severity, self.code, self.location, self.message)
+    }
+}
+
+/// The verifier's result: every diagnostic, in check order.
+#[derive(Debug, Clone, Default)]
+pub struct VerifyReport {
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl VerifyReport {
+    pub(crate) fn error(&mut self, code: Code, location: Location, message: String) {
+        self.diagnostics.push(Diagnostic { severity: Severity::Error, code, location, message });
+    }
+
+    pub(crate) fn warn(&mut self, code: Code, location: Location, message: String) {
+        self.diagnostics.push(Diagnostic { severity: Severity::Warn, code, location, message });
+    }
+
+    pub(crate) fn info(&mut self, code: Code, location: Location, message: String) {
+        self.diagnostics.push(Diagnostic { severity: Severity::Info, code, location, message });
+    }
+
+    /// Any `Error`-severity diagnostic present.
+    pub fn has_errors(&self) -> bool {
+        self.diagnostics.iter().any(|d| d.severity == Severity::Error)
+    }
+
+    pub fn error_count(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Error).count()
+    }
+
+    pub fn warn_count(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Warn).count()
+    }
+
+    /// Whether any diagnostic carries `code` (the mutation tests' hook).
+    pub fn has_code(&self, code: Code) -> bool {
+        self.diagnostics.iter().any(|d| d.code == code)
+    }
+
+    /// No errors and no warnings (info lines allowed).
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.iter().all(|d| d.severity == Severity::Info)
+    }
+
+    /// Human-readable rendering, one diagnostic per line.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for d in &self.diagnostics {
+            s.push_str(&d.to_string());
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// Statically verify `plan` against the source `graph` it was compiled
+/// from. Runs every check family and returns the full report; it never
+/// fails — a broken plan is a report full of errors, not an `Err`.
+///
+/// The structural passes (dtype flow, arithmetic ranges, fusion
+/// legality) re-derive facts from `graph`, so it must be the graph the
+/// plan was compiled from; a mismatch is itself reported
+/// ([`Code::GraphMismatch`]) and aborts the graph-dependent checks.
+pub fn verify_plan(plan: &ExecutionPlan<'_>, graph: &ModelGraph) -> VerifyReport {
+    let mut report = VerifyReport::default();
+    slots::check(plan, &mut report);
+
+    let graph_matches = plan.nodes.len() == graph.nodes.len()
+        && plan
+            .nodes
+            .iter()
+            .zip(&graph.nodes)
+            .all(|(a, b)| a.op_type == b.op_type && a.inputs == b.inputs && a.outputs == b.outputs);
+    if !graph_matches {
+        report.error(
+            Code::GraphMismatch,
+            Location::Plan,
+            format!(
+                "plan node table ({} nodes) does not match the supplied source graph \
+                 ({} nodes) — graph-dependent checks skipped",
+                plan.nodes.len(),
+                graph.nodes.len()
+            ),
+        );
+        return report;
+    }
+
+    dtype::check(plan, &mut report);
+    arith::check(plan, graph, &mut report);
+    fusion::check(plan, graph, &mut report);
+
+    let (e, w) = (report.error_count(), report.warn_count());
+    report.info(
+        Code::Summary,
+        Location::Plan,
+        format!(
+            "verified plan '{}': {} steps, {} slots, {} preloads — {e} error(s), {w} warning(s)",
+            plan.name(),
+            plan.steps.len(),
+            plan.slot_count,
+            plan.preloads.len()
+        ),
+    );
+    report
+}
+
+#[cfg(test)]
+mod tests;

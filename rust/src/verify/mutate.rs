@@ -1,0 +1,201 @@
+//! Single-fault plan mutators: the verifier's self-test harness.
+//!
+//! A verifier that only ever sees valid plans proves nothing about its
+//! own checks — every check could be dead code and the suite would stay
+//! green. Each function here injects exactly one class of fault into a
+//! compiled [`ExecutionPlan`] (reorder dependent steps, drop a release,
+//! forge a slot container, widen a claimed range, …) and the unit tests
+//! assert that [`super::verify_plan`] trips the *expected* diagnostic
+//! code for it.
+//!
+//! Every mutator returns `true` when it found a site to mutate and
+//! `false` when the plan has no such site (so tests can skip rather than
+//! silently pass). Mutators that reach inside a kernel use
+//! [`Arc::get_mut`] and therefore must run on a **freshly compiled**
+//! plan whose kernels are not shared (no engine has cloned them yet).
+
+use crate::plan::{CompiledKernel, ExecutionPlan};
+use crate::tensor::DType;
+use std::sync::Arc;
+
+/// Swap two adjacent steps where the second reads a slot the first
+/// writes for the first time. After the swap, the reader runs before the
+/// writer → `read-before-write`.
+pub fn swap_adjacent_dependent_steps(plan: &mut ExecutionPlan<'_>) -> bool {
+    // forward liveness sim: the swap only provably breaks the plan when
+    // the shared slot is *dead* before the writer (a slot that was live
+    // before could make the swapped read legal)
+    let mut live = vec![false; plan.slot_count];
+    for p in &plan.preloads {
+        if let Some(f) = live.get_mut(p.slot as usize) {
+            *f = true;
+        }
+    }
+    for pi in &plan.inputs {
+        if let Some(sl) = pi.slot {
+            if let Some(f) = live.get_mut(sl as usize) {
+                *f = true;
+            }
+        }
+    }
+    for i in 0..plan.steps.len().saturating_sub(1) {
+        let (a, b) = (&plan.steps[i], &plan.steps[i + 1]);
+        let dependent = a.outputs.iter().flatten().any(|&s| {
+            b.inputs.contains(&s)
+                && !a.release.contains(&s)
+                && !live.get(s as usize).copied().unwrap_or(true)
+        });
+        if dependent {
+            plan.steps.swap(i, i + 1);
+            return true;
+        }
+        let step = &plan.steps[i];
+        for &s in &step.release {
+            if let Some(f) = live.get_mut(s as usize) {
+                *f = false;
+            }
+        }
+        for &s in step.outputs.iter().flatten() {
+            if let Some(f) = live.get_mut(s as usize) {
+                *f = true;
+            }
+        }
+    }
+    false
+}
+
+/// Remove a release whose slot a later step recycles. The later write
+/// then lands on a still-live value → `overwrite-live`.
+pub fn drop_release(plan: &mut ExecutionPlan<'_>) -> bool {
+    for i in 0..plan.steps.len() {
+        let candidate = plan.steps[i].release.iter().copied().find(|&s| {
+            plan.steps[i + 1..]
+                .iter()
+                .any(|later| later.outputs.iter().flatten().any(|&o| o == s))
+        });
+        if let Some(s) = candidate {
+            plan.steps[i].release.retain(|&x| x != s);
+            return true;
+        }
+    }
+    false
+}
+
+/// Forge the slot-container table under a kernel with a declared output
+/// container (falling back to a preload slot) → `dtype-mismatch`.
+pub fn lie_slot_dtype(plan: &mut ExecutionPlan<'_>) -> bool {
+    let flip = |dt: DType| if dt == DType::F32 { DType::I32 } else { DType::F32 };
+    for step in &plan.steps {
+        let declared = matches!(
+            step.kernel,
+            CompiledKernel::Threshold(_)
+                | CompiledKernel::QConv(_)
+                | CompiledKernel::QGemm(_)
+                | CompiledKernel::QMatMul(_)
+        );
+        if !declared {
+            continue;
+        }
+        if let Some(&s) = step.outputs.iter().flatten().next() {
+            if let Some(dt) = plan.slot_dtypes.get_mut(s as usize) {
+                *dt = flip(*dt);
+                return true;
+            }
+        }
+    }
+    if let Some(p) = plan.preloads.first() {
+        let s = p.slot as usize;
+        if let Some(dt) = plan.slot_dtypes.get_mut(s) {
+            *dt = flip(*dt);
+            return true;
+        }
+    }
+    false
+}
+
+/// Widen a quantized kernel's claimed input range to ±2^30. The
+/// re-computed accumulator bound then crosses 2^24 →
+/// `accumulator-unbounded` (requires the kernel's weights to be
+/// non-degenerate, i.e. `|w| · k ≥ 1`).
+pub fn widen_quant_input_range(plan: &mut ExecutionPlan<'_>) -> bool {
+    let wide = f64::from(1u32 << 30);
+    set_first_quant_range(plan, -wide, wide)
+}
+
+/// Narrow a quantized kernel's claimed input range to `[0, 0]`. The
+/// range provable from the source graph is no longer contained in the
+/// claim → `input-range-mismatch`.
+pub fn narrow_quant_input_range(plan: &mut ExecutionPlan<'_>) -> bool {
+    set_first_quant_range(plan, 0.0, 0.0)
+}
+
+fn set_first_quant_range(plan: &mut ExecutionPlan<'_>, lo: f64, hi: f64) -> bool {
+    for step in &mut plan.steps {
+        match &mut step.kernel {
+            CompiledKernel::QConv(qc) => {
+                if let Some(qc) = Arc::get_mut(qc) {
+                    qc.set_input_range(lo, hi);
+                    return true;
+                }
+            }
+            CompiledKernel::QGemm(qg) => {
+                if let Some(qg) = Arc::get_mut(qg) {
+                    qg.set_input_range(lo, hi);
+                    return true;
+                }
+            }
+            CompiledKernel::QMatMul(qm) => {
+                if let Some(qm) = Arc::get_mut(qm) {
+                    qm.set_input_range(lo, hi);
+                    return true;
+                }
+            }
+            _ => {}
+        }
+    }
+    false
+}
+
+/// Swap a strictly-increasing adjacent pair inside one threshold row of
+/// a standalone [`crate::plan::qkernel::ThresholdKernel`] →
+/// `threshold-rows-unsorted`.
+pub fn unsort_threshold_rows(plan: &mut ExecutionPlan<'_>) -> bool {
+    for step in &mut plan.steps {
+        let CompiledKernel::Threshold(tk) = &mut step.kernel else {
+            continue;
+        };
+        let Some(tk) = Arc::get_mut(tk) else { continue };
+        let (c, t) = (tk.channels(), tk.steps());
+        let rows = tk.rows_mut();
+        for ci in 0..c {
+            for k in 0..t.saturating_sub(1) {
+                let j = ci * t + k;
+                if rows[j] < rows[j + 1] {
+                    rows.swap(j, j + 1);
+                    return true;
+                }
+            }
+        }
+    }
+    false
+}
+
+/// Drop the final step of the schedule: the graph output it produced is
+/// dead at the end → `output-dead` (and the re-derived schedule reports
+/// the unscheduled node).
+pub fn drop_step(plan: &mut ExecutionPlan<'_>) -> bool {
+    plan.steps.pop().is_some()
+}
+
+/// Point the first graph output at a slot past the arena →
+/// `slot-out-of-range`.
+pub fn redirect_output_slot(plan: &mut ExecutionPlan<'_>) -> bool {
+    let bad = plan.slot_count as u32 + 7;
+    match plan.outputs.first_mut() {
+        Some(po) => {
+            po.slot = bad;
+            true
+        }
+        None => false,
+    }
+}

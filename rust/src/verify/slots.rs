@@ -1,0 +1,206 @@
+//! Slot-lifetime and alias analysis: an abstract interpretation of the
+//! schedule over a per-slot liveness bitmap.
+//!
+//! The executor's hot loop trusts the schedule completely — it indexes
+//! `slots[sl]` without checking that anything was ever stored there, and
+//! recycles released buffers into kernel scratch. This pass re-walks the
+//! step timeline and proves the claims that make that safe:
+//!
+//! * every step input is live when read (no read-before-write, no
+//!   read-after-release),
+//! * releases are consistent: a step only releases slots it actually
+//!   reads, and never releases a dead slot twice,
+//! * writes respect the single-writer-per-live-range rule: a step output
+//!   never lands on a slot whose previous value is still live
+//!   (release-before-alloc makes same-step recycling legitimate),
+//! * preloads and inputs agree with the dtype-keyed slot table (the
+//!   dtype-confused-recycling check at the plan boundary), and
+//! * the end-of-schedule live set is exactly the graph outputs: dead
+//!   outputs are an error, extra live slots a leak warning.
+
+use super::{Code, Location, VerifyReport};
+use crate::plan::ExecutionPlan;
+use crate::tensor::DType;
+
+pub(super) fn check(plan: &ExecutionPlan<'_>, r: &mut VerifyReport) {
+    let n = plan.slot_count;
+    if plan.slot_dtypes.len() != n {
+        r.error(
+            Code::DtypeMismatch,
+            Location::Plan,
+            format!("slot dtype table has {} entries for {n} slots", plan.slot_dtypes.len()),
+        );
+    }
+
+    let mut live = vec![false; n];
+    let oob = |slot: u32| slot as usize >= n;
+
+    for (i, p) in plan.preloads.iter().enumerate() {
+        if oob(p.slot) {
+            r.error(
+                Code::SlotOutOfRange,
+                Location::Preload(i),
+                format!("preload '{}' bound to slot {} of {n}", p.name, p.slot),
+            );
+            continue;
+        }
+        let s = p.slot as usize;
+        if live[s] {
+            r.error(
+                Code::OverwriteLive,
+                Location::Preload(i),
+                format!("preload '{}' rebinds slot {s}, which is already live", p.name),
+            );
+        }
+        live[s] = true;
+        let dt = p.value.as_tensor().dtype();
+        if let Some(&table) = plan.slot_dtypes.get(s) {
+            if table != dt {
+                r.error(
+                    Code::DtypeMismatch,
+                    Location::Preload(i),
+                    format!(
+                        "preload '{}' holds {dt} but slot {s} is declared {table} — \
+                         dtype-keyed recycling would hand the buffer to the wrong pool",
+                        p.name
+                    ),
+                );
+            }
+        }
+    }
+
+    for (i, pi) in plan.inputs.iter().enumerate() {
+        let Some(slot) = pi.slot else { continue };
+        if oob(slot) {
+            r.error(
+                Code::SlotOutOfRange,
+                Location::Input(i),
+                format!("input '{}' bound to slot {slot} of {n}", pi.name),
+            );
+            continue;
+        }
+        let s = slot as usize;
+        if live[s] {
+            r.error(
+                Code::OverwriteLive,
+                Location::Input(i),
+                format!("input '{}' rebinds slot {s}, which is already live", pi.name),
+            );
+        }
+        live[s] = true;
+        if let Some(&table) = plan.slot_dtypes.get(s) {
+            if table != DType::F32 {
+                r.error(
+                    Code::DtypeMismatch,
+                    Location::Input(i),
+                    format!(
+                        "input '{}' slot {s} is declared {table}, but callers bind f32 \
+                         data at the graph edge",
+                        pi.name
+                    ),
+                );
+            }
+        }
+    }
+
+    for (si, step) in plan.steps.iter().enumerate() {
+        let loc = Location::Step(si);
+        for &sl in &step.inputs {
+            if oob(sl) {
+                r.error(Code::SlotOutOfRange, loc, format!("reads slot {sl} of {n}"));
+                continue;
+            }
+            if !live[sl as usize] {
+                r.error(
+                    Code::ReadBeforeWrite,
+                    loc,
+                    format!("reads slot {sl}, which is not live here (never written, or \
+                             already released)"),
+                );
+            }
+        }
+        for &sl in &step.release {
+            if oob(sl) {
+                r.error(Code::SlotOutOfRange, loc, format!("releases slot {sl} of {n}"));
+                continue;
+            }
+            if !live[sl as usize] {
+                r.error(Code::DoubleRelease, loc, format!("releases slot {sl}, which is dead"));
+            }
+            if !step.inputs.contains(&sl) {
+                r.error(
+                    Code::ReleaseWithoutRead,
+                    loc,
+                    format!(
+                        "releases slot {sl} without reading it — a release list must be the \
+                         step's own last uses"
+                    ),
+                );
+            }
+            live[sl as usize] = false;
+        }
+        let mut written: Vec<u32> = Vec::new();
+        for &sl in step.outputs.iter().flatten() {
+            if oob(sl) {
+                r.error(Code::SlotOutOfRange, loc, format!("writes slot {sl} of {n}"));
+                continue;
+            }
+            if written.contains(&sl) {
+                r.error(
+                    Code::DuplicateOutputSlot,
+                    loc,
+                    format!("writes slot {sl} twice in one step"),
+                );
+                continue;
+            }
+            written.push(sl);
+            if live[sl as usize] {
+                r.error(
+                    Code::OverwriteLive,
+                    loc,
+                    format!(
+                        "writes slot {sl} while its previous value is still live \
+                         (single-writer-per-live-range violation)"
+                    ),
+                );
+            }
+            live[sl as usize] = true;
+        }
+    }
+
+    let mut is_output = vec![false; n];
+    for (i, po) in plan.outputs.iter().enumerate() {
+        if oob(po.slot) {
+            r.error(
+                Code::SlotOutOfRange,
+                Location::Output(i),
+                format!("output '{}' reads slot {} of {n}", po.name, po.slot),
+            );
+            continue;
+        }
+        let s = po.slot as usize;
+        is_output[s] = true;
+        if !live[s] {
+            r.error(
+                Code::OutputDead,
+                Location::Output(i),
+                format!(
+                    "graph output '{}' slot {s} is not live at the end of the schedule",
+                    po.name
+                ),
+            );
+        }
+    }
+    for (s, &l) in live.iter().enumerate() {
+        if l && !is_output[s] {
+            r.warn(
+                Code::SlotLeaked,
+                Location::Plan,
+                format!(
+                    "slot {s} is still live at the end of the schedule but feeds no graph \
+                     output (missing release — peak memory is higher than necessary)"
+                ),
+            );
+        }
+    }
+}

@@ -1,0 +1,141 @@
+//! Verifier unit tests: clean plans verify clean, and every mutation
+//! class from [`mutate`] trips its expected diagnostic code.
+
+use super::{mutate, verify_plan, Code};
+use crate::ir::{GraphBuilder, ModelGraph};
+use crate::plan::{ExecutionPlan, PlanOptions};
+use crate::tensor::Tensor;
+
+/// `x -> MultiThreshold(const) -> MatMul(const w) -> y`: compiles to a
+/// standalone `Threshold(i8)` step feeding a `QuantMatMul` — one step of
+/// every kernel family the mutators target, in two steps.
+fn tiny_quant_graph() -> ModelGraph {
+    let mut b = GraphBuilder::new("verify-tiny");
+    b.input("x", vec![1, 4]);
+    b.initializer("t0", Tensor::new(vec![1, 3], vec![0.5, 1.5, 2.5]));
+    b.node_in_domain(crate::ir::DOMAIN_FINN, "MultiThreshold", &["x", "t0"], &["xi"], &[]);
+    b.initializer(
+        "w",
+        Tensor::new(vec![4, 2], vec![1.0, -2.0, 2.0, 1.0, -1.0, 1.0, 2.0, -1.0]),
+    );
+    b.node("MatMul", &["xi", "w"], &["y"], &[]);
+    b.output("y", vec![1, 2]);
+    b.finish().unwrap()
+}
+
+#[test]
+fn tiny_quant_plan_verifies_clean() {
+    let g = tiny_quant_graph();
+    let plan = ExecutionPlan::compile(&g).unwrap();
+    // premise of the mutation tests: the plan really exercises both the
+    // threshold and quantized kernel families
+    assert!(plan.summary().contains("Threshold"), "{}", plan.summary());
+    let report = verify_plan(&plan, &g);
+    assert!(report.is_clean(), "{}", report.render());
+    assert!(report.has_code(Code::Summary));
+}
+
+#[test]
+fn verify_is_deny_by_default_in_debug() {
+    assert_eq!(PlanOptions::default().verify, cfg!(debug_assertions));
+}
+
+#[test]
+fn mismatched_graph_is_reported_not_misverified() {
+    let g = tiny_quant_graph();
+    let plan = ExecutionPlan::compile(&g).unwrap();
+    let mut b = GraphBuilder::new("other");
+    b.input("x", vec![1, 4]);
+    b.node("Relu", &["x"], &["y"], &[]);
+    b.output("y", vec![1, 4]);
+    let other = b.finish().unwrap();
+    let report = verify_plan(&plan, &other);
+    assert!(report.has_code(Code::GraphMismatch), "{}", report.render());
+}
+
+/// Compile the tiny graph, prove the baseline clean, apply exactly one
+/// mutation, and assert the verifier reports the expected code as an
+/// error.
+fn check_mutation(mutator: fn(&mut ExecutionPlan<'_>) -> bool, expect: Code) {
+    let g = tiny_quant_graph();
+    let mut plan = ExecutionPlan::compile(&g).unwrap();
+    assert!(verify_plan(&plan, &g).is_clean());
+    assert!(mutator(&mut plan), "mutator found no site in the tiny plan");
+    let report = verify_plan(&plan, &g);
+    assert!(
+        report.has_code(expect),
+        "expected a {expect} diagnostic, got:\n{}",
+        report.render()
+    );
+    assert!(report.has_errors(), "{}", report.render());
+}
+
+#[test]
+fn mutation_swapped_dependent_steps_is_read_before_write() {
+    check_mutation(mutate::swap_adjacent_dependent_steps, Code::ReadBeforeWrite);
+}
+
+#[test]
+fn mutation_dropped_release_is_overwrite_live() {
+    check_mutation(mutate::drop_release, Code::OverwriteLive);
+}
+
+#[test]
+fn mutation_forged_slot_dtype_is_dtype_mismatch() {
+    check_mutation(mutate::lie_slot_dtype, Code::DtypeMismatch);
+}
+
+#[test]
+fn mutation_widened_range_is_accumulator_unbounded() {
+    check_mutation(mutate::widen_quant_input_range, Code::AccumulatorUnbounded);
+}
+
+#[test]
+fn mutation_narrowed_range_is_input_range_mismatch() {
+    check_mutation(mutate::narrow_quant_input_range, Code::InputRangeMismatch);
+}
+
+#[test]
+fn mutation_unsorted_thresholds_is_threshold_rows_unsorted() {
+    check_mutation(mutate::unsort_threshold_rows, Code::ThresholdRowsUnsorted);
+}
+
+#[test]
+fn mutation_dropped_step_is_output_dead() {
+    check_mutation(mutate::drop_step, Code::OutputDead);
+}
+
+#[test]
+fn mutation_redirected_output_is_slot_out_of_range() {
+    check_mutation(mutate::redirect_output_slot, Code::SlotOutOfRange);
+}
+
+#[test]
+fn tfc_plans_verify_clean_across_option_combos() {
+    let mut g = crate::zoo::tfc(&crate::zoo::TfcParams::random(1, 1, 7)).unwrap();
+    crate::transforms::cleanup(&mut g).unwrap();
+    let combos = [
+        PlanOptions::default(),
+        PlanOptions { specialize: false, ..Default::default() },
+        PlanOptions { fuse_epilogues: false, ..Default::default() },
+        PlanOptions { quantize: false, ..Default::default() },
+        PlanOptions { int_residency: false, ..Default::default() },
+        PlanOptions { batch_symbolic: false, ..Default::default() },
+    ];
+    for (i, opts) in combos.iter().enumerate() {
+        let plan = ExecutionPlan::compile_with(&g, opts).unwrap();
+        let report = verify_plan(&plan, &g);
+        assert!(!report.has_errors(), "combo {i}:\n{}", report.render());
+    }
+}
+
+#[test]
+fn streamlined_tfc_verifies_clean() {
+    let mut g = crate::zoo::build("TFC-w1a1", 1, 32).unwrap();
+    crate::transforms::cleanup(&mut g).unwrap();
+    let sl = crate::streamline::try_streamline(&g).unwrap();
+    assert!(sl.report.ok, "{}", sl.report.render());
+    let plan = ExecutionPlan::compile(&sl.graph).unwrap();
+    let report = verify_plan(&plan, &sl.graph);
+    assert!(!report.has_errors(), "{}", report.render());
+}

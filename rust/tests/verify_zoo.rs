@@ -1,0 +1,71 @@
+//! Negative-result suite for the static plan verifier: every model-zoo
+//! plan — float and streamlined-integer, batch-1 and batch-8, across the
+//! compiler's option axes — must verify with **zero errors**. A failure
+//! here means either the compiler emitted a plan that breaks one of its
+//! own invariants, or the verifier grew a false positive; both are
+//! ship-stoppers.
+//!
+//! (Positive results — each mutation class tripping its expected
+//! diagnostic — live in the unit tests, `src/verify/tests.rs`.)
+
+use qonnx::ir::ModelGraph;
+use qonnx::plan::{ExecutionPlan, PlanOptions};
+use qonnx::verify::verify_plan;
+use qonnx::{transforms, zoo};
+
+/// Option combinations that change what the verifier sees: generic
+/// dispatch, unfused packed kernels, float-only tier, convert-per-call
+/// residency, and the everything-on default.
+fn option_axes() -> [PlanOptions; 5] {
+    [
+        PlanOptions::default(),
+        PlanOptions { specialize: false, ..Default::default() },
+        PlanOptions { fuse_epilogues: false, ..Default::default() },
+        PlanOptions { quantize: false, ..Default::default() },
+        PlanOptions { int_residency: false, ..Default::default() },
+    ]
+}
+
+fn assert_verifies(g: &ModelGraph, label: &str) {
+    for (i, opts) in option_axes().iter().enumerate() {
+        let plan = ExecutionPlan::compile_with(g, opts)
+            .unwrap_or_else(|e| panic!("{label} combo {i}: compile failed: {e:#}"));
+        let report = verify_plan(&plan, g);
+        assert!(!report.has_errors(), "{label} combo {i}:\n{}", report.render());
+    }
+}
+
+#[test]
+fn zoo_float_plans_verify_clean() {
+    for name in ["TFC-w1a1", "TFC-w1a2", "TFC-w2a2", "CNV-w1a1", "CNV-w2a2"] {
+        let mut g = zoo::build(name, 1, 32).unwrap();
+        transforms::cleanup(&mut g).unwrap();
+        assert_verifies(&g, name);
+    }
+}
+
+#[test]
+fn zoo_streamlined_plans_verify_clean() {
+    for name in ["TFC-w1a1", "TFC-w2a2", "CNV-w2a2"] {
+        let mut g = zoo::build(name, 1, 32).unwrap();
+        transforms::cleanup(&mut g).unwrap();
+        let sl = qonnx::streamline::try_streamline(&g).unwrap();
+        assert!(sl.report.ok, "'{name}' must streamline:\n{}", sl.report.render());
+        assert_verifies(&sl.graph, &format!("{name} (streamlined)"));
+    }
+}
+
+#[test]
+fn batch8_tfc_plans_verify_clean() {
+    let params = zoo::TfcParams::random(2, 2, 1);
+    let mut g = zoo::tfc_batch(&params, 8).unwrap();
+    transforms::cleanup(&mut g).unwrap();
+    assert_verifies(&g, "TFC-w2a2 (batch 8)");
+}
+
+#[test]
+fn keraslike_plan_verifies_clean() {
+    let mut g = zoo::keras_to_qonnx(&zoo::KerasModel::fig4_example(), 1).unwrap();
+    transforms::cleanup(&mut g).unwrap();
+    assert_verifies(&g, "keraslike fig4");
+}
