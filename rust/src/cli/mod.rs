@@ -49,6 +49,20 @@ Inspection & execution:
   exec <model> [--seed N] [--engine plan|interp]
                              execute on random input (compiled plan by
                              default; 'interp' = name-keyed interpreter)
+  profile <model|zoo-name> [--batch N] [--runs N] [--trace <out.json>]
+                             run the compiled plan under the per-step
+                             profiler (the streamlined integer tier when
+                             the model lowers cleanly): N timed runs
+                             (default 10) after one warmup, then a
+                             per-step table — mean wall time, share of
+                             the plan, achieved GMAC/s and effective
+                             GBOP/s joined against the Eq.-5 static
+                             complexity model (stats), arena
+                             alloc/reuse counts — plus whole-plan
+                             totals and the kernel substrate line.
+                             --trace also writes a Chrome-trace JSON
+                             (chrome://tracing / Perfetto) with one
+                             'exec' event per step per run.
   zoo <name> <out>           materialize a model-zoo entry (e.g. CNV-w2a2)
 
 Paper experiments:
@@ -61,7 +75,7 @@ Training & serving:
   infer <artifact-stem>      load + self-check a PJRT artifact
   serve [--artifact <stem>] [--zoo <name>] [--requests N] [--clients N]
         [--shards N] [--intraop-threads N] [--queue-cap N]
-        [--deadline-ms N] [--metrics]
+        [--deadline-ms N] [--metrics] [--trace <out.json>]
                              batching server demo; serves a zoo model via
                              the compiled ExecutionPlan when no PJRT
                              artifact is present (or --zoo is given) —
@@ -87,8 +101,16 @@ Training & serving:
                              and the run reports health (live/dead shards,
                              restart count). --metrics prints the serving
                              metrics exposition (latency p50/p95/p99, queue
-                             depth + peak, shed/deadline/restart counters)
-                             after the run. Fault injection (deterministic,
+                             depth + peak, shed/deadline/restart counters,
+                             batch-size histogram + close reasons) after
+                             the run, every series labeled with the
+                             served model's kebab-case name. --trace
+                             records request-lifecycle spans (admission/
+                             shed, queue wait, batch-form with close
+                             reason, execute, scatter, typed failures,
+                             restarts) and writes Chrome-trace JSON at
+                             shutdown, rotating an existing file to
+                             <path>.1. Fault injection (deterministic,
                              for soak testing): set QONNX_FAULT_SEED=N
                              [QONNX_FAULT_RATE=0.1]
                              [QONNX_FAULT_KIND=error|panic|stall:<ms>] to
@@ -137,6 +159,7 @@ pub fn run(args: Vec<String>) -> Result<()> {
         "streamline" => streamline_cmd(rest),
         "stats" => stats_cmd(rest),
         "exec" => exec_cmd(rest),
+        "profile" => profile_cmd(rest),
         "zoo" => zoo_cmd(rest),
         "table1" => {
             println!("{}", formats::render_table());
@@ -319,6 +342,102 @@ fn exec_cmd(rest: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn profile_cmd(rest: &[String]) -> Result<()> {
+    let target = rest
+        .first()
+        .context("usage: profile <model|zoo-name> [--batch N] [--runs N] [--trace <out.json>]")?;
+    let batch: usize = parse_flag(rest, "--batch").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let runs: usize = parse_flag(rest, "--runs").map(|s| s.parse()).transpose()?.unwrap_or(10);
+    let trace_path = parse_flag(rest, "--trace");
+    if batch == 0 || runs == 0 {
+        bail!("--batch and --runs must be at least 1");
+    }
+
+    // a file path profiles that model; anything else resolves in the zoo
+    let (model_name, mut g) = if std::path::Path::new(target).exists() {
+        let name = std::path::Path::new(target)
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "model".into());
+        (name, load_model(target)?)
+    } else {
+        let res = if target.starts_with("MobileNet") { 224 } else { 32 };
+        (target.clone(), zoo::build(target, 1, res)?)
+    };
+    transforms::cleanup(&mut g)?;
+    // Eq.-5 static complexity model on the cleaned graph: joined per step
+    // into achieved GMAC/s / GBOP/s columns (unmodeled rows print '-')
+    let report = metrics::analyze(&g).ok();
+
+    // profile the tier that would actually serve: the streamlined
+    // integer-domain plan when the whole model lowers cleanly
+    let sl = crate::streamline::try_streamline(&g)?;
+    let streamlined = sl.report.ok;
+    let graph = if streamlined { sl.graph } else { g };
+    if streamlined {
+        println!("('{model_name}' streamlined: profiling the integer-domain quantized plan)");
+    }
+    let plan = crate::plan::ExecutionPlan::compile(&graph)?;
+    if batch > 1 && !plan.batch_blockers().is_empty() {
+        bail!("plan cannot serve batch {batch}: {:?}", plan.batch_blockers());
+    }
+
+    let recorder = trace_path.as_ref().map(|_| {
+        let r = std::sync::Arc::new(crate::trace::TraceRecorder::new(1 << 16));
+        crate::trace::install_global(r.clone());
+        r
+    });
+
+    // random inputs at the requested batch (leading dim freed below)
+    let mut rng = zoo::rng::Rng::new(1);
+    let mut inputs = BTreeMap::new();
+    for vi in &graph.inputs {
+        if graph.initializers.contains_key(&vi.name) {
+            continue;
+        }
+        let mut shape = vi.shape.clone().context("graph input lacks a shape")?;
+        if !shape.is_empty() {
+            shape[0] = batch;
+        }
+        let n: usize = shape.iter().product();
+        let data: Vec<f32> = (0..n).map(|_| rng.uniform()).collect();
+        inputs.insert(vi.name.clone(), Tensor::new(shape, data));
+    }
+    let cfg = crate::plan::RunConfig {
+        shape_check: crate::plan::ShapeCheck::FreeBatch,
+        record_intermediates: false,
+    };
+    let mut scratch = crate::plan::ScratchArena::new();
+    // one warmup run fills the arena pools and does the one-time weight
+    // packing, so the profiled runs see steady-state behaviour
+    plan.run_cfg_scratch(|n| inputs.get(n), &cfg, &mut scratch)?;
+    let mut obs = match &recorder {
+        Some(r) => crate::plan::StepObserver::with_trace(r.clone()),
+        None => crate::plan::StepObserver::new(),
+    };
+    for _ in 0..runs {
+        plan.run_profiled(|n| inputs.get(n), &cfg, &mut scratch, &mut obs)?;
+    }
+    let profile = crate::trace::profile::StepProfile::build(
+        &model_name,
+        obs.samples(),
+        report.as_ref(),
+        batch as u64,
+    );
+    print!("{}", profile.render_table());
+    if let Some(path) = trace_path {
+        let rec = recorder.expect("recorder exists whenever --trace is set");
+        if std::path::Path::new(&path).exists() {
+            let _ = std::fs::rename(&path, format!("{path}.1"));
+        }
+        let tracks = rec.drain();
+        std::fs::write(&path, crate::trace::chrome::chrome_trace_json(&tracks))
+            .with_context(|| format!("writing Chrome trace to {path}"))?;
+        println!("wrote Chrome trace: {} thread track(s) -> {path}", tracks.len());
+    }
+    Ok(())
+}
+
 fn zoo_cmd(rest: &[String]) -> Result<()> {
     let name = rest.first().context("usage: zoo <name> <out>")?;
     let out = rest.get(1).context("usage: zoo <name> <out>")?;
@@ -485,6 +604,7 @@ fn serve_cmd(rest: &[String]) -> Result<()> {
         parse_flag(rest, "--deadline-ms").map(|s| s.parse()).transpose()?;
     let show_metrics = has_flag(rest, "--metrics");
     let zoo_name = parse_flag(rest, "--zoo");
+    let trace_path = parse_flag(rest, "--trace");
     let artifact_requested = has_flag(rest, "--artifact");
     let have_artifact = stem.with_extension("hlo.txt").exists();
     if artifact_requested && zoo_name.is_some() {
@@ -519,10 +639,29 @@ fn serve_cmd(rest: &[String]) -> Result<()> {
         crate::tensor::simd::active_isa(),
         if crate::tensor::simd::force_scalar() { "forced scalar" } else { "detected" },
     );
+    // request-lifecycle tracing: one bounded recorder shared by the
+    // admission path, the shard workers, and (via the global hook) the
+    // intra-op pool threads; drained to Chrome-trace JSON at shutdown
+    let recorder = trace_path.as_ref().map(|_| {
+        let r = std::sync::Arc::new(crate::trace::TraceRecorder::new(1 << 15));
+        crate::trace::install_global(r.clone());
+        r
+    });
     let cfg = coordinator::BatcherConfig {
         intraop_threads: intraop,
         queue_capacity: queue_cap,
+        trace: recorder.clone(),
         ..Default::default()
+    };
+
+    // stable per-model metrics label, resolved before the engine branch
+    // below consumes the flag values
+    let model_name = if zoo_name.is_none() && have_artifact {
+        stem.file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "artifact".into())
+    } else {
+        zoo_name.clone().unwrap_or_else(|| "TFC-w2a2".to_string())
     };
 
     let batcher = if zoo_name.is_none() && have_artifact {
@@ -542,7 +681,7 @@ fn serve_cmd(rest: &[String]) -> Result<()> {
         // no compiled artifact (or an explicit zoo request): serve the
         // model natively through a compiled ExecutionPlan. The plan is
         // compiled ONCE here; every shard serves an Arc-shared view of it
-        let name = zoo_name.unwrap_or_else(|| "TFC-w2a2".to_string());
+        let name = model_name.clone();
         if !have_artifact {
             println!("(no PJRT artifact at {stem:?} — serving '{name}' via the compiled ExecutionPlan)");
         }
@@ -656,7 +795,29 @@ fn serve_cmd(rest: &[String]) -> Result<()> {
         health.live, health.shards, health.restarts, health.dead
     );
     if show_metrics {
-        print!("{}", batcher.metrics_text());
+        // per-model scrape: every series carries the served model's
+        // kebab-case label so multi-model scrapes stay distinguishable
+        let registry = metrics::serving::MetricsRegistry::new();
+        registry.register(&model_name, batcher.metrics());
+        print!("{}", registry.render_text());
+    }
+    if let Some(path) = trace_path {
+        // drop the batcher first: shutdown flushes the final batch spans
+        // and the workers' queue-wait events before we drain
+        drop(batcher);
+        let rec = recorder.expect("recorder exists whenever --trace is set");
+        if std::path::Path::new(&path).exists() {
+            let _ = std::fs::rename(&path, format!("{path}.1"));
+        }
+        let tracks = rec.drain();
+        let dropped: u64 = tracks.iter().map(|t| t.dropped).sum();
+        std::fs::write(&path, crate::trace::chrome::chrome_trace_json(&tracks))
+            .with_context(|| format!("writing Chrome trace to {path}"))?;
+        println!(
+            "wrote Chrome trace: {} thread track(s), {dropped} dropped event(s) -> {path} \
+             (load in chrome://tracing or ui.perfetto.dev)",
+            tracks.len()
+        );
     }
     Ok(())
 }

@@ -33,8 +33,9 @@ use super::engine::InferenceEngine;
 use super::supervisor::{
     self, DegradedPolicy, Health, InflightEntry, ShardPhase, ShardState, SupervisorConfig,
 };
-use crate::metrics::serving::ServingMetrics;
+use crate::metrics::serving::{BatchCloseReason, ServingMetrics};
 use crate::tensor::Tensor;
+use crate::trace::TraceRecorder;
 use anyhow::{anyhow, ensure, Result};
 use std::collections::VecDeque;
 use std::fmt;
@@ -74,6 +75,12 @@ pub struct BatcherConfig {
     /// Shard supervision: restart backoff, deadline sweep cadence,
     /// degraded-mode policy ([`SupervisorConfig`]).
     pub supervisor: SupervisorConfig,
+    /// Request-lifecycle tracing. `None` (default) is a per-site branch
+    /// and nothing more; with a recorder installed, admission/shed
+    /// instants, queue-wait and batch/execute/scatter spans, and typed
+    /// failure events are recorded (see [`crate::trace`] for the span
+    /// taxonomy and [`crate::trace::chrome`] for the export).
+    pub trace: Option<Arc<TraceRecorder>>,
 }
 
 impl Default for BatcherConfig {
@@ -83,6 +90,7 @@ impl Default for BatcherConfig {
             intraop_threads: None,
             queue_capacity: None,
             supervisor: SupervisorConfig::default(),
+            trace: None,
         }
     }
 }
@@ -268,6 +276,17 @@ impl ServerShared {
             ServeError::DeadlineExceeded { .. } => self.metrics.inc_deadline_exceeded(),
             _ => self.metrics.inc_failed(1),
         }
+        if let Some(t) = &self.cfg.trace {
+            let name = match &err {
+                ServeError::DeadlineExceeded { .. } => "deadline-exceeded",
+                ServeError::Engine { .. } => "engine-error",
+                ServeError::ShardPanicked { .. } => "shard-panic",
+                ServeError::ShutDown => "shutdown",
+                ServeError::NoLiveShards => "no-live-shards",
+                ServeError::ChannelClosed => "channel-closed",
+            };
+            t.instant("request", name, &[]);
+        }
         let _ = resp.send(Err(err));
     }
 
@@ -293,9 +312,12 @@ impl ServerShared {
     /// Take the queue, block for the first request, gather a batch until
     /// `max_batch` / `max_wait` / the oldest member's deadline closes it.
     /// Already-expired requests are dropped (typed) instead of spending
-    /// batch slots. Returns `None` at shutdown with an empty queue.
-    fn drain_batch(&self, max_batch: usize) -> Option<Vec<Request>> {
+    /// batch slots. Returns the batch plus *why* it closed (the
+    /// [`BatchCloseReason`] recorded per batch in metrics and traces);
+    /// `None` at shutdown with an empty queue.
+    fn drain_batch(&self, max_batch: usize) -> Option<(Vec<Request>, BatchCloseReason)> {
         let mut batch: Vec<Request> = Vec::new();
+        let mut reason = BatchCloseReason::Window;
         let depth_after = {
             let mut q = lock_recover(&self.queue);
             // block (poll-free: condvar with a shutdown-check timeout)
@@ -333,13 +355,24 @@ impl ServerShared {
             // gather: close at max_wait OR the nearest member deadline,
             // whichever comes first (don't let stragglers starve a
             // deadline-bearing request of its service window)
-            let mut close = Instant::now() + self.cfg.max_wait;
+            let window = Instant::now() + self.cfg.max_wait;
+            let mut close = window;
             if let Some(d) = batch[0].deadline {
                 close = close.min(d);
             }
+            // a close earlier than the window can only mean a member
+            // deadline clamped it
+            let expiry_reason = |close: Instant| {
+                if close < window {
+                    BatchCloseReason::Deadline
+                } else {
+                    BatchCloseReason::Window
+                }
+            };
             while batch.len() < max_batch {
                 let now = Instant::now();
                 if now >= close {
+                    reason = expiry_reason(close);
                     break;
                 }
                 match q.q.pop_front() {
@@ -360,6 +393,7 @@ impl ServerShared {
                     }
                     None => {
                         if self.shutdown.load(Ordering::Relaxed) {
+                            reason = BatchCloseReason::Shutdown;
                             break;
                         }
                         let (g, timeout) = self
@@ -368,16 +402,20 @@ impl ServerShared {
                             .unwrap_or_else(PoisonError::into_inner);
                         q = g;
                         if timeout.timed_out() && q.q.is_empty() {
+                            reason = expiry_reason(close);
                             break;
                         }
                     }
                 }
             }
+            if batch.len() >= max_batch {
+                reason = BatchCloseReason::Full;
+            }
             q.q.len()
         };
         self.space.notify_all();
         self.metrics.set_queue_depth(depth_after);
-        Some(batch)
+        Some((batch, reason))
     }
 
     /// Remove and typed-fail every queued request whose deadline passed
@@ -502,6 +540,10 @@ pub(crate) fn spawn_worker(
             .intraop_threads
             .unwrap_or_else(|| (crate::runtime::pool::global().threads() / shards).max(1));
         crate::runtime::pool::set_thread_intraop_limit(budget);
+        if let Some(t) = &shared.cfg.trace {
+            // name this shard's track before any event lands on it
+            t.register_current_thread();
+        }
         let mut engine = match factory() {
             Ok(e) => e,
             Err(e) => {
@@ -533,10 +575,10 @@ pub(crate) fn spawn_worker(
         }
         let max_batch = engine.max_batch().min(1024);
         loop {
-            let Some(batch) = shared.drain_batch(max_batch) else {
+            let Some((batch, close)) = shared.drain_batch(max_batch) else {
                 return; // shutdown with an empty queue
             };
-            if serve_batch(&shared, idx, engine.as_mut(), in_dim, out_dim, batch) {
+            if serve_batch(&shared, idx, engine.as_mut(), in_dim, out_dim, batch, close) {
                 return; // engine panicked; the supervisor takes over
             }
         }
@@ -554,8 +596,22 @@ fn serve_batch(
     in_dim: usize,
     out_dim: usize,
     batch: Vec<Request>,
+    close: BatchCloseReason,
 ) -> bool {
     let n = batch.len();
+    let trace = shared.cfg.trace.as_deref();
+    if let Some(t) = trace {
+        // queue-wait per request, placed on this shard's track as a
+        // complete event spanning submit → drain
+        let now = t.now_ns();
+        for r in &batch {
+            let start = t.ns_since_epoch(r.enqueued);
+            t.complete("request", "queued", start, now.saturating_sub(start), &[]);
+        }
+    }
+    let _batch_span = trace.map(|t| {
+        t.span("shard", format!("batch:{}", close.label()), &[("batch_size", n as i64)])
+    });
     let mut data = Vec::with_capacity(n * in_dim);
     for r in &batch {
         data.extend_from_slice(&r.input);
@@ -571,10 +627,17 @@ fn serve_batch(
         );
     }
     let input = Tensor::new(vec![n, in_dim], data);
-    let result = catch_unwind(AssertUnwindSafe(|| engine.infer_batch(&input)));
+    // the execute span lives inside the unwind scope: a panicking
+    // engine drops the guard during unwinding, so spans stay balanced
+    // even on the paths the supervisor has to clean up
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        let _exec_span = trace.map(|t| t.span("shard", "execute", &[]));
+        engine.infer_batch(&input)
+    }));
     lock_recover(&shared.shards[idx].inflight).clear();
     shared.stats.batches.fetch_add(1, Ordering::Relaxed);
-    shared.metrics.inc_batch();
+    shared.metrics.observe_batch(n, close);
+    let _scatter_span = trace.map(|t| t.span("shard", "scatter", &[]));
     match result {
         Ok(Ok(y)) => {
             match y.as_f32() {
@@ -821,11 +884,17 @@ impl Batcher {
                     Some(cap) if q.q.len() >= cap => {
                         let Some(until) = give_up else {
                             self.shared.metrics.inc_shed();
+                            if let Some(t) = &self.shared.cfg.trace {
+                                t.instant("request", "shed", &[("queue_depth", q.q.len() as i64)]);
+                            }
                             return Err(SubmitError::Shed { queue_depth: q.q.len() });
                         };
                         let now = Instant::now();
                         if now >= until {
                             self.shared.metrics.inc_shed();
+                            if let Some(t) = &self.shared.cfg.trace {
+                                t.instant("request", "shed", &[("queue_depth", q.q.len() as i64)]);
+                            }
                             return Err(SubmitError::Shed { queue_depth: q.q.len() });
                         }
                         let (g, _) = self
@@ -843,6 +912,10 @@ impl Batcher {
             }
         };
         self.shared.metrics.set_queue_depth(depth);
+        if let Some(t) = &self.shared.cfg.trace {
+            t.instant("request", "admit", &[("queue_depth", depth as i64)]);
+            t.counter("queue", "queue_depth", depth as i64);
+        }
         self.shared.work.notify_one();
         Ok(Response { rx: resp_rx, deadline })
     }
@@ -1256,6 +1329,54 @@ mod tests {
         assert_eq!(b.health().live, 1);
         assert_eq!(b.metrics().engine_errors(), 2);
         b.shutdown();
+    }
+
+    #[test]
+    fn batch_close_reasons_sum_to_batches() {
+        let b = Batcher::start(echo(Duration::ZERO), BatcherConfig::default()).unwrap();
+        b.infer(vec![1.0; 4]).unwrap();
+        b.infer(vec![2.0; 4]).unwrap();
+        let m = b.metrics();
+        let total: u64 =
+            BatchCloseReason::ALL.iter().map(|&r| m.batch_closes(r)).sum();
+        assert_eq!(total, m.batches(), "every batch carries exactly one close reason");
+        assert_eq!(m.batch_size().count(), m.batches());
+        b.shutdown();
+    }
+
+    #[test]
+    fn lifecycle_trace_has_admit_queued_and_balanced_spans() {
+        let rec = Arc::new(TraceRecorder::new(1024));
+        let b = Batcher::start(
+            echo(Duration::ZERO),
+            BatcherConfig { trace: Some(rec.clone()), ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(b.infer(vec![0.5; 4]).unwrap(), vec![0.5; 4]);
+        b.shutdown();
+        let dump = rec.drain();
+        let (mut saw_admit, mut saw_queued, mut saw_batch, mut saw_exec) =
+            (false, false, false, false);
+        for t in &dump {
+            let mut depth = 0i64;
+            for e in &t.events {
+                match e.kind {
+                    crate::trace::EventKind::SpanBegin => depth += 1,
+                    crate::trace::EventKind::SpanEnd => depth -= 1,
+                    _ => {}
+                }
+                assert!(depth >= 0, "span End before Begin on {}", t.thread_name);
+                saw_admit |= e.name == "admit";
+                saw_queued |= e.name == "queued";
+                saw_batch |= e.name.starts_with("batch:");
+                saw_exec |= e.name == "execute";
+            }
+            assert_eq!(depth, 0, "unbalanced spans on {}", t.thread_name);
+        }
+        assert!(saw_admit, "missing admission instant");
+        assert!(saw_queued, "missing queue-wait event");
+        assert!(saw_batch, "missing batch-form span");
+        assert!(saw_exec, "missing execute span");
     }
 
     #[test]

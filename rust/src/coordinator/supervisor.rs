@@ -235,6 +235,9 @@ fn supervise(
             if respawn {
                 shard.restarts.fetch_add(1, Ordering::Relaxed);
                 shared.metrics.inc_shard_restart();
+                if let Some(t) = &shared.cfg.trace {
+                    t.instant("shard", "shard-restart", &[("shard", idx as i64)]);
+                }
                 match spawn_worker(shared.clone(), factory.clone(), idx, None) {
                     Ok(h) => {
                         // the old handle is finished (checked above)

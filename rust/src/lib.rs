@@ -204,6 +204,35 @@
 //! `verify_zoo` suite over the model zoo). `verify::mutate` provides
 //! single-fault plan mutators that self-test the verifier: every
 //! mutation class must trip its expected diagnostic code.
+//!
+//! ## Observability
+//!
+//! [`trace`] is the runtime's always-compiled observability layer.
+//! Three contracts:
+//!
+//! * **Recorder** — [`trace::TraceRecorder`] keeps a bounded per-thread
+//!   ring of typed events (span begin/end, instant, complete, counter)
+//!   with monotonic-clock timestamps. Writers never block each other
+//!   across threads, a full ring overwrites oldest and counts the
+//!   overwrite exactly (`dropped`), and [`trace::TraceRecorder::drain`]
+//!   snapshots every thread's events for export
+//!   ([`trace::chrome::chrome_trace_json`] → Perfetto/`chrome://tracing`).
+//! * **Span taxonomy** — serving emits `request` admission/shed/queued
+//!   and typed failure events, `shard` batch-form (close reason:
+//!   full/window/deadline/shutdown) → execute → scatter spans plus
+//!   restart instants, `exec` per-step kernel events, and `queue`
+//!   depth counters; see the [`trace`] module docs for the full table.
+//!   [`plan::StepObserver`] feeds per-step samples (wall time, kernel
+//!   tag, arena alloc-vs-reuse) into
+//!   [`trace::profile::StepProfile`], which joins them with the static
+//!   Eq.-5 complexity model ([`metrics::ModelReport`]) to report
+//!   achieved GMAC/s and effective GBOP/s (`qonnx profile`).
+//! * **Overhead guarantee** — tracing off is the default and costs one
+//!   branch per site (an `Option`/relaxed-atomic test: the executor's
+//!   unprofiled entry points pass a statically-`None` observer, and the
+//!   batcher checks its config's `Option` recorder); tracing on stays
+//!   within single-digit percent on CNV b8 (asserted by `make bench`'s
+//!   tracing-overhead section).
 
 pub mod bench_support;
 pub mod cli;
@@ -219,6 +248,7 @@ pub mod runtime;
 pub mod streamline;
 pub mod tensor;
 pub mod testutil;
+pub mod trace;
 pub mod training;
 pub mod transforms;
 pub mod verify;

@@ -9,8 +9,14 @@
 //! buckets by power-of-two microseconds (40 buckets cover sub-µs through
 //! ~6 days), so quantiles are exact to within a factor-2 bucket bound —
 //! plenty for p99 trend tracking and SLO floors.
+//!
+//! A multi-model deployment folds several batchers into one scrape with
+//! [`MetricsRegistry`]: each registered model's series carry a stable
+//! kebab-case `model` label (see [`kebab_label`]), so counters from
+//! different models never conflate.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 const BUCKETS: usize = 40;
 
@@ -89,6 +95,46 @@ impl LatencyHistogram {
     }
 }
 
+/// Why a formed batch left the queue — the drain loop's exit condition,
+/// recorded per batch by [`ServingMetrics::observe_batch`] and exported
+/// as `qonnx_batches_closed_total{reason="…"}`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchCloseReason {
+    /// The batch reached `max_batch` requests.
+    Full,
+    /// The batching window (`max_wait`) expired.
+    Window,
+    /// The batch closed early because its oldest member's deadline was
+    /// nearer than the window.
+    Deadline,
+    /// Shutdown flushed whatever was queued.
+    Shutdown,
+}
+
+impl BatchCloseReason {
+    /// Every reason, in export order.
+    pub const ALL: [BatchCloseReason; 4] = [
+        BatchCloseReason::Full,
+        BatchCloseReason::Window,
+        BatchCloseReason::Deadline,
+        BatchCloseReason::Shutdown,
+    ];
+
+    /// Stable label value (kebab-case, matches the export).
+    pub fn label(self) -> &'static str {
+        match self {
+            BatchCloseReason::Full => "full",
+            BatchCloseReason::Window => "window",
+            BatchCloseReason::Deadline => "deadline",
+            BatchCloseReason::Shutdown => "shutdown",
+        }
+    }
+
+    fn idx(self) -> usize {
+        self as usize
+    }
+}
+
 /// Counters, gauges, and the latency histogram for one [`crate::coordinator::Batcher`].
 ///
 /// Shared (`Arc`) between the batcher's workers, its supervisor, and any
@@ -106,6 +152,10 @@ pub struct ServingMetrics {
     shard_restarts: AtomicU64,
     failed: AtomicU64,
     batches: AtomicU64,
+    /// Batch-size distribution (the histogram's log2 buckets hold
+    /// request counts, not µs — quantiles are factor-2 bounds).
+    batch_size: LatencyHistogram,
+    batch_close: [AtomicU64; 4],
 }
 
 impl ServingMetrics {
@@ -156,6 +206,25 @@ impl ServingMetrics {
         self.batches.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one formed batch: increments the batch counter, the
+    /// batch-size histogram, and the per-close-reason counter. The
+    /// drain loop calls this instead of [`ServingMetrics::inc_batch`].
+    pub fn observe_batch(&self, size: usize, reason: BatchCloseReason) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_size.record_us(size as u64);
+        self.batch_close[reason.idx()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Batch-size distribution (bucket values are request counts).
+    pub fn batch_size(&self) -> &LatencyHistogram {
+        &self.batch_size
+    }
+
+    /// Batches that closed for `reason`.
+    pub fn batch_closes(&self, reason: BatchCloseReason) -> u64 {
+        self.batch_close[reason.idx()].load(Ordering::Relaxed)
+    }
+
     pub fn latency(&self) -> &LatencyHistogram {
         &self.latency
     }
@@ -200,32 +269,155 @@ impl ServingMetrics {
         self.batches.load(Ordering::Relaxed)
     }
 
-    /// Scrapeable text exposition (Prometheus-style lines).
+    /// Scrapeable text exposition (Prometheus-style lines), unlabeled —
+    /// the single-model `serve --metrics` surface. Equivalent to
+    /// [`ServingMetrics::render_text_for`] with no model.
     pub fn render_text(&self) -> String {
+        self.render_text_for(None)
+    }
+
+    /// Text exposition with an optional stable `model` label on every
+    /// series (the name is kebab-cased via [`kebab_label`] so the label
+    /// set stays stable like `verify` codes). Multi-model scrapes are
+    /// composed by [`MetricsRegistry::render_text`].
+    pub fn render_text_for(&self, model: Option<&str>) -> String {
+        let model = model.map(kebab_label);
+        let m = model.as_deref();
         let mut s = String::new();
-        let mut line = |k: &str, v: u64| {
-            s.push_str(k);
-            s.push(' ');
-            s.push_str(&v.to_string());
-            s.push('\n');
-        };
-        line("qonnx_requests_completed_total", self.completed());
-        line("qonnx_requests_shed_total", self.shed());
-        line("qonnx_requests_deadline_exceeded_total", self.deadline_exceeded());
-        line("qonnx_requests_failed_total", self.failed());
-        line("qonnx_engine_errors_total", self.engine_errors());
-        line("qonnx_shard_panics_total", self.shard_panics());
-        line("qonnx_shard_restarts_total", self.shard_restarts());
-        line("qonnx_batches_total", self.batches());
-        line("qonnx_queue_depth", self.queue_depth());
-        line("qonnx_queue_depth_peak", self.queue_depth_peak());
-        line("qonnx_request_latency_us_count", self.latency.count());
-        line("qonnx_request_latency_us_sum", self.latency.sum_us());
+        let counters: [(&str, u64); 12] = [
+            ("qonnx_requests_completed_total", self.completed()),
+            ("qonnx_requests_shed_total", self.shed()),
+            ("qonnx_requests_deadline_exceeded_total", self.deadline_exceeded()),
+            ("qonnx_requests_failed_total", self.failed()),
+            ("qonnx_engine_errors_total", self.engine_errors()),
+            ("qonnx_shard_panics_total", self.shard_panics()),
+            ("qonnx_shard_restarts_total", self.shard_restarts()),
+            ("qonnx_batches_total", self.batches()),
+            ("qonnx_queue_depth", self.queue_depth()),
+            ("qonnx_queue_depth_peak", self.queue_depth_peak()),
+            ("qonnx_request_latency_us_count", self.latency.count()),
+            ("qonnx_request_latency_us_sum", self.latency.sum_us()),
+        ];
+        for (k, v) in counters {
+            series(&mut s, k, m, None, v);
+        }
         for (q, label) in [(0.5, "0.5"), (0.95, "0.95"), (0.99, "0.99")] {
-            s.push_str(&format!(
-                "qonnx_request_latency_us{{quantile=\"{label}\"}} {}\n",
-                self.latency.quantile_us(q)
-            ));
+            series(
+                &mut s,
+                "qonnx_request_latency_us",
+                m,
+                Some(("quantile", label)),
+                self.latency.quantile_us(q),
+            );
+        }
+        series(&mut s, "qonnx_batch_size_count", m, None, self.batch_size.count());
+        series(&mut s, "qonnx_batch_size_sum", m, None, self.batch_size.sum_us());
+        for (q, label) in [(0.5, "0.5"), (0.99, "0.99")] {
+            series(
+                &mut s,
+                "qonnx_batch_size",
+                m,
+                Some(("quantile", label)),
+                self.batch_size.quantile_us(q),
+            );
+        }
+        for reason in BatchCloseReason::ALL {
+            series(
+                &mut s,
+                "qonnx_batches_closed_total",
+                m,
+                Some(("reason", reason.label())),
+                self.batch_closes(reason),
+            );
+        }
+        s
+    }
+}
+
+/// Append one exposition line, composing the optional `model` label with
+/// at most one extra label pair. No labels → `name value` (the exact
+/// single-model format older scrapers already parse).
+fn series(out: &mut String, name: &str, model: Option<&str>, extra: Option<(&str, &str)>, v: u64) {
+    out.push_str(name);
+    if model.is_some() || extra.is_some() {
+        out.push('{');
+        let mut first = true;
+        if let Some(mo) = model {
+            out.push_str(&format!("model=\"{mo}\""));
+            first = false;
+        }
+        if let Some((k, val)) = extra {
+            if !first {
+                out.push(',');
+            }
+            out.push_str(&format!("{k}=\"{val}\""));
+        }
+        out.push('}');
+    }
+    out.push(' ');
+    out.push_str(&v.to_string());
+    out.push('\n');
+}
+
+/// Canonicalize a model name into a stable kebab-case label value:
+/// ASCII-lowercased alphanumerics, every other run collapsed to one
+/// `-`, no leading/trailing dash (`"CNV_w2a2"` → `"cnv-w2a2"`). Empty
+/// input falls back to `"model"` so a label value is never empty.
+pub fn kebab_label(name: &str) -> String {
+    let mut out = String::with_capacity(name.len());
+    let mut pending_dash = false;
+    for c in name.chars() {
+        if c.is_ascii_alphanumeric() {
+            if pending_dash && !out.is_empty() {
+                out.push('-');
+            }
+            pending_dash = false;
+            out.push(c.to_ascii_lowercase());
+        } else {
+            pending_dash = true;
+        }
+    }
+    if out.is_empty() {
+        "model".to_string()
+    } else {
+        out
+    }
+}
+
+/// Folds several models' [`ServingMetrics`] into one scrape: each
+/// registered entry renders with its stable kebab-case `model` label
+/// ([`ServingMetrics::render_text_for`]), so a multi-model server
+/// exposes one text endpoint without conflating counters.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    entries: Mutex<Vec<(String, Arc<ServingMetrics>)>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Register (or replace) a model's metrics handle; returns the
+    /// kebab-case label the model's series will carry.
+    pub fn register(&self, model: &str, metrics: Arc<ServingMetrics>) -> String {
+        let name = kebab_label(model);
+        let mut entries = self.entries.lock().unwrap_or_else(|p| p.into_inner());
+        if let Some(slot) = entries.iter_mut().find(|(n, _)| *n == name) {
+            slot.1 = metrics;
+        } else {
+            entries.push((name.clone(), metrics));
+        }
+        name
+    }
+
+    /// One scrape covering every registered model, in registration
+    /// order, every series `model`-labeled.
+    pub fn render_text(&self) -> String {
+        let entries = self.entries.lock().unwrap_or_else(|p| p.into_inner());
+        let mut s = String::new();
+        for (name, m) in entries.iter() {
+            s.push_str(&m.render_text_for(Some(name)));
         }
         s
     }
@@ -309,5 +501,79 @@ mod tests {
         ] {
             assert!(text.contains(series), "missing {series} in:\n{text}");
         }
+    }
+
+    #[test]
+    fn observe_batch_feeds_histogram_and_reason_counters() {
+        let m = ServingMetrics::new();
+        m.observe_batch(8, BatchCloseReason::Full);
+        m.observe_batch(3, BatchCloseReason::Window);
+        m.observe_batch(1, BatchCloseReason::Deadline);
+        assert_eq!(m.batches(), 3);
+        assert_eq!(m.batch_size().count(), 3);
+        assert_eq!(m.batch_size().sum_us(), 12);
+        assert_eq!(m.batch_closes(BatchCloseReason::Full), 1);
+        assert_eq!(m.batch_closes(BatchCloseReason::Window), 1);
+        assert_eq!(m.batch_closes(BatchCloseReason::Deadline), 1);
+        assert_eq!(m.batch_closes(BatchCloseReason::Shutdown), 0);
+        let total: u64 = BatchCloseReason::ALL.iter().map(|&r| m.batch_closes(r)).sum();
+        assert_eq!(total, m.batches());
+        let text = m.render_text();
+        assert!(text.contains("qonnx_batch_size_count 3"), "{text}");
+        assert!(text.contains("qonnx_batch_size_sum 12"), "{text}");
+        assert!(text.contains("qonnx_batches_closed_total{reason=\"full\"} 1"), "{text}");
+        assert!(text.contains("qonnx_batches_closed_total{reason=\"shutdown\"} 0"), "{text}");
+    }
+
+    #[test]
+    fn kebab_label_is_stable_and_never_empty() {
+        assert_eq!(kebab_label("CNV-w2a2"), "cnv-w2a2");
+        assert_eq!(kebab_label("CNV_w2a2.onnx"), "cnv-w2a2-onnx");
+        assert_eq!(kebab_label("  weird//Name  "), "weird-name");
+        assert_eq!(kebab_label("___"), "model");
+        assert_eq!(kebab_label(""), "model");
+        // idempotent: registering an already-kebab name changes nothing
+        assert_eq!(kebab_label(&kebab_label("TFC w1a1")), "tfc-w1a1");
+    }
+
+    #[test]
+    fn model_label_composes_with_quantile_and_reason() {
+        let m = ServingMetrics::new();
+        m.record_latency_us(100);
+        m.observe_batch(4, BatchCloseReason::Full);
+        let text = m.render_text_for(Some("CNV-w2a2"));
+        assert!(
+            text.contains("qonnx_requests_completed_total{model=\"cnv-w2a2\"} 1"),
+            "{text}"
+        );
+        assert!(
+            text.contains("qonnx_request_latency_us{model=\"cnv-w2a2\",quantile=\"0.99\"}"),
+            "{text}"
+        );
+        assert!(
+            text.contains("qonnx_batches_closed_total{model=\"cnv-w2a2\",reason=\"full\"} 1"),
+            "{text}"
+        );
+        // no unlabeled series leak into the labeled export
+        assert!(!text.contains("_total "), "{text}");
+    }
+
+    #[test]
+    fn registry_folds_models_into_one_scrape() {
+        let reg = MetricsRegistry::new();
+        let a = Arc::new(ServingMetrics::new());
+        let b = Arc::new(ServingMetrics::new());
+        a.record_latency_us(10);
+        b.inc_shed();
+        assert_eq!(reg.register("TFC-w1a1", a.clone()), "tfc-w1a1");
+        assert_eq!(reg.register("CNV w2a2", b), "cnv-w2a2");
+        let text = reg.render_text();
+        assert!(text.contains("qonnx_requests_completed_total{model=\"tfc-w1a1\"} 1"), "{text}");
+        assert!(text.contains("qonnx_requests_shed_total{model=\"cnv-w2a2\"} 1"), "{text}");
+        // re-registering the same model replaces the handle
+        let a2 = Arc::new(ServingMetrics::new());
+        reg.register("TFC-w1a1", a2);
+        let text = reg.render_text();
+        assert!(text.contains("qonnx_requests_completed_total{model=\"tfc-w1a1\"} 0"), "{text}");
     }
 }

@@ -112,11 +112,17 @@ const SCRATCH_POOL_CAP: usize = 16;
 #[derive(Debug)]
 struct Pool<T> {
     bufs: Vec<Vec<T>>,
+    /// Buffers handed out as fresh heap allocations (pool was empty).
+    fresh: u64,
+    /// Buffers handed out from the pool (alloc avoided).
+    reused: u64,
+    /// Buffers returned to the pool (recycle path taken).
+    recycled: u64,
 }
 
 impl<T> Default for Pool<T> {
     fn default() -> Pool<T> {
-        Pool { bufs: Vec::new() }
+        Pool { bufs: Vec::new(), fresh: 0, reused: 0, recycled: 0 }
     }
 }
 
@@ -153,8 +159,14 @@ impl<T: Copy + Default> Pool<T> {
             };
         }
         match best {
-            Some(i) => self.bufs.swap_remove(i),
-            None => Vec::with_capacity(len),
+            Some(i) => {
+                self.reused += 1;
+                self.bufs.swap_remove(i)
+            }
+            None => {
+                self.fresh += 1;
+                Vec::with_capacity(len)
+            }
         }
     }
 
@@ -164,6 +176,7 @@ impl<T: Copy + Default> Pool<T> {
         if buf.capacity() == 0 {
             return;
         }
+        self.recycled += 1;
         if self.bufs.len() < SCRATCH_POOL_CAP {
             self.bufs.push(buf);
             return;
@@ -177,6 +190,30 @@ impl<T: Copy + Default> Pool<T> {
 
     fn len(&self) -> usize {
         self.bufs.len()
+    }
+}
+
+/// Cumulative arena traffic counters, summed across the per-dtype pools.
+/// Monotonic over an arena's lifetime; the executor's step profiler
+/// subtracts snapshots to attribute alloc-vs-recycle traffic per step.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ScratchCounters {
+    /// Buffers handed out as fresh heap allocations (pool miss).
+    pub fresh_allocs: u64,
+    /// Buffers handed out from a pool (heap allocation avoided).
+    pub pool_reuses: u64,
+    /// Buffers returned for later reuse (`give*`/`recycle`).
+    pub recycled: u64,
+}
+
+impl std::ops::Sub for ScratchCounters {
+    type Output = ScratchCounters;
+    fn sub(self, rhs: ScratchCounters) -> ScratchCounters {
+        ScratchCounters {
+            fresh_allocs: self.fresh_allocs.saturating_sub(rhs.fresh_allocs),
+            pool_reuses: self.pool_reuses.saturating_sub(rhs.pool_reuses),
+            recycled: self.recycled.saturating_sub(rhs.recycled),
+        }
     }
 }
 
@@ -272,6 +309,15 @@ impl ScratchArena {
     /// `i8` buffers currently pooled (diagnostics).
     pub fn pooled_i8(&self) -> usize {
         self.pool_i8.len()
+    }
+
+    /// Cumulative alloc/reuse/recycle traffic across all three pools.
+    pub fn counters(&self) -> ScratchCounters {
+        ScratchCounters {
+            fresh_allocs: self.pool_f32.fresh + self.pool_i32.fresh + self.pool_i8.fresh,
+            pool_reuses: self.pool_f32.reused + self.pool_i32.reused + self.pool_i8.reused,
+            recycled: self.pool_f32.recycled + self.pool_i32.recycled + self.pool_i8.recycled,
+        }
     }
 
     /// Route a released tensor's storage to the pool matching its
@@ -390,6 +436,29 @@ mod tests {
             s.give_i32(Vec::with_capacity(i + 1));
         }
         assert!(s.pooled_i32() <= SCRATCH_POOL_CAP);
+    }
+
+    #[test]
+    fn counters_track_fresh_vs_reused_vs_recycled() {
+        let mut s = ScratchArena::new();
+        assert_eq!(s.counters(), ScratchCounters::default());
+        let b = s.take(4); // pool empty: fresh allocation
+        assert_eq!(s.counters().fresh_allocs, 1);
+        assert_eq!(s.counters().pool_reuses, 0);
+        s.give(b);
+        assert_eq!(s.counters().recycled, 1);
+        let _ = s.take(4); // pool hit
+        let c = s.counters();
+        assert_eq!((c.fresh_allocs, c.pool_reuses, c.recycled), (1, 1, 1));
+        // per-dtype pools all feed the same aggregate
+        let bi = s.take_i32(2);
+        s.recycle(crate::tensor::Tensor::new_i8(vec![2], vec![1, 2]));
+        s.give_i32(bi);
+        let c2 = s.counters() - c;
+        assert_eq!((c2.fresh_allocs, c2.pool_reuses, c2.recycled), (1, 0, 2));
+        // zero-capacity give is not a recycle
+        s.give(Vec::new());
+        assert_eq!(s.counters().recycled, c.recycled + 2);
     }
 
     #[test]

@@ -128,7 +128,7 @@ mod compile;
 pub mod kernel;
 pub mod qkernel;
 
-pub use arena::{ScratchArena, SlotArena};
+pub use arena::{ScratchArena, ScratchCounters, SlotArena};
 pub use kernel::CompiledKernel;
 pub(crate) use compile::residency_passthrough;
 
@@ -139,6 +139,7 @@ use std::borrow::Cow;
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Plan compilation options.
 #[derive(Debug, Clone)]
@@ -377,6 +378,100 @@ pub struct PlanRunResult {
     pub intermediates: BTreeMap<String, Tensor>,
 }
 
+/// One executed schedule step's measurements, recorded by a
+/// [`StepObserver`] during [`ExecutionPlan::run_profiled`].
+///
+/// `wall_ns` covers the full step — input gather, kernel invocation,
+/// slot release and output store — so summed samples account for the
+/// whole hot loop. The arena counters are deltas of
+/// [`ScratchArena::counters`] across the step (fused-epilogue scratch
+/// included), which is what lets the profiler show whether a warm plan
+/// actually reached its zero-allocation steady state.
+#[derive(Debug, Clone)]
+pub struct StepSample {
+    /// Schedule step index.
+    pub step: usize,
+    /// Name of the dispatch node (a fused chain reports its head).
+    pub node_name: String,
+    /// The dispatch node's `op_type`.
+    pub op_type: String,
+    /// Kernel display tag (same string as [`ExecutionPlan::summary`]).
+    pub kernel: String,
+    /// Full-step wall time, nanoseconds (monotonic clock).
+    pub wall_ns: u64,
+    /// Fresh scratch-arena allocations during the step.
+    pub arena_allocs: u64,
+    /// Scratch-arena pool reuses during the step.
+    pub arena_reuses: u64,
+}
+
+/// Collects [`StepSample`]s across one or more profiled runs
+/// ([`ExecutionPlan::run_profiled`]) and optionally mirrors each step
+/// into a [`crate::trace::TraceRecorder`] as an `exec`-category
+/// complete event (one per step per run, timeline-placed).
+///
+/// The plain execution paths ([`ExecutionPlan::run_cfg_scratch`] & co.)
+/// never construct one — profiling cost is strictly opt-in and the
+/// unprofiled hot loop only tests an `Option` that is statically `None`.
+#[derive(Debug, Default)]
+pub struct StepObserver {
+    samples: Vec<StepSample>,
+    trace: Option<Arc<crate::trace::TraceRecorder>>,
+}
+
+impl StepObserver {
+    /// Observer that aggregates samples only (no trace events).
+    pub fn new() -> StepObserver {
+        StepObserver::default()
+    }
+
+    /// Observer that additionally emits an `exec`-category complete
+    /// event per step into `trace` (the recorder's clock timestamps the
+    /// events, so they interleave with serving-lifecycle spans).
+    pub fn with_trace(trace: Arc<crate::trace::TraceRecorder>) -> StepObserver {
+        StepObserver { samples: Vec::new(), trace: Some(trace) }
+    }
+
+    /// Samples recorded so far (all runs, in execution order).
+    pub fn samples(&self) -> &[StepSample] {
+        &self.samples
+    }
+
+    /// Consume the observer, returning its samples.
+    pub fn into_samples(self) -> Vec<StepSample> {
+        self.samples
+    }
+
+    fn observe(
+        &mut self,
+        step: usize,
+        node: &Node,
+        kernel: String,
+        wall_ns: u64,
+        d: ScratchCounters,
+    ) {
+        if let Some(t) = &self.trace {
+            let end = t.now_ns();
+            t.complete(
+                "exec",
+                kernel.clone(),
+                end.saturating_sub(wall_ns),
+                wall_ns,
+                &[("step", step as i64), ("arena_allocs", d.fresh_allocs as i64)],
+            );
+        }
+        self.samples.push(StepSample {
+            step,
+            node_name: node.name.clone(),
+            op_type: node.op_type.clone(),
+            kernel,
+            wall_ns,
+            arena_allocs: d.fresh_allocs,
+            arena_reuses: d.pool_reuses,
+        });
+    }
+}
+
 impl<'g> ExecutionPlan<'g> {
     /// Compile `graph` with default options.
     pub fn compile(graph: &'g ModelGraph) -> Result<ExecutionPlan<'g>> {
@@ -545,6 +640,35 @@ impl<'g> ExecutionPlan<'g> {
         cfg: &RunConfig,
         scratch: &mut ScratchArena,
     ) -> Result<PlanRunResult> {
+        self.run_inner(fetch, cfg, scratch, None)
+    }
+
+    /// Execute under a [`StepObserver`]: identical semantics (and
+    /// result) to [`ExecutionPlan::run_cfg_scratch`], but every
+    /// schedule step additionally records a [`StepSample`] — wall
+    /// time, kernel tag, arena alloc-vs-reuse deltas — into `obs`,
+    /// and, when the observer carries a trace recorder, an
+    /// `exec`-category timeline event. Feed the accumulated samples to
+    /// [`crate::trace::profile::StepProfile::build`] for the
+    /// GMAC/s-vs-Eq.-5 join. The unprofiled paths share this body with
+    /// a statically-`None` observer, so they pay one branch per step.
+    pub fn run_profiled<'a>(
+        &'a self,
+        fetch: impl Fn(&str) -> Option<&'a Tensor>,
+        cfg: &RunConfig,
+        scratch: &mut ScratchArena,
+        obs: &mut StepObserver,
+    ) -> Result<PlanRunResult> {
+        self.run_inner(fetch, cfg, scratch, Some(obs))
+    }
+
+    fn run_inner<'a>(
+        &'a self,
+        fetch: impl Fn(&str) -> Option<&'a Tensor>,
+        cfg: &RunConfig,
+        scratch: &mut ScratchArena,
+        mut obs: Option<&mut StepObserver>,
+    ) -> Result<PlanRunResult> {
         let mut slots: Vec<Option<RtVal<'a>>> = Vec::with_capacity(self.slot_count);
         slots.resize_with(self.slot_count, || None);
         let mut intermediates: BTreeMap<String, Tensor> = BTreeMap::new();
@@ -597,8 +721,14 @@ impl<'g> ExecutionPlan<'g> {
 
         // The hot loop: slot-indexed, dispatch pre-resolved, scratch
         // drawn from (and released intermediates recycled into) the arena.
-        for step in &self.steps {
+        for (step_idx, step) in self.steps.iter().enumerate() {
             let node = &self.nodes[step.node_idx];
+            // Profiling probe: one `Option` test on the unprofiled path.
+            let probe = if obs.is_some() {
+                Some((Instant::now(), scratch.counters()))
+            } else {
+                None
+            };
             let mut ins: Vec<&Tensor> = Vec::with_capacity(step.inputs.len());
             for &sl in &step.inputs {
                 ins.push(
@@ -641,6 +771,11 @@ impl<'g> ExecutionPlan<'g> {
                 if let Some(sl) = step.outputs[j] {
                     slots[sl as usize] = Some(RtVal::Owned(t));
                 }
+            }
+            if let (Some(o), Some((t0, c0))) = (obs.as_deref_mut(), probe) {
+                let wall_ns = t0.elapsed().as_nanos() as u64;
+                let delta = scratch.counters() - c0;
+                o.observe(step_idx, node, step.kernel.tag(node), wall_ns, delta);
             }
         }
 
@@ -909,5 +1044,54 @@ mod tests {
         let out = run_map(&plan, &m);
         assert_eq!(out.len(), 1);
         assert_eq!(out["y"].as_f32().unwrap(), &[0.0, 4.0]);
+    }
+
+    #[test]
+    fn run_profiled_matches_plain_run_and_records_samples() {
+        let mut b = GraphBuilder::new("prof");
+        b.input("x", vec![1, 4]);
+        b.node("Relu", &["x"], &["a"], &[]);
+        b.node("Sign", &["a"], &["y"], &[]);
+        b.output("y", vec![1, 4]);
+        let g = b.finish().unwrap();
+        let plan = ExecutionPlan::compile(&g).unwrap();
+        let mut m = BTreeMap::new();
+        m.insert("x".to_string(), Tensor::new(vec![1, 4], vec![-2.0, -1.0, 0.5, 3.0]));
+        let plain = run_map(&plan, &m);
+
+        let mut obs = StepObserver::new();
+        let mut scratch = ScratchArena::new();
+        let cfg = RunConfig::default();
+        let r = plan.run_profiled(|n| m.get(n), &cfg, &mut scratch, &mut obs).unwrap();
+        assert_eq!(r.outputs, plain, "profiling must not change results");
+        assert_eq!(obs.samples().len(), plan.step_count());
+        assert!(obs.samples().iter().all(|s| !s.kernel.is_empty()));
+        assert_eq!(obs.samples()[0].step, 0);
+        // a second profiled run appends another full set of samples
+        plan.run_profiled(|n| m.get(n), &cfg, &mut scratch, &mut obs).unwrap();
+        assert_eq!(obs.samples().len(), 2 * plan.step_count());
+    }
+
+    #[test]
+    fn run_profiled_with_trace_emits_one_exec_event_per_step() {
+        let mut b = GraphBuilder::new("prof-trace");
+        b.input("x", vec![1, 4]);
+        b.node("Relu", &["x"], &["y"], &[]);
+        b.output("y", vec![1, 4]);
+        let g = b.finish().unwrap();
+        let plan = ExecutionPlan::compile(&g).unwrap();
+        let mut m = BTreeMap::new();
+        m.insert("x".to_string(), Tensor::new(vec![1, 4], vec![1.0, -1.0, 0.0, 2.0]));
+
+        let rec = Arc::new(crate::trace::TraceRecorder::new(64));
+        let mut obs = StepObserver::with_trace(rec.clone());
+        plan.run_profiled(|n| m.get(n), &RunConfig::default(), &mut ScratchArena::new(), &mut obs)
+            .unwrap();
+        let dump = rec.drain();
+        let events: Vec<_> = dump.iter().flat_map(|t| t.events.iter()).collect();
+        assert_eq!(events.len(), plan.step_count());
+        assert!(events.iter().all(|e| {
+            e.cat == "exec" && e.kind == crate::trace::EventKind::Complete
+        }));
     }
 }

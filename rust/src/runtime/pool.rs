@@ -142,7 +142,12 @@ impl WorkerPool {
                 let sh = Arc::clone(&shared);
                 std::thread::Builder::new()
                     .name(format!("qonnx-intraop-{i}"))
-                    .spawn(move || worker_loop(&sh))
+                    .spawn(move || {
+                        // give this worker a named track in any globally
+                        // installed trace before it runs its first job
+                        crate::trace::register_worker_thread();
+                        worker_loop(&sh)
+                    })
                     .expect("spawning intra-op worker")
             })
             .collect();

@@ -1,0 +1,196 @@
+//! Chrome trace-event JSON export: serializes a [`TraceRecorder`] drain
+//! into the `{"traceEvents": [...]}` object format that
+//! `chrome://tracing` and Perfetto load directly.
+//!
+//! Mapping (the trace-event format's `ph` phases):
+//! * one process (`pid` 1) named `qonnx`, one track per recorded thread
+//!   (`tid` = registration order) named via `thread_name` metadata — so
+//!   shard threads (`qonnx-shard-N`) and intra-op workers
+//!   (`qonnx-intraop-N`) each get their own labeled row;
+//! * [`EventKind::SpanBegin`]/[`EventKind::SpanEnd`] → `B`/`E` (nested
+//!   per thread), [`EventKind::Complete`] → `X` with `dur`,
+//!   [`EventKind::Instant`] → `i` (thread-scoped), [`EventKind::Counter`]
+//!   → `C`;
+//! * timestamps are microseconds with sub-µs precision kept as a
+//!   fraction (`ts`/`dur` are µs floats in the format).
+
+use super::{EventKind, ThreadTrace, TraceRecorder};
+use std::fmt::Write as _;
+
+// referenced by the module docs
+#[allow(unused_imports)]
+use super::TraceEvent;
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn args_json(args: &[Option<super::Arg>; 2]) -> String {
+    let mut out = String::from("{");
+    let mut first = true;
+    for (k, v) in args.iter().flatten() {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        let _ = write!(out, "\"{}\":{v}", esc(k));
+    }
+    out.push('}');
+    out
+}
+
+/// Serialize a drain (see [`TraceRecorder::drain`]) to Chrome trace-event
+/// JSON. The output is a complete, self-contained object — write it to a
+/// file and load it in `chrome://tracing` or <https://ui.perfetto.dev>.
+pub fn chrome_trace_json(traces: &[ThreadTrace]) -> String {
+    let mut out = String::from("{\"traceEvents\":[\n");
+    let mut first = true;
+    let mut push = |s: String, out: &mut String| {
+        if !first {
+            out.push_str(",\n");
+        }
+        first = false;
+        out.push_str(&s);
+    };
+    push(
+        "{\"ph\":\"M\",\"pid\":1,\"tid\":0,\"name\":\"process_name\",\
+         \"args\":{\"name\":\"qonnx\"}}"
+            .to_string(),
+        &mut out,
+    );
+    for t in traces {
+        push(
+            format!(
+                "{{\"ph\":\"M\",\"pid\":1,\"tid\":{},\"name\":\"thread_name\",\
+                 \"args\":{{\"name\":\"{}\"}}}}",
+                t.tid,
+                esc(&t.thread_name)
+            ),
+            &mut out,
+        );
+    }
+    for t in traces {
+        for e in &t.events {
+            let ts = e.ts_ns as f64 / 1000.0;
+            let common = format!(
+                "\"pid\":1,\"tid\":{},\"ts\":{ts:.3},\"cat\":\"{}\",\"name\":\"{}\"",
+                t.tid,
+                esc(e.cat),
+                esc(&e.name)
+            );
+            let ev = match e.kind {
+                EventKind::SpanBegin => {
+                    format!("{{\"ph\":\"B\",{common},\"args\":{}}}", args_json(&e.args))
+                }
+                EventKind::SpanEnd => format!("{{\"ph\":\"E\",{common}}}"),
+                EventKind::Instant => format!(
+                    "{{\"ph\":\"i\",\"s\":\"t\",{common},\"args\":{}}}",
+                    args_json(&e.args)
+                ),
+                EventKind::Complete => format!(
+                    "{{\"ph\":\"X\",{common},\"dur\":{:.3},\"args\":{}}}",
+                    e.dur_ns as f64 / 1000.0,
+                    args_json(&e.args)
+                ),
+                EventKind::Counter => {
+                    format!("{{\"ph\":\"C\",{common},\"args\":{}}}", args_json(&e.args))
+                }
+            };
+            push(ev, &mut out);
+        }
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::json::Json;
+
+    /// The acceptance test for the export shape: the emitted JSON parses
+    /// with the crate's own parser and carries the structure Perfetto
+    /// requires (`traceEvents` array; `ph`/`pid`/`tid`/`ts` per event;
+    /// thread-name metadata; balanced B/E pairs; X events with `dur`).
+    #[test]
+    fn export_is_structurally_valid_chrome_trace() {
+        let rec = TraceRecorder::new(64);
+        {
+            let _batch = rec.span("shard", "batch:full", &[("batch_size", 4)]);
+            let _exec = rec.span("shard", "execute", &[]);
+        }
+        rec.instant("request", "shed \"quoted\"\n", &[("queue_depth", 7)]);
+        rec.complete("request", "queued", 100, 2_500, &[]);
+        rec.counter("queue", "queue_depth", 3);
+        let dump = rec.drain();
+        let text = chrome_trace_json(&dump);
+
+        let parsed = Json::parse(&text).expect("chrome trace must be valid JSON");
+        let events = parsed
+            .req("traceEvents")
+            .and_then(Json::as_arr)
+            .expect("top-level traceEvents array");
+        // 2 metadata (process + 1 thread) + 4 span begin/end + i + X + C
+        assert_eq!(events.len(), 9);
+        let mut depth = 0i64;
+        let mut saw_thread_name = false;
+        let mut saw_complete_dur = false;
+        for e in events {
+            let ph = e.req("ph").and_then(Json::as_str).expect("every event has ph");
+            assert!(e.req("pid").and_then(Json::as_i64).is_ok());
+            assert!(e.req("tid").and_then(Json::as_i64).is_ok());
+            match ph {
+                "M" => {
+                    if e.req("name").and_then(Json::as_str).unwrap() == "thread_name" {
+                        saw_thread_name = true;
+                    }
+                }
+                "B" => depth += 1,
+                "E" => {
+                    depth -= 1;
+                    assert!(depth >= 0, "E without matching B");
+                }
+                "X" => {
+                    let dur = e.req("dur").and_then(Json::as_f64).expect("X carries dur");
+                    assert!((dur - 2.5).abs() < 1e-9, "dur is µs: {dur}");
+                    saw_complete_dur = true;
+                }
+                "i" => assert_eq!(e.req("s").and_then(Json::as_str).unwrap(), "t"),
+                "C" => {
+                    let v = e
+                        .req("args")
+                        .and_then(|a| a.req("value"))
+                        .and_then(Json::as_i64)
+                        .unwrap();
+                    assert_eq!(v, 3);
+                }
+                other => panic!("unexpected phase {other}"),
+            }
+            if ph != "M" {
+                assert!(e.req("ts").and_then(Json::as_f64).is_ok(), "ts required");
+            }
+        }
+        assert_eq!(depth, 0, "spans unbalanced in export");
+        assert!(saw_thread_name && saw_complete_dur);
+    }
+
+    #[test]
+    fn escaping_survives_hostile_names() {
+        assert_eq!(esc("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(esc("\u{1}"), "\\u0001");
+    }
+}

@@ -1,0 +1,478 @@
+//! Execution tracing & profiling: typed events in per-thread ring buffers,
+//! request-lifecycle spans, per-step kernel profiles, and Chrome-trace /
+//! Prometheus exporters.
+//!
+//! # Recorder contract
+//!
+//! A [`TraceRecorder`] owns one bounded ring buffer per participating
+//! thread. Producers never contend with each other: each thread records
+//! into its own buffer (found through a thread-local cache after the
+//! first event), so the per-event cost is one uncontended `Mutex` lock of
+//! a buffer only its owner and a drainer ever touch — "lock-free enough"
+//! for a hot loop that measures in microseconds per step. Memory is
+//! bounded: when a ring is full the OLDEST event is overwritten and the
+//! buffer's `dropped` counter is incremented exactly once per loss, so
+//! `drained events + dropped` always equals the number recorded.
+//! Timestamps come from one monotonic [`std::time::Instant`] epoch per
+//! recorder (`ts_ns`), never the wall clock.
+//!
+//! Tracing is **instance-based and opt-in**: every producer site holds an
+//! `Option<Arc<TraceRecorder>>` and the disabled path is a single branch
+//! on `None` — no atomics, no allocation, no syscalls — so executors keep
+//! their untraced speed (asserted by the `make bench` overhead section).
+//! The one process-global hook, [`install_global`]/[`global`], exists so
+//! the CLI can hand the intra-op worker pool a recorder to register its
+//! threads with (one named track per worker); it is an `AtomicBool` load
+//! on the never-installed path and is NOT consulted by the executors.
+//!
+//! # Span taxonomy
+//!
+//! Spans nest per thread (Chrome `B`/`E` semantics); [`SpanGuard`] ends
+//! its span on `Drop`, so spans stay balanced even when an engine panic
+//! unwinds through a shard (asserted under `FaultyEngine` in
+//! `tests/serving_faults.rs`). The stack uses:
+//!
+//! | cat       | name                | kind     | meaning                               |
+//! |-----------|---------------------|----------|---------------------------------------|
+//! | `request` | `admit` / `shed`    | instant  | admission outcome (+ queue depth)     |
+//! | `request` | `queued`            | complete | queue wait, enqueue → drain           |
+//! | `request` | typed failure name  | instant  | `deadline-exceeded`, `engine-error`,  |
+//! |           |                     |          | `shard-panic`, `shutdown`, ...        |
+//! | `shard`   | `batch:<reason>`    | span     | one formed batch; reason is the close |
+//! |           |                     |          | cause (full/window/deadline/shutdown) |
+//! | `shard`   | `execute`/`scatter` | span     | engine call / response delivery       |
+//! | `shard`   | `shard-restart`     | instant  | supervisor respawned a dead shard     |
+//! | `exec`    | kernel tag          | complete | one plan step (from [`crate::plan::StepObserver`]) |
+//! | `queue`   | `queue_depth`       | counter  | depth after each admission            |
+//! | `pool`    | `worker-online`     | instant  | intra-op worker registered its track  |
+//!
+//! [`chrome::chrome_trace_json`] serializes a drain into Chrome
+//! trace-event JSON (`chrome://tracing` / Perfetto; one track per shard
+//! and per worker thread); [`profile::StepProfile`] aggregates executor
+//! step samples against the Eq.-5 static model into a per-kernel
+//! achieved-GMAC/s table.
+
+pub mod chrome;
+pub mod profile;
+
+use std::borrow::Cow;
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, PoisonError};
+use std::time::Instant;
+
+/// One `(key, value)` annotation attached to an event. Values are kept
+/// integral so serialization never meets NaN.
+pub type Arg = (&'static str, i64);
+
+/// The typed event vocabulary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Opens a span on the recording thread (Chrome `B`).
+    SpanBegin,
+    /// Closes the innermost open span with the same name (Chrome `E`).
+    SpanEnd,
+    /// A point-in-time marker (Chrome `i`).
+    Instant,
+    /// A retroactive span recorded at its end: `ts_ns` is the start and
+    /// `dur_ns` the length (Chrome `X`). Used where begin and end happen
+    /// on different threads (queue wait) or are only known after the
+    /// fact (executor step timing).
+    Complete,
+    /// A sampled numeric series (Chrome `C`); the value rides in
+    /// `args[0]`.
+    Counter,
+}
+
+/// A recorded event. `ts_ns` is nanoseconds since the recorder's epoch.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub kind: EventKind,
+    pub cat: &'static str,
+    pub name: Cow<'static, str>,
+    pub ts_ns: u64,
+    /// Span length for [`EventKind::Complete`], zero otherwise.
+    pub dur_ns: u64,
+    pub args: [Option<Arg>; 2],
+}
+
+struct Ring {
+    events: VecDeque<TraceEvent>,
+    cap: usize,
+}
+
+/// One thread's bounded event buffer.
+struct ThreadBuf {
+    tid: u64,
+    name: String,
+    ring: Mutex<Ring>,
+    dropped: AtomicU64,
+}
+
+/// Everything one thread contributed to a drain.
+#[derive(Debug, Clone)]
+pub struct ThreadTrace {
+    /// Stable per-recorder track id (registration order, from 1).
+    pub tid: u64,
+    /// The OS thread name at registration time (`qonnx-shard-0`,
+    /// `qonnx-intraop-3`, ...), or `"thread"` for unnamed threads.
+    pub thread_name: String,
+    pub events: Vec<TraceEvent>,
+    /// Events lost to ring overwrite since the previous drain — exact.
+    pub dropped: u64,
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+thread_local! {
+    /// recorder-id → this thread's buffer, so steady-state recording
+    /// never touches the recorder's registry lock.
+    static BUF_CACHE: RefCell<Vec<(u64, Arc<ThreadBuf>)>> = const { RefCell::new(Vec::new()) };
+}
+
+static NEXT_RECORDER_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Bounded-memory, per-thread-buffered event recorder. See the module
+/// docs for the contract; clone the `Arc` freely — all methods take
+/// `&self`.
+pub struct TraceRecorder {
+    id: u64,
+    epoch: Instant,
+    cap: usize,
+    bufs: Mutex<Vec<Arc<ThreadBuf>>>,
+    next_tid: AtomicU64,
+}
+
+impl std::fmt::Debug for TraceRecorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceRecorder")
+            .field("events_per_thread", &self.cap)
+            .field("threads", &lock(&self.bufs).len())
+            .finish_non_exhaustive()
+    }
+}
+
+impl TraceRecorder {
+    /// A recorder whose per-thread rings hold `events_per_thread` events
+    /// (floored at 8). Total memory is bounded by
+    /// `threads × events_per_thread × sizeof(TraceEvent)`.
+    pub fn new(events_per_thread: usize) -> Self {
+        TraceRecorder {
+            id: NEXT_RECORDER_ID.fetch_add(1, Ordering::Relaxed),
+            epoch: Instant::now(),
+            cap: events_per_thread.max(8),
+            bufs: Mutex::new(Vec::new()),
+            next_tid: AtomicU64::new(1),
+        }
+    }
+
+    /// Nanoseconds since this recorder's epoch, from the monotonic clock.
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Epoch-relative timestamp for an externally captured [`Instant`]
+    /// (saturates to 0 for instants predating the recorder).
+    pub fn ns_since_epoch(&self, t: Instant) -> u64 {
+        t.checked_duration_since(self.epoch).map_or(0, |d| d.as_nanos() as u64)
+    }
+
+    /// Register the calling thread so it gets a (named) track even if it
+    /// never records an event itself — the worker pool calls this.
+    pub fn register_current_thread(&self) {
+        let _ = self.buf();
+    }
+
+    fn buf(&self) -> Arc<ThreadBuf> {
+        BUF_CACHE.with(|c| {
+            let mut cache = c.borrow_mut();
+            if let Some((_, b)) = cache.iter().find(|(id, _)| *id == self.id) {
+                return b.clone();
+            }
+            let name = std::thread::current().name().unwrap_or("thread").to_string();
+            let buf = Arc::new(ThreadBuf {
+                tid: self.next_tid.fetch_add(1, Ordering::Relaxed),
+                name,
+                ring: Mutex::new(Ring {
+                    events: VecDeque::with_capacity(self.cap.min(1024)),
+                    cap: self.cap,
+                }),
+                dropped: AtomicU64::new(0),
+            });
+            lock(&self.bufs).push(buf.clone());
+            // long-lived threads meet many short-lived recorders (unit
+            // tests); keep the cache bounded by evicting oldest entries
+            if cache.len() >= 8 {
+                cache.remove(0);
+            }
+            cache.push((self.id, buf.clone()));
+            buf
+        })
+    }
+
+    fn record(&self, ev: TraceEvent) {
+        let buf = self.buf();
+        let mut ring = lock(&buf.ring);
+        if ring.events.len() == ring.cap {
+            ring.events.pop_front();
+            buf.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.events.push_back(ev);
+    }
+
+    fn pack(args: &[Arg]) -> [Option<Arg>; 2] {
+        debug_assert!(args.len() <= 2, "events carry at most two args");
+        [args.first().copied(), args.get(1).copied()]
+    }
+
+    /// Record a point-in-time marker.
+    pub fn instant(&self, cat: &'static str, name: impl Into<Cow<'static, str>>, args: &[Arg]) {
+        self.record(TraceEvent {
+            kind: EventKind::Instant,
+            cat,
+            name: name.into(),
+            ts_ns: self.now_ns(),
+            dur_ns: 0,
+            args: Self::pack(args),
+        });
+    }
+
+    /// Record a sampled numeric series value.
+    pub fn counter(&self, cat: &'static str, name: impl Into<Cow<'static, str>>, value: i64) {
+        self.record(TraceEvent {
+            kind: EventKind::Counter,
+            cat,
+            name: name.into(),
+            ts_ns: self.now_ns(),
+            dur_ns: 0,
+            args: [Some(("value", value)), None],
+        });
+    }
+
+    /// Record a retroactive span: `start_ns` is epoch-relative (see
+    /// [`Self::now_ns`]/[`Self::ns_since_epoch`]).
+    pub fn complete(
+        &self,
+        cat: &'static str,
+        name: impl Into<Cow<'static, str>>,
+        start_ns: u64,
+        dur_ns: u64,
+        args: &[Arg],
+    ) {
+        self.record(TraceEvent {
+            kind: EventKind::Complete,
+            cat,
+            name: name.into(),
+            ts_ns: start_ns,
+            dur_ns,
+            args: Self::pack(args),
+        });
+    }
+
+    /// Open a span on the calling thread; the returned guard records the
+    /// matching end on `Drop` (including during unwinding, so panics
+    /// cannot leave a span dangling).
+    pub fn span(
+        &self,
+        cat: &'static str,
+        name: impl Into<Cow<'static, str>>,
+        args: &[Arg],
+    ) -> SpanGuard<'_> {
+        let name = name.into();
+        self.record(TraceEvent {
+            kind: EventKind::SpanBegin,
+            cat,
+            name: name.clone(),
+            ts_ns: self.now_ns(),
+            dur_ns: 0,
+            args: Self::pack(args),
+        });
+        SpanGuard { rec: self, cat, name }
+    }
+
+    /// Take every buffered event (one [`ThreadTrace`] per registered
+    /// thread, registration order) and reset the per-thread dropped
+    /// counters. With producers quiescent,
+    /// `events drained (ever) + dropped (ever) == events recorded`.
+    pub fn drain(&self) -> Vec<ThreadTrace> {
+        let bufs = lock(&self.bufs).clone();
+        bufs.iter()
+            .map(|b| {
+                let events: Vec<TraceEvent> = lock(&b.ring).events.drain(..).collect();
+                ThreadTrace {
+                    tid: b.tid,
+                    thread_name: b.name.clone(),
+                    events,
+                    dropped: b.dropped.swap(0, Ordering::Relaxed),
+                }
+            })
+            .collect()
+    }
+}
+
+/// RAII guard for an open span; records [`EventKind::SpanEnd`] on drop.
+pub struct SpanGuard<'a> {
+    rec: &'a TraceRecorder,
+    cat: &'static str,
+    name: Cow<'static, str>,
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        self.rec.record(TraceEvent {
+            kind: EventKind::SpanEnd,
+            cat: self.cat,
+            name: self.name.clone(),
+            ts_ns: self.rec.now_ns(),
+            dur_ns: 0,
+            args: [None, None],
+        });
+    }
+}
+
+static GLOBAL_ON: AtomicBool = AtomicBool::new(false);
+static GLOBAL: OnceLock<Arc<TraceRecorder>> = OnceLock::new();
+
+/// Install the process-global recorder (first caller wins; returns
+/// whether this call installed it). Only the CLI does this — it lets
+/// intra-op pool workers spawned LATER register their tracks. Install
+/// before the first inference so the lazily created pool sees it.
+pub fn install_global(rec: Arc<TraceRecorder>) -> bool {
+    let installed = GLOBAL.set(rec).is_ok();
+    if installed {
+        GLOBAL_ON.store(true, Ordering::Release);
+    }
+    installed
+}
+
+/// The installed global recorder, if any. One relaxed-ish atomic load on
+/// the common never-installed path.
+pub fn global() -> Option<&'static Arc<TraceRecorder>> {
+    if !GLOBAL_ON.load(Ordering::Acquire) {
+        return None;
+    }
+    GLOBAL.get()
+}
+
+/// Called by intra-op pool workers at startup: register a named track
+/// with the global recorder when one is installed, else a no-op.
+pub(crate) fn register_worker_thread() {
+    if let Some(t) = global() {
+        t.register_current_thread();
+        t.instant("pool", "worker-online", &[]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_wraparound_keeps_newest_and_counts_drops_exactly() {
+        let rec = TraceRecorder::new(8);
+        for i in 0..20u64 {
+            rec.counter("t", format!("e{i}"), i as i64);
+        }
+        let dump = rec.drain();
+        assert_eq!(dump.len(), 1);
+        let t = &dump[0];
+        assert_eq!(t.events.len(), 8, "ring holds exactly its capacity");
+        assert_eq!(t.dropped, 12, "dropped counter is exact");
+        let names: Vec<&str> = t.events.iter().map(|e| e.name.as_ref()).collect();
+        let want: Vec<String> = (12..20).map(|i| format!("e{i}")).collect();
+        assert_eq!(names, want.iter().map(String::as_str).collect::<Vec<_>>());
+        // a second drain returns empty buffers, not stale events
+        let again = rec.drain();
+        assert!(again[0].events.is_empty() && again[0].dropped == 0);
+    }
+
+    #[test]
+    fn concurrent_producers_drain_without_loss_miscounts() {
+        let rec = Arc::new(TraceRecorder::new(64));
+        let per_thread = 1000u64;
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let r = rec.clone();
+                std::thread::Builder::new()
+                    .name(format!("trace-prod-{t}"))
+                    .spawn(move || {
+                        for i in 0..per_thread {
+                            r.instant("t", "tick", &[("i", i as i64)]);
+                        }
+                    })
+                    .unwrap()
+            })
+            .collect();
+        for h in threads {
+            h.join().unwrap();
+        }
+        let dump = rec.drain();
+        assert_eq!(dump.len(), 4);
+        for t in &dump {
+            assert!(t.events.len() <= 64);
+            assert_eq!(
+                t.events.len() as u64 + t.dropped,
+                per_thread,
+                "thread {} lost events without counting them",
+                t.thread_name
+            );
+            assert!(t.thread_name.starts_with("trace-prod-"));
+        }
+        let tids: Vec<u64> = dump.iter().map(|t| t.tid).collect();
+        let mut uniq = tids.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 4, "tids must be distinct: {tids:?}");
+    }
+
+    #[test]
+    fn span_guard_balances_on_panic_unwind() {
+        let rec = Arc::new(TraceRecorder::new(64));
+        let r = rec.clone();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+            let _outer = r.span("t", "outer", &[]);
+            let _inner = r.span("t", "inner", &[]);
+            panic!("boom");
+        }));
+        assert!(result.is_err());
+        let events = rec.drain().remove(0).events;
+        let mut stack: Vec<String> = Vec::new();
+        for e in &events {
+            match e.kind {
+                EventKind::SpanBegin => stack.push(e.name.to_string()),
+                EventKind::SpanEnd => {
+                    assert_eq!(stack.pop().as_deref(), Some(e.name.as_ref()));
+                }
+                _ => {}
+            }
+        }
+        assert!(stack.is_empty(), "unwind left dangling spans: {stack:?}");
+        assert_eq!(events.len(), 4, "outer+inner begin/end");
+    }
+
+    #[test]
+    fn timestamps_are_monotonic_per_thread() {
+        let rec = TraceRecorder::new(128);
+        for _ in 0..50 {
+            rec.instant("t", "tick", &[]);
+        }
+        let events = rec.drain().remove(0).events;
+        for w in events.windows(2) {
+            assert!(w[0].ts_ns <= w[1].ts_ns);
+        }
+    }
+
+    #[test]
+    fn global_is_none_until_installed() {
+        // never installed in the library test binary unless this test
+        // (or a CLI path) installs it; check the cheap path works
+        let _ = global();
+        let _ = install_global(Arc::new(TraceRecorder::new(8)));
+        assert!(global().is_some());
+        // second install loses
+        assert!(!install_global(Arc::new(TraceRecorder::new(8))));
+    }
+}

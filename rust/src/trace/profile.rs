@@ -1,0 +1,330 @@
+//! Per-step profile aggregation: joins executor timings
+//! ([`crate::plan::StepSample`], collected by
+//! [`crate::plan::StepObserver`]) with the paper's static complexity
+//! model ([`crate::metrics::ModelReport`] — Eq. 5 BOPs, Baskin et
+//! al.'s metric) into a roofline-style achieved-throughput report.
+//!
+//! FINN-R (see `PAPERS.md`) drives optimization by comparing
+//! *predicted* per-layer cost against *achieved* throughput; this
+//! module computes the achieved side. Samples from repeated profiled
+//! runs are aggregated per schedule step (mean wall time, share of the
+//! whole plan, arena fresh-alloc vs pool-reuse counts), and every step
+//! whose producing node has an entry in the static report additionally
+//! gets achieved GMAC/s and effective GBOP/s — MACs and BOPs scale
+//! linearly with the leading batch dim, so a batch-`n` run is credited
+//! `n×` the per-sample work. Steps without a static entry (pools,
+//! reshapes, thresholds) show wall time only.
+
+use crate::metrics::ModelReport;
+use crate::plan::StepSample;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// One schedule step's aggregated profile (over all recorded runs).
+#[derive(Debug, Clone)]
+pub struct StepRow {
+    /// Schedule step index (matches [`crate::plan::ExecutionPlan`]'s
+    /// `summary()` listing).
+    pub step: usize,
+    /// Name of the node whose kernel ran (the dispatch node of a fused
+    /// chain) — the join key against [`ModelReport`] layers.
+    pub node_name: String,
+    /// Kernel display tag (`qconv`, `packed-gemm`, `generic:Relu`, …).
+    pub kernel: String,
+    /// Number of recorded executions.
+    pub calls: u64,
+    /// Total wall time across all calls, nanoseconds.
+    pub total_ns: u64,
+    /// Mean wall time per call, microseconds.
+    pub mean_us: f64,
+    /// Fraction of whole-plan recorded time (0..=1).
+    pub share: f64,
+    /// Static per-call MACs (Eq. 5 inputs, scaled by batch); `None`
+    /// when the node has no entry in the static report.
+    pub macs: Option<u64>,
+    /// Static per-call BOPs (Eq. 5, scaled by batch); `None` as above.
+    pub bops: Option<f64>,
+    /// Achieved giga-MACs per second (0 when `macs` is `None`).
+    pub gmac_s: f64,
+    /// Effective giga-bit-ops per second (0 when `bops` is `None`).
+    pub gbop_s: f64,
+    /// Fresh arena allocations attributed to this step (all calls).
+    pub arena_allocs: u64,
+    /// Arena pool reuses attributed to this step (all calls).
+    pub arena_reuses: u64,
+}
+
+/// Aggregated per-step profile for one plan, joined against the static
+/// complexity model. Build from executor samples with
+/// [`StepProfile::build`]; render with [`StepProfile::render_table`].
+#[derive(Debug, Clone)]
+pub struct StepProfile {
+    /// Model name (for the table header).
+    pub model: String,
+    /// Kernel substrate description (ISA, intra-op threads).
+    pub substrate: String,
+    /// Leading batch dim the samples ran at.
+    pub batch: u64,
+    /// Profiled run count (max calls over steps).
+    pub runs: u64,
+    /// Per-step rows, in schedule order.
+    pub rows: Vec<StepRow>,
+    /// Total recorded wall time across all rows and runs, nanoseconds.
+    pub total_ns: u64,
+}
+
+fn substrate_string() -> String {
+    format!(
+        "isa {} ({}), intra-op threads {}",
+        crate::tensor::simd::active_isa(),
+        if crate::tensor::simd::force_scalar() { "forced scalar" } else { "detected" },
+        crate::runtime::pool::effective_parallelism()
+    )
+}
+
+fn trunc(s: &str, max: usize) -> String {
+    if s.chars().count() <= max {
+        s.to_string()
+    } else {
+        let mut out: String = s.chars().take(max.saturating_sub(1)).collect();
+        out.push('…');
+        out
+    }
+}
+
+impl StepProfile {
+    /// Aggregate raw executor samples (possibly spanning many runs)
+    /// into per-step rows, joining each step's node name against the
+    /// static `report` (when given) to compute achieved GMAC/s and
+    /// GBOP/s. `batch` scales the static per-sample MACs/BOPs to the
+    /// batch the samples actually executed.
+    pub fn build(
+        model: &str,
+        samples: &[StepSample],
+        report: Option<&ModelReport>,
+        batch: u64,
+    ) -> StepProfile {
+        struct Acc {
+            node_name: String,
+            kernel: String,
+            calls: u64,
+            total_ns: u64,
+            arena_allocs: u64,
+            arena_reuses: u64,
+        }
+        let mut by_step: BTreeMap<usize, Acc> = BTreeMap::new();
+        for s in samples {
+            let a = by_step.entry(s.step).or_insert_with(|| Acc {
+                node_name: s.node_name.clone(),
+                kernel: s.kernel.clone(),
+                calls: 0,
+                total_ns: 0,
+                arena_allocs: 0,
+                arena_reuses: 0,
+            });
+            a.calls += 1;
+            a.total_ns += s.wall_ns;
+            a.arena_allocs += s.arena_allocs;
+            a.arena_reuses += s.arena_reuses;
+        }
+        let total_ns: u64 = by_step.values().map(|a| a.total_ns).sum();
+        let runs = by_step.values().map(|a| a.calls).max().unwrap_or(0);
+        let rows = by_step
+            .into_iter()
+            .map(|(step, a)| {
+                let mean_ns =
+                    if a.calls > 0 { a.total_ns as f64 / a.calls as f64 } else { 0.0 };
+                let layer =
+                    report.and_then(|r| r.layers.iter().find(|l| l.node_name == a.node_name));
+                let macs = layer.map(|l| l.macs.saturating_mul(batch));
+                let bops = layer.map(|l| l.bops * batch as f64);
+                let per_call_s = mean_ns / 1e9;
+                let gmac_s = match macs {
+                    Some(m) if per_call_s > 0.0 => m as f64 / per_call_s / 1e9,
+                    _ => 0.0,
+                };
+                let gbop_s = match bops {
+                    Some(b) if per_call_s > 0.0 => b / per_call_s / 1e9,
+                    _ => 0.0,
+                };
+                StepRow {
+                    step,
+                    node_name: a.node_name,
+                    kernel: a.kernel,
+                    calls: a.calls,
+                    total_ns: a.total_ns,
+                    mean_us: mean_ns / 1000.0,
+                    share: if total_ns > 0 {
+                        a.total_ns as f64 / total_ns as f64
+                    } else {
+                        0.0
+                    },
+                    macs,
+                    bops,
+                    gmac_s,
+                    gbop_s,
+                    arena_allocs: a.arena_allocs,
+                    arena_reuses: a.arena_reuses,
+                }
+            })
+            .collect();
+        StepProfile {
+            model: model.to_string(),
+            substrate: substrate_string(),
+            batch,
+            runs,
+            rows,
+            total_ns,
+        }
+    }
+
+    /// Whole-plan achieved GMAC/s: the sum of every statically-modeled
+    /// step's MACs, over the whole plan's mean per-run wall time (so
+    /// un-modeled steps — pools, reshapes — *count against* throughput,
+    /// as they do in a real deployment).
+    pub fn total_gmac_s(&self) -> f64 {
+        if self.runs == 0 || self.total_ns == 0 {
+            return 0.0;
+        }
+        let macs: u64 = self.rows.iter().filter_map(|r| r.macs).sum();
+        let per_run_s = self.total_ns as f64 / self.runs as f64 / 1e9;
+        macs as f64 / per_run_s / 1e9
+    }
+
+    /// Whole-plan effective GBOP/s (Eq.-5 BOPs over mean per-run time).
+    pub fn total_gbop_s(&self) -> f64 {
+        if self.runs == 0 || self.total_ns == 0 {
+            return 0.0;
+        }
+        let bops: f64 = self.rows.iter().filter_map(|r| r.bops).sum();
+        let per_run_s = self.total_ns as f64 / self.runs as f64 / 1e9;
+        bops / per_run_s / 1e9
+    }
+
+    /// Render the per-step table the `qonnx profile` CLI prints:
+    /// time, share, achieved GMAC/s + GBOP/s (`-` where the static
+    /// model has no entry), arena alloc/reuse counts, then the plan
+    /// total and the kernel substrate line.
+    pub fn render_table(&self) -> String {
+        let mut s =
+            format!("profile '{}' (batch {}, {} runs)\n", self.model, self.batch, self.runs);
+        let _ = writeln!(
+            s,
+            "  {:<5} {:<20} {:<24} {:>10} {:>6} {:>8} {:>8}  {}",
+            "step", "kernel", "node", "mean µs", "%", "GMAC/s", "GBOP/s", "alloc/reuse"
+        );
+        for r in &self.rows {
+            let gm = r.macs.map(|_| format!("{:.2}", r.gmac_s)).unwrap_or_else(|| "-".into());
+            let gb = r.bops.map(|_| format!("{:.2}", r.gbop_s)).unwrap_or_else(|| "-".into());
+            let _ = writeln!(
+                s,
+                "  s{:<4} {:<20} {:<24} {:>10.1} {:>5.1}% {:>8} {:>8}  {}/{}",
+                r.step,
+                trunc(&r.kernel, 20),
+                trunc(&r.node_name, 24),
+                r.mean_us,
+                r.share * 100.0,
+                gm,
+                gb,
+                r.arena_allocs,
+                r.arena_reuses
+            );
+        }
+        let per_run_us =
+            if self.runs > 0 { self.total_ns as f64 / self.runs as f64 / 1000.0 } else { 0.0 };
+        let _ = writeln!(
+            s,
+            "  TOTAL {per_run_us:.1} µs/run  {:.2} GMAC/s  {:.2} GBOP/s",
+            self.total_gmac_s(),
+            self.total_gbop_s()
+        );
+        let _ = writeln!(s, "  substrate: {}", self.substrate);
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{LayerReport, ModelReport};
+
+    fn sample(step: usize, node: &str, kernel: &str, wall_ns: u64) -> StepSample {
+        StepSample {
+            step,
+            node_name: node.to_string(),
+            op_type: "Conv".to_string(),
+            kernel: kernel.to_string(),
+            wall_ns,
+            arena_allocs: 1,
+            arena_reuses: 2,
+        }
+    }
+
+    fn report() -> ModelReport {
+        ModelReport {
+            model_name: "m".to_string(),
+            layers: vec![LayerReport {
+                node_name: "conv0".to_string(),
+                op_type: "Conv".to_string(),
+                macs: 1_000_000,
+                bops: 4_000_000.0,
+                mac_bops: 4.0,
+                weights: 100,
+                weight_bits: 2,
+                act_bits: 2,
+            }],
+        }
+    }
+
+    #[test]
+    fn aggregates_runs_and_joins_static_model() {
+        // two runs of a two-step plan; conv0 joins the report, relu not
+        let samples = vec![
+            sample(0, "conv0", "qconv", 1_000_000),
+            sample(1, "relu0", "generic:Relu", 500_000),
+            sample(0, "conv0", "qconv", 3_000_000),
+            sample(1, "relu0", "generic:Relu", 500_000),
+        ];
+        let r = report();
+        let p = StepProfile::build("m", &samples, Some(&r), 2);
+        assert_eq!(p.runs, 2);
+        assert_eq!(p.rows.len(), 2);
+        assert_eq!(p.total_ns, 5_000_000);
+
+        let conv = &p.rows[0];
+        assert_eq!(conv.step, 0);
+        assert_eq!(conv.calls, 2);
+        // mean 2 ms; batch-2 MACs = 2e6 -> 2e6 / 2e-3 s = 1e9 = 1 GMAC/s
+        assert!((conv.mean_us - 2000.0).abs() < 1e-9);
+        assert_eq!(conv.macs, Some(2_000_000));
+        assert!((conv.gmac_s - 1.0).abs() < 1e-9, "{}", conv.gmac_s);
+        assert!((conv.gbop_s - 4.0).abs() < 1e-9, "{}", conv.gbop_s);
+        assert!((conv.share - 0.8).abs() < 1e-9);
+
+        let relu = &p.rows[1];
+        assert_eq!(relu.macs, None);
+        assert_eq!(relu.gmac_s, 0.0);
+        assert!((relu.share - 0.2).abs() < 1e-9);
+
+        // whole-plan: 2e6 MACs over 2.5 ms mean run = 0.8 GMAC/s
+        assert!((p.total_gmac_s() - 0.8).abs() < 1e-9, "{}", p.total_gmac_s());
+
+        let table = p.render_table();
+        assert!(table.contains("qconv"), "{table}");
+        assert!(table.contains("GMAC/s"), "{table}");
+        assert!(table.contains("TOTAL"), "{table}");
+        assert!(table.contains("substrate: isa"), "{table}");
+        // the unmodeled step renders '-' in the throughput columns
+        assert!(table.contains(" - "), "{table}");
+    }
+
+    #[test]
+    fn empty_samples_produce_empty_but_renderable_profile() {
+        let p = StepProfile::build("empty", &[], None, 1);
+        assert_eq!(p.runs, 0);
+        assert!(p.rows.is_empty());
+        assert_eq!(p.total_gmac_s(), 0.0);
+        let t = p.render_table();
+        assert!(t.contains("TOTAL"), "{t}");
+    }
+}

@@ -10,7 +10,9 @@ use qonnx::coordinator::{
     Batcher, BatcherConfig, DegradedPolicy, FaultAction, FaultInjector, FaultyEngine,
     InferenceEngine, PlannedEngine, ServeError, SubmitError, SubmitOptions, SupervisorConfig,
 };
+use qonnx::metrics::serving::BatchCloseReason;
 use qonnx::tensor::Tensor;
+use qonnx::trace::{EventKind, TraceRecorder};
 use qonnx::zoo::{tfc_batch, TfcParams};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -109,6 +111,20 @@ fn overload_sheds_typed_and_depth_stays_bounded() {
         assert_eq!(r.wait().unwrap().len(), OUT);
     }
     assert_eq!(waited.wait().unwrap().len(), OUT);
+
+    // observability contract: every executed batch lands in the
+    // batch-size histogram and in exactly one close-reason counter
+    let m = b.metrics();
+    let batches = m.batches();
+    assert!(batches > 0, "the stalled engine still executed batches");
+    assert_eq!(m.batch_size().count(), batches, "one histogram sample per batch");
+    assert!(m.batch_size().sum_us() >= batches, "batches hold >= 1 request each");
+    let by_reason: u64 = BatchCloseReason::ALL.iter().map(|r| m.batch_closes(*r)).sum();
+    assert_eq!(by_reason, batches, "close reasons partition the batch count");
+    // and the per-model exposition carries the stable kebab-case label
+    let text = m.render_text_for(Some("TFC-w2a2"));
+    assert!(text.contains("qonnx_batch_size_count{model=\"tfc-w2a2\"}"));
+    assert!(text.contains("qonnx_batches_closed_total{model=\"tfc-w2a2\",reason=\"full\"}"));
 }
 
 #[test]
@@ -152,6 +168,62 @@ fn shard_restarts_after_panic_and_serves_identically() {
         let (input, got) = h.join().unwrap();
         let want = direct.infer_batch(&Tensor::new(vec![1, IN], input)).unwrap();
         assert_eq!(got, want.as_f32().unwrap(), "post-restart output must be byte-identical");
+    }
+}
+
+#[test]
+fn trace_spans_stay_balanced_under_shard_panics() {
+    let template = tfc_engine();
+    let inj = FaultInjector::new();
+    let rec = Arc::new(TraceRecorder::new(8192));
+    let cfg = BatcherConfig {
+        supervisor: fast_supervisor(),
+        trace: Some(rec.clone()),
+        ..Default::default()
+    };
+    let b = Batcher::start_sharded(faulty_factory(&template, &inj), cfg, 1).unwrap();
+
+    // healthy traffic, a panic mid-batch, a restart, healthy traffic again
+    assert_eq!(b.infer(vec![0.1; IN]).unwrap().len(), OUT);
+    inj.arm(FaultAction::Panic);
+    let err = b.submit(vec![0.2; IN]).unwrap().wait().unwrap_err();
+    assert!(matches!(err, ServeError::ShardPanicked { .. }), "got {err:?}");
+    assert!(
+        wait_until(Duration::from_secs(5), || {
+            let h = b.health();
+            h.live == 1 && h.restarts >= 1
+        }),
+        "shard must restart, got {:?}",
+        b.health()
+    );
+    assert_eq!(b.infer(vec![0.3; IN]).unwrap().len(), OUT);
+    b.shutdown();
+
+    let tracks = rec.drain();
+    assert!(!tracks.is_empty(), "worker threads must have registered trace tracks");
+    let mut saw = std::collections::BTreeSet::new();
+    for t in &tracks {
+        assert_eq!(t.dropped, 0, "an 8192-event ring must not drop under this load");
+        // SpanEnd comes from a Drop guard, so even the batch a panic
+        // unwound through must close its spans on that worker's track
+        let mut depth = 0i64;
+        for e in &t.events {
+            match e.kind {
+                EventKind::SpanBegin => depth += 1,
+                EventKind::SpanEnd => {
+                    depth -= 1;
+                    assert!(depth >= 0, "SpanEnd before Begin on {:?}", t.thread_name);
+                }
+                _ => {}
+            }
+            if let Some(prefix) = e.name.split(':').next() {
+                saw.insert(prefix.to_string());
+            }
+        }
+        assert_eq!(depth, 0, "unbalanced spans on {:?} despite the panic", t.thread_name);
+    }
+    for want in ["admit", "queued", "batch", "execute", "shard-panic", "shard-restart"] {
+        assert!(saw.contains(want), "lifecycle event '{want}' missing from {saw:?}");
     }
 }
 
