@@ -1,9 +1,9 @@
 # Repo-level tooling. `make check` is the CI gate: build, tests, format,
 # and lints over the rust crate.
 
-.PHONY: check build test test-faults verify-zoo fmt clippy doc bench bench-build examples-build miri
+.PHONY: check build test test-faults verify-zoo artifact-zoo fmt clippy doc bench bench-build examples-build miri
 
-check: build test test-faults verify-zoo fmt clippy doc bench-build examples-build
+check: build test test-faults verify-zoo artifact-zoo fmt clippy doc bench-build examples-build
 
 build:
 	cd rust && cargo build --release
@@ -26,6 +26,22 @@ test-faults:
 # too; this target gives CI a separately-visible gate.
 verify-zoo:
 	cd rust && cargo test -q --release --test verify_zoo
+
+# Compiled-plan artifact roundtrip over the model zoo: every model is
+# compiled to a sectioned .qpln artifact, loaded back zero-copy, and
+# must answer byte-identically (float + streamlined, batch-1/batch-8);
+# corruption modes must fail typed; a re-signed schedule tamper must
+# trip the static verifier. Also exercises the CLI end to end:
+# compile --zoo all, verify --artifact, and a serve --artifact run
+# through the batcher. Part of `test` too; separately-visible CI gate.
+artifact-zoo:
+	cd rust && cargo test -q --release --test artifact_roundtrip
+	cd rust && cargo run --release -q -- compile --zoo all --out-dir /tmp/qonnx-qpln
+	cd rust && for m in /tmp/qonnx-qpln/*.qpln; do \
+		cargo run --release -q -- verify --artifact $$m || exit 1; done
+	cd rust && cargo run --release -q -- serve \
+		--artifact /tmp/qonnx-qpln/TFC-w2a2.qpln \
+		--requests 64 --clients 4 --shards 2
 
 # Concurrency/UB analysis under miri (needs `rustup +nightly component
 # add miri`): the unsafe surface — arena slot recycling, the SIMD

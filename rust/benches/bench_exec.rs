@@ -817,6 +817,84 @@ fn main() -> anyhow::Result<()> {
     }
     json9.write(concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR9.json"));
 
+    section("compiled-plan artifacts: cold start vs full compile (PR-10, TFC/CNV, b1/b8)");
+    // The PR-10 tentpole measurement: everything the compile step
+    // produces is persisted once to a sectioned `.qpln` artifact, and a
+    // cold start deserializes the frozen schedule + borrows the packed
+    // weight panels zero-copy from the file buffer — no streamlining, no
+    // re-packing, no verification. The floor: loading must be >= 5x
+    // faster than the full compile path, with byte-identical outputs.
+    let mut json10 = BenchJson::default();
+    {
+        for model in ["TFC-w2a2", "CNV-w2a2"] {
+            let mut g = qonnx::zoo::build(model, 1, 32)?;
+            transforms::cleanup(&mut g)?;
+            let key = if model.starts_with("TFC") { "tfc" } else { "cnv" };
+            let path = std::env::temp_dir()
+                .join(format!("qonnx_bench10_{}_{key}.qpln", std::process::id()));
+            let mut compiled = PlannedEngine::compile_to_artifact(&g, &path)?;
+            let bytes = std::fs::metadata(&path)?.len();
+
+            // correctness before speed: cold-start engine byte-identical
+            // to the in-process-compiled engine at b1 and b8
+            let mut cold = PlannedEngine::from_artifact(&path)?;
+            let in_dim = compiled.input_dim();
+            for batch in [1usize, 8] {
+                let x = Tensor::new(
+                    vec![batch, in_dim],
+                    (0..batch * in_dim).map(|i| (i % 239) as f32 / 239.0).collect(),
+                );
+                let yc = compiled.infer_batch(&x)?;
+                let ya = cold.infer_batch(&x)?;
+                assert_eq!(yc, ya, "{model} b{batch}: artifact outputs diverged");
+            }
+            // and the zero-copy contract holds: no panel was re-packed
+            let zc = qonnx::plan::artifact::read_artifact(&path)
+                .map_err(anyhow::Error::new)?
+                .zero_copy_report();
+            assert_eq!(zc.owned_panels, 0, "{model}: re-packed panels: {zc:?}");
+
+            let iters = if model.starts_with("TFC") { 30 } else { 10 };
+            let st_c = bench(
+                &format!("full compile (streamline+pack) {model}"),
+                2,
+                iters,
+                || PlannedEngine::new_auto(&g).unwrap(),
+            );
+            println!("{}", st_c.report());
+            let st_l = bench(
+                &format!("artifact cold start (zero-copy) {model}"),
+                2,
+                iters,
+                || PlannedEngine::from_artifact(&path).unwrap(),
+            );
+            println!("{}", st_l.report());
+            let speedup = st_c.mean.as_secs_f64() / st_l.mean.as_secs_f64();
+            println!(
+                "  -> {model}: cold start {speedup:.1}x faster than full compile \
+                 ({:.2} ms vs {:.2} ms; artifact {bytes} B, {} panels / {} B mapped)",
+                st_l.mean.as_secs_f64() * 1e3,
+                st_c.mean.as_secs_f64() * 1e3,
+                zc.mapped_panels,
+                zc.mapped_bytes,
+            );
+            json10.record(&format!("{key}_full_compile_ms"), st_c.mean.as_secs_f64() * 1e3);
+            json10.record(&format!("{key}_artifact_load_ms"), st_l.mean.as_secs_f64() * 1e3);
+            json10.record(&format!("{key}_load_vs_compile_speedup"), speedup);
+            json10.record(&format!("{key}_artifact_bytes"), bytes as f64);
+            json10.record(&format!("{key}_mapped_panel_bytes"), zc.mapped_bytes as f64);
+            // the acceptance floor: artifact load >= 5x faster than the
+            // full compile path it replaces
+            assert!(
+                speedup >= 5.0,
+                "{model}: artifact load below the 5x floor vs full compile: {speedup:.2}x"
+            );
+            std::fs::remove_file(&path).ok();
+        }
+        json10.record("load_vs_compile_floor", 5.0);
+    }
+    json10.write(concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR10.json"));
+
     json.write(concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR7.json"));
     Ok(())
 }

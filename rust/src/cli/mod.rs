@@ -65,6 +65,35 @@ Inspection & execution:
                              'exec' event per step per run.
   zoo <name> <out>           materialize a model-zoo entry (e.g. CNV-w2a2)
 
+Compiled-plan artifacts (.qpln):
+  compile <model> [--out <file.qpln>]
+  compile --zoo <name|all> [--out <file>] [--out-dir <dir>]
+                             compile to a sectioned binary artifact: the
+                             frozen schedule, kernel descriptors, fused
+                             epilogues, threshold rows, and the prepacked
+                             weight panels (incl. SIMD tiles) stored
+                             64-byte aligned for zero-copy loading. Tier
+                             selection matches serving: streamlined
+                             integer plan when the model lowers cleanly,
+                             float plan otherwise. '--zoo all' writes
+                             <name>.qpln per zoo entry into --out-dir
+                             (default '.'). Every section carries a CRC32;
+                             the header records the packing ISA.
+  verify --artifact <path>   run the static plan verifier on the plan
+                             deserialized from a .qpln artifact, re-proved
+                             against the model graph embedded in it —
+                             catches artifacts whose schedule was
+                             corrupted in ways the checksums cannot see
+                             (e.g. a valid re-signed file with swapped
+                             steps)
+  serve --artifact <path.qpln>
+                             instant cold start: serve straight from the
+                             artifact — no graph parse, no streamlining,
+                             no weight re-packing; weight panels are
+                             borrowed zero-copy from one shared mapping
+                             across all shards (a non-.qpln --artifact
+                             value still names a PJRT artifact stem)
+
 Paper experiments:
   table1                     regenerate Table I (format capability matrix)
   table3 [--fast]            regenerate Table III (zoo metrics + accuracy)
@@ -156,6 +185,7 @@ pub fn run(args: Vec<String>) -> Result<()> {
             Ok(())
         }
         "verify" => verify_cmd(rest),
+        "compile" => compile_cmd(rest),
         "streamline" => streamline_cmd(rest),
         "stats" => stats_cmd(rest),
         "exec" => exec_cmd(rest),
@@ -226,6 +256,23 @@ fn transform_cmd(cmd: &str, rest: &[String]) -> Result<()> {
 /// when the model lowers cleanly. Exits nonzero on any error-severity
 /// diagnostic.
 fn verify_cmd(rest: &[String]) -> Result<()> {
+    if let Some(path) = parse_flag(rest, "--artifact") {
+        // verify the DESERIALIZED plan against the graph embedded in the
+        // artifact: checksums catch bit rot, but a structurally valid
+        // artifact can still carry an illegal schedule — the static
+        // verifier re-proves slot lifetimes, dtype flow, accumulator
+        // bounds, and schedule legality on what will actually serve
+        let loaded = crate::plan::artifact::read_artifact(std::path::Path::new(&path))
+            .with_context(|| format!("loading artifact {path}"))?;
+        let graph = loaded.graph()?;
+        println!("— artifact plan ({path}) —");
+        let report = crate::verify::verify_plan(&loaded.plan, &graph);
+        print!("{}", report.render());
+        if report.has_errors() {
+            bail!("plan verification failed");
+        }
+        return Ok(());
+    }
     let g = if let Some(name) = parse_flag(rest, "--zoo") {
         let mut g = zoo::build(&name, 1, 32)?;
         transforms::cleanup(&mut g)?;
@@ -253,6 +300,56 @@ fn verify_cmd(rest: &[String]) -> Result<()> {
     if failed {
         bail!("plan verification failed");
     }
+    Ok(())
+}
+
+/// `compile <model|--zoo name|--zoo all>`: compile to `.qpln` artifacts
+/// for instant cold start (see [`crate::plan::artifact`]).
+fn compile_cmd(rest: &[String]) -> Result<()> {
+    let out = parse_flag(rest, "--out").map(PathBuf::from);
+    if let Some(name) = parse_flag(rest, "--zoo") {
+        if name == "all" {
+            let dir = parse_flag(rest, "--out-dir").map(PathBuf::from).unwrap_or_else(|| ".".into());
+            std::fs::create_dir_all(&dir)
+                .with_context(|| format!("creating output dir {}", dir.display()))?;
+            for n in zoo::ZOO_NAMES {
+                compile_zoo_entry(n, &dir.join(format!("{n}.qpln")))?;
+            }
+            return Ok(());
+        }
+        let path = out.unwrap_or_else(|| PathBuf::from(format!("{name}.qpln")));
+        return compile_zoo_entry(&name, &path);
+    }
+    let input = rest
+        .first()
+        .context("usage: compile <model> [--out <file.qpln>] | compile --zoo <name|all>")?;
+    let mut g = load_model(input)?;
+    transforms::cleanup(&mut g)?;
+    let path = out.unwrap_or_else(|| PathBuf::from(input).with_extension("qpln"));
+    compile_graph_to(&g, &path)
+}
+
+/// Build a zoo entry exactly like serving does (resolution 32, cleaned)
+/// so `serve --artifact <name>.qpln` is bit-identical to `serve --zoo`.
+fn compile_zoo_entry(name: &str, path: &std::path::Path) -> Result<()> {
+    let mut g = zoo::build(name, 1, 32)?;
+    transforms::cleanup(&mut g)?;
+    compile_graph_to(&g, path)
+}
+
+fn compile_graph_to(g: &crate::ir::ModelGraph, path: &std::path::Path) -> Result<()> {
+    let engine = coordinator::PlannedEngine::compile_to_artifact(g, path)?;
+    let plan = engine.plan_handle();
+    let bytes = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
+    println!(
+        "wrote {} ({bytes} bytes): {} plan, {} steps, {} packed + {} quantized kernels, isa {}",
+        path.display(),
+        if engine.streamlined() { "streamlined integer" } else { "float" },
+        plan.step_count(),
+        plan.packed_count(),
+        plan.quant_kernel_count(),
+        crate::tensor::simd::active_isa(),
+    );
     Ok(())
 }
 
@@ -606,11 +703,17 @@ fn serve_cmd(rest: &[String]) -> Result<()> {
     let zoo_name = parse_flag(rest, "--zoo");
     let trace_path = parse_flag(rest, "--trace");
     let artifact_requested = has_flag(rest, "--artifact");
-    let have_artifact = stem.with_extension("hlo.txt").exists();
+    // a `.qpln` value is a compiled-plan artifact (instant cold start);
+    // anything else keeps the original meaning of a PJRT artifact stem
+    let plan_artifact = artifact_requested && stem.extension().is_some_and(|e| e == "qpln");
+    let have_artifact = !plan_artifact && stem.with_extension("hlo.txt").exists();
     if artifact_requested && zoo_name.is_some() {
         bail!("--artifact and --zoo are mutually exclusive (pick one engine)");
     }
-    if artifact_requested && !have_artifact {
+    if plan_artifact && !stem.exists() {
+        bail!("compiled-plan artifact {stem:?} not found (build one with `qonnx compile`)");
+    }
+    if artifact_requested && !plan_artifact && !have_artifact {
         bail!("artifact {stem:?} not found (missing {:?})", stem.with_extension("hlo.txt"));
     }
     if shards == 0 {
@@ -656,7 +759,7 @@ fn serve_cmd(rest: &[String]) -> Result<()> {
 
     // stable per-model metrics label, resolved before the engine branch
     // below consumes the flag values
-    let model_name = if zoo_name.is_none() && have_artifact {
+    let model_name = if plan_artifact || (zoo_name.is_none() && have_artifact) {
         stem.file_stem()
             .map(|s| s.to_string_lossy().into_owned())
             .unwrap_or_else(|| "artifact".into())
@@ -664,7 +767,32 @@ fn serve_cmd(rest: &[String]) -> Result<()> {
         zoo_name.clone().unwrap_or_else(|| "TFC-w2a2".to_string())
     };
 
-    let batcher = if zoo_name.is_none() && have_artifact {
+    let batcher = if plan_artifact {
+        // instant cold start: the artifact is loaded ONCE; every shard
+        // serves an Arc-shared view of the deserialized plan, weight
+        // panels borrowed zero-copy from the single shared mapping
+        let start = std::time::Instant::now();
+        let template = coordinator::PlannedEngine::from_artifact(&stem)?;
+        println!(
+            "(loaded compiled-plan artifact {stem:?} in {:.1}ms — no re-pack, no re-streamline)",
+            start.elapsed().as_secs_f64() * 1e3
+        );
+        if template.streamlined() {
+            println!("(artifact serves the integer-domain quantized plan)");
+        }
+        if shards > 1 {
+            println!("({shards} batcher shards sharing one loaded artifact)");
+        }
+        let inj = fault.clone();
+        coordinator::Batcher::start_sharded(
+            move || {
+                let engine = Box::new(template.share()) as Box<dyn coordinator::InferenceEngine>;
+                Ok(wrap_faulty(engine, &inj))
+            },
+            cfg,
+            shards,
+        )?
+    } else if zoo_name.is_none() && have_artifact {
         // PJRT executables are thread-affine: each shard loads its own
         let inj = fault.clone();
         coordinator::Batcher::start_sharded(

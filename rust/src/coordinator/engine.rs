@@ -11,6 +11,7 @@
 
 use crate::exec;
 use crate::ir::ModelGraph;
+use crate::plan::artifact::{self, AdapterMeta, EngineMeta, LoadedArtifact};
 use crate::plan::{ExecutionPlan, RunConfig, ScratchArena, ShapeCheck};
 use crate::runtime::{ArtifactMeta, CompiledModel, PjrtRuntime};
 use crate::tensor::Tensor;
@@ -205,6 +206,83 @@ impl PlannedEngine {
     /// (quantized kernel tier) rather than the float plan.
     pub fn streamlined(&self) -> bool {
         self.streamlined
+    }
+
+    fn engine_meta(&self) -> EngineMeta {
+        EngineMeta {
+            model_name: self.model_name.clone(),
+            input_name: self.input_name.clone(),
+            output_name: self.output_name.clone(),
+            in_dim: self.in_dim,
+            out_dim: self.out_dim,
+            adapter: match self.adapter {
+                EdgeAdapter::Dense => AdapterMeta::Dense,
+                EdgeAdapter::Nchw { c, h, w } => AdapterMeta::Nchw { c, h, w },
+            },
+            streamlined: self.streamlined,
+        }
+    }
+
+    /// Persist this engine's compiled plan (schedule, kernels, prepacked
+    /// weights) plus its serving metadata as a `.qpln` artifact. `graph`
+    /// must be the graph the engine was actually built from — the
+    /// streamlined form when [`PlannedEngine::streamlined`] — so the
+    /// embedded GRAPH section matches the plan for `verify --artifact`;
+    /// [`PlannedEngine::compile_to_artifact`] handles that pairing.
+    pub fn save_artifact(&self, graph: &ModelGraph, path: &Path) -> Result<()> {
+        artifact::write_artifact(&self.plan, graph, Some(&self.engine_meta()), path)
+    }
+
+    /// Compile `graph` exactly like [`PlannedEngine::new_auto`]
+    /// (streamlined integer plan when the model lowers cleanly, float
+    /// plan otherwise) and persist the result as an artifact at `path`.
+    /// Returns the live engine, so one compile serves both immediate
+    /// requests and future instant cold starts.
+    pub fn compile_to_artifact(graph: &ModelGraph, path: &Path) -> Result<PlannedEngine> {
+        match crate::streamline::try_streamline(graph) {
+            Ok(att) if att.report.ok => {
+                let e = PlannedEngine::build(&att.graph, true)?;
+                e.save_artifact(&att.graph, path)?;
+                Ok(e)
+            }
+            _ => {
+                let e = PlannedEngine::build(graph, false)?;
+                e.save_artifact(graph, path)?;
+                Ok(e)
+            }
+        }
+    }
+
+    /// Instant cold start: reconstruct a serving engine straight from a
+    /// `.qpln` artifact. No graph parse, no streamlining, no packing, no
+    /// plan verification happens here — weight panels are borrowed
+    /// zero-copy from the loaded buffer (see [`crate::plan::artifact`]).
+    pub fn from_artifact(path: &Path) -> Result<PlannedEngine> {
+        let loaded = artifact::read_artifact(path)
+            .with_context(|| format!("loading artifact {}", path.display()))?;
+        PlannedEngine::from_loaded(loaded)
+    }
+
+    /// Build the engine from an already-loaded artifact (the sharded
+    /// serving path loads once and [`PlannedEngine::share`]s).
+    pub fn from_loaded(loaded: LoadedArtifact) -> Result<PlannedEngine> {
+        let meta = loaded
+            .engine
+            .context("artifact has no engine section (was it written via save_artifact?)")?;
+        Ok(PlannedEngine {
+            plan: Arc::new(loaded.plan),
+            model_name: meta.model_name,
+            input_name: meta.input_name,
+            output_name: meta.output_name,
+            in_dim: meta.in_dim,
+            out_dim: meta.out_dim,
+            adapter: match meta.adapter {
+                AdapterMeta::Dense => EdgeAdapter::Dense,
+                AdapterMeta::Nchw { c, h, w } => EdgeAdapter::Nchw { c, h, w },
+            },
+            streamlined: meta.streamlined,
+            scratch: ScratchArena::new(),
+        })
     }
 
     /// A second engine over the SAME compiled plan: clones the `Arc` (no
@@ -537,6 +615,41 @@ mod tests {
         let mut shared = auto.share();
         assert!(shared.streamlined());
         assert_eq!(shared.infer_batch(&x).unwrap(), ya);
+    }
+
+    #[test]
+    fn engine_artifact_roundtrip_is_byte_identical_and_zero_copy() {
+        let mut g = crate::zoo::build("TFC-w1a2", 1, 32).unwrap();
+        crate::transforms::cleanup(&mut g).unwrap();
+        let path = std::env::temp_dir()
+            .join(format!("qonnx_engine_rt_{}.qpln", std::process::id()));
+        let mut compiled = PlannedEngine::compile_to_artifact(&g, &path).unwrap();
+        let mut cold = PlannedEngine::from_artifact(&path).unwrap();
+        assert_eq!(cold.streamlined(), compiled.streamlined());
+        assert_eq!(cold.input_dim(), compiled.input_dim());
+        assert_eq!(cold.output_dim(), compiled.output_dim());
+        // loading performed zero weight-panel re-packing: every matmul/gemm
+        // panel is borrowed straight from the artifact buffer
+        let loaded = artifact::read_artifact(&path).unwrap();
+        let zc = loaded.zero_copy_report();
+        assert_eq!(zc.owned_panels, 0, "{zc:?}");
+        assert!(zc.mapped_panels >= 1, "{zc:?}");
+        for n in [1usize, 8] {
+            let x = Tensor::new(
+                vec![n, 784],
+                (0..n * 784).map(|i| (i % 17) as f32 / 17.0).collect(),
+            );
+            let yc = compiled.infer_batch(&x).unwrap();
+            let ya = cold.infer_batch(&x).unwrap();
+            assert_eq!(yc, ya, "batch {n} must be byte-identical");
+        }
+        // sharded serving: one loaded artifact, many engines, one plan
+        let mut s1 = cold.share();
+        let mut s2 = cold.share();
+        assert!(Arc::ptr_eq(&s1.plan_handle(), &s2.plan_handle()));
+        let x = Tensor::new(vec![2, 784], vec![0.25; 2 * 784]);
+        assert_eq!(s1.infer_batch(&x).unwrap(), s2.infer_batch(&x).unwrap());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

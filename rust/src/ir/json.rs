@@ -423,7 +423,7 @@ fn vi_from_json(j: &Json) -> Result<ValueInfo> {
     Ok(ValueInfo { name, shape, dtype })
 }
 
-fn node_to_json(n: &Node) -> Json {
+pub(crate) fn node_to_json(n: &Node) -> Json {
     Json::obj(vec![
         ("name", Json::Str(n.name.clone())),
         ("op_type", Json::Str(n.op_type.clone())),
@@ -437,7 +437,7 @@ fn node_to_json(n: &Node) -> Json {
     ])
 }
 
-fn node_from_json(j: &Json) -> Result<Node> {
+pub(crate) fn node_from_json(j: &Json) -> Result<Node> {
     let mut n = Node::new(j.req("op_type")?.as_str()?, &[], &[]);
     n.name = j.req("name")?.as_str()?.to_string();
     n.domain = j.req("domain")?.as_str()?.to_string();

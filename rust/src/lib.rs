@@ -205,6 +205,51 @@
 //! single-fault plan mutators that self-test the verifier: every
 //! mutation class must trip its expected diagnostic code.
 //!
+//! ## Artifact format (instant cold start)
+//!
+//! Everything the compile step produces — the frozen schedule, kernel
+//! descriptors, fused epilogues, threshold rows, and the prepacked
+//! weight panels — can be persisted as a sectioned `.qpln` binary
+//! ([`plan::artifact`]) and reconstructed without re-running any of it:
+//!
+//! ```text
+//!   ┌──────────────────────────────────────────────────────────────┐
+//!   │ header (64 B): magic "QPLNART\0" · format version · endian   │
+//!   │ tag · section count · packing-ISA name                       │
+//!   ├──────────────────────────────────────────────────────────────┤
+//!   │ section table: one 32-B entry per section                    │
+//!   │ {id, offset, len, CRC32}                                     │
+//!   ├── 64-byte aligned ───────────────────────────────────────────┤
+//!   │ META  — JSON plan skeleton: schedule, kernel descriptors,    │
+//!   │         epilogues, slot/dtype tables, engine metadata        │
+//!   │ GRAPH — the source ModelGraph (qonnx.json/v1), so the static │
+//!   │         verifier can re-prove the plan (`verify --artifact`) │
+//!   │ F32 / I8 / I32 / I64 — raw blobs: PackedB/PackedBi8 panels   │
+//!   │         (incl. interleaved SIMD tiles), threshold rows,      │
+//!   │         folded constants; every entry 64-byte aligned        │
+//!   └──────────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! **Version/checksum contract**: magic, endian tag, and format version
+//! gate the file before anything is parsed; every section carries a
+//! CRC32 checked before decode; the header records the SIMD ISA the
+//! weight tiles were packed for and loading refuses a mismatch. Every
+//! corruption mode is a typed [`plan::artifact::ArtifactError`] — never
+//! UB, never a panic.
+//!
+//! **Zero-copy rule**: the loader reads the file once into a 64-byte-
+//! aligned buffer and weight panels *borrow* their ranges from it
+//! through [`tensor::WeightStore`] — kernels are agnostic to
+//! owned-vs-mapped panels, and loading performs **zero** re-packing,
+//! re-streamlining, or re-verification on the hot path (pointer
+//! provenance asserted by `zero_copy_report()` in the tests). One
+//! loaded artifact serves every shard:
+//! [`coordinator::PlannedEngine::from_artifact`] /
+//! `share()`, `qonnx compile` / `serve --artifact model.qpln` on the
+//! CLI. Cold constants (folded outputs not preloaded into slots) are
+//! flagged in the META section as groundwork for spilling them out of
+//! resident memory.
+//!
 //! ## Observability
 //!
 //! [`trace`] is the runtime's always-compiled observability layer.

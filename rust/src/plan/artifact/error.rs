@@ -1,0 +1,85 @@
+//! Typed failure modes for `.qpln` artifact loading.
+//!
+//! Every way a file can be unusable maps to a distinct variant — a
+//! corrupt or mismatched artifact is always a clean typed error, never
+//! UB and never a panic. The variants mirror the loader's validation
+//! order: I/O, size, magic, endianness, version, section geometry,
+//! checksums, ISA compatibility, and finally logical decode.
+
+use std::fmt;
+
+/// Why an artifact could not be loaded.
+#[derive(Debug)]
+pub enum ArtifactError {
+    /// Underlying filesystem error (open/read/stat).
+    Io(std::io::Error),
+    /// File shorter than a declared extent (header, table, or section).
+    Truncated { needed: u64, have: u64 },
+    /// The first 8 bytes are not the `QPLNART\0` magic.
+    BadMagic,
+    /// The endian tag read back byte-swapped: the artifact was produced
+    /// on a machine with different byte order (sections are stored
+    /// native-order for zero-copy loading, so it cannot be used here).
+    EndianMismatch,
+    /// Format version not supported by this build.
+    VersionSkew { found: u32, supported: u32 },
+    /// A section payload does not start on the 64-byte alignment the
+    /// zero-copy weight contract requires.
+    MisalignedSection { id: u32, offset: u64 },
+    /// A section's CRC32 does not match its payload (bit rot, torn
+    /// write, or deliberate tampering).
+    ChecksumMismatch { id: u32 },
+    /// The artifact's interleaved weight tiles were packed for a
+    /// different SIMD ISA than the one active in this process.
+    IsaMismatch { packed: String, running: String },
+    /// Sections verified but their contents do not decode to a plan
+    /// (unknown section, bad JSON, out-of-range reference, …).
+    Malformed(String),
+}
+
+impl fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ArtifactError::Io(e) => write!(f, "artifact I/O error: {e}"),
+            ArtifactError::Truncated { needed, have } => {
+                write!(f, "artifact truncated: needs {needed} bytes, file has {have}")
+            }
+            ArtifactError::BadMagic => write!(f, "not a compiled-plan artifact (bad magic)"),
+            ArtifactError::EndianMismatch => {
+                write!(f, "artifact was written on a machine with different endianness")
+            }
+            ArtifactError::VersionSkew { found, supported } => {
+                write!(f, "artifact format version {found} unsupported (this build reads v{supported})")
+            }
+            ArtifactError::MisalignedSection { id, offset } => {
+                write!(f, "section {id} starts at offset {offset}, not 64-byte aligned")
+            }
+            ArtifactError::ChecksumMismatch { id } => {
+                write!(f, "section {id} failed its CRC32 check (corrupt artifact)")
+            }
+            ArtifactError::IsaMismatch { packed, running } => {
+                write!(
+                    f,
+                    "artifact weight tiles were packed for ISA '{packed}' but this process \
+                     runs '{running}' — recompile the artifact on this machine"
+                )
+            }
+            ArtifactError::Malformed(msg) => write!(f, "malformed artifact: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ArtifactError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ArtifactError {
+    fn from(e: std::io::Error) -> ArtifactError {
+        ArtifactError::Io(e)
+    }
+}

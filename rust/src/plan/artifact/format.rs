@@ -1,0 +1,285 @@
+//! On-disk layout constants and primitives for `.qpln` compiled-plan
+//! artifacts: the fixed 64-byte header, the section table, and the CRC32
+//! used to checksum every section payload.
+//!
+//! All multi-byte fields are written in the producer's **native** byte
+//! order; the header's endian tag (`0x01020304`) lets a consumer on a
+//! foreign-endian machine detect the mismatch before interpreting any
+//! other field (see [`crate::plan::artifact`] module docs for the
+//! rationale: weight sections are reinterpret-cast in place, so a
+//! byte-order conversion pass would defeat zero-copy loading).
+
+use super::error::ArtifactError;
+
+/// File magic: identifies a QONNX compiled-plan artifact.
+pub const MAGIC: [u8; 8] = *b"QPLNART\0";
+/// Current format version. Readers accept exactly this version.
+pub const VERSION: u32 = 1;
+/// Endianness sentinel: reads back as `0x01020304` only on a machine
+/// with the producer's byte order.
+pub const ENDIAN_TAG: u32 = 0x0102_0304;
+/// Fixed header size in bytes (the section table follows immediately).
+pub const HEADER_LEN: usize = 64;
+/// Every section payload starts on this alignment — the contract that
+/// lets weight panels be borrowed straight out of the loaded buffer
+/// (see [`crate::tensor::WEIGHT_ALIGN`]).
+pub const SECTION_ALIGN: usize = 64;
+/// Size of one section-table entry in bytes.
+pub const ENTRY_LEN: usize = 32;
+/// Max ISA-name length storable in the header (NUL padded).
+pub const ISA_NAME_LEN: usize = 12;
+
+/// Section ids. Unknown ids are rejected (no forward-compat skipping in
+/// v1: a plan is only executable when every part is understood).
+pub const SEC_META: u32 = 1;
+/// Streamlined/compiled source graph (`qonnx.json/v1`) for `verify`.
+pub const SEC_GRAPH: u32 = 2;
+/// Raw `f32` blob: packed float panels, bias vectors, float tensors.
+pub const SEC_F32: u32 = 3;
+/// Raw `i8` blob: quantized weight panels and interleaved SIMD tiles.
+pub const SEC_I8: u32 = 4;
+/// Raw `i32` blob: integer bias vectors, threshold rows, i32 tensors.
+pub const SEC_I32: u32 = 5;
+/// Raw `i64` blob: shape/index tensors.
+pub const SEC_I64: u32 = 6;
+
+/// One parsed section-table entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SectionEntry {
+    pub id: u32,
+    pub offset: u64,
+    pub len: u64,
+    pub crc: u32,
+}
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            bit += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+/// CRC-32 (IEEE 802.3 polynomial, the zlib/`crc32` convention).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ u32::from(b)) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Bytes of padding needed to advance `off` to [`SECTION_ALIGN`].
+pub fn pad_to_align(off: usize) -> usize {
+    (SECTION_ALIGN - off % SECTION_ALIGN) % SECTION_ALIGN
+}
+
+/// Encode the fixed header. `isa` is the pack-time SIMD ISA name
+/// ([`crate::tensor::simd::Isa::name`]); loading on a machine whose
+/// active ISA differs is refused, because interleaved `i8` weight tiles
+/// are laid out ISA-specifically.
+pub fn encode_header(section_count: u32, isa: &str) -> Vec<u8> {
+    assert!(isa.len() <= ISA_NAME_LEN, "ISA name '{isa}' exceeds header field");
+    let mut h = vec![0u8; HEADER_LEN];
+    h[0..8].copy_from_slice(&MAGIC);
+    h[8..12].copy_from_slice(&VERSION.to_ne_bytes());
+    h[12..16].copy_from_slice(&ENDIAN_TAG.to_ne_bytes());
+    h[16..20].copy_from_slice(&section_count.to_ne_bytes());
+    h[20..20 + isa.len()].copy_from_slice(isa.as_bytes());
+    h
+}
+
+fn u32_at(b: &[u8], off: usize) -> u32 {
+    u32::from_ne_bytes(b[off..off + 4].try_into().unwrap())
+}
+
+fn u64_at(b: &[u8], off: usize) -> u64 {
+    u64::from_ne_bytes(b[off..off + 8].try_into().unwrap())
+}
+
+/// Parsed and validated header.
+#[derive(Debug, Clone)]
+pub struct Header {
+    pub section_count: u32,
+    pub isa: String,
+}
+
+/// Decode and validate the fixed header: magic, then endianness, then
+/// version — strictly in that order, so a foreign-endian or truncated
+/// file is reported as such rather than as garbage field values.
+pub fn decode_header(file: &[u8]) -> Result<Header, ArtifactError> {
+    if file.len() < HEADER_LEN {
+        return Err(ArtifactError::Truncated { needed: HEADER_LEN as u64, have: file.len() as u64 });
+    }
+    if file[0..8] != MAGIC {
+        return Err(ArtifactError::BadMagic);
+    }
+    if u32_at(file, 12) != ENDIAN_TAG {
+        return Err(ArtifactError::EndianMismatch);
+    }
+    let version = u32_at(file, 8);
+    if version != VERSION {
+        return Err(ArtifactError::VersionSkew { found: version, supported: VERSION });
+    }
+    let section_count = u32_at(file, 16);
+    // arbitrary sanity bound: v1 writes at most 6 sections
+    if section_count == 0 || section_count > 64 {
+        return Err(ArtifactError::Malformed(format!("implausible section count {section_count}")));
+    }
+    let isa_raw = &file[20..20 + ISA_NAME_LEN];
+    let end = isa_raw.iter().position(|&b| b == 0).unwrap_or(ISA_NAME_LEN);
+    let isa = std::str::from_utf8(&isa_raw[..end])
+        .map_err(|_| ArtifactError::Malformed("non-UTF-8 ISA name in header".into()))?
+        .to_string();
+    Ok(Header { section_count, isa })
+}
+
+/// Encode one section-table entry.
+pub fn encode_entry(e: &SectionEntry) -> [u8; ENTRY_LEN] {
+    let mut b = [0u8; ENTRY_LEN];
+    b[0..4].copy_from_slice(&e.id.to_ne_bytes());
+    b[8..16].copy_from_slice(&e.offset.to_ne_bytes());
+    b[16..24].copy_from_slice(&e.len.to_ne_bytes());
+    b[24..28].copy_from_slice(&e.crc.to_ne_bytes());
+    b
+}
+
+/// Decode the section table and validate every entry against the file:
+/// 64-byte payload alignment, in-bounds extent, and payload checksum.
+pub fn decode_table(file: &[u8], h: &Header) -> Result<Vec<SectionEntry>, ArtifactError> {
+    let count = h.section_count as usize;
+    let table_end = HEADER_LEN + count * ENTRY_LEN;
+    if file.len() < table_end {
+        return Err(ArtifactError::Truncated { needed: table_end as u64, have: file.len() as u64 });
+    }
+    let mut entries = Vec::with_capacity(count);
+    for i in 0..count {
+        let off = HEADER_LEN + i * ENTRY_LEN;
+        let e = SectionEntry {
+            id: u32_at(file, off),
+            offset: u64_at(file, off + 8),
+            len: u64_at(file, off + 16),
+            crc: u32_at(file, off + 24),
+        };
+        if e.offset % SECTION_ALIGN as u64 != 0 {
+            return Err(ArtifactError::MisalignedSection { id: e.id, offset: e.offset });
+        }
+        let end = e
+            .offset
+            .checked_add(e.len)
+            .ok_or_else(|| ArtifactError::Malformed(format!("section {} extent overflows", e.id)))?;
+        if end > file.len() as u64 {
+            return Err(ArtifactError::Truncated { needed: end, have: file.len() as u64 });
+        }
+        if entries.iter().any(|p: &SectionEntry| p.id == e.id) {
+            return Err(ArtifactError::Malformed(format!("duplicate section id {}", e.id)));
+        }
+        let payload = &file[e.offset as usize..end as usize];
+        if crc32(payload) != e.crc {
+            return Err(ArtifactError::ChecksumMismatch { id: e.id });
+        }
+        entries.push(e);
+    }
+    Ok(entries)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // standard check values for the IEEE polynomial
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn header_roundtrip() {
+        let enc = encode_header(3, "avx2");
+        assert_eq!(enc.len(), HEADER_LEN);
+        let h = decode_header(&enc).unwrap();
+        assert_eq!(h.section_count, 3);
+        assert_eq!(h.isa, "avx2");
+    }
+
+    #[test]
+    fn header_rejects_bad_magic_endian_version_in_order() {
+        let good = encode_header(1, "scalar");
+
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(matches!(decode_header(&bad), Err(ArtifactError::BadMagic)));
+
+        // endianness is checked before version, so a byte-swapped file
+        // reports EndianMismatch even though its version field is garbage
+        let mut swapped = good.clone();
+        swapped[8..12].reverse();
+        swapped[12..16].reverse();
+        assert!(matches!(decode_header(&swapped), Err(ArtifactError::EndianMismatch)));
+
+        let mut skew = good.clone();
+        skew[8..12].copy_from_slice(&99u32.to_ne_bytes());
+        assert!(matches!(
+            decode_header(&skew),
+            Err(ArtifactError::VersionSkew { found: 99, supported: VERSION })
+        ));
+
+        assert!(matches!(
+            decode_header(&good[..32]),
+            Err(ArtifactError::Truncated { .. })
+        ));
+    }
+
+    #[test]
+    fn entry_roundtrip_and_table_validation() {
+        let payload = b"0123456789abcdef";
+        let mut file = encode_header(1, "scalar");
+        let entry = SectionEntry {
+            id: SEC_META,
+            offset: (HEADER_LEN + ENTRY_LEN + pad_to_align(HEADER_LEN + ENTRY_LEN)) as u64,
+            len: payload.len() as u64,
+            crc: crc32(payload),
+        };
+        file.extend_from_slice(&encode_entry(&entry));
+        file.resize(entry.offset as usize, 0);
+        file.extend_from_slice(payload);
+
+        let h = decode_header(&file).unwrap();
+        let table = decode_table(&file, &h).unwrap();
+        assert_eq!(table, vec![entry]);
+
+        // flipped payload byte -> checksum mismatch for that section
+        let mut flipped = file.clone();
+        let idx = entry.offset as usize + 3;
+        flipped[idx] ^= 0x40;
+        assert!(matches!(
+            decode_table(&flipped, &h),
+            Err(ArtifactError::ChecksumMismatch { id: SEC_META })
+        ));
+
+        // misaligned offset is rejected before any payload access
+        let mut misaligned = file.clone();
+        misaligned[HEADER_LEN + 8..HEADER_LEN + 16]
+            .copy_from_slice(&(entry.offset + 1).to_ne_bytes());
+        assert!(matches!(
+            decode_table(&misaligned, &h),
+            Err(ArtifactError::MisalignedSection { id: SEC_META, .. })
+        ));
+
+        // truncated payload -> Truncated with the needed extent
+        let cut = &file[..file.len() - 4];
+        assert!(matches!(decode_table(cut, &h), Err(ArtifactError::Truncated { .. })));
+    }
+}

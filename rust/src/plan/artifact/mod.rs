@@ -1,0 +1,415 @@
+//! Compiled-plan artifacts: a sectioned binary format (`.qpln`) that
+//! persists a fully compiled [`ExecutionPlan`] — schedule, kernel
+//! descriptors, fused-epilogue metadata, threshold rows, and the raw
+//! prepacked weight panels — so serving cold-starts by **loading**
+//! instead of re-compiling.
+//!
+//! # On-disk layout
+//!
+//! ```text
+//! offset 0    +--------------------------------------------------+
+//!             | header (64 B): magic "QPLNART\0", version,       |
+//!             |   endian tag 0x01020304, section count,          |
+//!             |   pack-time SIMD ISA name                        |
+//! offset 64   +--------------------------------------------------+
+//!             | section table: 32 B per entry                    |
+//!             |   { id, offset, len, crc32 }                     |
+//!             +---- 64-byte aligned ----------------------------+
+//!             | 1 META   plan + engine JSON (blob refs inside)   |
+//!             +---- 64-byte aligned ----------------------------+
+//!             | 2 GRAPH  compiled source graph (qonnx.json/v1)   |
+//!             +---- 64-byte aligned ----------------------------+
+//!             | 3 F32    raw f32 blob (panels 64-B aligned)      |
+//!             | 4 I8     raw i8 blob (panels + SIMD tiles)       |
+//!             | 5 I32    raw i32 blob                            |
+//!             | 6 I64    raw i64 blob                            |
+//!             +--------------------------------------------------+
+//! ```
+//!
+//! # Version / checksum contract
+//!
+//! * The reader accepts exactly [`format::VERSION`]; skew is a typed
+//!   refusal ([`ArtifactError::VersionSkew`]), never a best-effort parse.
+//! * Every section payload carries a CRC32; a single flipped bit
+//!   anywhere is caught before any decode
+//!   ([`ArtifactError::ChecksumMismatch`]).
+//! * Multi-byte fields and blobs are native-endian; the header's endian
+//!   tag turns a foreign-endian file into
+//!   [`ArtifactError::EndianMismatch`] up front.
+//!
+//! # Zero-copy rules
+//!
+//! Loading reads the file once into a single 64-byte-aligned buffer and
+//! reconstructs the plan with every `PackedB` / `PackedBi8` panel (and
+//! interleaved SIMD tile block) **borrowed** from that buffer through
+//! [`crate::tensor::WeightStore::Mapped`] — zero weight-panel re-packing
+//! on the load path, verified by [`LoadedArtifact::zero_copy_report`]
+//! (pointer provenance against the backing buffer). Two invariants make
+//! the borrow sound and fast:
+//!
+//! 1. every blob entry referenced as a panel starts 64-byte aligned in
+//!    the file (writer pads; reader re-checks before mapping), and
+//! 2. interleaved `i8` tiles are ISA-specific, so the header records the
+//!    pack-time ISA and loading under a different active ISA is refused
+//!    ([`ArtifactError::IsaMismatch`]) rather than silently re-packed.
+//!
+//! Small data — bias vectors, threshold rows, preload tensors, the
+//! embedded graph — is copied out of the buffer at load; only the weight
+//! panels dominate cold-start cost and footprint. Folded constants that
+//! no preload references are marked `cold` in META (groundwork for
+//! spilling them out of the resident image).
+
+mod error;
+pub mod format;
+mod read;
+mod write;
+
+pub use error::ArtifactError;
+pub use read::{read_artifact, read_section};
+pub use write::write_artifact;
+
+use crate::ir::json::Json;
+use crate::ir::ModelGraph;
+use crate::plan::kernel::CompiledKernel;
+use crate::plan::ExecutionPlan;
+use crate::tensor::{AlignedBytes, PackedB, PackedBi8, PanelElem, WeightStore};
+use anyhow::{bail, Context, Result};
+use format::{
+    crc32, encode_entry, encode_header, pad_to_align, SectionEntry, ENTRY_LEN, HEADER_LEN,
+    SEC_META,
+};
+use std::path::Path;
+use std::sync::Arc;
+
+/// How an engine's flat request rows bind to the plan input — the
+/// persisted form of the engine's edge adapter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdapterMeta {
+    /// `[n, in_dim]` graphs: the batch binds directly.
+    Dense,
+    /// NCHW graphs: `[n, in_dim]` rows re-viewed as `[n, c, h, w]`.
+    Nchw { c: usize, h: usize, w: usize },
+}
+
+/// Serving metadata persisted alongside the plan so
+/// [`crate::coordinator::PlannedEngine`] reconstructs without the graph.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EngineMeta {
+    pub model_name: String,
+    pub input_name: String,
+    pub output_name: String,
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub adapter: AdapterMeta,
+    pub streamlined: bool,
+}
+
+/// Where a loaded plan's weight panels actually live — the zero-copy
+/// assertion surface (see module docs).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ZeroCopyReport {
+    /// Panels whose storage is borrowed from the artifact buffer
+    /// (pointer-provenance checked, not just flag-checked).
+    pub mapped_panels: usize,
+    /// Panels that own a heap copy — must be 0 after a load.
+    pub owned_panels: usize,
+    /// Total bytes served straight from the mapped buffer.
+    pub mapped_bytes: usize,
+}
+
+/// A validated, decoded artifact: the reconstructed plan plus the
+/// serving metadata and embedded source graph that rode along.
+///
+/// The plan's mapped weight panels hold `Arc` handles on the backing
+/// buffer, so the mapping outlives this struct for as long as the plan
+/// (or any clone of its kernels) does.
+pub struct LoadedArtifact {
+    pub plan: ExecutionPlan<'static>,
+    pub engine: Option<EngineMeta>,
+    /// The compiled source graph (`qonnx.json/v1` text) for
+    /// `verify --artifact`.
+    pub graph_json: String,
+    pub(crate) buf: Arc<AlignedBytes>,
+}
+
+fn tally<T: PanelElem>(buf: &AlignedBytes, s: &WeightStore<T>, rep: &mut ZeroCopyReport) {
+    let slice = s.as_slice();
+    let mapped =
+        s.is_mapped() && !slice.is_empty() && buf.contains_ptr(slice.as_ptr().cast::<u8>());
+    if mapped {
+        rep.mapped_panels += 1;
+        rep.mapped_bytes += std::mem::size_of_val(slice);
+    } else {
+        rep.owned_panels += 1;
+    }
+}
+
+fn tally_b(buf: &AlignedBytes, pb: &PackedB, rep: &mut ZeroCopyReport) {
+    tally(buf, pb.store(), rep);
+}
+
+fn tally_bi8(buf: &AlignedBytes, pb: &PackedBi8, rep: &mut ZeroCopyReport) {
+    tally(buf, pb.store(), rep);
+    if let Some((_, _, tiles)) = pb.simd_parts() {
+        tally(buf, tiles, rep);
+    }
+}
+
+impl LoadedArtifact {
+    /// Parse the embedded source graph.
+    pub fn graph(&self) -> Result<ModelGraph> {
+        crate::ir::json::model_from_json(&self.graph_json).context("embedded GRAPH section")
+    }
+
+    /// Audit every weight panel's storage by pointer provenance: a panel
+    /// counts as mapped only if its data pointer lies inside the
+    /// artifact buffer. `owned_panels == 0` is the "zero re-packing"
+    /// guarantee the loader makes.
+    pub fn zero_copy_report(&self) -> ZeroCopyReport {
+        let mut rep = ZeroCopyReport::default();
+        for step in &self.plan.steps {
+            match &step.kernel {
+                CompiledKernel::Conv(c) => {
+                    for pb in c.weights() {
+                        tally_b(&self.buf, pb, &mut rep);
+                    }
+                }
+                CompiledKernel::Gemm(g) => tally_b(&self.buf, g.packed_b(), &mut rep),
+                CompiledKernel::MatMul(m) => tally_b(&self.buf, m.packed_b(), &mut rep),
+                CompiledKernel::QConv(c) => {
+                    for pb in c.weights() {
+                        tally_bi8(&self.buf, pb, &mut rep);
+                    }
+                }
+                CompiledKernel::QGemm(g) => tally_bi8(&self.buf, g.packed_b(), &mut rep),
+                CompiledKernel::QMatMul(m) => tally_bi8(&self.buf, m.packed_b(), &mut rep),
+                CompiledKernel::Op(_)
+                | CompiledKernel::Threshold(_)
+                | CompiledKernel::Reshape(_) => {}
+            }
+        }
+        rep
+    }
+}
+
+/// Replace the payload of section `id` in an existing artifact,
+/// recomputing the layout and checksums (so the file stays *structurally*
+/// valid — this is the corruption/mutation test hook, not a public
+/// editing API).
+pub fn rewrite_section(path: &Path, id: u32, payload: &[u8]) -> Result<(), ArtifactError> {
+    let bytes = std::fs::read(path)?;
+    let header = format::decode_header(&bytes)?;
+    let entries = format::decode_table(&bytes, &header)?;
+    if !entries.iter().any(|e| e.id == id) {
+        return Err(ArtifactError::Malformed(format!("missing section id {id}")));
+    }
+    let mut out = encode_header(entries.len() as u32, &header.isa);
+    out.resize(HEADER_LEN + entries.len() * ENTRY_LEN, 0);
+    let mut new_entries = Vec::with_capacity(entries.len());
+    for e in &entries {
+        let p: &[u8] = if e.id == id {
+            payload
+        } else {
+            &bytes[e.offset as usize..(e.offset + e.len) as usize]
+        };
+        out.resize(out.len() + pad_to_align(out.len()), 0);
+        let offset = out.len() as u64;
+        out.extend_from_slice(p);
+        new_entries.push(SectionEntry { id: e.id, offset, len: p.len() as u64, crc: crc32(p) });
+    }
+    for (i, e) in new_entries.iter().enumerate() {
+        let at = HEADER_LEN + i * ENTRY_LEN;
+        out[at..at + ENTRY_LEN].copy_from_slice(&encode_entry(e));
+    }
+    std::fs::write(path, &out)?;
+    Ok(())
+}
+
+/// Corrupt the frozen schedule inside an artifact while keeping the file
+/// structurally valid (checksums recomputed): swaps the first and last
+/// schedule steps, which inverts at least one producer/consumer
+/// dependency in any multi-step plan. The static verifier must trip on
+/// the decoded plan — this is the `verify --artifact` mutation self-test.
+pub fn mutate_schedule(path: &Path) -> Result<()> {
+    let meta = read_section(path, SEC_META)?;
+    let text = String::from_utf8(meta).context("META section is not UTF-8")?;
+    let mut root = Json::parse(&text)?;
+    let Json::Obj(root_map) = &mut root else { bail!("META root is not an object") };
+    let Some(Json::Obj(plan)) = root_map.get_mut("plan") else { bail!("META lacks a plan object") };
+    let Some(Json::Arr(steps)) = plan.get_mut("steps") else { bail!("plan lacks a steps array") };
+    if steps.len() < 2 {
+        bail!("plan has {} step(s); schedule mutation needs at least 2", steps.len());
+    }
+    let last = steps.len() - 1;
+    steps.swap(0, last);
+    rewrite_section(path, SEC_META, root.to_string().as_bytes())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::GraphBuilder;
+    use crate::plan::{RunConfig, ScratchArena, ShapeCheck};
+    use crate::tensor::Tensor;
+    use std::path::PathBuf;
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("qonnx_artifact_{}_{tag}.qpln", std::process::id()))
+    }
+
+    /// conv -> reshape -> matmul -> relu: exercises PackedConv,
+    /// BatchReshape, PackedMatMul and a fused epilogue in one graph.
+    fn tiny_graph() -> crate::ir::ModelGraph {
+        let mut b = GraphBuilder::new("tiny");
+        b.input("x", vec![1, 2, 4, 4]);
+        b.initializer(
+            "w",
+            Tensor::new(vec![3, 2, 3, 3], (0..54).map(|v| (v % 7) as f32 * 0.25 - 0.75).collect()),
+        );
+        b.node(
+            "Conv",
+            &["x", "w"],
+            &["c"],
+            &[
+                ("kernel_shape", crate::ir::AttrValue::Ints(vec![3, 3])),
+                ("pads", crate::ir::AttrValue::Ints(vec![1, 1, 1, 1])),
+            ],
+        );
+        b.initializer("target", Tensor::new_i64(vec![2], vec![1, 48]));
+        b.node("Reshape", &["c", "target"], &["flat"], &[]);
+        b.initializer(
+            "fcw",
+            Tensor::new(vec![48, 5], (0..240).map(|v| (v % 9) as f32 * 0.1 - 0.4).collect()),
+        );
+        b.node("MatMul", &["flat", "fcw"], &["mm"], &[]);
+        b.node("Relu", &["mm"], &["y"], &[]);
+        b.output("y", vec![1, 5]);
+        b.finish().unwrap()
+    }
+
+    fn run_plan(plan: &ExecutionPlan<'_>, x: &Tensor) -> Tensor {
+        let cfg = RunConfig { shape_check: ShapeCheck::FreeBatch, record_intermediates: false };
+        let mut scratch = ScratchArena::new();
+        let mut r = plan.run_cfg_scratch(|n| (n == "x").then_some(x), &cfg, &mut scratch).unwrap();
+        r.outputs.remove("y").unwrap()
+    }
+
+    #[test]
+    fn roundtrip_is_byte_identical_and_zero_copy() {
+        let g = tiny_graph();
+        let plan = ExecutionPlan::compile(&g).unwrap();
+        let path = tmp("roundtrip");
+        write_artifact(&plan, &g, None, &path).unwrap();
+
+        let loaded = read_artifact(&path).unwrap();
+        assert_eq!(loaded.plan.summary(), plan.summary(), "schedules must match");
+        let rep = loaded.zero_copy_report();
+        assert_eq!(rep.owned_panels, 0, "loading must not re-pack any panel: {rep:?}");
+        assert!(rep.mapped_panels >= 2, "conv + matmul panels expected: {rep:?}");
+        assert!(rep.mapped_bytes > 0);
+
+        for n in [1usize, 3] {
+            let x = Tensor::new(
+                vec![n, 2, 4, 4],
+                (0..n * 32).map(|i| (i % 13) as f32 / 13.0 - 0.4).collect(),
+            );
+            assert_eq!(run_plan(&loaded.plan, &x), run_plan(&plan, &x), "batch {n}");
+        }
+
+        // embedded graph parses back to the compiled model
+        let g2 = loaded.graph().unwrap();
+        assert_eq!(g2.name, g.name);
+        assert_eq!(g2.nodes.len(), g.nodes.len());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corruption_is_typed_never_ub() {
+        let g = tiny_graph();
+        let plan = ExecutionPlan::compile(&g).unwrap();
+        let path = tmp("corrupt");
+        write_artifact(&plan, &g, None, &path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        let reload = |bytes: &[u8]| -> Result<LoadedArtifact, ArtifactError> {
+            std::fs::write(&path, bytes).unwrap();
+            read_artifact(&path)
+        };
+
+        // truncation at several depths
+        for cut in [4usize, format::HEADER_LEN - 1, good.len() / 2, good.len() - 3] {
+            assert!(
+                matches!(reload(&good[..cut]), Err(ArtifactError::Truncated { .. })),
+                "cut at {cut}"
+            );
+        }
+        // wrong magic
+        let mut bad = good.clone();
+        bad[1] ^= 0xFF;
+        assert!(matches!(reload(&bad), Err(ArtifactError::BadMagic)));
+        // version skew
+        let mut bad = good.clone();
+        bad[8..12].copy_from_slice(&7u32.to_ne_bytes());
+        assert!(matches!(reload(&bad), Err(ArtifactError::VersionSkew { found: 7, .. })));
+        // flipped payload byte -> checksum
+        let mut bad = good.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x01;
+        assert!(matches!(reload(&bad), Err(ArtifactError::ChecksumMismatch { .. })));
+        // misaligned section offset (fix up no checksums: alignment is
+        // checked before the payload is ever touched)
+        let mut bad = good.clone();
+        bad[format::HEADER_LEN + 8..format::HEADER_LEN + 16]
+            .copy_from_slice(&65u64.to_ne_bytes());
+        assert!(matches!(reload(&bad), Err(ArtifactError::MisalignedSection { .. })));
+        // ISA skew
+        let mut bad = good.clone();
+        for (i, b) in b"other\0\0\0\0\0\0\0".iter().enumerate() {
+            bad[20 + i] = *b;
+        }
+        assert!(matches!(reload(&bad), Err(ArtifactError::IsaMismatch { .. })));
+
+        // the pristine bytes still load after all that
+        assert!(reload(&good).is_ok());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn schedule_mutation_keeps_file_valid_but_breaks_plan_verification() {
+        let g = tiny_graph();
+        let plan = ExecutionPlan::compile(&g).unwrap();
+        let path = tmp("mutate");
+        write_artifact(&plan, &g, None, &path).unwrap();
+
+        mutate_schedule(&path).unwrap();
+        // checksums were recomputed: the file loads fine...
+        let loaded = read_artifact(&path).unwrap();
+        // ...but the static verifier rejects the corrupted schedule
+        let report = crate::verify::verify_plan(&loaded.plan, &loaded.graph().unwrap());
+        assert!(report.has_errors(), "verifier must trip on a swapped schedule:\n{}", report.render());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rewrite_section_roundtrips_payloads() {
+        let g = tiny_graph();
+        let plan = ExecutionPlan::compile(&g).unwrap();
+        let path = tmp("rewrite");
+        write_artifact(&plan, &g, None, &path).unwrap();
+
+        let meta = read_section(&path, SEC_META).unwrap();
+        rewrite_section(&path, SEC_META, &meta).unwrap();
+        assert_eq!(read_section(&path, SEC_META).unwrap(), meta);
+        // unchanged payload -> artifact still loads and runs
+        let loaded = read_artifact(&path).unwrap();
+        let x = Tensor::new(vec![1, 2, 4, 4], (0..32).map(|i| i as f32 * 0.1).collect());
+        assert_eq!(run_plan(&loaded.plan, &x), run_plan(&plan, &x));
+
+        assert!(matches!(
+            rewrite_section(&path, 99, b"zz"),
+            Err(ArtifactError::Malformed(_))
+        ));
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,631 @@
+//! Loading a `.qpln` artifact back into a runnable [`ExecutionPlan`].
+//!
+//! The whole file is read once into a single 64-byte-aligned buffer
+//! ([`AlignedBytes`] — the crate's "mapping"), validated outside-in
+//! (magic → endianness → version → section geometry → checksums → ISA),
+//! and only then decoded. Weight panels (`PackedB`/`PackedBi8` and
+//! interleaved SIMD tiles) are **borrowed** from the buffer via
+//! [`WeightStore::mapped`] — no re-pack, no re-streamline, no
+//! re-verification on this path. Small data (bias vectors, threshold
+//! rows, preload tensors) is copied out; only the panels matter for
+//! cold-start cost, and mapping them keeps the hot-path kernels
+//! byte-identical to the compiled-in-process plan.
+
+use super::error::ArtifactError;
+use super::format::{
+    decode_header, decode_table, SectionEntry, SEC_F32, SEC_GRAPH, SEC_I32, SEC_I64, SEC_I8,
+    SEC_META,
+};
+use super::{AdapterMeta, EngineMeta, LoadedArtifact};
+use crate::ir::json::{node_from_json, Json};
+use crate::ir::Node;
+use crate::ops::linalg::ConvParams;
+use crate::ops::quant::RoundingMode;
+use crate::plan::kernel::{
+    BatchReshape, CompiledKernel, Epilogue, GemmBias, PackedConv, PackedGemm, PackedMatMul,
+};
+use crate::plan::qkernel::{QThreshold, QuantConv, QuantGemm, QuantMatMul, ThresholdKernel};
+use crate::plan::{ExecutionPlan, PlanConst, PlanInput, PlanOutput, Preload, Step};
+use crate::tensor::simd::{active_isa, Isa};
+use crate::tensor::{AlignedBytes, DType, PackedB, PackedBi8, Tensor, WeightStore, WEIGHT_ALIGN};
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::borrow::Cow;
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::Path;
+use std::sync::Arc;
+
+/// Read `path` fully into one aligned buffer.
+fn read_aligned(path: &Path) -> Result<AlignedBytes, ArtifactError> {
+    let mut f = std::fs::File::open(path)?;
+    let len = f.metadata()?.len();
+    let len = usize::try_from(len)
+        .map_err(|_| ArtifactError::Malformed(format!("file length {len} exceeds address space")))?;
+    let mut buf = AlignedBytes::zeroed(len);
+    f.read_exact(buf.as_mut_slice())?;
+    Ok(buf)
+}
+
+/// Load and validate a `.qpln` artifact. Every failure mode is a typed
+/// [`ArtifactError`]; a file that passes returns a plan whose weight
+/// panels borrow the artifact buffer directly (zero-copy).
+pub fn read_artifact(path: &Path) -> Result<LoadedArtifact, ArtifactError> {
+    let buf = Arc::new(read_aligned(path)?);
+    load_from(buf)
+}
+
+pub(super) fn load_from(buf: Arc<AlignedBytes>) -> Result<LoadedArtifact, ArtifactError> {
+    let file = buf.as_slice();
+    let header = decode_header(file)?;
+    let entries = decode_table(file, &header)?;
+
+    // ISA gate: interleaved i8 tiles are laid out per-ISA, so a mismatch
+    // is a refusal, not a fallback — re-compiling is the correct fix.
+    let running = active_isa();
+    if header.isa != running.name() {
+        return Err(ArtifactError::IsaMismatch {
+            packed: header.isa.clone(),
+            running: running.name().to_string(),
+        });
+    }
+
+    let known = [SEC_META, SEC_GRAPH, SEC_F32, SEC_I8, SEC_I32, SEC_I64];
+    if let Some(e) = entries.iter().find(|e| !known.contains(&e.id)) {
+        return Err(ArtifactError::Malformed(format!("unknown section id {}", e.id)));
+    }
+    let span = |id: u32| -> Result<(usize, usize), ArtifactError> {
+        entries
+            .iter()
+            .find(|e| e.id == id)
+            .map(|e| (e.offset as usize, e.len as usize))
+            .ok_or_else(|| ArtifactError::Malformed(format!("missing section id {id}")))
+    };
+    let meta_span = span(SEC_META)?;
+    let graph_span = span(SEC_GRAPH)?;
+    let reader = BlobReader {
+        buf: &buf,
+        f32s: span(SEC_F32)?,
+        i8s: span(SEC_I8)?,
+        i32s: span(SEC_I32)?,
+        i64s: span(SEC_I64)?,
+        isa: running,
+    };
+
+    let meta_text = std::str::from_utf8(&file[meta_span.0..meta_span.0 + meta_span.1])
+        .map_err(|_| ArtifactError::Malformed("META section is not UTF-8".into()))?;
+    let graph_json = std::str::from_utf8(&file[graph_span.0..graph_span.0 + graph_span.1])
+        .map_err(|_| ArtifactError::Malformed("GRAPH section is not UTF-8".into()))?
+        .to_string();
+
+    let (plan, engine) = (|| -> Result<_> {
+        let meta = Json::parse(meta_text)?;
+        let plan = decode_plan(meta.req("plan")?, &reader)?;
+        let engine = match meta.req("engine")? {
+            Json::Null => None,
+            ej => Some(decode_engine(ej)?),
+        };
+        Ok((plan, engine))
+    })()
+    .map_err(|e| ArtifactError::Malformed(format!("{e:#}")))?;
+
+    Ok(LoadedArtifact { plan, engine, graph_json, buf })
+}
+
+/// Typed views over the four raw blob sections. `map_*` hands out
+/// zero-copy [`WeightStore::Mapped`] ranges (weight panels); `copy_*`
+/// materializes small vectors.
+struct BlobReader<'a> {
+    buf: &'a Arc<AlignedBytes>,
+    f32s: (usize, usize),
+    i8s: (usize, usize),
+    i32s: (usize, usize),
+    i64s: (usize, usize),
+    isa: Isa,
+}
+
+impl BlobReader<'_> {
+    /// Resolve an element range against a blob span, returning the
+    /// absolute byte offset. All arithmetic is overflow-checked and the
+    /// range must lie inside the section.
+    fn resolve(&self, span: (usize, usize), off: usize, len: usize, size: usize) -> Result<usize> {
+        let byte_off = off.checked_mul(size).ok_or_else(|| anyhow!("blob offset overflows"))?;
+        let byte_len = len.checked_mul(size).ok_or_else(|| anyhow!("blob length overflows"))?;
+        let end = byte_off.checked_add(byte_len).ok_or_else(|| anyhow!("blob extent overflows"))?;
+        ensure!(
+            end <= span.1,
+            "blob range [{off}, +{len}) x{size} exceeds section of {} bytes",
+            span.1
+        );
+        Ok(span.0 + byte_off)
+    }
+
+    fn bytes(&self, span: (usize, usize), off: usize, len: usize, size: usize) -> Result<&[u8]> {
+        let abs = self.resolve(span, off, len, size)?;
+        Ok(&self.buf.as_slice()[abs..abs + len * size])
+    }
+
+    /// Borrow an f32 weight panel straight out of the artifact buffer.
+    fn map_f32(&self, off: usize, len: usize) -> Result<WeightStore<f32>> {
+        let abs = self.resolve(self.f32s, off, len, 4)?;
+        ensure!(abs % WEIGHT_ALIGN == 0, "f32 panel at byte {abs} violates 64-byte alignment");
+        Ok(WeightStore::mapped(self.buf.clone(), abs, len))
+    }
+
+    /// Borrow an i8 weight panel (or SIMD tile block) zero-copy.
+    fn map_i8(&self, off: usize, len: usize) -> Result<WeightStore<i8>> {
+        let abs = self.resolve(self.i8s, off, len, 1)?;
+        ensure!(abs % WEIGHT_ALIGN == 0, "i8 panel at byte {abs} violates 64-byte alignment");
+        Ok(WeightStore::mapped(self.buf.clone(), abs, len))
+    }
+
+    fn copy_f32(&self, off: usize, len: usize) -> Result<Vec<f32>> {
+        let b = self.bytes(self.f32s, off, len, 4)?;
+        Ok(b.chunks_exact(4).map(|c| f32::from_ne_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn copy_i8(&self, off: usize, len: usize) -> Result<Vec<i8>> {
+        let b = self.bytes(self.i8s, off, len, 1)?;
+        Ok(b.iter().map(|&v| v as i8).collect())
+    }
+
+    fn copy_i32(&self, off: usize, len: usize) -> Result<Vec<i32>> {
+        let b = self.bytes(self.i32s, off, len, 4)?;
+        Ok(b.chunks_exact(4).map(|c| i32::from_ne_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn copy_i64(&self, off: usize, len: usize) -> Result<Vec<i64>> {
+        let b = self.bytes(self.i64s, off, len, 8)?;
+        Ok(b.chunks_exact(8).map(|c| i64::from_ne_bytes(c.try_into().unwrap())).collect())
+    }
+}
+
+fn usize_of(j: &Json) -> Result<usize> {
+    let v = j.as_i64()?;
+    usize::try_from(v).map_err(|_| anyhow!("expected non-negative integer, got {v}"))
+}
+
+fn u32_of(j: &Json) -> Result<u32> {
+    let v = j.as_i64()?;
+    u32::try_from(v).map_err(|_| anyhow!("slot id {v} out of range"))
+}
+
+fn f32_of(j: &Json) -> Result<f32> {
+    Ok(j.as_f64()? as f32)
+}
+
+fn blob_ref(j: &Json) -> Result<(usize, usize)> {
+    Ok((usize_of(j.req("off")?)?, usize_of(j.req("len")?)?))
+}
+
+fn dtype_of(j: &Json) -> Result<DType> {
+    let s = j.as_str()?;
+    DType::from_name(s).ok_or_else(|| anyhow!("unknown dtype '{s}'"))
+}
+
+fn tensor_from_ref(j: &Json, r: &BlobReader<'_>) -> Result<Tensor> {
+    let shape: Vec<usize> =
+        j.req("shape")?.as_arr()?.iter().map(usize_of).collect::<Result<_>>()?;
+    let (off, len) = blob_ref(j)?;
+    let numel: usize = shape.iter().product();
+    ensure!(numel == len, "tensor shape {shape:?} wants {numel} elements, ref has {len}");
+    Ok(match dtype_of(j.req("dtype")?)? {
+        DType::F32 => Tensor::new(shape, r.copy_f32(off, len)?),
+        DType::I8 => Tensor::new_i8(shape, r.copy_i8(off, len)?),
+        DType::I32 => Tensor::new_i32(shape, r.copy_i32(off, len)?),
+        DType::I64 => Tensor::new_i64(shape, r.copy_i64(off, len)?),
+    })
+}
+
+fn packed_b_from_json(j: &Json, r: &BlobReader<'_>) -> Result<PackedB> {
+    let (k, n) = (usize_of(j.req("k")?)?, usize_of(j.req("n")?)?);
+    let (off, len) = blob_ref(j)?;
+    ensure!(len == k.checked_mul(n).ok_or_else(|| anyhow!("panel dims overflow"))?,
+        "f32 panel length {len} != k*n ({k}x{n})");
+    Ok(PackedB::from_store(k, n, r.map_f32(off, len)?))
+}
+
+fn packed_bi8_from_json(j: &Json, r: &BlobReader<'_>) -> Result<PackedBi8> {
+    let (k, n) = (usize_of(j.req("k")?)?, usize_of(j.req("n")?)?);
+    let (off, len) = blob_ref(j)?;
+    ensure!(len == k.checked_mul(n).ok_or_else(|| anyhow!("panel dims overflow"))?,
+        "i8 panel length {len} != k*n ({k}x{n})");
+    let dense = matches!(j.req("dense")?, Json::Bool(true));
+    let simd = match j.req("simd")? {
+        Json::Null => None,
+        sj => {
+            let np = usize_of(sj.req("np")?)?;
+            let (toff, tlen) = blob_ref(sj)?;
+            Some((r.isa, np, r.map_i8(toff, tlen)?))
+        }
+    };
+    Ok(PackedBi8::from_parts(k, n, r.map_i8(off, len)?, dense, simd))
+}
+
+fn conv_params_from_json(j: &Json) -> Result<ConvParams> {
+    let v: Vec<usize> = j.as_arr()?.iter().map(usize_of).collect::<Result<_>>()?;
+    ensure!(v.len() == 9, "conv params want 9 entries, got {}", v.len());
+    Ok(ConvParams {
+        kh: v[0],
+        kw: v[1],
+        stride_h: v[2],
+        stride_w: v[3],
+        pads: [v[4], v[5], v[6], v[7]],
+        group: v[8],
+    })
+}
+
+fn epilogue_from_json(j: &Json, r: &BlobReader<'_>) -> Result<Epilogue> {
+    Ok(match j.req("t")?.as_str()? {
+        "relu" => Epilogue::Relu,
+        "quant" => Epilogue::Quant {
+            s: j.req("s")?.as_f64()?,
+            z: j.req("z")?.as_f64()?,
+            qmin: j.req("qmin")?.as_f64()?,
+            qmax: j.req("qmax")?.as_f64()?,
+            mode: RoundingMode::from_str(j.req("mode")?.as_str()?)?,
+        },
+        "bipolar" => Epilogue::Bipolar { s: j.req("s")?.as_f64()? },
+        "batchnorm" => {
+            let take = |key: &str| -> Result<Vec<f32>> {
+                let (off, len) = blob_ref(j.req(key)?)?;
+                r.copy_f32(off, len)
+            };
+            Epilogue::BatchNorm {
+                mean: take("mean")?,
+                denom: take("denom")?,
+                scale: take("scale")?,
+                bias: take("bias")?,
+            }
+        }
+        other => bail!("unknown epilogue kind '{other}'"),
+    })
+}
+
+fn qthreshold_from_json(j: &Json, r: &BlobReader<'_>) -> Result<QThreshold> {
+    let channels = usize_of(j.req("channels")?)?;
+    let steps = usize_of(j.req("steps")?)?;
+    let (off, len) = blob_ref(j.req("rows")?)?;
+    ensure!(
+        len == channels.checked_mul(steps).ok_or_else(|| anyhow!("threshold dims overflow"))?,
+        "threshold rows {len} != channels*steps ({channels}x{steps})"
+    );
+    Ok(QThreshold::from_parts(
+        channels,
+        steps,
+        r.copy_i32(off, len)?,
+        f32_of(j.req("out_scale")?)?,
+        f32_of(j.req("out_bias")?)?,
+    ))
+}
+
+fn opt_qthreshold(j: &Json, r: &BlobReader<'_>) -> Result<Option<QThreshold>> {
+    match j {
+        Json::Null => Ok(None),
+        t => Ok(Some(qthreshold_from_json(t, r)?)),
+    }
+}
+
+fn epilogues_from_json(j: &Json, r: &BlobReader<'_>) -> Result<Vec<Epilogue>> {
+    j.as_arr()?.iter().map(|e| epilogue_from_json(e, r)).collect()
+}
+
+fn kernel_from_json(
+    j: &Json,
+    nodes: &[Node],
+    node_idx: usize,
+    r: &BlobReader<'_>,
+) -> Result<CompiledKernel> {
+    Ok(match j.req("t")?.as_str()? {
+        "op" => {
+            let node = nodes
+                .get(node_idx)
+                .ok_or_else(|| anyhow!("step node index {node_idx} out of range"))?;
+            CompiledKernel::Op(crate::ops::kernel_for(node)?)
+        }
+        "conv" => {
+            let p = conv_params_from_json(j.req("p")?)?;
+            let (m, cg, mg, k) = (
+                usize_of(j.req("m")?)?,
+                usize_of(j.req("cg")?)?,
+                usize_of(j.req("mg")?)?,
+                usize_of(j.req("k")?)?,
+            );
+            let weights = j
+                .req("w")?
+                .as_arr()?
+                .iter()
+                .map(|w| packed_b_from_json(w, r))
+                .collect::<Result<Vec<_>>>()?;
+            ensure!(weights.len() == p.group, "conv has {} panels for {} groups", weights.len(), p.group);
+            let bias = match j.req("bias")? {
+                Json::Null => None,
+                b => {
+                    let (off, len) = blob_ref(b)?;
+                    Some(r.copy_f32(off, len)?)
+                }
+            };
+            let ep = epilogues_from_json(j.req("ep")?, r)?;
+            CompiledKernel::Conv(Arc::new(PackedConv::from_parts(p, m, cg, mg, k, weights, bias, ep)))
+        }
+        "gemm" => {
+            let (k, n) = (usize_of(j.req("k")?)?, usize_of(j.req("n")?)?);
+            let bias = match j.req("bias")?.req("t")?.as_str()? {
+                "none" => GemmBias::None,
+                "runtime" => GemmBias::Runtime,
+                "folded" => GemmBias::Folded(tensor_from_ref(j.req("bias")?.req("v")?, r)?),
+                other => bail!("unknown gemm bias kind '{other}'"),
+            };
+            CompiledKernel::Gemm(Arc::new(PackedGemm::from_parts(
+                k,
+                n,
+                packed_b_from_json(j.req("b")?, r)?,
+                f32_of(j.req("alpha")?)?,
+                f32_of(j.req("beta")?)?,
+                matches!(j.req("trans_a")?, Json::Bool(true)),
+                bias,
+                epilogues_from_json(j.req("ep")?, r)?,
+            )))
+        }
+        "matmul" => {
+            let (k, n) = (usize_of(j.req("k")?)?, usize_of(j.req("n")?)?);
+            CompiledKernel::MatMul(Arc::new(PackedMatMul::from_parts(
+                k,
+                n,
+                packed_b_from_json(j.req("b")?, r)?,
+                epilogues_from_json(j.req("ep")?, r)?,
+            )))
+        }
+        "qconv" => {
+            let p = conv_params_from_json(j.req("p")?)?;
+            let (m, cg, mg, k) = (
+                usize_of(j.req("m")?)?,
+                usize_of(j.req("cg")?)?,
+                usize_of(j.req("mg")?)?,
+                usize_of(j.req("k")?)?,
+            );
+            let weights = j
+                .req("w")?
+                .as_arr()?
+                .iter()
+                .map(|w| packed_bi8_from_json(w, r))
+                .collect::<Result<Vec<_>>>()?;
+            ensure!(weights.len() == p.group, "qconv has {} panels for {} groups", weights.len(), p.group);
+            CompiledKernel::QConv(Arc::new(QuantConv::from_parts(
+                p,
+                m,
+                cg,
+                mg,
+                k,
+                weights,
+                (j.req("lo")?.as_f64()?, j.req("hi")?.as_f64()?),
+                opt_qthreshold(j.req("th")?, r)?,
+                dtype_of(j.req("out")?)?,
+            )))
+        }
+        "qgemm" => {
+            let (k, n) = (usize_of(j.req("k")?)?, usize_of(j.req("n")?)?);
+            let bias = match j.req("bias")? {
+                Json::Null => None,
+                b => {
+                    let (off, len) = blob_ref(b)?;
+                    Some(r.copy_i32(off, len)?)
+                }
+            };
+            CompiledKernel::QGemm(Arc::new(QuantGemm::from_parts(
+                k,
+                n,
+                packed_bi8_from_json(j.req("b")?, r)?,
+                bias,
+                (j.req("lo")?.as_f64()?, j.req("hi")?.as_f64()?),
+                opt_qthreshold(j.req("th")?, r)?,
+                dtype_of(j.req("out")?)?,
+            )))
+        }
+        "qmatmul" => {
+            let (k, n) = (usize_of(j.req("k")?)?, usize_of(j.req("n")?)?);
+            CompiledKernel::QMatMul(Arc::new(QuantMatMul::from_parts(
+                k,
+                n,
+                packed_bi8_from_json(j.req("b")?, r)?,
+                (j.req("lo")?.as_f64()?, j.req("hi")?.as_f64()?),
+                opt_qthreshold(j.req("th")?, r)?,
+                dtype_of(j.req("out")?)?,
+            )))
+        }
+        "threshold" => {
+            let channels = usize_of(j.req("channels")?)?;
+            let steps = usize_of(j.req("steps")?)?;
+            let (off, len) = blob_ref(j.req("rows")?)?;
+            ensure!(
+                len == channels.checked_mul(steps).ok_or_else(|| anyhow!("threshold dims overflow"))?,
+                "threshold rows {len} != channels*steps ({channels}x{steps})"
+            );
+            CompiledKernel::Threshold(Arc::new(ThresholdKernel::from_parts(
+                channels,
+                steps,
+                r.copy_f32(off, len)?,
+                f32_of(j.req("out_scale")?)?,
+                f32_of(j.req("out_bias")?)?,
+                dtype_of(j.req("out")?)?,
+            )))
+        }
+        "reshape" => {
+            let orig: Vec<i64> =
+                j.req("orig")?.as_arr()?.iter().map(|v| v.as_i64()).collect::<Result<_>>()?;
+            ensure!(!orig.is_empty(), "reshape target must not be empty");
+            CompiledKernel::Reshape(Arc::new(BatchReshape::new(
+                &orig,
+                matches!(j.req("try_orig_first")?, Json::Bool(true)),
+            )))
+        }
+        other => bail!("unknown kernel kind '{other}'"),
+    })
+}
+
+fn decode_plan(p: &Json, r: &BlobReader<'_>) -> Result<ExecutionPlan<'static>> {
+    let nodes: Vec<Node> =
+        p.req("nodes")?.as_arr()?.iter().map(node_from_json).collect::<Result<_>>()?;
+
+    // folded constants first: preloads Arc-share them by name, matching
+    // what the compiler produced
+    let mut folded_outputs = Vec::new();
+    let mut folded_map: BTreeMap<String, Arc<Tensor>> = BTreeMap::new();
+    for fj in p.req("folded")?.as_arr()? {
+        let name = fj.req("name")?.as_str()?.to_string();
+        let t = Arc::new(tensor_from_ref(fj.req("v")?, r)?);
+        folded_map.insert(name.clone(), t.clone());
+        folded_outputs.push((name, t));
+    }
+
+    let mut preloads = Vec::new();
+    for pj in p.req("preloads")?.as_arr()? {
+        let name = pj.req("name")?.as_str()?.to_string();
+        let slot = u32_of(pj.req("slot")?)?;
+        let value = match folded_map.get(&name) {
+            Some(shared) => shared.clone(),
+            None => Arc::new(tensor_from_ref(pj.req("v")?, r)?),
+        };
+        preloads.push(Preload { name, slot, value: PlanConst::Shared(value) });
+    }
+
+    let mut steps = Vec::new();
+    for sj in p.req("steps")?.as_arr()? {
+        let node_idx = usize_of(sj.req("node")?)?;
+        let out_node_idx = usize_of(sj.req("out_node")?)?;
+        ensure!(node_idx < nodes.len(), "step node index {node_idx} out of range");
+        ensure!(out_node_idx < nodes.len(), "step out-node index {out_node_idx} out of range");
+        steps.push(Step {
+            node_idx,
+            out_node_idx,
+            kernel: kernel_from_json(sj.req("kernel")?, &nodes, node_idx, r)
+                .with_context(|| format!("step for node {node_idx}"))?,
+            inputs: sj.req("in")?.as_arr()?.iter().map(u32_of).collect::<Result<_>>()?,
+            outputs: sj
+                .req("out")?
+                .as_arr()?
+                .iter()
+                .map(|o| match o {
+                    Json::Null => Ok(None),
+                    v => u32_of(v).map(Some),
+                })
+                .collect::<Result<_>>()?,
+            release: sj.req("release")?.as_arr()?.iter().map(u32_of).collect::<Result<_>>()?,
+        });
+    }
+
+    let mut inputs = Vec::new();
+    for ij in p.req("inputs")?.as_arr()? {
+        inputs.push(PlanInput {
+            name: ij.req("name")?.as_str()?.to_string(),
+            shape: match ij.req("shape")? {
+                Json::Null => None,
+                s => Some(s.as_arr()?.iter().map(usize_of).collect::<Result<_>>()?),
+            },
+            slot: match ij.req("slot")? {
+                Json::Null => None,
+                v => Some(u32_of(v)?),
+            },
+        });
+    }
+
+    let mut outputs = Vec::new();
+    for oj in p.req("outputs")?.as_arr()? {
+        outputs.push(PlanOutput {
+            name: oj.req("name")?.as_str()?.to_string(),
+            slot: u32_of(oj.req("slot")?)?,
+        });
+    }
+
+    let slot_count = usize_of(p.req("slot_count")?)?;
+    let slot_dtypes: Vec<DType> =
+        p.req("slot_dtypes")?.as_arr()?.iter().map(dtype_of).collect::<Result<_>>()?;
+    ensure!(
+        slot_dtypes.len() == slot_count,
+        "slot dtype table has {} entries for {slot_count} slots",
+        slot_dtypes.len()
+    );
+    let slot_numel: Vec<Option<usize>> = p
+        .req("slot_numel")?
+        .as_arr()?
+        .iter()
+        .map(|v| match v {
+            Json::Null => Ok(None),
+            n => usize_of(n).map(Some),
+        })
+        .collect::<Result<_>>()?;
+    ensure!(
+        slot_numel.len() == slot_count,
+        "slot numel table has {} entries for {slot_count} slots",
+        slot_numel.len()
+    );
+
+    let mut alias_outputs = Vec::new();
+    for aj in p.req("aliases")?.as_arr()? {
+        let pair = aj.as_arr()?;
+        ensure!(pair.len() == 2, "alias entry must be a [from, to] pair");
+        alias_outputs.push((pair[0].as_str()?.to_string(), pair[1].as_str()?.to_string()));
+    }
+
+    let c = p.req("counters")?;
+    Ok(ExecutionPlan {
+        name: p.req("name")?.as_str()?.to_string(),
+        nodes: Cow::Owned(nodes),
+        steps,
+        preloads,
+        inputs,
+        outputs,
+        slot_count,
+        slot_dtypes,
+        slot_numel,
+        folded_outputs,
+        alias_outputs,
+        node_count: usize_of(c.req("node")?)?,
+        folded_count: usize_of(c.req("folded")?)?,
+        elided_count: usize_of(c.req("elided")?)?,
+        packed_count: usize_of(c.req("packed")?)?,
+        quant_count: usize_of(c.req("quant")?)?,
+        fused_count: usize_of(c.req("fused")?)?,
+        resident_int_count: usize_of(c.req("resident_int")?)?,
+        batch_symbolic_count: usize_of(c.req("batch_symbolic")?)?,
+        batch_blockers: p
+            .req("batch_blockers")?
+            .as_arr()?
+            .iter()
+            .map(|b| b.as_str().map(String::from))
+            .collect::<Result<_>>()?,
+    })
+}
+
+fn decode_engine(j: &Json) -> Result<EngineMeta> {
+    let aj = j.req("adapter")?;
+    let adapter = match aj.req("t")?.as_str()? {
+        "dense" => AdapterMeta::Dense,
+        "nchw" => AdapterMeta::Nchw {
+            c: usize_of(aj.req("c")?)?,
+            h: usize_of(aj.req("h")?)?,
+            w: usize_of(aj.req("w")?)?,
+        },
+        other => bail!("unknown adapter kind '{other}'"),
+    };
+    Ok(EngineMeta {
+        model_name: j.req("model")?.as_str()?.to_string(),
+        input_name: j.req("input")?.as_str()?.to_string(),
+        output_name: j.req("output")?.as_str()?.to_string(),
+        in_dim: usize_of(j.req("in_dim")?)?,
+        out_dim: usize_of(j.req("out_dim")?)?,
+        adapter,
+        streamlined: matches!(j.req("streamlined")?, Json::Bool(true)),
+    })
+}
+
+/// The raw bytes of one section (test and tooling hook).
+pub fn read_section(path: &Path, id: u32) -> Result<Vec<u8>, ArtifactError> {
+    let bytes = std::fs::read(path)?;
+    let header = decode_header(&bytes)?;
+    let entries = decode_table(&bytes, &header)?;
+    let e: &SectionEntry = entries
+        .iter()
+        .find(|e| e.id == id)
+        .ok_or_else(|| ArtifactError::Malformed(format!("missing section id {id}")))?;
+    Ok(bytes[e.offset as usize..(e.offset + e.len) as usize].to_vec())
+}

@@ -1,0 +1,545 @@
+//! Serializing a compiled [`ExecutionPlan`] into a `.qpln` artifact.
+//!
+//! The writer walks the plan once, appending every weight panel and
+//! constant tensor to a per-dtype raw blob (64-byte-aligned entries, so
+//! the loader can borrow panels in place) and building a META JSON
+//! document whose kernel descriptors reference blob ranges by element
+//! offset. The source graph rides along as a section of its own so
+//! `qonnx verify --artifact` can re-prove the plan against it.
+//!
+//! Float scalars (alpha/beta, quant params, proven ranges) are stored as
+//! JSON numbers: the crate's JSON printer emits the shortest
+//! round-tripping representation, so the reread value is bit-identical.
+//! Vectors and tensors never go through text — they live in the typed
+//! blobs verbatim.
+
+use super::format::{
+    crc32, encode_entry, encode_header, pad_to_align, SectionEntry, ENTRY_LEN, HEADER_LEN,
+    SEC_F32, SEC_GRAPH, SEC_I32, SEC_I64, SEC_I8, SEC_META,
+};
+use super::{AdapterMeta, EngineMeta};
+use crate::ir::json::{model_to_json, node_to_json, Json};
+use crate::ir::ModelGraph;
+use crate::ops::quant::RoundingMode;
+use crate::plan::kernel::{BatchReshape, CompiledKernel, Epilogue, GemmBias, PackedConv};
+use crate::plan::qkernel::QThreshold;
+use crate::plan::ExecutionPlan;
+use crate::tensor::simd::active_isa;
+use crate::tensor::{DType, PackedB, PackedBi8, Tensor, WEIGHT_ALIGN};
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// Per-dtype raw blob accumulators. Every entry starts 64-byte aligned
+/// *within its blob*; blob sections themselves start 64-byte aligned in
+/// the file, so entry starts are 64-byte aligned absolutely.
+#[derive(Default)]
+struct Blobs {
+    f32v: Vec<f32>,
+    i8v: Vec<i8>,
+    i32v: Vec<i32>,
+    i64v: Vec<i64>,
+}
+
+macro_rules! blob_push {
+    ($name:ident, $field:ident, $ty:ty) => {
+        /// Append `data`, padding so its byte offset within the blob is
+        /// a multiple of [`WEIGHT_ALIGN`]; returns `(off, len)` in
+        /// elements.
+        fn $name(&mut self, data: &[$ty]) -> (usize, usize) {
+            let size = std::mem::size_of::<$ty>();
+            let elems_per_align = WEIGHT_ALIGN / size;
+            let pad = (elems_per_align - self.$field.len() % elems_per_align) % elems_per_align;
+            self.$field.resize(self.$field.len() + pad, 0 as $ty);
+            let off = self.$field.len();
+            self.$field.extend_from_slice(data);
+            (off, data.len())
+        }
+    };
+}
+
+impl Blobs {
+    blob_push!(push_f32, f32v, f32);
+    blob_push!(push_i8, i8v, i8);
+    blob_push!(push_i32, i32v, i32);
+    blob_push!(push_i64, i64v, i64);
+}
+
+fn num(v: usize) -> Json {
+    Json::Num(v as f64)
+}
+
+fn blob_ref(off: usize, len: usize) -> Json {
+    Json::obj(vec![("off", num(off)), ("len", num(len))])
+}
+
+fn tensor_ref(t: &Tensor, blobs: &mut Blobs) -> Result<Json> {
+    let (dt, (off, len)) = match t.dtype() {
+        DType::F32 => ("f32", blobs.push_f32(t.as_f32()?)),
+        DType::I8 => ("i8", blobs.push_i8(t.as_i8()?)),
+        DType::I32 => ("i32", blobs.push_i32(t.as_i32()?)),
+        DType::I64 => ("i64", blobs.push_i64(t.as_i64()?)),
+    };
+    Ok(Json::obj(vec![
+        ("dtype", Json::Str(dt.into())),
+        ("shape", Json::Arr(t.shape().iter().map(|&d| num(d)).collect())),
+        ("off", num(off)),
+        ("len", num(len)),
+    ]))
+}
+
+fn packed_b_json(pb: &PackedB, blobs: &mut Blobs) -> Json {
+    let (off, len) = blobs.push_f32(pb.store().as_slice());
+    Json::obj(vec![
+        ("k", num(pb.k())),
+        ("n", num(pb.n())),
+        ("off", num(off)),
+        ("len", num(len)),
+    ])
+}
+
+/// Serialize an i8 panel, including its interleaved SIMD tiles when
+/// present. The tiles are laid out for exactly one ISA; `file_isa` is
+/// what the header will record, and a panel packed for any *other* ISA
+/// is a writer bug we refuse to persist.
+fn packed_bi8_json(pb: &PackedBi8, file_isa: &str, blobs: &mut Blobs) -> Result<Json> {
+    let (off, len) = blobs.push_i8(pb.store().as_slice());
+    let simd = match pb.simd_parts() {
+        None => Json::Null,
+        Some((isa, np_total, tiles)) => {
+            if isa.name() != file_isa {
+                bail!(
+                    "panel packed for ISA '{}' but artifact records '{file_isa}'",
+                    isa.name()
+                );
+            }
+            let (toff, tlen) = blobs.push_i8(tiles.as_slice());
+            Json::obj(vec![("np", num(np_total)), ("off", num(toff)), ("len", num(tlen))])
+        }
+    };
+    Ok(Json::obj(vec![
+        ("k", num(pb.k())),
+        ("n", num(pb.n())),
+        ("dense", Json::Bool(pb.dense_hint())),
+        ("off", num(off)),
+        ("len", num(len)),
+        ("simd", simd),
+    ]))
+}
+
+fn rounding_mode_str(m: &RoundingMode) -> &'static str {
+    match m {
+        RoundingMode::Round => "ROUND",
+        RoundingMode::RoundToZero => "ROUND_TO_ZERO",
+        RoundingMode::Ceil => "CEIL",
+        RoundingMode::Floor => "FLOOR",
+    }
+}
+
+fn epilogue_json(e: &Epilogue, blobs: &mut Blobs) -> Json {
+    match e {
+        Epilogue::Relu => Json::obj(vec![("t", Json::Str("relu".into()))]),
+        Epilogue::Quant { s, z, qmin, qmax, mode } => Json::obj(vec![
+            ("t", Json::Str("quant".into())),
+            ("s", Json::Num(*s)),
+            ("z", Json::Num(*z)),
+            ("qmin", Json::Num(*qmin)),
+            ("qmax", Json::Num(*qmax)),
+            ("mode", Json::Str(rounding_mode_str(mode).into())),
+        ]),
+        Epilogue::Bipolar { s } => {
+            Json::obj(vec![("t", Json::Str("bipolar".into())), ("s", Json::Num(*s))])
+        }
+        Epilogue::BatchNorm { mean, denom, scale, bias } => {
+            let m = blobs.push_f32(mean);
+            let d = blobs.push_f32(denom);
+            let s = blobs.push_f32(scale);
+            let b = blobs.push_f32(bias);
+            Json::obj(vec![
+                ("t", Json::Str("batchnorm".into())),
+                ("mean", blob_ref(m.0, m.1)),
+                ("denom", blob_ref(d.0, d.1)),
+                ("scale", blob_ref(s.0, s.1)),
+                ("bias", blob_ref(b.0, b.1)),
+            ])
+        }
+    }
+}
+
+fn qthreshold_json(t: &QThreshold, blobs: &mut Blobs) -> Json {
+    let (off, len) = blobs.push_i32(t.rows());
+    let (out_scale, out_bias) = t.out_params();
+    Json::obj(vec![
+        ("channels", num(t.channels())),
+        ("steps", num(t.steps())),
+        ("rows", blob_ref(off, len)),
+        ("out_scale", Json::Num(f64::from(out_scale))),
+        ("out_bias", Json::Num(f64::from(out_bias))),
+    ])
+}
+
+fn conv_params_json(c: &PackedConv) -> Json {
+    let p = c.params();
+    Json::Arr(
+        [p.kh, p.kw, p.stride_h, p.stride_w, p.pads[0], p.pads[1], p.pads[2], p.pads[3], p.group]
+            .iter()
+            .map(|&v| num(v))
+            .collect(),
+    )
+}
+
+fn reshape_json(r: &BatchReshape) -> Json {
+    Json::obj(vec![
+        ("t", Json::Str("reshape".into())),
+        ("orig", Json::Arr(r.orig().iter().map(|&v| Json::Num(v as f64)).collect())),
+        ("try_orig_first", Json::Bool(r.try_orig_first())),
+    ])
+}
+
+fn kernel_json(k: &CompiledKernel, file_isa: &str, blobs: &mut Blobs) -> Result<Json> {
+    Ok(match k {
+        // re-resolved from the node table at load time
+        CompiledKernel::Op(_) => Json::obj(vec![("t", Json::Str("op".into()))]),
+        CompiledKernel::Conv(c) => {
+            let (m, cg, mg, kd) = c.dims();
+            let bias = match c.bias() {
+                None => Json::Null,
+                Some(b) => {
+                    let (off, len) = blobs.push_f32(b);
+                    blob_ref(off, len)
+                }
+            };
+            Json::obj(vec![
+                ("t", Json::Str("conv".into())),
+                ("p", conv_params_json(c)),
+                ("m", num(m)),
+                ("cg", num(cg)),
+                ("mg", num(mg)),
+                ("k", num(kd)),
+                ("w", Json::Arr(c.weights().iter().map(|pb| packed_b_json(pb, blobs)).collect())),
+                ("bias", bias),
+                ("ep", Json::Arr(c.epilogue().iter().map(|e| epilogue_json(e, blobs)).collect())),
+            ])
+        }
+        CompiledKernel::Gemm(g) => {
+            let (kd, n, alpha, beta, trans_a) = g.scalars();
+            let bias = match g.bias() {
+                GemmBias::None => Json::obj(vec![("t", Json::Str("none".into()))]),
+                GemmBias::Runtime => Json::obj(vec![("t", Json::Str("runtime".into()))]),
+                GemmBias::Folded(t) => Json::obj(vec![
+                    ("t", Json::Str("folded".into())),
+                    ("v", tensor_ref(t, blobs)?),
+                ]),
+            };
+            Json::obj(vec![
+                ("t", Json::Str("gemm".into())),
+                ("k", num(kd)),
+                ("n", num(n)),
+                ("alpha", Json::Num(f64::from(alpha))),
+                ("beta", Json::Num(f64::from(beta))),
+                ("trans_a", Json::Bool(trans_a)),
+                ("b", packed_b_json(g.packed_b(), blobs)),
+                ("bias", bias),
+                ("ep", Json::Arr(g.epilogue().iter().map(|e| epilogue_json(e, blobs)).collect())),
+            ])
+        }
+        CompiledKernel::MatMul(m) => {
+            let (kd, n) = m.dims();
+            Json::obj(vec![
+                ("t", Json::Str("matmul".into())),
+                ("k", num(kd)),
+                ("n", num(n)),
+                ("b", packed_b_json(m.packed_b(), blobs)),
+                ("ep", Json::Arr(m.epilogue().iter().map(|e| epilogue_json(e, blobs)).collect())),
+            ])
+        }
+        CompiledKernel::QConv(c) => {
+            let (m, cg, mg, kd) = c.dims();
+            let p = c.params();
+            let (lo, hi) = c.input_range();
+            let w = c
+                .weights()
+                .iter()
+                .map(|pb| packed_bi8_json(pb, file_isa, blobs))
+                .collect::<Result<Vec<_>>>()?;
+            Json::obj(vec![
+                ("t", Json::Str("qconv".into())),
+                (
+                    "p",
+                    Json::Arr(
+                        [
+                            p.kh, p.kw, p.stride_h, p.stride_w, p.pads[0], p.pads[1], p.pads[2],
+                            p.pads[3], p.group,
+                        ]
+                        .iter()
+                        .map(|&v| num(v))
+                        .collect(),
+                    ),
+                ),
+                ("m", num(m)),
+                ("cg", num(cg)),
+                ("mg", num(mg)),
+                ("k", num(kd)),
+                ("w", Json::Arr(w)),
+                ("lo", Json::Num(lo)),
+                ("hi", Json::Num(hi)),
+                ("th", c.epilogue().map_or(Json::Null, |t| qthreshold_json(t, blobs))),
+                ("out", Json::Str(c.out_dtype().name().into())),
+            ])
+        }
+        CompiledKernel::QGemm(g) => {
+            let (kd, n) = g.dims();
+            let (lo, hi) = g.input_range();
+            let bias = match g.bias() {
+                None => Json::Null,
+                Some(b) => {
+                    let (off, len) = blobs.push_i32(b);
+                    blob_ref(off, len)
+                }
+            };
+            Json::obj(vec![
+                ("t", Json::Str("qgemm".into())),
+                ("k", num(kd)),
+                ("n", num(n)),
+                ("b", packed_bi8_json(g.packed_b(), file_isa, blobs)?),
+                ("bias", bias),
+                ("lo", Json::Num(lo)),
+                ("hi", Json::Num(hi)),
+                ("th", g.epilogue().map_or(Json::Null, |t| qthreshold_json(t, blobs))),
+                ("out", Json::Str(g.out_dtype().name().into())),
+            ])
+        }
+        CompiledKernel::QMatMul(m) => {
+            let (kd, n) = m.dims();
+            let (lo, hi) = m.input_range();
+            Json::obj(vec![
+                ("t", Json::Str("qmatmul".into())),
+                ("k", num(kd)),
+                ("n", num(n)),
+                ("b", packed_bi8_json(m.packed_b(), file_isa, blobs)?),
+                ("lo", Json::Num(lo)),
+                ("hi", Json::Num(hi)),
+                ("th", m.epilogue().map_or(Json::Null, |t| qthreshold_json(t, blobs))),
+                ("out", Json::Str(m.out_dtype().name().into())),
+            ])
+        }
+        CompiledKernel::Threshold(t) => {
+            let (off, len) = blobs.push_f32(t.rows());
+            let (out_scale, out_bias) = t.out_params();
+            Json::obj(vec![
+                ("t", Json::Str("threshold".into())),
+                ("channels", num(t.channels())),
+                ("steps", num(t.steps())),
+                ("rows", blob_ref(off, len)),
+                ("out_scale", Json::Num(f64::from(out_scale))),
+                ("out_bias", Json::Num(f64::from(out_bias))),
+                ("out", Json::Str(t.out_dtype().name().into())),
+            ])
+        }
+        CompiledKernel::Reshape(r) => reshape_json(r),
+    })
+}
+
+fn adapter_json(a: &AdapterMeta) -> Json {
+    match a {
+        AdapterMeta::Dense => Json::obj(vec![("t", Json::Str("dense".into()))]),
+        AdapterMeta::Nchw { c, h, w } => Json::obj(vec![
+            ("t", Json::Str("nchw".into())),
+            ("c", num(*c)),
+            ("h", num(*h)),
+            ("w", num(*w)),
+        ]),
+    }
+}
+
+fn plan_meta_json(
+    plan: &ExecutionPlan<'_>,
+    engine: Option<&EngineMeta>,
+    file_isa: &str,
+    blobs: &mut Blobs,
+) -> Result<Json> {
+    let steps = plan
+        .steps
+        .iter()
+        .map(|s| {
+            Ok(Json::obj(vec![
+                ("node", num(s.node_idx)),
+                ("out_node", num(s.out_node_idx)),
+                ("kernel", kernel_json(&s.kernel, file_isa, blobs)?),
+                ("in", Json::Arr(s.inputs.iter().map(|&v| num(v as usize)).collect())),
+                (
+                    "out",
+                    Json::Arr(
+                        s.outputs
+                            .iter()
+                            .map(|o| o.map_or(Json::Null, |v| num(v as usize)))
+                            .collect(),
+                    ),
+                ),
+                ("release", Json::Arr(s.release.iter().map(|&v| num(v as usize)).collect())),
+            ]))
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    let preloads = plan
+        .preloads
+        .iter()
+        .map(|p| {
+            Ok(Json::obj(vec![
+                ("name", Json::Str(p.name.clone())),
+                ("slot", num(p.slot as usize)),
+                ("v", tensor_ref(p.value.as_tensor(), blobs)?),
+            ]))
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    // constants consumed by a preload stay hot at run start; the rest are
+    // record-keeping only ("cold") — groundwork for spilling them out of
+    // the resident image entirely
+    let hot: std::collections::BTreeSet<&str> =
+        plan.preloads.iter().map(|p| p.name.as_str()).collect();
+    let folded = plan
+        .folded_outputs
+        .iter()
+        .map(|(name, t)| {
+            Ok(Json::obj(vec![
+                ("name", Json::Str(name.clone())),
+                ("v", tensor_ref(t, blobs)?),
+                ("cold", Json::Bool(!hot.contains(name.as_str()))),
+            ]))
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    let inputs = plan
+        .inputs
+        .iter()
+        .map(|i| {
+            Json::obj(vec![
+                ("name", Json::Str(i.name.clone())),
+                (
+                    "shape",
+                    i.shape
+                        .as_ref()
+                        .map_or(Json::Null, |s| Json::Arr(s.iter().map(|&d| num(d)).collect())),
+                ),
+                ("slot", i.slot.map_or(Json::Null, |s| num(s as usize))),
+            ])
+        })
+        .collect();
+
+    let outputs = plan
+        .outputs
+        .iter()
+        .map(|o| {
+            Json::obj(vec![("name", Json::Str(o.name.clone())), ("slot", num(o.slot as usize))])
+        })
+        .collect();
+
+    let plan_json = Json::obj(vec![
+        ("name", Json::Str(plan.name.clone())),
+        ("nodes", Json::Arr(plan.nodes.iter().map(node_to_json).collect())),
+        ("steps", Json::Arr(steps)),
+        ("preloads", Json::Arr(preloads)),
+        ("inputs", Json::Arr(inputs)),
+        ("outputs", Json::Arr(outputs)),
+        ("slot_count", num(plan.slot_count)),
+        (
+            "slot_dtypes",
+            Json::Arr(plan.slot_dtypes.iter().map(|d| Json::Str(d.name().into())).collect()),
+        ),
+        (
+            "slot_numel",
+            Json::Arr(plan.slot_numel.iter().map(|n| n.map_or(Json::Null, num)).collect()),
+        ),
+        ("folded", Json::Arr(folded)),
+        (
+            "aliases",
+            Json::Arr(
+                plan.alias_outputs
+                    .iter()
+                    .map(|(a, b)| Json::Arr(vec![Json::Str(a.clone()), Json::Str(b.clone())]))
+                    .collect(),
+            ),
+        ),
+        (
+            "counters",
+            Json::obj(vec![
+                ("node", num(plan.node_count)),
+                ("folded", num(plan.folded_count)),
+                ("elided", num(plan.elided_count)),
+                ("packed", num(plan.packed_count)),
+                ("quant", num(plan.quant_count)),
+                ("fused", num(plan.fused_count)),
+                ("resident_int", num(plan.resident_int_count)),
+                ("batch_symbolic", num(plan.batch_symbolic_count)),
+            ]),
+        ),
+        (
+            "batch_blockers",
+            Json::Arr(plan.batch_blockers.iter().map(|b| Json::Str(b.clone())).collect()),
+        ),
+    ]);
+
+    let engine_json = engine.map_or(Json::Null, |e| {
+        Json::obj(vec![
+            ("model", Json::Str(e.model_name.clone())),
+            ("input", Json::Str(e.input_name.clone())),
+            ("output", Json::Str(e.output_name.clone())),
+            ("in_dim", num(e.in_dim)),
+            ("out_dim", num(e.out_dim)),
+            ("adapter", adapter_json(&e.adapter)),
+            ("streamlined", Json::Bool(e.streamlined)),
+        ])
+    });
+
+    Ok(Json::obj(vec![("plan", plan_json), ("engine", engine_json)]))
+}
+
+/// Reinterpret a typed slice as raw bytes (native byte order — the
+/// header's endian tag guards cross-machine reads).
+fn bytes_of<T: Copy>(v: &[T]) -> &[u8] {
+    // SAFETY: `v` is a live, initialized slice of a plain-old-data
+    // numeric type (`f32`/`i8`/`i32`/`i64` at the call sites); every
+    // byte of such values is initialized, the cast only narrows the
+    // element type, and `size_of_val` gives the exact byte extent.
+    unsafe { std::slice::from_raw_parts(v.as_ptr().cast::<u8>(), std::mem::size_of_val(v)) }
+}
+
+/// Serialize `plan` (with its source `graph`, and optionally the serving
+/// metadata of the engine wrapping it) into a sectioned `.qpln` artifact
+/// at `path`. See the crate-level "Artifact format" docs for the layout.
+pub fn write_artifact(
+    plan: &ExecutionPlan<'_>,
+    graph: &ModelGraph,
+    engine: Option<&EngineMeta>,
+    path: &Path,
+) -> Result<()> {
+    let isa = active_isa().name();
+    let mut blobs = Blobs::default();
+    let meta = plan_meta_json(plan, engine, isa, &mut blobs)?.to_string();
+    let graph_json = model_to_json(graph);
+
+    let payloads: Vec<(u32, &[u8])> = vec![
+        (SEC_META, meta.as_bytes()),
+        (SEC_GRAPH, graph_json.as_bytes()),
+        (SEC_F32, bytes_of(&blobs.f32v)),
+        (SEC_I8, bytes_of(&blobs.i8v)),
+        (SEC_I32, bytes_of(&blobs.i32v)),
+        (SEC_I64, bytes_of(&blobs.i64v)),
+    ];
+
+    let mut out = encode_header(payloads.len() as u32, isa);
+    out.resize(HEADER_LEN + payloads.len() * ENTRY_LEN, 0);
+    let mut entries = Vec::with_capacity(payloads.len());
+    for (id, p) in &payloads {
+        out.resize(out.len() + pad_to_align(out.len()), 0);
+        let offset = out.len() as u64;
+        out.extend_from_slice(p);
+        entries.push(SectionEntry { id: *id, offset, len: p.len() as u64, crc: crc32(p) });
+    }
+    for (i, e) in entries.iter().enumerate() {
+        let at = HEADER_LEN + i * ENTRY_LEN;
+        out[at..at + ENTRY_LEN].copy_from_slice(&encode_entry(e));
+    }
+    std::fs::write(path, &out)?;
+    Ok(())
+}

@@ -416,6 +416,43 @@ impl PackedConv {
         Some(PackedConv { p, m, cg, mg, k, weights, bias, epilogue: Vec::new() })
     }
 
+    /// Reassemble from persisted parts (artifact loading): the exact
+    /// state [`PackedConv::try_build`] + fusion would have produced,
+    /// minus the transpose/pack work.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_parts(
+        p: ConvParams,
+        m: usize,
+        cg: usize,
+        mg: usize,
+        k: usize,
+        weights: Vec<PackedB>,
+        bias: Option<Vec<f32>>,
+        epilogue: Vec<Epilogue>,
+    ) -> PackedConv {
+        PackedConv { p, m, cg, mg, k, weights, bias, epilogue }
+    }
+
+    /// Conv hyper-parameters (artifact writing).
+    pub(crate) fn params(&self) -> &ConvParams {
+        &self.p
+    }
+
+    /// `(m, cg, mg, k)` dims (artifact writing).
+    pub(crate) fn dims(&self) -> (usize, usize, usize, usize) {
+        (self.m, self.cg, self.mg, self.k)
+    }
+
+    /// Per-group packed weight matrices (artifact writing).
+    pub(crate) fn weights(&self) -> &[PackedB] {
+        &self.weights
+    }
+
+    /// Dense bias vector, when present (artifact writing).
+    pub(crate) fn bias(&self) -> Option<&[f32]> {
+        self.bias.as_deref()
+    }
+
     /// Append a fused elementwise stage (compile-time fusion pass).
     pub(crate) fn push_epilogue(&mut self, e: Epilogue) {
         self.epilogue.push(e);
@@ -493,7 +530,7 @@ impl PackedConv {
 
 /// How a Gemm node's `C` input is bound.
 #[derive(Debug)]
-enum GemmBias {
+pub(crate) enum GemmBias {
     /// No C input.
     None,
     /// Constant C, pre-scaled by `beta` at compile time.
@@ -566,6 +603,36 @@ impl PackedGemm {
             }
         };
         Some(PackedGemm { k, n, bp, alpha, beta, trans_a, bias, epilogue: Vec::new() })
+    }
+
+    /// Reassemble from persisted parts (artifact loading).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_parts(
+        k: usize,
+        n: usize,
+        bp: PackedB,
+        alpha: f32,
+        beta: f32,
+        trans_a: bool,
+        bias: GemmBias,
+        epilogue: Vec<Epilogue>,
+    ) -> PackedGemm {
+        PackedGemm { k, n, bp, alpha, beta, trans_a, bias, epilogue }
+    }
+
+    /// `(k, n, alpha, beta, trans_a)` scalars (artifact writing).
+    pub(crate) fn scalars(&self) -> (usize, usize, f32, f32, bool) {
+        (self.k, self.n, self.alpha, self.beta, self.trans_a)
+    }
+
+    /// The packed B matrix (artifact writing).
+    pub(crate) fn packed_b(&self) -> &PackedB {
+        &self.bp
+    }
+
+    /// The C binding (artifact writing).
+    pub(crate) fn bias(&self) -> &GemmBias {
+        &self.bias
     }
 
     /// Append a fused elementwise stage (compile-time fusion pass).
@@ -659,6 +726,26 @@ impl PackedMatMul {
         }
         let (k, n) = (b.shape()[0], b.shape()[1]);
         Some(PackedMatMul { k, n, bp: PackedB::pack(k, n, b.as_f32().ok()?), epilogue: Vec::new() })
+    }
+
+    /// Reassemble from persisted parts (artifact loading).
+    pub(crate) fn from_parts(
+        k: usize,
+        n: usize,
+        bp: PackedB,
+        epilogue: Vec<Epilogue>,
+    ) -> PackedMatMul {
+        PackedMatMul { k, n, bp, epilogue }
+    }
+
+    /// `(k, n)` dims (artifact writing).
+    pub(crate) fn dims(&self) -> (usize, usize) {
+        (self.k, self.n)
+    }
+
+    /// The packed rhs matrix (artifact writing).
+    pub(crate) fn packed_b(&self) -> &PackedB {
+        &self.bp
     }
 
     /// Append a fused elementwise stage (compile-time fusion pass).

@@ -124,6 +124,7 @@
 //! and serves any batch size through the batcher.
 
 pub mod arena;
+pub mod artifact;
 mod compile;
 pub mod kernel;
 pub mod qkernel;

@@ -278,6 +278,24 @@ impl QThreshold {
         })
     }
 
+    /// Reassemble from persisted parts (artifact loading). Trusts the
+    /// caller's rows the way a compiled plan trusts `try_build`'s —
+    /// `qonnx verify --artifact` re-checks monotonicity independently.
+    pub(crate) fn from_parts(
+        channels: usize,
+        steps: usize,
+        rows: Vec<i32>,
+        out_scale: f32,
+        out_bias: f32,
+    ) -> QThreshold {
+        QThreshold { channels, steps, rows, out_scale, out_bias }
+    }
+
+    /// `(out_scale, out_bias)` emission params (artifact writing).
+    pub(crate) fn out_params(&self) -> (f32, f32) {
+        (self.out_scale, self.out_bias)
+    }
+
     /// Narrowest container that exactly holds every emitted level.
     pub(crate) fn preferred_container(&self) -> DType {
         level_container(self.out_scale, self.out_bias, self.steps)
@@ -441,6 +459,37 @@ impl QuantConv {
             epilogue: None,
             out_dtype: DType::F32,
         })
+    }
+
+    /// Reassemble from persisted parts (artifact loading).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_parts(
+        p: ConvParams,
+        m: usize,
+        cg: usize,
+        mg: usize,
+        k: usize,
+        weights: Vec<PackedBi8>,
+        in_range: (f64, f64),
+        epilogue: Option<QThreshold>,
+        out_dtype: DType,
+    ) -> QuantConv {
+        QuantConv { p, m, cg, mg, k, weights, in_lo: in_range.0, in_hi: in_range.1, epilogue, out_dtype }
+    }
+
+    /// Conv hyper-parameters (artifact writing).
+    pub(crate) fn params(&self) -> &ConvParams {
+        &self.p
+    }
+
+    /// `(m, cg, mg, k)` dims (artifact writing).
+    pub(crate) fn dims(&self) -> (usize, usize, usize, usize) {
+        (self.m, self.cg, self.mg, self.k)
+    }
+
+    /// Per-group packed weight matrices (artifact writing).
+    pub(crate) fn weights(&self) -> &[PackedBi8] {
+        &self.weights
     }
 
     /// Output channels (`M`) — the axis a fused threshold indexes.
@@ -705,6 +754,34 @@ impl QuantGemm {
         })
     }
 
+    /// Reassemble from persisted parts (artifact loading).
+    pub(crate) fn from_parts(
+        k: usize,
+        n: usize,
+        bp: PackedBi8,
+        bias: Option<Vec<i32>>,
+        in_range: (f64, f64),
+        epilogue: Option<QThreshold>,
+        out_dtype: DType,
+    ) -> QuantGemm {
+        QuantGemm { k, n, bp, bias, in_lo: in_range.0, in_hi: in_range.1, epilogue, out_dtype }
+    }
+
+    /// `(k, n)` dims (artifact writing).
+    pub(crate) fn dims(&self) -> (usize, usize) {
+        (self.k, self.n)
+    }
+
+    /// The packed B matrix (artifact writing).
+    pub(crate) fn packed_b(&self) -> &PackedBi8 {
+        &self.bp
+    }
+
+    /// The folded `beta * C` per-column bias (artifact writing).
+    pub(crate) fn bias(&self) -> Option<&[i32]> {
+        self.bias.as_deref()
+    }
+
     pub(crate) fn out_channels(&self) -> usize {
         self.n
     }
@@ -820,6 +897,28 @@ impl QuantMatMul {
             epilogue: None,
             out_dtype: DType::F32,
         })
+    }
+
+    /// Reassemble from persisted parts (artifact loading).
+    pub(crate) fn from_parts(
+        k: usize,
+        n: usize,
+        bp: PackedBi8,
+        in_range: (f64, f64),
+        epilogue: Option<QThreshold>,
+        out_dtype: DType,
+    ) -> QuantMatMul {
+        QuantMatMul { k, n, bp, in_lo: in_range.0, in_hi: in_range.1, epilogue, out_dtype }
+    }
+
+    /// `(k, n)` dims (artifact writing).
+    pub(crate) fn dims(&self) -> (usize, usize) {
+        (self.k, self.n)
+    }
+
+    /// The packed rhs matrix (artifact writing).
+    pub(crate) fn packed_b(&self) -> &PackedBi8 {
+        &self.bp
     }
 
     pub(crate) fn out_channels(&self) -> usize {
@@ -951,6 +1050,23 @@ impl ThresholdKernel {
             out_bias: node.attr_float_or("out_bias", 0.0),
             out_dtype: DType::F32,
         })
+    }
+
+    /// Reassemble from persisted parts (artifact loading).
+    pub(crate) fn from_parts(
+        channels: usize,
+        steps: usize,
+        rows: Vec<f32>,
+        out_scale: f32,
+        out_bias: f32,
+        out_dtype: DType,
+    ) -> ThresholdKernel {
+        ThresholdKernel { channels, steps, rows, out_scale, out_bias, out_dtype }
+    }
+
+    /// `(out_scale, out_bias)` emission params (artifact writing).
+    pub(crate) fn out_params(&self) -> (f32, f32) {
+        (self.out_scale, self.out_bias)
     }
 
     /// Narrowest container that exactly holds every emitted level.

@@ -30,6 +30,7 @@
 //! on it.
 
 use super::qgemm::{par_grid, SendPtr};
+use super::store::WeightStore;
 use crate::runtime::pool;
 
 /// Rows-block: each thread/chunk walks its rows in MC-row groups.
@@ -52,7 +53,7 @@ const PAR_FLOP_THRESHOLD: usize = 4_000_000;
 pub struct PackedB {
     k: usize,
     n: usize,
-    data: Vec<f32>,
+    data: WeightStore<f32>,
 }
 
 impl PackedB {
@@ -70,7 +71,21 @@ impl PackedB {
                 }
             }
         }
+        PackedB { k, n, data: data.into() }
+    }
+
+    /// Reconstruct from already-packed panel storage (artifact loading:
+    /// `data` is typically a zero-copy view into the mapping, holding the
+    /// exact byte layout [`PackedB::pack`] produced).
+    pub(crate) fn from_store(k: usize, n: usize, data: WeightStore<f32>) -> PackedB {
+        assert_eq!(data.len(), k * n, "packed panel length must be k*n");
         PackedB { k, n, data }
+    }
+
+    /// The packed panel bytes in layout order (artifact writing / the
+    /// zero-copy provenance checks).
+    pub(crate) fn store(&self) -> &WeightStore<f32> {
+        &self.data
     }
 
     pub fn k(&self) -> usize {

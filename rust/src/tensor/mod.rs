@@ -21,6 +21,7 @@ mod im2col;
 mod layout;
 mod qgemm;
 pub mod simd;
+mod store;
 
 pub use broadcast::{broadcast_shapes, broadcastable_to, BroadcastIter};
 pub use gemm::{gemm, gemm_prepacked, PackedB, GEMM_KC, GEMM_MC, GEMM_NC};
@@ -28,6 +29,7 @@ pub use im2col::{conv_out_dim, im2col_group_into, im2col_nchw};
 pub use layout::{nchw_to_nhwc, nhwc_to_nchw};
 pub use qgemm::{qgemm_prepacked, qgemm_prepacked_i8, PackedBi8};
 pub use simd::Isa;
+pub use store::{AlignedBytes, PanelElem, WeightStore, WEIGHT_ALIGN};
 
 use anyhow::{bail, ensure, Result};
 
@@ -68,6 +70,17 @@ impl DType {
             DType::I32 => "i32",
             DType::I64 => "i64",
         }
+    }
+
+    /// Inverse of [`DType::name`] (artifact deserialization).
+    pub fn from_name(s: &str) -> Option<DType> {
+        Some(match s {
+            "f32" => DType::F32,
+            "i8" => DType::I8,
+            "i32" => DType::I32,
+            "i64" => DType::I64,
+            _ => return None,
+        })
     }
 }
 

@@ -32,6 +32,7 @@
 
 use super::gemm::{GEMM_KC, GEMM_MC, GEMM_NC};
 use super::simd::{self, Isa, J_GROUP, K_GROUP};
+use super::store::WeightStore;
 use crate::runtime::pool;
 
 /// Below this many integer MACs the fan-out overhead dominates.
@@ -40,13 +41,13 @@ const PAR_MAC_THRESHOLD: usize = 2_000_000;
 /// Interleaved-tile companion to the panel form: the same `[k, n]`
 /// matrix re-laid for the vector microkernel (see
 /// [`crate::tensor::simd`] for the layout), built once at pack time.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 struct SimdTiles {
     /// ISA the tiles were packed for (recorded for kernel reports).
     isa: Isa,
     /// Sum of 8-padded column extents over one full-`KC` tile row.
     np_total: usize,
-    data: Vec<i8>,
+    data: WeightStore<i8>,
 }
 
 impl SimdTiles {
@@ -63,7 +64,7 @@ impl SimdTiles {
                 simd::interleave_tile(b, n, kc0, kc_len, nc0, nc_len, &mut data);
             }
         }
-        SimdTiles { isa, np_total, data }
+        SimdTiles { isa, np_total, data: data.into() }
     }
 
     /// The interleaved tile at block origin `(kc0, nc0)`. `kc0` is a
@@ -82,11 +83,11 @@ impl SimdTiles {
 /// (identical layout to [`super::PackedB`], 1/4 the bytes), plus — when
 /// a vector ISA is active at pack time — the microkernel's interleaved
 /// tile form.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct PackedBi8 {
     k: usize,
     n: usize,
-    data: Vec<i8>,
+    data: WeightStore<i8>,
     /// Compile-time sparsity hint: `true` means the inferred activation
     /// grid is dense (> 2 bits), so the scalar path drops its `av == 0`
     /// skip; `false` (1–2 bit grids) keeps it.
@@ -123,7 +124,34 @@ impl PackedBi8 {
             Isa::Scalar => None,
             isa => Some(SimdTiles::build(k, n, b, isa)),
         };
+        PackedBi8 { k, n, data: data.into(), dense, simd }
+    }
+
+    /// Reassemble a matrix from persisted panel bytes (artifact loading):
+    /// the exact storage [`PackedBi8::pack_with`] would have produced,
+    /// minus the packing work. `simd` carries `(isa, np_total, tiles)`
+    /// when the artifact has interleaved tiles for the current ISA.
+    pub(crate) fn from_parts(
+        k: usize,
+        n: usize,
+        data: WeightStore<i8>,
+        dense: bool,
+        simd: Option<(Isa, usize, WeightStore<i8>)>,
+    ) -> PackedBi8 {
+        assert_eq!(data.len(), k * n, "packed i8 panel length must be k*n");
+        let simd = simd.map(|(isa, np_total, data)| SimdTiles { isa, np_total, data });
         PackedBi8 { k, n, data, dense, simd }
+    }
+
+    /// The panel-form storage (artifact writing).
+    pub(crate) fn store(&self) -> &WeightStore<i8> {
+        &self.data
+    }
+
+    /// The interleaved-tile companion as `(isa, np_total, tiles)`, when
+    /// present (artifact writing; `SimdTiles` itself stays private).
+    pub(crate) fn simd_parts(&self) -> Option<(Isa, usize, &WeightStore<i8>)> {
+        self.simd.as_ref().map(|t| (t.isa, t.np_total, &t.data))
     }
 
     pub fn k(&self) -> usize {

@@ -93,6 +93,17 @@ impl Isa {
     pub fn is_simd(self) -> bool {
         self != Isa::Scalar
     }
+
+    /// Inverse of [`Isa::name`] — used by the artifact loader to compare
+    /// the ISA recorded at pack time against the current host.
+    pub fn from_name(s: &str) -> Option<Isa> {
+        match s {
+            "scalar" => Some(Isa::Scalar),
+            "avx2" => Some(Isa::Avx2),
+            "neon" => Some(Isa::Neon),
+            _ => None,
+        }
+    }
 }
 
 impl std::fmt::Display for Isa {

@@ -1,0 +1,297 @@
+//! Weight storage backing for packed panels: owned heap vectors or
+//! zero-copy views into a 64-byte-aligned artifact mapping.
+//!
+//! The plan compiler packs weight matrices once ([`super::PackedB`] /
+//! [`super::PackedBi8`]); a compiled-plan artifact persists those exact
+//! panel bytes 64-byte-aligned so a later process can reconstruct the
+//! plan *without re-packing*. [`WeightStore`] is the abstraction that
+//! makes kernels agnostic to where the panel bytes live: `Owned` wraps
+//! the compile-time `Vec`, `Mapped` borrows a range of an
+//! [`AlignedBytes`] buffer shared (via `Arc`) with every other panel of
+//! the same artifact. Both deref to `&[T]`, so the GEMM inner loops are
+//! untouched.
+//!
+//! # Zero-copy rules
+//!
+//! A `Mapped` store is only constructed over ranges whose byte offset is
+//! a multiple of the element alignment (the artifact writer aligns every
+//! section payload to 64 bytes, which covers every element type used
+//! here), for element types where any bit pattern is a valid value
+//! (`f32`, `i8`, `i32`). Those two facts make the byte→element cast in
+//! `Deref` sound; they are checked at construction, not per access.
+
+use std::alloc::{alloc_zeroed, dealloc, handle_alloc_error, Layout};
+use std::sync::Arc;
+
+/// Alignment guaranteed for [`AlignedBytes`] buffers and required of
+/// every mapped section payload — one cache line, and a multiple of
+/// every element alignment the panel formats use.
+pub const WEIGHT_ALIGN: usize = 64;
+
+/// A heap buffer of bytes guaranteed to start on a [`WEIGHT_ALIGN`]
+/// boundary. This is the crate's "mapping": artifact loading reads the
+/// whole file into one `AlignedBytes` and every weight panel borrows its
+/// range from it through an `Arc` (no per-panel copy, no re-pack).
+pub struct AlignedBytes {
+    ptr: *mut u8,
+    len: usize,
+}
+
+// SAFETY: AlignedBytes owns its allocation exclusively (the pointer is
+// never aliased mutably after construction) and the payload is plain
+// bytes, so moving or sharing the handle across threads is sound.
+unsafe impl Send for AlignedBytes {}
+// SAFETY: all access after construction is through &self (read-only).
+unsafe impl Sync for AlignedBytes {}
+
+impl AlignedBytes {
+    /// Allocate a zeroed buffer of `len` bytes aligned to
+    /// [`WEIGHT_ALIGN`]. A zero-length buffer allocates nothing.
+    pub fn zeroed(len: usize) -> AlignedBytes {
+        if len == 0 {
+            return AlignedBytes { ptr: std::ptr::null_mut(), len: 0 };
+        }
+        let layout = Layout::from_size_align(len, WEIGHT_ALIGN)
+            .expect("weight buffer layout must be constructible");
+        // SAFETY: `layout` has non-zero size (len > 0 checked above) and
+        // a valid power-of-two alignment.
+        let ptr = unsafe { alloc_zeroed(layout) };
+        if ptr.is_null() {
+            handle_alloc_error(layout);
+        }
+        AlignedBytes { ptr, len }
+    }
+
+    /// Copy `bytes` into a fresh aligned buffer.
+    pub fn from_slice(bytes: &[u8]) -> AlignedBytes {
+        let buf = AlignedBytes::zeroed(bytes.len());
+        if !bytes.is_empty() {
+            // SAFETY: `buf.ptr` is a live allocation of exactly
+            // `bytes.len()` bytes, disjoint from `bytes` (freshly
+            // allocated above).
+            unsafe { std::ptr::copy_nonoverlapping(bytes.as_ptr(), buf.ptr, bytes.len()) };
+        }
+        buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The buffer contents.
+    pub fn as_slice(&self) -> &[u8] {
+        if self.len == 0 {
+            return &[];
+        }
+        // SAFETY: `ptr` points at a live allocation of exactly `len`
+        // initialized bytes (zeroed at alloc, possibly overwritten via
+        // `as_mut_slice` before sharing).
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    /// Mutable access for the loader to fill the buffer (before the
+    /// buffer is shared behind an `Arc`).
+    pub fn as_mut_slice(&mut self) -> &mut [u8] {
+        if self.len == 0 {
+            return &mut [];
+        }
+        // SAFETY: `&mut self` guarantees exclusive access; `ptr`/`len`
+        // describe a live allocation of initialized bytes.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr, self.len) }
+    }
+
+    /// Whether `p` points into this buffer (pointer-provenance checks in
+    /// the zero-copy tests: a loaded panel's data pointer must land in
+    /// the artifact mapping, proving no re-pack copied it out).
+    pub fn contains_ptr(&self, p: *const u8) -> bool {
+        let base = self.ptr as usize;
+        let q = p as usize;
+        self.len > 0 && q >= base && q < base + self.len
+    }
+}
+
+impl Drop for AlignedBytes {
+    fn drop(&mut self) {
+        if self.len == 0 {
+            return;
+        }
+        let layout = Layout::from_size_align(self.len, WEIGHT_ALIGN)
+            .expect("layout was constructible at alloc time");
+        // SAFETY: `ptr` was allocated with exactly this layout in
+        // `zeroed` and is only deallocated here, once.
+        unsafe { dealloc(self.ptr, layout) };
+    }
+}
+
+impl std::fmt::Debug for AlignedBytes {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("AlignedBytes").field("len", &self.len).finish()
+    }
+}
+
+/// Element types a [`WeightStore`] may map from raw bytes: plain-old-data
+/// scalars where **every bit pattern is a valid value**. Sealed to the
+/// three panel element types the packed formats use.
+pub trait PanelElem: Copy + PartialEq + std::fmt::Debug + private::Sealed + 'static {}
+impl PanelElem for f32 {}
+impl PanelElem for i8 {}
+impl PanelElem for i32 {}
+mod private {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for i8 {}
+    impl Sealed for i32 {}
+}
+
+/// Storage behind a packed weight panel: an owned vector (compile-time
+/// packing) or a borrowed range of an artifact mapping (zero-copy load).
+/// Derefs to `&[T]`, so kernel inner loops never see the difference.
+#[derive(Clone)]
+pub enum WeightStore<T: PanelElem> {
+    /// Compile-time packed storage.
+    Owned(Vec<T>),
+    /// `len` elements starting `byte_off` bytes into `buf` — borrowed
+    /// straight from the artifact mapping, never copied.
+    Mapped { buf: Arc<AlignedBytes>, byte_off: usize, len: usize },
+}
+
+impl<T: PanelElem> WeightStore<T> {
+    /// A zero-copy view of `len` elements at `byte_off` in `buf`.
+    /// Panics when the range is out of bounds or `byte_off` is not
+    /// aligned for `T` — the artifact loader validates section layout
+    /// (64-byte alignment) *before* constructing stores, so a panic here
+    /// is a loader bug, not a data error.
+    pub fn mapped(buf: Arc<AlignedBytes>, byte_off: usize, len: usize) -> WeightStore<T> {
+        let bytes = len * std::mem::size_of::<T>();
+        assert!(
+            byte_off % std::mem::align_of::<T>() == 0,
+            "mapped weight range at byte {byte_off} is misaligned for the element type"
+        );
+        assert!(
+            byte_off + bytes <= buf.len(),
+            "mapped weight range {byte_off}..{} exceeds mapping length {}",
+            byte_off + bytes,
+            buf.len()
+        );
+        WeightStore::Mapped { buf, byte_off, len }
+    }
+
+    /// The panel contents.
+    pub fn as_slice(&self) -> &[T] {
+        match self {
+            WeightStore::Owned(v) => v,
+            WeightStore::Mapped { buf, byte_off, len } => {
+                let p = buf.as_slice()[*byte_off..].as_ptr();
+                // SAFETY: construction checked that `byte_off` is aligned
+                // for `T` and that `len * size_of::<T>()` bytes fit in
+                // `buf`; `T: PanelElem` guarantees every bit pattern is a
+                // valid `T`; the backing `Arc` keeps `buf` alive for the
+                // borrow's duration.
+                unsafe { std::slice::from_raw_parts(p.cast::<T>(), *len) }
+            }
+        }
+    }
+
+    /// Whether this store borrows from an artifact mapping (zero-copy
+    /// provenance introspection).
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, WeightStore::Mapped { .. })
+    }
+}
+
+impl<T: PanelElem> std::ops::Deref for WeightStore<T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        self.as_slice()
+    }
+}
+
+impl<T: PanelElem> From<Vec<T>> for WeightStore<T> {
+    fn from(v: Vec<T>) -> WeightStore<T> {
+        WeightStore::Owned(v)
+    }
+}
+
+impl<T: PanelElem> PartialEq for WeightStore<T> {
+    fn eq(&self, other: &WeightStore<T>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<T: PanelElem> std::fmt::Debug for WeightStore<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let kind = if self.is_mapped() { "Mapped" } else { "Owned" };
+        write!(f, "WeightStore::{kind}(len={})", self.as_slice().len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aligned_bytes_alignment_and_contents() {
+        let mut b = AlignedBytes::zeroed(100);
+        assert_eq!(b.len(), 100);
+        assert_eq!(b.as_slice().as_ptr() as usize % WEIGHT_ALIGN, 0);
+        assert!(b.as_slice().iter().all(|&x| x == 0));
+        b.as_mut_slice()[3] = 7;
+        assert_eq!(b.as_slice()[3], 7);
+        let c = AlignedBytes::from_slice(&[1, 2, 3]);
+        assert_eq!(c.as_slice(), &[1, 2, 3]);
+        let empty = AlignedBytes::zeroed(0);
+        assert!(empty.is_empty());
+        assert_eq!(empty.as_slice(), &[] as &[u8]);
+        assert!(!empty.contains_ptr(b.as_slice().as_ptr()));
+    }
+
+    #[test]
+    fn contains_ptr_bounds() {
+        let b = AlignedBytes::zeroed(16);
+        let s = b.as_slice();
+        assert!(b.contains_ptr(s.as_ptr()));
+        assert!(b.contains_ptr(&s[15]));
+        // one-past-the-end is NOT contained
+        assert!(!b.contains_ptr(s.as_ptr().wrapping_add(16)));
+    }
+
+    #[test]
+    fn owned_and_mapped_stores_agree() {
+        let owned: WeightStore<f32> = vec![1.0f32, -2.5, 3.25].into();
+        assert!(!owned.is_mapped());
+        assert_eq!(&owned[..], &[1.0, -2.5, 3.25]);
+
+        let mut buf = AlignedBytes::zeroed(64 + 12);
+        // f32 values at byte offset 64
+        for (i, v) in [1.0f32, -2.5, 3.25].iter().enumerate() {
+            let bytes = v.to_le_bytes();
+            buf.as_mut_slice()[64 + 4 * i..64 + 4 * i + 4].copy_from_slice(&bytes);
+        }
+        let arc = Arc::new(buf);
+        let mapped: WeightStore<f32> = WeightStore::mapped(arc.clone(), 64, 3);
+        assert!(mapped.is_mapped());
+        assert_eq!(mapped, owned);
+        assert!(arc.contains_ptr(mapped.as_slice().as_ptr().cast()));
+
+        let m8: WeightStore<i8> = WeightStore::mapped(arc, 0, 4);
+        assert_eq!(&m8[..], &[0i8, 0, 0, 0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds mapping length")]
+    fn mapped_store_rejects_out_of_bounds() {
+        let arc = Arc::new(AlignedBytes::zeroed(8));
+        let _ = WeightStore::<i32>::mapped(arc, 0, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "misaligned")]
+    fn mapped_store_rejects_misalignment() {
+        let arc = Arc::new(AlignedBytes::zeroed(64));
+        let _ = WeightStore::<f32>::mapped(arc, 2, 4);
+    }
+}

@@ -1,0 +1,291 @@
+//! PR-10 acceptance suite for compiled-plan artifacts (`.qpln`):
+//!
+//! * every zoo model round-trips byte-identically — float and
+//!   streamlined tiers, batch-1 and batch-8 — through write → load,
+//! * loading performs ZERO weight-panel re-packing (pointer provenance:
+//!   every panel borrows from the artifact mapping),
+//! * every corruption mode on a real compiled zoo artifact fails with
+//!   its typed [`ArtifactError`] — never UB, never a panic,
+//! * a structurally valid artifact with a tampered (re-signed) schedule
+//!   loads fine but trips the static plan verifier (`verify --artifact`),
+//! * the batcher serves an artifact-loaded engine byte-identically to an
+//!   in-process-compiled engine, shards sharing one loaded mapping.
+
+use qonnx::coordinator::{Batcher, BatcherConfig, InferenceEngine, PlannedEngine};
+use qonnx::ir::ModelGraph;
+use qonnx::plan::artifact::{self, format, ArtifactError};
+use qonnx::plan::{ExecutionPlan, RunConfig, ShapeCheck};
+use qonnx::tensor::Tensor;
+use qonnx::testutil::random_tensor;
+use qonnx::zoo::rng::Rng;
+use qonnx::{transforms, zoo};
+use std::path::PathBuf;
+
+fn tmp(tag: &str) -> PathBuf {
+    let safe: String =
+        tag.chars().map(|c| if c.is_ascii_alphanumeric() { c } else { '_' }).collect();
+    std::env::temp_dir().join(format!("qonnx_artrt_{}_{safe}.qpln", std::process::id()))
+}
+
+fn run_plan(plan: &ExecutionPlan<'_>, in_name: &str, x: &Tensor, out_name: &str) -> Tensor {
+    let cfg = RunConfig { shape_check: ShapeCheck::FreeBatch, record_intermediates: false };
+    plan.run_cfg(|n| (n == in_name).then_some(x), &cfg)
+        .unwrap()
+        .outputs
+        .remove(out_name)
+        .unwrap()
+}
+
+/// Write → load → compare one compiled tier of one model: schedule
+/// identical, zero re-packing, outputs byte-identical at batch 1 and 8.
+fn assert_tier_roundtrips(g: &ModelGraph, label: &str) {
+    let plan = ExecutionPlan::compile(g).unwrap_or_else(|e| panic!("{label}: compile: {e:#}"));
+    let path = tmp(label);
+    artifact::write_artifact(&plan, g, None, &path)
+        .unwrap_or_else(|e| panic!("{label}: write: {e:#}"));
+    let loaded = artifact::read_artifact(&path).unwrap_or_else(|e| panic!("{label}: load: {e}"));
+
+    // the frozen schedule, counters, and slot tables survived verbatim
+    assert_eq!(loaded.plan.summary(), plan.summary(), "{label}: schedule changed");
+
+    // zero weight-panel re-packing: every PackedB/PackedBi8 panel (and
+    // SIMD tile) borrows straight from the artifact mapping
+    let zc = loaded.zero_copy_report();
+    assert_eq!(zc.owned_panels, 0, "{label}: re-packed panels: {zc:?}");
+    if plan.packed_count() + plan.quant_kernel_count() > 0 {
+        assert!(zc.mapped_panels >= 1, "{label}: no mapped panels: {zc:?}");
+        assert!(zc.mapped_bytes > 0, "{label}: {zc:?}");
+    }
+
+    let in_name = g
+        .inputs
+        .iter()
+        .find(|vi| !g.initializers.contains_key(&vi.name))
+        .expect("graph input")
+        .name
+        .clone();
+    let mut in_shape = g
+        .inputs
+        .iter()
+        .find(|vi| vi.name == in_name)
+        .and_then(|vi| vi.shape.clone())
+        .expect("input shape");
+    let out_name = g.outputs[0].name.clone();
+
+    // batch-8 is part of the contract for the serving models; only a
+    // plan that *declares* batch blockers may skip it
+    let batches: &[usize] =
+        if plan.batch_blockers().is_empty() { &[1, 8] } else { &[1] };
+    let mut rng = Rng::new(97);
+    for &n in batches {
+        in_shape[0] = n;
+        let x = random_tensor(&mut rng, in_shape.clone(), 0.0, 1.0);
+        let y_compiled = run_plan(&plan, &in_name, &x, &out_name);
+        let y_loaded = run_plan(&loaded.plan, &in_name, &x, &out_name);
+        assert_eq!(y_compiled, y_loaded, "{label}: batch {n} diverged");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// The tentpole acceptance case: EVERY zoo model round-trips through an
+/// artifact byte-identically, float tier and (where the model lowers)
+/// streamlined integer tier, batch-1 and batch-8.
+#[test]
+fn every_zoo_model_roundtrips_byte_identical() {
+    for name in zoo::ZOO_NAMES {
+        let mut g = zoo::build(name, 1, 32).unwrap();
+        transforms::cleanup(&mut g).unwrap();
+
+        let fplan = ExecutionPlan::compile(&g).unwrap();
+        if name.starts_with("TFC") || name.starts_with("CNV") {
+            assert!(
+                fplan.batch_blockers().is_empty(),
+                "'{name}' must serve batches:\n{}",
+                fplan.summary()
+            );
+        }
+        drop(fplan);
+        assert_tier_roundtrips(&g, &format!("{name} (float)"));
+
+        let sl = qonnx::streamline::try_streamline(&g).unwrap();
+        if sl.report.ok {
+            assert_tier_roundtrips(&sl.graph, &format!("{name} (streamlined)"));
+        }
+    }
+}
+
+/// Satellite 1: every corruption mode on a REAL compiled zoo artifact is
+/// a typed error. Table-driven: (label, byte-level mutation, expected
+/// variant matcher).
+#[test]
+fn corrupt_zoo_artifact_fails_typed_never_ub() {
+    let mut g = zoo::build("TFC-w2a2", 1, 32).unwrap();
+    transforms::cleanup(&mut g).unwrap();
+    let path = tmp("corrupt_src");
+    PlannedEngine::compile_to_artifact(&g, &path).unwrap();
+    let pristine = std::fs::read(&path).unwrap();
+    assert!(pristine.len() > format::HEADER_LEN + 6 * format::ENTRY_LEN);
+
+    type Mutate = fn(&mut Vec<u8>);
+    type Check = fn(&ArtifactError) -> bool;
+    let cases: &[(&str, Mutate, Check)] = &[
+        (
+            "truncated inside the header",
+            |b| b.truncate(format::HEADER_LEN / 2),
+            |e| matches!(e, ArtifactError::Truncated { .. }),
+        ),
+        (
+            "truncated inside the section table",
+            |b| b.truncate(format::HEADER_LEN + format::ENTRY_LEN / 2),
+            |e| matches!(e, ArtifactError::Truncated { .. }),
+        ),
+        (
+            "truncated halfway through the payload",
+            |b| {
+                let half = b.len() / 2;
+                b.truncate(half);
+            },
+            |e| matches!(e, ArtifactError::Truncated { .. }),
+        ),
+        (
+            "single flipped byte in the largest (weight) section",
+            |b| {
+                // find the longest section via the table so the flip is
+                // guaranteed to land inside CRC-covered payload bytes
+                let mut best = (0u64, 0u64);
+                for i in 0..6 {
+                    let e = format::HEADER_LEN + i * format::ENTRY_LEN;
+                    let off = u64::from_ne_bytes(b[e + 8..e + 16].try_into().unwrap());
+                    let len = u64::from_ne_bytes(b[e + 16..e + 24].try_into().unwrap());
+                    if len > best.1 {
+                        best = (off, len);
+                    }
+                }
+                let i = (best.0 + best.1 - 1) as usize;
+                b[i] ^= 0x40;
+            },
+            |e| matches!(e, ArtifactError::ChecksumMismatch { .. }),
+        ),
+        (
+            "single flipped byte early in the META payload",
+            |b| {
+                b[format::HEADER_LEN + 6 * format::ENTRY_LEN + 64] ^= 0x01;
+            },
+            |e| matches!(e, ArtifactError::ChecksumMismatch { .. }),
+        ),
+        (
+            "wrong magic",
+            |b| b[0] ^= 0xff,
+            |e| matches!(e, ArtifactError::BadMagic),
+        ),
+        (
+            "format version skew",
+            |b| b[8..12].copy_from_slice(&99u32.to_ne_bytes()),
+            |e| matches!(e, ArtifactError::VersionSkew { found: 99, .. }),
+        ),
+        (
+            "misaligned section offset",
+            |b| {
+                // entry 0's offset field (bytes 8..16 of the entry): +1
+                // breaks the 64-byte zero-copy alignment contract
+                let off = format::HEADER_LEN + 8;
+                let mut v = u64::from_ne_bytes(b[off..off + 8].try_into().unwrap());
+                v += 1;
+                b[off..off + 8].copy_from_slice(&v.to_ne_bytes());
+            },
+            |e| matches!(e, ArtifactError::MisalignedSection { .. }),
+        ),
+        (
+            "SIMD ISA mismatch",
+            |b| {
+                let mut isa = [0u8; format::ISA_NAME_LEN];
+                isa[..5].copy_from_slice(b"sse99");
+                b[20..20 + format::ISA_NAME_LEN].copy_from_slice(&isa);
+            },
+            |e| matches!(e, ArtifactError::IsaMismatch { .. }),
+        ),
+    ];
+
+    let victim = tmp("corrupt_victim");
+    for (label, mutate, check) in cases {
+        let mut bytes = pristine.clone();
+        mutate(&mut bytes);
+        std::fs::write(&victim, &bytes).unwrap();
+        let err = artifact::read_artifact(&victim)
+            .err()
+            .unwrap_or_else(|| panic!("{label}: corrupt artifact loaded"));
+        assert!(check(&err), "{label}: wrong error variant: {err}");
+        assert!(!err.to_string().is_empty(), "{label}");
+    }
+
+    // and the pristine bytes still load + serve after all that
+    std::fs::write(&victim, &pristine).unwrap();
+    let loaded = artifact::read_artifact(&victim).unwrap();
+    assert_eq!(loaded.zero_copy_report().owned_panels, 0);
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&victim).ok();
+}
+
+/// Satellite 2: checksums cannot catch a *re-signed* tamper — but the
+/// static verifier re-proves the deserialized schedule against the
+/// embedded graph and trips on it (`qonnx verify --artifact`).
+#[test]
+fn resigned_schedule_tamper_trips_static_verifier() {
+    let mut g = zoo::build("TFC-w1a1", 1, 32).unwrap();
+    transforms::cleanup(&mut g).unwrap();
+    let path = tmp("mutate");
+    PlannedEngine::compile_to_artifact(&g, &path).unwrap();
+
+    // untampered: the artifact plan verifies clean against its graph
+    let clean = artifact::read_artifact(&path).unwrap();
+    let graph = clean.graph().unwrap();
+    let report = qonnx::verify::verify_plan(&clean.plan, &graph);
+    assert!(!report.has_errors(), "pristine artifact must verify:\n{}", report.render());
+
+    // swap first/last schedule steps and re-sign every checksum: the
+    // file is structurally valid, so loading succeeds...
+    artifact::mutate_schedule(&path).unwrap();
+    let tampered = artifact::read_artifact(&path).unwrap();
+    // ...but the verifier refuses the plan
+    let graph = tampered.graph().unwrap();
+    let report = qonnx::verify::verify_plan(&tampered.plan, &graph);
+    assert!(
+        report.has_errors(),
+        "swapped schedule must trip the verifier:\n{}",
+        report.render()
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+/// Satellite 4 (in-process half of the CI job): `serve --artifact`
+/// semantics — the batcher drives shards that share ONE loaded artifact
+/// and answers byte-identically to an in-process-compiled engine.
+#[test]
+fn batcher_serves_artifact_byte_identical_to_compiled_engine() {
+    for name in ["TFC-w2a2", "CNV-w1a2"] {
+        let mut g = zoo::build(name, 1, 32).unwrap();
+        transforms::cleanup(&mut g).unwrap();
+        let path = tmp(&format!("serve_{name}"));
+        let mut compiled = PlannedEngine::compile_to_artifact(&g, &path).unwrap();
+
+        let template = PlannedEngine::from_artifact(&path).unwrap();
+        assert_eq!(template.streamlined(), compiled.streamlined(), "{name}");
+        let in_dim = compiled.input_dim();
+        let plan = template.plan_handle();
+        let batcher = Batcher::start_sharded(
+            move || Ok(Box::new(template.share()) as Box<dyn InferenceEngine>),
+            BatcherConfig::default(),
+            2,
+        )
+        .unwrap();
+        // both shards came up on Arc views of the ONE loaded plan
+        assert_eq!(std::sync::Arc::strong_count(&plan), 4);
+
+        let input: Vec<f32> = (0..in_dim).map(|i| (i % 29) as f32 / 29.0).collect();
+        let served = batcher.infer(input.clone()).unwrap();
+        let want = compiled.infer_batch(&Tensor::new(vec![1, in_dim], input)).unwrap();
+        assert_eq!(served, want.as_f32().unwrap(), "{name}: served != compiled");
+        batcher.shutdown();
+        std::fs::remove_file(&path).ok();
+    }
+}
